@@ -1,0 +1,132 @@
+//! Mobile-platform exploration: Table 1 device descriptors, a
+//! per-layer simulated breakdown of one (device, network, method)
+//! combination, and ablations of the cost model's mechanisms
+//! (occupancy, throttling, dispatch) — the "what explains the paper's
+//! anomalies" tour.
+//!
+//! ```bash
+//! cargo run --release --example mobile_simulation [-- --net alexnet --method advanced-simd-8]
+//! ```
+
+use cnndroid::model::zoo;
+use cnndroid::simulator::cost::{conv_time_gpu, conv_time_seq, network_times, Method};
+use cnndroid::simulator::device::{all_devices, galaxy_note4, htc_one_m9};
+use cnndroid::util::args::ArgSpec;
+
+fn parse_method(s: &str) -> Method {
+    match s {
+        "basic-parallel" => Method::BasicParallel,
+        "basic-simd" => Method::BasicSimd,
+        "advanced-simd-4" => Method::AdvancedSimd4,
+        "advanced-simd-8" => Method::AdvancedSimd8,
+        other => {
+            eprintln!("unknown method {other:?}, using advanced-simd-4");
+            Method::AdvancedSimd4
+        }
+    }
+}
+
+fn main() {
+    let args = ArgSpec::new("mobile_simulation", "device model + per-layer breakdown + ablations")
+        .opt("net", "alexnet", "network")
+        .opt("method", "advanced-simd-8", "GPU method")
+        .parse();
+    let net = zoo::by_name(args.get("net")).expect("known network");
+    let method = parse_method(args.get("method"));
+
+    // --- Table 1 ---
+    println!("== Table 1: evaluation devices ==");
+    for d in all_devices() {
+        println!(
+            "  {:<24} {:<16} GPU {:<32} peak {:>5.1} GFLOP/s ({} parallel ops)  CPU {}x@{}MHz  {}",
+            d.name,
+            d.soc,
+            d.gpu_name,
+            d.gpu_peak_gflops(),
+            d.parallel_ops(),
+            d.cpu_big_cores,
+            d.cpu_freq_mhz,
+            d.os
+        );
+    }
+
+    // --- per-layer breakdown ---
+    let dev = galaxy_note4();
+    println!(
+        "\n== per-conv-layer breakdown: {} / {} / {} (cold clock) ==",
+        dev.name,
+        net.name,
+        args.get("method")
+    );
+    println!(
+        "  {:<8} {:>12} {:>12} {:>12} {:>9}",
+        "layer", "seq ms", "gpu ms", "MFLOP", "speedup"
+    );
+    for (name, spec) in net.conv_specs() {
+        let seq = conv_time_seq(&dev, &spec);
+        let gpu = conv_time_gpu(&dev, &spec, method, 1.0);
+        println!(
+            "  {:<8} {:>12.2} {:>12.3} {:>12.1} {:>8.1}x",
+            name,
+            seq * 1e3,
+            gpu * 1e3,
+            spec.flops() as f64 / 1e6,
+            seq / gpu
+        );
+    }
+
+    // --- ablations ---
+    println!("\n== ablations (whole {} forward, batch 16) ==", net.name);
+    let base_seq = network_times(&dev, &net, Method::CpuSeq, 16).total_s;
+
+    let t = network_times(&dev, &net, method, 16);
+    println!(
+        "  full model:                 {:>8.1} ms  ({:.2}x, end throttle {:.2})",
+        t.total_s * 1e3,
+        base_seq / t.total_s,
+        t.end_throttle
+    );
+
+    let mut no_throttle = dev.clone();
+    no_throttle.throttle_after_s = f64::INFINITY;
+    let t2 = network_times(&no_throttle, &net, method, 16);
+    println!(
+        "  - thermal throttling:       {:>8.1} ms  ({:.2}x)   [paper §6.3: M9's ImageNet deficit]",
+        t2.total_s * 1e3,
+        base_seq / t2.total_s
+    );
+
+    let mut free_dispatch = dev.clone();
+    free_dispatch.launch_base_ms = 0.0;
+    free_dispatch.launch_per_thread_us = 0.0;
+    let t3 = network_times(&free_dispatch, &net, method, 16);
+    println!(
+        "  - dispatch overhead:        {:>8.1} ms  ({:.2}x)   [dominates LeNet-scale layers]",
+        t3.total_s * 1e3,
+        base_seq / t3.total_s
+    );
+
+    let mut perfect_occ = dev.clone();
+    perfect_occ.threads_half = 0.0;
+    let t4 = network_times(&perfect_occ, &net, method, 16);
+    println!(
+        "  - occupancy loss:           {:>8.1} ms  ({:.2}x)   [the adv-8 regression mechanism]",
+        t4.total_s * 1e3,
+        base_seq / t4.total_s
+    );
+
+    // --- the M9 story ---
+    println!("\n== Note 4 vs One M9 on ImageNet (adv-4, batch 16) ==");
+    for dev in [galaxy_note4(), htc_one_m9()] {
+        let alex = zoo::alexnet();
+        let seq = network_times(&dev, &alex, Method::CpuSeq, 16).total_s;
+        let acc = network_times(&dev, &alex, Method::AdvancedSimd4, 16);
+        println!(
+            "  {:<24} {:.2}x speedup (end throttle {:.2})",
+            dev.name,
+            seq / acc.total_s,
+            acc.end_throttle
+        );
+    }
+    println!("  (paper: Note 4 ~30% ahead; attributed to the 810's thermal policy)");
+}

@@ -1,0 +1,117 @@
+//! Open-loop serving experiment: drive the server with a Poisson
+//! request trace at increasing offered loads and report the
+//! latency-throughput curve — the standard serving-systems figure the
+//! paper's realtime-FPS claims correspond to.
+//!
+//! ```bash
+//! cargo run --release --example open_loop [-- --rates 50,100,200,400 --duration 3]
+//! ```
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use cnndroid::coordinator::server::Client;
+use cnndroid::coordinator::{serve, BatcherConfig, ServerConfig};
+use cnndroid::data::workload::{generate_trace, trace_stats, Arrivals};
+use cnndroid::data::{fixtures, synth};
+use cnndroid::model::manifest::default_dir;
+use cnndroid::util::args::ArgSpec;
+use cnndroid::util::stats::Samples;
+
+fn main() -> cnndroid::Result<()> {
+    let args = ArgSpec::new("open_loop", "Poisson open-loop latency vs offered load")
+        .opt("rates", "50,100,200,400", "offered loads to sweep, req/s")
+        .opt("duration", "3", "seconds per rate step")
+        .opt("method", "advanced-simd-4", "engine method")
+        .parse();
+    let dir = default_dir();
+    let (images, _) = fixtures::load_digit_test_set(&dir).unwrap_or_else(|_| {
+        synth::make_dataset(64, 5, 0.08)
+    });
+    let n_items = images.dim(0);
+
+    let handle = serve(ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        models: vec![("lenet5".into(), args.get("method").to_string(), 1)],
+        batcher: BatcherConfig { max_batch: 16, max_wait: Duration::from_millis(3) },
+        artifacts_dir: dir,
+    })?;
+    let addr = handle.addr;
+    {
+        // Warm (compile artifacts) before offering load.
+        let mut c = Client::connect(addr)?;
+        c.classify("lenet5", &images.frame(0), 0)?;
+    }
+
+    println!(
+        "open-loop sweep on lenet5/{} — Poisson arrivals, {}s per step\n",
+        args.get("method"),
+        args.get("duration")
+    );
+    println!(
+        "{:>9} {:>9} {:>10} {:>9} {:>9} {:>9} {:>9}",
+        "offered", "achieved", "cv/burst", "p50 ms", "p95 ms", "p99 ms", "max ms"
+    );
+
+    let duration: f64 = args.get_f64("duration");
+    for rate_s in args.get("rates").split(',') {
+        let rate: f64 = rate_s.trim().parse().unwrap_or(50.0);
+        let trace = generate_trace(Arrivals::Poisson, rate, duration, n_items, 42);
+        let stats = trace_stats(&trace, duration);
+
+        let lat = Arc::new(Mutex::new(Samples::new()));
+        let done = Arc::new(Mutex::new(0usize));
+        let t0 = Instant::now();
+        // Fire each request at its trace time from a small dispatcher
+        // pool (open loop: we never wait for responses before sending
+        // the next request).
+        let mut senders = Vec::new();
+        let shards = 8usize;
+        for shard in 0..shards {
+            let trace: Vec<_> = trace
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| i % shards == shard)
+                .map(|(_, e)| *e)
+                .collect();
+            let images = images.clone();
+            let lat = Arc::clone(&lat);
+            let done = Arc::clone(&done);
+            senders.push(std::thread::spawn(move || {
+                let mut client = Client::connect(addr).expect("connect");
+                for ev in trace {
+                    let target = Duration::from_secs_f64(ev.at_s);
+                    if let Some(wait) = target.checked_sub(t0.elapsed()) {
+                        std::thread::sleep(wait);
+                    }
+                    let sent = Instant::now();
+                    let r = client
+                        .classify("lenet5", &images.frame(ev.item), ev.item as u64)
+                        .expect("request");
+                    assert!(r.get("error").is_null(), "{}", r.dump());
+                    lat.lock().unwrap().push(sent.elapsed().as_secs_f64());
+                    *done.lock().unwrap() += 1;
+                }
+            }));
+        }
+        for s in senders {
+            s.join().unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let mut l = lat.lock().unwrap();
+        println!(
+            "{:>7.0}/s {:>7.1}/s {:>5.2}/{:<4} {:>9.2} {:>9.2} {:>9.2} {:>9.2}",
+            rate,
+            *done.lock().unwrap() as f64 / wall,
+            stats.cv,
+            stats.max_burst_100ms,
+            l.percentile(50.0) * 1e3,
+            l.percentile(95.0) * 1e3,
+            l.percentile(99.0) * 1e3,
+            l.max() * 1e3,
+        );
+    }
+    println!("\n(open loop: dispatchers fire on the trace clock; queueing shows up as p99 growth)");
+    handle.shutdown();
+    Ok(())
+}

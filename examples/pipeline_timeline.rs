@@ -1,0 +1,70 @@
+//! Figure 5 reproduction: run a batch of 4 frames through the engine
+//! with trace recording on and render the CPU/accelerator timeline —
+//! the paper's processor-scheduling picture — plus overlap statistics
+//! showing that the "dimension swapping" work hides under accelerator
+//! time.
+//!
+//! ```bash
+//! cargo run --release --example pipeline_timeline [-- --net cifar10 --method basic-simd --batch 4]
+//! ```
+
+use cnndroid::coordinator::{Engine, EngineConfig};
+use cnndroid::data::synth;
+use cnndroid::model::manifest::default_dir;
+use cnndroid::util::args::ArgSpec;
+
+fn main() -> cnndroid::Result<()> {
+    // AlexNet by default: its frame swaps take milliseconds, so the
+    // overlap is visible above thread-wake latency (LeNet/CIFAR swaps
+    // are microseconds — nothing to hide).
+    let args = ArgSpec::new("pipeline_timeline", "render the Fig. 5 CPU/accelerator timeline")
+        .opt("net", "alexnet", "network")
+        .opt("method", "basic-simd", "NHWC method (swap work is visible)")
+        .opt("batch", "4", "frames (paper Fig. 5 uses 4)")
+        .parse();
+    let dir = default_dir();
+    let engine = Engine::from_artifacts(
+        &dir,
+        args.get("net"),
+        EngineConfig { method: args.get("method").into(), record_trace: true, preload: true },
+    )?;
+    let net = engine.network().clone();
+    let batch = args.get_usize("batch");
+    let frames = synth::random_frames(batch, net.in_c, net.in_h, net.in_w, 7);
+
+    // Warm once (compile + cache), then trace a clean run.
+    engine.infer_batch(&frames)?;
+    engine.infer_batch(&frames)?;
+
+    println!(
+        "Fig. 5 timeline — {}/{} — batch of {batch} frames",
+        net.name,
+        args.get("method")
+    );
+    println!("legend: digits = conv dispatch of that frame (accelerator), '<' = pre-swap, '>' = post-swap/ReLU (CPU)\n");
+    let mut total_cpu = 0.0;
+    let mut total_hidden = 0.0;
+    for (layer, trace) in engine.last_traces() {
+        println!("-- conv layer {layer} --");
+        print!("{}", trace.render_ascii(100));
+        let cpu = trace.cpu_busy_s();
+        total_cpu += cpu;
+        total_hidden += cpu * trace.overlap_fraction();
+        println!();
+    }
+    println!(
+        "across all conv layers: {:.3} ms of CPU swap/ReLU work, {:.0}% hidden under accelerator time",
+        total_cpu * 1e3,
+        100.0 * total_hidden / total_cpu.max(1e-12)
+    );
+    println!("(the paper's claim: ReLU and dimension swapping add no wall time — Fig. 5)");
+    println!(
+        "\nnote: on the paper's phones the CPU idles while the GPU convolves, so swaps hide\n\
+         almost fully; here the \"accelerator\" is XLA on the SAME CPU, so tiny swap jobs\n\
+         compete with it for cores and may land in inter-dispatch gaps instead.  The\n\
+         schedule itself (pre/post dispatched concurrently with accel work) is what this\n\
+         timeline demonstrates; `cargo test pipeline` shows 50-70% hidden when the CPU\n\
+         stages are schedulable."
+    );
+    Ok(())
+}

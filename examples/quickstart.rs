@@ -1,0 +1,74 @@
+//! Quickstart: load the trained LeNet-5, classify a handful of digits
+//! with the accelerated engine, and cross-check against the CPU-only
+//! sequential baseline — the 60-second tour of the public API.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use cnndroid::coordinator::{Engine, EngineConfig};
+use cnndroid::cpu::forward::classify;
+use cnndroid::data::synth;
+use cnndroid::model::manifest::{default_dir, Manifest};
+use cnndroid::model::weights::load_weights;
+use cnndroid::model::zoo;
+
+fn main() -> cnndroid::Result<()> {
+    let dir = default_dir();
+
+    // 1. The deployed model: trained by `make artifacts` (the paper's
+    //    Fig. 2 desktop-training stage) and loaded from the manifest.
+    let engine = Engine::from_artifacts(
+        &dir,
+        "lenet5",
+        EngineConfig { method: "advanced-simd-4".into(), record_trace: false, preload: true },
+    )?;
+    println!(
+        "engine up: {} via {} on PJRT/{}",
+        engine.network().name,
+        engine.method(),
+        engine.runtime().platform()
+    );
+
+    // 2. A small synthetic digit workload (the MNIST substitute).
+    let (images, labels) = synth::make_dataset(8, 42, 0.08);
+
+    // 3. Accelerated inference.
+    let t0 = std::time::Instant::now();
+    let preds = engine.classify(&images)?;
+    let dt = t0.elapsed();
+    let mut correct = 0;
+    for (i, (label, score)) in preds.iter().enumerate() {
+        let ok = *label == labels[i] as usize;
+        correct += ok as usize;
+        println!(
+            "digit {i}: predicted {label} (logit {score:+.2}), truth {} {}",
+            labels[i],
+            if ok { "ok" } else { "MISS" }
+        );
+    }
+    println!(
+        "accuracy {correct}/8, {:.1} ms total ({:.1} fps)",
+        dt.as_secs_f64() * 1e3,
+        8.0 / dt.as_secs_f64()
+    );
+
+    // 4. The paper's baseline: same model, single-threaded CPU loops.
+    let manifest = Manifest::load(&dir)?;
+    let net = zoo::lenet5();
+    let params = load_weights(&manifest, &net)?;
+    let t0 = std::time::Instant::now();
+    let cpu_preds = classify(&net, &params, &images)?;
+    let cpu_dt = t0.elapsed();
+    assert_eq!(
+        cpu_preds,
+        preds.iter().map(|(l, _)| *l).collect::<Vec<_>>(),
+        "accelerated and CPU-sequential engines must agree"
+    );
+    println!(
+        "cpu-seq baseline: {:.1} ms -> engine speedup {:.2}x (this host)",
+        cpu_dt.as_secs_f64() * 1e3,
+        cpu_dt.as_secs_f64() / dt.as_secs_f64()
+    );
+    Ok(())
+}

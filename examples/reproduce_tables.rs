@@ -1,0 +1,94 @@
+//! Regenerate the paper's evaluation: Tables 3 and 4 at paper scale
+//! via the mobile-GPU simulator, the §6.3 headline claims, and —
+//! optionally — *measured* speedups of this repository's engine on the
+//! present host (XLA-CPU standing in for the mobile GPU).
+//!
+//! ```bash
+//! cargo run --release --example reproduce_tables            # simulated vs paper
+//! cargo run --release --example reproduce_tables -- --claims
+//! cargo run --release --example reproduce_tables -- --measured   # adds host-measured rows
+//! ```
+
+use std::time::Instant;
+
+use cnndroid::coordinator::{Engine, EngineConfig};
+use cnndroid::data::synth;
+use cnndroid::model::manifest::default_dir;
+use cnndroid::simulator::tables;
+use cnndroid::util::args::ArgSpec;
+
+fn main() -> cnndroid::Result<()> {
+    let args = ArgSpec::new("reproduce_tables", "paper tables: simulated, and optionally measured")
+        .flag("claims", "check the §6.3 headline claims")
+        .flag("measured", "also measure this host's engine speedups")
+        .opt("batch", "8", "frames per measured batch (paper: 16)")
+        .parse();
+
+    println!(
+        "{}",
+        tables::render("Table 3 — whole-network speedup, batch 16 (simulated vs paper)", &tables::table3())
+    );
+    println!(
+        "{}",
+        tables::render("Table 4 — heaviest conv layer speedup (simulated vs paper)", &tables::table4())
+    );
+
+    if args.has("claims") {
+        println!("§6.3 headline claims on the simulated tables:");
+        for (claim, ok) in tables::claims() {
+            println!("  [{}] {claim}", if ok { "ok" } else { "FAIL" });
+        }
+        println!();
+    }
+
+    if args.has("measured") {
+        measured(args.get_usize("batch"))?;
+    }
+    Ok(())
+}
+
+/// Measured rows: this host's engine (XLA-CPU accelerator substitute)
+/// vs the Rust sequential baseline.  Absolute numbers are not paper
+/// numbers — the shape (method ordering) is what must match.
+fn measured(batch: usize) -> cnndroid::Result<()> {
+    let dir = default_dir();
+    let methods = ["basic-parallel", "basic-simd", "advanced-simd-4", "advanced-simd-8", "mxu"];
+    println!("Measured on this host (batch {batch}; XLA-CPU accelerator substitute):");
+    println!(
+        "{:<8} | {:>12} | {:>9} {:>9} {:>9} {:>9} {:>9}",
+        "net", "cpu-seq ms", "bp", "bsimd", "adv4", "adv8", "mxu"
+    );
+    for net in ["lenet5", "cifar10"] {
+        let base = time_method(&dir, net, "cpu-seq", batch, 3)?;
+        let mut row = format!("{net:<8} | {:>12.1} |", base * 1e3);
+        for m in methods {
+            let t = time_method(&dir, net, m, batch, 3)?;
+            row.push_str(&format!(" {:>9.2}", base / t));
+        }
+        println!("{row}");
+    }
+    println!("(alexnet omitted from the quick measured pass — run `cnndroid bench-engine --net alexnet` for it)");
+    Ok(())
+}
+
+fn time_method(
+    dir: &std::path::Path,
+    net: &str,
+    method: &str,
+    batch: usize,
+    iters: usize,
+) -> cnndroid::Result<f64> {
+    let engine = Engine::from_artifacts(
+        dir,
+        net,
+        EngineConfig { method: method.into(), record_trace: false, preload: true },
+    )?;
+    let n = engine.network().clone();
+    let frames = synth::random_frames(batch, n.in_c, n.in_h, n.in_w, 5);
+    engine.infer_batch(&frames)?; // warm
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        engine.infer_batch(&frames)?;
+    }
+    Ok(t0.elapsed().as_secs_f64() / iters as f64)
+}

@@ -1,0 +1,135 @@
+//! End-to-end serving driver (the mandated E2E validation run):
+//! deploy the trained LeNet-5 behind the TCP front end, fire a real
+//! client workload at it, and report latency / throughput / accuracy.
+//! The numbers printed here are the ones recorded in EXPERIMENTS.md.
+//!
+//! ```bash
+//! cargo run --release --example serve_images [-- --requests 256 --clients 4 --method advanced-simd-4]
+//! ```
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use cnndroid::coordinator::server::Client;
+use cnndroid::coordinator::{serve, BatcherConfig, ServerConfig};
+use cnndroid::data::fixtures;
+use cnndroid::model::manifest::default_dir;
+use cnndroid::util::args::ArgSpec;
+use cnndroid::util::stats::Samples;
+
+fn main() -> cnndroid::Result<()> {
+    let args = ArgSpec::new("serve_images", "end-to-end serving driver")
+        .opt("requests", "256", "total requests to send")
+        .opt("clients", "4", "concurrent client connections")
+        .opt("method", "advanced-simd-4", "engine method")
+        .opt("max-batch", "16", "dynamic batcher limit")
+        .parse();
+    let total: usize = args.get_usize("requests");
+    let nclients = args.get_usize("clients").max(1);
+    let dir = default_dir();
+
+    // The exact labelled test set the Python trainer measured accuracy
+    // on (cross-language fixture).
+    let (images, labels) = fixtures::load_digit_test_set(&dir)?;
+    let n_avail = images.dim(0);
+
+    // Serve LeNet-5 on an ephemeral port.
+    let handle = serve(ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        models: vec![("lenet5".into(), args.get("method").to_string(), 1)],
+        batcher: BatcherConfig {
+            max_batch: args.get_usize("max-batch"),
+            max_wait: std::time::Duration::from_millis(4),
+        },
+        artifacts_dir: dir.clone(),
+    })?;
+    let addr = handle.addr;
+    println!("serving lenet5/{} on {addr}", args.get("method"));
+
+    // Wait until the engine thread compiled its artifacts.
+    {
+        let mut c = Client::connect(addr)?;
+        let warm = c.classify("lenet5", &images.frame(0), 0)?;
+        anyhow::ensure!(warm.get("error").is_null(), "warmup failed: {}", warm.dump());
+    }
+
+    // Client fleet: each sends its share of requests, records latency
+    // and correctness.
+    let counter = Arc::new(AtomicUsize::new(0));
+    let t0 = Instant::now();
+    let mut threads = Vec::new();
+    for _ in 0..nclients {
+        let counter = Arc::clone(&counter);
+        let images = images.clone();
+        let labels = labels.clone();
+        threads.push(std::thread::spawn(move || -> (Samples, usize, usize) {
+            let mut client = Client::connect(addr).expect("connect");
+            let mut lat = Samples::new();
+            let (mut sent, mut correct) = (0usize, 0usize);
+            loop {
+                let i = counter.fetch_add(1, Ordering::Relaxed);
+                if i >= total {
+                    break;
+                }
+                let idx = i % n_avail;
+                let t = Instant::now();
+                let resp = client
+                    .classify("lenet5", &images.frame(idx), i as u64)
+                    .expect("request");
+                lat.push(t.elapsed().as_secs_f64());
+                assert!(resp.get("error").is_null(), "server error: {}", resp.dump());
+                sent += 1;
+                if resp.get("label").as_usize() == Some(labels[idx] as usize) {
+                    correct += 1;
+                }
+            }
+            (lat, sent, correct)
+        }));
+    }
+
+    let mut all = Samples::new();
+    let (mut sent, mut correct) = (0usize, 0usize);
+    for t in threads {
+        let (lat, s, c) = t.join().expect("client thread");
+        sent += s;
+        correct += c;
+        all.merge(&lat);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("\n== serve_images report ==");
+    println!("requests:    {sent} over {nclients} clients");
+    println!("throughput:  {:.1} req/s (wall {:.2} s)", sent as f64 / wall, wall);
+    let mut a = all;
+    println!(
+        "latency ms:  mean {:.2}  p50 {:.2}  p95 {:.2}  p99 {:.2}",
+        a.mean() * 1e3,
+        a.percentile(50.0) * 1e3,
+        a.percentile(95.0) * 1e3,
+        a.percentile(99.0) * 1e3
+    );
+    println!(
+        "accuracy:    {correct}/{sent} = {:.3} (desktop-trained model on the held-out fixture set)",
+        correct as f64 / sent as f64
+    );
+
+    // Server-side view.
+    let mut c = Client::connect(addr)?;
+    let m = c.call(&cnndroid::util::json::Json::obj(vec![(
+        "cmd",
+        cnndroid::util::json::Json::str("metrics"),
+    )]))?;
+    let lenet = m.get("nets").get("lenet5");
+    println!(
+        "server:      {} requests, mean batch {:.1}, p95 {:.2} ms",
+        lenet.get("requests").as_usize().unwrap_or(0),
+        lenet.get("mean_batch").as_f64().unwrap_or(0.0),
+        lenet.get("latency_ms_p95").as_f64().unwrap_or(0.0)
+    );
+
+    anyhow::ensure!(correct * 100 >= sent * 95, "accuracy below 95% — engine regression");
+    handle.shutdown();
+    println!("ok");
+    Ok(())
+}

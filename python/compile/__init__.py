@@ -1,0 +1,1 @@
+"""Build-time compile path: JAX/Pallas -> HLO text artifacts. Never imported at runtime."""

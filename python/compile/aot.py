@@ -1,0 +1,425 @@
+"""AOT compiler: lower every (layer-shape x method) and fused network to
+HLO **text** under artifacts/, plus manifest.json and weight blobs.
+
+This is the only Python that ever runs in the deployment flow, and it
+runs exactly once (`make artifacts`); the Rust engine is self-contained
+afterwards.  HLO text — not serialized HloModuleProto — is the
+interchange format: jax >= 0.5 emits 64-bit instruction ids that
+xla_extension 0.5.1 rejects, while the text parser reassigns ids
+(see /opt/xla-example/README.md and DESIGN.md §3).
+
+Incrementality: a global hash of the compile-path sources is stored in
+the manifest; when unchanged, existing artifact files are not re-lowered.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import digits, model, train
+from .kernels.common import ConvSpec, pool_out
+from .networks import METHODS, NETWORKS
+
+F32 = jnp.float32
+NHWC_METHODS = model.NHWC_METHODS
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _source_hash() -> str:
+    h = hashlib.sha256()
+    base = os.path.dirname(os.path.abspath(__file__))
+    for root, _, files in sorted(os.walk(base)):
+        if "__pycache__" in root:
+            continue
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(f.encode())
+                    h.update(fh.read())
+    return h.hexdigest()[:16]
+
+
+def _spec_shapes(spec: ConvSpec, method: str, batch: int):
+    """(input shapes+layouts, output shape) of a conv artifact."""
+    if method == "basic-parallel":
+        x = ([batch, spec.in_c, spec.in_h, spec.in_w], "nchw")
+        w = ([spec.nk, spec.in_c, spec.kh, spec.kw], "oihw")
+        out = [batch, spec.nk, spec.out_h, spec.out_w]
+    else:
+        x = ([batch, spec.in_h, spec.in_w, spec.in_c], "nhwc")
+        w = ([spec.kh, spec.kw, spec.in_c, spec.nk], "hwio")
+        out = [batch, spec.out_h, spec.out_w, spec.nk]
+    return [x, w, ([spec.nk], "vec")], out
+
+
+class Builder:
+    def __init__(self, out_dir: str, force: bool = False):
+        self.out_dir = out_dir
+        self.force = force
+        self.artifacts: list[dict] = []
+        self.src_hash = _source_hash()
+        self.prev_hash = None
+        prev_manifest = os.path.join(out_dir, "manifest.json")
+        if os.path.exists(prev_manifest):
+            try:
+                with open(prev_manifest) as f:
+                    self.prev_hash = json.load(f).get("source_hash")
+            except Exception:
+                self.prev_hash = None
+        os.makedirs(out_dir, exist_ok=True)
+        os.makedirs(os.path.join(out_dir, "weights"), exist_ok=True)
+        os.makedirs(os.path.join(out_dir, "fixtures"), exist_ok=True)
+
+    def _fresh(self, path: str) -> bool:
+        return (
+            not self.force
+            and self.prev_hash == self.src_hash
+            and os.path.exists(path)
+        )
+
+    def lower(self, name: str, fn, example_args: list, meta: dict) -> None:
+        path = os.path.join(self.out_dir, f"{name}.hlo.txt")
+        rec = dict(meta)
+        rec["name"] = name
+        rec["path"] = f"{name}.hlo.txt"
+        self.artifacts.append(rec)
+        if self._fresh(path):
+            return
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(text)
+        os.replace(tmp, path)
+        print(f"  [{time.time()-t0:6.1f}s] {name} ({len(text)//1024} KiB)")
+
+
+def conv_artifacts(b: Builder, batch: int = 1) -> None:
+    """One artifact per unique (conv shape signature x method)."""
+    seen = set()
+    for net in NETWORKS.values():
+        for lname, spec in net.conv_specs():
+            for method in METHODS:
+                sig = f"conv_{spec.signature()}_b{batch}_{method}"
+                if sig in seen:
+                    continue
+                seen.add(sig)
+                inputs, out = _spec_shapes(spec, method, batch)
+                fn = model.conv_fn(method, spec)
+                args = [
+                    jax.ShapeDtypeStruct(tuple(s), F32) for s, _ in inputs
+                ]
+                b.lower(
+                    sig,
+                    fn,
+                    args,
+                    {
+                        "kind": "conv",
+                        "method": method,
+                        "net": net.name,
+                        "layer": lname,
+                        "batch": batch,
+                        "inputs": [{"shape": s, "layout": l} for s, l in inputs],
+                        "output": {"shape": out},
+                        "flops": spec.flops * batch,
+                        "spec": {
+                            "in_c": spec.in_c, "in_h": spec.in_h, "in_w": spec.in_w,
+                            "nk": spec.nk, "kh": spec.kh, "kw": spec.kw,
+                            "stride": spec.stride, "pad": spec.pad,
+                            "relu": spec.relu,
+                            "out_h": spec.out_h, "out_w": spec.out_w,
+                        },
+                    },
+                )
+
+
+def fc_artifacts(b: Builder, batches=(1, 16)) -> None:
+    seen = set()
+    for net in NETWORKS.values():
+        # param_shapes gives the flattened input widths
+        for (lname, wshape, bshape), layer in zip(
+            [p for p in net.param_shapes() if len(p[1]) == 2],
+            [l for l in net.layers if l.kind == "fc"],
+        ):
+            d_in, d_out = wshape
+            for batch in batches:
+                r = "r" if layer.relu else "n"
+                sig = f"fc_{d_in}x{d_out}_{r}_b{batch}"
+                if sig in seen:
+                    continue
+                seen.add(sig)
+                fn = model.fc_fn(layer.relu)
+                args = [
+                    jax.ShapeDtypeStruct((batch, d_in), F32),
+                    jax.ShapeDtypeStruct((d_in, d_out), F32),
+                    jax.ShapeDtypeStruct((d_out,), F32),
+                ]
+                b.lower(
+                    sig,
+                    fn,
+                    args,
+                    {
+                        "kind": "fc",
+                        "method": "fc",
+                        "net": net.name,
+                        "layer": lname,
+                        "batch": batch,
+                        "inputs": [
+                            {"shape": [batch, d_in], "layout": "matrix"},
+                            {"shape": [d_in, d_out], "layout": "matrix"},
+                            {"shape": [d_out], "layout": "vec"},
+                        ],
+                        "output": {"shape": [batch, d_out]},
+                        "flops": 2 * batch * d_in * d_out,
+                        "relu": layer.relu,
+                    },
+                )
+
+
+def pool_lrn_artifacts(b: Builder, batch: int = 1) -> None:
+    """NHWC pool/LRN artifacts for the all-accelerator ablation mode."""
+    seen = set()
+    for net in NETWORKS.values():
+        shapes = net.shapes()
+        for (prev_name, (c, h, w)), layer in zip(shapes[:-1], net.layers):
+            if layer.kind == "pool":
+                sig = (
+                    f"pool_{layer.mode}_c{c}x{h}x{w}_z{layer.size}s{layer.stride}"
+                    f"_{'r' if layer.relu else 'n'}_b{batch}"
+                )
+                if sig in seen:
+                    continue
+                seen.add(sig)
+                fn = model.pool_fn(layer.mode, layer.size, layer.stride, True, layer.relu)
+                oh = pool_out(h, layer.size, layer.stride)
+                ow = pool_out(w, layer.size, layer.stride)
+                b.lower(
+                    sig,
+                    fn,
+                    [jax.ShapeDtypeStruct((batch, h, w, c), F32)],
+                    {
+                        "kind": "pool",
+                        "method": "pool",
+                        "net": net.name,
+                        "layer": layer.name,
+                        "batch": batch,
+                        "inputs": [{"shape": [batch, h, w, c], "layout": "nhwc"}],
+                        "output": {"shape": [batch, oh, ow, c]},
+                        "flops": batch * oh * ow * c * layer.size * layer.size,
+                    },
+                )
+            elif layer.kind == "lrn":
+                sig = f"lrn_c{c}x{h}x{w}_z{layer.size}_b{batch}"
+                if sig in seen:
+                    continue
+                seen.add(sig)
+                fn = model.lrn_fn(layer.size, layer.alpha, layer.beta, layer.k, True)
+                b.lower(
+                    sig,
+                    fn,
+                    [jax.ShapeDtypeStruct((batch, h, w, c), F32)],
+                    {
+                        "kind": "lrn",
+                        "method": "lrn",
+                        "net": net.name,
+                        "layer": layer.name,
+                        "batch": batch,
+                        "inputs": [{"shape": [batch, h, w, c], "layout": "nhwc"}],
+                        "output": {"shape": [batch, h, w, c]},
+                        "flops": 6 * batch * h * w * c * layer.size,
+                    },
+                )
+
+
+def fused_artifacts(b: Builder) -> None:
+    """Whole-network single-graph artifacts (our extension, DESIGN §7)."""
+    plans = [
+        ("lenet5", "basic-simd", 16),
+        ("lenet5", "mxu", 16),
+        ("lenet5", "mxu", 1),
+        ("cifar10", "basic-simd", 16),
+        ("cifar10", "mxu", 16),
+        ("cifar10", "mxu", 1),
+        ("alexnet", "mxu", 1),
+    ]
+    for net_name, method, batch in plans:
+        net = NETWORKS[net_name]
+        fwd = model.network_forward(net, method)
+        args = [jax.ShapeDtypeStruct((batch, net.in_c, net.in_h, net.in_w), F32)]
+        inputs = [
+            {"shape": [batch, net.in_c, net.in_h, net.in_w], "layout": "nchw"}
+        ]
+        for pname, wshape, bshape in net.param_shapes():
+            args.append(jax.ShapeDtypeStruct(tuple(wshape), F32))
+            args.append(jax.ShapeDtypeStruct(tuple(bshape), F32))
+            inputs.append({"shape": list(wshape), "layout": "param", "param": pname + ".w"})
+            inputs.append({"shape": list(bshape), "layout": "param", "param": pname + ".b"})
+        sig = f"fused_{net_name}_{method}_b{batch}"
+        b.lower(
+            sig,
+            fwd,
+            args,
+            {
+                "kind": "fused",
+                "method": method,
+                "net": net_name,
+                "layer": "*",
+                "batch": batch,
+                "inputs": inputs,
+                "output": {"shape": [batch, net.classes]},
+                "flops": sum(s.flops for _, s in net.conv_specs()) * batch,
+            },
+        )
+
+
+def export_weights(b: Builder, skip_train: bool) -> dict:
+    """Train LeNet-5 (or load cached), random-init the others; write one
+    f32-LE blob per network (w,b alternating in forward order)."""
+    weights_meta = {}
+    for net in NETWORKS.values():
+        path = os.path.join(b.out_dir, "weights", f"{net.name}.bin")
+        meta = {
+            "path": f"weights/{net.name}.bin",
+            "params": [
+                {"name": n, "w_shape": list(w), "b_shape": list(bb)}
+                for n, w, bb in net.param_shapes()
+            ],
+        }
+        regenerate = b.force or not os.path.exists(path) or b.prev_hash != b.src_hash
+        if net.name == "lenet5" and not skip_train:
+            if regenerate:
+                print("  training lenet5 on procedural digits ...")
+                params, log, acc = train.train_lenet5(verbose=True)
+                meta["test_acc"] = acc
+                meta["train_log"] = log
+                _write_blob(path, params)
+            else:
+                meta["test_acc"] = None  # preserved from previous manifest below
+        else:
+            if regenerate:
+                params = model.init_params(net, seed=1234)
+                _write_blob(path, params)
+        weights_meta[net.name] = meta
+    return weights_meta
+
+
+def _write_blob(path: str, params) -> None:
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        for p in params:
+            f.write(np.asarray(p, dtype="<f4").tobytes())
+    os.replace(tmp, path)
+
+
+def export_fixtures(b: Builder) -> None:
+    """Cross-language fixtures: deterministic digit renders + a tiny
+    labelled test set, consumed by Rust tests and examples."""
+    fix_dir = os.path.join(b.out_dir, "fixtures")
+    # Deterministic renders for generator-parity tests (no noise).
+    cases = [
+        (0, 0.0, 0.0, 1.0),
+        (1, 1.5, -0.5, 0.9),
+        (4, -2.0, 2.0, 0.8),
+        (7, 0.25, -1.75, 1.05),
+        (8, 0.0, 0.0, 0.75),
+    ]
+    with open(os.path.join(fix_dir, "digits_param.bin"), "wb") as f:
+        for label, dx, dy, scale in cases:
+            img = digits.render_digit(label, dx=dx, dy=dy, scale=scale)
+            f.write(np.float32(label).tobytes())
+            f.write(np.float32(dx).tobytes())
+            f.write(np.float32(dy).tobytes())
+            f.write(np.float32(scale).tobytes())
+            f.write(img.astype("<f4").tobytes())
+    # Labelled noisy test set for end-to-end accuracy checks in Rust.
+    images, labels = digits.make_dataset(256, seed=7)
+    with open(os.path.join(fix_dir, "digits_test.bin"), "wb") as f:
+        f.write(np.int32(len(labels)).tobytes())
+        f.write(labels.astype("<i4").tobytes())
+        f.write(images.astype("<f4").tobytes())
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--force", action="store_true", help="re-lower everything")
+    ap.add_argument("--skip-train", action="store_true")
+    ap.add_argument("--only", default=None, help="substring filter on artifact names")
+    args = ap.parse_args()
+
+    b = Builder(args.out, force=args.force)
+    if b.prev_hash == b.src_hash and not args.force:
+        print(f"sources unchanged (hash {b.src_hash}); verifying files only")
+
+    print("== conv layer artifacts ==")
+    conv_artifacts(b, batch=1)
+    print("== fc artifacts ==")
+    fc_artifacts(b)
+    print("== pool/lrn artifacts ==")
+    pool_lrn_artifacts(b)
+    print("== fused network artifacts ==")
+    fused_artifacts(b)
+    if args.only:
+        b.artifacts = [a for a in b.artifacts if args.only in a["name"]]
+
+    print("== weights ==")
+    weights_meta = export_weights(b, args.skip_train)
+    # Preserve training metadata across incremental runs.
+    prev = os.path.join(args.out, "manifest.json")
+    if os.path.exists(prev):
+        try:
+            with open(prev) as f:
+                old = json.load(f)
+            for name, meta in weights_meta.items():
+                if meta.get("test_acc") is None and name in old.get("weights", {}):
+                    meta["test_acc"] = old["weights"][name].get("test_acc")
+                    meta["train_log"] = old["weights"][name].get("train_log")
+        except Exception:
+            pass
+
+    print("== fixtures ==")
+    export_fixtures(b)
+
+    manifest = {
+        "version": 1,
+        "source_hash": b.src_hash,
+        "generated_unix": int(time.time()),
+        "networks": {n.name: n.to_json() for n in NETWORKS.values()},
+        "shapes": {
+            n.name: [[name, list(chw)] for name, chw in n.shapes()]
+            for n in NETWORKS.values()
+        },
+        "heaviest_conv": {
+            n.name: n.heaviest_conv()[0] for n in NETWORKS.values()
+        },
+        "methods": list(METHODS),
+        "artifacts": b.artifacts,
+        "weights": weights_meta,
+    }
+    tmp = os.path.join(args.out, "manifest.json.tmp")
+    with open(tmp, "w") as f:
+        json.dump(manifest, f, indent=1)
+    os.replace(tmp, os.path.join(args.out, "manifest.json"))
+    print(f"wrote manifest with {len(b.artifacts)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

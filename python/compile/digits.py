@@ -1,0 +1,106 @@
+"""Procedural digit corpus — the MNIST substitute (DESIGN.md §2).
+
+Digits 0-9 are rasterized from seven-segment-style stroke skeletons:
+pixel intensity is the max over segments of a Gaussian falloff from the
+point-to-segment distance, plus noise and a random sub-pixel translation
+/ scale jitter.  The generator is deterministic given (label, seed) and
+is **mirrored bit-for-bit in Rust** (rust/src/data/synth.rs) so the
+Rust serving examples produce images the Python-trained LeNet-5
+classifies; a cross-language fixture test pins the two implementations
+together (tests/test_digits.py writes fixtures consumed by cargo tests).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# Seven-segment endpoints on a unit box (x right, y down):
+#     -0-
+#    5   1
+#     -6-
+#    4   2
+#     -3-
+_SEGS = {
+    0: ((0.2, 0.1), (0.8, 0.1)),
+    1: ((0.8, 0.1), (0.8, 0.5)),
+    2: ((0.8, 0.5), (0.8, 0.9)),
+    3: ((0.2, 0.9), (0.8, 0.9)),
+    4: ((0.2, 0.5), (0.2, 0.9)),
+    5: ((0.2, 0.1), (0.2, 0.5)),
+    6: ((0.2, 0.5), (0.8, 0.5)),
+}
+
+_DIGIT_SEGS = {
+    0: (0, 1, 2, 3, 4, 5),
+    1: (1, 2),
+    2: (0, 1, 6, 4, 3),
+    3: (0, 1, 6, 2, 3),
+    4: (5, 6, 1, 2),
+    5: (0, 5, 6, 2, 3),
+    6: (0, 5, 6, 2, 3, 4),
+    7: (0, 1, 2),
+    8: (0, 1, 2, 3, 4, 5, 6),
+    9: (0, 1, 2, 3, 5, 6),
+}
+
+SIZE = 28
+STROKE_SIGMA = 1.3  # px
+
+
+def _seg_distance(px: np.ndarray, py: np.ndarray, a, b) -> np.ndarray:
+    """Distance from each pixel center to segment ab (all in px units)."""
+    ax, ay = a
+    bx, by = b
+    dx, dy = bx - ax, by - ay
+    len2 = dx * dx + dy * dy
+    if len2 == 0.0:
+        return np.hypot(px - ax, py - ay)
+    t = ((px - ax) * dx + (py - ay) * dy) / len2
+    t = np.clip(t, 0.0, 1.0)
+    return np.hypot(px - (ax + t * dx), py - (ay + t * dy))
+
+
+def render_digit(
+    label: int,
+    *,
+    dx: float = 0.0,
+    dy: float = 0.0,
+    scale: float = 1.0,
+    noise: np.ndarray | None = None,
+) -> np.ndarray:
+    """Rasterize one digit; returns (SIZE, SIZE) f32 in [0, 1].
+
+    The deterministic core (no noise, given dx/dy/scale) must match the
+    Rust implementation exactly.
+    """
+    ys, xs = np.mgrid[0:SIZE, 0:SIZE]
+    px = xs.astype(np.float64) + 0.5
+    py = ys.astype(np.float64) + 0.5
+    img = np.zeros((SIZE, SIZE), np.float64)
+    cx, cy = SIZE / 2.0, SIZE / 2.0
+    for seg in _DIGIT_SEGS[label]:
+        (x0, y0), (x1, y1) = _SEGS[seg]
+        # unit box -> pixel coords with jitter: scale about center
+        a = (cx + (x0 * SIZE - cx) * scale + dx, cy + (y0 * SIZE - cy) * scale + dy)
+        b = (cx + (x1 * SIZE - cx) * scale + dx, cy + (y1 * SIZE - cy) * scale + dy)
+        d = _seg_distance(px, py, a, b)
+        img = np.maximum(img, np.exp(-(d * d) / (2.0 * STROKE_SIGMA * STROKE_SIGMA)))
+    if noise is not None:
+        img = img + noise
+    return np.clip(img, 0.0, 1.0).astype(np.float32)
+
+
+def make_dataset(n: int, seed: int = 0, noise_std: float = 0.08):
+    """(images (n,1,28,28) f32, labels (n,) int32), balanced classes."""
+    rng = np.random.default_rng(seed)
+    images = np.zeros((n, 1, SIZE, SIZE), np.float32)
+    labels = np.zeros((n,), np.int32)
+    for i in range(n):
+        label = int(rng.integers(0, 10))
+        dx = float(rng.uniform(-2.0, 2.0))
+        dy = float(rng.uniform(-2.0, 2.0))
+        scale = float(rng.uniform(0.75, 1.05))
+        noise = rng.normal(0.0, noise_std, (SIZE, SIZE))
+        images[i, 0] = render_digit(label, dx=dx, dy=dy, scale=scale, noise=noise)
+        labels[i] = label
+    return images, labels

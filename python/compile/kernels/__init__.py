@@ -1,0 +1,13 @@
+"""L1: Pallas kernels, one module per paper method, plus the jnp oracle."""
+
+from . import (  # noqa: F401
+    common,
+    conv_advanced,
+    conv_direct,
+    conv_mxu,
+    conv_simd,
+    fc,
+    lrn,
+    pool,
+    ref,
+)

@@ -1,0 +1,141 @@
+"""Shared helpers for the Pallas convolution kernels.
+
+Terminology follows the paper: a *frame* is one 3-D input array
+(channels x height x width, or height x width x channels after
+"dimension swapping"), a *kernel* is one 3-D filter, `nk` is the number
+of filters, and `stride` applies to both spatial axes unless split.
+
+All kernels run under ``interpret=True``: the CPU PJRT client cannot
+execute Mosaic custom-calls, so the Pallas grid/BlockSpec structure is
+preserved while the body lowers to plain HLO (see DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+# Pallas must run in interpret mode in this environment (CPU PJRT).
+INTERPRET = True
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    """Static configuration of one convolution layer.
+
+    Shapes follow the canonical (Caffe-style) NCHW convention; the
+    per-method modules transpose to their native layout.
+    """
+
+    in_c: int
+    in_h: int
+    in_w: int
+    nk: int  # number of kernels == output channels
+    kh: int
+    kw: int
+    stride: int = 1
+    pad: int = 0
+    relu: bool = False
+
+    @property
+    def out_h(self) -> int:
+        return (self.in_h + 2 * self.pad - self.kh) // self.stride + 1
+
+    @property
+    def out_w(self) -> int:
+        return (self.in_w + 2 * self.pad - self.kw) // self.stride + 1
+
+    @property
+    def pad_h(self) -> int:
+        return self.in_h + 2 * self.pad
+
+    @property
+    def pad_w(self) -> int:
+        return self.in_w + 2 * self.pad
+
+    @property
+    def flops(self) -> int:
+        """MAC-pair flops of the layer for one frame (2 * MACs)."""
+        return 2 * self.out_h * self.out_w * self.nk * self.in_c * self.kh * self.kw
+
+    def signature(self) -> str:
+        """Stable shape signature used for artifact de-duplication."""
+        r = "r" if self.relu else "n"
+        return (
+            f"c{self.in_c}x{self.in_h}x{self.in_w}"
+            f"_k{self.nk}x{self.kh}x{self.kw}_s{self.stride}_p{self.pad}_{r}"
+        )
+
+
+def pool_out(hw: int, size: int, stride: int) -> int:
+    """Caffe ceil-mode pooling output size with the in-bounds clip for
+    the last window (see kernels/pool.py); single source of truth for
+    shape propagation in networks.py / aot.py."""
+    o = (hw - size + stride - 1) // stride + 1
+    if (o - 1) * stride >= hw:
+        o -= 1
+    return o
+
+
+def register_block(nk: int, want: int) -> int:
+    """Largest register-block size in {want, want/2, ..., 1} dividing nk.
+
+    The paper notes kernel counts are "usually divisible by 4 and also by
+    8"; LeNet-5's conv2 (nk=50) is the exception, so we degrade
+    gracefully exactly like an implementation on real hardware would.
+    """
+    rb = want
+    while rb > 1 and nk % rb != 0:
+        rb //= 2
+    return rb
+
+
+def pad_nchw(x: jax.Array, pad: int) -> jax.Array:
+    if pad == 0:
+        return x
+    return jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+
+
+def pad_nhwc(x: jax.Array, pad: int) -> jax.Array:
+    if pad == 0:
+        return x
+    return jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+
+
+def maybe_relu(x: jax.Array, relu: bool) -> jax.Array:
+    return jnp.maximum(x, 0.0) if relu else x
+
+
+def nchw_weights_to_nhwc(w: jax.Array) -> jax.Array:
+    """(nk, c, kh, kw) -> (kh, kw, c, nk): the weight half of the paper's
+    "dimension swapping" (channels to the lowest dimension)."""
+    return jnp.transpose(w, (2, 3, 1, 0))
+
+
+def nchw_to_nhwc(x: jax.Array) -> jax.Array:
+    return jnp.transpose(x, (0, 2, 3, 1))
+
+
+def nhwc_to_nchw(x: jax.Array) -> jax.Array:
+    return jnp.transpose(x, (0, 3, 1, 2))
+
+
+def vmem_bytes(*shapes: tuple[int, ...]) -> int:
+    """f32 VMEM footprint of a set of blocks (for DESIGN §Perf estimates)."""
+    total = 0
+    for s in shapes:
+        n = 1
+        for d in s:
+            n *= d
+        total += 4 * n
+    return total
+
+
+@functools.lru_cache(maxsize=None)
+def _identity():  # pragma: no cover - trivial
+    return None

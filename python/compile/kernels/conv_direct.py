@@ -1,0 +1,66 @@
+"""Basic Parallel convolution (paper §4.2) as a Pallas kernel.
+
+The paper's Basic Parallel method keeps the original NCHW layout and
+computes output frames serially; within a frame each GPU thread produces
+one output element, with loops ordered (channel, height, width) — width
+innermost.  A scalar-per-grid-step kernel does not map onto TPU tiles,
+so the faithful tile-granularity analogue is: **one grid step per output
+channel of one frame**, accumulating over the kernel window with
+element-wise multiplies and a channel *sum* (no lane dot product — the
+reduction axis is NOT lane-major here, which is exactly the
+inefficiency the paper's Basic SIMD method fixes by dimension swapping).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import F32, INTERPRET, ConvSpec, maybe_relu, pad_nchw
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, spec: ConvSpec):
+    # x_ref: (1, C, Hp, Wp) one padded frame
+    # w_ref: (1, C, KH, KW) one kernel
+    # b_ref: (1,)           its bias
+    # o_ref: (1, 1, OH, OW) one output channel of one frame
+    x = x_ref[0]
+    w = w_ref[0]
+    oh, ow, s = spec.out_h, spec.out_w, spec.stride
+    acc = jnp.zeros((oh, ow), F32)
+    # Static unroll over the kernel window; the channel reduction is a
+    # plain sum over axis 0 (channels are the HIGHEST-stride axis in this
+    # layout, i.e. the SIMD-hostile order the paper starts from).
+    for i in range(spec.kh):
+        for j in range(spec.kw):
+            window = x[:, i : i + s * oh : s, j : j + s * ow : s]  # (C, OH, OW)
+            acc = acc + jnp.sum(window * w[:, i, j][:, None, None], axis=0)
+    acc = acc + b_ref[0]
+    o_ref[0, 0] = maybe_relu(acc, spec.relu)
+
+
+def conv(x: jax.Array, w: jax.Array, b: jax.Array, spec: ConvSpec) -> jax.Array:
+    """x: (N, C, H, W) unpadded, w: (NK, C, KH, KW), b: (NK,).
+
+    Returns (N, NK, OH, OW).  Grid = (N, NK): frames serial (outer),
+    one output channel per step (inner), mirroring the paper's
+    frame-serial schedule.
+    """
+    n = x.shape[0]
+    xp = pad_nchw(x.astype(F32), spec.pad)
+    grid = (n, spec.nk)
+    return pl.pallas_call(
+        functools.partial(_kernel, spec=spec),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, spec.in_c, spec.pad_h, spec.pad_w), lambda i, k: (i, 0, 0, 0)),
+            pl.BlockSpec((1, spec.in_c, spec.kh, spec.kw), lambda i, k: (k, 0, 0, 0)),
+            pl.BlockSpec((1,), lambda i, k: (k,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, spec.out_h, spec.out_w), lambda i, k: (i, k, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, spec.nk, spec.out_h, spec.out_w), F32),
+        interpret=INTERPRET,
+    )(xp, w.astype(F32), b.astype(F32))

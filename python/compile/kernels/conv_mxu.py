@@ -1,0 +1,66 @@
+"""MXU convolution — the TPU-native extension of Advanced SIMD.
+
+This is our §Hardware-Adaptation "future work" method (DESIGN.md §7):
+carried to its limit, the paper's outputs-per-thread blocking turns the
+per-thread vec4 dot into a full matrix product.  On a TPU the natural
+unit for that product is the 128x128 MXU systolic array, so the kernel
+im2col-unfolds the frame into an (OH·OW, KH·KW·C) patch matrix inside
+VMEM and multiplies it against the (KH·KW·C, NK) weight matrix in one
+MXU pass — every output element of the frame is produced by one grid
+step, the logical endpoint of "compute more outputs per thread".
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import F32, INTERPRET, ConvSpec, maybe_relu, pad_nhwc
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, spec: ConvSpec):
+    # x_ref: (1, Hp, Wp, C) one padded frame
+    # w_ref: (KH*KW*C, NK)  all kernels as one matrix
+    # b_ref: (NK,)
+    # o_ref: (1, OH, OW, NK) the full output frame
+    x = x_ref[0]
+    oh, ow, s = spec.out_h, spec.out_w, spec.stride
+    # im2col inside VMEM: static unroll over the window builds the patch
+    # matrix column blocks; rows are output positions.
+    cols = []
+    for i in range(spec.kh):
+        for j in range(spec.kw):
+            window = x[i : i + s * oh : s, j : j + s * ow : s, :]  # (OH, OW, C)
+            cols.append(window.reshape(oh * ow, spec.in_c))
+    patches = jnp.concatenate(cols, axis=1)  # (OH*OW, KH*KW*C)
+    # One MXU matmul computes the entire frame. `preferred_element_type`
+    # keeps the f32 accumulator the paper's arithmetic assumes.
+    out = jnp.dot(patches, w_ref[...], preferred_element_type=F32)
+    out = out + b_ref[...]
+    o_ref[0] = maybe_relu(out.reshape(oh, ow, spec.nk), spec.relu)
+
+
+def conv(x: jax.Array, w: jax.Array, b: jax.Array, spec: ConvSpec) -> jax.Array:
+    """x: (N, H, W, C) NHWC, w: (KH, KW, C, NK), b: (NK,).
+
+    Returns (N, OH, OW, NK).  Grid = (N,): one frame per step.
+    """
+    n = x.shape[0]
+    xp = pad_nhwc(x.astype(F32), spec.pad)
+    wm = w.astype(F32).reshape(spec.kh * spec.kw * spec.in_c, spec.nk)
+    grid = (n,)
+    return pl.pallas_call(
+        functools.partial(_kernel, spec=spec),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, spec.pad_h, spec.pad_w, spec.in_c), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec(wm.shape, lambda i: (0, 0)),
+            pl.BlockSpec((spec.nk,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, spec.out_h, spec.out_w, spec.nk), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, spec.out_h, spec.out_w, spec.nk), F32),
+        interpret=INTERPRET,
+    )(xp, wm, b.astype(F32))

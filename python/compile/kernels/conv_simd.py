@@ -1,0 +1,64 @@
+"""Basic SIMD convolution (paper §4.3) as a Pallas kernel.
+
+The paper's Basic SIMD method performs "dimension swapping": both input
+frames and kernels are rearranged so **channels become the lowest
+dimension**, then the inner loop walks the channel axis consuming vec4
+(128-bit) dot products.  On TPU the analogous move is channel-*last*
+(NHWC / HWCN) blocks whose reduction axis is lane-major, so the VPU
+consumes the channel dot product lane-wise — same insight, wider SIMD.
+
+Grid structure matches Basic Parallel (one output channel per grid
+step): the ONLY deltas vs. conv_direct are the swapped layout and the
+lane-wise dot, which is exactly the paper's §4.2→§4.3 step.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import F32, INTERPRET, ConvSpec, maybe_relu, pad_nhwc
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, spec: ConvSpec):
+    # x_ref: (1, Hp, Wp, C) one padded frame, channels last
+    # w_ref: (KH, KW, C, 1) one kernel, channels in the lane axis
+    # b_ref: (1,)
+    # o_ref: (1, OH, OW, 1)
+    x = x_ref[0]
+    w = w_ref[...]
+    oh, ow, s = spec.out_h, spec.out_w, spec.stride
+    acc = jnp.zeros((oh, ow), F32)
+    for i in range(spec.kh):
+        for j in range(spec.kw):
+            window = x[i : i + s * oh : s, j : j + s * ow : s, :]  # (OH, OW, C)
+            # Lane-wise dot over the channel axis: the vec4 dot of the
+            # paper widened to the full vector unit.
+            acc = acc + jnp.dot(window, w[i, j, :, 0])
+    acc = acc + b_ref[0]
+    o_ref[0, :, :, 0] = maybe_relu(acc, spec.relu)
+
+
+def conv(x: jax.Array, w: jax.Array, b: jax.Array, spec: ConvSpec) -> jax.Array:
+    """x: (N, H, W, C) unpadded NHWC, w: (KH, KW, C, NK), b: (NK,).
+
+    Returns (N, OH, OW, NK).  Grid = (N, NK).
+    """
+    n = x.shape[0]
+    xp = pad_nhwc(x.astype(F32), spec.pad)
+    grid = (n, spec.nk)
+    return pl.pallas_call(
+        functools.partial(_kernel, spec=spec),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, spec.pad_h, spec.pad_w, spec.in_c), lambda i, k: (i, 0, 0, 0)),
+            pl.BlockSpec((spec.kh, spec.kw, spec.in_c, 1), lambda i, k: (0, 0, 0, k)),
+            pl.BlockSpec((1,), lambda i, k: (k,)),
+        ],
+        out_specs=pl.BlockSpec((1, spec.out_h, spec.out_w, 1), lambda i, k: (i, 0, 0, k)),
+        out_shape=jax.ShapeDtypeStruct((n, spec.out_h, spec.out_w, spec.nk), F32),
+        interpret=INTERPRET,
+    )(xp, w.astype(F32), b.astype(F32))

@@ -1,0 +1,87 @@
+"""Fully connected layer as a tiled, accumulating Pallas kernel.
+
+The paper accelerates AlexNet's FC layers "using methods similar to
+acceleration of the convolution layers" — i.e. a blocked matrix-vector
+product.  Here the weight matrix is tiled along BOTH axes: the grid is
+(out_blocks, in_blocks) and each step accumulates a partial product into
+the output block, the standard Pallas reduction pattern (`pl.when` zeroes
+the accumulator on the first reduction step).  The input-axis tiling is
+what keeps AlexNet's fc6 (9216x4096, 151 MB of weights) within a
+VMEM-sized working set per step on real hardware.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import F32, INTERPRET, maybe_relu
+
+
+def _pick_block(dim: int, want: int) -> int:
+    blk = min(want, dim)
+    while dim % blk != 0:
+        blk -= 1
+    return blk
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, in_blocks: int, relu: bool):
+    # x_ref: (N, IB)  w_ref: (IB, OB)  b_ref: (OB,)  o_ref: (N, OB)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...], preferred_element_type=F32)
+
+    @pl.when(j == in_blocks - 1)
+    def _finish():
+        out = o_ref[...] + b_ref[...]
+        o_ref[...] = maybe_relu(out, relu)
+
+
+def fc(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    relu: bool = False,
+    block_in: int | None = None,
+    block_out: int | None = None,
+) -> jax.Array:
+    """x: (N, In), w: (In, Out), b: (Out,) -> (N, Out).
+
+    Default block sizes depend on the lowering target.  Under
+    ``interpret=True`` (this environment) every grid step materializes a
+    copy of its operands, so the 9x8 grid of AlexNet's fc6 costs ~70 ms
+    of copies *per step* on XLA-CPU (measured: 5.04 s vs 13.7 ms for a
+    single-step grid — see EXPERIMENTS.md §Perf).  Real-TPU lowering
+    DMAs blocks into VMEM instead, where the tiled grid is the point.
+    Explicit ``block_in/block_out`` always win (the pytest suite uses
+    them to validate the tiled reduction path).
+    """
+    n, d_in = x.shape
+    d_out = w.shape[1]
+    if block_in is None:
+        block_in = d_in if INTERPRET else 1024
+    if block_out is None:
+        block_out = d_out if INTERPRET else 512
+    ib = _pick_block(d_in, block_in)
+    ob = _pick_block(d_out, block_out)
+    in_blocks = d_in // ib
+    grid = (d_out // ob, in_blocks)
+    return pl.pallas_call(
+        functools.partial(_kernel, in_blocks=in_blocks, relu=relu),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, ib), lambda o, i: (0, i)),
+            pl.BlockSpec((ib, ob), lambda o, i: (i, o)),
+            pl.BlockSpec((ob,), lambda o, i: (o,)),
+        ],
+        out_specs=pl.BlockSpec((n, ob), lambda o, i: (0, o)),
+        out_shape=jax.ShapeDtypeStruct((n, d_out), F32),
+        interpret=INTERPRET,
+    )(x.astype(F32), w.astype(F32), b.astype(F32))

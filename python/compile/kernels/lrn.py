@@ -1,0 +1,55 @@
+"""Local Response Normalization (cross-channel, Caffe/AlexNet style).
+
+Like pooling, the paper schedules LRN on the multi-threaded mobile CPU;
+the Pallas kernel here serves the fused whole-network artifacts.  The
+channel window unrolls statically over shifted squares — with channels
+in the lane axis (NHWC) every shift is a lane rotation, which is the
+layout-friendly way to do cross-channel windows on a vector unit.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import F32, INTERPRET
+
+
+def _kernel(x_ref, o_ref, *, size, alpha, beta, k):
+    # x_ref: (1, H, W, C); o_ref: (1, H, W, C)
+    x = x_ref[0]
+    c = x.shape[2]
+    half = size // 2
+    sq = x * x
+    padded = jnp.pad(sq, ((0, 0), (0, 0), (half, half)))
+    acc = jnp.zeros_like(x)
+    for i in range(size):
+        acc = acc + padded[:, :, i : i + c]
+    o_ref[0] = x / jnp.power(k + (alpha / size) * acc, beta)
+
+
+def lrn_nhwc(
+    x: jax.Array,
+    size: int = 5,
+    alpha: float = 1e-4,
+    beta: float = 0.75,
+    k: float = 1.0,
+) -> jax.Array:
+    """x: (N, H, W, C) -> same shape."""
+    n, h, w, c = x.shape
+    return pl.pallas_call(
+        functools.partial(_kernel, size=size, alpha=alpha, beta=beta, k=k),
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h, w, c), F32),
+        interpret=INTERPRET,
+    )(x.astype(F32))
+
+
+def lrn_nchw(x, size=5, alpha=1e-4, beta=0.75, k=1.0):
+    xt = jnp.transpose(x, (0, 2, 3, 1))
+    return jnp.transpose(lrn_nhwc(xt, size, alpha, beta, k), (0, 3, 1, 2))

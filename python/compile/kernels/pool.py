@@ -1,0 +1,87 @@
+"""Pooling layers as Pallas kernels.
+
+The paper runs pooling on the mobile CPU (multi-threaded) because it is
+"unsuitable for GPU-based acceleration"; the Rust side does exactly that
+(rust/src/cpu/pool.rs).  These kernels exist for the *fused
+whole-network* artifacts, where keeping pooling inside the accelerator
+graph avoids a host round-trip per layer.  Window offsets unroll
+statically; max uses jnp.maximum accumulation, average sums then scales.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import F32, INTERPRET
+
+
+def _out(hw: int, size: int, stride: int) -> int:
+    # Caffe-style ceil pooling so LeNet/CIFAR shapes match the paper's
+    # nets, with Caffe's clip: the last window must start in-bounds
+    # (otherwise stride > size yields a fully out-of-range window).
+    o = (hw - size + stride - 1) // stride + 1
+    if (o - 1) * stride >= hw:
+        o -= 1
+    return o
+
+
+def _kernel(x_ref, o_ref, *, size, stride, oh, ow, mode):
+    # x_ref: (1, H, W, C) one frame NHWC; o_ref: (1, OH, OW, C)
+    x = x_ref[0]
+    h, w, _ = x.shape
+    if mode == "max":
+        acc = jnp.full((oh, ow, x.shape[2]), -jnp.inf, F32)
+    else:
+        acc = jnp.zeros((oh, ow, x.shape[2]), F32)
+    cnt = jnp.zeros((oh, ow, 1), F32)
+    for i in range(size):
+        for j in range(size):
+            # Ceil-mode windows may hang off the edge; guard with a pad.
+            need_h = i + stride * (oh - 1) + 1
+            need_w = j + stride * (ow - 1) + 1
+            pad_h = max(0, need_h - h)
+            pad_w = max(0, need_w - w)
+            if mode == "max":
+                xp = jnp.pad(x, ((0, pad_h), (0, pad_w), (0, 0)), constant_values=-jnp.inf)
+            else:
+                xp = jnp.pad(x, ((0, pad_h), (0, pad_w), (0, 0)))
+            window = xp[i : i + stride * oh : stride, j : j + stride * ow : stride, :]
+            if mode == "max":
+                acc = jnp.maximum(acc, window)
+            else:
+                acc = acc + window
+                ones = jnp.pad(
+                    jnp.ones((h, w, 1), F32), ((0, pad_h), (0, pad_w), (0, 0))
+                )
+                cnt = cnt + ones[i : i + stride * oh : stride, j : j + stride * ow : stride, :]
+    if mode == "avg":
+        # Caffe averages over the FULL window size (zero padding counts).
+        acc = acc / float(size * size)
+        del cnt
+    o_ref[0] = acc
+
+
+def pool_nhwc(x: jax.Array, size: int, stride: int, mode: str = "max") -> jax.Array:
+    """x: (N, H, W, C) -> (N, OH, OW, C) with Caffe ceil semantics."""
+    assert mode in ("max", "avg")
+    n, h, w, c = x.shape
+    oh, ow = _out(h, size, stride), _out(w, size, stride)
+    return pl.pallas_call(
+        functools.partial(_kernel, size=size, stride=stride, oh=oh, ow=ow, mode=mode),
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, oh, ow, c), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, oh, ow, c), F32),
+        interpret=INTERPRET,
+    )(x.astype(F32))
+
+
+def pool_nchw(x: jax.Array, size: int, stride: int, mode: str = "max") -> jax.Array:
+    """NCHW wrapper used by the NCHW (basic-parallel) fused path."""
+    xt = jnp.transpose(x, (0, 2, 3, 1))
+    out = pool_nhwc(xt, size, stride, mode)
+    return jnp.transpose(out, (0, 3, 1, 2))

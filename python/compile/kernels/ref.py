@@ -1,0 +1,110 @@
+"""Pure-jnp reference oracle for every accelerated layer.
+
+This is the ground truth the Pallas kernels are validated against in
+``python/tests``; it uses ``lax.conv_general_dilated`` and plain jnp ops
+only (no Pallas), so any agreement bug would have to be present in two
+independent implementations to go unnoticed.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .common import ConvSpec, maybe_relu
+
+
+def conv_nchw(x: jax.Array, w: jax.Array, b: jax.Array, spec: ConvSpec) -> jax.Array:
+    """Reference convolution. x: (N,C,H,W), w: (NK,C,KH,KW), b: (NK,)."""
+    out = lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(spec.stride, spec.stride),
+        padding=[(spec.pad, spec.pad), (spec.pad, spec.pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    out = out + b[None, :, None, None]
+    return maybe_relu(out, spec.relu)
+
+
+def fc(x: jax.Array, w: jax.Array, b: jax.Array, relu: bool = False) -> jax.Array:
+    """Reference fully connected layer. x: (N,In), w: (In,Out), b: (Out,)."""
+    return maybe_relu(x @ w + b, relu)
+
+
+def _pool_out(hw: int, size: int, stride: int) -> int:
+    """Caffe ceil-mode output size (LeNet/CIFAR shapes depend on this).
+
+    Caffe additionally clips the last window so it starts in-bounds
+    (`if ((ph * stride) >= height) --pooled_height` in pooling_layer.cpp);
+    without the clip, stride > size can yield an empty window.
+    """
+    o = (hw - size + stride - 1) // stride + 1
+    if (o - 1) * stride >= hw:
+        o -= 1
+    return o
+
+
+def maxpool_nchw(x: jax.Array, size: int, stride: int) -> jax.Array:
+    """Ceil-mode max pooling; edge windows are clipped to valid pixels.
+
+    Deliberately written as explicit per-output-position slicing (an
+    independent formulation from the kernel's shifted-window unroll).
+    """
+    n, c, h, w = x.shape
+    oh, ow = _pool_out(h, size, stride), _pool_out(w, size, stride)
+    rows = []
+    for i in range(oh):
+        cols = []
+        for j in range(ow):
+            win = x[:, :, i * stride : i * stride + size, j * stride : j * stride + size]
+            cols.append(jnp.max(win, axis=(2, 3)))
+        rows.append(jnp.stack(cols, axis=-1))
+    return jnp.stack(rows, axis=-2)
+
+
+def avgpool_nchw(x: jax.Array, size: int, stride: int) -> jax.Array:
+    """Ceil-mode average pooling; the divisor is the FULL window area
+    (zero padding contributes), matching the Pallas kernel's contract."""
+    n, c, h, w = x.shape
+    oh, ow = _pool_out(h, size, stride), _pool_out(w, size, stride)
+    rows = []
+    for i in range(oh):
+        cols = []
+        for j in range(ow):
+            win = x[:, :, i * stride : i * stride + size, j * stride : j * stride + size]
+            cols.append(jnp.sum(win, axis=(2, 3)) / float(size * size))
+        rows.append(jnp.stack(cols, axis=-1))
+    return jnp.stack(rows, axis=-2)
+
+
+def lrn_nchw(
+    x: jax.Array,
+    size: int = 5,
+    alpha: float = 1e-4,
+    beta: float = 0.75,
+    k: float = 1.0,
+) -> jax.Array:
+    """Caffe-style cross-channel local response normalization.
+
+    out[c] = x[c] / (k + alpha/size * sum_{c' in window(c)} x[c']^2)^beta
+    """
+    sq = x * x
+    half = size // 2
+    c = x.shape[1]
+    padded = jnp.pad(sq, ((0, 0), (half, half), (0, 0), (0, 0)))
+    acc = jnp.zeros_like(x)
+    for i in range(size):
+        acc = acc + padded[:, i : i + c, :, :]
+    return x / jnp.power(k + (alpha / size) * acc, beta)
+
+
+def relu(x: jax.Array) -> jax.Array:
+    return jnp.maximum(x, 0.0)
+
+
+def softmax(x: jax.Array) -> jax.Array:
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)

@@ -1,0 +1,157 @@
+"""L2: build JAX forward functions for the benchmark networks, composed
+from the L1 Pallas kernels, parameterized by acceleration method.
+
+Two granularities are produced, mirroring the paper's execution model:
+
+* **per-layer functions** — one jittable fn per (conv|fc|pool|lrn layer
+  x method); these become the per-layer HLO artifacts the Rust engine
+  streams frames through (frames serial, Fig. 5 pipeline).  Layouts are
+  *native to the method* (NCHW for basic-parallel, NHWC for the SIMD
+  methods) — the "dimension swapping" lives in Rust, on CPU idle time,
+  exactly as in the paper.
+* **fused network functions** — the whole forward path in one graph
+  (our extension; the paper's engine is strictly layerwise).  Transposes
+  happen inside the graph where XLA can fuse them.
+
+Weights are *function inputs*, never baked constants, so one artifact per
+shape signature serves every model with that shape.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv_advanced, conv_direct, conv_mxu, conv_simd
+from .kernels import fc as fc_k
+from .kernels import lrn as lrn_k
+from .kernels import pool as pool_k
+from .kernels import ref
+from .kernels.common import ConvSpec, nchw_to_nhwc, nchw_weights_to_nhwc, nhwc_to_nchw
+from .networks import Network
+
+NHWC_METHODS = ("basic-simd", "advanced-simd-4", "advanced-simd-8", "mxu")
+
+
+def conv_fn(method: str, spec: ConvSpec) -> Callable:
+    """Per-layer convolution fn in the method's native layout.
+
+    basic-parallel: x (N,C,H,W), w (NK,C,KH,KW) -> (N,NK,OH,OW)
+    simd/advanced/mxu: x (N,H,W,C), w (KH,KW,C,NK) -> (N,OH,OW,NK)
+    """
+    if method == "basic-parallel":
+        return lambda x, w, b: conv_direct.conv(x, w, b, spec)
+    if method == "basic-simd":
+        return lambda x, w, b: conv_simd.conv(x, w, b, spec)
+    if method == "advanced-simd-4":
+        return lambda x, w, b: conv_advanced.conv(x, w, b, spec, rb=4)
+    if method == "advanced-simd-8":
+        return lambda x, w, b: conv_advanced.conv(x, w, b, spec, rb=8)
+    if method == "mxu":
+        return lambda x, w, b: conv_mxu.conv(x, w, b, spec)
+    raise ValueError(f"unknown method {method!r}")
+
+
+def fc_fn(relu: bool) -> Callable:
+    return lambda x, w, b: fc_k.fc(x, w, b, relu=relu)
+
+
+def pool_fn(mode: str, size: int, stride: int, nhwc: bool, relu: bool) -> Callable:
+    def run(x):
+        out = (pool_k.pool_nhwc if nhwc else pool_k.pool_nchw)(x, size, stride, mode)
+        return jnp.maximum(out, 0.0) if relu else out
+
+    return run
+
+
+def lrn_fn(size: int, alpha: float, beta: float, k: float, nhwc: bool) -> Callable:
+    fn = lrn_k.lrn_nhwc if nhwc else lrn_k.lrn_nchw
+    return lambda x: fn(x, size, alpha, beta, k)
+
+
+def network_forward(net: Network, method: str) -> Callable:
+    """Fused forward path: f(x_nchw, *params) -> logits (N, classes).
+
+    Params are (w, b) pairs in forward order with canonical NCHW weight
+    shapes — the same order/layout the .cdm model file stores.
+    """
+    nhwc = method in NHWC_METHODS
+    specs = dict(net.conv_specs())
+
+    def forward(x, *params):
+        p = list(params)
+        h = nchw_to_nhwc(x) if nhwc else x
+        for layer in net.layers:
+            if layer.kind == "conv":
+                w, b = p.pop(0), p.pop(0)
+                spec = specs[layer.name]
+                if nhwc:
+                    w = nchw_weights_to_nhwc(w)
+                h = conv_fn(method, spec)(h, w, b)
+            elif layer.kind == "pool":
+                h = pool_fn(layer.mode, layer.size, layer.stride, nhwc, layer.relu)(h)
+            elif layer.kind == "lrn":
+                h = lrn_fn(layer.size, layer.alpha, layer.beta, layer.k, nhwc)(h)
+            elif layer.kind == "fc":
+                w, b = p.pop(0), p.pop(0)
+                if h.ndim == 4:
+                    # Flatten in canonical C,H,W order regardless of the
+                    # method layout, so FC weights are layout-independent.
+                    if nhwc:
+                        h = nhwc_to_nchw(h)
+                    h = h.reshape(h.shape[0], -1)
+                h = fc_fn(layer.relu)(h, w, b)
+            else:
+                raise ValueError(f"unknown layer kind {layer.kind!r}")
+        assert not p, "unconsumed parameters"
+        return h
+
+    return forward
+
+
+def network_forward_ref(net: Network) -> Callable:
+    """Oracle forward path built ONLY from ref.py ops (no Pallas);
+    used by the trainer and by end-to-end numeric tests."""
+    specs = dict(net.conv_specs())
+
+    def forward(x, *params):
+        p = list(params)
+        h = x
+        for layer in net.layers:
+            if layer.kind == "conv":
+                w, b = p.pop(0), p.pop(0)
+                h = ref.conv_nchw(h, w, b, specs[layer.name])
+            elif layer.kind == "pool":
+                h = (ref.maxpool_nchw if layer.mode == "max" else ref.avgpool_nchw)(
+                    h, layer.size, layer.stride
+                )
+                if layer.relu:
+                    h = ref.relu(h)
+            elif layer.kind == "lrn":
+                h = ref.lrn_nchw(h, layer.size, layer.alpha, layer.beta, layer.k)
+            elif layer.kind == "fc":
+                w, b = p.pop(0), p.pop(0)
+                if h.ndim == 4:
+                    h = h.reshape(h.shape[0], -1)
+                h = ref.fc(h, w, b, layer.relu)
+        return h
+
+    return forward
+
+
+def init_params(net: Network, seed: int = 0) -> list[jax.Array]:
+    """He-initialized parameter list (w, b alternating, forward order)."""
+    key = jax.random.PRNGKey(seed)
+    params: list[jax.Array] = []
+    for _, w_shape, b_shape in net.param_shapes():
+        key, kw = jax.random.split(key)
+        fan_in = 1
+        for d in (w_shape[1:] if len(w_shape) == 4 else w_shape[:1]):
+            fan_in *= d
+        scale = jnp.sqrt(2.0 / fan_in)
+        params.append(jax.random.normal(kw, w_shape, jnp.float32) * scale)
+        params.append(jnp.zeros(b_shape, jnp.float32))
+    return params

@@ -1,0 +1,189 @@
+"""Single source of truth for the three benchmark networks (paper
+Table 2 / Fig. 8): LeNet-5, Caffe cifar10_quick, and AlexNet.
+
+The same descriptors are exported into artifacts/manifest.json so the
+Rust model zoo (rust/src/model/zoo.rs) builds byte-identical graphs; a
+round-trip test on the Rust side keeps the two in sync.
+
+Deviations from the paper's Table 2 (documented in DESIGN.md §9): we
+include AlexNet's pool5 (required for the 9216-wide fc6) and use a plain
+final FC; grouped convolution is flattened to group=1.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Union
+
+from .kernels.common import ConvSpec, pool_out
+
+
+@dataclasses.dataclass(frozen=True)
+class Conv:
+    name: str
+    nk: int
+    kh: int
+    kw: int
+    stride: int = 1
+    pad: int = 0
+    relu: bool = False
+    kind: str = "conv"
+
+
+@dataclasses.dataclass(frozen=True)
+class Pool:
+    name: str
+    mode: str  # "max" | "avg"
+    size: int
+    stride: int
+    relu: bool = False  # cifar10_quick applies ReLU after pool1
+    kind: str = "pool"
+
+
+@dataclasses.dataclass(frozen=True)
+class Lrn:
+    name: str
+    size: int = 5
+    alpha: float = 1e-4
+    beta: float = 0.75
+    k: float = 1.0
+    kind: str = "lrn"
+
+
+@dataclasses.dataclass(frozen=True)
+class Fc:
+    name: str
+    out: int
+    relu: bool = False
+    kind: str = "fc"
+
+
+Layer = Union[Conv, Pool, Lrn, Fc]
+
+
+@dataclasses.dataclass(frozen=True)
+class Network:
+    name: str
+    in_c: int
+    in_h: int
+    in_w: int
+    classes: int
+    layers: tuple
+
+    def conv_specs(self) -> list[tuple[str, ConvSpec]]:
+        """Propagate shapes and return the ConvSpec of every conv layer."""
+        out = []
+        c, h, w = self.in_c, self.in_h, self.in_w
+        for layer in self.layers:
+            if layer.kind == "conv":
+                spec = ConvSpec(
+                    in_c=c, in_h=h, in_w=w, nk=layer.nk, kh=layer.kh, kw=layer.kw,
+                    stride=layer.stride, pad=layer.pad, relu=layer.relu,
+                )
+                out.append((layer.name, spec))
+                c, h, w = layer.nk, spec.out_h, spec.out_w
+            elif layer.kind == "pool":
+                h = pool_out(h, layer.size, layer.stride)
+                w = pool_out(w, layer.size, layer.stride)
+            elif layer.kind == "fc":
+                c, h, w = layer.out, 1, 1
+        return out
+
+    def shapes(self) -> list[tuple[str, tuple[int, int, int]]]:
+        """(layer name, output (c,h,w)) for every layer, input first."""
+        res = [("input", (self.in_c, self.in_h, self.in_w))]
+        c, h, w = self.in_c, self.in_h, self.in_w
+        for layer in self.layers:
+            if layer.kind == "conv":
+                spec = ConvSpec(in_c=c, in_h=h, in_w=w, nk=layer.nk, kh=layer.kh,
+                                kw=layer.kw, stride=layer.stride, pad=layer.pad)
+                c, h, w = layer.nk, spec.out_h, spec.out_w
+            elif layer.kind == "pool":
+                h = pool_out(h, layer.size, layer.stride)
+                w = pool_out(w, layer.size, layer.stride)
+            elif layer.kind == "fc":
+                c, h, w = layer.out, 1, 1
+            res.append((layer.name, (c, h, w)))
+        return res
+
+    def param_shapes(self) -> list[tuple[str, tuple, tuple]]:
+        """(layer name, weight shape NCHW-canonical, bias shape) for every
+        parameterized layer, in forward order."""
+        res = []
+        c, h, w = self.in_c, self.in_h, self.in_w
+        for layer in self.layers:
+            if layer.kind == "conv":
+                spec = ConvSpec(in_c=c, in_h=h, in_w=w, nk=layer.nk, kh=layer.kh,
+                                kw=layer.kw, stride=layer.stride, pad=layer.pad)
+                res.append((layer.name, (layer.nk, c, layer.kh, layer.kw), (layer.nk,)))
+                c, h, w = layer.nk, spec.out_h, spec.out_w
+            elif layer.kind == "pool":
+                h = pool_out(h, layer.size, layer.stride)
+                w = pool_out(w, layer.size, layer.stride)
+            elif layer.kind == "fc":
+                res.append((layer.name, (c * h * w, layer.out), (layer.out,)))
+                c, h, w = layer.out, 1, 1
+        return res
+
+    def heaviest_conv(self) -> tuple[str, ConvSpec]:
+        """The conv layer with the most MACs — Table 4's subject."""
+        return max(self.conv_specs(), key=lambda kv: kv[1].flops)
+
+    def to_json(self) -> dict:
+        return {
+            "name": self.name,
+            "input": [self.in_c, self.in_h, self.in_w],
+            "classes": self.classes,
+            "layers": [dataclasses.asdict(l) for l in self.layers],
+        }
+
+
+LENET5 = Network(
+    name="lenet5", in_c=1, in_h=28, in_w=28, classes=10,
+    layers=(
+        Conv("conv1", nk=20, kh=5, kw=5),
+        Pool("pool1", "max", 2, 2),
+        Conv("conv2", nk=50, kh=5, kw=5),
+        Pool("pool2", "max", 2, 2),
+        Fc("fc1", 500, relu=True),
+        Fc("fc2", 10),
+    ),
+)
+
+CIFAR10 = Network(
+    name="cifar10", in_c=3, in_h=32, in_w=32, classes=10,
+    layers=(
+        Conv("conv1", nk=32, kh=5, kw=5, pad=2),
+        Pool("pool1", "max", 3, 2, relu=True),  # Table 2 row 2: Pooling+ReLU
+        Conv("conv2", nk=32, kh=5, kw=5, pad=2, relu=True),
+        Pool("pool2", "avg", 3, 2),
+        Conv("conv3", nk=64, kh=5, kw=5, pad=2, relu=True),
+        Pool("pool3", "avg", 3, 2),
+        Fc("fc1", 64),
+        Fc("fc2", 10),
+    ),
+)
+
+ALEXNET = Network(
+    name="alexnet", in_c=3, in_h=227, in_w=227, classes=1000,
+    layers=(
+        Conv("conv1", nk=96, kh=11, kw=11, stride=4, relu=True),
+        Pool("pool1", "max", 3, 2),
+        Lrn("norm1"),
+        Conv("conv2", nk=256, kh=5, kw=5, pad=2, relu=True),
+        Pool("pool2", "max", 3, 2),
+        Lrn("norm2"),
+        Conv("conv3", nk=384, kh=3, kw=3, pad=1, relu=True),
+        Conv("conv4", nk=384, kh=3, kw=3, pad=1, relu=True),
+        Conv("conv5", nk=256, kh=3, kw=3, pad=1, relu=True),
+        Pool("pool5", "max", 3, 2),
+        Fc("fc6", 4096, relu=True),
+        Fc("fc7", 4096, relu=True),
+        Fc("fc8", 1000),
+    ),
+)
+
+NETWORKS = {n.name: n for n in (LENET5, CIFAR10, ALEXNET)}
+
+# The paper's acceleration methods plus our TPU-native extension.
+METHODS = ("basic-parallel", "basic-simd", "advanced-simd-4", "advanced-simd-8", "mxu")

@@ -1,0 +1,86 @@
+"""Off-device training stage of the paper's deployment flow (Fig. 2):
+"First, the model is trained on a desktop or server system."
+
+The paper trains with Caffe on real datasets; we train LeNet-5 with a
+small JAX SGD loop on the procedural digit corpus (DESIGN.md §2
+substitution).  The trained weights flow through the converter into the
+.cdm model file the Rust engine serves — so the end-to-end example
+exercises the full train -> convert -> deploy -> serve path with a model
+that actually classifies its inputs.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import digits
+from .model import init_params, network_forward_ref
+from .networks import LENET5
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def train_lenet5(
+    steps: int = 300,
+    batch: int = 64,
+    lr: float = 0.01,
+    momentum: float = 0.9,
+    clip: float = 5.0,
+    seed: int = 42,
+    train_n: int = 4096,
+    test_n: int = 512,
+    log_every: int = 50,
+    verbose: bool = True,
+):
+    """Returns (params, train_log, test_accuracy)."""
+    net = LENET5
+    fwd = network_forward_ref(net)
+    params = init_params(net, seed=seed)
+
+    x_train, y_train = digits.make_dataset(train_n, seed=seed)
+    x_test, y_test = digits.make_dataset(test_n, seed=seed + 1)
+
+    def loss_fn(params, x, y):
+        return cross_entropy(fwd(x, *params), y)
+
+    @jax.jit
+    def step_fn(params, vel, x, y):
+        loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+        gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in grads))
+        scale = jnp.minimum(1.0, clip / (gnorm + 1e-8))
+        grads = [g * scale for g in grads]
+        vel = [momentum * v - lr * g for v, g in zip(vel, grads)]
+        params = [p + v for p, v in zip(params, vel)]
+        return params, vel, loss
+
+    @jax.jit
+    def acc_fn(params, x, y):
+        return jnp.mean(jnp.argmax(fwd(x, *params), axis=1) == y)
+
+    vel = [jnp.zeros_like(p) for p in params]
+    rng = np.random.default_rng(seed)
+    log = []
+    t0 = time.time()
+    for step in range(steps):
+        idx = rng.integers(0, train_n, batch)
+        params, vel, loss = step_fn(params, vel, x_train[idx], y_train[idx])
+        if step % log_every == 0 or step == steps - 1:
+            acc = float(acc_fn(params, x_test, y_test))
+            log.append({"step": step, "loss": float(loss), "test_acc": acc})
+            if verbose:
+                print(f"  step {step:4d}  loss {float(loss):.4f}  test_acc {acc:.3f}")
+    test_acc = float(acc_fn(params, x_test, y_test))
+    if verbose:
+        print(f"  trained lenet5 in {time.time()-t0:.1f}s, test_acc={test_acc:.3f}")
+    return params, log, test_acc
+
+
+if __name__ == "__main__":
+    train_lenet5()

@@ -1,0 +1,10 @@
+"""Pytest wiring: make `compile` importable whether pytest is launched
+from python/ (the Makefile path) or the repo root."""
+
+import os
+import sys
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_PY_ROOT = os.path.dirname(_HERE)
+if _PY_ROOT not in sys.path:
+    sys.path.insert(0, _PY_ROOT)

@@ -1,0 +1,139 @@
+"""Every convolution method vs the pure-jnp oracle, on every real conv
+layer shape of the three benchmark networks plus synthetic edge cases.
+
+This is the core L1 correctness signal: if these pass, every HLO conv
+artifact the AOT compiler emits computes the paper's convolution.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import conv_advanced, conv_direct, conv_mxu, conv_simd, ref
+from compile.kernels.common import (
+    ConvSpec,
+    nchw_to_nhwc,
+    nchw_weights_to_nhwc,
+    nhwc_to_nchw,
+    register_block,
+)
+
+# Real conv layers of the paper's three benchmark networks (Table 2 /
+# Fig. 8), spatially shrunk where marked to keep the suite fast — the
+# channel/kernel/stride/pad structure (what the methods differ on) is
+# preserved exactly.
+LAYER_SPECS = [
+    # LeNet-5 (exact)
+    ConvSpec(in_c=1, in_h=28, in_w=28, nk=20, kh=5, kw=5, stride=1, pad=0),
+    ConvSpec(in_c=20, in_h=12, in_w=12, nk=50, kh=5, kw=5, stride=1, pad=0),
+    # CIFAR-10 quick (exact)
+    ConvSpec(in_c=3, in_h=32, in_w=32, nk=32, kh=5, kw=5, stride=1, pad=2, relu=False),
+    ConvSpec(in_c=32, in_h=16, in_w=16, nk=32, kh=5, kw=5, stride=1, pad=2, relu=True),
+    ConvSpec(in_c=32, in_h=8, in_w=8, nk=64, kh=5, kw=5, stride=1, pad=2, relu=True),
+    # AlexNet (spatially shrunk 227->59, 27->15, 13->7; channels exact)
+    ConvSpec(in_c=3, in_h=59, in_w=59, nk=96, kh=11, kw=11, stride=4, pad=0, relu=True),
+    ConvSpec(in_c=96, in_h=15, in_w=15, nk=256, kh=5, kw=5, stride=1, pad=2, relu=True),
+    ConvSpec(in_c=256, in_h=7, in_w=7, nk=384, kh=3, kw=3, stride=1, pad=1, relu=True),
+    ConvSpec(in_c=384, in_h=7, in_w=7, nk=384, kh=3, kw=3, stride=1, pad=1, relu=True),
+    ConvSpec(in_c=384, in_h=7, in_w=7, nk=256, kh=3, kw=3, stride=1, pad=1, relu=True),
+    # Edge cases: 1x1 kernel, non-square input, stride>kernel, pad>1
+    ConvSpec(in_c=4, in_h=7, in_w=9, nk=8, kh=1, kw=1, stride=1, pad=0),
+    ConvSpec(in_c=4, in_h=11, in_w=5, nk=6, kh=3, kw=3, stride=3, pad=0, relu=True),
+    ConvSpec(in_c=2, in_h=6, in_w=6, nk=12, kh=3, kw=3, stride=1, pad=2),
+]
+
+
+def _data(spec: ConvSpec, n: int = 2, seed: int = 0):
+    rng = np.random.default_rng(seed + hash(spec.signature()) % 10_000)
+    x = rng.standard_normal((n, spec.in_c, spec.in_h, spec.in_w), dtype=np.float32)
+    w = rng.standard_normal((spec.nk, spec.in_c, spec.kh, spec.kw), dtype=np.float32)
+    # Scale down so f32 accumulation-order differences stay tiny.
+    w *= 1.0 / np.sqrt(spec.in_c * spec.kh * spec.kw)
+    b = rng.standard_normal((spec.nk,), dtype=np.float32)
+    return x, w, b
+
+
+def _check(got, want):
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("spec", LAYER_SPECS, ids=lambda s: s.signature())
+def test_conv_direct_matches_ref(spec):
+    x, w, b = _data(spec)
+    _check(conv_direct.conv(x, w, b, spec), ref.conv_nchw(x, w, b, spec))
+
+
+@pytest.mark.parametrize("spec", LAYER_SPECS, ids=lambda s: s.signature())
+def test_conv_simd_matches_ref(spec):
+    x, w, b = _data(spec)
+    xh = nchw_to_nhwc(jnp.asarray(x))
+    wh = nchw_weights_to_nhwc(jnp.asarray(w))
+    got = nhwc_to_nchw(conv_simd.conv(xh, wh, b, spec))
+    _check(got, ref.conv_nchw(x, w, b, spec))
+
+
+@pytest.mark.parametrize("rb", [4, 8])
+@pytest.mark.parametrize("spec", LAYER_SPECS, ids=lambda s: s.signature())
+def test_conv_advanced_matches_ref(spec, rb):
+    x, w, b = _data(spec)
+    xh = nchw_to_nhwc(jnp.asarray(x))
+    wh = nchw_weights_to_nhwc(jnp.asarray(w))
+    got = nhwc_to_nchw(conv_advanced.conv(xh, wh, b, spec, rb=rb))
+    _check(got, ref.conv_nchw(x, w, b, spec))
+
+
+@pytest.mark.parametrize("spec", LAYER_SPECS, ids=lambda s: s.signature())
+def test_conv_mxu_matches_ref(spec):
+    x, w, b = _data(spec)
+    xh = nchw_to_nhwc(jnp.asarray(x))
+    wh = nchw_weights_to_nhwc(jnp.asarray(w))
+    got = nhwc_to_nchw(conv_mxu.conv(xh, wh, b, spec))
+    _check(got, ref.conv_nchw(x, w, b, spec))
+
+
+def test_methods_agree_pairwise():
+    """All four accelerated methods must agree with each other, not just
+    with the oracle (catches compensating tolerance slop)."""
+    spec = ConvSpec(in_c=8, in_h=10, in_w=10, nk=16, kh=3, kw=3, stride=1, pad=1)
+    x, w, b = _data(spec)
+    xh = nchw_to_nhwc(jnp.asarray(x))
+    wh = nchw_weights_to_nhwc(jnp.asarray(w))
+    outs = [
+        np.asarray(conv_direct.conv(x, w, b, spec)),
+        np.asarray(nhwc_to_nchw(conv_simd.conv(xh, wh, b, spec))),
+        np.asarray(nhwc_to_nchw(conv_advanced.conv(xh, wh, b, spec, rb=4))),
+        np.asarray(nhwc_to_nchw(conv_advanced.conv(xh, wh, b, spec, rb=8))),
+        np.asarray(nhwc_to_nchw(conv_mxu.conv(xh, wh, b, spec))),
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=1e-4, atol=1e-4)
+
+
+def test_relu_fusion_clamps_negatives():
+    spec = ConvSpec(in_c=2, in_h=6, in_w=6, nk=4, kh=3, kw=3, stride=1, pad=0, relu=True)
+    x, w, b = _data(spec)
+    b = b - 100.0  # force all outputs negative pre-ReLU
+    out = np.asarray(conv_direct.conv(x, w, b, spec))
+    assert np.all(out == 0.0)
+
+
+def test_register_block_degrades_for_lenet_conv2():
+    # Paper §4.3: "the number of kernels is usually divisible by 4 and 8";
+    # LeNet conv2 (nk=50) is the documented exception.
+    assert register_block(50, 8) == 2
+    assert register_block(50, 4) == 2
+    assert register_block(96, 8) == 8
+    assert register_block(20, 8) == 4
+    assert register_block(7, 8) == 1
+
+
+def test_batch_of_16_matches_batch_of_1():
+    """The paper's batch-16 workload must equal 16 independent frames."""
+    spec = ConvSpec(in_c=3, in_h=8, in_w=8, nk=8, kh=3, kw=3, stride=1, pad=1)
+    x, w, b = _data(spec, n=16)
+    xh = nchw_to_nhwc(jnp.asarray(x))
+    wh = nchw_weights_to_nhwc(jnp.asarray(w))
+    full = np.asarray(conv_advanced.conv(xh, wh, b, spec, rb=4))
+    for i in range(0, 16, 5):
+        one = np.asarray(conv_advanced.conv(xh[i : i + 1], wh, b, spec, rb=4))
+        np.testing.assert_allclose(full[i : i + 1], one, rtol=1e-5, atol=1e-5)

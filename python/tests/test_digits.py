@@ -1,0 +1,81 @@
+"""Tests for the procedural digit corpus (the MNIST substitute) and the
+cross-language fixtures that pin the Rust renderer to this one."""
+
+import numpy as np
+import pytest
+
+from compile import digits
+
+
+def test_render_shapes_and_range():
+    for label in range(10):
+        img = digits.render_digit(label)
+        assert img.shape == (28, 28)
+        assert img.dtype == np.float32
+        assert img.min() >= 0.0 and img.max() <= 1.0
+        assert img.max() > 0.9, f"digit {label} too faint"
+
+
+def test_render_is_deterministic():
+    a = digits.render_digit(7, dx=0.3, dy=-0.7, scale=0.9)
+    b = digits.render_digit(7, dx=0.3, dy=-0.7, scale=0.9)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_digits_pairwise_distinct():
+    imgs = [digits.render_digit(d) for d in range(10)]
+    for a in range(10):
+        for b in range(a + 1, 10):
+            diff = np.abs(imgs[a] - imgs[b]).max()
+            assert diff > 0.5, f"digits {a} and {b} nearly identical"
+
+
+def test_jitter_moves_mass():
+    base = digits.render_digit(3)
+    shifted = digits.render_digit(3, dx=2.0, dy=2.0)
+    assert np.abs(base - shifted).max() > 0.1
+
+
+def test_scale_shrinks_support():
+    big = digits.render_digit(8, scale=1.05)
+    small = digits.render_digit(8, scale=0.75)
+    # Smaller digit lights up fewer pixels above a threshold.
+    assert (small > 0.5).sum() < (big > 0.5).sum()
+
+
+def test_dataset_shapes_seeding_and_balance():
+    images, labels = digits.make_dataset(200, seed=3)
+    assert images.shape == (200, 1, 28, 28)
+    assert labels.shape == (200,)
+    images2, labels2 = digits.make_dataset(200, seed=3)
+    np.testing.assert_array_equal(images, images2)
+    np.testing.assert_array_equal(labels, labels2)
+    # Different seed differs.
+    _, labels3 = digits.make_dataset(200, seed=4)
+    assert not np.array_equal(labels, labels3)
+    # Loose class balance.
+    counts = np.bincount(labels, minlength=10)
+    assert counts.min() >= 5 and counts.max() <= 45
+
+
+def test_noise_is_clipped():
+    images, _ = digits.make_dataset(16, seed=1, noise_std=0.5)
+    assert images.min() >= 0.0 and images.max() <= 1.0
+
+
+@pytest.mark.parametrize("label", [0, 1, 4, 7, 8])
+def test_fixture_cases_match_current_renderer(label):
+    """The exact parameter tuples exported to Rust fixtures must stay
+    reproducible (changing the renderer without re-running `make
+    artifacts` would silently break the cross-language pin)."""
+    cases = {
+        0: (0.0, 0.0, 1.0),
+        1: (1.5, -0.5, 0.9),
+        4: (-2.0, 2.0, 0.8),
+        7: (0.25, -1.75, 1.05),
+        8: (0.0, 0.0, 0.75),
+    }
+    dx, dy, scale = cases[label]
+    img = digits.render_digit(label, dx=dx, dy=dy, scale=scale)
+    assert img.shape == (28, 28)
+    assert img.max() > 0.85

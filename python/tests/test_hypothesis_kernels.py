@@ -1,0 +1,139 @@
+"""Hypothesis sweeps over the Pallas kernels' shape/stride/pad space.
+
+Strategy-generated ConvSpecs exercise combinations no hand-written table
+would (prime channel counts, stride > kernel, degenerate 1x1 outputs);
+every draw is asserted allclose against the pure-jnp oracle.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv_advanced, conv_direct, conv_mxu, conv_simd, fc, lrn, pool, ref
+from compile.kernels.common import (
+    ConvSpec,
+    nchw_to_nhwc,
+    nchw_weights_to_nhwc,
+    nhwc_to_nchw,
+)
+
+# Modest sizes keep interpret-mode runtime bounded; structure, not scale,
+# is what hypothesis is probing here.
+conv_specs = st.builds(
+    ConvSpec,
+    in_c=st.integers(1, 9),
+    in_h=st.integers(4, 14),
+    in_w=st.integers(4, 14),
+    nk=st.integers(1, 12),
+    kh=st.integers(1, 4),
+    kw=st.integers(1, 4),
+    stride=st.integers(1, 3),
+    pad=st.integers(0, 2),
+    relu=st.booleans(),
+).filter(lambda s: s.out_h >= 1 and s.out_w >= 1)
+
+
+def _data(spec, seed, n=1):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, spec.in_c, spec.in_h, spec.in_w), dtype=np.float32)
+    w = rng.standard_normal((spec.nk, spec.in_c, spec.kh, spec.kw), dtype=np.float32)
+    w *= 1.0 / np.sqrt(spec.in_c * spec.kh * spec.kw)
+    b = rng.standard_normal((spec.nk,), dtype=np.float32)
+    return x, w, b
+
+
+def _nhwc(x, w):
+    return nchw_to_nhwc(jnp.asarray(x)), nchw_weights_to_nhwc(jnp.asarray(w))
+
+
+def _check(got, want):
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-4, atol=3e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(spec=conv_specs, seed=st.integers(0, 2**31 - 1))
+def test_conv_direct_hypothesis(spec, seed):
+    x, w, b = _data(spec, seed)
+    _check(conv_direct.conv(x, w, b, spec), ref.conv_nchw(x, w, b, spec))
+
+
+@settings(max_examples=25, deadline=None)
+@given(spec=conv_specs, seed=st.integers(0, 2**31 - 1))
+def test_conv_simd_hypothesis(spec, seed):
+    x, w, b = _data(spec, seed)
+    xh, wh = _nhwc(x, w)
+    _check(nhwc_to_nchw(conv_simd.conv(xh, wh, b, spec)), ref.conv_nchw(x, w, b, spec))
+
+
+@settings(max_examples=25, deadline=None)
+@given(spec=conv_specs, seed=st.integers(0, 2**31 - 1), rb=st.sampled_from([4, 8]))
+def test_conv_advanced_hypothesis(spec, seed, rb):
+    x, w, b = _data(spec, seed)
+    xh, wh = _nhwc(x, w)
+    _check(
+        nhwc_to_nchw(conv_advanced.conv(xh, wh, b, spec, rb=rb)),
+        ref.conv_nchw(x, w, b, spec),
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(spec=conv_specs, seed=st.integers(0, 2**31 - 1))
+def test_conv_mxu_hypothesis(spec, seed):
+    x, w, b = _data(spec, seed)
+    xh, wh = _nhwc(x, w)
+    _check(nhwc_to_nchw(conv_mxu.conv(xh, wh, b, spec)), ref.conv_nchw(x, w, b, spec))
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(1, 5),
+    d_in=st.integers(1, 64),
+    d_out=st.integers(1, 48),
+    relu=st.booleans(),
+    block_in=st.sampled_from([8, 16, 1024]),
+    block_out=st.sampled_from([4, 512]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fc_hypothesis(n, d_in, d_out, relu, block_in, block_out, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, d_in), dtype=np.float32)
+    w = rng.standard_normal((d_in, d_out), dtype=np.float32) / np.sqrt(d_in)
+    b = rng.standard_normal((d_out,), dtype=np.float32)
+    got = fc.fc(x, w, b, relu=relu, block_in=block_in, block_out=block_out)
+    _check(got, ref.fc(x, w, b, relu))
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(1, 3),
+    c=st.integers(1, 8),
+    h=st.integers(3, 14),
+    w=st.integers(3, 14),
+    size=st.integers(2, 3),
+    stride=st.integers(1, 3),
+    mode=st.sampled_from(["max", "avg"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pool_hypothesis(n, c, h, w, size, stride, mode, seed):
+    if h < size or w < size:
+        return
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, c, h, w), dtype=np.float32)
+    got = nhwc_to_nchw(pool.pool_nhwc(nchw_to_nhwc(jnp.asarray(x)), size, stride, mode))
+    want = (ref.maxpool_nchw if mode == "max" else ref.avgpool_nchw)(x, size, stride)
+    _check(got, want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 2),
+    c=st.integers(1, 12),
+    hw=st.integers(2, 10),
+    size=st.sampled_from([3, 5]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lrn_hypothesis(n, c, hw, size, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, c, hw, hw), dtype=np.float32)
+    got = nhwc_to_nchw(lrn.lrn_nhwc(nchw_to_nhwc(jnp.asarray(x)), size, 1e-4, 0.75, 1.0))
+    _check(got, ref.lrn_nchw(x, size, 1e-4, 0.75, 1.0))

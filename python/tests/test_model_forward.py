@@ -1,0 +1,70 @@
+"""Whole-network L2 graphs: every method's fused forward path must
+agree with the pure-ref forward (which the trainer used), and the
+trained LeNet-5 must actually classify the corpus."""
+
+import numpy as np
+import pytest
+
+from compile import digits, model
+from compile.networks import CIFAR10, LENET5, METHODS
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_lenet_fused_matches_ref(method):
+    net = LENET5
+    params = model.init_params(net, seed=0)
+    x = np.random.default_rng(0).standard_normal((2, 1, 28, 28)).astype(np.float32)
+    want = model.network_forward_ref(net)(x, *params)
+    got = model.network_forward(net, method)(x, *params)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("method", ["basic-parallel", "advanced-simd-8", "mxu"])
+def test_cifar_fused_matches_ref(method):
+    net = CIFAR10
+    params = model.init_params(net, seed=1)
+    x = np.random.default_rng(1).standard_normal((2, 3, 32, 32)).astype(np.float32)
+    want = model.network_forward_ref(net)(x, *params)
+    got = model.network_forward(net, method)(x, *params)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3, atol=2e-3)
+
+
+def test_init_params_shapes_and_scale():
+    params = model.init_params(LENET5, seed=7)
+    shapes = [tuple(p.shape) for p in params]
+    assert shapes == [
+        (20, 1, 5, 5), (20,),
+        (50, 20, 5, 5), (50,),
+        (800, 500), (500,),
+        (500, 10), (10,),
+    ]
+    # He init: nonzero weights, zero biases.
+    assert float(np.abs(params[0]).max()) > 0
+    assert float(np.abs(params[1]).max()) == 0.0
+
+
+def test_trained_weights_classify_digits():
+    """Load the blob `make artifacts` wrote and check accuracy through
+    the pure-ref forward (independent of the Rust engine)."""
+    import os
+
+    blob = os.path.join(os.path.dirname(__file__), "../../artifacts/weights/lenet5.bin")
+    if not os.path.exists(blob):
+        pytest.skip("artifacts not built")
+    raw = np.fromfile(blob, dtype="<f4")
+    params = []
+    off = 0
+    for _, w_shape, b_shape in LENET5.param_shapes():
+        wn = int(np.prod(w_shape))
+        bn = int(np.prod(b_shape))
+        params.append(raw[off : off + wn].reshape(w_shape))
+        off += wn
+        params.append(raw[off : off + bn].reshape(b_shape))
+        off += bn
+    assert off == raw.size
+
+    images, labels = digits.make_dataset(64, seed=123)
+    logits = model.network_forward_ref(LENET5)(images, *params)
+    preds = np.argmax(np.asarray(logits), axis=1)
+    acc = float((preds == labels).mean())
+    assert acc >= 0.95, f"trained model accuracy {acc}"

@@ -1,0 +1,105 @@
+"""Tests for the network descriptors (paper Table 2) and their shape
+propagation — the single source of truth the Rust zoo mirrors."""
+
+import json
+import os
+
+import pytest
+
+from compile.kernels.common import pool_out
+from compile.networks import ALEXNET, CIFAR10, LENET5, METHODS, NETWORKS
+
+
+def shapes_dict(net):
+    return {name: chw for name, chw in net.shapes()}
+
+
+def test_lenet_shapes_match_paper():
+    s = shapes_dict(LENET5)
+    assert s["conv1"] == (20, 24, 24)
+    assert s["pool1"] == (20, 12, 12)
+    assert s["conv2"] == (50, 8, 8)
+    assert s["pool2"] == (50, 4, 4)
+    assert s["fc1"] == (500, 1, 1)
+    assert s["fc2"] == (10, 1, 1)
+
+
+def test_cifar_shapes_caffe_quick():
+    s = shapes_dict(CIFAR10)
+    assert s["conv1"] == (32, 32, 32)  # pad 2 keeps spatial
+    assert s["pool1"] == (32, 16, 16)  # ceil mode
+    assert s["pool2"] == (32, 8, 8)
+    assert s["conv3"] == (64, 8, 8)
+    assert s["pool3"] == (64, 4, 4)
+    assert s["fc2"] == (10, 1, 1)
+
+
+def test_alexnet_shapes_fig8():
+    s = shapes_dict(ALEXNET)
+    assert s["conv1"] == (96, 55, 55)
+    assert s["pool1"] == (96, 27, 27)
+    assert s["conv2"] == (256, 27, 27)
+    assert s["pool2"] == (256, 13, 13)
+    assert s["conv3"] == (384, 13, 13)
+    assert s["conv5"] == (256, 13, 13)
+    assert s["pool5"] == (256, 6, 6)  # 9216 = 256*6*6 into fc6
+    assert s["fc6"] == (4096, 1, 1)
+    assert s["fc8"] == (1000, 1, 1)
+
+
+def test_param_shapes_alexnet():
+    params = {n: (w, b) for n, w, b in ALEXNET.param_shapes()}
+    assert params["conv1"][0] == (96, 3, 11, 11)
+    assert params["fc6"][0] == (9216, 4096)
+    assert params["fc8"][0] == (4096, 1000)
+    # Total parameter count of standard single-tower AlexNet (group=1).
+    total = sum(
+        int(__import__("numpy").prod(w)) + int(__import__("numpy").prod(b))
+        for w, b in params.values()
+    )
+    assert 60_000_000 < total < 63_000_000
+
+
+def test_heaviest_conv_is_conv2_everywhere():
+    for net in NETWORKS.values():
+        assert net.heaviest_conv()[0] == "conv2", net.name
+
+
+def test_pool_out_clip():
+    assert pool_out(32, 3, 2) == 16
+    assert pool_out(55, 3, 2) == 27
+    assert pool_out(24, 2, 2) == 12
+    # Caffe's in-bounds clip for stride > size.
+    assert pool_out(9, 2, 3) == 3
+
+
+def test_methods_list_covers_paper():
+    for m in ("basic-parallel", "basic-simd", "advanced-simd-4", "advanced-simd-8"):
+        assert m in METHODS
+
+
+def test_to_json_roundtrips_through_manifest_schema():
+    for net in NETWORKS.values():
+        j = json.loads(json.dumps(net.to_json()))
+        assert j["name"] == net.name
+        assert tuple(j["input"]) == (net.in_c, net.in_h, net.in_w)
+        assert len(j["layers"]) == len(net.layers)
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")),
+    reason="artifacts not built",
+)
+def test_manifest_agrees_with_descriptors():
+    path = os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")
+    with open(path) as f:
+        manifest = json.load(f)
+    for net in NETWORKS.values():
+        assert manifest["networks"][net.name] == json.loads(json.dumps(net.to_json()))
+        assert manifest["heaviest_conv"][net.name] == net.heaviest_conv()[0]
+    # Every conv (shape x method) artifact the networks need exists.
+    names = {a["name"] for a in manifest["artifacts"]}
+    for net in NETWORKS.values():
+        for _, spec in net.conv_specs():
+            for m in METHODS:
+                assert f"conv_{spec.signature()}_b1_{m}" in names

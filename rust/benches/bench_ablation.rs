@@ -1,0 +1,106 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//! batch-size amortization of dispatch overhead, the dynamic batcher's
+//! window, device-resident weights vs per-call upload, and fused vs
+//! layerwise execution.
+//!
+//! ```bash
+//! cargo bench --bench bench_ablation [-- --quick]
+//! ```
+
+use cnndroid::coordinator::{Engine, EngineConfig};
+use cnndroid::data::synth;
+use cnndroid::model::manifest::{default_dir, Manifest};
+use cnndroid::runtime::{Arg, Runtime};
+use cnndroid::util::bench::Bench;
+
+fn main() {
+    let dir = default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts not built — run `make artifacts` first");
+        return;
+    }
+    let mut b = Bench::new("ablations");
+
+    // --- batch-size sweep: dispatch amortization (frames serial, so
+    //     the conv work scales linearly; fixed costs amortize) ---
+    let eng = Engine::from_artifacts(
+        &dir,
+        "lenet5",
+        EngineConfig { method: "advanced-simd-4".into(), record_trace: false, preload: true },
+    )
+    .unwrap();
+    for batch in [1usize, 4, 16] {
+        let (frames, _) = synth::make_dataset(batch, batch as u64, 0.05);
+        b.case_with_items(&format!("batch-sweep/lenet5 adv4 b{batch}"), Some(batch as f64), || {
+            eng.infer_batch(&frames).expect("infer");
+        });
+    }
+
+    // --- fused vs layerwise (L2 ablation: let XLA fuse the graph) ---
+    let eng16 = Engine::from_artifacts(
+        &dir,
+        "lenet5",
+        EngineConfig { method: "basic-simd".into(), record_trace: false, preload: true },
+    )
+    .unwrap();
+    let (frames16, _) = synth::make_dataset(16, 3, 0.05);
+    b.case_with_items("fused/layerwise basic-simd b16", Some(16.0), || {
+        eng16.infer_batch(&frames16).expect("infer");
+    });
+    b.case_with_items("fused/whole-graph basic-simd b16", Some(16.0), || {
+        eng16.infer_batch_fused(&frames16).expect("infer");
+    });
+
+    // --- device-resident weights vs per-call upload (L3 §Perf) ---
+    let rt = Runtime::new(Manifest::load(&dir).unwrap()).unwrap();
+    let meta = rt.manifest().find_fc(9216, 4096, true, 1).expect("fc6 artifact").clone();
+    let exe = rt.load(&meta.name).unwrap();
+    let x = cnndroid::tensor::Tensor::zeros(vec![1, 9216]);
+    let w = cnndroid::tensor::Tensor::zeros(vec![9216, 4096]);
+    let bias = cnndroid::tensor::Tensor::zeros(vec![4096]);
+    b.case("weights/fc6 per-call host upload (151 MB)", || {
+        exe.run(&[&x, &w, &bias]).expect("run");
+    });
+    let w_dev = rt.to_device(&w).unwrap();
+    let b_dev = rt.to_device(&bias).unwrap();
+    b.case("weights/fc6 device-resident", || {
+        exe.run_args(&[Arg::Host(&x), Arg::Dev(&w_dev), Arg::Dev(&b_dev)])
+            .expect("run");
+    });
+
+    // --- fair-CPU-baseline ablation: what if the CPU used all big
+    //     cores for conv (the paper multithreads only pool/LRN)? ---
+    {
+        let net = cnndroid::model::zoo::cifar10();
+        let (_, spec) = net.heaviest_conv();
+        let x = synth::random_frames(1, spec.in_c, spec.in_h, spec.in_w, 21);
+        let mut rng = cnndroid::util::rng::Pcg::seeded(22);
+        let w = cnndroid::tensor::Tensor::new(
+            vec![spec.nk, spec.in_c, spec.kh, spec.kw],
+            rng.normal_vec(spec.nk * spec.in_c * spec.kh * spec.kw, 0.1),
+        );
+        let bias = cnndroid::tensor::Tensor::zeros(vec![spec.nk]);
+        b.case("cpu-conv/cifar conv2 sequential", || {
+            cnndroid::cpu::seq::conv_nchw(&x, &w, &bias, &spec);
+        });
+        b.case("cpu-conv/cifar conv2 multithreaded", || {
+            cnndroid::cpu::par::conv_nchw(&x, &w, &bias, &spec);
+        });
+    }
+
+    // --- batching window: latency cost of max_wait on an idle system
+    //     (measured directly on the batcher, no TCP) ---
+    for wait_ms in [0u64, 2, 8] {
+        let batcher = cnndroid::coordinator::Batcher::new(cnndroid::coordinator::BatcherConfig {
+            max_batch: 16,
+            max_wait: std::time::Duration::from_millis(wait_ms),
+        });
+        b.case(&format!("batcher/idle single req, max_wait={wait_ms}ms"), || {
+            batcher.push(1u32);
+            let got = batcher.next_batch().unwrap();
+            assert_eq!(got.len(), 1);
+        });
+    }
+
+    b.speedup_table("batch-sweep/lenet5 adv4 b1");
+}

@@ -1,0 +1,137 @@
+//! Serving-stack bench: end-to-end TCP round-trip latency and
+//! closed-loop throughput, the dynamic batcher's effect under
+//! concurrency, and engine-thread overhead vs direct engine calls.
+//!
+//! ```bash
+//! cargo bench --bench bench_coordinator
+//! ```
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use cnndroid::coordinator::server::Client;
+use cnndroid::coordinator::{serve, BatcherConfig, Engine, EngineConfig, ServerConfig};
+use cnndroid::data::synth;
+use cnndroid::model::manifest::default_dir;
+use cnndroid::util::bench::Bench;
+
+fn main() {
+    let dir = default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts not built — run `make artifacts` first");
+        return;
+    }
+    let mut b = Bench::new("serving stack");
+
+    // Direct engine call: the floor the server should approach.
+    let eng = Engine::from_artifacts(
+        &dir,
+        "lenet5",
+        EngineConfig { method: "advanced-simd-4".into(), record_trace: false, preload: true },
+    )
+    .unwrap();
+    let (one, _) = synth::make_dataset(1, 1, 0.05);
+    b.case_with_items("engine/direct single frame", Some(1.0), || {
+        eng.infer_batch(&one).expect("infer");
+    });
+    let (sixteen, _) = synth::make_dataset(16, 2, 0.05);
+    b.case_with_items("engine/direct batch 16", Some(16.0), || {
+        eng.infer_batch(&sixteen).expect("infer");
+    });
+
+    // Server round trip, single client (per-request latency).
+    let handle = serve(ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        models: vec![("lenet5".into(), "advanced-simd-4".into(), 1)],
+        batcher: BatcherConfig { max_batch: 16, max_wait: Duration::from_millis(2) },
+        artifacts_dir: dir.clone(),
+    })
+    .unwrap();
+    let addr = handle.addr;
+    let mut client = Client::connect(addr).unwrap();
+    client.classify("lenet5", &one.frame(0), 0).unwrap(); // warm/compile
+    b.case_with_items("server/tcp single client round-trip", Some(1.0), || {
+        let r = client.classify("lenet5", &one.frame(0), 1).expect("req");
+        assert!(r.get("error").is_null());
+    });
+
+    // Closed-loop throughput with a client fleet (batching engaged).
+    for clients in [2usize, 8] {
+        let name = format!("server/closed-loop {clients} clients x 32 reqs");
+        b.case_with_items(&name, Some((clients * 32) as f64), || {
+            let counter = Arc::new(AtomicUsize::new(0));
+            let mut threads = Vec::new();
+            for _ in 0..clients {
+                let counter = Arc::clone(&counter);
+                threads.push(std::thread::spawn(move || {
+                    let (img, _) = synth::make_dataset(1, 5, 0.05);
+                    let mut c = Client::connect(addr).expect("connect");
+                    loop {
+                        let i = counter.fetch_add(1, Ordering::Relaxed);
+                        if i >= clients * 32 {
+                            break;
+                        }
+                        let r = c.classify("lenet5", &img, i as u64).expect("req");
+                        assert!(r.get("error").is_null());
+                    }
+                }));
+            }
+            for t in threads {
+                t.join().unwrap();
+            }
+        });
+    }
+
+    // Batching ablation: same fleet against a max_batch=1 server.
+    let handle_nb = serve(ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        models: vec![("lenet5".into(), "advanced-simd-4".into(), 1)],
+        batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_micros(1) },
+        artifacts_dir: dir.clone(),
+    })
+    .unwrap();
+    let addr_nb = handle_nb.addr;
+    {
+        let (img, _) = synth::make_dataset(1, 6, 0.05);
+        let mut c = Client::connect(addr_nb).unwrap();
+        c.classify("lenet5", &img, 0).unwrap(); // warm
+    }
+    b.case_with_items("server/no-batching 8 clients x 32 reqs", Some(256.0), || {
+        let counter = Arc::new(AtomicUsize::new(0));
+        let mut threads = Vec::new();
+        for _ in 0..8 {
+            let counter = Arc::clone(&counter);
+            threads.push(std::thread::spawn(move || {
+                let (img, _) = synth::make_dataset(1, 7, 0.05);
+                let mut c = Client::connect(addr_nb).expect("connect");
+                loop {
+                    let i = counter.fetch_add(1, Ordering::Relaxed);
+                    if i >= 256 {
+                        break;
+                    }
+                    let r = c.classify("lenet5", &img, i as u64).expect("req");
+                    assert!(r.get("error").is_null());
+                }
+            }));
+        }
+        for t in threads {
+            t.join().unwrap();
+        }
+    });
+
+    // Latency under the batching window: time-to-first-byte cost of
+    // max_wait when the system is idle.
+    let t0 = Instant::now();
+    let mut c2 = Client::connect(addr).unwrap();
+    let r = c2.classify("lenet5", &one.frame(0), 9).unwrap();
+    let idle_latency = t0.elapsed();
+    println!(
+        "\nidle-request latency (connect+req+resp): {:.2} ms (server reports {:.2} ms engine latency)",
+        idle_latency.as_secs_f64() * 1e3,
+        r.get("latency_ms").as_f64().unwrap_or(0.0)
+    );
+
+    handle.shutdown();
+    handle_nb.shutdown();
+}

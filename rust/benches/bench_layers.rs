@@ -1,0 +1,109 @@
+//! Per-layer microbenches: every substrate the engine composes —
+//! CPU conv/fc, parallel vs sequential pool/LRN/ReLU, layout swaps,
+//! and the XLA conv artifacts per method on one representative shape.
+//!
+//! ```bash
+//! cargo bench --bench bench_layers [-- --filter pool]
+//! ```
+
+use cnndroid::cpu::{par, seq};
+use cnndroid::model::manifest::{default_dir, Manifest};
+use cnndroid::model::zoo;
+use cnndroid::runtime::Runtime;
+use cnndroid::tensor::{layout, Tensor};
+use cnndroid::util::bench::Bench;
+use cnndroid::util::rng::Pcg;
+
+fn random(shape: Vec<usize>, seed: u64) -> Tensor {
+    let n = shape.iter().product();
+    let mut rng = Pcg::seeded(seed);
+    Tensor::new(shape, rng.normal_vec(n, 0.5))
+}
+
+fn main() {
+    let mut b = Bench::new("layer substrates");
+
+    // --- layout swaps (the "dimension swapping" cost the Fig. 5
+    //     pipeline must hide) ---
+    let act = random(vec![1, 96, 27, 27], 1);
+    b.case("swap/nchw->nhwc (96x27x27)", || {
+        layout::nchw_to_nhwc(&act);
+    });
+    let act_nhwc = layout::nchw_to_nhwc(&act);
+    b.case("swap/nhwc->nchw (96x27x27)", || {
+        layout::nhwc_to_nchw(&act_nhwc);
+    });
+
+    // --- pooling: sequential vs thread pool (paper §6.3) ---
+    let pool_in = random(vec![16, 96, 55, 55], 2);
+    b.case("pool/seq max 3x3s2 (16x96x55x55)", || {
+        seq::maxpool_nchw(&pool_in, 3, 2);
+    });
+    b.case("pool/par max 3x3s2 (16x96x55x55)", || {
+        par::maxpool_nchw(&pool_in, 3, 2);
+    });
+
+    // --- LRN: sequential vs thread pool ---
+    let lrn_in = random(vec![16, 96, 27, 27], 3);
+    b.case("lrn/seq z5 (16x96x27x27)", || {
+        seq::lrn_nchw(&lrn_in, 5, 1e-4, 0.75, 1.0);
+    });
+    b.case("lrn/par z5 (16x96x27x27)", || {
+        par::lrn_nchw(&lrn_in, 5, 1e-4, 0.75, 1.0);
+    });
+
+    // --- ReLU ---
+    let relu_in = random(vec![16, 256, 13, 13], 4);
+    b.case("relu/seq (16x256x13x13)", || {
+        seq::relu(&relu_in);
+    });
+    b.case("relu/par (16x256x13x13)", || {
+        par::relu(&relu_in);
+    });
+
+    // --- CPU fc vs XLA fc ---
+    let x = random(vec![16, 800], 5);
+    let w = random(vec![800, 500], 6);
+    let bias = random(vec![500], 7);
+    b.case_with_items("fc/cpu-seq 800x500 b16", Some(16.0), || {
+        seq::fc(&x, &w, &bias, true);
+    });
+
+    let dir = default_dir();
+    if dir.join("manifest.json").exists() {
+        let rt = Runtime::new(Manifest::load(&dir).unwrap()).unwrap();
+        let exe = rt.load("fc_800x500_r_b16").expect("fc artifact");
+        b.case_with_items("fc/xla 800x500 b16", Some(16.0), || {
+            exe.run(&[&x, &w, &bias]).expect("run");
+        });
+
+        // --- conv methods on the CIFAR heaviest shape ---
+        let (lname, spec) = zoo::cifar10().heaviest_conv();
+        let cx = random(vec![1, spec.in_c, spec.in_h, spec.in_w], 8);
+        let cw = random(vec![spec.nk, spec.in_c, spec.kh, spec.kw], 9);
+        let cb = random(vec![spec.nk], 10);
+        let cxh = layout::nchw_to_nhwc(&cx);
+        let cwh = layout::oihw_to_hwio(&cw);
+        b.case(&format!("conv/{lname}/cpu-seq"), || {
+            seq::conv_nchw(&cx, &cw, &cb, &spec);
+        });
+        for method in ["basic-parallel", "basic-simd", "advanced-simd-4", "advanced-simd-8", "mxu"] {
+            let meta = rt
+                .manifest()
+                .find_conv(&spec.signature(), method, 1)
+                .expect("artifact")
+                .clone();
+            let exe = rt.load(&meta.name).expect("compile");
+            let nhwc = meta.inputs[0].layout == "nhwc";
+            b.case(&format!("conv/{lname}/{method}"), || {
+                if nhwc {
+                    exe.run(&[&cxh, &cwh, &cb]).expect("run");
+                } else {
+                    exe.run(&[&cx, &cw, &cb]).expect("run");
+                }
+            });
+        }
+    } else {
+        eprintln!("(artifacts not built — XLA cases skipped)");
+    }
+}

@@ -1,0 +1,102 @@
+//! The Fig. 5 ablation bench: does the CPU/accelerator pipeline
+//! actually hide the "dimension swapping" work?  Compares the engine's
+//! pipelined conv execution against a strictly serial formulation, and
+//! measures the raw pipeline harness overhead.
+//!
+//! ```bash
+//! cargo bench --bench bench_pipeline
+//! ```
+
+use cnndroid::coordinator::pipeline::run_pipeline;
+use cnndroid::coordinator::{Engine, EngineConfig};
+use cnndroid::data::synth;
+use cnndroid::model::manifest::{default_dir, Manifest};
+use cnndroid::runtime::Runtime;
+use cnndroid::tensor::layout;
+use cnndroid::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("fig5 pipeline");
+
+    // Raw harness overhead: trivial stages, 16 frames.
+    b.case("harness/16 trivial frames", || {
+        let (out, _) = run_pipeline(16, |i| i, |_, x| x, |_, y: usize| y);
+        assert_eq!(out.len(), 16);
+    });
+
+    let dir = default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts not built — engine cases skipped");
+        return;
+    }
+
+    // Engine conv path (pipelined, as shipped) vs a hand-rolled serial
+    // execution of the same artifact + swaps on one thread.
+    let rt = std::rc::Rc::new(Runtime::new(Manifest::load(&dir).unwrap()).unwrap());
+    let eng = Engine::new(
+        std::rc::Rc::clone(&rt),
+        "cifar10",
+        EngineConfig { method: "basic-simd".into(), record_trace: false, preload: true },
+    )
+    .unwrap();
+    let frames = synth::random_frames(16, 3, 32, 32, 3);
+    b.case_with_items("engine/cifar10 basic-simd b16 (pipelined)", Some(16.0), || {
+        eng.infer_batch(&frames).expect("infer");
+    });
+
+    // Serial formulation of just the conv layers (swap -> conv -> swap
+    // with no overlap), isolating the pipeline win.
+    let net = rt.manifest().networks["cifar10"].clone();
+    let params = cnndroid::model::weights::load_weights(rt.manifest(), &net).unwrap();
+    let specs = net.conv_specs();
+    let mut arts = Vec::new();
+    for (lname, spec) in &specs {
+        let meta = rt
+            .manifest()
+            .find_conv(&spec.signature(), "basic-simd", 1)
+            .expect("artifact")
+            .clone();
+        let (w, bias) = params.get(lname).unwrap();
+        arts.push((rt.load(&meta.name).unwrap(), layout::oihw_to_hwio(w), bias.clone(), *spec));
+    }
+    // Conv-stack only, pipelined via the engine-internal path is not
+    // separable; emulate serial: per frame, per conv, swap+run+swap.
+    let conv_in = synth::random_frames(16, 3, 32, 32, 4);
+    b.case_with_items("conv-stack/serial swaps (no overlap)", Some(16.0), || {
+        for i in 0..16 {
+            let mut f = conv_in.frame(i);
+            for (exe, wh, bias, _spec) in &arts {
+                let xh = layout::nchw_to_nhwc(&f);
+                // NOTE: shapes only match the first conv for a real
+                // network; here each conv consumes the previous conv's
+                // output only when shapes chain — cifar10's convs pad
+                // to keep 32/16/8 spatial, so chain via pooling stand-in
+                // (stride-2 max pool to match the network geometry).
+                let y = exe.run(&[&xh, wh, bias]).expect("run");
+                f = layout::nhwc_to_nchw(&y);
+                f = cnndroid::cpu::seq::maxpool_nchw(&f, 3, 2);
+            }
+        }
+    });
+
+    // The same chain but with the engine (pipelined swaps + parallel
+    // pooling) for an apples-to-apples-ish ratio.
+    b.case_with_items("conv-stack/engine (overlap + par pool)", Some(16.0), || {
+        eng.infer_batch(&conv_in).expect("infer");
+    });
+
+    // Batcher throughput: how fast can the queue absorb + drain?
+    let batcher = cnndroid::coordinator::Batcher::new(cnndroid::coordinator::BatcherConfig {
+        max_batch: 16,
+        max_wait: std::time::Duration::from_micros(50),
+    });
+    b.case_with_items("batcher/push+drain 1024", Some(1024.0), || {
+        for i in 0..1024 {
+            batcher.push(i);
+        }
+        let mut seen = 0;
+        while seen < 1024 {
+            seen += batcher.next_batch().unwrap().len();
+        }
+    });
+}

@@ -1,0 +1,55 @@
+//! Table 3 regenerator: whole-network runtime for every execution
+//! method, measured on this host (XLA-CPU accelerator substitute) and
+//! simulated at paper scale, printed side by side with the published
+//! numbers.
+//!
+//! ```bash
+//! cargo bench --bench bench_table3 [-- --quick] [-- --filter lenet5]
+//! ```
+
+use cnndroid::coordinator::{Engine, EngineConfig};
+use cnndroid::data::synth;
+use cnndroid::model::manifest::default_dir;
+use cnndroid::simulator::tables;
+use cnndroid::util::bench::Bench;
+
+fn main() {
+    let dir = default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts not built — run `make artifacts` first");
+        return;
+    }
+
+    // Paper-scale simulation first (instant).
+    println!(
+        "{}",
+        tables::render("Table 3 @ paper scale (simulated vs paper, batch 16)", &tables::table3())
+    );
+
+    // Measured on this host.  LeNet/CIFAR at the paper's batch 16;
+    // AlexNet at batch 2 (its CPU-seq baseline is ~5 GFLOP/frame).
+    let mut b = Bench::new("table3-measured (this host)");
+    let methods = ["cpu-seq", "basic-parallel", "basic-simd", "advanced-simd-4", "advanced-simd-8", "mxu"];
+    for (net, batch) in [("lenet5", 16usize), ("cifar10", 16), ("alexnet", 2)] {
+        let mut engines = Vec::new();
+        for m in methods {
+            engines.push((
+                m,
+                Engine::from_artifacts(
+                    &dir,
+                    net,
+                    EngineConfig { method: m.into(), record_trace: false, preload: true },
+                )
+                .expect("engine"),
+            ));
+        }
+        let desc = engines[0].1.network().clone();
+        let frames = synth::random_frames(batch, desc.in_c, desc.in_h, desc.in_w, 11);
+        for (m, eng) in &engines {
+            b.case_with_items(&format!("{net}/b{batch}/{m}"), Some(batch as f64), || {
+                eng.infer_batch(&frames).expect("infer");
+            });
+        }
+        b.speedup_table(&format!("{net}/b{batch}/cpu-seq"));
+    }
+}

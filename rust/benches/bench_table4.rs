@@ -1,0 +1,68 @@
+//! Table 4 regenerator: the heaviest convolution layer of each
+//! benchmark network, isolated — CPU-sequential vs every accelerated
+//! method — measured on this host and simulated at paper scale.
+//!
+//! ```bash
+//! cargo bench --bench bench_table4 [-- --quick] [-- --filter alexnet]
+//! ```
+
+use cnndroid::cpu::seq;
+use cnndroid::model::manifest::{default_dir, Manifest};
+use cnndroid::model::zoo;
+use cnndroid::runtime::Runtime;
+use cnndroid::simulator::tables;
+use cnndroid::tensor::layout;
+use cnndroid::util::bench::Bench;
+use cnndroid::util::rng::Pcg;
+
+fn main() {
+    let dir = default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts not built — run `make artifacts` first");
+        return;
+    }
+    println!(
+        "{}",
+        tables::render("Table 4 @ paper scale (simulated vs paper, batch 16)", &tables::table4())
+    );
+
+    let rt = Runtime::new(Manifest::load(&dir).unwrap()).unwrap();
+    let mut b = Bench::new("table4-measured: heaviest conv layer (this host)");
+    for net in zoo::all() {
+        let (lname, spec) = net.heaviest_conv();
+        let mut rng = Pcg::seeded(1);
+        let x = cnndroid::tensor::Tensor::new(
+            vec![1, spec.in_c, spec.in_h, spec.in_w],
+            rng.normal_vec(spec.in_c * spec.in_h * spec.in_w, 0.5),
+        );
+        let w = cnndroid::tensor::Tensor::new(
+            vec![spec.nk, spec.in_c, spec.kh, spec.kw],
+            rng.normal_vec(spec.nk * spec.in_c * spec.kh * spec.kw, 0.5),
+        );
+        let bias = cnndroid::tensor::Tensor::new(vec![spec.nk], rng.normal_vec(spec.nk, 0.5));
+        let xh = layout::nchw_to_nhwc(&x);
+        let wh = layout::oihw_to_hwio(&w);
+        let flops = spec.flops() as f64;
+
+        b.case_with_items(&format!("{}/{lname}/cpu-seq", net.name), Some(flops), || {
+            seq::conv_nchw(&x, &w, &bias, &spec);
+        });
+        for method in ["basic-parallel", "basic-simd", "advanced-simd-4", "advanced-simd-8", "mxu"] {
+            let meta = rt
+                .manifest()
+                .find_conv(&spec.signature(), method, 1)
+                .expect("conv artifact")
+                .clone();
+            let exe = rt.load(&meta.name).expect("compile");
+            let nhwc = meta.inputs[0].layout == "nhwc";
+            b.case_with_items(&format!("{}/{lname}/{method}", net.name), Some(flops), || {
+                if nhwc {
+                    exe.run(&[&xh, &wh, &bias]).expect("run");
+                } else {
+                    exe.run(&[&x, &w, &bias]).expect("run");
+                }
+            });
+        }
+        b.speedup_table(&format!("{}/{lname}/cpu-seq", net.name));
+    }
+}

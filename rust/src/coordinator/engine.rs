@@ -1,0 +1,500 @@
+//! The layerwise inference engine: executes an [`ExecutionPlan`]
+//! against the PJRT runtime and the CPU substrate, with the Fig. 5
+//! pipeline hiding layout swaps in accelerator-busy windows.
+//!
+//! An `Engine` is deliberately **not** `Send` (the PJRT client is
+//! `Rc`-based): it lives on one engine thread, exactly like the paper's
+//! single RenderScript dispatch thread.  The server module spawns one
+//! engine thread per (network, method) replica.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::coordinator::pipeline::{run_pipeline, PipelineTrace};
+use crate::coordinator::plan::{ExecutionPlan, LayerPlan};
+use crate::cpu::{par, seq};
+use crate::model::manifest::Manifest;
+use crate::model::network::{Network, PoolMode};
+use crate::model::weights::{load_weights, Params};
+use crate::runtime::{Arg, LoadedArtifact, Runtime};
+use crate::tensor::{layout, Tensor};
+use crate::util::json::Json;
+use crate::util::stats::Samples;
+use crate::Result;
+
+/// Engine construction options.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Execution method ("cpu-seq" or a manifest method).
+    pub method: String,
+    /// Record per-layer pipeline traces (timeline example).
+    pub record_trace: bool,
+    /// Pre-compile all artifacts at construction (excludes compile time
+    /// from first-request latency).
+    pub preload: bool,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { method: "advanced-simd-4".into(), record_trace: false, preload: true }
+    }
+}
+
+/// Per-layer accumulated timing.
+#[derive(Debug, Default, Clone)]
+struct LayerStat {
+    samples: Samples,
+}
+
+/// The inference engine for one network.
+pub struct Engine {
+    runtime: Rc<Runtime>,
+    net: Network,
+    params: Params,
+    plan: ExecutionPlan,
+    cfg: EngineConfig,
+    /// Per-layer weights pre-swapped to the artifact layout (the
+    /// weight half of "dimension swapping") and uploaded to
+    /// device-resident buffers ONCE — re-uploading AlexNet's 151 MB
+    /// fc6 matrix per call cost ~400 ms/frame (EXPERIMENTS.md §Perf).
+    dev_weights: BTreeMap<String, (xla::PjRtBuffer, xla::PjRtBuffer)>,
+    /// Device-resident flat parameter list for the fused artifact path.
+    dev_flat: RefCell<Option<Vec<xla::PjRtBuffer>>>,
+    /// Cached artifact handles in plan order.
+    artifacts: RefCell<BTreeMap<String, Rc<LoadedArtifact>>>,
+    layer_stats: RefCell<BTreeMap<String, LayerStat>>,
+    traces: RefCell<Vec<(String, PipelineTrace)>>,
+    batches: RefCell<usize>,
+    frames: RefCell<usize>,
+}
+
+impl Engine {
+    /// Build an engine over a shared runtime.
+    pub fn new(runtime: Rc<Runtime>, net_name: &str, cfg: EngineConfig) -> Result<Engine> {
+        let manifest = runtime.manifest();
+        let net = manifest
+            .networks
+            .get(net_name)
+            .ok_or_else(|| anyhow::anyhow!("unknown network {net_name:?}"))?
+            .clone();
+        let params = load_weights(manifest, &net)?;
+        let plan = ExecutionPlan::build(manifest, &net, &cfg.method)?;
+
+        // Swap conv weights once (paper: kernels are swapped together
+        // with the frames; ours are cached because weights are static)
+        // and upload every accelerated layer's parameters to the device.
+        let mut dev_weights = BTreeMap::new();
+        for lp in &plan.layers {
+            match lp {
+                LayerPlan::ConvAccel { name, nhwc, .. } => {
+                    let (w, b) = params
+                        .get(name)
+                        .ok_or_else(|| anyhow::anyhow!("missing weights for {name}"))?;
+                    let w_art = if *nhwc { layout::oihw_to_hwio(w) } else { w.clone() };
+                    dev_weights
+                        .insert(name.clone(), (runtime.to_device(&w_art)?, runtime.to_device(b)?));
+                }
+                LayerPlan::FcAccel { name, .. } => {
+                    let (w, b) = params
+                        .get(name)
+                        .ok_or_else(|| anyhow::anyhow!("missing weights for {name}"))?;
+                    dev_weights
+                        .insert(name.clone(), (runtime.to_device(w)?, runtime.to_device(b)?));
+                }
+                _ => {}
+            }
+        }
+
+        let engine = Engine {
+            runtime,
+            net,
+            params,
+            plan,
+            cfg,
+            dev_weights,
+            dev_flat: RefCell::new(None),
+            artifacts: RefCell::new(BTreeMap::new()),
+            layer_stats: RefCell::new(BTreeMap::new()),
+            traces: RefCell::new(Vec::new()),
+            batches: RefCell::new(0),
+            frames: RefCell::new(0),
+        };
+        if engine.cfg.preload {
+            engine.preload()?;
+        }
+        Ok(engine)
+    }
+
+    /// Convenience: load manifest + runtime + engine in one step.
+    pub fn from_artifacts(dir: &std::path::Path, net: &str, cfg: EngineConfig) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let runtime = Rc::new(Runtime::new(manifest)?);
+        Engine::new(runtime, net, cfg)
+    }
+
+    pub fn network(&self) -> &Network {
+        &self.net
+    }
+
+    pub fn method(&self) -> &str {
+        &self.cfg.method
+    }
+
+    pub fn plan(&self) -> &ExecutionPlan {
+        &self.plan
+    }
+
+    pub fn runtime(&self) -> &Rc<Runtime> {
+        &self.runtime
+    }
+
+    /// Compile every artifact in the plan.
+    pub fn preload(&self) -> Result<()> {
+        for name in self.plan.artifacts() {
+            let a = self.runtime.load(&name)?;
+            self.artifacts.borrow_mut().insert(name, a);
+        }
+        Ok(())
+    }
+
+    fn artifact(&self, name: &str) -> Result<Rc<LoadedArtifact>> {
+        if let Some(a) = self.artifacts.borrow().get(name) {
+            return Ok(Rc::clone(a));
+        }
+        let a = self.runtime.load(name)?;
+        self.artifacts.borrow_mut().insert(name.to_string(), Rc::clone(&a));
+        Ok(a)
+    }
+
+    /// Pipeline traces of the most recent batch (when enabled).
+    pub fn last_traces(&self) -> Vec<(String, PipelineTrace)> {
+        self.traces.borrow().clone()
+    }
+
+    /// Forward a batch of NCHW frames; returns logits (n, classes).
+    pub fn infer_batch(&self, x: &Tensor) -> Result<Tensor> {
+        anyhow::ensure!(
+            x.shape().len() == 4
+                && x.shape()[1..] == [self.net.in_c, self.net.in_h, self.net.in_w],
+            "input {:?} does not match {} ({}x{}x{})",
+            x.shape(),
+            self.net.name,
+            self.net.in_c,
+            self.net.in_h,
+            self.net.in_w
+        );
+        let n = x.dim(0);
+        if self.cfg.record_trace {
+            self.traces.borrow_mut().clear();
+        }
+        let mut act = x.clone();
+        for li in 0..self.plan.layers.len() {
+            let t0 = Instant::now();
+            act = self.run_layer(li, act)?;
+            self.record_time(self.plan.layers[li].name(), t0.elapsed().as_secs_f64());
+        }
+        *self.batches.borrow_mut() += 1;
+        *self.frames.borrow_mut() += n;
+        Ok(act)
+    }
+
+    /// Classify a batch: (label, max-logit) per frame.
+    pub fn classify(&self, x: &Tensor) -> Result<Vec<(usize, f32)>> {
+        let logits = self.infer_batch(x)?;
+        let c = self.net.classes;
+        Ok((0..logits.dim(0))
+            .map(|i| {
+                let row = &logits.data()[i * c..(i + 1) * c];
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(idx, &v)| (idx, v))
+                    .unwrap()
+            })
+            .collect())
+    }
+
+    /// Forward through the fused whole-network artifact (our extension;
+    /// requires a `fused_<net>_<method>_b<n>` artifact).
+    pub fn infer_batch_fused(&self, x: &Tensor) -> Result<Tensor> {
+        let n = x.dim(0);
+        let meta = self
+            .runtime
+            .manifest()
+            .find_fused(&self.net.name, &self.cfg.method, n)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no fused artifact for {}/{} batch {n}",
+                    self.net.name,
+                    self.cfg.method
+                )
+            })?
+            .name
+            .clone();
+        let art = self.artifact(&meta)?;
+        // Upload the flat parameter list once; reuse across calls.
+        if self.dev_flat.borrow().is_none() {
+            let mut bufs = Vec::new();
+            for t in self.params.flat() {
+                bufs.push(self.runtime.to_device(t)?);
+            }
+            *self.dev_flat.borrow_mut() = Some(bufs);
+        }
+        let flat = self.dev_flat.borrow();
+        let bufs = flat.as_ref().expect("uploaded above");
+        let mut args: Vec<Arg> = vec![Arg::Host(x)];
+        args.extend(bufs.iter().map(Arg::Dev));
+        art.run_args(&args)
+    }
+
+    fn run_layer(&self, li: usize, act: Tensor) -> Result<Tensor> {
+        // Clone the plan entry so `self` stays free for helpers.
+        let lp = self.plan.layers[li].clone();
+        match lp {
+            LayerPlan::ConvAccel { name, artifact, nhwc, .. } => {
+                self.conv_accel(&name, &artifact, nhwc, act)
+            }
+            LayerPlan::ConvCpu { name, spec } => {
+                let (w, b) = self
+                    .params
+                    .get(&name)
+                    .ok_or_else(|| anyhow::anyhow!("missing weights for {name}"))?;
+                Ok(seq::conv_nchw(&act, w, b, &spec))
+            }
+            LayerPlan::Pool { mode, size, stride, relu, parallel, .. } => {
+                let mut out = match (mode, parallel) {
+                    (PoolMode::Max, true) => par::maxpool_nchw(&act, size, stride),
+                    (PoolMode::Max, false) => seq::maxpool_nchw(&act, size, stride),
+                    (PoolMode::Avg, true) => par::avgpool_nchw(&act, size, stride),
+                    (PoolMode::Avg, false) => seq::avgpool_nchw(&act, size, stride),
+                };
+                if relu {
+                    out.relu_inplace();
+                }
+                Ok(out)
+            }
+            LayerPlan::Lrn { size, alpha, beta, k, parallel, .. } => Ok(if parallel {
+                par::lrn_nchw(&act, size, alpha, beta, k)
+            } else {
+                seq::lrn_nchw(&act, size, alpha, beta, k)
+            }),
+            LayerPlan::FcCpu { name, relu } => {
+                let (w, b) = self
+                    .params
+                    .get(&name)
+                    .ok_or_else(|| anyhow::anyhow!("missing weights for {name}"))?;
+                Ok(seq::fc(&flatten(act), w, b, relu))
+            }
+            LayerPlan::FcAccel { name, artifact_b1, artifact_b16, .. } => {
+                let x = flatten(act);
+                let n = x.dim(0);
+                let (w, b) = &self.dev_weights[&name];
+                if n == 16 {
+                    if let Some(b16) = &artifact_b16 {
+                        return self
+                            .artifact(b16)?
+                            .run_args(&[Arg::Host(&x), Arg::Dev(w), Arg::Dev(b)]);
+                    }
+                }
+                // Frame-serial with the batch-1 artifact.
+                let art = self.artifact(&artifact_b1)?;
+                let mut frames = Vec::with_capacity(n);
+                for i in 0..n {
+                    frames.push(art.run_args(&[Arg::Host(&x.frame(i)), Arg::Dev(w), Arg::Dev(b)])?);
+                }
+                Ok(Tensor::stack(&frames))
+            }
+        }
+    }
+
+    /// Accelerated convolution with the Fig. 5 pipeline: frames go
+    /// through the artifact serially; the NCHW<->NHWC swaps of
+    /// neighbouring frames run on CPU workers meanwhile.
+    fn conv_accel(&self, name: &str, artifact: &str, nhwc: bool, act: Tensor) -> Result<Tensor> {
+        let n = act.dim(0);
+        let art = self.artifact(artifact)?;
+        let (w, b) = &self.dev_weights[name];
+        let input = Arc::new(act);
+
+        let pre_input = Arc::clone(&input);
+        let mut mid_err: Option<anyhow::Error> = None;
+        let (frames, trace) = run_pipeline(
+            n,
+            move |i| {
+                let frame = pre_input.frame(i);
+                if nhwc {
+                    layout::nchw_to_nhwc(&frame)
+                } else {
+                    frame
+                }
+            },
+            |_, frame: Tensor| -> Option<Tensor> {
+                if mid_err.is_some() {
+                    return None;
+                }
+                match art.run_args(&[Arg::Host(&frame), Arg::Dev(w), Arg::Dev(b)]) {
+                    Ok(y) => Some(y),
+                    Err(e) => {
+                        mid_err = Some(e);
+                        None
+                    }
+                }
+            },
+            move |_, y: Option<Tensor>| {
+                y.map(|y| if nhwc { layout::nhwc_to_nchw(&y) } else { y })
+            },
+        );
+        if let Some(e) = mid_err {
+            return Err(e.context(format!("conv {name} ({artifact})")));
+        }
+        if self.cfg.record_trace {
+            self.traces.borrow_mut().push((name.to_string(), trace));
+        }
+        let frames: Vec<Tensor> = frames.into_iter().map(|f| f.unwrap()).collect();
+        Ok(Tensor::stack(&frames))
+    }
+
+    fn record_time(&self, layer: &str, secs: f64) {
+        self.layer_stats
+            .borrow_mut()
+            .entry(layer.to_string())
+            .or_default()
+            .samples
+            .push(secs);
+    }
+
+    /// Metrics snapshot: per-layer mean ms + totals.
+    pub fn metrics_json(&self) -> Json {
+        let stats = self.layer_stats.borrow();
+        let mut layers = Vec::new();
+        for (name, st) in stats.iter() {
+            layers.push((
+                name.as_str(),
+                Json::obj(vec![
+                    ("mean_ms", Json::num(st.samples.mean() * 1e3)),
+                    ("count", Json::num(st.samples.len() as f64)),
+                ]),
+            ));
+        }
+        Json::obj(vec![
+            ("net", Json::str(self.net.name.clone())),
+            ("method", Json::str(self.cfg.method.clone())),
+            ("batches", Json::num(*self.batches.borrow() as f64)),
+            ("frames", Json::num(*self.frames.borrow() as f64)),
+            ("artifacts_loaded", Json::num(self.runtime.loaded_count() as f64)),
+            ("layers", Json::obj(layers)),
+        ])
+    }
+}
+
+/// Flatten NCHW activations to (n, c*h*w) rows (canonical order — the
+/// FC weights are layout-independent, model.py does the same).
+fn flatten(act: Tensor) -> Tensor {
+    if act.shape().len() == 4 {
+        let n = act.dim(0);
+        let d = act.len() / n;
+        act.reshape(vec![n, d])
+    } else {
+        act
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpu::forward_seq;
+    use crate::model::manifest::default_dir;
+
+    fn engine(net: &str, method: &str) -> Option<Engine> {
+        let dir = default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(
+            Engine::from_artifacts(
+                &dir,
+                net,
+                EngineConfig { method: method.into(), record_trace: true, preload: true },
+            )
+            .unwrap(),
+        )
+    }
+
+    #[test]
+    fn lenet_accel_matches_cpu_reference() {
+        let Some(eng) = engine("lenet5", "basic-simd") else { return };
+        let (imgs, _) = crate::data::synth::make_dataset(4, 11, 0.05);
+        let got = eng.infer_batch(&imgs).unwrap();
+        let want = forward_seq(eng.network(), &eng.params, &imgs).unwrap();
+        let diff = got.max_abs_diff(&want);
+        assert!(diff < 1e-3, "accel vs cpu diff {diff}");
+    }
+
+    #[test]
+    fn all_methods_agree_on_lenet() {
+        let dir = default_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let (imgs, _) = crate::data::synth::make_dataset(2, 13, 0.05);
+        let baseline = {
+            let eng = engine("lenet5", "cpu-seq").unwrap();
+            eng.infer_batch(&imgs).unwrap()
+        };
+        for method in ["basic-parallel", "basic-simd", "advanced-simd-4", "advanced-simd-8", "mxu"] {
+            let eng = engine("lenet5", method).unwrap();
+            let got = eng.infer_batch(&imgs).unwrap();
+            let diff = got.max_abs_diff(&baseline);
+            assert!(diff < 1e-3, "{method}: diff {diff}");
+        }
+    }
+
+    #[test]
+    fn traces_recorded_for_accel_convs() {
+        let Some(eng) = engine("lenet5", "advanced-simd-4") else { return };
+        let (imgs, _) = crate::data::synth::make_dataset(4, 17, 0.05);
+        eng.infer_batch(&imgs).unwrap();
+        let traces = eng.last_traces();
+        assert_eq!(traces.len(), 2, "conv1+conv2 traces");
+        for (name, tr) in &traces {
+            assert!(!tr.events.is_empty(), "{name} empty trace");
+            // 4 frames x 3 stages.
+            assert_eq!(tr.events.len(), 12, "{name}");
+        }
+    }
+
+    #[test]
+    fn fused_path_matches_layerwise() {
+        let Some(eng) = engine("lenet5", "mxu") else { return };
+        let (imgs, _) = crate::data::synth::make_dataset(1, 19, 0.05);
+        let fused = eng.infer_batch_fused(&imgs).unwrap();
+        let layered = eng.infer_batch(&imgs).unwrap();
+        let diff = fused.max_abs_diff(&layered);
+        assert!(diff < 1e-3, "fused vs layerwise diff {diff}");
+    }
+
+    #[test]
+    fn classify_returns_labels_in_range() {
+        let Some(eng) = engine("lenet5", "basic-simd") else { return };
+        let (imgs, _) = crate::data::synth::make_dataset(3, 23, 0.05);
+        let preds = eng.classify(&imgs).unwrap();
+        assert_eq!(preds.len(), 3);
+        assert!(preds.iter().all(|(l, _)| *l < 10));
+    }
+
+    #[test]
+    fn metrics_accumulate() {
+        let Some(eng) = engine("lenet5", "basic-simd") else { return };
+        let (imgs, _) = crate::data::synth::make_dataset(2, 29, 0.05);
+        eng.infer_batch(&imgs).unwrap();
+        eng.infer_batch(&imgs).unwrap();
+        let m = eng.metrics_json();
+        assert_eq!(m.get("batches").as_usize(), Some(2));
+        assert_eq!(m.get("frames").as_usize(), Some(4));
+        assert!(m.get("layers").get("conv1").get("mean_ms").as_f64().unwrap() > 0.0);
+    }
+}

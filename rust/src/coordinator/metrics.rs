@@ -1,0 +1,115 @@
+//! Serving metrics: request counters and end-to-end latency summaries,
+//! exported as JSON over the server's `metrics` command.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+use crate::util::stats::Samples;
+
+#[derive(Default)]
+struct NetStats {
+    requests: u64,
+    errors: u64,
+    latency: Samples,
+    batch_sizes: Samples,
+}
+
+/// Process-wide serving metrics (thread-safe).
+pub struct Metrics {
+    started: Instant,
+    nets: Mutex<BTreeMap<String, NetStats>>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics { started: Instant::now(), nets: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// Record one completed request.
+    pub fn record(&self, net: &str, latency: Duration, batch: usize) {
+        let mut g = self.nets.lock().unwrap();
+        let st = g.entry(net.to_string()).or_default();
+        st.requests += 1;
+        st.latency.push_duration(latency);
+        st.batch_sizes.push(batch as f64);
+    }
+
+    /// Record one failed request.
+    pub fn record_error(&self, net: &str) {
+        let mut g = self.nets.lock().unwrap();
+        g.entry(net.to_string()).or_default().errors += 1;
+    }
+
+    pub fn total_requests(&self) -> u64 {
+        self.nets.lock().unwrap().values().map(|s| s.requests).sum()
+    }
+
+    /// JSON snapshot (latency in ms, throughput in req/s since start).
+    pub fn snapshot(&self) -> Json {
+        let uptime = self.started.elapsed().as_secs_f64();
+        let mut g = self.nets.lock().unwrap();
+        let total: u64 = g.values().map(|s| s.requests).sum();
+        let mut nets = Vec::new();
+        for (name, st) in g.iter_mut() {
+            nets.push((
+                name.as_str(),
+                Json::obj(vec![
+                    ("requests", Json::num(st.requests as f64)),
+                    ("errors", Json::num(st.errors as f64)),
+                    ("latency_ms_mean", Json::num(st.latency.mean() * 1e3)),
+                    ("latency_ms_p50", Json::num(st.latency.percentile(50.0) * 1e3)),
+                    ("latency_ms_p95", Json::num(st.latency.percentile(95.0) * 1e3)),
+                    ("latency_ms_p99", Json::num(st.latency.percentile(99.0) * 1e3)),
+                    ("mean_batch", Json::num(st.batch_sizes.mean())),
+                    (
+                        "throughput_rps",
+                        Json::num(if uptime > 0.0 { st.requests as f64 / uptime } else { 0.0 }),
+                    ),
+                ]),
+            ));
+        }
+        Json::obj(vec![
+            ("uptime_s", Json::num(uptime)),
+            ("total_requests", Json::num(total as f64)),
+            ("nets", Json::obj(nets)),
+        ])
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::new();
+        m.record("lenet5", Duration::from_millis(10), 4);
+        m.record("lenet5", Duration::from_millis(20), 8);
+        m.record("alexnet", Duration::from_millis(100), 1);
+        m.record_error("alexnet");
+        assert_eq!(m.total_requests(), 3);
+        let s = m.snapshot();
+        let lenet = s.get("nets").get("lenet5");
+        assert_eq!(lenet.get("requests").as_usize(), Some(2));
+        let mean = lenet.get("latency_ms_mean").as_f64().unwrap();
+        assert!((mean - 15.0).abs() < 1.0, "mean {mean}");
+        assert_eq!(s.get("nets").get("alexnet").get("errors").as_usize(), Some(1));
+        assert_eq!(s.get("total_requests").as_usize(), Some(3));
+    }
+
+    #[test]
+    fn snapshot_parses_as_json() {
+        let m = Metrics::new();
+        m.record("x", Duration::from_millis(1), 1);
+        let text = m.snapshot().dump();
+        assert!(crate::util::json::Json::parse(&text).is_ok());
+    }
+}

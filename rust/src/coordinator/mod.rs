@@ -1,0 +1,30 @@
+//! Layer-3 coordinator — the serving engine ("CNNdroid" proper).
+//!
+//! * [`plan`] — per-(network, method) execution plans: which processor
+//!   runs each layer, which artifact implements it, which layout swaps
+//!   are needed (paper §4 / Table row "Execution methods" in DESIGN §7).
+//! * [`pipeline`] — the Fig. 5 CPU/accelerator overlap scheduler with a
+//!   trace recorder (frames serial through the accelerator; layout
+//!   swaps and ReLU hidden in CPU idle time).
+//! * [`engine`] — the layerwise executor: owns the PJRT runtime, the
+//!   swapped weight caches, and the per-layer metrics.
+//! * [`batcher`] — dynamic batcher (the paper's batch-of-16 input,
+//!   made demand-driven for serving).
+//! * [`router`] — routes requests across per-network engine threads.
+//! * [`server`] — TCP JSON-lines front end + engine worker threads.
+//! * [`metrics`] — counters and latency summaries.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod pipeline;
+pub mod plan;
+pub mod router;
+pub mod server;
+
+pub use batcher::{Batcher, BatcherConfig};
+pub use engine::{Engine, EngineConfig};
+pub use pipeline::{PipelineTrace, TraceEvent};
+pub use plan::{ExecutionPlan, LayerPlan};
+pub use router::Router;
+pub use server::{serve, Client, Request, ServerConfig, ServerHandle};

@@ -1,0 +1,324 @@
+//! The paper's Figure 5 processor schedule: while the accelerator
+//! convolves frame *i*, the CPU performs the "dimension swapping" and
+//! ReLU work of neighbouring frames, so those stages add no wall time.
+//!
+//! [`run_pipeline`] is a generic three-stage software pipeline:
+//!
+//! ```text
+//!   pre(i)   CPU  (thread pool)   — e.g. NCHW->NHWC swap of frame i
+//!   mid(i)   accelerator (caller) — conv dispatch, frames serial (§4.2)
+//!   post(i)  CPU  (thread pool)   — e.g. NHWC->NCHW swap / ReLU
+//! ```
+//!
+//! `pre(i+1)` and `post(i-1)` execute while `mid(i)` runs.  The
+//! accelerator closure runs on the caller's thread because the PJRT
+//! client is not `Send` (see `runtime`).  Every stage is recorded into
+//! a [`PipelineTrace`] for the timeline example and overlap metrics.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::threadpool;
+
+/// Which processor executed a stage (Fig. 5's two rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Proc {
+    Cpu,
+    Accel,
+}
+
+/// One recorded stage execution.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub frame: usize,
+    pub stage: &'static str,
+    pub proc: Proc,
+    /// Seconds since the pipeline started.
+    pub start_s: f64,
+    pub end_s: f64,
+}
+
+/// Recorded timeline of one pipelined layer execution.
+#[derive(Debug, Clone, Default)]
+pub struct PipelineTrace {
+    pub events: Vec<TraceEvent>,
+}
+
+impl PipelineTrace {
+    /// Total wall time (max end).
+    pub fn span_s(&self) -> f64 {
+        self.events.iter().map(|e| e.end_s).fold(0.0, f64::max)
+    }
+
+    /// Sum of CPU stage durations.
+    pub fn cpu_busy_s(&self) -> f64 {
+        self.busy(Proc::Cpu)
+    }
+
+    /// Sum of accelerator stage durations.
+    pub fn accel_busy_s(&self) -> f64 {
+        self.busy(Proc::Accel)
+    }
+
+    fn busy(&self, p: Proc) -> f64 {
+        self.events
+            .iter()
+            .filter(|e| e.proc == p)
+            .map(|e| e.end_s - e.start_s)
+            .sum()
+    }
+
+    /// Fraction of CPU stage time that was hidden under accelerator
+    /// time: 1.0 means all swap/ReLU work overlapped (the Fig. 5 claim
+    /// "no overhead for including the ReLU layer is introduced").
+    /// Computed by interval intersection: for each CPU event, the part
+    /// covered by the union of accelerator-busy intervals is "hidden".
+    pub fn overlap_fraction(&self) -> f64 {
+        let cpu = self.cpu_busy_s();
+        if cpu <= 0.0 {
+            return 1.0;
+        }
+        let mut accel: Vec<(f64, f64)> = self
+            .events
+            .iter()
+            .filter(|e| e.proc == Proc::Accel)
+            .map(|e| (e.start_s, e.end_s))
+            .collect();
+        accel.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        // Merge into a disjoint union.
+        let mut merged: Vec<(f64, f64)> = Vec::new();
+        for (s, e) in accel {
+            match merged.last_mut() {
+                Some(last) if s <= last.1 => last.1 = last.1.max(e),
+                _ => merged.push((s, e)),
+            }
+        }
+        let mut hidden = 0.0;
+        for ev in self.events.iter().filter(|e| e.proc == Proc::Cpu) {
+            for &(s, e) in &merged {
+                let lo = ev.start_s.max(s);
+                let hi = ev.end_s.min(e);
+                if hi > lo {
+                    hidden += hi - lo;
+                }
+            }
+        }
+        (hidden / cpu).clamp(0.0, 1.0)
+    }
+
+    /// ASCII rendering of the two processor rows (the Fig. 5 picture).
+    pub fn render_ascii(&self, width: usize) -> String {
+        let span = self.span_s().max(1e-9);
+        let mut rows = String::new();
+        for (proc, label) in [(Proc::Accel, "ACCEL"), (Proc::Cpu, "CPU  ")] {
+            let mut line = vec![b'.'; width];
+            for e in self.events.iter().filter(|e| e.proc == proc) {
+                let a = ((e.start_s / span) * width as f64) as usize;
+                let b = (((e.end_s / span) * width as f64).ceil() as usize).min(width);
+                let ch = match e.stage {
+                    "pre" => b'<',
+                    "post" => b'>',
+                    _ => b'0' + (e.frame % 10) as u8,
+                };
+                for c in line.iter_mut().take(b).skip(a.min(width)) {
+                    *c = ch;
+                }
+            }
+            rows.push_str(&format!("{label} |{}|\n", String::from_utf8(line).unwrap()));
+        }
+        rows.push_str(&format!(
+            "span {:.3} ms, accel busy {:.3} ms, cpu busy {:.3} ms, overlap {:.0}%\n",
+            span * 1e3,
+            self.accel_busy_s() * 1e3,
+            self.cpu_busy_s() * 1e3,
+            self.overlap_fraction() * 100.0
+        ));
+        rows
+    }
+}
+
+/// Shared trace recorder handle.
+#[derive(Clone)]
+pub struct Recorder {
+    t0: Instant,
+    events: Arc<Mutex<Vec<TraceEvent>>>,
+}
+
+impl Recorder {
+    pub fn new() -> Recorder {
+        Recorder { t0: Instant::now(), events: Arc::new(Mutex::new(Vec::new())) }
+    }
+
+    pub fn record(&self, frame: usize, stage: &'static str, proc: Proc, start: Instant, end: Instant) {
+        let ev = TraceEvent {
+            frame,
+            stage,
+            proc,
+            start_s: start.duration_since(self.t0).as_secs_f64(),
+            end_s: end.duration_since(self.t0).as_secs_f64(),
+        };
+        self.events.lock().unwrap().push(ev);
+    }
+
+    pub fn finish(self) -> PipelineTrace {
+        let mut events = std::mem::take(&mut *self.events.lock().unwrap());
+        events.sort_by(|a, b| a.start_s.partial_cmp(&b.start_s).unwrap());
+        PipelineTrace { events }
+    }
+}
+
+impl Default for Recorder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Run `n` frames through the pre (CPU) -> mid (accel) -> post (CPU)
+/// pipeline.  `pre` produces the accelerator input for a frame, `mid`
+/// consumes it on the caller thread, `post` finalizes the result.
+/// Returns the `post` outputs in frame order plus the recorded trace.
+///
+/// Stage closures must be `Send + Sync + 'static`-free of references to
+/// the caller's stack; inputs are moved through channels.
+pub fn run_pipeline<X, Y, Z, Pre, Mid, Post>(
+    n: usize,
+    pre: Pre,
+    mut mid: Mid,
+    post: Post,
+) -> (Vec<Z>, PipelineTrace)
+where
+    X: Send + 'static,
+    Y: Send + 'static,
+    Z: Send + 'static,
+    Pre: Fn(usize) -> X + Send + Sync + Clone + 'static,
+    Mid: FnMut(usize, X) -> Y,
+    Post: Fn(usize, Y) -> Z + Send + Sync + Clone + 'static,
+{
+    let rec = Recorder::new();
+    let pool = threadpool::global();
+    let mut out: Vec<Option<Z>> = (0..n).map(|_| None).collect();
+    if n == 0 {
+        return (Vec::new(), rec.finish());
+    }
+
+    // Kick off pre(0) immediately.
+    let spawn_pre = |i: usize| -> mpsc::Receiver<X> {
+        let (tx, rx) = mpsc::channel();
+        let pre = pre.clone();
+        let rec = rec.clone();
+        pool.submit(Box::new(move || {
+            let t0 = Instant::now();
+            let x = pre(i);
+            rec.record(i, "pre", Proc::Cpu, t0, Instant::now());
+            let _ = tx.send(x);
+        }));
+        rx
+    };
+
+    let mut pre_rx = spawn_pre(0);
+    let mut post_rxs: Vec<mpsc::Receiver<(usize, Z)>> = Vec::with_capacity(n);
+    for i in 0..n {
+        let x = pre_rx.recv().expect("pre stage worker died");
+        if i + 1 < n {
+            pre_rx = spawn_pre(i + 1); // overlaps with mid(i) below
+        }
+        let t0 = Instant::now();
+        let y = mid(i, x);
+        rec.record(i, "mid", Proc::Accel, t0, Instant::now());
+        // post(i) overlaps with mid(i+1).
+        let (tx, rx) = mpsc::channel();
+        let post = post.clone();
+        let rec2 = rec.clone();
+        pool.submit(Box::new(move || {
+            let t0 = Instant::now();
+            let z = post(i, y);
+            rec2.record(i, "post", Proc::Cpu, t0, Instant::now());
+            let _ = tx.send((i, z));
+        }));
+        post_rxs.push(rx);
+    }
+    for rx in post_rxs {
+        let (i, z) = rx.recv().expect("post stage worker died");
+        out[i] = Some(z);
+    }
+    (out.into_iter().map(|z| z.unwrap()).collect(), rec.finish())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn pipeline_preserves_order_and_values() {
+        let (out, trace) = run_pipeline(
+            8,
+            |i| i * 10,
+            |_, x| x + 1,
+            |_, y| y * 2,
+        );
+        assert_eq!(out, vec![2, 22, 42, 62, 82, 102, 122, 142]);
+        // 8 frames x 3 stages recorded.
+        assert_eq!(trace.events.len(), 24);
+    }
+
+    #[test]
+    fn empty_pipeline_is_noop() {
+        let (out, trace) = run_pipeline(0, |i| i, |_, x| x, |_, y: usize| y);
+        assert!(out.is_empty());
+        assert!(trace.events.is_empty());
+    }
+
+    #[test]
+    fn cpu_stages_overlap_accelerator() {
+        // CPU stages sleep 2ms, accel stage 4ms: with overlap the span
+        // must be far below the serial sum (8 * (2+4+2) = 64ms).
+        let (out, trace) = run_pipeline(
+            8,
+            |i| {
+                std::thread::sleep(Duration::from_millis(2));
+                i
+            },
+            |_, x| {
+                std::thread::sleep(Duration::from_millis(4));
+                x
+            },
+            |_, y| {
+                std::thread::sleep(Duration::from_millis(2));
+                y
+            },
+        );
+        assert_eq!(out.len(), 8);
+        let serial: f64 = 8.0 * 0.008;
+        assert!(
+            trace.span_s() < serial * 0.85,
+            "span {:.1}ms not overlapped (serial {:.1}ms)",
+            trace.span_s() * 1e3,
+            serial * 1e3
+        );
+        // Most CPU work hides under the accelerator envelope.
+        assert!(
+            trace.overlap_fraction() > 0.5,
+            "overlap {:.2}",
+            trace.overlap_fraction()
+        );
+    }
+
+    #[test]
+    fn trace_renders_ascii() {
+        let (_, trace) = run_pipeline(
+            4,
+            |i| i,
+            |_, x| {
+                std::thread::sleep(Duration::from_millis(1));
+                x
+            },
+            |_, y| y,
+        );
+        let s = trace.render_ascii(64);
+        assert!(s.contains("ACCEL"));
+        assert!(s.contains("CPU"));
+        assert!(s.contains("overlap"));
+    }
+}

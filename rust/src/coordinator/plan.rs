@@ -1,0 +1,250 @@
+//! Execution plans: how one (network, method) pair maps onto the
+//! processors and artifacts — the DESIGN §7 table in code.
+//!
+//! * `cpu-seq` — everything single-threaded on CPU (§4.1 baseline).
+//! * `basic-parallel` — conv on the accelerator in NCHW; pool/LRN on
+//!   CPU threads; FC accelerated for AlexNet only (§6.3).
+//! * `basic-simd` / `advanced-simd-{4,8}` / `mxu` — conv on the
+//!   accelerator in NHWC ("dimension swapping" on CPU idle time, §4.3),
+//!   the rest as above.
+
+use crate::model::manifest::Manifest;
+use crate::model::network::{ConvSpec, Layer, Network, PoolMode};
+use crate::Result;
+
+/// Methods whose conv artifacts take NHWC inputs.
+pub const NHWC_METHODS: [&str; 4] = ["basic-simd", "advanced-simd-4", "advanced-simd-8", "mxu"];
+
+/// Placement + artifact binding for one layer.
+#[derive(Debug, Clone)]
+pub enum LayerPlan {
+    /// Convolution on the accelerator, one frame per dispatch.
+    ConvAccel {
+        name: String,
+        spec: ConvSpec,
+        /// Artifact name (batch=1).
+        artifact: String,
+        /// Inputs/outputs are NHWC; the engine swaps on CPU idle time.
+        nhwc: bool,
+    },
+    /// Convolution on the sequential CPU (baseline plan).
+    ConvCpu { name: String, spec: ConvSpec },
+    /// Pooling on CPU (multithreaded in accelerated plans, §6.3).
+    Pool { name: String, mode: PoolMode, size: usize, stride: usize, relu: bool, parallel: bool },
+    /// LRN on CPU.
+    Lrn { name: String, size: usize, alpha: f64, beta: f64, k: f64, parallel: bool },
+    /// Fully connected on the accelerator (AlexNet).
+    FcAccel {
+        name: String,
+        d_in: usize,
+        d_out: usize,
+        relu: bool,
+        /// Artifact names by batch size (b1 always present, b16 when
+        /// the manifest has one).
+        artifact_b1: String,
+        artifact_b16: Option<String>,
+    },
+    /// Fully connected on the sequential CPU.
+    FcCpu { name: String, relu: bool },
+}
+
+impl LayerPlan {
+    pub fn name(&self) -> &str {
+        match self {
+            LayerPlan::ConvAccel { name, .. }
+            | LayerPlan::ConvCpu { name, .. }
+            | LayerPlan::Pool { name, .. }
+            | LayerPlan::Lrn { name, .. }
+            | LayerPlan::FcAccel { name, .. }
+            | LayerPlan::FcCpu { name, .. } => name,
+        }
+    }
+
+    /// True when the stage dispatches to the accelerator.
+    pub fn on_accel(&self) -> bool {
+        matches!(self, LayerPlan::ConvAccel { .. } | LayerPlan::FcAccel { .. })
+    }
+}
+
+/// A fully-resolved execution plan.
+#[derive(Debug, Clone)]
+pub struct ExecutionPlan {
+    pub net: String,
+    pub method: String,
+    pub layers: Vec<LayerPlan>,
+    /// Whether conv activations live in NHWC between accel layers.
+    pub nhwc: bool,
+}
+
+impl ExecutionPlan {
+    /// Build the plan for `method`, resolving artifacts in `manifest`.
+    /// `method == "cpu-seq"` needs no artifacts.
+    pub fn build(manifest: &Manifest, net: &Network, method: &str) -> Result<ExecutionPlan> {
+        let accel = method != "cpu-seq";
+        let nhwc = NHWC_METHODS.contains(&method);
+        anyhow::ensure!(
+            !accel || manifest.methods.iter().any(|m| m == method),
+            "unknown method {method:?} (manifest has {:?} + cpu-seq)",
+            manifest.methods
+        );
+        let fc_accel = accel && net.name == "alexnet";
+        let specs: std::collections::BTreeMap<String, ConvSpec> =
+            net.conv_specs().into_iter().collect();
+        let params = net.param_shapes();
+
+        let mut layers = Vec::with_capacity(net.layers.len());
+        for layer in &net.layers {
+            let plan = match layer {
+                Layer::Conv { name, .. } => {
+                    let spec = specs[name.as_str()];
+                    if accel {
+                        let meta = manifest
+                            .find_conv(&spec.signature(), method, 1)
+                            .ok_or_else(|| {
+                                anyhow::anyhow!(
+                                    "no conv artifact for {} {method} (run `make artifacts`)",
+                                    spec.signature()
+                                )
+                            })?;
+                        LayerPlan::ConvAccel {
+                            name: name.clone(),
+                            spec,
+                            artifact: meta.name.clone(),
+                            nhwc,
+                        }
+                    } else {
+                        LayerPlan::ConvCpu { name: name.clone(), spec }
+                    }
+                }
+                Layer::Pool { name, mode, size, stride, relu } => LayerPlan::Pool {
+                    name: name.clone(),
+                    mode: *mode,
+                    size: *size,
+                    stride: *stride,
+                    relu: *relu,
+                    parallel: accel,
+                },
+                Layer::Lrn { name, size, alpha, beta, k } => LayerPlan::Lrn {
+                    name: name.clone(),
+                    size: *size,
+                    alpha: *alpha,
+                    beta: *beta,
+                    k: *k,
+                    parallel: accel,
+                },
+                Layer::Fc { name, out, relu } => {
+                    if fc_accel {
+                        let (_, wshape, _) = params
+                            .iter()
+                            .find(|(n, _, _)| n == name)
+                            .ok_or_else(|| anyhow::anyhow!("fc {name} not in params"))?;
+                        let (d_in, d_out) = (wshape[0], wshape[1]);
+                        let b1 = manifest
+                            .find_fc(d_in, d_out, *relu, 1)
+                            .ok_or_else(|| anyhow::anyhow!("no fc artifact {d_in}x{d_out} b1"))?;
+                        let b16 = manifest.find_fc(d_in, d_out, *relu, 16);
+                        LayerPlan::FcAccel {
+                            name: name.clone(),
+                            d_in,
+                            d_out: *out,
+                            relu: *relu,
+                            artifact_b1: b1.name.clone(),
+                            artifact_b16: b16.map(|m| m.name.clone()),
+                        }
+                    } else {
+                        LayerPlan::FcCpu { name: name.clone(), relu: *relu }
+                    }
+                }
+            };
+            layers.push(plan);
+        }
+        Ok(ExecutionPlan { net: net.name.clone(), method: method.to_string(), layers, nhwc })
+    }
+
+    /// Artifact names this plan dispatches (for preloading).
+    pub fn artifacts(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        for l in &self.layers {
+            match l {
+                LayerPlan::ConvAccel { artifact, .. } => out.push(artifact.clone()),
+                LayerPlan::FcAccel { artifact_b1, artifact_b16, .. } => {
+                    out.push(artifact_b1.clone());
+                    if let Some(b16) = artifact_b16 {
+                        out.push(b16.clone());
+                    }
+                }
+                _ => {}
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::{default_dir, Manifest};
+    use crate::model::zoo;
+
+    fn manifest() -> Option<Manifest> {
+        let dir = default_dir();
+        dir.join("manifest.json")
+            .exists()
+            .then(|| Manifest::load(&dir).unwrap())
+    }
+
+    #[test]
+    fn cpu_seq_plan_touches_no_accelerator() {
+        let Some(m) = manifest() else { return };
+        let plan = ExecutionPlan::build(&m, &zoo::alexnet(), "cpu-seq").unwrap();
+        assert!(plan.layers.iter().all(|l| !l.on_accel()));
+        assert!(plan.artifacts().is_empty());
+    }
+
+    #[test]
+    fn simd_plans_are_nhwc_and_resolve_artifacts() {
+        let Some(m) = manifest() else { return };
+        for method in ["basic-simd", "advanced-simd-4", "advanced-simd-8", "mxu"] {
+            let plan = ExecutionPlan::build(&m, &zoo::lenet5(), method).unwrap();
+            assert!(plan.nhwc, "{method} must be NHWC");
+            // LeNet: 2 conv accel layers, fc on CPU (small net, §6.3).
+            assert_eq!(plan.artifacts().len(), 2);
+            assert!(plan
+                .layers
+                .iter()
+                .any(|l| matches!(l, LayerPlan::FcCpu { .. })));
+        }
+    }
+
+    #[test]
+    fn basic_parallel_is_nchw() {
+        let Some(m) = manifest() else { return };
+        let plan = ExecutionPlan::build(&m, &zoo::cifar10(), "basic-parallel").unwrap();
+        assert!(!plan.nhwc);
+        // Pool layers run parallel in accelerated plans.
+        assert!(plan
+            .layers
+            .iter()
+            .any(|l| matches!(l, LayerPlan::Pool { parallel: true, .. })));
+    }
+
+    #[test]
+    fn alexnet_fc_rides_the_accelerator() {
+        let Some(m) = manifest() else { return };
+        let plan = ExecutionPlan::build(&m, &zoo::alexnet(), "basic-simd").unwrap();
+        let fc_accel = plan
+            .layers
+            .iter()
+            .filter(|l| matches!(l, LayerPlan::FcAccel { .. }))
+            .count();
+        assert_eq!(fc_accel, 3, "fc6/fc7/fc8 accelerate");
+        // 5 conv + 3 fc_b1 + 3 fc_b16 artifacts.
+        assert_eq!(plan.artifacts().len(), 11);
+    }
+
+    #[test]
+    fn unknown_method_rejected() {
+        let Some(m) = manifest() else { return };
+        assert!(ExecutionPlan::build(&m, &zoo::lenet5(), "warp-speed").is_err());
+    }
+}

@@ -1,0 +1,114 @@
+//! Request router: maps a network name to one of its engine replicas,
+//! round-robin.  Generic over the handle type so it is testable without
+//! a live engine (the server uses `Arc<Batcher<Request>>` handles).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Round-robin router over named replica groups.
+pub struct Router<H> {
+    groups: BTreeMap<String, (Vec<H>, AtomicUsize)>,
+}
+
+impl<H: Clone> Router<H> {
+    pub fn new() -> Router<H> {
+        Router { groups: BTreeMap::new() }
+    }
+
+    /// Register one replica handle under `name`.
+    pub fn add(&mut self, name: &str, handle: H) {
+        self.groups
+            .entry(name.to_string())
+            .or_insert_with(|| (Vec::new(), AtomicUsize::new(0)))
+            .0
+            .push(handle);
+    }
+
+    /// Names with at least one replica.
+    pub fn names(&self) -> Vec<String> {
+        self.groups.keys().cloned().collect()
+    }
+
+    /// Number of replicas for `name`.
+    pub fn replicas(&self, name: &str) -> usize {
+        self.groups.get(name).map(|(v, _)| v.len()).unwrap_or(0)
+    }
+
+    /// Pick the next replica for `name` (round-robin), or None for an
+    /// unknown name.
+    pub fn route(&self, name: &str) -> Option<H> {
+        let (handles, counter) = self.groups.get(name)?;
+        if handles.is_empty() {
+            return None;
+        }
+        let i = counter.fetch_add(1, Ordering::Relaxed) % handles.len();
+        Some(handles[i].clone())
+    }
+}
+
+impl<H: Clone> Default for Router<H> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_cycles_replicas() {
+        let mut r = Router::new();
+        r.add("lenet5", "a");
+        r.add("lenet5", "b");
+        r.add("lenet5", "c");
+        let picks: Vec<&str> = (0..6).map(|_| r.route("lenet5").unwrap()).collect();
+        assert_eq!(picks, vec!["a", "b", "c", "a", "b", "c"]);
+    }
+
+    #[test]
+    fn unknown_name_is_none() {
+        let r: Router<&str> = Router::new();
+        assert!(r.route("nope").is_none());
+    }
+
+    #[test]
+    fn names_and_replicas() {
+        let mut r = Router::new();
+        r.add("x", 1);
+        r.add("x", 2);
+        r.add("y", 3);
+        assert_eq!(r.names(), vec!["x".to_string(), "y".to_string()]);
+        assert_eq!(r.replicas("x"), 2);
+        assert_eq!(r.replicas("z"), 0);
+    }
+
+    #[test]
+    fn rr_distribution_is_even_under_contention() {
+        use std::sync::atomic::AtomicUsize;
+        use std::sync::Arc;
+        let mut r = Router::new();
+        let counts: Vec<Arc<AtomicUsize>> =
+            (0..4).map(|_| Arc::new(AtomicUsize::new(0))).collect();
+        for c in &counts {
+            r.add("n", Arc::clone(c));
+        }
+        let r = Arc::new(r);
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let r = Arc::clone(&r);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..100 {
+                    r.route("n").unwrap().fetch_add(1, Ordering::Relaxed);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        for c in &counts {
+            let v = c.load(Ordering::Relaxed);
+            assert!((80..=120).contains(&v), "replica load {v} uneven");
+        }
+    }
+}

@@ -1,0 +1,348 @@
+//! TCP JSON-lines serving front end.
+//!
+//! Topology: connection threads parse requests and route them to
+//! per-(network, method) engine worker threads through dynamic
+//! batchers; each worker owns its own `Engine` (the PJRT client is not
+//! `Send`, so engines are thread-local by construction).  Responses
+//! travel back over per-request channels.
+//!
+//! Protocol (one JSON document per line):
+//!
+//! ```text
+//!   -> {"net": "lenet5", "image": [784 floats], "id": 7}
+//!   <- {"id": 7, "label": 3, "logits": [...], "latency_ms": 1.9, "batch": 4}
+//!   -> {"cmd": "ping"}            <- {"ok": true, "nets": ["lenet5", ...]}
+//!   -> {"cmd": "metrics"}         <- {<metrics snapshot>}
+//!   -> anything else              <- {"error": "..."}
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::batcher::{Batcher, BatcherConfig};
+use crate::coordinator::engine::{Engine, EngineConfig};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::router::Router;
+use crate::model::manifest::Manifest;
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use crate::Result;
+
+/// One queued inference request.
+pub struct Request {
+    pub id: Json,
+    pub image: Tensor,
+    pub resp: mpsc::Sender<Json>,
+    pub enqueued: Instant,
+}
+
+type Handle = Arc<Batcher<Request>>;
+
+/// Server deployment description.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Bind address, e.g. "127.0.0.1:0" (0 = ephemeral port).
+    pub addr: String,
+    /// (network, method, replicas) to deploy.
+    pub models: Vec<(String, String, usize)>,
+    pub batcher: BatcherConfig,
+    pub artifacts_dir: PathBuf,
+}
+
+/// A running server; drop or call [`ServerHandle::shutdown`] to stop.
+pub struct ServerHandle {
+    pub addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    batchers: Vec<Handle>,
+    threads: Vec<JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+}
+
+impl ServerHandle {
+    /// Stop accepting, close batchers, join all threads.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        for b in &self.batchers {
+            b.close();
+        }
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Start serving.  Engines are built inside their worker threads; the
+/// call returns once the listener is bound (first-request latency may
+/// include artifact compilation unless engines preload quickly).
+pub fn serve(cfg: ServerConfig) -> Result<ServerHandle> {
+    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let metrics = Arc::new(Metrics::new());
+    let mut router: Router<(String, Handle)> = Router::new();
+    let mut threads = Vec::new();
+    let mut batchers = Vec::new();
+
+    // Engine worker threads.
+    for (net, method, replicas) in &cfg.models {
+        anyhow::ensure!(
+            manifest.networks.contains_key(net),
+            "unknown network {net:?} in server config"
+        );
+        for r in 0..(*replicas).max(1) {
+            let batcher: Handle = Arc::new(Batcher::new(cfg.batcher.clone()));
+            router.add(net, (method.clone(), Arc::clone(&batcher)));
+            batchers.push(Arc::clone(&batcher));
+            let net = net.clone();
+            let method = method.clone();
+            let dir = cfg.artifacts_dir.clone();
+            let metrics = Arc::clone(&metrics);
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("engine-{net}-{method}-{r}"))
+                    .spawn(move || engine_worker(&dir, &net, &method, batcher, metrics))
+                    .expect("spawn engine worker"),
+            );
+        }
+    }
+
+    let listener = TcpListener::bind(&cfg.addr)?;
+    let addr = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+
+    // Acceptor thread.
+    let router = Arc::new(router);
+    let nets: Vec<String> = router.names();
+    let input_dims: std::collections::BTreeMap<String, (usize, usize, usize)> = manifest
+        .networks
+        .iter()
+        .map(|(n, net)| (n.clone(), (net.in_c, net.in_h, net.in_w)))
+        .collect();
+    {
+        let stop = Arc::clone(&stop);
+        let metrics = Arc::clone(&metrics);
+        threads.push(
+            std::thread::Builder::new()
+                .name("acceptor".into())
+                .spawn(move || {
+                    while !stop.load(Ordering::SeqCst) {
+                        match listener.accept() {
+                            Ok((stream, _)) => {
+                                let router = Arc::clone(&router);
+                                let metrics = Arc::clone(&metrics);
+                                let nets = nets.clone();
+                                let dims = input_dims.clone();
+                                // Detached: a connection thread exits when
+                                // its peer closes the socket.  Joining here
+                                // would deadlock shutdown against clients
+                                // that keep their connection open.
+                                std::thread::spawn(move || {
+                                    let _ = handle_conn(stream, &router, &metrics, &nets, &dims);
+                                });
+                            }
+                            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                                std::thread::sleep(Duration::from_millis(2));
+                            }
+                            Err(_) => break,
+                        }
+                    }
+                })
+                .expect("spawn acceptor"),
+        );
+    }
+
+    Ok(ServerHandle { addr, stop, batchers, threads, metrics })
+}
+
+/// Engine worker: owns one Engine, drains its batcher forever.
+fn engine_worker(
+    dir: &std::path::Path,
+    net: &str,
+    method: &str,
+    batcher: Handle,
+    metrics: Arc<Metrics>,
+) {
+    let engine = match Engine::from_artifacts(
+        dir,
+        net,
+        EngineConfig { method: method.to_string(), record_trace: false, preload: true },
+    ) {
+        Ok(e) => e,
+        Err(e) => {
+            // Fail every queued request with the construction error.
+            while let Some(batch) = batcher.next_batch() {
+                for req in batch {
+                    let _ = req.resp.send(Json::obj(vec![
+                        ("id", req.id.clone()),
+                        ("error", Json::str(format!("engine init failed: {e}"))),
+                    ]));
+                }
+            }
+            return;
+        }
+    };
+    while let Some(batch) = batcher.next_batch() {
+        let n = batch.len();
+        let frames: Vec<Tensor> = batch.iter().map(|r| r.image.clone()).collect();
+        let stacked = Tensor::stack(&frames);
+        match engine.infer_batch(&stacked) {
+            Ok(logits) => {
+                let c = logits.dim(1);
+                for (i, req) in batch.into_iter().enumerate() {
+                    let row = &logits.data()[i * c..(i + 1) * c];
+                    let (label, score) = row
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .map(|(idx, &v)| (idx, v))
+                        .unwrap();
+                    let latency = req.enqueued.elapsed();
+                    metrics.record(net, latency, n);
+                    let fields = vec![
+                        ("id", req.id.clone()),
+                        ("label", Json::num(label as f64)),
+                        ("score", Json::num(score as f64)),
+                        ("latency_ms", Json::num(latency.as_secs_f64() * 1e3)),
+                        ("batch", Json::num(n as f64)),
+                        (
+                            "logits",
+                            Json::arr(row.iter().map(|&v| Json::num(v as f64)).collect()),
+                        ),
+                    ];
+                    let _ = req.resp.send(Json::obj(fields));
+                }
+            }
+            Err(e) => {
+                for req in batch {
+                    metrics.record_error(net);
+                    let _ = req.resp.send(Json::obj(vec![
+                        ("id", req.id.clone()),
+                        ("error", Json::str(format!("inference failed: {e}"))),
+                    ]));
+                }
+            }
+        }
+    }
+}
+
+/// Per-connection loop.
+fn handle_conn(
+    stream: TcpStream,
+    router: &Router<(String, Handle)>,
+    metrics: &Metrics,
+    nets: &[String],
+    dims: &std::collections::BTreeMap<String, (usize, usize, usize)>,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match Json::parse(&line) {
+            Ok(req) => dispatch(req, router, metrics, nets, dims),
+            Err(e) => Json::obj(vec![("error", Json::str(format!("bad json: {e}")))]),
+        };
+        writer.write_all(reply.dump().as_bytes())?;
+        writer.write_all(b"\n")?;
+    }
+    Ok(())
+}
+
+fn dispatch(
+    req: Json,
+    router: &Router<(String, Handle)>,
+    metrics: &Metrics,
+    nets: &[String],
+    dims: &std::collections::BTreeMap<String, (usize, usize, usize)>,
+) -> Json {
+    match req.get("cmd").as_str() {
+        Some("ping") => {
+            return Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("nets", Json::arr(nets.iter().map(|n| Json::str(n.clone())).collect())),
+            ]);
+        }
+        Some("metrics") => return metrics.snapshot(),
+        Some(other) => {
+            return Json::obj(vec![("error", Json::str(format!("unknown cmd {other:?}")))]);
+        }
+        None => {}
+    }
+    let Some(net) = req.get("net").as_str() else {
+        return Json::obj(vec![("error", Json::str("missing \"net\""))]);
+    };
+    let Some((c, h, w)) = dims.get(net).copied() else {
+        return Json::obj(vec![("error", Json::str(format!("unknown net {net:?}")))]);
+    };
+    let Some(pixels) = req.get("image").as_arr() else {
+        return Json::obj(vec![("error", Json::str("missing \"image\""))]);
+    };
+    if pixels.len() != c * h * w {
+        return Json::obj(vec![(
+            "error",
+            Json::str(format!("image has {} values, {net} wants {}", pixels.len(), c * h * w)),
+        )]);
+    }
+    let data: Vec<f32> = pixels.iter().map(|v| v.as_f64().unwrap_or(0.0) as f32).collect();
+    let image = Tensor::new(vec![1, c, h, w], data);
+    let Some((_method, handle)) = router.route(net) else {
+        return Json::obj(vec![("error", Json::str(format!("no engine for {net:?}")))]);
+    };
+    let (tx, rx) = mpsc::channel();
+    let pushed = handle.push(Request {
+        id: req.get("id").clone(),
+        image,
+        resp: tx,
+        enqueued: Instant::now(),
+    });
+    if !pushed {
+        return Json::obj(vec![("error", Json::str("server shutting down"))]);
+    }
+    match rx.recv_timeout(Duration::from_secs(120)) {
+        Ok(resp) => resp,
+        Err(_) => Json::obj(vec![("error", Json::str("engine timeout"))]),
+    }
+}
+
+/// Minimal blocking client for tests and examples: send one JSON line,
+/// read one JSON line.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: SocketAddr) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        Ok(Client { writer: stream.try_clone()?, reader: BufReader::new(stream) })
+    }
+
+    pub fn call(&mut self, req: &Json) -> Result<Json> {
+        self.writer.write_all(req.dump().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Json::parse(&line).map_err(|e| anyhow::anyhow!("bad server reply: {e}"))
+    }
+
+    /// Classify one NCHW frame (shape (1,c,h,w)).
+    pub fn classify(&mut self, net: &str, image: &Tensor, id: u64) -> Result<Json> {
+        let req = Json::obj(vec![
+            ("net", Json::str(net)),
+            ("id", Json::num(id as f64)),
+            (
+                "image",
+                Json::arr(image.data().iter().map(|&v| Json::num(v as f64)).collect()),
+            ),
+        ]);
+        self.call(&req)
+    }
+}

@@ -1,0 +1,136 @@
+//! Whole-network CPU-sequential forward path — the paper's "CPU-only
+//! sequential CNN" (§4.1), used as (a) the measured baseline of
+//! Tables 3/4 and (b) the numeric reference the accelerated engine is
+//! validated against (`cpu_vs_xla` integration test).
+
+use crate::model::network::{ConvSpec, Layer, Network};
+use crate::model::weights::Params;
+use crate::tensor::Tensor;
+use crate::Result;
+
+use super::seq;
+
+/// Run the full forward path single-threaded.  `x` is (N, C, H, W);
+/// returns logits (N, classes).
+pub fn forward_seq(net: &Network, params: &Params, x: &Tensor) -> Result<Tensor> {
+    anyhow::ensure!(
+        x.shape()[1..] == [net.in_c, net.in_h, net.in_w],
+        "input shape {:?} does not match {} ({},{},{})",
+        x.shape(),
+        net.name,
+        net.in_c,
+        net.in_h,
+        net.in_w
+    );
+    let mut h = x.clone();
+    let (mut cc, mut ch, mut cw) = (net.in_c, net.in_h, net.in_w);
+    for layer in &net.layers {
+        match layer {
+            Layer::Conv { name, nk, kh, kw, stride, pad, relu } => {
+                let (w, b) = params
+                    .get(name)
+                    .ok_or_else(|| anyhow::anyhow!("missing params for {name}"))?;
+                let spec = ConvSpec {
+                    in_c: cc, in_h: ch, in_w: cw,
+                    nk: *nk, kh: *kh, kw: *kw,
+                    stride: *stride, pad: *pad, relu: *relu,
+                };
+                h = seq::conv_nchw(&h, w, b, &spec);
+                cc = *nk;
+                ch = spec.out_h();
+                cw = spec.out_w();
+            }
+            Layer::Pool { mode, size, stride, relu, .. } => {
+                h = match mode {
+                    crate::model::network::PoolMode::Max => seq::maxpool_nchw(&h, *size, *stride),
+                    crate::model::network::PoolMode::Avg => seq::avgpool_nchw(&h, *size, *stride),
+                };
+                if *relu {
+                    h.relu_inplace();
+                }
+                ch = h.dim(2);
+                cw = h.dim(3);
+            }
+            Layer::Lrn { size, alpha, beta, k, .. } => {
+                h = seq::lrn_nchw(&h, *size, *alpha, *beta, *k);
+            }
+            Layer::Fc { name, out, relu } => {
+                let (w, b) = params
+                    .get(name)
+                    .ok_or_else(|| anyhow::anyhow!("missing params for {name}"))?;
+                if h.shape().len() == 4 {
+                    let n = h.dim(0);
+                    h = h.reshape(vec![n, cc * ch * cw]);
+                }
+                h = seq::fc(&h, w, b, *relu);
+                cc = *out;
+                ch = 1;
+                cw = 1;
+            }
+        }
+    }
+    Ok(h)
+}
+
+/// Classify a batch: argmax of the logits per frame.
+pub fn classify(net: &Network, params: &Params, x: &Tensor) -> Result<Vec<usize>> {
+    let logits = forward_seq(net, params, x)?;
+    let classes = net.classes;
+    Ok((0..logits.dim(0))
+        .map(|i| {
+            let row = &logits.data()[i * classes..(i + 1) * classes];
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(idx, _)| idx)
+                .unwrap_or(0)
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::fixtures;
+    use crate::model::manifest::{default_dir, Manifest};
+    use crate::model::weights::load_weights;
+    use crate::model::zoo;
+
+    #[test]
+    fn lenet_classifies_fixture_digits() {
+        let dir = default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        let net = zoo::lenet5();
+        let params = load_weights(&m, &net).unwrap();
+        let (images, labels) = fixtures::load_digit_test_set(&dir).unwrap();
+        // 32 frames keep the test fast; the trained model is ~100% on
+        // this distribution so >90% over 32 is a safe bar.
+        let n = 32.min(images.dim(0));
+        let subset = Tensor::stack(&(0..n).map(|i| images.frame(i)).collect::<Vec<_>>());
+        let preds = classify(&net, &params, &subset).unwrap();
+        let correct = preds
+            .iter()
+            .zip(&labels[..n])
+            .filter(|(p, l)| **p == **l as usize)
+            .count();
+        assert!(correct * 10 >= n * 9, "only {correct}/{n} fixture digits correct");
+    }
+
+    #[test]
+    fn rejects_wrong_input_shape() {
+        let dir = default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        let net = zoo::lenet5();
+        let params = load_weights(&m, &net).unwrap();
+        let bad = Tensor::zeros(vec![1, 3, 28, 28]);
+        assert!(forward_seq(&net, &params, &bad).is_err());
+    }
+}

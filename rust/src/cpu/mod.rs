@@ -1,0 +1,17 @@
+//! CPU substrate: the paper's CPU-only sequential baseline (§4.1) and
+//! the multi-threaded CPU layers (§6.3 — pooling and LRN are "unsuitable
+//! for GPU-based acceleration" and run on CPU threads instead).
+//!
+//! * [`seq`] — single-thread implementations of every layer, the
+//!   baseline Tables 3/4 measure speedups against.
+//! * [`par`] — thread-pool versions of pooling / LRN / ReLU used by the
+//!   accelerated execution plans.
+//! * [`forward`] — whole-network CPU-sequential forward path (the
+//!   "CPU-only sequential CNN" engine) and the shared reference used to
+//!   validate the accelerated engine's numerics.
+
+pub mod forward;
+pub mod par;
+pub mod seq;
+
+pub use forward::forward_seq;

@@ -1,0 +1,333 @@
+//! Single-thread CPU layers — the paper's §4.1 baseline.  "The entire
+//! convolution layer is executed as a single thread on CPU.  For every
+//! input frame, all kernels sweep the frame while getting convoluted
+//! with the frame."  Loop order matches the paper's basic method: frame,
+//! kernel, output row, output col, then channel/kh/kw with width
+//! innermost.  Numerics must agree with the JAX reference (`ref.py`);
+//! the `cpu_vs_xla` integration test pins them together.
+
+use crate::model::network::{pool_out, ConvSpec};
+use crate::tensor::Tensor;
+
+/// Sequential convolution.  x: (N,C,H,W), w: (NK,C,KH,KW), b: (NK,) ->
+/// (N,NK,OH,OW), zero padding, optional fused ReLU.
+pub fn conv_nchw(x: &Tensor, w: &Tensor, b: &Tensor, spec: &ConvSpec) -> Tensor {
+    let n = x.dim(0);
+    let (c, h, ww) = (spec.in_c, spec.in_h, spec.in_w);
+    assert_eq!(x.shape(), &[n, c, h, ww], "conv input shape");
+    assert_eq!(w.shape(), &[spec.nk, c, spec.kh, spec.kw], "conv weight shape");
+    let (oh, ow) = (spec.out_h(), spec.out_w());
+    let mut out = Tensor::zeros(vec![n, spec.nk, oh, ow]);
+    let xd = x.data();
+    let wd = w.data();
+    let bd = b.data();
+    let od = out.data_mut();
+    let pad = spec.pad as isize;
+    for ni in 0..n {
+        for k in 0..spec.nk {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = bd[k];
+                    let iy0 = (oy * spec.stride) as isize - pad;
+                    let ix0 = (ox * spec.stride) as isize - pad;
+                    for ci in 0..c {
+                        for ky in 0..spec.kh {
+                            let iy = iy0 + ky as isize;
+                            if iy < 0 || iy >= h as isize {
+                                continue;
+                            }
+                            let xrow = ((ni * c + ci) * h + iy as usize) * ww;
+                            let wrow = ((k * c + ci) * spec.kh + ky) * spec.kw;
+                            for kx in 0..spec.kw {
+                                let ix = ix0 + kx as isize;
+                                if ix < 0 || ix >= ww as isize {
+                                    continue;
+                                }
+                                acc += xd[xrow + ix as usize] * wd[wrow + kx];
+                            }
+                        }
+                    }
+                    if spec.relu && acc < 0.0 {
+                        acc = 0.0;
+                    }
+                    od[((ni * spec.nk + k) * oh + oy) * ow + ox] = acc;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Sequential fully connected layer.  x: (N,In), w: (In,Out), b: (Out,).
+pub fn fc(x: &Tensor, w: &Tensor, b: &Tensor, relu: bool) -> Tensor {
+    let (n, d_in) = (x.dim(0), x.dim(1));
+    assert_eq!(w.dim(0), d_in, "fc weight shape");
+    let d_out = w.dim(1);
+    let mut out = Tensor::zeros(vec![n, d_out]);
+    let xd = x.data();
+    let wd = w.data();
+    let od = out.data_mut();
+    for ni in 0..n {
+        let xrow = &xd[ni * d_in..(ni + 1) * d_in];
+        let orow = &mut od[ni * d_out..(ni + 1) * d_out];
+        orow.copy_from_slice(b.data());
+        for (i, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue; // post-ReLU activations are sparse
+            }
+            let wrow = &wd[i * d_out..(i + 1) * d_out];
+            for (o, &wv) in wrow.iter().enumerate() {
+                orow[o] += xv * wv;
+            }
+        }
+        if relu {
+            for v in orow.iter_mut() {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Max pooling, Caffe ceil semantics (window clipped at the edges).
+pub fn maxpool_nchw(x: &Tensor, size: usize, stride: usize) -> Tensor {
+    pool_impl(x, size, stride, true)
+}
+
+/// Average pooling, Caffe ceil semantics; the divisor is the FULL
+/// window area (out-of-bounds pixels contribute zero) to match the
+/// kernel/reference contract.
+pub fn avgpool_nchw(x: &Tensor, size: usize, stride: usize) -> Tensor {
+    pool_impl(x, size, stride, false)
+}
+
+fn pool_impl(x: &Tensor, size: usize, stride: usize, is_max: bool) -> Tensor {
+    let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let (oh, ow) = (pool_out(h, size, stride), pool_out(w, size, stride));
+    let mut out = Tensor::zeros(vec![n, c, oh, ow]);
+    let xd = x.data();
+    let od = out.data_mut();
+    for ni in 0..n {
+        for ci in 0..c {
+            let plane = (ni * c + ci) * h * w;
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let y0 = oy * stride;
+                    let x0 = ox * stride;
+                    let y1 = (y0 + size).min(h);
+                    let x1 = (x0 + size).min(w);
+                    let v = if is_max {
+                        let mut m = f32::NEG_INFINITY;
+                        for yy in y0..y1 {
+                            for xx in x0..x1 {
+                                m = m.max(xd[plane + yy * w + xx]);
+                            }
+                        }
+                        m
+                    } else {
+                        let mut s = 0.0f32;
+                        for yy in y0..y1 {
+                            for xx in x0..x1 {
+                                s += xd[plane + yy * w + xx];
+                            }
+                        }
+                        s / (size * size) as f32
+                    };
+                    od[((ni * c + ci) * oh + oy) * ow + ox] = v;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Caffe-style cross-channel local response normalization:
+/// `out[c] = x[c] / (k + alpha/size * sum_{c' in window} x[c']^2)^beta`.
+pub fn lrn_nchw(x: &Tensor, size: usize, alpha: f64, beta: f64, k: f64) -> Tensor {
+    let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let half = size / 2;
+    let mut out = Tensor::zeros(vec![n, c, h, w]);
+    let xd = x.data();
+    let od = out.data_mut();
+    let scale = alpha / size as f64;
+    for ni in 0..n {
+        for ci in 0..c {
+            let lo = ci.saturating_sub(half);
+            let hi = (ci + half + 1).min(c);
+            for yi in 0..h {
+                for xi in 0..w {
+                    let pix = yi * w + xi;
+                    let mut acc = 0.0f64;
+                    for cj in lo..hi {
+                        let v = xd[(ni * c + cj) * h * w + pix] as f64;
+                        acc += v * v;
+                    }
+                    let denom = (k + scale * acc).powf(beta);
+                    let idx = (ni * c + ci) * h * w + pix;
+                    od[idx] = (xd[idx] as f64 / denom) as f32;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Out-of-place ReLU.
+pub fn relu(x: &Tensor) -> Tensor {
+    let mut out = x.clone();
+    out.relu_inplace();
+    out
+}
+
+/// Numerically-stable softmax over the last axis of a (N, D) tensor.
+pub fn softmax(x: &Tensor) -> Tensor {
+    let (n, d) = (x.dim(0), x.dim(1));
+    let mut out = Tensor::zeros(vec![n, d]);
+    let xd = x.data();
+    let od = out.data_mut();
+    for ni in 0..n {
+        let row = &xd[ni * d..(ni + 1) * d];
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        let orow = &mut od[ni * d..(ni + 1) * d];
+        for (o, &v) in orow.iter_mut().zip(row) {
+            *o = (v - m).exp();
+            sum += *o;
+        }
+        for o in orow.iter_mut() {
+            *o /= sum;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn random(shape: Vec<usize>, seed: u64) -> Tensor {
+        let n = shape.iter().product();
+        let mut rng = Pcg::seeded(seed);
+        Tensor::new(shape, rng.normal_vec(n, 1.0))
+    }
+
+    #[test]
+    fn conv_identity_kernel() {
+        // 1x1 kernel of weight 1 with zero bias is the identity.
+        let x = random(vec![1, 1, 4, 4], 1);
+        let w = Tensor::new(vec![1, 1, 1, 1], vec![1.0]);
+        let b = Tensor::new(vec![1], vec![0.0]);
+        let spec = ConvSpec {
+            in_c: 1, in_h: 4, in_w: 4, nk: 1, kh: 1, kw: 1,
+            stride: 1, pad: 0, relu: false,
+        };
+        let y = conv_nchw(&x, &w, &b, &spec);
+        assert_eq!(y.data(), x.data());
+    }
+
+    #[test]
+    fn conv_known_values() {
+        // 2x2 input, 2x2 kernel, no pad: single output = dot product.
+        let x = Tensor::new(vec![1, 1, 2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let w = Tensor::new(vec![1, 1, 2, 2], vec![10.0, 20.0, 30.0, 40.0]);
+        let b = Tensor::new(vec![1], vec![5.0]);
+        let spec = ConvSpec {
+            in_c: 1, in_h: 2, in_w: 2, nk: 1, kh: 2, kw: 2,
+            stride: 1, pad: 0, relu: false,
+        };
+        let y = conv_nchw(&x, &w, &b, &spec);
+        assert_eq!(y.shape(), &[1, 1, 1, 1]);
+        assert_eq!(y.data()[0], 1.0 * 10.0 + 2.0 * 20.0 + 3.0 * 30.0 + 4.0 * 40.0 + 5.0);
+    }
+
+    #[test]
+    fn conv_padding_and_stride() {
+        // 3x3 input, 3x3 kernel of ones, pad 1, stride 2 -> 2x2 output of
+        // partial sums.
+        let x = Tensor::new(vec![1, 1, 3, 3], (1..=9).map(|v| v as f32).collect());
+        let w = Tensor::new(vec![1, 1, 3, 3], vec![1.0; 9]);
+        let b = Tensor::new(vec![1], vec![0.0]);
+        let spec = ConvSpec {
+            in_c: 1, in_h: 3, in_w: 3, nk: 1, kh: 3, kw: 3,
+            stride: 2, pad: 1, relu: false,
+        };
+        let y = conv_nchw(&x, &w, &b, &spec);
+        assert_eq!(y.shape(), &[1, 1, 2, 2]);
+        // Top-left window covers rows 0-1 cols 0-1 => 1+2+4+5 = 12.
+        assert_eq!(y.data(), &[12.0, 16.0, 24.0, 28.0]);
+    }
+
+    #[test]
+    fn conv_relu_clamps() {
+        let x = Tensor::new(vec![1, 1, 1, 1], vec![1.0]);
+        let w = Tensor::new(vec![1, 1, 1, 1], vec![-2.0]);
+        let b = Tensor::new(vec![1], vec![0.5]);
+        let spec = ConvSpec {
+            in_c: 1, in_h: 1, in_w: 1, nk: 1, kh: 1, kw: 1,
+            stride: 1, pad: 0, relu: true,
+        };
+        assert_eq!(conv_nchw(&x, &w, &b, &spec).data(), &[0.0]);
+    }
+
+    #[test]
+    fn fc_known_values() {
+        let x = Tensor::new(vec![1, 2], vec![1.0, 2.0]);
+        let w = Tensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let b = Tensor::new(vec![3], vec![0.1, 0.2, 0.3]);
+        let y = fc(&x, &w, &b, false);
+        assert_eq!(y.data(), &[9.1, 12.2, 15.3]);
+        let yr = fc(&x, &w, &Tensor::new(vec![3], vec![-100.0, 0.2, 0.3]), true);
+        assert_eq!(yr.data()[0], 0.0);
+    }
+
+    #[test]
+    fn maxpool_ceil_mode() {
+        // 3x3 input, size 2, stride 2 -> ceil((3-2)/2)+1 = 2 outputs; the
+        // last window is clipped to one column/row.
+        let x = Tensor::new(vec![1, 1, 3, 3], (1..=9).map(|v| v as f32).collect());
+        let y = maxpool_nchw(&x, 2, 2);
+        assert_eq!(y.shape(), &[1, 1, 2, 2]);
+        assert_eq!(y.data(), &[5.0, 6.0, 8.0, 9.0]);
+    }
+
+    #[test]
+    fn avgpool_full_window_divisor() {
+        // Same geometry: edge windows divide by 4 even though clipped.
+        let x = Tensor::new(vec![1, 1, 3, 3], (1..=9).map(|v| v as f32).collect());
+        let y = avgpool_nchw(&x, 2, 2);
+        assert_eq!(y.data()[0], (1.0 + 2.0 + 4.0 + 5.0) / 4.0);
+        assert_eq!(y.data()[1], (3.0 + 6.0) / 4.0); // clipped window
+        assert_eq!(y.data()[3], 9.0 / 4.0);
+    }
+
+    #[test]
+    fn lrn_single_channel_formula() {
+        let x = Tensor::new(vec![1, 1, 1, 1], vec![2.0]);
+        let y = lrn_nchw(&x, 5, 1e-4, 0.75, 1.0);
+        let want = 2.0 / (1.0f64 + (1e-4 / 5.0) * 4.0).powf(0.75) as f32;
+        assert!((y.data()[0] - want).abs() < 1e-6);
+    }
+
+    #[test]
+    fn lrn_window_spans_neighbors() {
+        // With k=0, alpha=size, beta=1: out[c] = x[c] / sum window x^2.
+        let x = Tensor::new(vec![1, 3, 1, 1], vec![1.0, 2.0, 3.0]);
+        let y = lrn_nchw(&x, 3, 3.0, 1.0, 0.0);
+        assert!((y.data()[0] - 1.0 / 5.0).abs() < 1e-6); // 1+4
+        assert!((y.data()[1] - 2.0 / 14.0).abs() < 1e-6); // 1+4+9
+        assert!((y.data()[2] - 3.0 / 13.0).abs() < 1e-6); // 4+9
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let x = random(vec![3, 7], 5);
+        let y = softmax(&x);
+        for ni in 0..3 {
+            let s: f32 = y.data()[ni * 7..(ni + 1) * 7].iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,121 @@
+//! Loaders for the cross-language fixtures exported by
+//! `python/compile/aot.py` (`artifacts/fixtures/`): deterministic digit
+//! renders that pin the Rust generator to the Python one, and a labelled
+//! noisy test set for end-to-end accuracy checks.
+
+use std::fs;
+use std::path::Path;
+
+use crate::tensor::Tensor;
+use crate::Result;
+
+/// One deterministic digit render exported from Python.
+#[derive(Debug, Clone)]
+pub struct DigitRender {
+    pub label: usize,
+    pub dx: f64,
+    pub dy: f64,
+    pub scale: f64,
+    /// (1, 1, 28, 28) image as rendered by the Python generator.
+    pub image: Tensor,
+}
+
+/// Read little-endian f32s from a byte slice.
+fn f32s(bytes: &[u8]) -> Vec<f32> {
+    bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+/// Load `fixtures/digits_param.bin`: records of (label, dx, dy, scale)
+/// as f32 followed by a 28x28 f32 image.
+pub fn load_digit_renders(dir: &Path) -> Result<Vec<DigitRender>> {
+    let raw = fs::read(dir.join("fixtures/digits_param.bin"))?;
+    let vals = f32s(&raw);
+    let rec = 4 + 28 * 28;
+    anyhow::ensure!(
+        vals.len() % rec == 0,
+        "digits_param.bin length {} not a multiple of record size {rec}",
+        vals.len()
+    );
+    let mut out = Vec::new();
+    for chunk in vals.chunks_exact(rec) {
+        out.push(DigitRender {
+            label: chunk[0] as usize,
+            dx: chunk[1] as f64,
+            dy: chunk[2] as f64,
+            scale: chunk[3] as f64,
+            image: Tensor::new(vec![1, 1, 28, 28], chunk[4..].to_vec()),
+        });
+    }
+    Ok(out)
+}
+
+/// Load `fixtures/digits_test.bin`: i32 count, i32 labels, then
+/// (n, 1, 28, 28) f32 images.  This is the exact test set the Python
+/// trainer measured its accuracy on.
+pub fn load_digit_test_set(dir: &Path) -> Result<(Tensor, Vec<u8>)> {
+    let raw = fs::read(dir.join("fixtures/digits_test.bin"))?;
+    anyhow::ensure!(raw.len() >= 4, "digits_test.bin truncated");
+    let n = i32::from_le_bytes([raw[0], raw[1], raw[2], raw[3]]) as usize;
+    let labels_end = 4 + 4 * n;
+    let labels: Vec<u8> = raw[4..labels_end]
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]) as u8)
+        .collect();
+    let images = f32s(&raw[labels_end..]);
+    anyhow::ensure!(
+        images.len() == n * 28 * 28,
+        "digits_test.bin image payload {} != {}",
+        images.len(),
+        n * 28 * 28
+    );
+    Ok((Tensor::new(vec![n, 1, 28, 28], images), labels))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        p.join("fixtures/digits_param.bin").exists().then_some(p)
+    }
+
+    #[test]
+    fn rust_renderer_matches_python_fixtures() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let renders = load_digit_renders(&dir).unwrap();
+        assert!(renders.len() >= 5);
+        for r in &renders {
+            let ours = synth::render_digit(r.label, r.dx, r.dy, r.scale);
+            let diff = ours.max_abs_diff(&r.image);
+            assert!(
+                diff < 1e-6,
+                "digit {} (dx={}, dy={}, scale={}) differs from python by {diff}",
+                r.label,
+                r.dx,
+                r.dy,
+                r.scale
+            );
+        }
+    }
+
+    #[test]
+    fn test_set_loads_and_is_labelled() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let (images, labels) = load_digit_test_set(&dir).unwrap();
+        assert_eq!(images.dim(0), labels.len());
+        assert!(labels.iter().all(|&l| l < 10));
+        assert!(images.data().iter().all(|&x| (0.0..=1.0).contains(&x)));
+    }
+}

@@ -1,0 +1,160 @@
+//! Minimal PGM (P5) / PPM (P6) codecs — the image IO substrate for the
+//! serving examples (the paper's engine consumes camera frames; ours
+//! consumes portable anymap files and synthetic renders).
+
+use std::fs;
+use std::io::Write as _;
+use std::path::Path;
+
+use crate::tensor::Tensor;
+use crate::Result;
+
+/// Write a single-channel tensor (1,1,H,W) or (H,W) as binary PGM,
+/// mapping [0,1] to [0,255].
+pub fn write_pgm(path: &Path, img: &Tensor) -> Result<()> {
+    let (h, w) = hw_of(img)?;
+    let mut out = Vec::with_capacity(h * w + 32);
+    write!(out, "P5\n{w} {h}\n255\n")?;
+    out.extend(img.data().iter().map(|&v| to_byte(v)));
+    fs::write(path, out)?;
+    Ok(())
+}
+
+/// Write a three-channel tensor (1,3,H,W) as binary PPM (CHW -> RGB
+/// interleave), mapping [0,1] to [0,255].
+pub fn write_ppm(path: &Path, img: &Tensor) -> Result<()> {
+    let s = img.shape();
+    anyhow::ensure!(
+        s.len() == 4 && s[0] == 1 && s[1] == 3,
+        "write_ppm wants (1,3,H,W), got {s:?}"
+    );
+    let (h, w) = (s[2], s[3]);
+    let d = img.data();
+    let mut out = Vec::with_capacity(3 * h * w + 32);
+    write!(out, "P6\n{w} {h}\n255\n")?;
+    for i in 0..h * w {
+        for c in 0..3 {
+            out.push(to_byte(d[c * h * w + i]));
+        }
+    }
+    fs::write(path, out)?;
+    Ok(())
+}
+
+/// Read a binary PGM (P5) or PPM (P6) into (1,C,H,W) in [0,1].
+pub fn read_anymap(path: &Path) -> Result<Tensor> {
+    let raw = fs::read(path)?;
+    let mut pos = 0usize;
+    let magic = token(&raw, &mut pos)?;
+    let channels = match magic.as_str() {
+        "P5" => 1,
+        "P6" => 3,
+        other => anyhow::bail!("unsupported anymap magic {other:?}"),
+    };
+    let w: usize = token(&raw, &mut pos)?.parse()?;
+    let h: usize = token(&raw, &mut pos)?.parse()?;
+    let maxval: f32 = token(&raw, &mut pos)?.parse()?;
+    anyhow::ensure!(maxval > 0.0 && maxval <= 255.0, "16-bit anymaps unsupported");
+    let need = w * h * channels;
+    anyhow::ensure!(raw.len() - pos >= need, "anymap payload truncated");
+    let pix = &raw[pos..pos + need];
+    let mut data = vec![0.0f32; need];
+    // Interleaved -> planar CHW.
+    for i in 0..h * w {
+        for c in 0..channels {
+            data[c * h * w + i] = pix[i * channels + c] as f32 / maxval;
+        }
+    }
+    Ok(Tensor::new(vec![1, channels, h, w], data))
+}
+
+fn to_byte(v: f32) -> u8 {
+    (v.clamp(0.0, 1.0) * 255.0).round() as u8
+}
+
+fn hw_of(img: &Tensor) -> Result<(usize, usize)> {
+    let s = img.shape();
+    match s.len() {
+        2 => Ok((s[0], s[1])),
+        4 if s[0] == 1 && s[1] == 1 => Ok((s[2], s[3])),
+        _ => anyhow::bail!("write_pgm wants (H,W) or (1,1,H,W), got {s:?}"),
+    }
+}
+
+/// Skip whitespace and `#` comments, then read one ASCII token.
+fn token(raw: &[u8], pos: &mut usize) -> Result<String> {
+    loop {
+        while *pos < raw.len() && raw[*pos].is_ascii_whitespace() {
+            *pos += 1;
+        }
+        if *pos < raw.len() && raw[*pos] == b'#' {
+            while *pos < raw.len() && raw[*pos] != b'\n' {
+                *pos += 1;
+            }
+            continue;
+        }
+        break;
+    }
+    let start = *pos;
+    while *pos < raw.len() && !raw[*pos].is_ascii_whitespace() {
+        *pos += 1;
+    }
+    anyhow::ensure!(*pos > start, "anymap header truncated");
+    let tok = std::str::from_utf8(&raw[start..*pos])?.to_string();
+    *pos += 1; // single whitespace after header fields / maxval
+    Ok(tok)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::render_digit;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("cnndroid-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn pgm_roundtrip() {
+        let img = render_digit(5, 0.0, 0.0, 1.0);
+        let path = tmpfile("digit5.pgm");
+        write_pgm(&path, &img).unwrap();
+        let back = read_anymap(&path).unwrap();
+        assert_eq!(back.shape(), &[1, 1, 28, 28]);
+        // Quantization to 8-bit: within 1/255 of the original.
+        assert!(img.max_abs_diff(&back) <= 1.0 / 255.0 + 1e-6);
+    }
+
+    #[test]
+    fn ppm_roundtrip() {
+        let mut img = Tensor::zeros(vec![1, 3, 4, 6]);
+        for (i, v) in img.data_mut().iter_mut().enumerate() {
+            *v = (i % 17) as f32 / 16.0;
+        }
+        let path = tmpfile("tiny.ppm");
+        write_ppm(&path, &img).unwrap();
+        let back = read_anymap(&path).unwrap();
+        assert_eq!(back.shape(), &[1, 3, 4, 6]);
+        assert!(img.max_abs_diff(&back) <= 1.0 / 255.0 + 1e-6);
+    }
+
+    #[test]
+    fn reads_comments_in_header() {
+        let path = tmpfile("comment.pgm");
+        let mut bytes = b"P5\n# a comment\n2 2\n255\n".to_vec();
+        bytes.extend_from_slice(&[0, 128, 255, 64]);
+        std::fs::write(&path, bytes).unwrap();
+        let t = read_anymap(&path).unwrap();
+        assert_eq!(t.shape(), &[1, 1, 2, 2]);
+        assert!((t.data()[2] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = tmpfile("bad.pgm");
+        std::fs::write(&path, b"P7\n1 1\n255\n\x00").unwrap();
+        assert!(read_anymap(&path).is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! Data substrate: the procedural digit corpus (MNIST substitute, DESIGN
+//! §2), seeded random frame generators for CIFAR/ImageNet-shaped
+//! workloads, PGM/PPM image IO, and loaders for the cross-language
+//! fixtures written by `python/compile/aot.py`.
+
+pub mod fixtures;
+pub mod image;
+pub mod synth;
+pub mod workload;
+
+pub use fixtures::{load_digit_renders, load_digit_test_set, DigitRender};
+pub use synth::{make_dataset, random_frames, render_digit, DIGIT_SIZE};
+pub use workload::{generate_trace, trace_stats, Arrivals};

@@ -1,0 +1,213 @@
+//! Procedural digit renderer — a bit-for-bit mirror of
+//! `python/compile/digits.py` (its deterministic core), plus seeded
+//! dataset/frame generators for workload synthesis.
+//!
+//! Digits 0-9 are rasterized from seven-segment stroke skeletons: pixel
+//! intensity is the max over segments of a Gaussian falloff from the
+//! point-to-segment distance.  The Python generator trains LeNet-5 at
+//! build time; this Rust generator produces the images the serving
+//! examples feed it.  `tests` in this module pin the two implementations
+//! together through `artifacts/fixtures/digits_param.bin`.
+
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg;
+
+/// Canvas side length in pixels (matches digits.SIZE).
+pub const DIGIT_SIZE: usize = 28;
+
+/// Gaussian stroke width in pixels (matches digits.STROKE_SIGMA).
+const STROKE_SIGMA: f64 = 1.3;
+
+/// Seven-segment endpoints on the unit box (x right, y down):
+/// indices: 0 top, 1 upper-right, 2 lower-right, 3 bottom, 4 lower-left,
+/// 5 upper-left, 6 middle.
+const SEGS: [((f64, f64), (f64, f64)); 7] = [
+    ((0.2, 0.1), (0.8, 0.1)),
+    ((0.8, 0.1), (0.8, 0.5)),
+    ((0.8, 0.5), (0.8, 0.9)),
+    ((0.2, 0.9), (0.8, 0.9)),
+    ((0.2, 0.5), (0.2, 0.9)),
+    ((0.2, 0.1), (0.2, 0.5)),
+    ((0.2, 0.5), (0.8, 0.5)),
+];
+
+/// Which segments compose each digit.
+const DIGIT_SEGS: [&[usize]; 10] = [
+    &[0, 1, 2, 3, 4, 5],
+    &[1, 2],
+    &[0, 1, 6, 4, 3],
+    &[0, 1, 6, 2, 3],
+    &[5, 6, 1, 2],
+    &[0, 5, 6, 2, 3],
+    &[0, 5, 6, 2, 3, 4],
+    &[0, 1, 2],
+    &[0, 1, 2, 3, 4, 5, 6],
+    &[0, 1, 2, 3, 5, 6],
+];
+
+/// Distance from point (px, py) to segment a-b (pixel units).
+fn seg_distance(px: f64, py: f64, a: (f64, f64), b: (f64, f64)) -> f64 {
+    let (ax, ay) = a;
+    let (bx, by) = b;
+    let (dx, dy) = (bx - ax, by - ay);
+    let len2 = dx * dx + dy * dy;
+    if len2 == 0.0 {
+        return (px - ax).hypot(py - ay);
+    }
+    let t = (((px - ax) * dx + (py - ay) * dy) / len2).clamp(0.0, 1.0);
+    (px - (ax + t * dx)).hypot(py - (ay + t * dy))
+}
+
+/// Rasterize one digit: (1, 1, 28, 28) f32 in [0, 1].
+///
+/// The deterministic output (given dx/dy/scale, no noise) matches the
+/// Python renderer to f32 round-off; the fixture test asserts equality.
+pub fn render_digit(label: usize, dx: f64, dy: f64, scale: f64) -> Tensor {
+    render_digit_noisy(label, dx, dy, scale, None)
+}
+
+/// Rasterize with optional additive noise (pre-generated, row-major).
+pub fn render_digit_noisy(
+    label: usize,
+    dx: f64,
+    dy: f64,
+    scale: f64,
+    noise: Option<&[f64]>,
+) -> Tensor {
+    assert!(label < 10, "digit label out of range: {label}");
+    let n = DIGIT_SIZE;
+    let c = n as f64 / 2.0;
+    let mut img = vec![0.0f64; n * n];
+    for &seg in DIGIT_SEGS[label] {
+        let ((x0, y0), (x1, y1)) = SEGS[seg];
+        // Unit box -> pixel coords with jitter: scale about the center.
+        let a = (c + (x0 * n as f64 - c) * scale + dx, c + (y0 * n as f64 - c) * scale + dy);
+        let b = (c + (x1 * n as f64 - c) * scale + dx, c + (y1 * n as f64 - c) * scale + dy);
+        for y in 0..n {
+            for x in 0..n {
+                let px = x as f64 + 0.5;
+                let py = y as f64 + 0.5;
+                let d = seg_distance(px, py, a, b);
+                let v = (-(d * d) / (2.0 * STROKE_SIGMA * STROKE_SIGMA)).exp();
+                let cell = &mut img[y * n + x];
+                if v > *cell {
+                    *cell = v;
+                }
+            }
+        }
+    }
+    let data: Vec<f32> = img
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| {
+            let v = match noise {
+                Some(ns) => v + ns[i],
+                None => v,
+            };
+            v.clamp(0.0, 1.0) as f32
+        })
+        .collect();
+    Tensor::new(vec![1, 1, n, n], data)
+}
+
+/// Balanced labelled dataset of noisy jittered digits, seeded.
+///
+/// Returns (images (n,1,28,28), labels).  The parameter distributions
+/// match `digits.make_dataset` (uniform jitter, Gaussian noise), though
+/// the RNG stream differs (PCG here, PCG64/numpy there) — tests that
+/// need cross-language identical data use the exported fixtures instead.
+pub fn make_dataset(n: usize, seed: u64, noise_std: f64) -> (Tensor, Vec<u8>) {
+    let mut rng = Pcg::seeded(seed);
+    let mut frames = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        let label = rng.below(10) as usize;
+        let dx = rng.range_f64(-2.0, 2.0);
+        let dy = rng.range_f64(-2.0, 2.0);
+        let scale = rng.range_f64(0.75, 1.05);
+        let noise: Vec<f64> = (0..DIGIT_SIZE * DIGIT_SIZE)
+            .map(|_| rng.normal() * noise_std)
+            .collect();
+        frames.push(render_digit_noisy(label, dx, dy, scale, Some(&noise)));
+        labels.push(label as u8);
+    }
+    (Tensor::stack(&frames), labels)
+}
+
+/// Seeded random activation frames in NCHW — the CIFAR/ImageNet-shaped
+/// workload substitute (runtime depends on shapes, not pixel values).
+pub fn random_frames(n: usize, c: usize, h: usize, w: usize, seed: u64) -> Tensor {
+    let mut rng = Pcg::seeded(seed);
+    let data: Vec<f32> = (0..n * c * h * w)
+        .map(|_| rng.range_f64(0.0, 1.0) as f32)
+        .collect();
+    Tensor::new(vec![n, c, h, w], data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_are_in_range_and_nonempty() {
+        for label in 0..10 {
+            let img = render_digit(label, 0.0, 0.0, 1.0);
+            assert_eq!(img.shape(), &[1, 1, 28, 28]);
+            let mx = img.data().iter().cloned().fold(0.0f32, f32::max);
+            let mn = img.data().iter().cloned().fold(1.0f32, f32::min);
+            assert!(mx > 0.9, "digit {label} too faint: max {mx}");
+            assert!(mn >= 0.0 && mx <= 1.0);
+        }
+    }
+
+    #[test]
+    fn digits_differ_pairwise() {
+        let imgs: Vec<Tensor> = (0..10).map(|l| render_digit(l, 0.0, 0.0, 1.0)).collect();
+        for a in 0..10 {
+            for b in (a + 1)..10 {
+                assert!(
+                    imgs[a].max_abs_diff(&imgs[b]) > 0.5,
+                    "digits {a} and {b} are nearly identical"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn render_is_deterministic() {
+        let a = render_digit(7, 0.3, -0.7, 0.9);
+        let b = render_digit(7, 0.3, -0.7, 0.9);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn jitter_moves_the_digit() {
+        let base = render_digit(3, 0.0, 0.0, 1.0);
+        let moved = render_digit(3, 2.0, 2.0, 1.0);
+        assert!(base.max_abs_diff(&moved) > 0.1);
+    }
+
+    #[test]
+    fn dataset_is_balancedish_and_seeded() {
+        let (imgs, labels) = make_dataset(200, 42, 0.08);
+        assert_eq!(imgs.shape(), &[200, 1, 28, 28]);
+        let mut counts = [0usize; 10];
+        for &l in &labels {
+            counts[l as usize] += 1;
+        }
+        // Uniform sampling: each class within a loose band.
+        for (d, &c) in counts.iter().enumerate() {
+            assert!(c >= 5 && c <= 45, "class {d} count {c} out of band");
+        }
+        let (imgs2, labels2) = make_dataset(200, 42, 0.08);
+        assert_eq!(labels, labels2);
+        assert_eq!(imgs, imgs2);
+    }
+
+    #[test]
+    fn random_frames_shape_and_range() {
+        let t = random_frames(2, 3, 8, 8, 9);
+        assert_eq!(t.shape(), &[2, 3, 8, 8]);
+        assert!(t.data().iter().all(|&x| (0.0..1.0).contains(&x)));
+    }
+}

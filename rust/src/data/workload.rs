@@ -1,0 +1,134 @@
+//! Serving workload generator: open-loop request traces with Poisson
+//! (exponential inter-arrival) or uniform arrivals, the standard way to
+//! measure a serving system's latency under a target offered load
+//! rather than closed-loop client pressure.
+
+use crate::util::rng::Pcg;
+
+/// Arrival process shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arrivals {
+    /// Exponential inter-arrival times (memoryless open-loop load).
+    Poisson,
+    /// Fixed inter-arrival spacing.
+    Uniform,
+}
+
+/// One request in a generated trace.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceEvent {
+    /// Offset from trace start, seconds.
+    pub at_s: f64,
+    /// Workload item index (e.g. which image to send).
+    pub item: usize,
+}
+
+/// Generate a request trace at `rate_rps` for `duration_s`, drawing
+/// item indices uniformly from `0..n_items`.  Deterministic given the
+/// seed.
+pub fn generate_trace(
+    arrivals: Arrivals,
+    rate_rps: f64,
+    duration_s: f64,
+    n_items: usize,
+    seed: u64,
+) -> Vec<TraceEvent> {
+    assert!(rate_rps > 0.0 && duration_s >= 0.0 && n_items > 0);
+    let mut rng = Pcg::seeded(seed);
+    let mut out = Vec::new();
+    let mut t = 0.0f64;
+    loop {
+        let gap = match arrivals {
+            Arrivals::Poisson => -(1.0 - rng.uniform()).ln() / rate_rps,
+            Arrivals::Uniform => 1.0 / rate_rps,
+        };
+        t += gap;
+        if t >= duration_s {
+            break;
+        }
+        out.push(TraceEvent { at_s: t, item: rng.below(n_items as u64) as usize });
+    }
+    out
+}
+
+/// Summary of a generated trace (for reporting / sanity checks).
+#[derive(Debug, Clone)]
+pub struct TraceStats {
+    pub requests: usize,
+    pub rate_rps: f64,
+    /// Coefficient of variation of inter-arrival gaps (1.0 for
+    /// Poisson, 0.0 for uniform).
+    pub cv: f64,
+    /// Largest burst: max requests inside any 100 ms window.
+    pub max_burst_100ms: usize,
+}
+
+/// Compute [`TraceStats`] of a trace spanning `duration_s`.
+pub fn trace_stats(trace: &[TraceEvent], duration_s: f64) -> TraceStats {
+    let n = trace.len();
+    if n < 2 {
+        return TraceStats { requests: n, rate_rps: n as f64 / duration_s.max(1e-9), cv: 0.0, max_burst_100ms: n };
+    }
+    let gaps: Vec<f64> = trace.windows(2).map(|w| w[1].at_s - w[0].at_s).collect();
+    let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+    let var = gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>() / gaps.len() as f64;
+    let cv = if mean > 0.0 { var.sqrt() / mean } else { 0.0 };
+    // Sliding 100ms burst.
+    let mut max_burst = 0usize;
+    let mut lo = 0usize;
+    for hi in 0..n {
+        while trace[hi].at_s - trace[lo].at_s > 0.1 {
+            lo += 1;
+        }
+        max_burst = max_burst.max(hi - lo + 1);
+    }
+    TraceStats { requests: n, rate_rps: n as f64 / duration_s.max(1e-9), cv, max_burst_100ms: max_burst }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_and_cv() {
+        let trace = generate_trace(Arrivals::Poisson, 500.0, 10.0, 8, 42);
+        let stats = trace_stats(&trace, 10.0);
+        // ~5000 requests, within 10%.
+        assert!((4500..5500).contains(&stats.requests), "{}", stats.requests);
+        // Exponential gaps: cv ~ 1.
+        assert!((0.9..1.1).contains(&stats.cv), "cv {}", stats.cv);
+    }
+
+    #[test]
+    fn uniform_rate_and_cv() {
+        let trace = generate_trace(Arrivals::Uniform, 200.0, 5.0, 4, 1);
+        let stats = trace_stats(&trace, 5.0);
+        assert!((995..=1000).contains(&stats.requests), "{}", stats.requests);
+        assert!(stats.cv < 1e-9, "cv {}", stats.cv);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = generate_trace(Arrivals::Poisson, 100.0, 2.0, 16, 7);
+        let b = generate_trace(Arrivals::Poisson, 100.0, 2.0, 16, 7);
+        assert_eq!(a, b);
+        let c = generate_trace(Arrivals::Poisson, 100.0, 2.0, 16, 8);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn events_sorted_and_in_range() {
+        let trace = generate_trace(Arrivals::Poisson, 50.0, 4.0, 10, 3);
+        for w in trace.windows(2) {
+            assert!(w[0].at_s <= w[1].at_s);
+        }
+        assert!(trace.iter().all(|e| e.at_s < 4.0 && e.item < 10));
+    }
+
+    #[test]
+    fn poisson_burstier_than_uniform() {
+        let p = trace_stats(&generate_trace(Arrivals::Poisson, 300.0, 5.0, 4, 9), 5.0);
+        let u = trace_stats(&generate_trace(Arrivals::Uniform, 300.0, 5.0, 4, 9), 5.0);
+        assert!(p.max_burst_100ms > u.max_burst_100ms);
+    }
+}

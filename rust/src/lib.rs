@@ -1,0 +1,53 @@
+//! # cnndroid — CNNdroid reproduced as a three-layer Rust + JAX + Pallas stack
+//!
+//! This crate is Layer 3 of the reproduction of *"CNNdroid: GPU-Accelerated
+//! Execution of Trained Deep Convolutional Neural Networks on Android"*:
+//! a mobile-style CNN **inference engine** whose convolution/FC layers run
+//! on an accelerator (here: AOT-compiled XLA executables standing in for
+//! RenderScript GPU kernels) while ReLU, pooling, LRN and layout
+//! transformation ("dimension swapping") run on CPU threads, overlapped
+//! with accelerator work exactly like the paper's Figure 5 pipeline.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//!
+//! * [`util`] — in-repo substrates: JSON, CLI args, RNG, thread pool,
+//!   micro-benchmark harness, statistics, property-testing kit.
+//! * [`tensor`] — host tensors and NCHW↔NHWC layout transforms.
+//! * [`model`] — the `.cdm` deployment format, converter, network zoo.
+//! * [`cpu`] — the paper's CPU-only sequential baseline (§4.1) plus the
+//!   multi-threaded CPU layers (§6.3).
+//! * [`runtime`] — PJRT client wrapper: load/compile/execute the HLO
+//!   artifacts produced by `python/compile/aot.py`.
+//! * [`coordinator`] — the serving engine: layerwise executor with
+//!   method-selectable plans, the Fig. 5 pipeline scheduler, dynamic
+//!   batcher, router, TCP server, metrics.
+//! * [`simulator`] — analytic mobile-GPU performance model that
+//!   regenerates the paper's Tables 3/4 at Mali-T760/Adreno-430 scale.
+//! * [`data`] — procedural digit corpus (mirrors `python/compile/digits.py`)
+//!   and PGM/PPM image IO.
+
+pub mod coordinator;
+pub mod cpu;
+pub mod data;
+pub mod model;
+pub mod runtime;
+pub mod simulator;
+pub mod tensor;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Repository-relative default artifact directory.
+pub const DEFAULT_ARTIFACTS: &str = "artifacts";
+
+/// The paper's acceleration methods (plus our TPU-native extension) in
+/// the order Tables 3/4 report them.
+pub const METHODS: [&str; 6] = [
+    "cpu-seq",
+    "basic-parallel",
+    "basic-simd",
+    "advanced-simd-4",
+    "advanced-simd-8",
+    "mxu",
+];

@@ -1,0 +1,347 @@
+//! `cnndroid` — leader entrypoint and CLI for the CNNdroid
+//! reproduction.
+//!
+//! ```text
+//!   cnndroid inspect <net>                     network architecture + shapes
+//!   cnndroid convert --net N --out M.cdm       package model for deployment
+//!   cnndroid infer --net N --method M ...      classify images (file or synthetic)
+//!   cnndroid serve --net N --method M ...      TCP JSON-lines serving
+//!   cnndroid simulate [--claims]               regenerate paper Tables 3/4
+//!   cnndroid bench-engine --net N --method M   quick engine throughput probe
+//! ```
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use cnndroid::coordinator::{serve, BatcherConfig, Engine, EngineConfig, ServerConfig};
+use cnndroid::data::{image, synth};
+use cnndroid::model::manifest::{default_dir, Manifest};
+use cnndroid::model::{convert_to_cdm, zoo};
+use cnndroid::simulator::{device, tables};
+use cnndroid::util::args::ArgSpec;
+use cnndroid::Result;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(String::as_str).unwrap_or("");
+    let rest: Vec<String> = argv.iter().skip(1).cloned().collect();
+    let code = match cmd {
+        "inspect" => run(inspect(rest)),
+        "convert" => run(convert(rest)),
+        "infer" => run(infer(rest)),
+        "serve" => run(serve_cmd(rest)),
+        "simulate" => run(simulate(rest)),
+        "bench-engine" => run(bench_engine(rest)),
+        "validate" => run(validate(rest)),
+        "" | "--help" | "-h" | "help" => {
+            eprintln!("{}", HELP);
+            2
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n\n{}", HELP);
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+const HELP: &str = "cnndroid — GPU-accelerated CNN engine reproduction (three-layer Rust+JAX+Pallas)
+
+USAGE:
+  cnndroid <inspect|convert|infer|serve|simulate|bench-engine|validate> [OPTIONS]
+
+Run `cnndroid <command> --help` for command options.";
+
+fn run(r: Result<()>) -> i32 {
+    match r {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+fn artifacts_opt(spec: ArgSpec) -> ArgSpec {
+    spec.opt_no_default("artifacts", "artifact directory (default: repo artifacts/)")
+}
+
+fn artifacts_dir(args: &cnndroid::util::args::Args) -> PathBuf {
+    args.get_opt("artifacts").map(PathBuf::from).unwrap_or_else(default_dir)
+}
+
+fn inspect(argv: Vec<String>) -> Result<()> {
+    let spec = artifacts_opt(
+        ArgSpec::new("cnndroid inspect", "print a benchmark network's architecture")
+            .positional("net", "lenet5 | cifar10 | alexnet"),
+    );
+    let args = spec.parse_from(argv).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let name = args.positional(0).unwrap_or("lenet5");
+    let net = zoo::by_name(name).ok_or_else(|| anyhow::anyhow!("unknown network {name:?}"))?;
+    println!("network {} — input {}x{}x{}, {} classes", net.name, net.in_c, net.in_h, net.in_w, net.classes);
+    println!("{:<10} {:<6} {:>16} {:>14} {:>12}", "layer", "kind", "output (c,h,w)", "params", "flops");
+    let shapes = net.shapes();
+    let params = net.param_shapes();
+    let specs: std::collections::BTreeMap<_, _> = net.conv_specs().into_iter().collect();
+    for (i, layer) in net.layers.iter().enumerate() {
+        let (c, h, w) = shapes[i + 1].1;
+        let nparams = params
+            .iter()
+            .find(|(n, _, _)| n == layer.name())
+            .map(|(_, ws, bs)| ws.iter().product::<usize>() + bs.iter().product::<usize>())
+            .unwrap_or(0);
+        let flops = specs.get(layer.name()).map(|s| s.flops()).unwrap_or(0);
+        println!("{:<10} {:<6} {:>16} {:>14} {:>12}", layer.name(), layer.kind(), format!("({c},{h},{w})"), nparams, flops);
+    }
+    let (heaviest, hspec) = net.heaviest_conv();
+    println!("\nheaviest conv (Table 4 subject): {heaviest} ({} MFLOP/frame)", hspec.flops() / 1_000_000);
+    println!("total conv flops/frame: {} MFLOP", net.conv_flops() / 1_000_000);
+    Ok(())
+}
+
+fn convert(argv: Vec<String>) -> Result<()> {
+    let spec = artifacts_opt(
+        ArgSpec::new("cnndroid convert", "package a trained model as .cdm (Fig. 2 deployment)")
+            .opt("net", "lenet5", "network to convert")
+            .opt("out", "model.cdm", "output path"),
+    );
+    let args = spec.parse_from(argv).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let dir = artifacts_dir(&args);
+    let manifest = Manifest::load(&dir)?;
+    let out = PathBuf::from(args.get("out"));
+    let cdm = convert_to_cdm(&manifest, args.get("net"), &out)?;
+    println!(
+        "wrote {} ({} params, {} layers{})",
+        out.display(),
+        cdm.params.count(),
+        cdm.network.layers.len(),
+        cdm.meta
+            .get("test_acc")
+            .as_f64()
+            .map(|a| format!(", desktop test acc {a:.3}"))
+            .unwrap_or_default()
+    );
+    Ok(())
+}
+
+fn infer(argv: Vec<String>) -> Result<()> {
+    let spec = artifacts_opt(
+        ArgSpec::new("cnndroid infer", "classify images with the accelerated engine")
+            .opt("net", "lenet5", "network")
+            .opt("method", "advanced-simd-4", "cpu-seq | basic-parallel | basic-simd | advanced-simd-4 | advanced-simd-8 | mxu")
+            .opt("synthetic", "4", "number of synthetic digits when no --image given")
+            .opt("seed", "1", "synthetic workload seed")
+            .opt_no_default("image", "PGM/PPM image file to classify")
+            .flag("fused", "use the fused whole-network artifact"),
+    );
+    let args = spec.parse_from(argv).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let dir = artifacts_dir(&args);
+    let engine = Engine::from_artifacts(
+        &dir,
+        args.get("net"),
+        EngineConfig { method: args.get("method").into(), record_trace: false, preload: true },
+    )?;
+
+    let (batch, labels): (cnndroid::tensor::Tensor, Option<Vec<u8>>) =
+        if let Some(path) = args.get_opt("image") {
+            (image::read_anymap(&PathBuf::from(path))?, None)
+        } else {
+            let (imgs, labels) = synth::make_dataset(
+                args.get_usize("synthetic"),
+                args.get_usize("seed") as u64,
+                0.08,
+            );
+            (imgs, Some(labels))
+        };
+
+    let t0 = Instant::now();
+    let preds = if args.has("fused") {
+        let logits = engine.infer_batch_fused(&batch)?;
+        let c = logits.dim(1);
+        (0..logits.dim(0))
+            .map(|i| {
+                let row = &logits.data()[i * c..(i + 1) * c];
+                let (l, s) = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap();
+                (l, *s)
+            })
+            .collect::<Vec<_>>()
+    } else {
+        engine.classify(&batch)?
+    };
+    let dt = t0.elapsed();
+    let n = preds.len();
+    for (i, (label, score)) in preds.iter().enumerate() {
+        let truth = labels
+            .as_ref()
+            .map(|l| format!(" (truth {})", l[i]))
+            .unwrap_or_default();
+        println!("frame {i}: class {label} (logit {score:.3}){truth}");
+    }
+    if let Some(l) = &labels {
+        let correct = preds.iter().zip(l).filter(|((p, _), t)| *p == **t as usize).count();
+        println!("accuracy: {correct}/{n}");
+    }
+    println!(
+        "{} frames in {:.1} ms ({:.1} fps) with {}/{}",
+        n,
+        dt.as_secs_f64() * 1e3,
+        n as f64 / dt.as_secs_f64(),
+        args.get("net"),
+        args.get("method")
+    );
+    Ok(())
+}
+
+fn serve_cmd(argv: Vec<String>) -> Result<()> {
+    let spec = artifacts_opt(
+        ArgSpec::new("cnndroid serve", "TCP JSON-lines serving front end")
+            .opt("addr", "127.0.0.1:7878", "bind address")
+            .opt("net", "lenet5", "comma-separated networks to deploy")
+            .opt("method", "advanced-simd-4", "execution method")
+            .opt("replicas", "1", "engine replicas per network")
+            .opt("max-batch", "16", "dynamic batcher max batch")
+            .opt("max-wait-ms", "5", "dynamic batcher max wait"),
+    );
+    let args = spec.parse_from(argv).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let models = args
+        .get("net")
+        .split(',')
+        .map(|n| (n.trim().to_string(), args.get("method").to_string(), args.get_usize("replicas")))
+        .collect();
+    let handle = serve(ServerConfig {
+        addr: args.get("addr").to_string(),
+        models,
+        batcher: BatcherConfig {
+            max_batch: args.get_usize("max-batch"),
+            max_wait: std::time::Duration::from_millis(args.get_usize("max-wait-ms") as u64),
+        },
+        artifacts_dir: artifacts_dir(&args),
+    })?;
+    println!("serving on {} (nets: {}); Ctrl-C to stop", handle.addr, args.get("net"));
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn simulate(argv: Vec<String>) -> Result<()> {
+    let spec = ArgSpec::new("cnndroid simulate", "regenerate the paper's tables on the mobile-GPU model")
+        .flag("devices", "print Table 1 device descriptors")
+        .flag("claims", "check the §6.3 headline claims");
+    let args = spec.parse_from(argv).map_err(|e| anyhow::anyhow!("{e}"))?;
+    if args.has("devices") {
+        for d in device::all_devices() {
+            println!(
+                "{} — {} | GPU {} ({} lanes, peak {:.1} GFLOP/s) | CPU {}x big @ {} MHz | {}",
+                d.name,
+                d.soc,
+                d.gpu_name,
+                d.parallel_ops(),
+                d.gpu_peak_gflops(),
+                d.cpu_big_cores,
+                d.cpu_freq_mhz,
+                d.os
+            );
+        }
+        return Ok(());
+    }
+    println!("{}", tables::render("Table 3 — whole-network speedup (simulated vs paper)", &tables::table3()));
+    println!("{}", tables::render("Table 4 — heaviest conv layer speedup (simulated vs paper)", &tables::table4()));
+    if args.has("claims") {
+        for (claim, ok) in tables::claims() {
+            println!("[{}] {claim}", if ok { "ok" } else { "FAIL" });
+        }
+    }
+    Ok(())
+}
+
+fn validate(argv: Vec<String>) -> Result<()> {
+    let spec = artifacts_opt(
+        ArgSpec::new(
+            "cnndroid validate",
+            "cross-substrate validation sweep: every method vs the CPU-sequential reference",
+        )
+        .opt("net", "lenet5,cifar10", "comma-separated networks (alexnet is slow: opt-in)")
+        .opt("frames", "2", "frames per check")
+        .opt("tol", "0.002", "max |diff| tolerance on logits"),
+    );
+    let args = spec.parse_from(argv).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let dir = artifacts_dir(&args);
+    let manifest = Manifest::load(&dir)?;
+    let runtime = std::rc::Rc::new(cnndroid::runtime::Runtime::new(manifest)?);
+    let tol = args.get_f64("tol") as f32;
+    let frames = args.get_usize("frames");
+    let mut failures = 0;
+    for net_name in args.get("net").split(',').map(str::trim) {
+        let net = runtime
+            .manifest()
+            .networks
+            .get(net_name)
+            .ok_or_else(|| anyhow::anyhow!("unknown network {net_name:?}"))?
+            .clone();
+        let params = cnndroid::model::load_weights(runtime.manifest(), &net)?;
+        let x = synth::random_frames(frames, net.in_c, net.in_h, net.in_w, 99);
+        let want = cnndroid::cpu::forward_seq(&net, &params, &x)?;
+        let mut methods = runtime.manifest().methods.clone();
+        methods.insert(0, "cpu-seq".into());
+        for method in &methods {
+            let eng = Engine::new(
+                std::rc::Rc::clone(&runtime),
+                net_name,
+                EngineConfig { method: method.clone(), record_trace: false, preload: false },
+            )?;
+            let got = eng.infer_batch(&x)?;
+            let diff = got.max_abs_diff(&want);
+            let ok = diff <= tol;
+            if !ok {
+                failures += 1;
+            }
+            println!(
+                "[{}] {net_name:<8} {method:<16} max|diff| = {diff:.2e}",
+                if ok { "ok" } else { "FAIL" }
+            );
+        }
+    }
+    anyhow::ensure!(failures == 0, "{failures} method(s) diverged from the reference");
+    println!("all methods agree with the CPU-sequential reference");
+    Ok(())
+}
+
+fn bench_engine(argv: Vec<String>) -> Result<()> {
+    let spec = artifacts_opt(
+        ArgSpec::new("cnndroid bench-engine", "quick engine throughput probe")
+            .opt("net", "lenet5", "network")
+            .opt("method", "advanced-simd-4", "execution method")
+            .opt("batch", "16", "frames per batch")
+            .opt("iters", "5", "timed iterations"),
+    );
+    let args = spec.parse_from(argv).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let dir = artifacts_dir(&args);
+    let net = args.get("net");
+    let engine = Engine::from_artifacts(
+        &dir,
+        net,
+        EngineConfig { method: args.get("method").into(), record_trace: false, preload: true },
+    )?;
+    let n = args.get_usize("batch");
+    let net_desc = engine.network().clone();
+    let frames = synth::random_frames(n, net_desc.in_c, net_desc.in_h, net_desc.in_w, 3);
+    engine.infer_batch(&frames)?; // warmup
+    let iters = args.get_usize("iters");
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        engine.infer_batch(&frames)?;
+    }
+    let dt = t0.elapsed().as_secs_f64() / iters as f64;
+    println!(
+        "{net}/{}: batch {n} in {:.2} ms -> {:.1} fps ({:.2} ms/frame)",
+        args.get("method"),
+        dt * 1e3,
+        n as f64 / dt,
+        dt * 1e3 / n as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! Model converter — the paper's Fig. 2 deployment step: take the
+//! desktop-trained model (here: the manifest + weight blob that
+//! `make artifacts` produced from the JAX trainer) and package it as a
+//! self-contained `.cdm` file for "upload" to the device.
+
+use std::path::Path;
+
+use crate::util::json::Json;
+use crate::Result;
+
+use super::format::CdmFile;
+use super::manifest::Manifest;
+use super::weights::load_weights;
+
+/// Convert one network from the build artifacts into a `.cdm` file.
+/// Returns the written model for inspection.
+pub fn convert_to_cdm(manifest: &Manifest, net_name: &str, out: &Path) -> Result<CdmFile> {
+    let network = manifest
+        .networks
+        .get(net_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown network {net_name:?}"))?
+        .clone();
+    let params = load_weights(manifest, &network)?;
+    let wmeta = &manifest.weights[net_name];
+    let mut meta = vec![
+        ("source", Json::str("caffe-substitute: python/compile/train.py")),
+        ("source_hash", Json::str(manifest.source_hash.clone())),
+    ];
+    if let Some(acc) = wmeta.test_acc {
+        meta.push(("test_acc", Json::num(acc)));
+    }
+    let cdm = CdmFile { network, params, meta: Json::obj(meta) };
+    cdm.write(out)?;
+    Ok(cdm)
+}
+
+/// Load a deployed `.cdm` model.
+pub fn load_cdm(path: &Path) -> Result<CdmFile> {
+    CdmFile::read(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::default_dir;
+
+    #[test]
+    fn convert_and_reload_lenet() {
+        let dir = default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        let out = std::env::temp_dir().join("cnndroid-tests");
+        std::fs::create_dir_all(&out).unwrap();
+        let path = out.join("lenet5.cdm");
+        let written = convert_to_cdm(&m, "lenet5", &path).unwrap();
+        let loaded = load_cdm(&path).unwrap();
+        assert_eq!(loaded.network, written.network);
+        assert_eq!(loaded.params.count(), written.params.count());
+        // The trained model carries its desktop test accuracy.
+        assert!(loaded.meta.get("test_acc").as_f64().unwrap_or(0.0) > 0.9);
+    }
+
+    #[test]
+    fn unknown_network_errors() {
+        let dir = default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        let path = std::env::temp_dir().join("never.cdm");
+        assert!(convert_to_cdm(&m, "resnet900", &path).is_err());
+    }
+}

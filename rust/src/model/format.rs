@@ -1,0 +1,202 @@
+//! The `.cdm` model deployment format — the paper's Fig. 2 "converted
+//! model" that gets uploaded to the device.  Self-contained: network
+//! architecture + trained parameters in one file, so the phone-side
+//! engine needs neither the manifest nor the training framework.
+//!
+//! Layout (all little-endian):
+//! ```text
+//!   magic   4 bytes  "CDM\x01"
+//!   hlen    u32      JSON header byte length
+//!   header  hlen     {"network": <network json>, "meta": {...}}
+//!   payload f32[]    (w, b) pairs, forward order, canonical layouts
+//! ```
+
+use std::fs;
+use std::path::Path;
+
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use crate::Result;
+
+use super::network::Network;
+use super::weights::Params;
+
+const MAGIC: [u8; 4] = *b"CDM\x01";
+
+/// An in-memory `.cdm` model file.
+#[derive(Debug, Clone)]
+pub struct CdmFile {
+    pub network: Network,
+    pub params: Params,
+    /// Free-form metadata (source, accuracy, conversion time, ...).
+    pub meta: Json,
+}
+
+impl CdmFile {
+    /// Serialize to bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let header = Json::obj(vec![
+            ("network", self.network.to_json()),
+            ("meta", self.meta.clone()),
+        ])
+        .dump();
+        let hbytes = header.as_bytes();
+        let payload: usize = self
+            .params
+            .pairs
+            .iter()
+            .map(|(_, w, b)| 4 * (w.len() + b.len()))
+            .sum();
+        let mut out = Vec::with_capacity(8 + hbytes.len() + payload);
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&(hbytes.len() as u32).to_le_bytes());
+        out.extend_from_slice(hbytes);
+        for (_, w, b) in &self.params.pairs {
+            for &v in w.data() {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+            for &v in b.data() {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    /// Write to a file atomically.
+    pub fn write(&self, path: &Path) -> Result<()> {
+        let tmp = path.with_extension("cdm.tmp");
+        fs::write(&tmp, self.to_bytes())?;
+        fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    /// Parse from bytes, validating magic, header, and payload length.
+    pub fn from_bytes(raw: &[u8]) -> Result<CdmFile> {
+        anyhow::ensure!(raw.len() >= 8, "cdm file truncated");
+        anyhow::ensure!(raw[..4] == MAGIC, "bad cdm magic {:?}", &raw[..4.min(raw.len())]);
+        let hlen = u32::from_le_bytes([raw[4], raw[5], raw[6], raw[7]]) as usize;
+        anyhow::ensure!(raw.len() >= 8 + hlen, "cdm header truncated");
+        let header = std::str::from_utf8(&raw[8..8 + hlen])?;
+        let j = Json::parse(header).map_err(|e| anyhow::anyhow!("cdm header: {e}"))?;
+        let network = Network::from_json(j.get("network"))?;
+
+        let body = &raw[8 + hlen..];
+        anyhow::ensure!(body.len() % 4 == 0, "cdm payload not f32-aligned");
+        let vals: Vec<f32> = body
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+
+        let shapes = network.param_shapes();
+        let expected: usize = shapes
+            .iter()
+            .map(|(_, w, b)| w.iter().product::<usize>() + b.iter().product::<usize>())
+            .sum();
+        anyhow::ensure!(
+            vals.len() == expected,
+            "cdm payload has {} f32s, network {} wants {expected}",
+            vals.len(),
+            network.name
+        );
+        let mut pairs = Vec::new();
+        let mut off = 0;
+        for (name, ws, bs) in shapes {
+            let wn: usize = ws.iter().product();
+            let bn: usize = bs.iter().product();
+            pairs.push((
+                name,
+                Tensor::new(ws, vals[off..off + wn].to_vec()),
+                Tensor::new(bs, vals[off + wn..off + wn + bn].to_vec()),
+            ));
+            off += wn + bn;
+        }
+        Ok(CdmFile { network, params: Params { pairs }, meta: j.get("meta").clone() })
+    }
+
+    /// Read from a file.
+    pub fn read(path: &Path) -> Result<CdmFile> {
+        let raw = fs::read(path)
+            .map_err(|e| anyhow::anyhow!("cannot read {}: {e}", path.display()))?;
+        Self::from_bytes(&raw)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::util::rng::Pcg;
+
+    fn fake_params(net: &Network, seed: u64) -> Params {
+        let mut rng = Pcg::seeded(seed);
+        let pairs = net
+            .param_shapes()
+            .into_iter()
+            .map(|(name, ws, bs)| {
+                let wn = ws.iter().product();
+                let bn = bs.iter().product();
+                (
+                    name,
+                    Tensor::new(ws, rng.normal_vec(wn, 0.1)),
+                    Tensor::new(bs, rng.normal_vec(bn, 0.1)),
+                )
+            })
+            .collect();
+        Params { pairs }
+    }
+
+    #[test]
+    fn roundtrip_lenet() {
+        let net = zoo::lenet5();
+        let params = fake_params(&net, 1);
+        let cdm = CdmFile {
+            network: net.clone(),
+            params: params.clone(),
+            meta: Json::obj(vec![("source", Json::str("test"))]),
+        };
+        let back = CdmFile::from_bytes(&cdm.to_bytes()).unwrap();
+        assert_eq!(back.network, net);
+        assert_eq!(back.meta.get("source").as_str(), Some("test"));
+        for ((n1, w1, b1), (n2, w2, b2)) in params.pairs.iter().zip(&back.params.pairs) {
+            assert_eq!(n1, n2);
+            assert_eq!(w1, w2);
+            assert_eq!(b1, b2);
+        }
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let net = zoo::lenet5();
+        let cdm = CdmFile {
+            network: net,
+            params: fake_params(&zoo::lenet5(), 2),
+            meta: Json::Null,
+        };
+        let mut bytes = cdm.to_bytes();
+        // Bad magic.
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(CdmFile::from_bytes(&bad).is_err());
+        // Truncated payload.
+        bytes.truncate(bytes.len() - 5);
+        assert!(CdmFile::from_bytes(&bytes).is_err());
+        // Empty.
+        assert!(CdmFile::from_bytes(&[]).is_err());
+    }
+
+    #[test]
+    fn file_io_roundtrip() {
+        let dir = std::env::temp_dir().join("cnndroid-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.cdm");
+        let cdm = CdmFile {
+            network: zoo::cifar10(),
+            params: fake_params(&zoo::cifar10(), 3),
+            meta: Json::Null,
+        };
+        cdm.write(&path).unwrap();
+        let back = CdmFile::read(&path).unwrap();
+        assert_eq!(back.network.name, "cifar10");
+        assert_eq!(back.params.count(), cdm.params.count());
+    }
+}

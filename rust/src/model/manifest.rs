@@ -1,0 +1,283 @@
+//! Loader for `artifacts/manifest.json`, the contract between the
+//! Python compile path and the Rust engine: network descriptors,
+//! per-artifact metadata (shapes, layouts, flops), weight blob index,
+//! and the acceleration-method list.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+use crate::Result;
+
+use super::network::Network;
+
+/// Input or output operand of an artifact.
+#[derive(Debug, Clone)]
+pub struct Operand {
+    pub shape: Vec<usize>,
+    /// "nchw" | "nhwc" | "oihw" | "hwio" | "vec" | "matrix" | "param"
+    pub layout: String,
+    /// For fused artifacts: which parameter this operand binds
+    /// (e.g. "conv1.w"); empty otherwise.
+    pub param: String,
+}
+
+/// Metadata of one AOT-compiled HLO artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    /// Path relative to the artifact directory.
+    pub path: String,
+    /// "conv" | "fc" | "pool" | "lrn" | "fused"
+    pub kind: String,
+    pub method: String,
+    pub net: String,
+    pub layer: String,
+    pub batch: usize,
+    pub inputs: Vec<Operand>,
+    pub output_shape: Vec<usize>,
+    pub flops: u64,
+    /// For conv artifacts: the raw spec object (stride, pad, relu, ...).
+    pub spec: Json,
+}
+
+/// Weight-blob metadata for one network.
+#[derive(Debug, Clone)]
+pub struct WeightsMeta {
+    pub path: String,
+    /// (param name, weight shape, bias shape) in blob order.
+    pub params: Vec<(String, Vec<usize>, Vec<usize>)>,
+    pub test_acc: Option<f64>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub source_hash: String,
+    pub networks: BTreeMap<String, Network>,
+    pub methods: Vec<String>,
+    pub heaviest_conv: BTreeMap<String, String>,
+    pub artifacts: Vec<ArtifactMeta>,
+    pub weights: BTreeMap<String, WeightsMeta>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = fs::read_to_string(dir.join("manifest.json")).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {}/manifest.json (run `make artifacts` first): {e}",
+                dir.display()
+            )
+        })?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+
+        let mut networks = BTreeMap::new();
+        if let Some(nets) = j.get("networks").as_obj() {
+            for (name, nj) in nets {
+                networks.insert(name.clone(), Network::from_json(nj)?);
+            }
+        }
+
+        let methods = j
+            .get("methods")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|m| m.as_str().map(String::from))
+            .collect();
+
+        let mut heaviest_conv = BTreeMap::new();
+        if let Some(hc) = j.get("heaviest_conv").as_obj() {
+            for (net, layer) in hc {
+                if let Some(l) = layer.as_str() {
+                    heaviest_conv.insert(net.clone(), l.to_string());
+                }
+            }
+        }
+
+        let mut artifacts = Vec::new();
+        for aj in j.get("artifacts").as_arr().unwrap_or(&[]) {
+            artifacts.push(parse_artifact(aj)?);
+        }
+
+        let mut weights = BTreeMap::new();
+        if let Some(ws) = j.get("weights").as_obj() {
+            for (net, wj) in ws {
+                let params = wj
+                    .get("params")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|p| {
+                        (
+                            p.get("name").as_str().unwrap_or_default().to_string(),
+                            p.get("w_shape").as_dims().unwrap_or_default(),
+                            p.get("b_shape").as_dims().unwrap_or_default(),
+                        )
+                    })
+                    .collect();
+                weights.insert(
+                    net.clone(),
+                    WeightsMeta {
+                        path: wj.get("path").as_str().unwrap_or_default().to_string(),
+                        params,
+                        test_acc: wj.get("test_acc").as_f64(),
+                    },
+                );
+            }
+        }
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            source_hash: j.get("source_hash").as_str().unwrap_or_default().to_string(),
+            networks,
+            methods,
+            heaviest_conv,
+            artifacts,
+            weights,
+        })
+    }
+
+    /// Absolute path of an artifact file.
+    pub fn artifact_path(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.path)
+    }
+
+    /// Find the conv artifact for a shape signature and method.
+    pub fn find_conv(&self, signature: &str, method: &str, batch: usize) -> Option<&ArtifactMeta> {
+        let name = format!("conv_{signature}_b{batch}_{method}");
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Find the FC artifact for (d_in, d_out, relu, batch).
+    pub fn find_fc(&self, d_in: usize, d_out: usize, relu: bool, batch: usize) -> Option<&ArtifactMeta> {
+        let name = format!("fc_{d_in}x{d_out}_{}_b{batch}", if relu { "r" } else { "n" });
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Find a fused whole-network artifact.
+    pub fn find_fused(&self, net: &str, method: &str, batch: usize) -> Option<&ArtifactMeta> {
+        let name = format!("fused_{net}_{method}_b{batch}");
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Find an artifact by exact name.
+    pub fn find(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+fn parse_artifact(aj: &Json) -> Result<ArtifactMeta> {
+    let inputs = aj
+        .get("inputs")
+        .as_arr()
+        .unwrap_or(&[])
+        .iter()
+        .map(|ij| Operand {
+            shape: ij.get("shape").as_dims().unwrap_or_default(),
+            layout: ij.get("layout").as_str().unwrap_or_default().to_string(),
+            param: ij.get("param").as_str().unwrap_or_default().to_string(),
+        })
+        .collect();
+    Ok(ArtifactMeta {
+        name: aj.get("name").as_str().unwrap_or_default().to_string(),
+        path: aj.get("path").as_str().unwrap_or_default().to_string(),
+        kind: aj.get("kind").as_str().unwrap_or_default().to_string(),
+        method: aj.get("method").as_str().unwrap_or_default().to_string(),
+        net: aj.get("net").as_str().unwrap_or_default().to_string(),
+        layer: aj.get("layer").as_str().unwrap_or_default().to_string(),
+        batch: aj.get("batch").as_usize().unwrap_or(1),
+        inputs,
+        output_shape: aj.get("output").get("shape").as_dims().unwrap_or_default(),
+        flops: aj.get("flops").as_f64().unwrap_or(0.0) as u64,
+        spec: aj.get("spec").clone(),
+    })
+}
+
+/// Repository-standard artifact directory, resolving relative to the
+/// crate root so tests and examples work from any cwd.
+pub fn default_dir() -> PathBuf {
+    let env_dir = std::env::var("CNNDROID_ARTIFACTS").ok();
+    if let Some(d) = env_dir {
+        return PathBuf::from(d);
+    }
+    let here = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if here.exists() {
+        return here;
+    }
+    PathBuf::from("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    fn manifest() -> Option<Manifest> {
+        let dir = default_dir();
+        dir.join("manifest.json").exists().then(|| Manifest::load(&dir).unwrap())
+    }
+
+    #[test]
+    fn loads_and_indexes() {
+        let Some(m) = manifest() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        assert_eq!(m.networks.len(), 3);
+        assert!(m.methods.contains(&"basic-simd".to_string()));
+        assert!(m.artifacts.len() >= 50);
+        // Every artifact file the manifest lists actually exists.
+        for a in &m.artifacts {
+            assert!(m.artifact_path(a).exists(), "missing artifact file {}", a.path);
+        }
+    }
+
+    #[test]
+    fn manifest_networks_match_builtin_zoo() {
+        let Some(m) = manifest() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        for net in zoo::all() {
+            let from_manifest = m.networks.get(&net.name).expect("network in manifest");
+            assert_eq!(from_manifest, &net, "zoo/{} diverged from manifest", net.name);
+        }
+    }
+
+    #[test]
+    fn heaviest_conv_agrees() {
+        let Some(m) = manifest() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        for net in zoo::all() {
+            assert_eq!(
+                m.heaviest_conv.get(&net.name).unwrap(),
+                &net.heaviest_conv().0
+            );
+        }
+    }
+
+    #[test]
+    fn find_helpers_resolve() {
+        let Some(m) = manifest() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let lenet = zoo::lenet5();
+        let (_, conv2) = lenet.heaviest_conv();
+        for method in &m.methods {
+            assert!(
+                m.find_conv(&conv2.signature(), method, 1).is_some(),
+                "conv artifact for {method} missing"
+            );
+        }
+        assert!(m.find_fc(800, 500, true, 1).is_some());
+        assert!(m.find_fused("lenet5", "mxu", 16).is_some());
+        assert!(m.find("no-such-artifact").is_none());
+    }
+}

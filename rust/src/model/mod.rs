@@ -1,0 +1,17 @@
+//! Model layer: network descriptors (the Table 2 zoo), the artifact
+//! manifest written by `python/compile/aot.py`, weight blobs, and the
+//! `.cdm` deployment format that mirrors the paper's "convert & upload"
+//! stage (Fig. 2).
+
+pub mod converter;
+pub mod format;
+pub mod manifest;
+pub mod network;
+pub mod weights;
+pub mod zoo;
+
+pub use converter::{convert_to_cdm, load_cdm};
+pub use format::CdmFile;
+pub use manifest::{ArtifactMeta, Manifest};
+pub use network::{ConvSpec, Layer, Network, PoolMode};
+pub use weights::{load_weights, Params};

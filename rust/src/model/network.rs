@@ -1,0 +1,441 @@
+//! Network descriptors and shape propagation — the Rust mirror of
+//! `python/compile/networks.py` (single source of truth is the manifest;
+//! `zoo.rs` holds builtin copies and a parity test keeps them in sync).
+
+use crate::util::json::Json;
+
+/// Pooling flavor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoolMode {
+    Max,
+    Avg,
+}
+
+impl PoolMode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PoolMode::Max => "max",
+            PoolMode::Avg => "avg",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PoolMode> {
+        match s {
+            "max" => Some(PoolMode::Max),
+            "avg" => Some(PoolMode::Avg),
+            _ => None,
+        }
+    }
+}
+
+/// One layer of a benchmark network (paper Table 2).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Layer {
+    Conv { name: String, nk: usize, kh: usize, kw: usize, stride: usize, pad: usize, relu: bool },
+    Pool { name: String, mode: PoolMode, size: usize, stride: usize, relu: bool },
+    Lrn { name: String, size: usize, alpha: f64, beta: f64, k: f64 },
+    Fc { name: String, out: usize, relu: bool },
+}
+
+impl Layer {
+    pub fn name(&self) -> &str {
+        match self {
+            Layer::Conv { name, .. }
+            | Layer::Pool { name, .. }
+            | Layer::Lrn { name, .. }
+            | Layer::Fc { name, .. } => name,
+        }
+    }
+
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Layer::Conv { .. } => "conv",
+            Layer::Pool { .. } => "pool",
+            Layer::Lrn { .. } => "lrn",
+            Layer::Fc { .. } => "fc",
+        }
+    }
+}
+
+/// Static configuration of one convolution layer (mirror of
+/// `kernels/common.py::ConvSpec`, canonical NCHW shapes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvSpec {
+    pub in_c: usize,
+    pub in_h: usize,
+    pub in_w: usize,
+    pub nk: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub relu: bool,
+}
+
+impl ConvSpec {
+    pub fn out_h(&self) -> usize {
+        (self.in_h + 2 * self.pad - self.kh) / self.stride + 1
+    }
+
+    pub fn out_w(&self) -> usize {
+        (self.in_w + 2 * self.pad - self.kw) / self.stride + 1
+    }
+
+    /// MAC-pair flops for one frame (2 * MACs).
+    pub fn flops(&self) -> u64 {
+        2 * (self.out_h() * self.out_w() * self.nk * self.in_c * self.kh * self.kw) as u64
+    }
+
+    /// Stable shape signature matching the Python artifact naming.
+    pub fn signature(&self) -> String {
+        format!(
+            "c{}x{}x{}_k{}x{}x{}_s{}_p{}_{}",
+            self.in_c,
+            self.in_h,
+            self.in_w,
+            self.nk,
+            self.kh,
+            self.kw,
+            self.stride,
+            self.pad,
+            if self.relu { "r" } else { "n" }
+        )
+    }
+}
+
+/// Caffe ceil-mode pooling output size with the in-bounds clip for the
+/// last window (mirror of `kernels/common.py::pool_out`).  Degenerate
+/// geometry (window larger than the input, e.g. from a corrupted model
+/// descriptor) clamps to one clipped window instead of panicking.
+pub fn pool_out(hw: usize, size: usize, stride: usize) -> usize {
+    if hw <= size {
+        return 1;
+    }
+    let stride = stride.max(1);
+    let mut o = (hw - size + stride - 1) / stride + 1;
+    if (o - 1) * stride >= hw {
+        o -= 1;
+    }
+    o
+}
+
+/// A benchmark network: input geometry plus an ordered layer list.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Network {
+    pub name: String,
+    pub in_c: usize,
+    pub in_h: usize,
+    pub in_w: usize,
+    pub classes: usize,
+    pub layers: Vec<Layer>,
+}
+
+impl Network {
+    /// Propagate shapes; return `(layer name, ConvSpec)` for every conv.
+    pub fn conv_specs(&self) -> Vec<(String, ConvSpec)> {
+        let mut out = Vec::new();
+        let (mut c, mut h, mut w) = (self.in_c, self.in_h, self.in_w);
+        for layer in &self.layers {
+            match layer {
+                Layer::Conv { name, nk, kh, kw, stride, pad, relu } => {
+                    let spec = ConvSpec {
+                        in_c: c, in_h: h, in_w: w,
+                        nk: *nk, kh: *kh, kw: *kw,
+                        stride: *stride, pad: *pad, relu: *relu,
+                    };
+                    c = *nk;
+                    h = spec.out_h();
+                    w = spec.out_w();
+                    out.push((name.clone(), spec));
+                }
+                Layer::Pool { size, stride, .. } => {
+                    h = pool_out(h, *size, *stride);
+                    w = pool_out(w, *size, *stride);
+                }
+                Layer::Fc { out: o, .. } => {
+                    c = *o;
+                    h = 1;
+                    w = 1;
+                }
+                Layer::Lrn { .. } => {}
+            }
+        }
+        out
+    }
+
+    /// `(layer name, output (c, h, w))` for every layer, input first.
+    pub fn shapes(&self) -> Vec<(String, (usize, usize, usize))> {
+        let mut res = vec![("input".to_string(), (self.in_c, self.in_h, self.in_w))];
+        let (mut c, mut h, mut w) = (self.in_c, self.in_h, self.in_w);
+        for layer in &self.layers {
+            match layer {
+                Layer::Conv { nk, kh, kw, stride, pad, .. } => {
+                    let spec = ConvSpec {
+                        in_c: c, in_h: h, in_w: w,
+                        nk: *nk, kh: *kh, kw: *kw,
+                        stride: *stride, pad: *pad, relu: false,
+                    };
+                    c = *nk;
+                    h = spec.out_h();
+                    w = spec.out_w();
+                }
+                Layer::Pool { size, stride, .. } => {
+                    h = pool_out(h, *size, *stride);
+                    w = pool_out(w, *size, *stride);
+                }
+                Layer::Fc { out: o, .. } => {
+                    c = *o;
+                    h = 1;
+                    w = 1;
+                }
+                Layer::Lrn { .. } => {}
+            }
+            res.push((layer.name().to_string(), (c, h, w)));
+        }
+        res
+    }
+
+    /// `(name, weight shape, bias shape)` for every parameterized layer
+    /// in forward order; conv weights are OIHW, FC weights (in, out).
+    pub fn param_shapes(&self) -> Vec<(String, Vec<usize>, Vec<usize>)> {
+        let mut res = Vec::new();
+        let (mut c, mut h, mut w) = (self.in_c, self.in_h, self.in_w);
+        for layer in &self.layers {
+            match layer {
+                Layer::Conv { name, nk, kh, kw, stride, pad, .. } => {
+                    res.push((name.clone(), vec![*nk, c, *kh, *kw], vec![*nk]));
+                    let spec = ConvSpec {
+                        in_c: c, in_h: h, in_w: w,
+                        nk: *nk, kh: *kh, kw: *kw,
+                        stride: *stride, pad: *pad, relu: false,
+                    };
+                    c = *nk;
+                    h = spec.out_h();
+                    w = spec.out_w();
+                }
+                Layer::Pool { size, stride, .. } => {
+                    h = pool_out(h, *size, *stride);
+                    w = pool_out(w, *size, *stride);
+                }
+                Layer::Fc { name, out, .. } => {
+                    res.push((name.clone(), vec![c * h * w, *out], vec![*out]));
+                    c = *out;
+                    h = 1;
+                    w = 1;
+                }
+                Layer::Lrn { .. } => {}
+            }
+        }
+        res
+    }
+
+    /// Name of the conv layer with the most MACs — Table 4's subject.
+    pub fn heaviest_conv(&self) -> (String, ConvSpec) {
+        self.conv_specs()
+            .into_iter()
+            .max_by_key(|(_, s)| s.flops())
+            .expect("network has at least one conv layer")
+    }
+
+    /// Total conv flops of one forward frame.
+    pub fn conv_flops(&self) -> u64 {
+        self.conv_specs().iter().map(|(_, s)| s.flops()).sum()
+    }
+
+    /// Total FC flops of one forward frame.
+    pub fn fc_flops(&self) -> u64 {
+        self.param_shapes()
+            .iter()
+            .filter(|(_, w, _)| w.len() == 2)
+            .map(|(_, w, _)| 2 * (w[0] * w[1]) as u64)
+            .sum()
+    }
+
+    /// Parse a network from its manifest JSON descriptor.
+    pub fn from_json(j: &Json) -> crate::Result<Network> {
+        let name = j.get("name").as_str().unwrap_or_default().to_string();
+        let input = j.get("input").as_dims().unwrap_or_default();
+        anyhow::ensure!(input.len() == 3, "network {name}: bad input {input:?}");
+        let mut layers = Vec::new();
+        for lj in j.get("layers").as_arr().unwrap_or(&[]) {
+            let lname = lj.get("name").as_str().unwrap_or_default().to_string();
+            let kind = lj.get("kind").as_str().unwrap_or_default();
+            let layer = match kind {
+                "conv" => Layer::Conv {
+                    name: lname,
+                    nk: lj.get("nk").as_usize().unwrap_or(0),
+                    kh: lj.get("kh").as_usize().unwrap_or(0),
+                    kw: lj.get("kw").as_usize().unwrap_or(0),
+                    stride: lj.get("stride").as_usize().unwrap_or(1),
+                    pad: lj.get("pad").as_usize().unwrap_or(0),
+                    relu: lj.get("relu").as_bool().unwrap_or(false),
+                },
+                "pool" => Layer::Pool {
+                    name: lname,
+                    mode: PoolMode::parse(lj.get("mode").as_str().unwrap_or(""))
+                        .ok_or_else(|| anyhow::anyhow!("bad pool mode"))?,
+                    size: lj.get("size").as_usize().unwrap_or(0),
+                    stride: lj.get("stride").as_usize().unwrap_or(1),
+                    relu: lj.get("relu").as_bool().unwrap_or(false),
+                },
+                "lrn" => Layer::Lrn {
+                    name: lname,
+                    size: lj.get("size").as_usize().unwrap_or(5),
+                    alpha: lj.get("alpha").as_f64().unwrap_or(1e-4),
+                    beta: lj.get("beta").as_f64().unwrap_or(0.75),
+                    k: lj.get("k").as_f64().unwrap_or(1.0),
+                },
+                "fc" => Layer::Fc {
+                    name: lname,
+                    out: lj.get("out").as_usize().unwrap_or(0),
+                    relu: lj.get("relu").as_bool().unwrap_or(false),
+                },
+                other => anyhow::bail!("unknown layer kind {other:?}"),
+            };
+            layers.push(layer);
+        }
+        Ok(Network {
+            name,
+            in_c: input[0],
+            in_h: input[1],
+            in_w: input[2],
+            classes: j.get("classes").as_usize().unwrap_or(0),
+            layers,
+        })
+    }
+
+    /// Serialize to the manifest JSON schema (used by the .cdm header).
+    pub fn to_json(&self) -> Json {
+        let layers: Vec<Json> = self
+            .layers
+            .iter()
+            .map(|l| match l {
+                Layer::Conv { name, nk, kh, kw, stride, pad, relu } => Json::obj(vec![
+                    ("name", Json::str(name.clone())),
+                    ("kind", Json::str("conv")),
+                    ("nk", Json::num(*nk as f64)),
+                    ("kh", Json::num(*kh as f64)),
+                    ("kw", Json::num(*kw as f64)),
+                    ("stride", Json::num(*stride as f64)),
+                    ("pad", Json::num(*pad as f64)),
+                    ("relu", Json::Bool(*relu)),
+                ]),
+                Layer::Pool { name, mode, size, stride, relu } => Json::obj(vec![
+                    ("name", Json::str(name.clone())),
+                    ("kind", Json::str("pool")),
+                    ("mode", Json::str(mode.as_str())),
+                    ("size", Json::num(*size as f64)),
+                    ("stride", Json::num(*stride as f64)),
+                    ("relu", Json::Bool(*relu)),
+                ]),
+                Layer::Lrn { name, size, alpha, beta, k } => Json::obj(vec![
+                    ("name", Json::str(name.clone())),
+                    ("kind", Json::str("lrn")),
+                    ("size", Json::num(*size as f64)),
+                    ("alpha", Json::num(*alpha)),
+                    ("beta", Json::num(*beta)),
+                    ("k", Json::num(*k)),
+                ]),
+                Layer::Fc { name, out, relu } => Json::obj(vec![
+                    ("name", Json::str(name.clone())),
+                    ("kind", Json::str("fc")),
+                    ("out", Json::num(*out as f64)),
+                    ("relu", Json::Bool(*relu)),
+                ]),
+            })
+            .collect();
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            (
+                "input",
+                Json::arr(vec![
+                    Json::num(self.in_c as f64),
+                    Json::num(self.in_h as f64),
+                    Json::num(self.in_w as f64),
+                ]),
+            ),
+            ("classes", Json::num(self.classes as f64)),
+            ("layers", Json::arr(layers)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn conv_spec_output_geometry() {
+        // AlexNet conv1: 227x227, k11, s4, p0 -> 55x55.
+        let s = ConvSpec {
+            in_c: 3, in_h: 227, in_w: 227, nk: 96, kh: 11, kw: 11,
+            stride: 4, pad: 0, relu: true,
+        };
+        assert_eq!((s.out_h(), s.out_w()), (55, 55));
+        // CIFAR conv1: 32x32, k5, s1, p2 -> 32x32 (same).
+        let s = ConvSpec {
+            in_c: 3, in_h: 32, in_w: 32, nk: 32, kh: 5, kw: 5,
+            stride: 1, pad: 2, relu: false,
+        };
+        assert_eq!((s.out_h(), s.out_w()), (32, 32));
+    }
+
+    #[test]
+    fn pool_out_caffe_semantics() {
+        assert_eq!(pool_out(24, 2, 2), 12); // lenet pool1
+        assert_eq!(pool_out(32, 3, 2), 16); // cifar pool1 (ceil)
+        assert_eq!(pool_out(55, 3, 2), 27); // alexnet pool1
+        assert_eq!(pool_out(13, 3, 2), 6); // alexnet pool5
+        // The clip: stride > size can push the last window out of bounds.
+        assert_eq!(pool_out(9, 2, 3), 3); // unclipped formula would give 4
+    }
+
+    #[test]
+    fn signature_matches_python_format() {
+        let s = ConvSpec {
+            in_c: 20, in_h: 12, in_w: 12, nk: 50, kh: 5, kw: 5,
+            stride: 1, pad: 0, relu: false,
+        };
+        assert_eq!(s.signature(), "c20x12x12_k50x5x5_s1_p0_n");
+    }
+
+    #[test]
+    fn lenet_shape_propagation() {
+        let net = zoo::lenet5();
+        let shapes = net.shapes();
+        let get = |n: &str| shapes.iter().find(|(name, _)| name == n).unwrap().1;
+        assert_eq!(get("conv1"), (20, 24, 24));
+        assert_eq!(get("pool1"), (20, 12, 12));
+        assert_eq!(get("conv2"), (50, 8, 8));
+        assert_eq!(get("pool2"), (50, 4, 4));
+        assert_eq!(get("fc2"), (10, 1, 1));
+    }
+
+    #[test]
+    fn alexnet_param_shapes() {
+        let net = zoo::alexnet();
+        let params = net.param_shapes();
+        let get = |n: &str| params.iter().find(|(name, _, _)| name == n).unwrap().clone();
+        assert_eq!(get("conv1").1, vec![96, 3, 11, 11]);
+        assert_eq!(get("conv2").1, vec![256, 96, 5, 5]);
+        assert_eq!(get("fc6").1, vec![9216, 4096]);
+        assert_eq!(get("fc8").1, vec![4096, 1000]);
+    }
+
+    #[test]
+    fn heaviest_conv_matches_manifest_expectation() {
+        assert_eq!(zoo::lenet5().heaviest_conv().0, "conv2");
+        assert_eq!(zoo::cifar10().heaviest_conv().0, "conv2");
+        assert_eq!(zoo::alexnet().heaviest_conv().0, "conv2");
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        for net in [zoo::lenet5(), zoo::cifar10(), zoo::alexnet()] {
+            let j = net.to_json();
+            let back = Network::from_json(&j).unwrap();
+            assert_eq!(back, net);
+        }
+    }
+}

@@ -1,0 +1,124 @@
+//! Weight-blob loading: `artifacts/weights/<net>.bin` is a flat
+//! little-endian f32 stream of (w, b) pairs in forward order with
+//! canonical shapes (conv OIHW, fc (in, out)), as written by
+//! `python/compile/aot.py::_write_blob`.
+
+use std::fs;
+use std::path::Path;
+
+use crate::tensor::Tensor;
+use crate::Result;
+
+use super::manifest::Manifest;
+use super::network::Network;
+
+/// Parameters of one network: (w, b) per parameterized layer, forward
+/// order, canonical layouts.
+#[derive(Debug, Clone)]
+pub struct Params {
+    pub pairs: Vec<(String, Tensor, Tensor)>,
+}
+
+impl Params {
+    /// Look up one layer's (w, b).
+    pub fn get(&self, layer: &str) -> Option<(&Tensor, &Tensor)> {
+        self.pairs
+            .iter()
+            .find(|(n, _, _)| n == layer)
+            .map(|(_, w, b)| (w, b))
+    }
+
+    /// Total parameter count.
+    pub fn count(&self) -> usize {
+        self.pairs.iter().map(|(_, w, b)| w.len() + b.len()).sum()
+    }
+
+    /// Flat (w, b, w, b, ...) view for fused-artifact argument lists.
+    pub fn flat(&self) -> Vec<&Tensor> {
+        let mut out = Vec::with_capacity(self.pairs.len() * 2);
+        for (_, w, b) in &self.pairs {
+            out.push(w);
+            out.push(b);
+        }
+        out
+    }
+}
+
+/// Load a raw blob against a network's expected parameter shapes.
+pub fn load_blob(path: &Path, net: &Network) -> Result<Params> {
+    let raw = fs::read(path)
+        .map_err(|e| anyhow::anyhow!("cannot read weights {}: {e}", path.display()))?;
+    anyhow::ensure!(raw.len() % 4 == 0, "weight blob not f32-aligned");
+    let vals: Vec<f32> = raw
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    let shapes = net.param_shapes();
+    let expected: usize = shapes
+        .iter()
+        .map(|(_, w, b)| w.iter().product::<usize>() + b.iter().product::<usize>())
+        .sum();
+    anyhow::ensure!(
+        vals.len() == expected,
+        "weight blob for {} has {} f32s, expected {expected}",
+        net.name,
+        vals.len()
+    );
+    let mut pairs = Vec::new();
+    let mut off = 0usize;
+    for (name, w_shape, b_shape) in shapes {
+        let wn: usize = w_shape.iter().product();
+        let bn: usize = b_shape.iter().product();
+        let w = Tensor::new(w_shape, vals[off..off + wn].to_vec());
+        off += wn;
+        let b = Tensor::new(b_shape, vals[off..off + bn].to_vec());
+        off += bn;
+        pairs.push((name, w, b));
+    }
+    Ok(Params { pairs })
+}
+
+/// Load a network's weights through the manifest index.
+pub fn load_weights(manifest: &Manifest, net: &Network) -> Result<Params> {
+    let meta = manifest
+        .weights
+        .get(&net.name)
+        .ok_or_else(|| anyhow::anyhow!("no weights for {} in manifest", net.name))?;
+    load_blob(&manifest.dir.join(&meta.path), net)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::default_dir;
+    use crate::model::zoo;
+
+    #[test]
+    fn loads_all_networks() {
+        let dir = default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        for net in zoo::all() {
+            let p = load_weights(&m, &net).unwrap();
+            let expected = net.param_shapes().len();
+            assert_eq!(p.pairs.len(), expected);
+            assert_eq!(p.flat().len(), 2 * expected);
+            // Trained/initialized weights are finite and not all zero.
+            let (w1, _) = p.get(&net.param_shapes()[0].0).unwrap();
+            assert!(w1.data().iter().all(|x| x.is_finite()));
+            assert!(w1.data().iter().any(|&x| x != 0.0));
+        }
+    }
+
+    #[test]
+    fn wrong_size_blob_rejected() {
+        let dir = std::env::temp_dir().join("cnndroid-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("short.bin");
+        std::fs::write(&path, [0u8; 16]).unwrap();
+        assert!(load_blob(&path, &zoo::lenet5()).is_err());
+    }
+}

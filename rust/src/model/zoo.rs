@@ -1,0 +1,141 @@
+//! Builtin copies of the three benchmark networks (paper Table 2 /
+//! Fig. 8).  The manifest is the deployment source of truth; these
+//! constructors exist so the simulator, tests, and docs work without
+//! built artifacts, and a parity test (`integration_runtime`) asserts
+//! they match the manifest byte-for-byte through JSON.
+
+use super::network::{Layer, Network, PoolMode};
+
+fn conv(name: &str, nk: usize, k: usize, stride: usize, pad: usize, relu: bool) -> Layer {
+    Layer::Conv { name: name.into(), nk, kh: k, kw: k, stride, pad, relu }
+}
+
+fn pool(name: &str, mode: PoolMode, size: usize, stride: usize, relu: bool) -> Layer {
+    Layer::Pool { name: name.into(), mode, size, stride, relu }
+}
+
+fn lrn(name: &str) -> Layer {
+    Layer::Lrn { name: name.into(), size: 5, alpha: 1e-4, beta: 0.75, k: 1.0 }
+}
+
+fn fc(name: &str, out: usize, relu: bool) -> Layer {
+    Layer::Fc { name: name.into(), out, relu }
+}
+
+/// LeNet-5 for the digit corpus (paper: MNIST).
+pub fn lenet5() -> Network {
+    Network {
+        name: "lenet5".into(),
+        in_c: 1,
+        in_h: 28,
+        in_w: 28,
+        classes: 10,
+        layers: vec![
+            conv("conv1", 20, 5, 1, 0, false),
+            pool("pool1", PoolMode::Max, 2, 2, false),
+            conv("conv2", 50, 5, 1, 0, false),
+            pool("pool2", PoolMode::Max, 2, 2, false),
+            fc("fc1", 500, true),
+            fc("fc2", 10, false),
+        ],
+    }
+}
+
+/// Krizhevsky's cifar10_quick (paper Table 2, middle column).
+pub fn cifar10() -> Network {
+    Network {
+        name: "cifar10".into(),
+        in_c: 3,
+        in_h: 32,
+        in_w: 32,
+        classes: 10,
+        layers: vec![
+            conv("conv1", 32, 5, 1, 2, false),
+            pool("pool1", PoolMode::Max, 3, 2, true), // Table 2: Pooling+ReLU
+            conv("conv2", 32, 5, 1, 2, true),
+            pool("pool2", PoolMode::Avg, 3, 2, false),
+            conv("conv3", 64, 5, 1, 2, true),
+            pool("pool3", PoolMode::Avg, 3, 2, false),
+            fc("fc1", 64, false),
+            fc("fc2", 10, false),
+        ],
+    }
+}
+
+/// AlexNet for ImageNet 2012 (paper Fig. 8; pool5 included and final FC
+/// plain, per DESIGN.md §9).
+pub fn alexnet() -> Network {
+    Network {
+        name: "alexnet".into(),
+        in_c: 3,
+        in_h: 227,
+        in_w: 227,
+        classes: 1000,
+        layers: vec![
+            conv("conv1", 96, 11, 4, 0, true),
+            pool("pool1", PoolMode::Max, 3, 2, false),
+            lrn("norm1"),
+            conv("conv2", 256, 5, 1, 2, true),
+            pool("pool2", PoolMode::Max, 3, 2, false),
+            lrn("norm2"),
+            conv("conv3", 384, 3, 1, 1, true),
+            conv("conv4", 384, 3, 1, 1, true),
+            conv("conv5", 256, 3, 1, 1, true),
+            pool("pool5", PoolMode::Max, 3, 2, false),
+            fc("fc6", 4096, true),
+            fc("fc7", 4096, true),
+            fc("fc8", 1000, false),
+        ],
+    }
+}
+
+/// All builtin networks in the paper's reporting order.
+pub fn all() -> Vec<Network> {
+    vec![lenet5(), cifar10(), alexnet()]
+}
+
+/// Look up a builtin network by name.
+pub fn by_name(name: &str) -> Option<Network> {
+    all().into_iter().find(|n| n.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_has_three_networks() {
+        let names: Vec<String> = all().into_iter().map(|n| n.name).collect();
+        assert_eq!(names, vec!["lenet5", "cifar10", "alexnet"]);
+    }
+
+    #[test]
+    fn alexnet_flatten_width_is_9216() {
+        // 256 channels * 6 * 6 after pool5 — requires pool5 to exist.
+        let fc6 = alexnet()
+            .param_shapes()
+            .iter()
+            .find(|(n, _, _)| n == "fc6")
+            .unwrap()
+            .1
+            .clone();
+        assert_eq!(fc6, vec![9216, 4096]);
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        assert!(by_name("lenet5").is_some());
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn conv_flops_ordering_matches_paper_scale() {
+        // LeNet < CIFAR < AlexNet workloads (Table 3's CPU runtimes).
+        let l = lenet5().conv_flops();
+        let c = cifar10().conv_flops();
+        let a = alexnet().conv_flops();
+        assert!(l < c && c < a, "{l} {c} {a}");
+        // AlexNet conv workload is ~1.3 GFLOP-pairs (group=1).
+        assert!(a > 1_000_000_000 && a < 3_000_000_000);
+    }
+}

@@ -1,0 +1,224 @@
+//! The executable cache and execution wrapper around the `xla` crate.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use crate::model::manifest::{ArtifactMeta, Manifest};
+use crate::tensor::Tensor;
+use crate::Result;
+
+/// One argument to an artifact execution: host tensors are uploaded on
+/// the spot; device buffers (static weights, cached by the engine) are
+/// passed through without any copy.
+pub enum Arg<'a> {
+    Host(&'a Tensor),
+    Dev(&'a xla::PjRtBuffer),
+}
+
+/// One compiled artifact, ready to execute.
+pub struct LoadedArtifact {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+    /// Wall time spent compiling this artifact (for the metrics page).
+    pub compile_time: std::time::Duration,
+}
+
+impl LoadedArtifact {
+    /// Execute with host tensors; validates input shapes against the
+    /// manifest metadata and returns the output in the artifact's
+    /// declared shape.
+    pub fn run(&self, inputs: &[&Tensor]) -> Result<Tensor> {
+        let args: Vec<Arg> = inputs.iter().map(|t| Arg::Host(t)).collect();
+        self.run_args(&args)
+    }
+
+    /// Execute with a mix of host tensors and device-resident buffers.
+    /// Re-uploading static weights per call costs hundreds of ms for
+    /// AlexNet's FC layers (EXPERIMENTS.md §Perf); the engine uploads
+    /// them once and passes `Arg::Dev`.
+    pub fn run_args(&self, inputs: &[Arg]) -> Result<Tensor> {
+        anyhow::ensure!(
+            inputs.len() == self.meta.inputs.len(),
+            "{}: got {} inputs, artifact wants {}",
+            self.meta.name,
+            inputs.len(),
+            self.meta.inputs.len()
+        );
+        let client = self.exe.client();
+        // Uploaded host args must outlive the execute call.
+        let mut owned: Vec<Option<xla::PjRtBuffer>> = Vec::with_capacity(inputs.len());
+        for (arg, op) in inputs.iter().zip(&self.meta.inputs) {
+            match arg {
+                Arg::Host(t) => {
+                    anyhow::ensure!(
+                        t.shape() == op.shape.as_slice(),
+                        "{}: input shape {:?} != expected {:?} ({})",
+                        self.meta.name,
+                        t.shape(),
+                        op.shape,
+                        op.layout
+                    );
+                    owned.push(Some(client.buffer_from_host_buffer(t.data(), t.shape(), None)?));
+                }
+                Arg::Dev(_) => owned.push(None),
+            }
+        }
+        let refs: Vec<&xla::PjRtBuffer> = inputs
+            .iter()
+            .zip(&owned)
+            .map(|(arg, o)| match arg {
+                Arg::Host(_) => o.as_ref().expect("uploaded"),
+                Arg::Dev(b) => *b,
+            })
+            .collect();
+        let result = self.exe.execute_b::<&xla::PjRtBuffer>(&refs)?[0][0].to_literal_sync()?;
+        // Lowered with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        let values = out.to_vec::<f32>()?;
+        Ok(Tensor::new(self.meta.output_shape.clone(), values))
+    }
+}
+
+/// PJRT client + lazily-compiled, cached executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<LoadedArtifact>>>,
+}
+
+impl Runtime {
+    /// Create a CPU-PJRT runtime over a built artifact directory.
+    pub fn new(manifest: Manifest) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform string (e.g. "cpu") for diagnostics.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Upload a host tensor to a device-resident buffer (static weights
+    /// are uploaded once and passed to executions as [`Arg::Dev`]).
+    pub fn to_device(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(t.data(), t.shape(), None)?)
+    }
+
+    /// Number of artifacts compiled so far.
+    pub fn loaded_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// Load (compile) an artifact by manifest name, caching the result.
+    pub fn load(&self, name: &str) -> Result<Rc<LoadedArtifact>> {
+        if let Some(hit) = self.cache.borrow().get(name) {
+            return Ok(Rc::clone(hit));
+        }
+        let meta = self
+            .manifest
+            .find(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact {name:?} not in manifest"))?
+            .clone();
+        let path = self.manifest.artifact_path(&meta);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path).map_err(|e| {
+            anyhow::anyhow!("parse HLO text {}: {e}", path.display())
+        })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let loaded = Rc::new(LoadedArtifact {
+            meta,
+            exe,
+            compile_time: t0.elapsed(),
+        });
+        self.cache.borrow_mut().insert(name.to_string(), Rc::clone(&loaded));
+        Ok(loaded)
+    }
+
+    /// Convenience: load + run in one call.
+    pub fn run(&self, name: &str, inputs: &[&Tensor]) -> Result<Tensor> {
+        self.load(name)?.run(inputs)
+    }
+
+    /// Pre-compile every artifact a network/method pair needs (warm-up,
+    /// so first-request latency excludes compilation).
+    pub fn preload(&self, net: &str, method: &str) -> Result<usize> {
+        let names: Vec<String> = self
+            .manifest
+            .artifacts
+            .iter()
+            .filter(|a| {
+                a.net == net
+                    && (a.method == method || a.kind == "fc")
+                    && a.kind != "fused"
+            })
+            .map(|a| a.name.clone())
+            .collect();
+        for n in &names {
+            self.load(n)?;
+        }
+        Ok(names.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::default_dir;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(Runtime::new(Manifest::load(&dir).unwrap()).unwrap())
+    }
+
+    #[test]
+    fn loads_and_caches() {
+        let Some(rt) = runtime() else { return };
+        let name = "fc_800x500_r_b1";
+        let a = rt.load(name).unwrap();
+        let b = rt.load(name).unwrap();
+        assert!(Rc::ptr_eq(&a, &b), "cache must dedupe");
+        assert_eq!(rt.loaded_count(), 1);
+    }
+
+    #[test]
+    fn fc_artifact_computes_correctly() {
+        let Some(rt) = runtime() else { return };
+        // fc_64x10: logits = x @ w + b, no relu.
+        let x = Tensor::new(vec![1, 64], (0..64).map(|i| (i as f32) / 64.0).collect());
+        let w = Tensor::new(vec![64, 10], vec![0.01; 640]);
+        let b = Tensor::new(vec![10], (0..10).map(|i| i as f32).collect());
+        let y = rt.run("fc_64x10_n_b1", &[&x, &w, &b]).unwrap();
+        assert_eq!(y.shape(), &[1, 10]);
+        let dot: f32 = (0..64).map(|i| (i as f32) / 64.0 * 0.01).sum();
+        for (i, &v) in y.data().iter().enumerate() {
+            assert!((v - (dot + i as f32)).abs() < 1e-4, "logit {i}: {v}");
+        }
+    }
+
+    #[test]
+    fn shape_validation_rejects_mismatch() {
+        let Some(rt) = runtime() else { return };
+        let x = Tensor::zeros(vec![1, 32]);
+        let w = Tensor::zeros(vec![64, 10]);
+        let b = Tensor::zeros(vec![10]);
+        assert!(rt.run("fc_64x10_n_b1", &[&x, &w, &b]).is_err());
+        assert!(rt.run("fc_64x10_n_b1", &[&x, &w]).is_err());
+    }
+
+    #[test]
+    fn unknown_artifact_errors() {
+        let Some(rt) = runtime() else { return };
+        assert!(rt.load("conv_bogus").is_err());
+    }
+}

@@ -1,0 +1,16 @@
+//! PJRT runtime: load the HLO-text artifacts produced by
+//! `python/compile/aot.py`, compile them once on the CPU PJRT client,
+//! and execute them from the serving hot path.
+//!
+//! Interchange is HLO **text** (not serialized protos): jax >= 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects, while the
+//! text parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! `PjRtClient` is `Rc`-based (neither `Send` nor `Sync`), so a
+//! [`Runtime`] lives on one engine thread; the coordinator gives it a
+//! dedicated thread and communicates over channels (the same topology
+//! as the paper's single RenderScript dispatch thread).
+
+pub mod exec;
+
+pub use exec::{Arg, LoadedArtifact, Runtime};

@@ -1,0 +1,396 @@
+//! Per-layer, per-method analytic cost model.
+//!
+//! Every conv layer is costed as a roofline over the device's compute
+//! and cache-reload limits plus dispatch overhead:
+//!
+//! ```text
+//!   t_layer(frame) = max(t_compute, t_traffic) + t_dispatch
+//!   t_compute = flops / (ach_gflops * simd_eff * occupancy * throttle)
+//!   t_traffic = bytes / cache_gbps          (per-thread reload traffic)
+//!   t_dispatch = base + min(threads, cap) * per_thread
+//! ```
+//!
+//! The *method-to-method structural differences* of the paper appear as:
+//!
+//! * `simd_eff` — basic-parallel issues scalar ops in the vec4 ALU
+//!   (¼ utilization, and no dual-issue: 0.125 total); the SIMD methods
+//!   use full vec4 lanes, derated by channel divisibility (§4.3: "the
+//!   number of channels is usually divisible by 4").
+//! * traffic per output — `kh*kw*c*(1 + 1/outputs_per_thread)` words:
+//!   computing 4/8 outputs per thread re-loads the frame window fewer
+//!   times (§4.4: "decreasing the number of times that the frames and
+//!   kernels are loaded into the GPU cache").
+//! * `occupancy` — fewer threads (advanced methods) can under-fill the
+//!   machine: `occ = t / (t + threads_half)` (the paper's "excessive
+//!   reduction in the number of running threads", §6.3).
+//! * throttling — sustained GPU runs derate the clock; the M9's
+//!   Snapdragon 810 throttles early and hard (§6.3).
+
+use crate::model::network::{ConvSpec, Layer, Network};
+
+use super::device::DeviceSpec;
+
+/// The paper's execution methods (Tables 3/4 column order).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Method {
+    CpuSeq,
+    BasicParallel,
+    BasicSimd,
+    AdvancedSimd4,
+    AdvancedSimd8,
+}
+
+impl Method {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Method::CpuSeq => "cpu-seq",
+            Method::BasicParallel => "basic-parallel",
+            Method::BasicSimd => "basic-simd",
+            Method::AdvancedSimd4 => "advanced-simd-4",
+            Method::AdvancedSimd8 => "advanced-simd-8",
+        }
+    }
+
+    /// All GPU methods in table order.
+    pub fn gpu_methods() -> [Method; 4] {
+        [
+            Method::BasicParallel,
+            Method::BasicSimd,
+            Method::AdvancedSimd4,
+            Method::AdvancedSimd8,
+        ]
+    }
+
+    /// Output elements computed per GPU thread (§4.2-4.4).
+    pub fn outputs_per_thread(self) -> u64 {
+        match self {
+            Method::AdvancedSimd4 => 4,
+            Method::AdvancedSimd8 => 8,
+            _ => 1,
+        }
+    }
+}
+
+/// Sequential-CPU GFLOP/s for an inner loop of `inner` MAC words
+/// (Java-like rate rising with loop length; see `DeviceSpec`).
+fn cpu_seq_rate(dev: &DeviceSpec, inner: f64) -> f64 {
+    (dev.cpu_base_gflops + dev.cpu_slope_gflops * inner).min(dev.cpu_cap_gflops)
+}
+
+/// Sequential-CPU time of a conv layer for one frame, seconds.
+pub fn conv_time_seq(dev: &DeviceSpec, spec: &ConvSpec) -> f64 {
+    let inner = (spec.kh * spec.kw * spec.in_c) as f64;
+    spec.flops() as f64 / (cpu_seq_rate(dev, inner) * 1e9)
+}
+
+/// GPU time of a conv layer for one frame at a given throttle state,
+/// seconds.  `throttle` is the current clock multiplier (1.0 = cold).
+pub fn conv_time_gpu(dev: &DeviceSpec, spec: &ConvSpec, method: Method, throttle: f64) -> f64 {
+    assert!(method != Method::CpuSeq, "use conv_time_seq for the baseline");
+    let out_elems = (spec.out_h() * spec.out_w() * spec.nk) as u64;
+    let opt = method.outputs_per_thread();
+    let threads = (out_elems / opt).max(1) as f64;
+    let inner_words = (spec.kh * spec.kw * spec.in_c) as f64;
+
+    // SIMD utilization.
+    let simd_eff = match method {
+        // Scalar slot of the vec4 ALU, no dual-issue.
+        Method::BasicParallel => 0.125,
+        // vec4 over channels; partial last vector when c % 4 != 0.
+        _ => {
+            let c = spec.in_c as f64;
+            let padded = (spec.in_c as f64 / 4.0).ceil() * 4.0;
+            c / padded
+        }
+    };
+
+    // Soft occupancy: advanced methods shrink the thread grid.
+    let occ = threads / (threads + dev.threads_half);
+
+    let t_compute =
+        spec.flops() as f64 / (dev.gpu_ach_gflops * 1e9 * simd_eff * occ * throttle);
+
+    // Per-thread reload traffic: frame window once per thread, kernels
+    // once per output.  basic-parallel's NCHW width-innermost walk is
+    // uncoalesced across channels (~2x wasted cache-line words), and
+    // strided windows (AlexNet conv1, stride 4) defeat cache-line reuse
+    // between neighbouring threads proportionally to the stride.
+    let coalesce = if method == Method::BasicParallel { 2.0 } else { 1.0 };
+    let stride_penalty = spec.stride as f64;
+    let words =
+        out_elems as f64 * inner_words * (1.0 + 1.0 / opt as f64) * coalesce * stride_penalty;
+    let t_traffic = words * 4.0 / (dev.cache_gbps * 1e9 * throttle);
+
+    // Dispatch: RenderScript forEach per frame; the 8-element method
+    // needs two output Allocations (§5) => two dispatch setups.
+    let allocs = if method == Method::AdvancedSimd8 { 2.0 } else { 1.0 };
+    let t_dispatch = (dev.launch_base_ms * allocs
+        + (threads.min(dev.launch_cap as f64) * dev.launch_per_thread_us) / 1e3)
+        / 1e3;
+
+    t_compute.max(t_traffic) + t_dispatch
+}
+
+/// Time of one FC layer for one frame, seconds.
+fn fc_time(dev: &DeviceSpec, d_in: usize, d_out: usize, on_gpu: bool, throttle: f64) -> f64 {
+    let flops = 2.0 * d_in as f64 * d_out as f64;
+    if on_gpu {
+        // A matrix-vector product is traffic-bound: every weight is
+        // read exactly once per frame.
+        let t_traffic = (d_in * d_out) as f64 * 4.0 / (dev.cache_gbps * 1e9 * throttle);
+        let t_compute = flops / (dev.gpu_ach_gflops * 1e9 * throttle);
+        let t_dispatch = dev.launch_base_ms / 1e3;
+        t_compute.max(t_traffic) + t_dispatch
+    } else {
+        // Long contiguous inner loop: sequential CPU at its d_in rate.
+        flops / (cpu_seq_rate(dev, d_in as f64) * 1e9)
+    }
+}
+
+/// Time of one pooling layer for one frame, seconds.
+fn pool_time(dev: &DeviceSpec, c: usize, oh: usize, ow: usize, size: usize, mt: bool) -> f64 {
+    // One compare/add per window element; simple streaming op.
+    let ops = (c * oh * ow * size * size) as f64;
+    let rate = dev.cpu_pool_gops * 1e9 * if mt { dev.cpu_mt_speedup } else { 1.0 };
+    ops / rate
+}
+
+/// Time of one LRN layer for one frame, seconds.
+fn lrn_time(dev: &DeviceSpec, c: usize, h: usize, w: usize, size: usize, mt: bool) -> f64 {
+    // size MACs + a powf (~12 flops) per element.
+    let ops = (c * h * w) as f64 * (size as f64 * 2.0 + 12.0);
+    let rate = dev.cpu_pool_gops * 1e9 * if mt { dev.cpu_mt_speedup } else { 1.0 };
+    ops / rate
+}
+
+/// Simulated forward-path times for one (device, network, method).
+#[derive(Debug, Clone)]
+pub struct NetworkTimes {
+    /// Whole forward path for the batch, seconds.
+    pub total_s: f64,
+    /// The heaviest conv layer's share (Table 4's subject), seconds.
+    pub heaviest_conv_s: f64,
+    /// Final throttle multiplier at the end of the run (diagnostic).
+    pub end_throttle: f64,
+}
+
+/// Simulate the full forward path of `net` for a `batch` of frames.
+///
+/// Frames run serially through each layer (paper §4.2); the ReLU and
+/// layout-swap work is hidden in CPU idle time (Fig. 5) and therefore
+/// contributes no time to the accelerated methods.  Pool/LRN run
+/// multithreaded on CPU in accelerated modes (§6.3), sequential in the
+/// baseline.  FC layers ride the GPU only for AlexNet (§6.3).
+pub fn network_times(
+    dev: &DeviceSpec,
+    net: &Network,
+    method: Method,
+    batch: usize,
+) -> NetworkTimes {
+    let specs: std::collections::BTreeMap<String, ConvSpec> =
+        net.conv_specs().into_iter().collect();
+    let heaviest = net.heaviest_conv().0;
+    let accel = method != Method::CpuSeq;
+    let fc_on_gpu = accel && net.name == "alexnet";
+
+    let mut total = 0.0f64;
+    let mut heaviest_total = 0.0f64;
+    let mut gpu_busy = 0.0f64; // accumulated accelerator seconds (throttle driver)
+
+    for _frame in 0..batch {
+        let shapes = net.shapes();
+        for (li, layer) in net.layers.iter().enumerate() {
+            let (in_c, in_h, in_w) = shapes[li].1;
+            let (out_c, out_h, out_w) = shapes[li + 1].1;
+            let dt = match layer {
+                Layer::Conv { name, .. } => {
+                    let spec = &specs[name.as_str()];
+                    let dt = if accel {
+                        let throttle = current_throttle(dev, gpu_busy);
+                        let t = conv_time_gpu(dev, spec, method, throttle);
+                        gpu_busy += t;
+                        // Host <-> Allocation copies of the frame and
+                        // result (Fig. 7 "copy data to the input
+                        // Allocations" / "copy the calculated output").
+                        let bytes = 4.0
+                            * ((in_c * in_h * in_w) as f64 + (out_c * out_h * out_w) as f64);
+                        t + bytes / (dev.copy_gbps * 1e9)
+                    } else {
+                        conv_time_seq(dev, spec)
+                    };
+                    if name == &heaviest {
+                        heaviest_total += dt;
+                    }
+                    dt
+                }
+                Layer::Pool { size, .. } => {
+                    // out shape recorded in shapes propagation
+                    pool_time(dev, out_c, out_h, out_w, *size, accel)
+                }
+                Layer::Lrn { size, .. } => lrn_time(dev, in_c, in_h, in_w, *size, accel),
+                Layer::Fc { out, .. } => {
+                    let t = fc_time(
+                        dev,
+                        in_c * in_h * in_w,
+                        *out,
+                        fc_on_gpu,
+                        current_throttle(dev, gpu_busy),
+                    );
+                    if fc_on_gpu {
+                        gpu_busy += t;
+                    }
+                    t
+                }
+            };
+            total += dt;
+        }
+    }
+    NetworkTimes {
+        total_s: total,
+        heaviest_conv_s: heaviest_total,
+        end_throttle: current_throttle(dev, gpu_busy),
+    }
+}
+
+/// Clock multiplier after `busy_s` seconds of accumulated GPU work:
+/// cold clock until `throttle_after_s`, then a smooth ramp down to the
+/// sustained `throttle_factor`.
+fn current_throttle(dev: &DeviceSpec, busy_s: f64) -> f64 {
+    if busy_s <= dev.throttle_after_s {
+        return 1.0;
+    }
+    // Exponential approach to the sustained clock.
+    let over = busy_s - dev.throttle_after_s;
+    let tau = dev.throttle_after_s.max(1.0);
+    dev.throttle_factor + (1.0 - dev.throttle_factor) * (-over / tau).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::simulator::device::{galaxy_note4, htc_one_m9};
+
+    fn speedup(dev: &DeviceSpec, net: &Network, m: Method, batch: usize) -> f64 {
+        let seq = network_times(dev, net, Method::CpuSeq, batch);
+        let acc = network_times(dev, net, m, batch);
+        seq.total_s / acc.total_s
+    }
+
+    #[test]
+    fn gpu_methods_beat_cpu_everywhere() {
+        for dev in [galaxy_note4(), htc_one_m9()] {
+            for net in zoo::all() {
+                for m in Method::gpu_methods() {
+                    let s = speedup(&dev, &net, m, 16);
+                    assert!(s > 1.0, "{} {} {:?}: speedup {s}", dev.name, net.name, m);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn method_ordering_holds() {
+        // Basic SIMD >= basic parallel, advanced-4 >= basic SIMD
+        // (Table 3: monotone left to right up to the adv-8 caveat).
+        for dev in [galaxy_note4(), htc_one_m9()] {
+            for net in zoo::all() {
+                let bp = speedup(&dev, &net, Method::BasicParallel, 16);
+                let bs = speedup(&dev, &net, Method::BasicSimd, 16);
+                let a4 = speedup(&dev, &net, Method::AdvancedSimd4, 16);
+                assert!(bs >= bp * 0.98, "{} {}: bs {bs} < bp {bp}", dev.name, net.name);
+                assert!(a4 >= bs * 0.98, "{} {}: a4 {a4} < bs {bs}", dev.name, net.name);
+            }
+        }
+    }
+
+    #[test]
+    fn speedups_grow_with_network_size() {
+        // Table 3: LeNet < CIFAR < AlexNet for every accelerated
+        // method.  On the M9 the model's aggressive throttling can
+        // compress AlexNet toward CIFAR for the weakest method, so the
+        // CIFAR-vs-AlexNet ordering is asserted strictly on the Note 4
+        // and within a 1.5x band on the M9.
+        for dev in [galaxy_note4(), htc_one_m9()] {
+            let strict = dev.name.contains("Note 4");
+            for m in Method::gpu_methods() {
+                let l = speedup(&dev, &zoo::lenet5(), m, 16);
+                let c = speedup(&dev, &zoo::cifar10(), m, 16);
+                let a = speedup(&dev, &zoo::alexnet(), m, 16);
+                assert!(l < c && l < a, "{} {:?}: {l} {c} {a}", dev.name, m);
+                if strict {
+                    assert!(c < a, "{} {:?}: {c} !< {a}", dev.name, m);
+                } else {
+                    assert!(a > c / 1.5, "{} {:?}: {c} vs {a}", dev.name, m);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn conv_speedup_exceeds_whole_network_speedup() {
+        // Amdahl: Table 4's conv-only speedups top Table 3's.
+        let dev = galaxy_note4();
+        let net = zoo::alexnet();
+        let seq = network_times(&dev, &net, Method::CpuSeq, 16);
+        let acc = network_times(&dev, &net, Method::AdvancedSimd4, 16);
+        let whole = seq.total_s / acc.total_s;
+        let conv = seq.heaviest_conv_s / acc.heaviest_conv_s;
+        assert!(conv > whole, "conv {conv} <= whole {whole}");
+    }
+
+    #[test]
+    fn note4_beats_m9_on_imagenet_long_run() {
+        // §6.3: "the speedup in ImageNet 2012 on Galaxy Note 4 is
+        // approximately 30% higher than HTC One M9" (throttling).
+        let n4 = speedup(&galaxy_note4(), &zoo::alexnet(), Method::AdvancedSimd4, 16);
+        let m9 = speedup(&htc_one_m9(), &zoo::alexnet(), Method::AdvancedSimd4, 16);
+        assert!(n4 > m9 * 1.1, "note4 {n4} vs m9 {m9}");
+        assert!(n4 < m9 * 2.2, "gap implausibly large: {n4} vs {m9}");
+    }
+
+    #[test]
+    fn adv8_regresses_below_adv4_somewhere() {
+        // §6.3: "we see the opposite in some cases like CIFAR-10 on
+        // Galaxy Note 4 ... excessive reduction in the number of
+        // running threads."  The model must reproduce at least one
+        // adv-8 < adv-4 cell among the small networks.
+        let mut regressed = false;
+        for dev in [galaxy_note4(), htc_one_m9()] {
+            for net in [zoo::lenet5(), zoo::cifar10()] {
+                let a4 = speedup(&dev, &net, Method::AdvancedSimd4, 16);
+                let a8 = speedup(&dev, &net, Method::AdvancedSimd8, 16);
+                if a8 < a4 {
+                    regressed = true;
+                }
+            }
+        }
+        assert!(regressed, "adv-8 never regressed below adv-4 on small nets");
+    }
+
+    #[test]
+    fn throttle_monotone_decreasing() {
+        let dev = htc_one_m9();
+        let mut last = 2.0;
+        for s in [0.0, 2.0, 4.0, 8.0, 16.0, 64.0] {
+            let t = current_throttle(&dev, s);
+            assert!(t <= last + 1e-12);
+            assert!(t >= dev.throttle_factor - 1e-12);
+            last = t;
+        }
+    }
+
+    #[test]
+    fn lenet_cifar_reach_realtime() {
+        // §6.3: "realtime performance is achieved in LeNet-5 and
+        // CIFAR-10, where at worst case in HTC One M9, 75.8 and 37.4
+        // frames per second".  Check our simulated FPS is realtime-ish
+        // (>= 20 fps) on the worst device/method-4 combination.
+        let dev = htc_one_m9();
+        for net in [zoo::lenet5(), zoo::cifar10()] {
+            let t = network_times(&dev, &net, Method::AdvancedSimd4, 16);
+            let fps = 16.0 / t.total_s;
+            assert!(fps > 20.0, "{}: {fps} fps", net.name);
+        }
+    }
+}

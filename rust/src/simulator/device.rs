@@ -1,0 +1,173 @@
+//! Device descriptors for the paper's Table 1 phones, plus the
+//! calibration constants of the analytic cost model.
+//!
+//! The *descriptive* fields (cores, clocks, SIMD width) come straight
+//! from Table 1 / §3 of the paper; the *calibration* fields are global
+//! per-device constants fitted once against the paper's measured
+//! Tables 3/4 (they stand in for everything we cannot measure on 2015
+//! silicon: driver dispatch cost, cache behavior, thermal policy).
+
+/// One mobile platform (phone) in the evaluation.
+#[derive(Debug, Clone)]
+pub struct DeviceSpec {
+    pub name: &'static str,
+    pub soc: &'static str,
+    pub gpu_name: &'static str,
+    pub os: &'static str,
+
+    // ---- descriptive (Table 1 / §3) ----
+    /// GPU clock in MHz.
+    pub gpu_freq_mhz: u32,
+    /// Shader cores (Mali-T760: 6).
+    pub shader_cores: u32,
+    /// 32-bit SIMD lanes per shader core (Mali: 2 ALUs x vec4).
+    pub lanes_per_core: u32,
+    /// Big-core CPU clock in MHz (Cortex-A57 cluster).
+    pub cpu_freq_mhz: u32,
+    /// Number of big CPU cores.
+    pub cpu_big_cores: u32,
+
+    // ---- calibration (fitted, global per device) ----
+    /// Achievable GPU GFLOP/s at full SIMD utilization and occupancy
+    /// (compute roofline after driver/issue losses).
+    pub gpu_ach_gflops: f64,
+    /// Effective cache/LSU bandwidth for per-thread reload traffic, GB/s.
+    pub cache_gbps: f64,
+    /// Fixed cost per RenderScript `forEach` dispatch, ms.
+    pub launch_base_ms: f64,
+    /// Host <-> Allocation copy bandwidth (Fig. 7 data movement), GB/s.
+    pub copy_gbps: f64,
+    /// Per-thread driver setup cost, µs, saturating at `launch_cap`.
+    pub launch_per_thread_us: f64,
+    /// Thread count beyond which dispatch setup stops growing.
+    pub launch_cap: u64,
+    /// Soft-occupancy half constant: eff = t/(t+T). Bigger GPUs need
+    /// more threads in flight to hide latency.
+    pub threads_half: f64,
+    /// Single-thread CPU (Java-like) GFLOP/s at zero inner-loop length.
+    /// The paper's measured Tables show the Java baseline speeding up
+    /// with the conv inner-loop length (kh*kw*c): LeNet/CIFAR run at
+    /// roughly half the AlexNet per-flop rate, so the model is
+    /// `eff = base + slope * inner`, capped at `cpu_cap_gflops`.
+    pub cpu_base_gflops: f64,
+    /// GFLOP/s gained per inner-loop word (JIT/locality amortization).
+    pub cpu_slope_gflops: f64,
+    /// Upper bound on the sequential rate.
+    pub cpu_cap_gflops: f64,
+    /// Sequential CPU Gop/s on simple streaming ops (pool/LRN windows).
+    pub cpu_pool_gops: f64,
+    /// Multithreaded CPU speedup over sequential for pool/LRN (§6.3).
+    pub cpu_mt_speedup: f64,
+    /// GPU-busy seconds after which thermal throttling engages.
+    pub throttle_after_s: f64,
+    /// Sustained clock multiplier once throttled.
+    pub throttle_factor: f64,
+}
+
+impl DeviceSpec {
+    /// Theoretical peak f32 GFLOP/s (Table 1 arithmetic: lanes x clock
+    /// x 2 for multiply-add). For the Note 4 this is the paper's
+    /// "maximum of 48 operations in parallel" times 650 MHz.
+    pub fn gpu_peak_gflops(&self) -> f64 {
+        let lanes = (self.shader_cores * self.lanes_per_core) as f64;
+        lanes * self.gpu_freq_mhz as f64 * 1e6 * 2.0 / 1e9
+    }
+
+    /// Parallel f32 lanes (the paper's "48 operations may run in
+    /// parallel" for the Note 4).
+    pub fn parallel_ops(&self) -> u32 {
+        self.shader_cores * self.lanes_per_core
+    }
+}
+
+/// Samsung Galaxy Note 4 (SM-N910C): Exynos 5433, Mali-T760 MP6.
+pub fn galaxy_note4() -> DeviceSpec {
+    DeviceSpec {
+        name: "Samsung Galaxy Note 4",
+        soc: "Exynos 5433",
+        gpu_name: "Mali-T760 (6 shader cores) @ 650MHz",
+        os: "Android 5.1.1",
+        gpu_freq_mhz: 650,
+        shader_cores: 6,
+        lanes_per_core: 8, // 2 x 128-bit VLIW ALUs x four 32-bit lanes
+        cpu_freq_mhz: 1900,
+        cpu_big_cores: 4,
+
+        gpu_ach_gflops: 13.6,
+        cache_gbps: 22.0,
+        launch_base_ms: 0.5,
+        copy_gbps: 1.0,
+        launch_per_thread_us: 1.5,
+        launch_cap: 3000,
+        threads_half: 150.0,
+        cpu_base_gflops: 0.052,
+        cpu_slope_gflops: 4.2e-5,
+        cpu_cap_gflops: 0.30,
+        cpu_pool_gops: 0.30,
+        cpu_mt_speedup: 3.4,
+        throttle_after_s: 40.0,
+        throttle_factor: 0.93,
+    }
+}
+
+/// HTC One M9: Snapdragon 810, Adreno 430.
+pub fn htc_one_m9() -> DeviceSpec {
+    DeviceSpec {
+        name: "HTC One M9",
+        soc: "Snapdragon 810",
+        gpu_name: "Adreno 430 @ 600MHz",
+        os: "Android 5.1.1",
+        gpu_freq_mhz: 600,
+        shader_cores: 4,
+        lanes_per_core: 48, // 192 f32 ALU lanes organized in 4 clusters
+        cpu_freq_mhz: 2000,
+        cpu_big_cores: 4,
+
+        gpu_ach_gflops: 17.5,
+        cache_gbps: 26.0,
+        launch_base_ms: 1.0,
+        copy_gbps: 1.0,
+        launch_per_thread_us: 1.2,
+        launch_cap: 4000,
+        threads_half: 4000.0,
+        cpu_base_gflops: 0.035,
+        cpu_slope_gflops: 5.0e-5,
+        cpu_cap_gflops: 0.30,
+        cpu_pool_gops: 0.30,
+        cpu_mt_speedup: 3.4,
+        // Snapdragon 810 was notorious for aggressive thermal limits;
+        // the paper attributes the M9's ImageNet deficit to it (§6.3).
+        throttle_after_s: 0.5,
+        throttle_factor: 0.55,
+    }
+}
+
+/// Both evaluation devices in the paper's reporting order.
+pub fn all_devices() -> Vec<DeviceSpec> {
+    vec![galaxy_note4(), htc_one_m9()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn note4_matches_paper_arithmetic() {
+        let d = galaxy_note4();
+        // §6.3: "a maximum of 6 x 2 x 128/32 = 48 operations may run in
+        // parallel" on the Note 4.
+        assert_eq!(d.parallel_ops(), 48);
+        // Peak = 48 lanes * 0.65 GHz * 2 = 62.4 GFLOP/s.
+        assert!((d.gpu_peak_gflops() - 62.4).abs() < 0.1);
+        // Achievable < peak.
+        assert!(d.gpu_ach_gflops < d.gpu_peak_gflops());
+    }
+
+    #[test]
+    fn m9_throttles_harder_than_note4() {
+        let n4 = galaxy_note4();
+        let m9 = htc_one_m9();
+        assert!(m9.throttle_after_s < n4.throttle_after_s);
+        assert!(m9.throttle_factor < n4.throttle_factor);
+    }
+}

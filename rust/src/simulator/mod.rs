@@ -1,0 +1,21 @@
+//! Mobile-GPU performance simulator (DESIGN.md §2): the substitute for
+//! the paper's 2015 Android silicon.  Tables 3/4 compare acceleration
+//! methods *on that hardware*; this module reproduces the comparison
+//! from an analytic cost model of the two phones in Table 1 —
+//! shader-core/SIMD compute rooflines, cache-reload traffic,
+//! RenderScript dispatch overhead, soft occupancy, and sustained-run
+//! thermal throttling — calibrated by a small set of global constants
+//! (per device, not per table cell).
+//!
+//! * [`device`] — Table 1 device descriptors.
+//! * [`cost`] — per-layer, per-method time model.
+//! * [`tables`] — Table 3 / Table 4 row generators with the paper's
+//!   reported numbers alongside for comparison.
+
+pub mod cost;
+pub mod device;
+pub mod tables;
+
+pub use cost::{network_times, Method, NetworkTimes};
+pub use device::{galaxy_note4, htc_one_m9, DeviceSpec};
+pub use tables::{table3, table4, Row};

@@ -1,0 +1,245 @@
+//! Generators for the paper's Table 3 (whole-network speedup) and
+//! Table 4 (heaviest-conv-layer speedup), with the published numbers
+//! embedded for side-by-side comparison.  `examples/reproduce_tables.rs`
+//! and `benches/bench_table{3,4}.rs` print these.
+
+use crate::model::zoo;
+use crate::simulator::cost::{network_times, Method};
+use crate::simulator::device::{all_devices, DeviceSpec};
+
+/// One table row: device x network, baseline ms + per-method speedups.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub device: String,
+    pub network: String,
+    /// CPU-only sequential runtime, ms (simulated).
+    pub cpu_ms: f64,
+    /// Speedups in table order: basic parallel, basic SIMD, adv-4, adv-8.
+    pub speedups: [f64; 4],
+    /// The paper's measured CPU ms for this cell.
+    pub paper_cpu_ms: f64,
+    /// The paper's measured speedups for this cell.
+    pub paper_speedups: [f64; 4],
+}
+
+impl Row {
+    /// Largest |log-ratio| between simulated and paper speedups —
+    /// the table-shape fidelity metric recorded in EXPERIMENTS.md.
+    pub fn max_log_error(&self) -> f64 {
+        self.speedups
+            .iter()
+            .zip(&self.paper_speedups)
+            .map(|(s, p)| (s / p).ln().abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Paper Table 3 ground truth (device, net, cpu_ms, 4 speedups).
+const PAPER_TABLE3: [(&str, &str, f64, [f64; 4]); 6] = [
+    ("Samsung Galaxy Note 4", "lenet5", 984.0, [3.15, 3.26, 4.89, 4.82]),
+    ("Samsung Galaxy Note 4", "cifar10", 5015.0, [5.59, 8.55, 12.76, 12.38]),
+    ("Samsung Galaxy Note 4", "alexnet", 332_284.0, [11.32, 28.46, 38.49, 40.22]),
+    ("HTC One M9", "lenet5", 1298.0, [4.24, 4.26, 6.15, 4.89]),
+    ("HTC One M9", "cifar10", 5210.0, [5.06, 8.07, 12.17, 10.50]),
+    ("HTC One M9", "alexnet", 342_116.0, [7.83, 17.35, 28.88, 28.37]),
+];
+
+/// Paper Table 4 ground truth (heaviest conv layer).
+const PAPER_TABLE4: [(&str, &str, f64, [f64; 4]); 6] = [
+    ("Samsung Galaxy Note 4", "lenet5", 707.0, [7.00, 10.24, 23.56, 24.37]),
+    ("Samsung Galaxy Note 4", "cifar10", 2592.0, [7.24, 13.86, 21.42, 21.42]),
+    ("Samsung Galaxy Note 4", "alexnet", 94_010.0, [10.85, 34.56, 56.02, 63.43]),
+    ("HTC One M9", "lenet5", 988.0, [8.23, 13.53, 18.64, 14.31]),
+    ("HTC One M9", "cifar10", 2696.0, [7.34, 14.34, 22.09, 19.39]),
+    ("HTC One M9", "alexnet", 93_250.0, [7.62, 20.91, 43.11, 38.32]),
+];
+
+fn simulate(paper: &[(&str, &str, f64, [f64; 4]); 6], conv_only: bool, batch: usize) -> Vec<Row> {
+    let devices = all_devices();
+    let mut rows = Vec::new();
+    for &(dev_name, net_name, paper_cpu, paper_speedups) in paper {
+        let dev: &DeviceSpec = devices
+            .iter()
+            .find(|d| d.name == dev_name)
+            .expect("device in zoo");
+        let net = zoo::by_name(net_name).expect("network in zoo");
+        let seq = network_times(dev, &net, Method::CpuSeq, batch);
+        let pick = |t: &crate::simulator::cost::NetworkTimes| {
+            if conv_only {
+                t.heaviest_conv_s
+            } else {
+                t.total_s
+            }
+        };
+        let base = pick(&seq);
+        let mut speedups = [0.0f64; 4];
+        for (i, m) in Method::gpu_methods().into_iter().enumerate() {
+            let acc = network_times(dev, &net, m, batch);
+            speedups[i] = base / pick(&acc);
+        }
+        rows.push(Row {
+            device: dev_name.to_string(),
+            network: net_name.to_string(),
+            cpu_ms: base * 1e3,
+            speedups,
+            paper_cpu_ms: paper_cpu,
+            paper_speedups,
+        });
+    }
+    rows
+}
+
+/// Simulated Table 3 (whole-network, batch of 16 frames).
+pub fn table3() -> Vec<Row> {
+    simulate(&PAPER_TABLE3, false, 16)
+}
+
+/// Simulated Table 4 (heaviest conv layer, batch of 16 frames).
+pub fn table4() -> Vec<Row> {
+    simulate(&PAPER_TABLE4, true, 16)
+}
+
+/// Render rows in the paper's layout, simulated vs published.
+pub fn render(title: &str, rows: &[Row]) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "{title}\n{:<24} {:<8} | {:>12} {:>7} {:>7} {:>7} {:>7} | {:>12} {:>7} {:>7} {:>7} {:>7}\n",
+        "device", "net", "sim cpu ms", "bp", "bsimd", "adv4", "adv8", "paper cpu", "bp",
+        "bsimd", "adv4", "adv8"
+    ));
+    for r in rows {
+        s.push_str(&format!(
+            "{:<24} {:<8} | {:>12.0} {:>7.2} {:>7.2} {:>7.2} {:>7.2} | {:>12.0} {:>7.2} {:>7.2} {:>7.2} {:>7.2}\n",
+            r.device,
+            r.network,
+            r.cpu_ms,
+            r.speedups[0],
+            r.speedups[1],
+            r.speedups[2],
+            r.speedups[3],
+            r.paper_cpu_ms,
+            r.paper_speedups[0],
+            r.paper_speedups[1],
+            r.paper_speedups[2],
+            r.paper_speedups[3],
+        ));
+    }
+    s
+}
+
+/// The §6.3 headline claims, checked against the simulated tables.
+/// Returns (claim text, holds?) pairs for `reproduce_tables --claims`.
+pub fn claims() -> Vec<(String, bool)> {
+    let t3 = table3();
+    let t4 = table4();
+    let cell3 = |d: &str, n: &str| t3.iter().find(|r| r.device == d && r.network == n).unwrap();
+    let _cell4 = |d: &str, n: &str| t4.iter().find(|r| r.device == d && r.network == n).unwrap();
+
+    let mut out = Vec::new();
+
+    // "The highest achieved speedup is 63.4 for ImageNet 2012 on Galaxy
+    // Note 4" — our max conv speedup lands on the same cell, >40x.
+    let best = t4
+        .iter()
+        .flat_map(|r| r.speedups.iter().map(move |s| (r, *s)))
+        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap();
+    out.push((
+        format!(
+            "max conv speedup on Note4/ImageNet (paper 63.4x, sim {:.1}x on {}/{})",
+            best.1, best.0.device, best.0.network
+        ),
+        best.0.device.contains("Note 4") && best.0.network == "alexnet" && best.1 > 40.0,
+    ));
+
+    // Realtime LeNet/CIFAR on the M9 (75.8 / 37.4 fps in the paper).
+    let fps_lenet = 16.0 / (cell3("HTC One M9", "lenet5").cpu_ms / 1e3
+        / cell3("HTC One M9", "lenet5").speedups[2]);
+    let fps_cifar = 16.0 / (cell3("HTC One M9", "cifar10").cpu_ms / 1e3
+        / cell3("HTC One M9", "cifar10").speedups[2]);
+    out.push((
+        format!("realtime on M9: lenet {fps_lenet:.1} fps (paper 75.8), cifar {fps_cifar:.1} fps (paper 37.4)"),
+        fps_lenet > 30.0 && fps_cifar > 20.0,
+    ));
+
+    // Note 4 ~30% ahead of M9 on ImageNet.
+    let ratio = cell3("Samsung Galaxy Note 4", "alexnet").speedups[2]
+        / cell3("HTC One M9", "alexnet").speedups[2];
+    out.push((
+        format!("Note4/M9 ImageNet adv-4 speedup ratio {ratio:.2} (paper 38.49/28.88 = 1.33)"),
+        ratio > 1.1 && ratio < 1.7,
+    ));
+
+    // adv-8 regression on a small network (paper: CIFAR-10 on Note 4).
+    let regressed = t3
+        .iter()
+        .filter(|r| r.network != "alexnet")
+        .any(|r| r.speedups[3] < r.speedups[2]);
+    out.push(("adv-8 regresses below adv-4 on a small network".to_string(), regressed));
+
+    // Conv-layer speedups (Table 4) exceed whole-network (Table 3).
+    let amdahl = t4.iter().zip(&t3).all(|(c, w)| c.speedups[2] >= w.speedups[2]);
+    out.push(("conv speedups exceed whole-network speedups (Amdahl)".to_string(), amdahl));
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tables_have_six_rows_each() {
+        assert_eq!(table3().len(), 6);
+        assert_eq!(table4().len(), 6);
+    }
+
+    #[test]
+    fn simulated_speedups_within_2x_of_paper() {
+        // The calibration bar from DESIGN.md: per-cell speedups within a
+        // factor ~2 of the paper (shape, not absolute replication).
+        for (name, rows) in [("table3", table3()), ("table4", table4())] {
+            for r in rows {
+                let err = r.max_log_error();
+                assert!(
+                    err < std::f64::consts::LN_2 * 1.35,
+                    "{name} {}/{}: sim {:?} vs paper {:?} (log err {err:.2})",
+                    r.device,
+                    r.network,
+                    r.speedups,
+                    r.paper_speedups
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn simulated_cpu_runtime_magnitudes_sane() {
+        // Baselines should land within ~2.5x of the paper's ms numbers.
+        for r in table3() {
+            let ratio = r.cpu_ms / r.paper_cpu_ms;
+            assert!(
+                (0.4..2.5).contains(&ratio),
+                "{}/{}: sim {:.0}ms vs paper {:.0}ms",
+                r.device,
+                r.network,
+                r.cpu_ms,
+                r.paper_cpu_ms
+            );
+        }
+    }
+
+    #[test]
+    fn all_claims_hold() {
+        for (claim, ok) in claims() {
+            assert!(ok, "claim failed: {claim}");
+        }
+    }
+
+    #[test]
+    fn render_contains_all_rows() {
+        let s = render("Table 3", &table3());
+        assert!(s.contains("lenet5") && s.contains("alexnet"));
+        assert!(s.lines().count() >= 8);
+    }
+}

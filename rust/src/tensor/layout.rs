@@ -1,0 +1,149 @@
+//! The paper's "dimension swapping" (§4.3): rearrange arrays so the
+//! channel axis is the lowest dimension and the SIMD unit consumes
+//! contiguous channel vectors.  On the mobile GPU this was done on CPU
+//! idle time while the GPU computed the previous frame; the Fig. 5
+//! pipeline in `coordinator::pipeline` schedules these functions the
+//! same way.
+
+use super::Tensor;
+
+/// NCHW activation -> NHWC ("dimension swapping" of a frame batch).
+pub fn nchw_to_nhwc(x: &Tensor) -> Tensor {
+    let (n, c, h, w) = dims4(x);
+    let src = x.data();
+    let mut out = vec![0.0f32; src.len()];
+    for ni in 0..n {
+        for ci in 0..c {
+            for hi in 0..h {
+                let src_row = ((ni * c + ci) * h + hi) * w;
+                for wi in 0..w {
+                    out[((ni * h + hi) * w + wi) * c + ci] = src[src_row + wi];
+                }
+            }
+        }
+    }
+    Tensor::new(vec![n, h, w, c], out)
+}
+
+/// NHWC activation -> NCHW (inverse swap, used before flattening for FC).
+pub fn nhwc_to_nchw(x: &Tensor) -> Tensor {
+    let (n, h, w, c) = dims4(x);
+    let src = x.data();
+    let mut out = vec![0.0f32; src.len()];
+    for ni in 0..n {
+        for hi in 0..h {
+            for wi in 0..w {
+                let src_row = ((ni * h + hi) * w + wi) * c;
+                for ci in 0..c {
+                    out[((ni * c + ci) * h + hi) * w + wi] = src[src_row + ci];
+                }
+            }
+        }
+    }
+    Tensor::new(vec![n, c, h, w], out)
+}
+
+/// OIHW conv weights -> HWIO (the weight half of dimension swapping).
+pub fn oihw_to_hwio(w: &Tensor) -> Tensor {
+    let (o, i, kh, kw) = dims4(w);
+    let src = w.data();
+    let mut out = vec![0.0f32; src.len()];
+    for oi in 0..o {
+        for ii in 0..i {
+            for hi in 0..kh {
+                let src_row = ((oi * i + ii) * kh + hi) * kw;
+                for wi in 0..kw {
+                    out[((hi * kw + wi) * i + ii) * o + oi] = src[src_row + wi];
+                }
+            }
+        }
+    }
+    Tensor::new(vec![kh, kw, i, o], out)
+}
+
+/// HWIO conv weights -> OIHW (inverse).
+pub fn hwio_to_oihw(w: &Tensor) -> Tensor {
+    let (kh, kw, i, o) = dims4(w);
+    let src = w.data();
+    let mut out = vec![0.0f32; src.len()];
+    for hi in 0..kh {
+        for wi in 0..kw {
+            for ii in 0..i {
+                let src_row = ((hi * kw + wi) * i + ii) * o;
+                for oi in 0..o {
+                    out[((oi * i + ii) * kh + hi) * kw + wi] = src[src_row + oi];
+                }
+            }
+        }
+    }
+    Tensor::new(vec![o, i, kh, kw], out)
+}
+
+fn dims4(x: &Tensor) -> (usize, usize, usize, usize) {
+    let s = x.shape();
+    assert_eq!(s.len(), 4, "expected 4-D tensor, got {:?}", s);
+    (s[0], s[1], s[2], s[3])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn random(shape: Vec<usize>, seed: u64) -> Tensor {
+        let n = shape.iter().product();
+        let mut rng = Pcg::seeded(seed);
+        Tensor::new(shape, rng.normal_vec(n, 1.0))
+    }
+
+    #[test]
+    fn nchw_nhwc_roundtrip() {
+        let t = random(vec![2, 3, 5, 7], 1);
+        let back = nhwc_to_nchw(&nchw_to_nhwc(&t));
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn oihw_hwio_roundtrip() {
+        let w = random(vec![8, 3, 5, 5], 2);
+        let back = hwio_to_oihw(&oihw_to_hwio(&w));
+        assert_eq!(back, w);
+    }
+
+    #[test]
+    fn swap_places_channels_last() {
+        // x[n=0, c, h, w] = 100*c + 10*h + w for a tiny tensor.
+        let mut t = Tensor::zeros(vec![1, 2, 2, 2]);
+        for c in 0..2 {
+            for h in 0..2 {
+                for w in 0..2 {
+                    let idx = t.idx4(0, c, h, w);
+                    t.data_mut()[idx] = (100 * c + 10 * h + w) as f32;
+                }
+            }
+        }
+        let s = nchw_to_nhwc(&t);
+        assert_eq!(s.shape(), &[1, 2, 2, 2]);
+        // s[n, h, w, c]
+        assert_eq!(s.at4(0, 0, 0, 0), 0.0); // c0 h0 w0
+        assert_eq!(s.at4(0, 0, 0, 1), 100.0); // c1 h0 w0
+        assert_eq!(s.at4(0, 1, 0, 0), 10.0); // c0 h1 w0
+        assert_eq!(s.at4(0, 1, 1, 1), 111.0); // c1 h1 w1
+    }
+
+    #[test]
+    fn weight_swap_matches_definition() {
+        let w = random(vec![4, 3, 2, 2], 3);
+        let s = oihw_to_hwio(&w);
+        assert_eq!(s.shape(), &[2, 2, 3, 4]);
+        for o in 0..4 {
+            for i in 0..3 {
+                for h in 0..2 {
+                    for x in 0..2 {
+                        assert_eq!(w.at4(o, i, h, x), s.at4(h, x, i, o));
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,214 @@
+//! Host tensors and layout transforms.
+//!
+//! The engine moves data between the CPU layers (canonical NCHW, like
+//! the paper's Java baseline) and the accelerated layers (NHWC after the
+//! paper's "dimension swapping", §4.3).  [`Tensor`] is a dense row-major
+//! f32 array with a dynamic shape; [`layout`] holds the swap routines
+//! that the Fig. 5 pipeline schedules into accelerator-busy windows.
+
+pub mod layout;
+
+pub use layout::{hwio_to_oihw, nchw_to_nhwc, nhwc_to_nchw, oihw_to_hwio};
+
+use std::fmt;
+
+/// Dense row-major f32 tensor with a dynamic shape.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Construct from parts; panics if the element count mismatches.
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, data.len(), "shape {shape:?} wants {n} elements, got {}", data.len());
+        Tensor { shape, data }
+    }
+
+    /// All-zeros tensor.
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    /// Shape as a slice.
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Total element count.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Raw data slice.
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable raw data slice.
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Consume into the raw vec.
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape of identical element count.
+    pub fn reshape(mut self, shape: Vec<usize>) -> Tensor {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, self.data.len(), "reshape {:?} -> {shape:?}", self.shape);
+        self.shape = shape;
+        self
+    }
+
+    /// Dimension `i` (panics when out of range).
+    pub fn dim(&self, i: usize) -> usize {
+        self.shape[i]
+    }
+
+    /// 4-D index -> flat offset (row-major).
+    #[inline]
+    pub fn idx4(&self, a: usize, b: usize, c: usize, d: usize) -> usize {
+        debug_assert_eq!(self.shape.len(), 4);
+        ((a * self.shape[1] + b) * self.shape[2] + c) * self.shape[3] + d
+    }
+
+    /// Element access for 4-D tensors.
+    #[inline]
+    pub fn at4(&self, a: usize, b: usize, c: usize, d: usize) -> f32 {
+        self.data[self.idx4(a, b, c, d)]
+    }
+
+    /// Slice out frame `i` of the leading (batch) dimension.
+    pub fn frame(&self, i: usize) -> Tensor {
+        assert!(!self.shape.is_empty() && i < self.shape[0]);
+        let stride: usize = self.shape[1..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[0] = 1;
+        Tensor::new(shape, self.data[i * stride..(i + 1) * stride].to_vec())
+    }
+
+    /// Concatenate tensors along the leading dimension (shapes must
+    /// otherwise agree).
+    pub fn stack(frames: &[Tensor]) -> Tensor {
+        assert!(!frames.is_empty());
+        let tail = &frames[0].shape[1..];
+        let mut data = Vec::with_capacity(frames.iter().map(|f| f.len()).sum());
+        let mut n0 = 0;
+        for f in frames {
+            assert_eq!(&f.shape[1..], tail, "stack shape mismatch");
+            n0 += f.shape[0];
+            data.extend_from_slice(&f.data);
+        }
+        let mut shape = frames[0].shape.clone();
+        shape[0] = n0;
+        Tensor::new(shape, data)
+    }
+
+    /// Maximum absolute difference against another tensor.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Index of the maximum element (argmax over the whole tensor).
+    pub fn argmax(&self) -> usize {
+        let mut best = 0;
+        for (i, &x) in self.data.iter().enumerate() {
+            if x > self.data[best] {
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// In-place ReLU.
+    pub fn relu_inplace(&mut self) {
+        for x in &mut self.data {
+            if *x < 0.0 {
+                *x = 0.0;
+            }
+        }
+    }
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}[{} elems]", self.shape, self.data.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_element_count() {
+        let t = Tensor::new(vec![2, 3], (0..6).map(|i| i as f32).collect());
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.len(), 6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn new_rejects_bad_count() {
+        Tensor::new(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn idx4_row_major() {
+        let t = Tensor::zeros(vec![2, 3, 4, 5]);
+        assert_eq!(t.idx4(0, 0, 0, 0), 0);
+        assert_eq!(t.idx4(0, 0, 0, 1), 1);
+        assert_eq!(t.idx4(0, 0, 1, 0), 5);
+        assert_eq!(t.idx4(0, 1, 0, 0), 20);
+        assert_eq!(t.idx4(1, 0, 0, 0), 60);
+        assert_eq!(t.idx4(1, 2, 3, 4), 119);
+    }
+
+    #[test]
+    fn frame_and_stack_roundtrip() {
+        let t = Tensor::new(vec![3, 2, 2], (0..12).map(|i| i as f32).collect());
+        let frames: Vec<Tensor> = (0..3).map(|i| t.frame(i)).collect();
+        assert_eq!(frames[1].data(), &[4.0, 5.0, 6.0, 7.0]);
+        let back = Tensor::stack(&frames);
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn argmax_and_relu() {
+        let mut t = Tensor::new(vec![4], vec![-1.0, 3.0, 2.0, -5.0]);
+        assert_eq!(t.argmax(), 1);
+        t.relu_inplace();
+        assert_eq!(t.data(), &[0.0, 3.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn max_abs_diff_zero_for_identical() {
+        let t = Tensor::new(vec![2], vec![1.0, 2.0]);
+        assert_eq!(t.max_abs_diff(&t.clone()), 0.0);
+        let u = Tensor::new(vec![2], vec![1.0, 2.5]);
+        assert_eq!(t.max_abs_diff(&u), 0.5);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::new(vec![2, 3], (0..6).map(|i| i as f32).collect());
+        let r = t.clone().reshape(vec![3, 2]);
+        assert_eq!(r.data(), t.data());
+        assert_eq!(r.shape(), &[3, 2]);
+    }
+}

@@ -1,0 +1,242 @@
+//! Tiny CLI argument parser (clap substitute).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! generates usage text.  Declarative enough for the `cnndroid` binary,
+//! the examples, and the bench harnesses.
+
+use std::collections::BTreeMap;
+
+/// One declared option.
+#[derive(Debug, Clone)]
+struct OptSpec {
+    name: &'static str,
+    help: &'static str,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Declarative argument parser.
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    program: &'static str,
+    about: &'static str,
+    opts: Vec<OptSpec>,
+    positionals: Vec<(&'static str, &'static str)>,
+}
+
+/// Parsed arguments.
+#[derive(Debug, Clone)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positionals: Vec<String>,
+}
+
+impl ArgSpec {
+    pub fn new(program: &'static str, about: &'static str) -> Self {
+        ArgSpec { program, about, opts: Vec::new(), positionals: Vec::new() }
+    }
+
+    /// Declare `--name <value>` with a default.
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare `--name <value>` with no default (optional).
+    pub fn opt_no_default(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: false });
+        self
+    }
+
+    /// Declare a boolean `--name` flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    /// Declare a positional argument (documentation only).
+    pub fn positional(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positionals.push((name, help));
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.program, self.about, self.program);
+        for (p, _) in &self.positionals {
+            s.push_str(&format!(" <{}>", p));
+        }
+        s.push_str(" [OPTIONS]\n\nOPTIONS:\n");
+        for o in &self.opts {
+            let head = if o.is_flag {
+                format!("  --{}", o.name)
+            } else if let Some(d) = &o.default {
+                format!("  --{} <val> (default: {})", o.name, d)
+            } else {
+                format!("  --{} <val>", o.name)
+            };
+            s.push_str(&format!("{:<44} {}\n", head, o.help));
+        }
+        for (p, h) in &self.positionals {
+            s.push_str(&format!("  <{:<10}> {}\n", p, h));
+        }
+        s
+    }
+
+    /// Parse from an iterator of tokens (not including argv[0]).
+    pub fn parse_from<I: IntoIterator<Item = String>>(
+        &self,
+        argv: I,
+    ) -> Result<Args, String> {
+        let mut args = Args {
+            values: BTreeMap::new(),
+            flags: Vec::new(),
+            positionals: Vec::new(),
+        };
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                args.values.insert(o.name.to_string(), d.clone());
+            }
+        }
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (name, inline_val) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| format!("unknown option --{}\n\n{}", name, self.usage()))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("flag --{} takes no value", name));
+                    }
+                    args.flags.push(name);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("option --{} needs a value", name))?,
+                    };
+                    args.values.insert(name, val);
+                }
+            } else {
+                args.positionals.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse process args; on error or --help print and exit.
+    pub fn parse(&self) -> Args {
+        match self.parse_from(std::env::args().skip(1)) {
+            Ok(a) => a,
+            Err(msg) => {
+                eprintln!("{}", msg);
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> &str {
+        self.values.get(name).map(|s| s.as_str()).unwrap_or("")
+    }
+
+    pub fn get_opt(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get(name).parse().unwrap_or_else(|_| {
+            eprintln!("option --{} expects an integer, got {:?}", name, self.get(name));
+            std::process::exit(2);
+        })
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.get(name).parse().unwrap_or_else(|_| {
+            eprintln!("option --{} expects a number, got {:?}", name, self.get(name));
+            std::process::exit(2);
+        })
+    }
+
+    pub fn has(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+
+    pub fn positional(&self, idx: usize) -> Option<&str> {
+        self.positionals.get(idx).map(|s| s.as_str())
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ArgSpec {
+        ArgSpec::new("t", "test")
+            .opt("net", "lenet5", "network")
+            .opt("batch", "16", "batch size")
+            .flag("verbose", "log more")
+            .opt_no_default("addr", "bind address")
+    }
+
+    fn parse(toks: &[&str]) -> Args {
+        spec().parse_from(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]);
+        assert_eq!(a.get("net"), "lenet5");
+        assert_eq!(a.get_usize("batch"), 16);
+        assert!(!a.has("verbose"));
+        assert_eq!(a.get_opt("addr"), None);
+    }
+
+    #[test]
+    fn overrides_and_flags() {
+        let a = parse(&["--net", "alexnet", "--batch=4", "--verbose", "run"]);
+        assert_eq!(a.get("net"), "alexnet");
+        assert_eq!(a.get_usize("batch"), 4);
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional(0), Some("run"));
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(spec()
+            .parse_from(vec!["--bogus".to_string()])
+            .is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(spec().parse_from(vec!["--net".to_string()]).is_err());
+    }
+
+    #[test]
+    fn help_returns_usage() {
+        let err = spec().parse_from(vec!["--help".to_string()]).unwrap_err();
+        assert!(err.contains("USAGE"));
+        assert!(err.contains("--net"));
+    }
+}

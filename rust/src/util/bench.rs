@@ -1,0 +1,255 @@
+//! Criterion-style micro-benchmark harness (criterion substitute).
+//!
+//! The `[[bench]]` targets are built with `harness = false` and drive
+//! this module: warmup, timed iterations with outlier-robust summaries,
+//! table-formatted output, and `--filter`/`--quick` CLI control shared
+//! by every bench binary.
+
+use std::time::{Duration, Instant};
+
+use super::stats::Samples;
+
+/// Configuration shared by all bench targets.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub target_time: Duration,
+    pub filter: Option<String>,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup_iters: 2,
+            min_iters: 5,
+            max_iters: 50,
+            target_time: Duration::from_secs(2),
+            filter: None,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Parse the conventional bench CLI: `[--quick] [--filter substr]`.
+    /// Also tolerates cargo's `--bench` passthrough token.
+    pub fn from_env() -> Self {
+        let mut cfg = BenchConfig::default();
+        let mut args = std::env::args().skip(1).peekable();
+        while let Some(a) = args.next() {
+            match a.as_str() {
+                "--quick" => {
+                    cfg.warmup_iters = 1;
+                    cfg.min_iters = 2;
+                    cfg.max_iters = 5;
+                    cfg.target_time = Duration::from_millis(300);
+                }
+                "--filter" => cfg.filter = args.next(),
+                "--bench" => {}
+                other if !other.starts_with('-') && cfg.filter.is_none() => {
+                    // bare positional doubles as a filter (cargo bench NAME)
+                    cfg.filter = Some(other.to_string());
+                }
+                _ => {}
+            }
+        }
+        cfg
+    }
+
+    fn matches(&self, name: &str) -> bool {
+        match &self.filter {
+            Some(f) => name.contains(f.as_str()),
+            None => true,
+        }
+    }
+}
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    /// Optional work amount per iteration for throughput reporting.
+    pub items_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn throughput(&self) -> Option<f64> {
+        self.items_per_iter.map(|n| n / self.mean.as_secs_f64())
+    }
+}
+
+/// A named group of benchmark cases with aligned table output.
+pub struct Bench {
+    cfg: BenchConfig,
+    results: Vec<BenchResult>,
+    group: String,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        let cfg = BenchConfig::from_env();
+        println!("\n== bench group: {group} ==");
+        Bench { cfg, results: Vec::new(), group: group.to_string() }
+    }
+
+    pub fn with_config(group: &str, cfg: BenchConfig) -> Self {
+        println!("\n== bench group: {group} ==");
+        Bench { cfg, results: Vec::new(), group: group.to_string() }
+    }
+
+    pub fn config(&self) -> &BenchConfig {
+        &self.cfg
+    }
+
+    /// Time `f` (one call = one iteration).
+    pub fn case<F: FnMut()>(&mut self, name: &str, f: F) -> Option<&BenchResult> {
+        self.case_with_items(name, None, f)
+    }
+
+    /// Time `f`, reporting throughput as `items / mean`.
+    pub fn case_with_items<F: FnMut()>(
+        &mut self,
+        name: &str,
+        items: Option<f64>,
+        mut f: F,
+    ) -> Option<&BenchResult> {
+        if !self.cfg.matches(name) {
+            return None;
+        }
+        for _ in 0..self.cfg.warmup_iters {
+            f();
+        }
+        let mut samples = Samples::new();
+        let started = Instant::now();
+        let mut iters = 0;
+        while iters < self.cfg.min_iters
+            || (iters < self.cfg.max_iters && started.elapsed() < self.cfg.target_time)
+        {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+            iters += 1;
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            iters,
+            mean: Duration::from_secs_f64(samples.mean()),
+            p50: Duration::from_secs_f64(samples.p50()),
+            min: Duration::from_secs_f64(samples.min()),
+            max: Duration::from_secs_f64(samples.max()),
+            items_per_iter: items,
+        };
+        print_row(&res);
+        self.results.push(res);
+        self.results.last()
+    }
+
+    /// All recorded results (for cross-case ratio reporting).
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Mean time of a previously-run case, by name.
+    pub fn mean_of(&self, name: &str) -> Option<Duration> {
+        self.results.iter().find(|r| r.name == name).map(|r| r.mean)
+    }
+
+    /// Print a speedup table of every case vs a baseline case.  Only
+    /// cases sharing the baseline's `group/` prefix (text before the
+    /// first '/') are compared — cross-group ratios are meaningless.
+    pub fn speedup_table(&self, baseline: &str) {
+        let Some(base) = self.mean_of(baseline) else {
+            println!("  (baseline {baseline:?} not run; no speedup table)");
+            return;
+        };
+        let prefix = baseline.split('/').next().unwrap_or("");
+        println!("\n  speedup vs {baseline} ({:.3} ms):", base.as_secs_f64() * 1e3);
+        for r in &self.results {
+            if r.name == baseline || r.name.split('/').next().unwrap_or("") != prefix {
+                continue;
+            }
+            println!(
+                "    {:<44} {:>8.2}x",
+                r.name,
+                base.as_secs_f64() / r.mean.as_secs_f64()
+            );
+        }
+    }
+}
+
+impl Drop for Bench {
+    fn drop(&mut self) {
+        println!("== end group: {} ({} cases) ==", self.group, self.results.len());
+    }
+}
+
+fn print_row(r: &BenchResult) {
+    let tput = match r.throughput() {
+        Some(t) if t >= 1.0 => format!("  {:>10.1} items/s", t),
+        Some(t) => format!("  {:>10.4} items/s", t),
+        None => String::new(),
+    };
+    println!(
+        "  {:<44} mean {:>10.3} ms  p50 {:>10.3} ms  min {:>10.3} ms  (n={}){}",
+        r.name,
+        r.mean.as_secs_f64() * 1e3,
+        r.p50.as_secs_f64() * 1e3,
+        r.min.as_secs_f64() * 1e3,
+        r.iters,
+        tput,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg() -> BenchConfig {
+        BenchConfig {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 3,
+            target_time: Duration::from_millis(1),
+            filter: None,
+        }
+    }
+
+    #[test]
+    fn records_cases_and_speedups() {
+        let mut b = Bench::with_config("test", quick_cfg());
+        b.case("fast", || std::thread::sleep(Duration::from_micros(50)));
+        b.case("slow", || std::thread::sleep(Duration::from_micros(500)));
+        assert_eq!(b.results().len(), 2);
+        let fast = b.mean_of("fast").unwrap();
+        let slow = b.mean_of("slow").unwrap();
+        assert!(slow > fast);
+        b.speedup_table("slow");
+    }
+
+    #[test]
+    fn filter_skips_cases() {
+        let mut cfg = quick_cfg();
+        cfg.filter = Some("keep".into());
+        let mut b = Bench::with_config("test", cfg);
+        assert!(b.case("dropped", || {}).is_none());
+        assert!(b.case("keep-me", || {}).is_some());
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn throughput_reported() {
+        let mut b = Bench::with_config("test", quick_cfg());
+        let r = b
+            .case_with_items("t", Some(100.0), || {
+                std::thread::sleep(Duration::from_micros(100))
+            })
+            .unwrap();
+        assert!(r.throughput().unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,14 @@
+//! In-repo tooling substrates.
+//!
+//! The offline build environment ships only the `xla` crate's dependency
+//! closure, so the usual ecosystem crates (serde, clap, criterion,
+//! proptest, rayon, tokio) are unavailable; per DESIGN.md §3 each needed
+//! capability is implemented here as a small, tested substrate.
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

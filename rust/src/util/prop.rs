@@ -1,0 +1,131 @@
+//! Mini property-testing kit (proptest substitute).
+//!
+//! Seeded generators + a runner that, on failure, reports the iteration
+//! seed so the exact case can be replayed (`CNNDROID_PROP_SEED=<n>`); a
+//! simple halving shrinker reduces integer-vector inputs.  Used by the
+//! `prop_*` integration tests on coordinator/format invariants.
+
+use super::rng::Pcg;
+
+/// Number of cases per property (override with CNNDROID_PROP_CASES).
+pub fn default_cases() -> usize {
+    std::env::var("CNNDROID_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop(rng)` for many seeded cases; panic with the failing seed.
+pub fn check<F>(name: &str, prop: F)
+where
+    F: Fn(&mut Pcg) -> Result<(), String>,
+{
+    let forced: Option<u64> = std::env::var("CNNDROID_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok());
+    let cases = if forced.is_some() { 1 } else { default_cases() };
+    for case in 0..cases {
+        let seed = forced.unwrap_or(0x5eed_0000 + case as u64);
+        let mut rng = Pcg::seeded(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property {name:?} failed at seed {seed} (replay with \
+                 CNNDROID_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert-style helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+/// Generate a vec of integers in [lo, hi).
+pub fn vec_in_range(rng: &mut Pcg, len: usize, lo: i64, hi: i64) -> Vec<i64> {
+    (0..len).map(|_| rng.range(lo, hi)).collect()
+}
+
+/// Shrink a failing integer vector toward minimal size/values: tries
+/// removing halves, then halving elements, re-testing with `fails`.
+pub fn shrink_vec<F>(mut input: Vec<i64>, fails: F) -> Vec<i64>
+where
+    F: Fn(&[i64]) -> bool,
+{
+    // Remove chunks while the failure persists.
+    let mut chunk = input.len() / 2;
+    while chunk > 0 {
+        let mut i = 0;
+        while i + chunk <= input.len() {
+            let mut candidate = input.clone();
+            candidate.drain(i..i + chunk);
+            if fails(&candidate) {
+                input = candidate;
+            } else {
+                i += chunk;
+            }
+        }
+        chunk /= 2;
+    }
+    // Shrink magnitudes.
+    loop {
+        let mut changed = false;
+        for i in 0..input.len() {
+            let mut candidate = input.clone();
+            candidate[i] /= 2;
+            if candidate[i] != input[i] && fails(&candidate) {
+                input = candidate;
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    input
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0usize;
+        let counter = std::cell::Cell::new(0usize);
+        check("always-true", |rng| {
+            counter.set(counter.get() + 1);
+            let _ = rng.next_u32();
+            Ok(())
+        });
+        count += counter.get();
+        assert_eq!(count, default_cases());
+    }
+
+    #[test]
+    #[should_panic(expected = "CNNDROID_PROP_SEED")]
+    fn failing_property_reports_seed() {
+        check("always-false", |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn shrinker_minimizes() {
+        // Failure condition: vector contains an element >= 100.
+        let input = vec![3, 250, 7, 12, 180, 4];
+        let out = shrink_vec(input, |v| v.iter().any(|&x| x >= 100));
+        assert!(out.iter().any(|&x| x >= 100));
+        assert!(out.len() <= 2, "shrunk to {out:?}");
+    }
+
+    #[test]
+    fn vec_in_range_respects_bounds() {
+        let mut rng = Pcg::seeded(1);
+        let v = vec_in_range(&mut rng, 100, -3, 9);
+        assert!(v.iter().all(|&x| (-3..9).contains(&x)));
+    }
+}

@@ -1,0 +1,293 @@
+//! Latency/throughput statistics: streaming summaries, percentile
+//! estimation over recorded samples, and fixed-bucket histograms for the
+//! serving metrics endpoint.
+
+use std::time::Duration;
+
+/// Record of raw samples with summary statistics on demand.
+#[derive(Debug, Clone, Default)]
+pub struct Samples {
+    xs: Vec<f64>,
+    sorted: bool,
+}
+
+impl Samples {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.xs.push(x);
+        self.sorted = false;
+    }
+
+    pub fn push_duration(&mut self, d: Duration) {
+        self.push(d.as_secs_f64());
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        self.xs.iter().sum::<f64>() / self.xs.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.xs.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Sample standard deviation.
+    pub fn std(&self) -> f64 {
+        let n = self.xs.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n - 1) as f64).sqrt()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    /// Linear-interpolated percentile, q in [0, 100].
+    pub fn percentile(&mut self, q: f64) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        self.ensure_sorted();
+        let n = self.xs.len();
+        if n == 1 {
+            return self.xs[0];
+        }
+        let rank = (q / 100.0) * (n - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        let frac = rank - lo as f64;
+        self.xs[lo] * (1.0 - frac) + self.xs[hi] * frac
+    }
+
+    pub fn p50(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p99(&mut self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    /// Raw samples (order unspecified once percentiles were computed).
+    pub fn raw(&self) -> &[f64] {
+        &self.xs
+    }
+
+    /// Absorb another sample set.
+    pub fn merge(&mut self, other: &Samples) {
+        self.xs.extend_from_slice(&other.xs);
+        self.sorted = false;
+    }
+
+    /// One-line human summary in milliseconds (assumes samples are secs).
+    pub fn summary_ms(&mut self) -> String {
+        if self.is_empty() {
+            return "n=0".into();
+        }
+        format!(
+            "n={} mean={:.3}ms p50={:.3}ms p99={:.3}ms min={:.3}ms max={:.3}ms",
+            self.len(),
+            self.mean() * 1e3,
+            self.p50() * 1e3,
+            self.p99() * 1e3,
+            self.min() * 1e3,
+            self.max() * 1e3,
+        )
+    }
+}
+
+/// Log-scale latency histogram (microseconds to ~100 s) with O(1) insert,
+/// for long-running servers where keeping raw samples is unreasonable.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    /// bucket i covers [base * ratio^i, base * ratio^(i+1))
+    counts: Vec<u64>,
+    base: f64,
+    ratio: f64,
+    total: u64,
+    sum: f64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        // 1us .. ~115s with 5% resolution: 1e-6 * 1.05^372 ≈ 115
+        LatencyHistogram {
+            counts: vec![0; 380],
+            base: 1e-6,
+            ratio: 1.05,
+            total: 0,
+            sum: 0.0,
+        }
+    }
+
+    fn bucket(&self, secs: f64) -> usize {
+        if secs <= self.base {
+            return 0;
+        }
+        let i = (secs / self.base).ln() / self.ratio.ln();
+        (i as usize).min(self.counts.len() - 1)
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.record_secs(d.as_secs_f64());
+    }
+
+    pub fn record_secs(&mut self, secs: f64) {
+        let b = self.bucket(secs);
+        self.counts[b] += 1;
+        self.total += 1;
+        self.sum += secs;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    /// Percentile from bucket midpoints (5% resolution).
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return f64::NAN;
+        }
+        let target = ((q / 100.0) * self.total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return self.base * self.ratio.powi(i as i32) * (1.0 + self.ratio) / 2.0;
+            }
+        }
+        f64::NAN
+    }
+
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+    }
+}
+
+/// Throughput counter over a wall-clock window.
+#[derive(Debug, Clone, Default)]
+pub struct Throughput {
+    pub items: u64,
+    pub secs: f64,
+}
+
+impl Throughput {
+    pub fn add(&mut self, items: u64, secs: f64) {
+        self.items += items;
+        self.secs += secs;
+    }
+
+    pub fn per_sec(&self) -> f64 {
+        if self.secs == 0.0 {
+            0.0
+        } else {
+            self.items as f64 / self.secs
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_known_values() {
+        let mut s = Samples::new();
+        for x in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            s.push(x);
+        }
+        assert_eq!(s.mean(), 3.0);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 5.0);
+        assert_eq!(s.p50(), 3.0);
+        assert!((s.percentile(25.0) - 2.0).abs() < 1e-12);
+        assert!((s.std() - (2.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let mut s = Samples::new();
+        s.push(0.0);
+        s.push(10.0);
+        assert!((s.percentile(75.0) - 7.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_samples_are_nan() {
+        let mut s = Samples::new();
+        assert!(s.mean().is_nan());
+        assert!(s.p50().is_nan());
+    }
+
+    #[test]
+    fn histogram_percentiles_approximate() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=1000 {
+            h.record_secs(i as f64 * 1e-3); // 1ms..1s uniform
+        }
+        let p50 = h.percentile(50.0);
+        assert!((p50 - 0.5).abs() / 0.5 < 0.10, "p50={p50}");
+        let p99 = h.percentile(99.0);
+        assert!((p99 - 0.99).abs() / 0.99 < 0.10, "p99={p99}");
+        assert_eq!(h.count(), 1000);
+        assert!((h.mean() - 0.5005).abs() < 1e-3);
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        a.record_secs(0.001);
+        b.record_secs(0.1);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+    }
+
+    #[test]
+    fn throughput() {
+        let mut t = Throughput::default();
+        t.add(100, 2.0);
+        t.add(50, 1.0);
+        assert!((t.per_sec() - 50.0).abs() < 1e-12);
+    }
+}

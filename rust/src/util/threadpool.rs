@@ -1,0 +1,201 @@
+//! Fixed-size thread pool with scoped parallel-for (rayon substitute).
+//!
+//! The paper accelerates pooling/LRN "on mobile CPU via multi-threading";
+//! this pool is what the Rust CPU layers use.  Work is distributed in
+//! contiguous chunks; `scope_for` blocks until every chunk completes.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed pool of worker threads.
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// Spawn `size` workers (clamped to >= 1).
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("cnndroid-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = { rx.lock().unwrap().recv() };
+                        match job {
+                            Ok(job) => {
+                                // Swallow panics so one bad job cannot
+                                // poison the pool; completion counting is
+                                // handled by the latch in scope_for.
+                                let _ = catch_unwind(AssertUnwindSafe(job));
+                            }
+                            Err(_) => break,
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers, size }
+    }
+
+    /// Pool sized to available parallelism.
+    pub fn default_size() -> Self {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        Self::new(n)
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Submit a detached job.
+    pub fn submit(&self, job: Job) {
+        self.tx.as_ref().expect("pool alive").send(job).expect("worker alive");
+    }
+
+    /// Run `f(i)` for every i in 0..n, split into per-worker chunks, and
+    /// wait for completion.  `f` must be Sync since chunks share it.
+    pub fn scope_for<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize) + Send + Sync + 'static,
+    {
+        if n == 0 {
+            return;
+        }
+        let f = Arc::new(f);
+        let chunks = self.size.min(n);
+        let latch = Arc::new(Latch::new(chunks));
+        let chunk = n.div_ceil(chunks);
+        for c in 0..chunks {
+            let f = Arc::clone(&f);
+            let latch = Arc::clone(&latch);
+            let lo = c * chunk;
+            let hi = ((c + 1) * chunk).min(n);
+            self.submit(Box::new(move || {
+                for i in lo..hi {
+                    f(i);
+                }
+                latch.count_down();
+            }));
+        }
+        latch.wait();
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Countdown latch used to join scoped work.
+struct Latch {
+    remaining: AtomicUsize,
+    m: Mutex<()>,
+    cv: Condvar,
+}
+
+impl Latch {
+    fn new(n: usize) -> Self {
+        Latch { remaining: AtomicUsize::new(n), m: Mutex::new(()), cv: Condvar::new() }
+    }
+
+    fn count_down(&self) {
+        if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let _g = self.m.lock().unwrap();
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut g = self.m.lock().unwrap();
+        while self.remaining.load(Ordering::Acquire) > 0 {
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+}
+
+/// Run `f(i)` for i in 0..n on a shared global pool (lazy-initialized).
+pub fn parallel_for<F>(n: usize, f: F)
+where
+    F: Fn(usize) + Send + Sync + 'static,
+{
+    global().scope_for(n, f);
+}
+
+/// The process-wide shared pool.
+pub fn global() -> &'static ThreadPool {
+    use std::sync::OnceLock;
+    static POOL: OnceLock<ThreadPool> = OnceLock::new();
+    POOL.get_or_init(ThreadPool::default_size)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn scope_for_covers_all_indices() {
+        let pool = ThreadPool::new(4);
+        let hits = Arc::new(Mutex::new(vec![0u8; 1000]));
+        let h2 = Arc::clone(&hits);
+        pool.scope_for(1000, move |i| {
+            h2.lock().unwrap()[i] += 1;
+        });
+        assert!(hits.lock().unwrap().iter().all(|&h| h == 1));
+    }
+
+    #[test]
+    fn scope_for_empty_is_noop() {
+        let pool = ThreadPool::new(2);
+        pool.scope_for(0, |_| panic!("must not run"));
+    }
+
+    #[test]
+    fn sum_matches_serial() {
+        let pool = ThreadPool::new(3);
+        let total = Arc::new(AtomicU64::new(0));
+        let t2 = Arc::clone(&total);
+        pool.scope_for(1234, move |i| {
+            t2.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 1234 * 1233 / 2);
+    }
+
+    #[test]
+    fn pool_survives_panicking_job() {
+        let pool = ThreadPool::new(2);
+        pool.submit(Box::new(|| panic!("boom")));
+        let done = Arc::new(AtomicU64::new(0));
+        let d2 = Arc::clone(&done);
+        pool.scope_for(10, move |_| {
+            d2.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(done.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn n_smaller_than_pool() {
+        let pool = ThreadPool::new(8);
+        let total = Arc::new(AtomicU64::new(0));
+        let t2 = Arc::clone(&total);
+        pool.scope_for(3, move |i| {
+            t2.fetch_add(i as u64 + 1, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 6);
+    }
+}

@@ -1,0 +1,121 @@
+//! The cross-substrate numeric contract: the whole forward path of
+//! every benchmark network, computed by (a) the Rust sequential CPU
+//! engine and (b) the accelerated engine over XLA artifacts, must
+//! agree to f32 tolerance — on trained weights, not just random ones.
+
+use cnndroid::coordinator::{Engine, EngineConfig};
+use cnndroid::cpu::forward_seq;
+use cnndroid::data::synth;
+use cnndroid::model::manifest::{default_dir, Manifest};
+use cnndroid::model::weights::load_weights;
+use cnndroid::runtime::Runtime;
+use cnndroid::tensor::Tensor;
+use std::rc::Rc;
+
+fn setup() -> Option<Rc<Runtime>> {
+    let dir = default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Rc::new(Runtime::new(Manifest::load(&dir).unwrap()).unwrap()))
+}
+
+fn engine(rt: &Rc<Runtime>, net: &str, method: &str) -> Engine {
+    Engine::new(
+        Rc::clone(rt),
+        net,
+        EngineConfig { method: method.into(), record_trace: false, preload: false },
+    )
+    .unwrap()
+}
+
+#[test]
+fn lenet_trained_weights_all_methods() {
+    let Some(rt) = setup() else { return };
+    let net = rt.manifest().networks["lenet5"].clone();
+    let params = load_weights(rt.manifest(), &net).unwrap();
+    let (imgs, _) = synth::make_dataset(3, 101, 0.08);
+    let want = forward_seq(&net, &params, &imgs).unwrap();
+    for method in ["basic-parallel", "basic-simd", "advanced-simd-4", "advanced-simd-8", "mxu"] {
+        let got = engine(&rt, "lenet5", method).infer_batch(&imgs).unwrap();
+        let diff = got.max_abs_diff(&want);
+        assert!(diff < 1e-3, "lenet5/{method}: diff {diff}");
+    }
+}
+
+#[test]
+fn cifar_random_weights_all_methods() {
+    let Some(rt) = setup() else { return };
+    let net = rt.manifest().networks["cifar10"].clone();
+    let params = load_weights(rt.manifest(), &net).unwrap();
+    let frames = synth::random_frames(2, net.in_c, net.in_h, net.in_w, 77);
+    let want = forward_seq(&net, &params, &frames).unwrap();
+    for method in ["basic-parallel", "basic-simd", "advanced-simd-4", "advanced-simd-8", "mxu"] {
+        let got = engine(&rt, "cifar10", method).infer_batch(&frames).unwrap();
+        let diff = got.max_abs_diff(&want);
+        assert!(diff < 2e-3, "cifar10/{method}: diff {diff}");
+    }
+}
+
+#[test]
+fn alexnet_single_frame_matches_reference() {
+    let Some(rt) = setup() else { return };
+    let net = rt.manifest().networks["alexnet"].clone();
+    let params = load_weights(rt.manifest(), &net).unwrap();
+    let frame = synth::random_frames(1, net.in_c, net.in_h, net.in_w, 55);
+    // The CPU reference runs AlexNet once (a few GFLOP — release mode
+    // keeps this test in seconds).
+    let want = forward_seq(&net, &params, &frame).unwrap();
+    let got = engine(&rt, "alexnet", "basic-simd").infer_batch(&frame).unwrap();
+    // Logit magnitudes are O(1); 4096-wide reductions accumulate more
+    // f32 error than the small nets.
+    let diff = got.max_abs_diff(&want);
+    assert!(diff < 5e-2, "alexnet/basic-simd: diff {diff}");
+    assert_eq!(got.shape(), &[1, 1000]);
+}
+
+#[test]
+fn alexnet_methods_agree_with_each_other() {
+    let Some(rt) = setup() else { return };
+    let net = rt.manifest().networks["alexnet"].clone();
+    let frame = synth::random_frames(1, net.in_c, net.in_h, net.in_w, 56);
+    let a = engine(&rt, "alexnet", "advanced-simd-4").infer_batch(&frame).unwrap();
+    let b = engine(&rt, "alexnet", "mxu").infer_batch(&frame).unwrap();
+    let diff = a.max_abs_diff(&b);
+    assert!(diff < 5e-2, "adv4 vs mxu diff {diff}");
+}
+
+#[test]
+fn fused_lenet_batch16_matches_layerwise() {
+    let Some(rt) = setup() else { return };
+    let eng = engine(&rt, "lenet5", "basic-simd");
+    let (imgs, _) = synth::make_dataset(16, 33, 0.08);
+    let layered = eng.infer_batch(&imgs).unwrap();
+    let fused = eng.infer_batch_fused(&imgs).unwrap();
+    let diff = fused.max_abs_diff(&layered);
+    assert!(diff < 1e-3, "fused b16 vs layered diff {diff}");
+}
+
+#[test]
+fn classification_consistent_across_methods_on_fixtures() {
+    let Some(rt) = setup() else { return };
+    let dir = default_dir();
+    let (images, labels) = cnndroid::data::fixtures::load_digit_test_set(&dir).unwrap();
+    let n = 16;
+    let subset = Tensor::stack(&(0..n).map(|i| images.frame(i)).collect::<Vec<_>>());
+    let mut all_preds: Vec<Vec<usize>> = Vec::new();
+    for method in ["cpu-seq", "basic-parallel", "advanced-simd-8"] {
+        let preds: Vec<usize> = engine(&rt, "lenet5", method)
+            .classify(&subset)
+            .unwrap()
+            .into_iter()
+            .map(|(l, _)| l)
+            .collect();
+        let correct = preds.iter().zip(&labels[..n]).filter(|(p, l)| **p == **l as usize).count();
+        assert!(correct * 10 >= n * 9, "{method}: {correct}/{n}");
+        all_preds.push(preds);
+    }
+    assert_eq!(all_preds[0], all_preds[1]);
+    assert_eq!(all_preds[0], all_preds[2]);
+}

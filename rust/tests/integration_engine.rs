@@ -1,0 +1,174 @@
+//! Integration: the engine's serving-facing behaviour — plans,
+//! preloading, trace recording, batching shapes, error paths, and the
+//! deployment (.cdm) round trip feeding an engine-compatible model.
+
+use std::rc::Rc;
+
+use cnndroid::coordinator::{Engine, EngineConfig, ExecutionPlan};
+use cnndroid::data::synth;
+use cnndroid::model::manifest::{default_dir, Manifest};
+use cnndroid::model::{convert_to_cdm, load_cdm};
+use cnndroid::runtime::Runtime;
+use cnndroid::tensor::Tensor;
+
+fn setup() -> Option<Rc<Runtime>> {
+    let dir = default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Rc::new(Runtime::new(Manifest::load(&dir).unwrap()).unwrap()))
+}
+
+#[test]
+fn engines_share_one_runtime_and_cache() {
+    let Some(rt) = setup() else { return };
+    let e1 = Engine::new(
+        Rc::clone(&rt),
+        "lenet5",
+        EngineConfig { method: "basic-simd".into(), record_trace: false, preload: true },
+    )
+    .unwrap();
+    let loaded_after_first = rt.loaded_count();
+    assert!(loaded_after_first >= 2);
+    // Second engine with the same method reuses every compiled artifact.
+    let _e2 = Engine::new(
+        Rc::clone(&rt),
+        "lenet5",
+        EngineConfig { method: "basic-simd".into(), record_trace: false, preload: true },
+    )
+    .unwrap();
+    assert_eq!(rt.loaded_count(), loaded_after_first, "cache must dedupe across engines");
+    drop(e1);
+}
+
+#[test]
+fn batch_size_one_and_many_agree() {
+    let Some(rt) = setup() else { return };
+    let eng = Engine::new(
+        Rc::clone(&rt),
+        "lenet5",
+        EngineConfig { method: "advanced-simd-4".into(), record_trace: false, preload: true },
+    )
+    .unwrap();
+    let (imgs, _) = synth::make_dataset(5, 9, 0.05);
+    let batched = eng.infer_batch(&imgs).unwrap();
+    for i in 0..5 {
+        let single = eng.infer_batch(&imgs.frame(i)).unwrap();
+        let row = Tensor::new(vec![1, 10], batched.data()[i * 10..(i + 1) * 10].to_vec());
+        let diff = single.max_abs_diff(&row);
+        assert!(diff < 1e-4, "frame {i}: batched vs single diff {diff}");
+    }
+}
+
+#[test]
+fn wrong_input_shape_is_an_error_not_a_panic() {
+    let Some(rt) = setup() else { return };
+    let eng = Engine::new(
+        Rc::clone(&rt),
+        "lenet5",
+        EngineConfig { method: "basic-simd".into(), record_trace: false, preload: false },
+    )
+    .unwrap();
+    assert!(eng.infer_batch(&Tensor::zeros(vec![1, 3, 28, 28])).is_err());
+    assert!(eng.infer_batch(&Tensor::zeros(vec![2, 1, 32, 32])).is_err());
+}
+
+#[test]
+fn unknown_network_or_method_fail_cleanly() {
+    let Some(rt) = setup() else { return };
+    assert!(Engine::new(Rc::clone(&rt), "vgg16", EngineConfig::default()).is_err());
+    assert!(Engine::new(
+        Rc::clone(&rt),
+        "lenet5",
+        EngineConfig { method: "hyperspeed".into(), record_trace: false, preload: false }
+    )
+    .is_err());
+}
+
+#[test]
+fn plan_artifact_counts_by_network() {
+    let Some(rt) = setup() else { return };
+    let m = rt.manifest();
+    // CIFAR: 3 conv layers accelerate; FC stays on CPU (small net).
+    let cifar = ExecutionPlan::build(m, &m.networks["cifar10"], "advanced-simd-8").unwrap();
+    assert_eq!(cifar.artifacts().len(), 3);
+    // AlexNet: 5 conv + 3 FC (b1+b16 each).
+    let alex = ExecutionPlan::build(m, &m.networks["alexnet"], "advanced-simd-8").unwrap();
+    assert_eq!(alex.artifacts().len(), 11);
+}
+
+#[test]
+fn traces_only_when_enabled() {
+    let Some(rt) = setup() else { return };
+    let silent = Engine::new(
+        Rc::clone(&rt),
+        "lenet5",
+        EngineConfig { method: "basic-simd".into(), record_trace: false, preload: true },
+    )
+    .unwrap();
+    let (imgs, _) = synth::make_dataset(2, 3, 0.05);
+    silent.infer_batch(&imgs).unwrap();
+    assert!(silent.last_traces().is_empty());
+
+    let traced = Engine::new(
+        Rc::clone(&rt),
+        "lenet5",
+        EngineConfig { method: "basic-simd".into(), record_trace: true, preload: true },
+    )
+    .unwrap();
+    traced.infer_batch(&imgs).unwrap();
+    let traces = traced.last_traces();
+    assert_eq!(traces.len(), 2);
+    // Swap work overlaps: the trace must show CPU pre/post events.
+    let (_, t) = &traces[0];
+    assert!(t.events.iter().any(|e| e.stage == "pre"));
+    assert!(t.events.iter().any(|e| e.stage == "post"));
+    assert!(t.overlap_fraction() >= 0.0);
+}
+
+#[test]
+fn cdm_deployment_roundtrip_preserves_inference() {
+    let Some(rt) = setup() else { return };
+    let dir = default_dir();
+    let m = Manifest::load(&dir).unwrap();
+    let tmp = std::env::temp_dir().join("cnndroid-tests");
+    std::fs::create_dir_all(&tmp).unwrap();
+    let path = tmp.join("deploy-lenet5.cdm");
+    convert_to_cdm(&m, "lenet5", &path).unwrap();
+    let cdm = load_cdm(&path).unwrap();
+
+    // Weights from the .cdm equal the manifest blob the engine loads.
+    let eng = Engine::new(
+        Rc::clone(&rt),
+        "lenet5",
+        EngineConfig { method: "cpu-seq".into(), record_trace: false, preload: false },
+    )
+    .unwrap();
+    let (imgs, labels) = synth::make_dataset(4, 21, 0.05);
+    let via_engine = eng.infer_batch(&imgs).unwrap();
+    let via_cdm =
+        cnndroid::cpu::forward_seq(&cdm.network, &cdm.params, &imgs).unwrap();
+    assert_eq!(via_engine, via_cdm, "cdm-deployed model must be byte-identical");
+    // And it actually classifies.
+    let preds = cnndroid::cpu::forward::classify(&cdm.network, &cdm.params, &imgs).unwrap();
+    let correct = preds.iter().zip(&labels).filter(|(p, l)| **p == **l as usize).count();
+    assert!(correct >= 3, "{correct}/4");
+}
+
+#[test]
+fn metrics_json_is_valid_and_grows() {
+    let Some(rt) = setup() else { return };
+    let eng = Engine::new(
+        Rc::clone(&rt),
+        "cifar10",
+        EngineConfig { method: "mxu".into(), record_trace: false, preload: true },
+    )
+    .unwrap();
+    let frames = synth::random_frames(2, 3, 32, 32, 1);
+    eng.infer_batch(&frames).unwrap();
+    let snap = eng.metrics_json().dump();
+    let parsed = cnndroid::util::json::Json::parse(&snap).unwrap();
+    assert_eq!(parsed.get("net").as_str(), Some("cifar10"));
+    assert_eq!(parsed.get("frames").as_usize(), Some(2));
+}

@@ -1,0 +1,204 @@
+//! Integration: the PJRT runtime against the full artifact set — every
+//! conv/fc/pool/lrn artifact family loads, executes, and agrees with
+//! the Rust CPU substrate (which itself is pinned to the JAX oracle by
+//! the Python tests: two independent chains that must meet).
+
+use cnndroid::cpu::seq;
+use cnndroid::model::manifest::{default_dir, Manifest};
+use cnndroid::model::network::ConvSpec;
+use cnndroid::model::zoo;
+use cnndroid::runtime::Runtime;
+use cnndroid::tensor::{layout, Tensor};
+use cnndroid::util::rng::Pcg;
+
+fn runtime() -> Option<Runtime> {
+    let dir = default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::new(Manifest::load(&dir).unwrap()).unwrap())
+}
+
+fn random(shape: Vec<usize>, seed: u64) -> Tensor {
+    let n = shape.iter().product();
+    let mut rng = Pcg::seeded(seed);
+    Tensor::new(shape, rng.normal_vec(n, 0.5))
+}
+
+fn spec_from_meta(meta: &cnndroid::model::manifest::ArtifactMeta) -> ConvSpec {
+    let s = &meta.spec;
+    ConvSpec {
+        in_c: s.get("in_c").as_usize().unwrap(),
+        in_h: s.get("in_h").as_usize().unwrap(),
+        in_w: s.get("in_w").as_usize().unwrap(),
+        nk: s.get("nk").as_usize().unwrap(),
+        kh: s.get("kh").as_usize().unwrap(),
+        kw: s.get("kw").as_usize().unwrap(),
+        stride: s.get("stride").as_usize().unwrap(),
+        pad: s.get("pad").as_usize().unwrap(),
+        relu: s.get("relu").as_bool().unwrap(),
+    }
+}
+
+#[test]
+fn every_lenet_cifar_conv_artifact_matches_cpu() {
+    let Some(rt) = runtime() else { return };
+    let artifacts: Vec<_> = rt
+        .manifest()
+        .artifacts
+        .iter()
+        .filter(|a| a.kind == "conv" && (a.net == "lenet5" || a.net == "cifar10"))
+        .cloned()
+        .collect();
+    assert!(artifacts.len() >= 25, "expected all (shape x method) conv artifacts");
+    for meta in artifacts {
+        let spec = spec_from_meta(&meta);
+        let x = random(vec![1, spec.in_c, spec.in_h, spec.in_w], 42);
+        let w = random(vec![spec.nk, spec.in_c, spec.kh, spec.kw], 43);
+        let b = random(vec![spec.nk], 44);
+        let want = seq::conv_nchw(&x, &w, &b, &spec);
+
+        let nhwc = meta.inputs[0].layout == "nhwc";
+        let got = if nhwc {
+            let y = rt
+                .run(&meta.name, &[&layout::nchw_to_nhwc(&x), &layout::oihw_to_hwio(&w), &b])
+                .unwrap();
+            layout::nhwc_to_nchw(&y)
+        } else {
+            rt.run(&meta.name, &[&x, &w, &b]).unwrap()
+        };
+        let diff = got.max_abs_diff(&want);
+        assert!(diff < 2e-3, "{}: xla vs cpu diff {diff}", meta.name);
+    }
+}
+
+#[test]
+fn alexnet_heaviest_conv_artifact_matches_cpu_all_methods() {
+    let Some(rt) = runtime() else { return };
+    let net = zoo::alexnet();
+    let (_, spec) = net.heaviest_conv();
+    let x = random(vec![1, spec.in_c, spec.in_h, spec.in_w], 7);
+    let w = random(vec![spec.nk, spec.in_c, spec.kh, spec.kw], 8);
+    let b = random(vec![spec.nk], 9);
+    let want = seq::conv_nchw(&x, &w, &b, &spec);
+    let xh = layout::nchw_to_nhwc(&x);
+    let wh = layout::oihw_to_hwio(&w);
+    for method in rt.manifest().methods.clone() {
+        let meta = rt
+            .manifest()
+            .find_conv(&spec.signature(), &method, 1)
+            .expect("artifact present")
+            .clone();
+        let got = if meta.inputs[0].layout == "nhwc" {
+            layout::nhwc_to_nchw(&rt.run(&meta.name, &[&xh, &wh, &b]).unwrap())
+        } else {
+            rt.run(&meta.name, &[&x, &w, &b]).unwrap()
+        };
+        // Large reductions (2400-wide dots): scale-relative tolerance.
+        let diff = got.max_abs_diff(&want);
+        assert!(diff < 5e-2, "{method}: diff {diff}");
+    }
+}
+
+#[test]
+fn fc_artifacts_match_cpu() {
+    let Some(rt) = runtime() else { return };
+    for meta in rt.manifest().artifacts.iter().filter(|a| a.kind == "fc") {
+        let d_in = meta.inputs[1].shape[0];
+        let d_out = meta.inputs[1].shape[1];
+        let batch = meta.batch;
+        let relu = meta.name.contains("_r_");
+        let x = random(vec![batch, d_in], 1);
+        let w = random(vec![d_in, d_out], 2);
+        let b = random(vec![d_out], 3);
+        let got = rt.run(&meta.name, &[&x, &w, &b]).unwrap();
+        let want = seq::fc(&x, &w, &b, relu);
+        let diff = got.max_abs_diff(&want);
+        assert!(diff < 2e-2, "{}: diff {diff}", meta.name);
+    }
+}
+
+#[test]
+fn pool_artifacts_match_cpu() {
+    let Some(rt) = runtime() else { return };
+    for meta in rt.manifest().artifacts.iter().filter(|a| a.kind == "pool") {
+        // name: pool_<mode>_c<C>x<H>x<W>_z<S>s<St>_<r|n>_b1
+        let parts: Vec<&str> = meta.name.split('_').collect();
+        let mode = parts[1];
+        let z = parts[3]; // z<S>s<St>
+        let (size, stride) = {
+            let body = &z[1..];
+            let (s, st) = body.split_once('s').unwrap();
+            (s.parse::<usize>().unwrap(), st.parse::<usize>().unwrap())
+        };
+        let relu = parts[4] == "r";
+        let (h, w, c) = (meta.inputs[0].shape[1], meta.inputs[0].shape[2], meta.inputs[0].shape[3]);
+        let x = random(vec![1, c, h, w], 5);
+        let got_nhwc = rt.run(&meta.name, &[&layout::nchw_to_nhwc(&x)]).unwrap();
+        let got = layout::nhwc_to_nchw(&got_nhwc);
+        let mut want = if mode == "max" {
+            seq::maxpool_nchw(&x, size, stride)
+        } else {
+            seq::avgpool_nchw(&x, size, stride)
+        };
+        if relu {
+            want.relu_inplace();
+        }
+        let diff = got.max_abs_diff(&want);
+        assert!(diff < 1e-4, "{}: diff {diff}", meta.name);
+    }
+}
+
+#[test]
+fn lrn_artifacts_match_cpu() {
+    let Some(rt) = runtime() else { return };
+    let mut seen = 0;
+    for meta in rt.manifest().artifacts.iter().filter(|a| a.kind == "lrn") {
+        let (h, w, c) = (meta.inputs[0].shape[1], meta.inputs[0].shape[2], meta.inputs[0].shape[3]);
+        let x = random(vec![1, c, h, w], 6);
+        let got = layout::nhwc_to_nchw(&rt.run(&meta.name, &[&layout::nchw_to_nhwc(&x)]).unwrap());
+        let want = seq::lrn_nchw(&x, 5, 1e-4, 0.75, 1.0);
+        let diff = got.max_abs_diff(&want);
+        assert!(diff < 1e-4, "{}: diff {diff}", meta.name);
+        seen += 1;
+    }
+    assert_eq!(seen, 2, "alexnet norm1+norm2 artifacts");
+}
+
+#[test]
+fn device_resident_args_equal_host_args() {
+    // The engine's §Perf optimization (Arg::Dev weights) must be a pure
+    // performance change: same numbers as per-call host upload.
+    let Some(rt) = runtime() else { return };
+    use cnndroid::runtime::Arg;
+    let x = random(vec![1, 800], 1);
+    let w = random(vec![800, 500], 2);
+    let b = random(vec![500], 3);
+    let exe = rt.load("fc_800x500_r_b1").unwrap();
+    let via_host = exe.run(&[&x, &w, &b]).unwrap();
+    let w_dev = rt.to_device(&w).unwrap();
+    let b_dev = rt.to_device(&b).unwrap();
+    let via_dev = exe
+        .run_args(&[Arg::Host(&x), Arg::Dev(&w_dev), Arg::Dev(&b_dev)])
+        .unwrap();
+    assert_eq!(via_host, via_dev);
+    // Device buffers are reusable across calls.
+    let again = exe
+        .run_args(&[Arg::Host(&x), Arg::Dev(&w_dev), Arg::Dev(&b_dev)])
+        .unwrap();
+    assert_eq!(via_dev, again);
+    // Mixed wrong-shape host arg still validates.
+    let bad = random(vec![1, 32], 4);
+    assert!(exe
+        .run_args(&[Arg::Host(&bad), Arg::Dev(&w_dev), Arg::Dev(&b_dev)])
+        .is_err());
+}
+
+#[test]
+fn manifest_methods_cover_the_paper() {
+    let Some(rt) = runtime() else { return };
+    for m in ["basic-parallel", "basic-simd", "advanced-simd-4", "advanced-simd-8"] {
+        assert!(rt.manifest().methods.iter().any(|x| x == m), "missing {m}");
+    }
+}

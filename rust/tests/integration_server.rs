@@ -1,0 +1,160 @@
+//! Integration: the TCP JSON-lines serving stack — protocol, routing,
+//! dynamic batching under concurrency, metrics, and error handling.
+
+use std::time::Duration;
+
+use cnndroid::coordinator::server::Client;
+use cnndroid::coordinator::{serve, BatcherConfig, ServerConfig};
+use cnndroid::data::synth;
+use cnndroid::model::manifest::default_dir;
+use cnndroid::util::json::Json;
+
+fn start(models: Vec<(String, String, usize)>) -> Option<cnndroid::coordinator::ServerHandle> {
+    let dir = default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(
+        serve(ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            models,
+            batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(3) },
+            artifacts_dir: dir,
+        })
+        .unwrap(),
+    )
+}
+
+#[test]
+fn ping_metrics_and_classify() {
+    let Some(handle) = start(vec![("lenet5".into(), "basic-simd".into(), 1)]) else { return };
+    let mut c = Client::connect(handle.addr).unwrap();
+
+    let pong = c.call(&Json::obj(vec![("cmd", Json::str("ping"))])).unwrap();
+    assert_eq!(pong.get("ok").as_bool(), Some(true));
+    assert!(pong.get("nets").as_arr().unwrap().iter().any(|n| n.as_str() == Some("lenet5")));
+
+    let (imgs, labels) = synth::make_dataset(4, 60, 0.05);
+    for i in 0..4 {
+        let resp = c.classify("lenet5", &imgs.frame(i), i as u64).unwrap();
+        assert!(resp.get("error").is_null(), "{}", resp.dump());
+        assert_eq!(resp.get("id").as_usize(), Some(i));
+        assert_eq!(resp.get("label").as_usize(), Some(labels[i] as usize));
+        assert_eq!(resp.get("logits").as_arr().unwrap().len(), 10);
+        assert!(resp.get("latency_ms").as_f64().unwrap() > 0.0);
+    }
+
+    let m = c.call(&Json::obj(vec![("cmd", Json::str("metrics"))])).unwrap();
+    assert_eq!(m.get("nets").get("lenet5").get("requests").as_usize(), Some(4));
+    handle.shutdown();
+}
+
+#[test]
+fn concurrent_clients_get_batched() {
+    let Some(handle) = start(vec![("lenet5".into(), "advanced-simd-4".into(), 1)]) else { return };
+    let addr = handle.addr;
+    // Warm up (compile) so the batching window isn't dominated by it.
+    {
+        let (imgs, _) = synth::make_dataset(1, 2, 0.05);
+        let mut c = Client::connect(addr).unwrap();
+        c.classify("lenet5", &imgs.frame(0), 0).unwrap();
+    }
+    let mut threads = Vec::new();
+    for t in 0..6 {
+        threads.push(std::thread::spawn(move || {
+            let (imgs, labels) = synth::make_dataset(4, 100 + t, 0.05);
+            let mut c = Client::connect(addr).unwrap();
+            let mut max_batch = 0usize;
+            for i in 0..4 {
+                let resp = c.classify("lenet5", &imgs.frame(i), i as u64).unwrap();
+                assert!(resp.get("error").is_null(), "{}", resp.dump());
+                assert_eq!(resp.get("label").as_usize(), Some(labels[i] as usize));
+                max_batch = max_batch.max(resp.get("batch").as_usize().unwrap_or(1));
+            }
+            max_batch
+        }));
+    }
+    let batches: Vec<usize> = threads.into_iter().map(|t| t.join().unwrap()).collect();
+    // With 6 concurrent clients and a 3ms window, at least one request
+    // must have shared a batch.
+    assert!(
+        batches.iter().any(|&b| b > 1),
+        "no dynamic batching observed: {batches:?}"
+    );
+    handle.shutdown();
+}
+
+#[test]
+fn replicas_split_load() {
+    let Some(handle) = start(vec![("lenet5".into(), "basic-simd".into(), 2)]) else { return };
+    let addr = handle.addr;
+    let (imgs, _) = synth::make_dataset(8, 70, 0.05);
+    let mut c = Client::connect(addr).unwrap();
+    for i in 0..8 {
+        let resp = c.classify("lenet5", &imgs.frame(i), i as u64).unwrap();
+        assert!(resp.get("error").is_null());
+    }
+    let m = c.call(&Json::obj(vec![("cmd", Json::str("metrics"))])).unwrap();
+    assert_eq!(m.get("nets").get("lenet5").get("requests").as_usize(), Some(8));
+    handle.shutdown();
+}
+
+#[test]
+fn protocol_errors_are_reported_not_fatal() {
+    let Some(handle) = start(vec![("lenet5".into(), "basic-simd".into(), 1)]) else { return };
+    let mut c = Client::connect(handle.addr).unwrap();
+
+    // Unknown command.
+    let r = c.call(&Json::obj(vec![("cmd", Json::str("fly"))])).unwrap();
+    assert!(!r.get("error").is_null());
+
+    // Unknown network.
+    let r = c
+        .call(&Json::obj(vec![
+            ("net", Json::str("vgg")),
+            ("image", Json::arr(vec![Json::num(0.0); 784])),
+        ]))
+        .unwrap();
+    assert!(!r.get("error").is_null());
+
+    // Wrong image size.
+    let r = c
+        .call(&Json::obj(vec![
+            ("net", Json::str("lenet5")),
+            ("image", Json::arr(vec![Json::num(0.0); 10])),
+        ]))
+        .unwrap();
+    assert!(r.get("error").as_str().unwrap().contains("784"));
+
+    // Missing fields.
+    let r = c.call(&Json::obj(vec![("x", Json::num(1.0))])).unwrap();
+    assert!(!r.get("error").is_null());
+
+    // The connection still works afterwards.
+    let (imgs, _) = synth::make_dataset(1, 80, 0.05);
+    let ok = c.classify("lenet5", &imgs.frame(0), 1).unwrap();
+    assert!(ok.get("error").is_null());
+    handle.shutdown();
+}
+
+#[test]
+fn multiple_networks_route_independently() {
+    let Some(handle) = start(vec![
+        ("lenet5".into(), "basic-simd".into(), 1),
+        ("cifar10".into(), "mxu".into(), 1),
+    ]) else {
+        return;
+    };
+    let mut c = Client::connect(handle.addr).unwrap();
+    let (digits, _) = synth::make_dataset(1, 90, 0.05);
+    let lenet_resp = c.classify("lenet5", &digits.frame(0), 1).unwrap();
+    assert!(lenet_resp.get("error").is_null());
+    assert_eq!(lenet_resp.get("logits").as_arr().unwrap().len(), 10);
+
+    let cifar_frame = synth::random_frames(1, 3, 32, 32, 9);
+    let cifar_resp = c.classify("cifar10", &cifar_frame, 2).unwrap();
+    assert!(cifar_resp.get("error").is_null());
+    assert_eq!(cifar_resp.get("logits").as_arr().unwrap().len(), 10);
+    handle.shutdown();
+}

@@ -1,0 +1,168 @@
+//! Property tests on coordinator invariants: batching conserves and
+//! orders requests, routing is fair, the pipeline is a faithful map,
+//! and layout swaps are involutive on arbitrary shapes.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use cnndroid::coordinator::pipeline::run_pipeline;
+use cnndroid::coordinator::{Batcher, BatcherConfig, Router};
+use cnndroid::prop_assert;
+use cnndroid::tensor::{layout, Tensor};
+use cnndroid::util::prop;
+
+#[test]
+fn batcher_conserves_and_orders_requests() {
+    prop::check("batcher conservation", |rng| {
+        let max_batch = rng.range(1, 9) as usize;
+        let n = rng.range(0, 60) as usize;
+        let b = Batcher::new(BatcherConfig {
+            max_batch,
+            max_wait: Duration::from_micros(200),
+        });
+        for i in 0..n {
+            prop_assert!(b.push(i), "push {i} rejected while open");
+        }
+        b.close();
+        let mut drained = Vec::new();
+        while let Some(batch) = b.next_batch() {
+            prop_assert!(!batch.is_empty(), "empty batch emitted");
+            prop_assert!(batch.len() <= max_batch, "batch {} > max {max_batch}", batch.len());
+            drained.extend(batch);
+        }
+        prop_assert!(drained == (0..n).collect::<Vec<_>>(), "lost/reordered: {drained:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn batcher_conserves_under_concurrency() {
+    prop::check("batcher concurrent conservation", |rng| {
+        let producers = rng.range(1, 5) as usize;
+        let per = rng.range(1, 30) as usize;
+        let b = Arc::new(Batcher::new(BatcherConfig {
+            max_batch: rng.range(1, 17) as usize,
+            max_wait: Duration::from_micros(100),
+        }));
+        let mut handles = Vec::new();
+        for p in 0..producers {
+            let b = Arc::clone(&b);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..per {
+                    b.push(p * 1000 + i);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        b.close();
+        let mut seen = Vec::new();
+        while let Some(batch) = b.next_batch() {
+            seen.extend(batch);
+        }
+        seen.sort();
+        let mut want: Vec<usize> =
+            (0..producers).flat_map(|p| (0..per).map(move |i| p * 1000 + i)).collect();
+        want.sort();
+        prop_assert!(seen == want, "concurrent loss: {} vs {}", seen.len(), want.len());
+        Ok(())
+    });
+}
+
+#[test]
+fn router_is_fair_for_any_replica_count() {
+    prop::check("router fairness", |rng| {
+        let replicas = rng.range(1, 8) as usize;
+        let requests = rng.range(1, 200) as usize;
+        let mut r = Router::new();
+        for i in 0..replicas {
+            r.add("net", i);
+        }
+        let mut counts = vec![0usize; replicas];
+        for _ in 0..requests {
+            counts[r.route("net").unwrap()] += 1;
+        }
+        let (lo, hi) = (
+            counts.iter().min().copied().unwrap(),
+            counts.iter().max().copied().unwrap(),
+        );
+        prop_assert!(hi - lo <= 1, "round-robin skew: {counts:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn pipeline_equals_sequential_map() {
+    prop::check("pipeline functional equivalence", |rng| {
+        let n = rng.range(0, 24) as usize;
+        let mul = rng.range(1, 10);
+        let add = rng.range(-5, 6);
+        let (got, trace) = run_pipeline(
+            n,
+            move |i| i as i64,
+            move |_, x| x * mul,
+            move |_, y| y + add,
+        );
+        let want: Vec<i64> = (0..n as i64).map(|i| i * mul + add).collect();
+        prop_assert!(got == want, "pipeline diverged: {got:?} vs {want:?}");
+        prop_assert!(trace.events.len() == 3 * n, "trace events {}", trace.events.len());
+        // Accelerator stages never overlap each other (frames serial).
+        let mut mids: Vec<(f64, f64)> = trace
+            .events
+            .iter()
+            .filter(|e| e.stage == "mid")
+            .map(|e| (e.start_s, e.end_s))
+            .collect();
+        mids.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        for w in mids.windows(2) {
+            prop_assert!(w[0].1 <= w[1].0 + 1e-9, "accelerator overlapped itself");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn layout_swaps_are_involutive_and_linear() {
+    prop::check("layout roundtrip", |rng| {
+        let n = rng.range(1, 4) as usize;
+        let c = rng.range(1, 12) as usize;
+        let h = rng.range(1, 10) as usize;
+        let w = rng.range(1, 10) as usize;
+        let t = Tensor::new(
+            vec![n, c, h, w],
+            (0..n * c * h * w).map(|i| (i as f32).sin()).collect(),
+        );
+        let back = layout::nhwc_to_nchw(&layout::nchw_to_nhwc(&t));
+        prop_assert!(back == t, "nchw<->nhwc roundtrip failed at {:?}", t.shape());
+
+        let wts = Tensor::new(
+            vec![c, n, h, w],
+            (0..n * c * h * w).map(|i| (i as f32).cos()).collect(),
+        );
+        let back = layout::hwio_to_oihw(&layout::oihw_to_hwio(&wts));
+        prop_assert!(back == wts, "oihw<->hwio roundtrip failed");
+        Ok(())
+    });
+}
+
+#[test]
+fn pool_parallel_equals_sequential_for_any_geometry() {
+    prop::check("par pool == seq pool", |rng| {
+        let n = rng.range(1, 3) as usize;
+        let c = rng.range(1, 9) as usize;
+        let size = rng.range(2, 4) as usize;
+        let stride = rng.range(1, 4) as usize;
+        let h = rng.range(size as i64, 20) as usize;
+        let w = rng.range(size as i64, 20) as usize;
+        let data: Vec<f32> = (0..n * c * h * w).map(|_| rng.normal() as f32).collect();
+        let x = Tensor::new(vec![n, c, h, w], data);
+        let pmax = cnndroid::cpu::par::maxpool_nchw(&x, size, stride);
+        let smax = cnndroid::cpu::seq::maxpool_nchw(&x, size, stride);
+        prop_assert!(pmax == smax, "maxpool n={n} c={c} h={h} w={w} z={size} s={stride}");
+        let pavg = cnndroid::cpu::par::avgpool_nchw(&x, size, stride);
+        let savg = cnndroid::cpu::seq::avgpool_nchw(&x, size, stride);
+        prop_assert!(pavg == savg, "avgpool n={n} c={c} h={h} w={w} z={size} s={stride}");
+        Ok(())
+    });
+}

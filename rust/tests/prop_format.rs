@@ -1,0 +1,186 @@
+//! Property tests on the persistence formats: `.cdm` round-trips for
+//! arbitrary generated networks, corrupted inputs never panic, and the
+//! JSON substrate survives adversarial values.
+
+use cnndroid::model::format::CdmFile;
+use cnndroid::model::network::{Layer, Network, PoolMode};
+use cnndroid::model::weights::Params;
+use cnndroid::prop_assert;
+use cnndroid::tensor::Tensor;
+use cnndroid::util::json::Json;
+use cnndroid::util::prop;
+use cnndroid::util::rng::Pcg;
+
+/// Generate a random, shape-consistent network descriptor.  `h` tracks
+/// the propagated spatial size (same-padding convs preserve it, pools
+/// halve it); the network's input size is the INITIAL `h0`.
+fn random_network(rng: &mut Pcg) -> Network {
+    let in_c = rng.range(1, 5) as usize;
+    let h0 = rng.range(8, 33) as usize;
+    let mut h = h0;
+    let mut layers = Vec::new();
+    let nconv = rng.range(1, 4);
+    for i in 0..nconv {
+        let k = *[1usize, 3, 5].get(rng.below(3) as usize).unwrap();
+        let pad = k / 2;
+        layers.push(Layer::Conv {
+            name: format!("conv{}", i + 1),
+            nk: rng.range(1, 17) as usize,
+            kh: k,
+            kw: k,
+            stride: 1,
+            pad,
+            relu: rng.below(2) == 1,
+        });
+        if h >= 4 && rng.below(2) == 1 {
+            layers.push(Layer::Pool {
+                name: format!("pool{}", i + 1),
+                mode: if rng.below(2) == 1 { PoolMode::Max } else { PoolMode::Avg },
+                size: 2,
+                stride: 2,
+                relu: false,
+            });
+            h = cnndroid::model::network::pool_out(h, 2, 2);
+        }
+    }
+    let classes = rng.range(2, 20) as usize;
+    layers.push(Layer::Fc { name: "fc_out".into(), out: classes, relu: false });
+    Network {
+        name: format!("rand{}", rng.below(1000)),
+        in_c,
+        in_h: h0,
+        in_w: h0,
+        classes,
+        layers,
+    }
+}
+
+fn random_params(net: &Network, rng: &mut Pcg) -> Params {
+    let pairs = net
+        .param_shapes()
+        .into_iter()
+        .map(|(name, ws, bs)| {
+            let wn = ws.iter().product();
+            let bn = bs.iter().product();
+            (name, Tensor::new(ws, rng.normal_vec(wn, 0.5)), Tensor::new(bs, rng.normal_vec(bn, 0.5)))
+        })
+        .collect();
+    Params { pairs }
+}
+
+#[test]
+fn cdm_roundtrips_arbitrary_networks() {
+    prop::check("cdm roundtrip", |rng| {
+        let net = random_network(rng);
+        let params = random_params(&net, rng);
+        let cdm = CdmFile {
+            network: net.clone(),
+            params: params.clone(),
+            meta: Json::obj(vec![("seed", Json::num(rng.below(1000) as f64))]),
+        };
+        let bytes = cdm.to_bytes();
+        let back = CdmFile::from_bytes(&bytes)
+            .map_err(|e| format!("roundtrip parse failed: {e}"))?;
+        prop_assert!(back.network == net, "network descriptor drifted");
+        prop_assert!(back.params.count() == params.count(), "param count drifted");
+        for ((n1, w1, b1), (n2, w2, b2)) in params.pairs.iter().zip(&back.params.pairs) {
+            prop_assert!(n1 == n2 && w1 == w2 && b1 == b2, "param payload drifted at {n1}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn cdm_corruption_never_panics() {
+    prop::check("cdm corruption safety", |rng| {
+        let net = random_network(rng);
+        let params = random_params(&net, rng);
+        let mut bytes =
+            CdmFile { network: net, params, meta: Json::Null }.to_bytes();
+        // Random mutation: truncate, bit-flip, or garbage prefix.
+        match rng.below(3) {
+            0 => {
+                let keep = rng.below(bytes.len() as u64 + 1) as usize;
+                bytes.truncate(keep);
+            }
+            1 => {
+                for _ in 0..rng.range(1, 16) {
+                    let i = rng.below(bytes.len() as u64) as usize;
+                    bytes[i] ^= 1 << rng.below(8);
+                }
+            }
+            _ => {
+                bytes = rng.normal_vec(64, 100.0).iter().map(|v| *v as u8).collect();
+            }
+        }
+        // Must return (Ok with consistent payload) or Err — never panic.
+        let _ = CdmFile::from_bytes(&bytes);
+        Ok(())
+    });
+}
+
+#[test]
+fn network_json_roundtrips() {
+    prop::check("network json roundtrip", |rng| {
+        let net = random_network(rng);
+        let text = net.to_json().dump();
+        let parsed = Json::parse(&text).map_err(|e| format!("dump unparseable: {e}"))?;
+        let back = Network::from_json(&parsed).map_err(|e| format!("from_json: {e}"))?;
+        prop_assert!(back == net, "json roundtrip drifted");
+        Ok(())
+    });
+}
+
+#[test]
+fn json_survives_adversarial_strings() {
+    prop::check("json string fuzz", |rng| {
+        // Build a string of tricky codepoints and ensure dump->parse is
+        // the identity.
+        let tricky = ['"', '\\', '\n', '\t', '\u{0}', 'é', '😀', '\u{7f}', 'a'];
+        let s: String = (0..rng.range(0, 40))
+            .map(|_| tricky[rng.below(tricky.len() as u64) as usize])
+            .collect();
+        let j = Json::obj(vec![("k", Json::str(s.clone()))]);
+        let back = Json::parse(&j.dump()).map_err(|e| format!("reparse: {e}"))?;
+        prop_assert!(back.get("k").as_str() == Some(s.as_str()), "string mangled");
+        Ok(())
+    });
+}
+
+#[test]
+fn json_numbers_roundtrip_at_f32_precision() {
+    prop::check("json number fuzz", |rng| {
+        let v = (rng.normal() * 10f64.powi(rng.range(-6, 7) as i32)) as f32;
+        let j = Json::arr(vec![Json::num(v as f64)]);
+        let back = Json::parse(&j.dump()).map_err(|e| format!("reparse: {e}"))?;
+        let got = back.as_arr().unwrap()[0].as_f64().unwrap() as f32;
+        prop_assert!(
+            got == v || (got - v).abs() <= v.abs() * 1e-6,
+            "number drifted: {v} -> {got}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn weight_blob_shape_mismatch_is_error() {
+    prop::check("blob validation", |rng| {
+        let net = random_network(rng);
+        let expected: usize = net
+            .param_shapes()
+            .iter()
+            .map(|(_, w, b)| w.iter().product::<usize>() + b.iter().product::<usize>())
+            .sum();
+        // Off-by-some blob must be rejected.
+        let off = 1 + rng.below(16) as usize;
+        let n = if rng.below(2) == 1 { expected + off } else { expected.saturating_sub(off) };
+        let dir = std::env::temp_dir().join("cnndroid-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("blob-{}.bin", rng.below(1 << 30)));
+        std::fs::write(&path, vec![0u8; n * 4]).unwrap();
+        let r = cnndroid::model::weights::load_blob(&path, &net);
+        std::fs::remove_file(&path).ok();
+        prop_assert!(r.is_err(), "mismatched blob accepted ({n} vs {expected})");
+        Ok(())
+    });
+}
