@@ -1,0 +1,116 @@
+//! Delegate auto-placement tour: enumerate backends, partition every
+//! zoo network on both Table-1 device profiles, compare the auto plan's
+//! predicted latency against every fixed method, and — when artifacts
+//! are built — run a delegate-auto engine end to end against the CPU
+//! reference.
+//!
+//! Works on a fresh checkout (no artifacts): planning then uses the
+//! simulated registry, which assumes every artifact exists.
+//!
+//! ```bash
+//! cargo run --release --example delegate_auto [-- --net alexnet --device m9]
+//! ```
+
+use cnndroid::coordinator::{Engine, EngineConfig};
+use cnndroid::cpu::forward_seq;
+use cnndroid::data::synth;
+use cnndroid::delegate::{Partitioner, Registry};
+use cnndroid::model::manifest::{default_dir, Manifest};
+use cnndroid::model::weights::load_weights;
+use cnndroid::model::zoo;
+use cnndroid::simulator::device;
+use cnndroid::util::args::ArgSpec;
+
+fn main() -> cnndroid::Result<()> {
+    let spec = ArgSpec::new("delegate_auto", "cost-driven auto-placement tour")
+        .opt("net", "all", "network (lenet5 | cifar10 | alexnet | all)")
+        .opt("device", "all", "device profile (note4 | m9 | all)");
+    let args = spec.parse();
+
+    let devices: Vec<_> = match args.get("device") {
+        "all" => device::all_devices(),
+        name => vec![device::by_name(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown device {name:?} (try note4 | m9)"))?],
+    };
+    let nets: Vec<_> = match args.get("net") {
+        "all" => zoo::all(),
+        name => {
+            vec![zoo::by_name(name).ok_or_else(|| anyhow::anyhow!("unknown network {name:?}"))?]
+        }
+    };
+
+    // 1. Backend enumeration: detect from the manifest when artifacts
+    //    are built, otherwise plan over the simulated registry.
+    let dir = default_dir();
+    let manifest = Manifest::load(&dir).ok();
+    let registry = match &manifest {
+        Some(m) => Registry::detect(m),
+        None => Registry::simulated(),
+    };
+    println!(
+        "registry ({}): {}",
+        if manifest.is_some() { "detected from manifest" } else { "simulated" },
+        registry.names().join(", ")
+    );
+    for b in registry.backends() {
+        let cap = b.capability();
+        println!(
+            "  {:<18} kinds {:<24} layout {:?}{}",
+            b.name(),
+            cap.kinds.join("/"),
+            cap.layout,
+            if cap.needs_artifacts { "  (needs artifacts)" } else { "" }
+        );
+    }
+
+    // 2. Partition every (device, network) cell and compare with the
+    //    fixed plans under the same cost accounting.
+    for dev in &devices {
+        for net in &nets {
+            let partitioner = Partitioner::new(&registry, dev);
+            let report = partitioner.partition(net)?;
+            println!("\n=== {} on {} ===", net.name, dev.name);
+            for a in &report.assignments {
+                println!(
+                    "  {:<10} {:<6} -> {:<18} {:>9.4} ms exec, {:>8.4} ms swap",
+                    a.layer,
+                    a.kind,
+                    a.backend,
+                    a.cost_s * 1e3,
+                    a.swap_s * 1e3
+                );
+            }
+            let (bm, bc) = partitioner.best_fixed(net).expect("cpu-seq always predictable");
+            println!(
+                "  auto {:.3} ms/frame vs best fixed ({bm}) {:.3} ms/frame",
+                report.predicted_s * 1e3,
+                bc * 1e3
+            );
+        }
+    }
+
+    // 3. End-to-end: run a delegate-auto engine against the CPU
+    //    reference when the artifact set exists.
+    let Some(manifest) = manifest else {
+        println!("\n(artifacts not built — skipping end-to-end engine run)");
+        return Ok(());
+    };
+    match Engine::from_artifacts(
+        &dir,
+        "lenet5",
+        EngineConfig { method: cnndroid::DELEGATE_AUTO.into(), record_trace: false, preload: true },
+    ) {
+        Ok(engine) => {
+            let (images, _) = synth::make_dataset(4, 42, 0.08);
+            let got = engine.infer_batch(&images)?;
+            let net = zoo::lenet5();
+            let params = load_weights(&manifest, &net)?;
+            let want = forward_seq(&net, &params, &images)?;
+            let diff = got.max_abs_diff(&want);
+            println!("\ndelegate:auto engine vs cpu::forward_seq: max|diff| = {diff:.2e}");
+            assert!(diff < 1e-3, "delegate-auto numerics diverged: {diff}");
+        }
+        Err(e) => println!("\n(delegate:auto engine unavailable here: {e:#})"),
+    }
+    Ok(())
+}

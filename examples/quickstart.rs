@@ -70,5 +70,28 @@ fn main() -> cnndroid::Result<()> {
         cpu_dt.as_secs_f64() * 1e3,
         cpu_dt.as_secs_f64() / dt.as_secs_f64()
     );
+
+    // 5. Automatic placement: instead of naming a method, let the
+    //    delegate subsystem assign each layer to a backend by predicted
+    //    cost ("delegate:auto", optionally "delegate:auto:m9").
+    let auto = Engine::from_artifacts(
+        &dir,
+        "lenet5",
+        EngineConfig { method: cnndroid::DELEGATE_AUTO.into(), record_trace: false, preload: true },
+    )?;
+    let auto_preds = auto.classify(&images)?;
+    assert_eq!(
+        auto_preds.iter().map(|(l, _)| *l).collect::<Vec<_>>(),
+        preds.iter().map(|(l, _)| *l).collect::<Vec<_>>(),
+        "delegate:auto must agree with the fixed-method engine"
+    );
+    println!("delegate:auto placement:");
+    for layer in auto.plan().layers.iter() {
+        println!(
+            "  {:<10} -> {}",
+            layer.name(),
+            if layer.on_accel() { "accelerator" } else { "cpu" }
+        );
+    }
     Ok(())
 }

@@ -1,0 +1,122 @@
+//! Delegate bench: auto-placement vs every fixed plan.
+//!
+//! Two claims are checked:
+//!
+//! 1. Planning is cheap — `Partitioner::partition` is microseconds per
+//!    network, i.e. negligible next to a single frame.
+//! 2. The auto plan never loses to the best fixed plan by more than
+//!    that planning overhead: predicted cost is compared directly (the
+//!    DP optimum is <= every fixed plan by construction), and when
+//!    artifacts are built the wall-clock engines are raced too.
+//!
+//! ```bash
+//! cargo bench --bench bench_delegate [-- --quick]
+//! ```
+
+use cnndroid::coordinator::{Engine, EngineConfig};
+use cnndroid::data::synth;
+use cnndroid::delegate::{Partitioner, Registry};
+use cnndroid::model::manifest::default_dir;
+use cnndroid::model::zoo;
+use cnndroid::simulator::device::all_devices;
+use cnndroid::util::bench::Bench;
+
+fn short(dev_name: &str) -> &'static str {
+    if dev_name.contains("Note 4") {
+        "note4"
+    } else {
+        "m9"
+    }
+}
+
+fn main() {
+    let mut b = Bench::new("delegate auto-partitioner");
+
+    // --- planning overhead ---
+    let registry = Registry::simulated();
+    for dev in all_devices() {
+        for net in zoo::all() {
+            let name = format!("plan/{}@{}", net.name, short(dev.name));
+            b.case(&name, || {
+                let report = Partitioner::new(&registry, &dev).partition(&net).unwrap();
+                assert!(report.predicted_s > 0.0);
+            });
+        }
+    }
+
+    // --- predicted latency: auto vs every fixed plan ---
+    println!("\n  predicted ms/frame (auto vs fixed):");
+    let mut losses = 0usize;
+    for dev in all_devices() {
+        for net in zoo::all() {
+            let p = Partitioner::new(&registry, &dev);
+            let report = p.partition(&net).unwrap();
+            let plan_overhead_s = b
+                .mean_of(&format!("plan/{}@{}", net.name, short(dev.name)))
+                .map(|d| d.as_secs_f64())
+                .unwrap_or(0.0);
+            let (bm, bc) = p.best_fixed(&net).expect("at least cpu-seq is predictable");
+            let ok = report.predicted_s <= bc + plan_overhead_s;
+            if !ok {
+                losses += 1;
+            }
+            println!(
+                "    [{}] {:<8}@{:<6} auto {:>9.3} ms | best fixed {bm} {:>9.3} ms | plan {:>7.4} ms",
+                if ok { "ok" } else { "LOSS" },
+                net.name,
+                short(dev.name),
+                report.predicted_s * 1e3,
+                bc * 1e3,
+                plan_overhead_s * 1e3,
+            );
+        }
+    }
+    assert_eq!(losses, 0, "auto plan lost to a fixed plan beyond planning overhead");
+
+    // --- wall-clock race when artifacts are built ---
+    let dir = default_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("\n  (artifacts not built — skipping wall-clock engine race)");
+        return;
+    }
+    let make = |method: &str| {
+        Engine::from_artifacts(
+            &dir,
+            "lenet5",
+            EngineConfig { method: method.into(), record_trace: false, preload: true },
+        )
+    };
+    let (frames, _) = synth::make_dataset(16, 7, 0.05);
+    let mut auto_mean = None;
+    for method in ["delegate:auto", "cpu-seq", "basic-simd", "advanced-simd-4", "mxu"] {
+        match make(method) {
+            Ok(engine) => {
+                engine.infer_batch(&frames).unwrap(); // warmup + compile
+                let res = b.case_with_items(
+                    &format!("engine/lenet5/{method}"),
+                    Some(16.0),
+                    || {
+                        engine.infer_batch(&frames).unwrap();
+                    },
+                );
+                if method == "delegate:auto" {
+                    auto_mean = res.map(|r| r.mean);
+                }
+            }
+            Err(e) => println!("  (skipping {method}: {e:#})"),
+        }
+    }
+    if let Some(auto) = auto_mean {
+        let best_fixed = ["cpu-seq", "basic-simd", "advanced-simd-4", "mxu"]
+            .iter()
+            .filter_map(|m| b.mean_of(&format!("engine/lenet5/{m}")))
+            .min();
+        if let Some(best) = best_fixed {
+            println!(
+                "\n  wall-clock: auto {:.3} ms vs best fixed {:.3} ms",
+                auto.as_secs_f64() * 1e3,
+                best.as_secs_f64() * 1e3
+            );
+        }
+    }
+}

@@ -28,7 +28,9 @@ use crate::Result;
 /// Engine construction options.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
-    /// Execution method ("cpu-seq" or a manifest method).
+    /// Execution method: "cpu-seq", a manifest method, or
+    /// "delegate:auto[:<device>]" for cost-driven automatic placement
+    /// (see [`crate::delegate`]).
     pub method: String,
     /// Record per-layer pipeline traces (timeline example).
     pub record_trace: bool,
@@ -81,7 +83,22 @@ impl Engine {
             .ok_or_else(|| anyhow::anyhow!("unknown network {net_name:?}"))?
             .clone();
         let params = load_weights(manifest, &net)?;
-        let plan = ExecutionPlan::build(manifest, &net, &cfg.method)?;
+        // "delegate:auto[:<device>]" routes plan construction through
+        // the cost-driven partitioner over detected backends, degrading
+        // to CPU per the fallback policy rather than erroring; fixed
+        // methods keep the hand-authored DESIGN §7 plans (strict, so
+        // config errors surface).
+        let plan = match crate::delegate::auto_device(&cfg.method)? {
+            Some(dev) => {
+                let outcome =
+                    crate::delegate::plan_or_fallback(manifest, &net, &cfg.method, &dev)?;
+                for note in &outcome.notes {
+                    eprintln!("[engine] {}/{}: {note}", net.name, cfg.method);
+                }
+                outcome.plan
+            }
+            None => ExecutionPlan::build(manifest, &net, &cfg.method)?,
+        };
 
         // Swap conv weights once (paper: kernels are swapped together
         // with the frames; ours are cached because weights are static)
@@ -445,7 +462,9 @@ mod tests {
             let eng = engine("lenet5", "cpu-seq").unwrap();
             eng.infer_batch(&imgs).unwrap()
         };
-        for method in ["basic-parallel", "basic-simd", "advanced-simd-4", "advanced-simd-8", "mxu"] {
+        for method in
+            ["basic-parallel", "basic-simd", "advanced-simd-4", "advanced-simd-8", "mxu", "delegate:auto", "delegate:auto:m9"]
+        {
             let eng = engine("lenet5", method).unwrap();
             let got = eng.infer_batch(&imgs).unwrap();
             let diff = got.max_abs_diff(&baseline);

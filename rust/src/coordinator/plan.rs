@@ -8,12 +8,44 @@
 //!   accelerator in NHWC ("dimension swapping" on CPU idle time, §4.3),
 //!   the rest as above.
 
+use std::fmt;
+
 use crate::model::manifest::Manifest;
 use crate::model::network::{ConvSpec, Layer, Network, PoolMode};
 use crate::Result;
 
 /// Methods whose conv artifacts take NHWC inputs.
 pub const NHWC_METHODS: [&str; 4] = ["basic-simd", "advanced-simd-4", "advanced-simd-8", "mxu"];
+
+/// Typed plan-build failure: the manifest lacks an artifact the
+/// requested method needs.  Carried as the root cause of the
+/// `anyhow::Error` so the delegate fallback policy can distinguish
+/// "artifact missing — re-plan onto CPU" from genuine config errors
+/// (`err.downcast_ref::<MissingArtifact>()`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MissingArtifact {
+    pub net: String,
+    pub layer: String,
+    pub method: String,
+    /// The manifest name the lookup expected to find.
+    pub artifact: String,
+}
+
+impl fmt::Display for MissingArtifact {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "method {:?} needs artifact {:?} for layer {} of {}, but the manifest has no such \
+             entry (run `make artifacts`, or use method \"delegate:auto\" to fall back to CPU)",
+            self.method, self.artifact, self.layer, self.net
+        )
+    }
+}
+
+impl std::error::Error for MissingArtifact {}
+
+// Naming conventions live next to the lookups they must match.
+pub use crate::model::manifest::{conv_artifact_name, fc_artifact_name};
 
 /// Placement + artifact binding for one layer.
 #[derive(Debug, Clone)]
@@ -101,10 +133,12 @@ impl ExecutionPlan {
                         let meta = manifest
                             .find_conv(&spec.signature(), method, 1)
                             .ok_or_else(|| {
-                                anyhow::anyhow!(
-                                    "no conv artifact for {} {method} (run `make artifacts`)",
-                                    spec.signature()
-                                )
+                                anyhow::Error::new(MissingArtifact {
+                                    net: net.name.clone(),
+                                    layer: name.clone(),
+                                    method: method.to_string(),
+                                    artifact: conv_artifact_name(&spec.signature(), method, 1),
+                                })
                             })?;
                         LayerPlan::ConvAccel {
                             name: name.clone(),
@@ -139,9 +173,14 @@ impl ExecutionPlan {
                             .find(|(n, _, _)| n == name)
                             .ok_or_else(|| anyhow::anyhow!("fc {name} not in params"))?;
                         let (d_in, d_out) = (wshape[0], wshape[1]);
-                        let b1 = manifest
-                            .find_fc(d_in, d_out, *relu, 1)
-                            .ok_or_else(|| anyhow::anyhow!("no fc artifact {d_in}x{d_out} b1"))?;
+                        let b1 = manifest.find_fc(d_in, d_out, *relu, 1).ok_or_else(|| {
+                            anyhow::Error::new(MissingArtifact {
+                                net: net.name.clone(),
+                                layer: name.clone(),
+                                method: method.to_string(),
+                                artifact: fc_artifact_name(d_in, d_out, *relu, 1),
+                            })
+                        })?;
                         let b16 = manifest.find_fc(d_in, d_out, *relu, 16);
                         LayerPlan::FcAccel {
                             name: name.clone(),
@@ -246,5 +285,40 @@ mod tests {
     fn unknown_method_rejected() {
         let Some(m) = manifest() else { return };
         assert!(ExecutionPlan::build(&m, &zoo::lenet5(), "warp-speed").is_err());
+    }
+
+    /// Artifact-less manifest fixture (method listed, nothing built).
+    fn empty_manifest(methods: &[&str]) -> Manifest {
+        Manifest {
+            dir: std::path::PathBuf::from("artifacts"),
+            source_hash: String::new(),
+            networks: Default::default(),
+            methods: methods.iter().map(|m| m.to_string()).collect(),
+            heaviest_conv: Default::default(),
+            artifacts: Vec::new(),
+            weights: Default::default(),
+        }
+    }
+
+    #[test]
+    fn missing_artifact_error_is_typed_and_descriptive() {
+        let m = empty_manifest(&["basic-simd"]);
+        let err = ExecutionPlan::build(&m, &zoo::lenet5(), "basic-simd").unwrap_err();
+        let missing = err
+            .downcast_ref::<MissingArtifact>()
+            .expect("missing-artifact failures must carry the typed cause");
+        assert_eq!(missing.method, "basic-simd");
+        assert_eq!(missing.net, "lenet5");
+        assert_eq!(missing.layer, "conv1");
+        assert!(missing.artifact.starts_with("conv_") && missing.artifact.ends_with("basic-simd"));
+        let text = format!("{err}");
+        assert!(text.contains("basic-simd") && text.contains("conv1") && text.contains("lenet5"));
+    }
+
+    #[test]
+    fn cpu_seq_plan_needs_no_artifacts_at_all() {
+        let m = empty_manifest(&[]);
+        let plan = ExecutionPlan::build(&m, &zoo::alexnet(), "cpu-seq").unwrap();
+        assert!(plan.layers.iter().all(|l| !l.on_accel()));
     }
 }

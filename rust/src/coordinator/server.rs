@@ -28,6 +28,7 @@ use crate::coordinator::batcher::{Batcher, BatcherConfig};
 use crate::coordinator::engine::{Engine, EngineConfig};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::router::Router;
+use crate::delegate::fallback;
 use crate::model::manifest::Manifest;
 use crate::tensor::Tensor;
 use crate::util::json::Json;
@@ -117,6 +118,13 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle> {
     // Acceptor thread.
     let router = Arc::new(router);
     let nets: Vec<String> = router.names();
+    // Methods this deployment understands: the manifest's accelerated
+    // methods plus the artifact-free baseline and the delegate's
+    // automatic placement selector.
+    let methods: Vec<String> = std::iter::once("cpu-seq".to_string())
+        .chain(manifest.methods.iter().cloned())
+        .chain(std::iter::once(crate::DELEGATE_AUTO.to_string()))
+        .collect();
     let input_dims: std::collections::BTreeMap<String, (usize, usize, usize)> = manifest
         .networks
         .iter()
@@ -135,13 +143,16 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle> {
                                 let router = Arc::clone(&router);
                                 let metrics = Arc::clone(&metrics);
                                 let nets = nets.clone();
+                                let methods = methods.clone();
                                 let dims = input_dims.clone();
                                 // Detached: a connection thread exits when
                                 // its peer closes the socket.  Joining here
                                 // would deadlock shutdown against clients
                                 // that keep their connection open.
                                 std::thread::spawn(move || {
-                                    let _ = handle_conn(stream, &router, &metrics, &nets, &dims);
+                                    let _ = handle_conn(
+                                        stream, &router, &metrics, &nets, &methods, &dims,
+                                    );
                                 });
                             }
                             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -158,6 +169,46 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle> {
     Ok(ServerHandle { addr, stop, batchers, threads, metrics })
 }
 
+/// Build a worker's engine, applying the delegate fallback policy:
+/// when the requested method fails retryably (missing artifacts, or an
+/// accelerator backend that cannot compile), degrade to cost-driven
+/// auto-placement over whatever is available, and terminally to the
+/// artifact-free CPU baseline — a degraded worker beats a dead one.
+fn build_engine_with_fallback(
+    dir: &std::path::Path,
+    net: &str,
+    method: &str,
+) -> Result<(Engine, Option<String>)> {
+    let make = |m: &str| {
+        Engine::from_artifacts(
+            dir,
+            net,
+            EngineConfig { method: m.to_string(), record_trace: false, preload: true },
+        )
+    };
+    let first = match make(method) {
+        Ok(engine) => return Ok((engine, None)),
+        Err(e) => e,
+    };
+    if !fallback::is_retryable(&first) {
+        return Err(first);
+    }
+    let mut trail = format!("{method} failed ({first:#})");
+    for alt in [crate::DELEGATE_AUTO, "cpu-seq"] {
+        if alt == method {
+            continue;
+        }
+        match make(alt) {
+            Ok(engine) => return Ok((engine, Some(format!("{trail}; running on {alt}")))),
+            Err(e) if fallback::is_retryable(&e) => {
+                trail = format!("{trail}; {alt} failed ({e:#})");
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Err(first.context(trail))
+}
+
 /// Engine worker: owns one Engine, drains its batcher forever.
 fn engine_worker(
     dir: &std::path::Path,
@@ -166,12 +217,13 @@ fn engine_worker(
     batcher: Handle,
     metrics: Arc<Metrics>,
 ) {
-    let engine = match Engine::from_artifacts(
-        dir,
-        net,
-        EngineConfig { method: method.to_string(), record_trace: false, preload: true },
-    ) {
-        Ok(e) => e,
+    let engine = match build_engine_with_fallback(dir, net, method) {
+        Ok((e, note)) => {
+            if let Some(note) = note {
+                eprintln!("[server] {net}: {note}");
+            }
+            e
+        }
         Err(e) => {
             // Fail every queued request with the construction error.
             while let Some(batch) = batcher.next_batch() {
@@ -235,6 +287,7 @@ fn handle_conn(
     router: &Router<(String, Handle)>,
     metrics: &Metrics,
     nets: &[String],
+    methods: &[String],
     dims: &std::collections::BTreeMap<String, (usize, usize, usize)>,
 ) -> Result<()> {
     stream.set_nodelay(true).ok();
@@ -246,7 +299,7 @@ fn handle_conn(
             continue;
         }
         let reply = match Json::parse(&line) {
-            Ok(req) => dispatch(req, router, metrics, nets, dims),
+            Ok(req) => dispatch(req, router, metrics, nets, methods, dims),
             Err(e) => Json::obj(vec![("error", Json::str(format!("bad json: {e}")))]),
         };
         writer.write_all(reply.dump().as_bytes())?;
@@ -260,6 +313,7 @@ fn dispatch(
     router: &Router<(String, Handle)>,
     metrics: &Metrics,
     nets: &[String],
+    methods: &[String],
     dims: &std::collections::BTreeMap<String, (usize, usize, usize)>,
 ) -> Json {
     match req.get("cmd").as_str() {
@@ -267,6 +321,10 @@ fn dispatch(
             return Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("nets", Json::arr(nets.iter().map(|n| Json::str(n.clone())).collect())),
+                (
+                    "methods",
+                    Json::arr(methods.iter().map(|m| Json::str(m.clone())).collect()),
+                ),
             ]);
         }
         Some("metrics") => return metrics.snapshot(),

@@ -1,0 +1,502 @@
+//! The [`Backend`] trait and its adapters over the existing execution
+//! substrates.
+//!
+//! A backend is one *placement target* the partitioner can assign a
+//! layer to.  Each backend publishes a static [`Capability`] descriptor
+//! (supported layer kinds, boundary activation layout, batch limits,
+//! whether placements need AOT artifacts), a per-layer availability
+//! probe ([`Backend::supports`], which checks the manifest for the
+//! artifact a placement would bind), a per-layer cost prediction from
+//! the `simulator::cost` analytic model, and a lowering to the
+//! engine-executable [`LayerPlan`] vocabulary.
+//!
+//! Three adapters wrap the paths that already exist in this repo:
+//!
+//! * [`CpuSeqBackend`] — the §4.1 single-thread CPU baseline
+//!   (`cpu::seq`); runs every layer kind, NCHW.
+//! * [`CpuParBackend`] — the §6.3 multi-threaded CPU layers
+//!   (`cpu::par`); pooling and LRN only, NCHW.
+//! * [`AccelBackend`] — one per manifest acceleration method, wrapping
+//!   the PJRT `runtime` artifacts; conv and FC, NHWC for the SIMD/mxu
+//!   methods ("dimension swapping", §4.3) and NCHW for basic-parallel.
+//!
+//! Registering a new backend (quantized, sharded, remote, ...) means
+//! implementing this trait and pushing it into the [`super::Registry`];
+//! the partitioner and fallback policy need no changes.
+
+use crate::coordinator::plan::{
+    conv_artifact_name, fc_artifact_name, LayerPlan, MissingArtifact, NHWC_METHODS,
+};
+use crate::model::manifest::Manifest;
+use crate::model::network::{ConvSpec, Layer, Network};
+use crate::simulator::cost::{self, Method};
+use crate::simulator::device::DeviceSpec;
+use crate::Result;
+
+/// Activation memory layout at a backend's boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DataLayout {
+    /// Canonical host layout (the paper's Java baseline).
+    Nchw,
+    /// "Dimension-swapped" accelerator layout (§4.3).
+    Nhwc,
+}
+
+/// Static description of what a backend can run — the NNAPI-style
+/// capability record the registry and partitioner reason over.
+#[derive(Debug, Clone)]
+pub struct Capability {
+    /// Layer kinds ("conv" | "pool" | "lrn" | "fc") the backend runs.
+    pub kinds: Vec<&'static str>,
+    /// Boundary activation layout; the partitioner charges an
+    /// NCHW<->NHWC swap at every boundary where it changes.
+    pub layout: DataLayout,
+    /// Frames per dispatch (None = unbounded).  Advisory metadata for
+    /// now: the engine already pipelines frames serially through
+    /// batch-1 accelerator artifacts, so nothing enforces it yet; a
+    /// backend with a real dispatch-batch ceiling gets enforcement when
+    /// the partitioner grows batch-aware costing.
+    pub max_batch: Option<usize>,
+    /// Placements must resolve AOT artifacts from the manifest.
+    pub needs_artifacts: bool,
+}
+
+impl Capability {
+    pub fn supports_kind(&self, kind: &str) -> bool {
+        self.kinds.iter().any(|k| *k == kind)
+    }
+}
+
+/// One executable placement target.
+pub trait Backend {
+    /// Stable registry name (doubles as the fixed-method name for the
+    /// adapters over existing plans).
+    fn name(&self) -> &str;
+
+    /// Static capability descriptor.
+    fn capability(&self) -> &Capability;
+
+    /// Can this backend run layer `li` of `net`?  For accelerator
+    /// backends this includes the manifest artifact probe.
+    fn supports(&self, net: &Network, li: usize) -> bool;
+
+    /// Predicted seconds for ONE frame of layer `li` on `dev`, at cold
+    /// clocks (throttle 1.0): the partitioner's objective term.
+    fn predict(&self, dev: &DeviceSpec, net: &Network, li: usize) -> f64;
+
+    /// Lower layer `li` to an engine-executable plan entry, binding
+    /// artifact names.  Errors with [`MissingArtifact`] as the cause
+    /// when a probed manifest lacks the binding.
+    fn lower(&self, net: &Network, li: usize) -> Result<LayerPlan>;
+}
+
+/// Resolved `ConvSpec` for conv layer `li` (None for other kinds).
+fn conv_spec_for(net: &Network, li: usize) -> Option<ConvSpec> {
+    let name = net.layers[li].name();
+    net.conv_specs().into_iter().find(|(n, _)| n.as_str() == name).map(|(_, s)| s)
+}
+
+/// (input, output) `(c, h, w)` shapes of layer `li`.
+fn io_of(net: &Network, li: usize) -> ((usize, usize, usize), (usize, usize, usize)) {
+    let shapes = net.shapes();
+    (shapes[li].1, shapes[li + 1].1)
+}
+
+// ---------------------------------------------------------------------
+// CPU sequential (§4.1 baseline)
+// ---------------------------------------------------------------------
+
+/// Single-thread CPU: the only backend that runs everything, and the
+/// terminal fallback target.
+pub struct CpuSeqBackend {
+    cap: Capability,
+}
+
+impl CpuSeqBackend {
+    pub fn new() -> CpuSeqBackend {
+        CpuSeqBackend {
+            cap: Capability {
+                kinds: vec!["conv", "pool", "lrn", "fc"],
+                layout: DataLayout::Nchw,
+                max_batch: None,
+                needs_artifacts: false,
+            },
+        }
+    }
+}
+
+impl Default for CpuSeqBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Backend for CpuSeqBackend {
+    fn name(&self) -> &str {
+        "cpu-seq"
+    }
+
+    fn capability(&self) -> &Capability {
+        &self.cap
+    }
+
+    fn supports(&self, net: &Network, li: usize) -> bool {
+        self.cap.supports_kind(net.layers[li].kind())
+    }
+
+    fn predict(&self, dev: &DeviceSpec, net: &Network, li: usize) -> f64 {
+        let ((ic, ih, iw), (oc, oh, ow)) = io_of(net, li);
+        match &net.layers[li] {
+            Layer::Conv { .. } => {
+                let spec = conv_spec_for(net, li).expect("conv layer has a spec");
+                cost::conv_time_seq(dev, &spec)
+            }
+            Layer::Pool { size, .. } => cost::pool_time(dev, oc, oh, ow, *size, false),
+            Layer::Lrn { size, .. } => cost::lrn_time(dev, ic, ih, iw, *size, false),
+            Layer::Fc { out, .. } => cost::fc_time(dev, ic * ih * iw, *out, false, 1.0),
+        }
+    }
+
+    fn lower(&self, net: &Network, li: usize) -> Result<LayerPlan> {
+        Ok(match &net.layers[li] {
+            Layer::Conv { name, .. } => LayerPlan::ConvCpu {
+                name: name.clone(),
+                spec: conv_spec_for(net, li).expect("conv layer has a spec"),
+            },
+            Layer::Pool { name, mode, size, stride, relu } => LayerPlan::Pool {
+                name: name.clone(),
+                mode: *mode,
+                size: *size,
+                stride: *stride,
+                relu: *relu,
+                parallel: false,
+            },
+            Layer::Lrn { name, size, alpha, beta, k } => LayerPlan::Lrn {
+                name: name.clone(),
+                size: *size,
+                alpha: *alpha,
+                beta: *beta,
+                k: *k,
+                parallel: false,
+            },
+            Layer::Fc { name, relu, .. } => {
+                LayerPlan::FcCpu { name: name.clone(), relu: *relu }
+            }
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// CPU multi-threaded (§6.3 pool/LRN threads)
+// ---------------------------------------------------------------------
+
+/// Thread-pool CPU layers: pooling and LRN, which the paper deems
+/// "unsuitable for GPU-based acceleration" and runs on CPU threads.
+pub struct CpuParBackend {
+    cap: Capability,
+}
+
+impl CpuParBackend {
+    pub fn new() -> CpuParBackend {
+        CpuParBackend {
+            cap: Capability {
+                kinds: vec!["pool", "lrn"],
+                layout: DataLayout::Nchw,
+                max_batch: None,
+                needs_artifacts: false,
+            },
+        }
+    }
+}
+
+impl Default for CpuParBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Backend for CpuParBackend {
+    fn name(&self) -> &str {
+        "cpu-par"
+    }
+
+    fn capability(&self) -> &Capability {
+        &self.cap
+    }
+
+    fn supports(&self, net: &Network, li: usize) -> bool {
+        self.cap.supports_kind(net.layers[li].kind())
+    }
+
+    fn predict(&self, dev: &DeviceSpec, net: &Network, li: usize) -> f64 {
+        let ((ic, ih, iw), (oc, oh, ow)) = io_of(net, li);
+        match &net.layers[li] {
+            Layer::Pool { size, .. } => cost::pool_time(dev, oc, oh, ow, *size, true),
+            Layer::Lrn { size, .. } => cost::lrn_time(dev, ic, ih, iw, *size, true),
+            _ => f64::INFINITY,
+        }
+    }
+
+    fn lower(&self, net: &Network, li: usize) -> Result<LayerPlan> {
+        Ok(match &net.layers[li] {
+            Layer::Pool { name, mode, size, stride, relu } => LayerPlan::Pool {
+                name: name.clone(),
+                mode: *mode,
+                size: *size,
+                stride: *stride,
+                relu: *relu,
+                parallel: true,
+            },
+            Layer::Lrn { name, size, alpha, beta, k } => LayerPlan::Lrn {
+                name: name.clone(),
+                size: *size,
+                alpha: *alpha,
+                beta: *beta,
+                k: *k,
+                parallel: true,
+            },
+            other => anyhow::bail!("cpu-par cannot run {} layer {}", other.kind(), other.name()),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Accelerator (PJRT runtime artifacts, one backend per method)
+// ---------------------------------------------------------------------
+
+/// One acceleration method's artifact family as a placement target.
+///
+/// With a manifest, `supports` probes artifact availability per layer
+/// (the registry's "device capability enumeration").  Without one
+/// (`simulated` registries: benches, property tests, the `plan` CLI on
+/// a fresh checkout) artifacts are assumed to exist and names are
+/// derived from the manifest naming convention.
+pub struct AccelBackend {
+    method: String,
+    cost_method: Method,
+    cap: Capability,
+    manifest: Option<Manifest>,
+}
+
+impl AccelBackend {
+    /// Returns None for strings that are not accelerator methods
+    /// (e.g. "cpu-seq" or unknown names).
+    pub fn new(method: &str, manifest: Option<&Manifest>) -> Option<AccelBackend> {
+        let cost_method = cost::method_for(method)?;
+        if cost_method == Method::CpuSeq {
+            return None;
+        }
+        let nhwc = NHWC_METHODS.contains(&method);
+        Some(AccelBackend {
+            method: method.to_string(),
+            cost_method,
+            cap: Capability {
+                kinds: vec!["conv", "fc"],
+                layout: if nhwc { DataLayout::Nhwc } else { DataLayout::Nchw },
+                max_batch: Some(1),
+                needs_artifacts: true,
+            },
+            manifest: manifest.cloned(),
+        })
+    }
+
+    /// FC geometry of layer `li`: `(d_in, d_out, relu)`.
+    fn fc_geometry(net: &Network, li: usize) -> Option<(usize, usize, bool)> {
+        match &net.layers[li] {
+            Layer::Fc { out, relu, .. } => {
+                let (ic, ih, iw) = io_of(net, li).0;
+                Some((ic * ih * iw, *out, *relu))
+            }
+            _ => None,
+        }
+    }
+}
+
+impl Backend for AccelBackend {
+    fn name(&self) -> &str {
+        &self.method
+    }
+
+    fn capability(&self) -> &Capability {
+        &self.cap
+    }
+
+    fn supports(&self, net: &Network, li: usize) -> bool {
+        match &net.layers[li] {
+            Layer::Conv { .. } => {
+                let spec = conv_spec_for(net, li).expect("conv layer has a spec");
+                match &self.manifest {
+                    Some(m) => m.find_conv(&spec.signature(), &self.method, 1).is_some(),
+                    None => true,
+                }
+            }
+            Layer::Fc { .. } => {
+                let (d_in, d_out, relu) =
+                    Self::fc_geometry(net, li).expect("fc layer has geometry");
+                match &self.manifest {
+                    Some(m) => m.find_fc(d_in, d_out, relu, 1).is_some(),
+                    None => true,
+                }
+            }
+            _ => false,
+        }
+    }
+
+    fn predict(&self, dev: &DeviceSpec, net: &Network, li: usize) -> f64 {
+        let ((ic, ih, iw), (oc, oh, ow)) = io_of(net, li);
+        match &net.layers[li] {
+            Layer::Conv { .. } => {
+                let spec = conv_spec_for(net, li).expect("conv layer has a spec");
+                // Kernel time plus the per-frame host<->device copies of
+                // input and output (Fig. 7 data movement), as in
+                // `simulator::cost::network_times`.
+                let copy_bytes = 4.0 * ((ic * ih * iw) as f64 + (oc * oh * ow) as f64);
+                cost::conv_time_gpu(dev, &spec, self.cost_method, 1.0)
+                    + copy_bytes / (dev.copy_gbps * 1e9)
+            }
+            Layer::Fc { .. } => {
+                let (d_in, d_out, _) = Self::fc_geometry(net, li).expect("fc layer has geometry");
+                cost::fc_time(dev, d_in, d_out, true, 1.0)
+            }
+            _ => f64::INFINITY,
+        }
+    }
+
+    fn lower(&self, net: &Network, li: usize) -> Result<LayerPlan> {
+        let nhwc = self.cap.layout == DataLayout::Nhwc;
+        match &net.layers[li] {
+            Layer::Conv { name, .. } => {
+                let spec = conv_spec_for(net, li).expect("conv layer has a spec");
+                let conventional = conv_artifact_name(&spec.signature(), &self.method, 1);
+                let artifact = match &self.manifest {
+                    Some(m) => m
+                        .find_conv(&spec.signature(), &self.method, 1)
+                        .map(|a| a.name.clone())
+                        .ok_or_else(|| {
+                            anyhow::Error::new(MissingArtifact {
+                                net: net.name.clone(),
+                                layer: name.clone(),
+                                method: self.method.clone(),
+                                artifact: conventional.clone(),
+                            })
+                        })?,
+                    None => conventional,
+                };
+                Ok(LayerPlan::ConvAccel { name: name.clone(), spec, artifact, nhwc })
+            }
+            Layer::Fc { name, .. } => {
+                let (d_in, d_out, relu) =
+                    Self::fc_geometry(net, li).expect("fc layer has geometry");
+                let conventional = fc_artifact_name(d_in, d_out, relu, 1);
+                let (artifact_b1, artifact_b16) = match &self.manifest {
+                    Some(m) => (
+                        m.find_fc(d_in, d_out, relu, 1).map(|a| a.name.clone()).ok_or_else(
+                            || {
+                                anyhow::Error::new(MissingArtifact {
+                                    net: net.name.clone(),
+                                    layer: name.clone(),
+                                    method: self.method.clone(),
+                                    artifact: conventional.clone(),
+                                })
+                            },
+                        )?,
+                        m.find_fc(d_in, d_out, relu, 16).map(|a| a.name.clone()),
+                    ),
+                    None => (conventional, Some(fc_artifact_name(d_in, d_out, relu, 16))),
+                };
+                Ok(LayerPlan::FcAccel {
+                    name: name.clone(),
+                    d_in,
+                    d_out,
+                    relu,
+                    artifact_b1,
+                    artifact_b16,
+                })
+            }
+            other => {
+                anyhow::bail!("{} cannot run {} layer {}", self.method, other.kind(), other.name())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::simulator::device::galaxy_note4;
+
+    #[test]
+    fn cpu_seq_supports_every_layer_of_every_network() {
+        let b = CpuSeqBackend::new();
+        for net in zoo::all() {
+            for li in 0..net.layers.len() {
+                assert!(b.supports(&net, li), "{} layer {li}", net.name);
+            }
+        }
+    }
+
+    #[test]
+    fn cpu_par_supports_only_pool_and_lrn() {
+        let b = CpuParBackend::new();
+        let net = zoo::alexnet();
+        for (li, layer) in net.layers.iter().enumerate() {
+            let want = matches!(layer.kind(), "pool" | "lrn");
+            assert_eq!(b.supports(&net, li), want, "{}", layer.name());
+        }
+    }
+
+    #[test]
+    fn accel_backend_rejects_non_accel_methods() {
+        assert!(AccelBackend::new("cpu-seq", None).is_none());
+        assert!(AccelBackend::new("warp-speed", None).is_none());
+        assert!(AccelBackend::new("mxu", None).is_some());
+    }
+
+    #[test]
+    fn accel_layouts_follow_the_method() {
+        for (m, want) in [
+            ("basic-parallel", DataLayout::Nchw),
+            ("basic-simd", DataLayout::Nhwc),
+            ("advanced-simd-4", DataLayout::Nhwc),
+            ("mxu", DataLayout::Nhwc),
+        ] {
+            let b = AccelBackend::new(m, None).unwrap();
+            assert_eq!(b.capability().layout, want, "{m}");
+        }
+    }
+
+    #[test]
+    fn simulated_lowering_uses_conventional_artifact_names() {
+        let net = zoo::lenet5();
+        let b = AccelBackend::new("basic-simd", None).unwrap();
+        match b.lower(&net, 0).unwrap() {
+            LayerPlan::ConvAccel { artifact, nhwc, .. } => {
+                assert!(artifact.starts_with("conv_c1x28x28_"), "{artifact}");
+                assert!(artifact.ends_with("_b1_basic-simd"), "{artifact}");
+                assert!(nhwc);
+            }
+            other => panic!("expected ConvAccel, got {other:?}"),
+        }
+        // fc1 of lenet5: 800 -> 500 with relu.
+        let fc_li = 4;
+        match b.lower(&net, fc_li).unwrap() {
+            LayerPlan::FcAccel { d_in, d_out, artifact_b1, .. } => {
+                assert_eq!((d_in, d_out), (800, 500));
+                assert_eq!(artifact_b1, "fc_800x500_r_b1");
+            }
+            other => panic!("expected FcAccel, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn gpu_conv_prediction_beats_cpu_on_big_layers() {
+        let dev = galaxy_note4();
+        let net = zoo::alexnet();
+        let cpu = CpuSeqBackend::new();
+        let gpu = AccelBackend::new("advanced-simd-4", None).unwrap();
+        // conv2 (the heaviest layer) must be predicted faster on GPU.
+        let li = net.layers.iter().position(|l| l.name() == "conv2").unwrap();
+        assert!(gpu.predict(&dev, &net, li) < cpu.predict(&dev, &net, li));
+    }
+}

@@ -1,0 +1,131 @@
+//! The fallback policy: when an accelerator artifact is missing (typed
+//! [`MissingArtifact`] plan failures) or the accelerator backend cannot
+//! compile/execute (typed `xla::Error`), re-plan onto CPU instead of
+//! erroring — a degraded server beats a dead one.
+//!
+//! Two levels compose:
+//!
+//! * **Plan level** ([`plan_or_fallback`]): try the requested method;
+//!   on a missing artifact, re-plan with the cost-driven partitioner
+//!   over the backends that *are* available; as the terminal step,
+//!   fall back to the always-available `cpu-seq` plan.
+//! * **Engine level** (`coordinator::server::engine_worker`): when
+//!   engine construction or artifact preloading fails retryably
+//!   ([`is_retryable`]), rebuild the engine down the same chain.
+
+use crate::coordinator::plan::{ExecutionPlan, MissingArtifact};
+use crate::model::manifest::Manifest;
+use crate::model::network::Network;
+use crate::simulator::device::DeviceSpec;
+use crate::Result;
+
+use super::{is_auto, plan_auto};
+
+/// A plan plus the human-readable trail of any fallback decisions.
+#[derive(Debug, Clone)]
+pub struct FallbackOutcome {
+    pub plan: ExecutionPlan,
+    /// Empty when the requested method planned cleanly.
+    pub notes: Vec<String>,
+}
+
+/// Should a failure trigger re-planning?  True for missing manifest
+/// artifacts and for accelerator-backend (xla) failures; false for
+/// config errors (unknown method/network), which must surface.
+pub fn is_retryable(err: &anyhow::Error) -> bool {
+    err.downcast_ref::<MissingArtifact>().is_some() || err.downcast_ref::<xla::Error>().is_some()
+}
+
+/// Build a plan for `method`, falling back per the policy above.
+pub fn plan_or_fallback(
+    manifest: &Manifest,
+    net: &Network,
+    method: &str,
+    dev: &DeviceSpec,
+) -> Result<FallbackOutcome> {
+    let mut notes = Vec::new();
+    if is_auto(method) {
+        match plan_auto(manifest, net, dev) {
+            Ok(plan) => return Ok(FallbackOutcome { plan, notes }),
+            Err(e) => notes.push(format!("auto-partition failed: {e:#}")),
+        }
+    } else {
+        match ExecutionPlan::build(manifest, net, method) {
+            Ok(plan) => return Ok(FallbackOutcome { plan, notes }),
+            Err(e) if e.downcast_ref::<MissingArtifact>().is_some() => {
+                notes.push(format!("{e}"));
+                match plan_auto(manifest, net, dev) {
+                    Ok(plan) => {
+                        notes.push("re-planned with delegate:auto over available backends".into());
+                        return Ok(FallbackOutcome { plan, notes });
+                    }
+                    Err(e2) => notes.push(format!("auto-partition failed: {e2:#}")),
+                }
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    let plan = ExecutionPlan::build(manifest, net, "cpu-seq")?;
+    notes.push("fell back to cpu-seq".into());
+    Ok(FallbackOutcome { plan, notes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::simulator::device::galaxy_note4;
+    use std::collections::BTreeMap;
+
+    /// Manifest that advertises methods but has no artifacts built.
+    fn artifactless(methods: &[&str]) -> Manifest {
+        Manifest {
+            dir: std::path::PathBuf::from("artifacts"),
+            source_hash: String::new(),
+            networks: BTreeMap::new(),
+            methods: methods.iter().map(|m| m.to_string()).collect(),
+            heaviest_conv: BTreeMap::new(),
+            artifacts: Vec::new(),
+            weights: BTreeMap::new(),
+        }
+    }
+
+    #[test]
+    fn missing_artifacts_fall_back_instead_of_erroring() {
+        let m = artifactless(&["basic-simd"]);
+        let dev = galaxy_note4();
+        let out = plan_or_fallback(&m, &zoo::lenet5(), "basic-simd", &dev).unwrap();
+        assert!(!out.notes.is_empty(), "fallback must be recorded");
+        // No artifacts exist, so nothing may land on an accelerator.
+        assert!(out.plan.layers.iter().all(|l| !l.on_accel()));
+    }
+
+    #[test]
+    fn auto_with_no_artifacts_degrades_to_cpu_placements() {
+        let m = artifactless(&["basic-simd", "mxu"]);
+        let dev = galaxy_note4();
+        let out = plan_or_fallback(&m, &zoo::cifar10(), crate::DELEGATE_AUTO, &dev).unwrap();
+        assert!(out.plan.layers.iter().all(|l| !l.on_accel()));
+    }
+
+    #[test]
+    fn unknown_method_still_surfaces_as_an_error() {
+        let m = artifactless(&["basic-simd"]);
+        let dev = galaxy_note4();
+        assert!(plan_or_fallback(&m, &zoo::lenet5(), "warp-speed", &dev).is_err());
+    }
+
+    #[test]
+    fn retryable_classification() {
+        let missing = anyhow::Error::new(MissingArtifact {
+            net: "lenet5".into(),
+            layer: "conv1".into(),
+            method: "mxu".into(),
+            artifact: "conv_x_b1_mxu".into(),
+        });
+        assert!(is_retryable(&missing));
+        let xla_err = anyhow::Error::new(xla::Error("no backend".into()));
+        assert!(is_retryable(&xla_err));
+        assert!(!is_retryable(&anyhow::anyhow!("unknown network")));
+    }
+}

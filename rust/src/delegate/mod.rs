@@ -1,0 +1,99 @@
+//! `delegate` — NNAPI-style heterogeneous backend registry and
+//! cost-driven auto-partitioner.
+//!
+//! CNNdroid hard-codes which processor runs each layer (conv/FC on the
+//! accelerator, pool/LRN/ReLU on CPU threads, §6.3).  Android's NNAPI
+//! later generalized this: a runtime that "distributes the computation
+//! workload across available on-device processors" from capability
+//! descriptions and per-layer costs.  This module is that seam for our
+//! engine — the place every future backend (quantized, sharded,
+//! remote) plugs in:
+//!
+//! * [`backend`] — the [`Backend`] trait with [`Capability`]
+//!   descriptors, plus adapters over the existing substrates:
+//!   `cpu::seq`, `cpu::par`, and the PJRT `runtime` artifact families.
+//! * [`registry`] — [`Registry`]: enumerate available backends at
+//!   engine startup, probing artifact availability from the manifest.
+//! * [`partition`] — [`Partitioner`]: exact DP assignment of layers to
+//!   backends minimizing predicted latency from `simulator::cost` plus
+//!   NCHW<->NHWC transition penalties at backend boundaries (§4.3);
+//!   emits a standard engine-executable `ExecutionPlan`.
+//! * [`fallback`] — re-plan onto CPU when an accelerator artifact is
+//!   missing or fails to compile, instead of erroring.
+//!
+//! Selected with the method string [`crate::DELEGATE_AUTO`]
+//! (`"delegate:auto"`, optionally `"delegate:auto:<device>"` with a
+//! Table-1 device profile: `note4` | `m9`), which rides everywhere a
+//! fixed method string does: `EngineConfig::method`, server model
+//! configs, and the CLI `--method` flags.
+
+pub mod backend;
+pub mod fallback;
+pub mod partition;
+pub mod registry;
+
+pub use backend::{AccelBackend, Backend, Capability, CpuParBackend, CpuSeqBackend, DataLayout};
+pub use fallback::{is_retryable, plan_or_fallback, FallbackOutcome};
+pub use partition::{transition_cost, Assignment, PartitionReport, Partitioner};
+pub use registry::Registry;
+
+use crate::coordinator::plan::ExecutionPlan;
+use crate::model::manifest::Manifest;
+use crate::model::network::Network;
+use crate::simulator::device::{self, DeviceSpec};
+use crate::Result;
+
+/// Is `method` a delegate-auto selector (with or without a device)?
+pub fn is_auto(method: &str) -> bool {
+    method == crate::DELEGATE_AUTO
+        || method
+            .strip_prefix(crate::DELEGATE_AUTO)
+            .is_some_and(|rest| rest.starts_with(':'))
+}
+
+/// Parse a method string: `Ok(Some(dev))` for "delegate:auto" (default
+/// device: the Galaxy Note 4, Table 1's lead platform) or
+/// "delegate:auto:<device>"; `Ok(None)` for fixed methods; `Err` for an
+/// auto selector naming an unknown device.
+pub fn auto_device(method: &str) -> Result<Option<DeviceSpec>> {
+    let Some(rest) = method.strip_prefix(crate::DELEGATE_AUTO) else {
+        return Ok(None);
+    };
+    if rest.is_empty() {
+        return Ok(Some(device::galaxy_note4()));
+    }
+    let Some(name) = rest.strip_prefix(':') else {
+        return Ok(None);
+    };
+    match device::by_name(name) {
+        Some(dev) => Ok(Some(dev)),
+        None => Err(anyhow::anyhow!(
+            "unknown device profile {name:?} in method {method:?} (try note4 | m9)"
+        )),
+    }
+}
+
+/// One-call entry point: detect backends from the manifest and emit the
+/// cost-optimal plan for `net` on `dev`.
+pub fn plan_auto(manifest: &Manifest, net: &Network, dev: &DeviceSpec) -> Result<ExecutionPlan> {
+    let registry = Registry::detect(manifest);
+    Ok(Partitioner::new(&registry, dev).partition(net)?.plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auto_selector_parsing() {
+        assert!(is_auto("delegate:auto"));
+        assert!(is_auto("delegate:auto:m9"));
+        assert!(!is_auto("delegate:automatic"));
+        assert!(!is_auto("cpu-seq"));
+
+        assert!(auto_device("basic-simd").unwrap().is_none());
+        assert!(auto_device("delegate:auto").unwrap().unwrap().name.contains("Note 4"));
+        assert!(auto_device("delegate:auto:m9").unwrap().unwrap().name.contains("M9"));
+        assert!(auto_device("delegate:auto:pixel").is_err());
+    }
+}

@@ -1,0 +1,132 @@
+//! The backend [`Registry`]: enumerate available placement targets at
+//! engine startup, probing artifact availability from the manifest.
+//!
+//! Order matters and is stable: CPU backends first, then accelerator
+//! methods in manifest order.  The partitioner breaks cost ties toward
+//! the lowest registry index, which makes plans deterministic.
+
+use crate::model::manifest::Manifest;
+
+use super::backend::{AccelBackend, Backend, CpuParBackend, CpuSeqBackend};
+
+/// The set of backends the partitioner may place layers on.
+pub struct Registry {
+    backends: Vec<Box<dyn Backend>>,
+}
+
+impl Registry {
+    /// CPU-only registry: always available, no artifacts needed.  The
+    /// terminal target of the fallback policy.
+    pub fn cpu_only() -> Registry {
+        Registry {
+            backends: vec![Box::new(CpuSeqBackend::new()), Box::new(CpuParBackend::new())],
+        }
+    }
+
+    /// Enumerate backends available for a built artifact set: CPU plus
+    /// one accelerator backend per manifest method.  Per-layer artifact
+    /// availability is probed lazily by `Backend::supports`.
+    pub fn detect(manifest: &Manifest) -> Registry {
+        let mut reg = Registry::cpu_only();
+        for method in &manifest.methods {
+            if let Some(b) = AccelBackend::new(method, Some(manifest)) {
+                reg.backends.push(Box::new(b));
+            }
+        }
+        reg
+    }
+
+    /// Registry that assumes every paper-method artifact exists —
+    /// for the simulator, benches, property tests, and the `plan` CLI
+    /// on checkouts without built artifacts.
+    pub fn simulated() -> Registry {
+        let mut reg = Registry::cpu_only();
+        for method in ["basic-parallel", "basic-simd", "advanced-simd-4", "advanced-simd-8", "mxu"]
+        {
+            if let Some(b) = AccelBackend::new(method, None) {
+                reg.backends.push(Box::new(b));
+            }
+        }
+        reg
+    }
+
+    /// Register an additional backend (future: quantized, sharded,
+    /// remote executors plug in here).
+    pub fn register(&mut self, backend: Box<dyn Backend>) {
+        self.backends.push(backend);
+    }
+
+    pub fn backends(&self) -> &[Box<dyn Backend>] {
+        &self.backends
+    }
+
+    pub fn len(&self) -> usize {
+        self.backends.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.backends.is_empty()
+    }
+
+    /// Backend by registry name.
+    pub fn get(&self, name: &str) -> Option<&dyn Backend> {
+        self.backends.iter().find(|b| b.name() == name).map(|b| b.as_ref())
+    }
+
+    /// Registry index of a backend name (partitioner choice vectors
+    /// index into `backends()`).
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.backends.iter().position(|b| b.name() == name)
+    }
+
+    /// All backend names in registry order.
+    pub fn names(&self) -> Vec<&str> {
+        self.backends.iter().map(|b| b.name()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn cpu_only_has_the_two_cpu_substrates() {
+        let reg = Registry::cpu_only();
+        assert_eq!(reg.names(), vec!["cpu-seq", "cpu-par"]);
+        assert!(!reg.backends()[0].capability().needs_artifacts);
+    }
+
+    #[test]
+    fn simulated_registry_covers_every_paper_method() {
+        let reg = Registry::simulated();
+        for m in ["cpu-seq", "basic-parallel", "basic-simd", "advanced-simd-4", "advanced-simd-8", "mxu"]
+        {
+            assert!(reg.get(m).is_some(), "missing backend {m}");
+        }
+        assert_eq!(reg.len(), 7);
+    }
+
+    #[test]
+    fn every_layer_has_at_least_one_supporting_backend() {
+        let reg = Registry::simulated();
+        for net in zoo::all() {
+            for li in 0..net.layers.len() {
+                assert!(
+                    reg.backends().iter().any(|b| b.supports(&net, li)),
+                    "{} layer {li} unplaceable",
+                    net.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn index_lookups_are_consistent() {
+        let reg = Registry::simulated();
+        for (i, name) in reg.names().iter().enumerate() {
+            assert_eq!(reg.index_of(name), Some(i));
+        }
+        assert_eq!(reg.index_of("warp-speed"), None);
+    }
+}

@@ -21,6 +21,11 @@
 //! * [`coordinator`] — the serving engine: layerwise executor with
 //!   method-selectable plans, the Fig. 5 pipeline scheduler, dynamic
 //!   batcher, router, TCP server, metrics.
+//! * [`delegate`] — NNAPI-style heterogeneous backend registry and
+//!   cost-driven auto-partitioner: capability-described backends over
+//!   [`cpu`] and [`runtime`], placed per layer by [`simulator`] costs
+//!   plus layout-swap penalties, with CPU fallback when accelerator
+//!   artifacts are missing or fail to compile.
 //! * [`simulator`] — analytic mobile-GPU performance model that
 //!   regenerates the paper's Tables 3/4 at Mali-T760/Adreno-430 scale.
 //! * [`data`] — procedural digit corpus (mirrors `python/compile/digits.py`)
@@ -29,6 +34,7 @@
 pub mod coordinator;
 pub mod cpu;
 pub mod data;
+pub mod delegate;
 pub mod model;
 pub mod runtime;
 pub mod simulator;
@@ -51,3 +57,9 @@ pub const METHODS: [&str; 6] = [
     "advanced-simd-8",
     "mxu",
 ];
+
+/// Method string selecting cost-driven automatic placement instead of a
+/// fixed plan ("delegate:auto", optionally "delegate:auto:<device>"
+/// with a Table-1 profile: note4 | m9).  Accepted everywhere the fixed
+/// [`METHODS`] are: engine configs, server model specs, CLI `--method`.
+pub const DELEGATE_AUTO: &str = "delegate:auto";

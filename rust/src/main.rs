@@ -7,6 +7,7 @@
 //!   cnndroid infer --net N --method M ...      classify images (file or synthetic)
 //!   cnndroid serve --net N --method M ...      TCP JSON-lines serving
 //!   cnndroid simulate [--claims]               regenerate paper Tables 3/4
+//!   cnndroid plan --net N --device D           delegate auto-placement preview
 //!   cnndroid bench-engine --net N --method M   quick engine throughput probe
 //! ```
 
@@ -15,6 +16,7 @@ use std::time::Instant;
 
 use cnndroid::coordinator::{serve, BatcherConfig, Engine, EngineConfig, ServerConfig};
 use cnndroid::data::{image, synth};
+use cnndroid::delegate::{Partitioner, Registry};
 use cnndroid::model::manifest::{default_dir, Manifest};
 use cnndroid::model::{convert_to_cdm, zoo};
 use cnndroid::simulator::{device, tables};
@@ -31,6 +33,7 @@ fn main() {
         "infer" => run(infer(rest)),
         "serve" => run(serve_cmd(rest)),
         "simulate" => run(simulate(rest)),
+        "plan" => run(plan_cmd(rest)),
         "bench-engine" => run(bench_engine(rest)),
         "validate" => run(validate(rest)),
         "" | "--help" | "-h" | "help" => {
@@ -48,7 +51,10 @@ fn main() {
 const HELP: &str = "cnndroid — GPU-accelerated CNN engine reproduction (three-layer Rust+JAX+Pallas)
 
 USAGE:
-  cnndroid <inspect|convert|infer|serve|simulate|bench-engine|validate> [OPTIONS]
+  cnndroid <inspect|convert|infer|serve|simulate|plan|bench-engine|validate> [OPTIONS]
+
+Methods: cpu-seq | basic-parallel | basic-simd | advanced-simd-4 | advanced-simd-8 | mxu,
+or `--method delegate:auto [--device note4|m9]` for cost-driven automatic placement.
 
 Run `cnndroid <command> --help` for command options.";
 
@@ -68,6 +74,30 @@ fn artifacts_opt(spec: ArgSpec) -> ArgSpec {
 
 fn artifacts_dir(args: &cnndroid::util::args::Args) -> PathBuf {
     args.get_opt("artifacts").map(PathBuf::from).unwrap_or_else(default_dir)
+}
+
+fn device_opt(spec: ArgSpec) -> ArgSpec {
+    spec.opt_no_default("device", "device profile for --method delegate:auto (note4 | m9)")
+}
+
+/// Compose `--method` and `--device` into the engine method string:
+/// `delegate:auto` + `--device m9` -> `delegate:auto:m9`.  A --device
+/// that cannot apply (fixed method, or a selector that already names a
+/// device) is reported rather than silently dropped.
+fn method_with_device(args: &cnndroid::util::args::Args) -> Result<String> {
+    let method = args.get("method").to_string();
+    match args.get_opt("device") {
+        None => Ok(method),
+        Some(dev) if method == cnndroid::DELEGATE_AUTO => Ok(format!("{method}:{dev}")),
+        Some(dev) => Err(anyhow::anyhow!(
+            "--device {dev} only applies to --method delegate:auto (got --method {method:?}{})",
+            if cnndroid::delegate::is_auto(&method) {
+                ", which already names a device"
+            } else {
+                ""
+            }
+        )),
+    }
 }
 
 fn inspect(argv: Vec<String>) -> Result<()> {
@@ -125,21 +155,22 @@ fn convert(argv: Vec<String>) -> Result<()> {
 }
 
 fn infer(argv: Vec<String>) -> Result<()> {
-    let spec = artifacts_opt(
+    let spec = device_opt(artifacts_opt(
         ArgSpec::new("cnndroid infer", "classify images with the accelerated engine")
             .opt("net", "lenet5", "network")
-            .opt("method", "advanced-simd-4", "cpu-seq | basic-parallel | basic-simd | advanced-simd-4 | advanced-simd-8 | mxu")
+            .opt("method", "advanced-simd-4", "cpu-seq | basic-parallel | basic-simd | advanced-simd-4 | advanced-simd-8 | mxu | delegate:auto")
             .opt("synthetic", "4", "number of synthetic digits when no --image given")
             .opt("seed", "1", "synthetic workload seed")
             .opt_no_default("image", "PGM/PPM image file to classify")
             .flag("fused", "use the fused whole-network artifact"),
-    );
+    ));
     let args = spec.parse_from(argv).map_err(|e| anyhow::anyhow!("{e}"))?;
     let dir = artifacts_dir(&args);
+    let method = method_with_device(&args)?;
     let engine = Engine::from_artifacts(
         &dir,
         args.get("net"),
-        EngineConfig { method: args.get("method").into(), record_trace: false, preload: true },
+        EngineConfig { method: method.clone(), record_trace: false, preload: true },
     )?;
 
     let (batch, labels): (cnndroid::tensor::Tensor, Option<Vec<u8>>) =
@@ -191,26 +222,27 @@ fn infer(argv: Vec<String>) -> Result<()> {
         dt.as_secs_f64() * 1e3,
         n as f64 / dt.as_secs_f64(),
         args.get("net"),
-        args.get("method")
+        method
     );
     Ok(())
 }
 
 fn serve_cmd(argv: Vec<String>) -> Result<()> {
-    let spec = artifacts_opt(
+    let spec = device_opt(artifacts_opt(
         ArgSpec::new("cnndroid serve", "TCP JSON-lines serving front end")
             .opt("addr", "127.0.0.1:7878", "bind address")
             .opt("net", "lenet5", "comma-separated networks to deploy")
-            .opt("method", "advanced-simd-4", "execution method")
+            .opt("method", "advanced-simd-4", "execution method (fixed or delegate:auto)")
             .opt("replicas", "1", "engine replicas per network")
             .opt("max-batch", "16", "dynamic batcher max batch")
             .opt("max-wait-ms", "5", "dynamic batcher max wait"),
-    );
+    ));
     let args = spec.parse_from(argv).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let method = method_with_device(&args)?;
     let models = args
         .get("net")
         .split(',')
-        .map(|n| (n.trim().to_string(), args.get("method").to_string(), args.get_usize("replicas")))
+        .map(|n| (n.trim().to_string(), method.clone(), args.get_usize("replicas")))
         .collect();
     let handle = serve(ServerConfig {
         addr: args.get("addr").to_string(),
@@ -287,6 +319,7 @@ fn validate(argv: Vec<String>) -> Result<()> {
         let want = cnndroid::cpu::forward_seq(&net, &params, &x)?;
         let mut methods = runtime.manifest().methods.clone();
         methods.insert(0, "cpu-seq".into());
+        methods.push(cnndroid::DELEGATE_AUTO.into());
         for method in &methods {
             let eng = Engine::new(
                 std::rc::Rc::clone(&runtime),
@@ -310,21 +343,81 @@ fn validate(argv: Vec<String>) -> Result<()> {
     Ok(())
 }
 
-fn bench_engine(argv: Vec<String>) -> Result<()> {
+fn plan_cmd(argv: Vec<String>) -> Result<()> {
     let spec = artifacts_opt(
+        ArgSpec::new(
+            "cnndroid plan",
+            "preview the delegate subsystem's cost-driven auto-placement",
+        )
+        .opt("net", "all", "network to plan (lenet5 | cifar10 | alexnet | all)")
+        .opt("device", "note4", "device profile: note4 | m9")
+        .flag("simulated", "assume every artifact exists (no manifest needed)"),
+    );
+    let args = spec.parse_from(argv).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let dev = device::by_name(args.get("device"))
+        .ok_or_else(|| anyhow::anyhow!("unknown device {:?} (try note4 | m9)", args.get("device")))?;
+    let dir = artifacts_dir(&args);
+    let manifest = if args.has("simulated") { None } else { Manifest::load(&dir).ok() };
+    let registry = match &manifest {
+        Some(m) => Registry::detect(m),
+        None => {
+            println!("(no manifest at {} — planning over simulated artifacts)\n", dir.display());
+            Registry::simulated()
+        }
+    };
+    let nets: Vec<_> = match args.get("net") {
+        "all" => zoo::all(),
+        name => vec![zoo::by_name(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown network {name:?}"))?],
+    };
+    let partitioner = Partitioner::new(&registry, &dev);
+    for net in &nets {
+        let report = partitioner.partition(net)?;
+        println!("{} on {} — predicted {:.3} ms/frame", net.name, dev.name, report.predicted_s * 1e3);
+        println!("  {:<10} {:<6} {:<18} {:>12} {:>12}", "layer", "kind", "backend", "exec ms", "swap ms");
+        for a in &report.assignments {
+            println!(
+                "  {:<10} {:<6} {:<18} {:>12.4} {:>12.4}",
+                a.layer,
+                a.kind,
+                a.backend,
+                a.cost_s * 1e3,
+                a.swap_s * 1e3
+            );
+        }
+        println!("  fixed-method predictions:");
+        for method in cnndroid::METHODS {
+            let Some(cost) = partitioner.predicted_fixed(net, method) else { continue };
+            println!("    {:<18} {:>12.3} ms", method, cost * 1e3);
+        }
+        if let Some((method, cost)) = partitioner.best_fixed(net) {
+            println!(
+                "  auto {:.3} ms vs best fixed {method} {:.3} ms ({:+.1}%)\n",
+                report.predicted_s * 1e3,
+                cost * 1e3,
+                (report.predicted_s / cost - 1.0) * 100.0
+            );
+        }
+    }
+    Ok(())
+}
+
+fn bench_engine(argv: Vec<String>) -> Result<()> {
+    let spec = device_opt(artifacts_opt(
         ArgSpec::new("cnndroid bench-engine", "quick engine throughput probe")
             .opt("net", "lenet5", "network")
-            .opt("method", "advanced-simd-4", "execution method")
+            .opt("method", "advanced-simd-4", "execution method (fixed or delegate:auto)")
             .opt("batch", "16", "frames per batch")
             .opt("iters", "5", "timed iterations"),
-    );
+    ));
     let args = spec.parse_from(argv).map_err(|e| anyhow::anyhow!("{e}"))?;
     let dir = artifacts_dir(&args);
     let net = args.get("net");
+    let method = method_with_device(&args)?;
     let engine = Engine::from_artifacts(
         &dir,
         net,
-        EngineConfig { method: args.get("method").into(), record_trace: false, preload: true },
+        EngineConfig { method: method.clone(), record_trace: false, preload: true },
     )?;
     let n = args.get_usize("batch");
     let net_desc = engine.network().clone();
@@ -338,7 +431,7 @@ fn bench_engine(argv: Vec<String>) -> Result<()> {
     let dt = t0.elapsed().as_secs_f64() / iters as f64;
     println!(
         "{net}/{}: batch {n} in {:.2} ms -> {:.1} fps ({:.2} ms/frame)",
-        args.get("method"),
+        method,
         dt * 1e3,
         n as f64 / dt,
         dt * 1e3 / n as f64

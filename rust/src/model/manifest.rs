@@ -148,13 +148,13 @@ impl Manifest {
 
     /// Find the conv artifact for a shape signature and method.
     pub fn find_conv(&self, signature: &str, method: &str, batch: usize) -> Option<&ArtifactMeta> {
-        let name = format!("conv_{signature}_b{batch}_{method}");
+        let name = conv_artifact_name(signature, method, batch);
         self.artifacts.iter().find(|a| a.name == name)
     }
 
     /// Find the FC artifact for (d_in, d_out, relu, batch).
     pub fn find_fc(&self, d_in: usize, d_out: usize, relu: bool, batch: usize) -> Option<&ArtifactMeta> {
-        let name = format!("fc_{d_in}x{d_out}_{}_b{batch}", if relu { "r" } else { "n" });
+        let name = fc_artifact_name(d_in, d_out, relu, batch);
         self.artifacts.iter().find(|a| a.name == name)
     }
 
@@ -195,6 +195,17 @@ fn parse_artifact(aj: &Json) -> Result<ArtifactMeta> {
         flops: aj.get("flops").as_f64().unwrap_or(0.0) as u64,
         spec: aj.get("spec").clone(),
     })
+}
+
+/// Conv-artifact naming convention shared by the Python exporter, the
+/// manifest lookups, and the delegate's manifest-less lowering.
+pub fn conv_artifact_name(signature: &str, method: &str, batch: usize) -> String {
+    format!("conv_{signature}_b{batch}_{method}")
+}
+
+/// FC-artifact naming convention (see [`conv_artifact_name`]).
+pub fn fc_artifact_name(d_in: usize, d_out: usize, relu: bool, batch: usize) -> String {
+    format!("fc_{d_in}x{d_out}_{}_b{batch}", if relu { "r" } else { "n" })
 }
 
 /// Repository-standard artifact directory, resolving relative to the

@@ -127,9 +127,11 @@ impl Runtime {
             .clone();
         let path = self.manifest.artifact_path(&meta);
         let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(&path).map_err(|e| {
-            anyhow::anyhow!("parse HLO text {}: {e}", path.display())
-        })?;
+        // Keep the typed xla error as the root cause: the delegate
+        // fallback policy downcasts to distinguish "accelerator backend
+        // unavailable / artifact uncompilable" from config errors.
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::Error::new(e).context(format!("parse HLO text {}", path.display())))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self.client.compile(&comp)?;
         let loaded = Rc::new(LoadedArtifact {

@@ -69,6 +69,30 @@ impl Method {
             _ => 1,
         }
     }
+
+    /// Parse one of the paper's method strings.
+    pub fn parse(s: &str) -> Option<Method> {
+        match s {
+            "cpu-seq" => Some(Method::CpuSeq),
+            "basic-parallel" => Some(Method::BasicParallel),
+            "basic-simd" => Some(Method::BasicSimd),
+            "advanced-simd-4" => Some(Method::AdvancedSimd4),
+            "advanced-simd-8" => Some(Method::AdvancedSimd8),
+            _ => None,
+        }
+    }
+}
+
+/// Cost-model stand-in for an engine method string.  The TPU-native
+/// `mxu` extension has no 2015 analogue; the delegate partitioner costs
+/// it like the 8-output SIMD method (fewest dispatches, widest
+/// per-thread tiles), which preserves relative ordering well enough for
+/// placement decisions.
+pub fn method_for(s: &str) -> Option<Method> {
+    match s {
+        "mxu" => Some(Method::AdvancedSimd8),
+        _ => Method::parse(s),
+    }
 }
 
 /// Sequential-CPU GFLOP/s for an inner loop of `inner` MAC words
@@ -131,8 +155,10 @@ pub fn conv_time_gpu(dev: &DeviceSpec, spec: &ConvSpec, method: Method, throttle
     t_compute.max(t_traffic) + t_dispatch
 }
 
-/// Time of one FC layer for one frame, seconds.
-fn fc_time(dev: &DeviceSpec, d_in: usize, d_out: usize, on_gpu: bool, throttle: f64) -> f64 {
+/// Time of one FC layer for one frame, seconds.  Public for the
+/// delegate partitioner, which prices CPU-vs-accelerator FC placement
+/// per layer instead of hard-coding the paper's AlexNet-only rule.
+pub fn fc_time(dev: &DeviceSpec, d_in: usize, d_out: usize, on_gpu: bool, throttle: f64) -> f64 {
     let flops = 2.0 * d_in as f64 * d_out as f64;
     if on_gpu {
         // A matrix-vector product is traffic-bound: every weight is
@@ -148,7 +174,7 @@ fn fc_time(dev: &DeviceSpec, d_in: usize, d_out: usize, on_gpu: bool, throttle: 
 }
 
 /// Time of one pooling layer for one frame, seconds.
-fn pool_time(dev: &DeviceSpec, c: usize, oh: usize, ow: usize, size: usize, mt: bool) -> f64 {
+pub fn pool_time(dev: &DeviceSpec, c: usize, oh: usize, ow: usize, size: usize, mt: bool) -> f64 {
     // One compare/add per window element; simple streaming op.
     let ops = (c * oh * ow * size * size) as f64;
     let rate = dev.cpu_pool_gops * 1e9 * if mt { dev.cpu_mt_speedup } else { 1.0 };
@@ -156,7 +182,7 @@ fn pool_time(dev: &DeviceSpec, c: usize, oh: usize, ow: usize, size: usize, mt: 
 }
 
 /// Time of one LRN layer for one frame, seconds.
-fn lrn_time(dev: &DeviceSpec, c: usize, h: usize, w: usize, size: usize, mt: bool) -> f64 {
+pub fn lrn_time(dev: &DeviceSpec, c: usize, h: usize, w: usize, size: usize, mt: bool) -> f64 {
     // size MACs + a powf (~12 flops) per element.
     let ops = (c * h * w) as f64 * (size as f64 * 2.0 + 12.0);
     let rate = dev.cpu_pool_gops * 1e9 * if mt { dev.cpu_mt_speedup } else { 1.0 };

@@ -147,6 +147,16 @@ pub fn all_devices() -> Vec<DeviceSpec> {
     vec![galaxy_note4(), htc_one_m9()]
 }
 
+/// Look up a Table-1 device profile by short alias or full name
+/// (CLI `--device` and the `delegate:auto:<device>` method suffix).
+pub fn by_name(name: &str) -> Option<DeviceSpec> {
+    match name.to_ascii_lowercase().as_str() {
+        "note4" | "galaxy-note4" | "galaxy_note4" => Some(galaxy_note4()),
+        "m9" | "one-m9" | "htc-one-m9" | "htc_one_m9" => Some(htc_one_m9()),
+        _ => all_devices().into_iter().find(|d| d.name.eq_ignore_ascii_case(name)),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -161,6 +171,14 @@ mod tests {
         assert!((d.gpu_peak_gflops() - 62.4).abs() < 0.1);
         // Achievable < peak.
         assert!(d.gpu_ach_gflops < d.gpu_peak_gflops());
+    }
+
+    #[test]
+    fn by_name_resolves_aliases() {
+        assert_eq!(by_name("note4").unwrap().name, galaxy_note4().name);
+        assert_eq!(by_name("M9").unwrap().name, htc_one_m9().name);
+        assert_eq!(by_name("HTC One M9").unwrap().name, htc_one_m9().name);
+        assert!(by_name("pixel-9").is_none());
     }
 
     #[test]

@@ -16,6 +16,6 @@ pub mod cost;
 pub mod device;
 pub mod tables;
 
-pub use cost::{network_times, Method, NetworkTimes};
+pub use cost::{method_for, network_times, Method, NetworkTimes};
 pub use device::{galaxy_note4, htc_one_m9, DeviceSpec};
 pub use tables::{table3, table4, Row};

@@ -1,0 +1,183 @@
+//! Property tests on the delegate subsystem's partitioner invariants,
+//! over every zoo network, both Table-1 device profiles, and randomly
+//! jittered device calibrations:
+//!
+//! (a) every layer is assigned to a backend that declares support for
+//!     it, and the emitted plan matches the network layer-for-layer;
+//! (b) the chosen plan's total predicted cost is <= every
+//!     single-backend plan and every fixed-method plan under the same
+//!     accounting (the DP-optimality acceptance bar);
+//! (c) plans are deterministic for a fixed (network, device) input.
+
+use cnndroid::delegate::{Partitioner, Registry};
+use cnndroid::model::zoo;
+use cnndroid::prop_assert;
+use cnndroid::simulator::device::{galaxy_note4, htc_one_m9, DeviceSpec};
+use cnndroid::util::prop;
+use cnndroid::util::rng::Pcg;
+use cnndroid::METHODS;
+
+/// Random multiplicative jitter in [0.5, 2) for one calibration field.
+fn scale(rng: &mut Pcg) -> f64 {
+    4f64.powf(rng.uniform() - 0.5)
+}
+
+/// A device profile with every calibration constant jittered — the
+/// invariants must hold for any plausible hardware, not just the two
+/// fitted profiles.
+fn jittered_device(rng: &mut Pcg) -> DeviceSpec {
+    let mut dev = if rng.below(2) == 0 { galaxy_note4() } else { htc_one_m9() };
+    dev.gpu_ach_gflops *= scale(rng);
+    dev.cache_gbps *= scale(rng);
+    dev.copy_gbps *= scale(rng);
+    dev.launch_base_ms *= scale(rng);
+    dev.launch_per_thread_us *= scale(rng);
+    dev.threads_half *= scale(rng);
+    dev.cpu_base_gflops *= scale(rng);
+    dev.cpu_slope_gflops *= scale(rng);
+    dev.cpu_cap_gflops *= scale(rng);
+    dev.cpu_pool_gops *= scale(rng);
+    dev.cpu_mt_speedup = 1.0 + (dev.cpu_mt_speedup - 1.0) * scale(rng);
+    dev
+}
+
+fn random_net(rng: &mut Pcg) -> cnndroid::model::network::Network {
+    let nets = zoo::all();
+    nets[rng.below(nets.len() as u64) as usize].clone()
+}
+
+#[test]
+fn every_layer_lands_on_a_supporting_backend() {
+    prop::check("delegate assignment validity", |rng| {
+        let dev = jittered_device(rng);
+        let net = random_net(rng);
+        let registry = Registry::simulated();
+        let report = Partitioner::new(&registry, &dev)
+            .partition(&net)
+            .map_err(|e| format!("partition failed: {e}"))?;
+        prop_assert!(
+            report.assignments.len() == net.layers.len(),
+            "{}: {} assignments for {} layers",
+            net.name,
+            report.assignments.len(),
+            net.layers.len()
+        );
+        prop_assert!(
+            report.plan.layers.len() == net.layers.len(),
+            "{}: plan length mismatch",
+            net.name
+        );
+        for (li, a) in report.assignments.iter().enumerate() {
+            let backend = registry
+                .get(&a.backend)
+                .ok_or_else(|| format!("unknown backend {:?}", a.backend))?;
+            prop_assert!(
+                backend.supports(&net, li),
+                "{}: layer {} assigned to {} which does not support it",
+                net.name,
+                a.layer,
+                a.backend
+            );
+            prop_assert!(
+                report.plan.layers[li].name() == net.layers[li].name(),
+                "{}: plan layer {li} is {:?}, want {:?}",
+                net.name,
+                report.plan.layers[li].name(),
+                net.layers[li].name()
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn auto_cost_is_a_lower_bound_on_fixed_plans() {
+    prop::check("delegate cost optimality", |rng| {
+        let dev = jittered_device(rng);
+        let net = random_net(rng);
+        let registry = Registry::simulated();
+        let partitioner = Partitioner::new(&registry, &dev);
+        let report =
+            partitioner.partition(&net).map_err(|e| format!("partition failed: {e}"))?;
+
+        // Single-backend plans: only cpu-seq supports every kind.
+        let cpu_seq = registry.index_of("cpu-seq").expect("cpu-seq registered");
+        let all_cpu = vec![cpu_seq; net.layers.len()];
+        let cpu_cost = partitioner.cost_of(&net, &all_cpu);
+        prop_assert!(
+            report.predicted_s <= cpu_cost * (1.0 + 1e-9) + 1e-15,
+            "{}: auto {} > all-cpu-seq {}",
+            net.name,
+            report.predicted_s,
+            cpu_cost
+        );
+
+        // Every fixed-method plan expressible in the registry.
+        for method in METHODS {
+            let Some(fixed) = partitioner.predicted_fixed(&net, method) else { continue };
+            prop_assert!(
+                report.predicted_s <= fixed * (1.0 + 1e-9) + 1e-15,
+                "{}: auto {} > fixed {method} {}",
+                net.name,
+                report.predicted_s,
+                fixed
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn plans_are_deterministic_for_fixed_inputs() {
+    prop::check("delegate determinism", |rng| {
+        let dev = jittered_device(rng);
+        let net = random_net(rng);
+        // Two fully independent registry + partitioner instances.
+        let reg_a = Registry::simulated();
+        let reg_b = Registry::simulated();
+        let a = Partitioner::new(&reg_a, &dev)
+            .partition(&net)
+            .map_err(|e| format!("partition a failed: {e}"))?;
+        let b = Partitioner::new(&reg_b, &dev)
+            .partition(&net)
+            .map_err(|e| format!("partition b failed: {e}"))?;
+        prop_assert!(a.choice == b.choice, "{}: {:?} != {:?}", net.name, a.choice, b.choice);
+        prop_assert!(
+            a.predicted_s.to_bits() == b.predicted_s.to_bits(),
+            "{}: predicted costs differ: {} vs {}",
+            net.name,
+            a.predicted_s,
+            b.predicted_s
+        );
+        let backends_a: Vec<&str> = a.assignments.iter().map(|x| x.backend.as_str()).collect();
+        let backends_b: Vec<&str> = b.assignments.iter().map(|x| x.backend.as_str()).collect();
+        prop_assert!(backends_a == backends_b, "{}: backend names differ", net.name);
+        Ok(())
+    });
+}
+
+/// The acceptance criterion verbatim: both Table-1 profiles, every zoo
+/// network, unjittered — auto plans exist and beat every fixed plan.
+#[test]
+fn acceptance_table1_devices_times_zoo() {
+    for dev in [galaxy_note4(), htc_one_m9()] {
+        for net in zoo::all() {
+            let registry = Registry::simulated();
+            let partitioner = Partitioner::new(&registry, &dev);
+            let report = partitioner.partition(&net).unwrap();
+            assert_eq!(report.plan.method, cnndroid::DELEGATE_AUTO);
+            let best_fixed = METHODS
+                .iter()
+                .filter_map(|m| partitioner.predicted_fixed(&net, m))
+                .fold(f64::INFINITY, f64::min);
+            assert!(
+                report.predicted_s <= best_fixed * (1.0 + 1e-9),
+                "{}/{}: auto {:.6}s > best fixed {:.6}s",
+                dev.name,
+                net.name,
+                report.predicted_s,
+                best_fixed
+            );
+        }
+    }
+}

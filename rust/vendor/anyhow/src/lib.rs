@@ -1,0 +1,195 @@
+//! In-repo substitute for the `anyhow` crate.
+//!
+//! The build environment is offline (no crates.io), so per the repo
+//! convention (util/mod.rs: every needed capability is a small, tested
+//! in-repo substrate) this vendored crate implements exactly the subset
+//! the engine uses:
+//!
+//! * [`Error`] — a boxed dynamic error with a chain of human-readable
+//!   context frames, `Display`/`Debug`, and `downcast_ref` so callers
+//!   (the delegate fallback policy) can recover typed causes.
+//! * [`Result`] — `Result<T, Error>` with the error type defaulted.
+//! * `anyhow!` / `bail!` / `ensure!` — the construction macros.
+//! * [`Context`] — `.context()` / `.with_context()` on foreign results.
+//!
+//! Swapping this path dependency for the real `anyhow` in Cargo.toml
+//! must not change behavior; only the implemented subset may be used.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Boxed dynamic error plus context frames (outermost first).
+pub struct Error {
+    inner: Box<dyn StdError + Send + Sync + 'static>,
+    context: Vec<String>,
+}
+
+impl Error {
+    /// Wrap a typed error, keeping it recoverable via [`Error::downcast_ref`].
+    pub fn new<E: StdError + Send + Sync + 'static>(err: E) -> Error {
+        Error { inner: Box::new(err), context: Vec::new() }
+    }
+
+    /// Construct from a display-able message.
+    pub fn msg<M: fmt::Display>(msg: M) -> Error {
+        Error { inner: Box::new(MessageError(msg.to_string())), context: Vec::new() }
+    }
+
+    /// Attach a context frame (shown first; `{:#}` shows the chain).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.context.insert(0, context.to_string());
+        self
+    }
+
+    /// Recover the typed root error, if it is an `E`.
+    pub fn downcast_ref<E: StdError + 'static>(&self) -> Option<&E> {
+        self.inner.downcast_ref::<E>()
+    }
+
+    /// The innermost error in the chain.
+    pub fn root_cause(&self) -> &(dyn StdError + 'static) {
+        &*self.inner
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            for c in &self.context {
+                write!(f, "{c}: ")?;
+            }
+            write!(f, "{}", self.inner)
+        } else if let Some(outermost) = self.context.first() {
+            write!(f, "{outermost}")
+        } else {
+            write!(f, "{}", self.inner)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.context.is_empty() {
+            write!(f, "{}", self.inner)
+        } else {
+            write!(f, "{}\n\nCaused by:\n    {}", self.context.join(": "), self.inner)
+        }
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Error {
+        Error::new(err)
+    }
+}
+
+/// `.context()` / `.with_context()` on results carrying foreign errors.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::new(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::new(e).context(f()))
+    }
+}
+
+/// Message-only root error produced by the `anyhow!` macro.
+#[derive(Debug)]
+struct MessageError(String);
+
+impl fmt::Display for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl StdError for MessageError {}
+
+/// Build an [`Error`] from a format string or a display-able value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => { $crate::Error::msg(format!($msg)) };
+    ($fmt:literal, $($arg:tt)*) => { $crate::Error::msg(format!($fmt, $($arg)*)) };
+    ($err:expr $(,)?) => { $crate::Error::msg($err) };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => { return Err($crate::anyhow!($($t)*)) };
+}
+
+/// Return early with an [`Error`] when the condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($t)*));
+        }
+    };
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!("condition failed: `", stringify!($cond), "`")));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Debug)]
+    struct Typed(u32);
+    impl fmt::Display for Typed {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            write!(f, "typed error {}", self.0)
+        }
+    }
+    impl StdError for Typed {}
+
+    fn fails(flag: bool) -> Result<()> {
+        ensure!(flag, "flag was {flag}");
+        Ok(())
+    }
+
+    #[test]
+    fn macros_and_display() {
+        let name = "net";
+        let e = anyhow!("unknown network {name:?}");
+        assert_eq!(format!("{e}"), "unknown network \"net\"");
+        assert!(fails(true).is_ok());
+        assert_eq!(format!("{}", fails(false).unwrap_err()), "flag was false");
+    }
+
+    #[test]
+    fn context_chains_in_alternate_display() {
+        let e = Error::new(Typed(7)).context("while compiling conv1");
+        assert_eq!(format!("{e}"), "while compiling conv1");
+        assert_eq!(format!("{e:#}"), "while compiling conv1: typed error 7");
+    }
+
+    #[test]
+    fn downcast_survives_context() {
+        let e = Error::new(Typed(9)).context("outer");
+        assert_eq!(e.downcast_ref::<Typed>().unwrap().0, 9);
+        assert!(e.downcast_ref::<std::io::Error>().is_none());
+    }
+
+    #[test]
+    fn question_mark_converts_foreign_errors() {
+        fn read() -> Result<String> {
+            Ok(std::fs::read_to_string("/definitely/not/here")?)
+        }
+        let e = read().unwrap_err();
+        assert!(e.downcast_ref::<std::io::Error>().is_some());
+    }
+}
