@@ -1,17 +1,25 @@
 //! Per-layer microbenches: every substrate the engine composes —
 //! CPU conv/fc, parallel vs sequential pool/LRN/ReLU, layout swaps,
-//! and the XLA conv artifacts per method on one representative shape.
+//! the kernel core's direct-vs-im2col conv lowerings on AlexNet
+//! shapes, and the XLA conv artifacts per method on one representative
+//! shape.
 //!
 //! ```bash
-//! cargo bench --bench bench_layers [-- --filter pool]
+//! cargo bench --bench bench_layers [-- --filter kernel/]
 //! ```
+//!
+//! The kernel-core section also writes `BENCH_kernels.json` (per-shape
+//! direct vs im2col times and speedups) so the perf trajectory is
+//! tracked in CI from this PR on.
 
 use cnndroid::cpu::{par, seq};
+use cnndroid::kernels::{self, KernelOpts, PackedConv};
 use cnndroid::model::manifest::{default_dir, Manifest};
 use cnndroid::model::zoo;
 use cnndroid::runtime::Runtime;
 use cnndroid::tensor::{layout, Tensor};
 use cnndroid::util::bench::Bench;
+use cnndroid::util::json::Json;
 use cnndroid::util::rng::Pcg;
 
 fn random(shape: Vec<usize>, seed: u64) -> Tensor {
@@ -20,8 +28,88 @@ fn random(shape: Vec<usize>, seed: u64) -> Tensor {
     Tensor::new(shape, rng.normal_vec(n, 0.5))
 }
 
+/// Direct-vs-im2col on the network's conv shapes (the kernel core's
+/// acceptance benchmark); returns one JSON record per shape.
+fn kernel_core_cases(
+    b: &mut Bench,
+    layers: &[(&str, cnndroid::model::network::ConvSpec)],
+) -> Vec<Json> {
+    let mut records = Vec::new();
+    for (i, (name, spec)) in layers.iter().enumerate() {
+        let seed = 60 + 4 * i as u64;
+        let x = random(vec![1, spec.in_c, spec.in_h, spec.in_w], seed);
+        let w = random(vec![spec.nk, spec.in_c, spec.kh, spec.kw], seed + 1);
+        let bias = random(vec![spec.nk], seed + 2);
+        let packed = PackedConv::pack(spec, &w, &bias);
+        let direct_name = format!("kernel/{name}/direct-seq");
+        let im2col_name = format!("kernel/{name}/im2col-seq");
+        let tiled_name = format!("kernel/{name}/im2col-tiled");
+        b.case(&direct_name, || {
+            kernels::conv_direct(&x, &w, &bias, spec, KernelOpts::seq());
+        });
+        b.case(&im2col_name, || {
+            kernels::conv_im2col(&x, &packed, KernelOpts::seq());
+        });
+        b.case(&tiled_name, || {
+            kernels::conv_im2col(&x, &packed, KernelOpts::tiled());
+        });
+        let (Some(direct), Some(lowered), Some(tiled)) =
+            (b.mean_of(&direct_name), b.mean_of(&im2col_name), b.mean_of(&tiled_name))
+        else {
+            continue; // filtered out
+        };
+        records.push(Json::obj(vec![
+            ("layer", Json::str(*name)),
+            ("signature", Json::str(spec.signature())),
+            ("direct_ms", Json::num(direct.as_secs_f64() * 1e3)),
+            ("im2col_ms", Json::num(lowered.as_secs_f64() * 1e3)),
+            ("im2col_tiled_ms", Json::num(tiled.as_secs_f64() * 1e3)),
+            (
+                "im2col_speedup",
+                Json::num(direct.as_secs_f64() / lowered.as_secs_f64()),
+            ),
+            (
+                "im2col_tiled_speedup",
+                Json::num(direct.as_secs_f64() / tiled.as_secs_f64()),
+            ),
+        ]));
+    }
+    records
+}
+
 fn main() {
     let mut b = Bench::new("layer substrates");
+
+    // --- kernel core: direct loop nest vs im2col+GEMM on AlexNet
+    //     conv1/conv2 (the ISSUE-2 acceptance shapes) + the other zoo
+    //     heaviest convs ---
+    let alex = zoo::alexnet();
+    let alex_specs = alex.conv_specs();
+    let pick = |n: &str| alex_specs.iter().find(|(name, _)| name == n).unwrap().1;
+    let (lename, lespec) = zoo::lenet5().heaviest_conv();
+    let (ciname, cispec) = zoo::cifar10().heaviest_conv();
+    let le_label = format!("lenet5-{lename}");
+    let ci_label = format!("cifar10-{ciname}");
+    let layers = [
+        ("alexnet-conv1", pick("conv1")),
+        ("alexnet-conv2", pick("conv2")),
+        (le_label.as_str(), lespec),
+        (ci_label.as_str(), cispec),
+    ];
+    let records = kernel_core_cases(&mut b, &layers);
+    if !records.is_empty() {
+        let doc = Json::obj(vec![
+            ("bench", Json::str("bench_layers/kernel-core")),
+            ("unit", Json::str("ms")),
+            ("cases", Json::arr(records)),
+        ]);
+        let path = "BENCH_kernels.json";
+        match std::fs::write(path, doc.dump()) {
+            Ok(()) => println!("  (kernel-core results written to {path})"),
+            Err(e) => eprintln!("  (could not write {path}: {e})"),
+        }
+        b.speedup_table("kernel/alexnet-conv2/direct-seq");
+    }
 
     // --- layout swaps (the "dimension swapping" cost the Fig. 5
     //     pipeline must hide) ---

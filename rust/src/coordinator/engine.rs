@@ -15,7 +15,7 @@ use std::time::Instant;
 
 use crate::coordinator::pipeline::{run_pipeline, PipelineTrace};
 use crate::coordinator::plan::{ExecutionPlan, LayerPlan};
-use crate::cpu::{par, seq};
+use crate::kernels::{self, KernelOpts, KernelVariant, PackedModel};
 use crate::model::manifest::Manifest;
 use crate::model::network::{Network, PoolMode};
 use crate::model::weights::{load_weights, Params};
@@ -56,6 +56,9 @@ pub struct Engine {
     runtime: Rc<Runtime>,
     net: Network,
     params: Params,
+    /// GEMM-ready weight cache, packed once at load time (CNNdroid's
+    /// model-preparation step) and reused by every CPU-placed conv.
+    packed: PackedModel,
     plan: ExecutionPlan,
     cfg: EngineConfig,
     /// Per-layer weights pre-swapped to the artifact layout (the
@@ -125,10 +128,30 @@ impl Engine {
             }
         }
 
+        // Pack GEMM-ready weights only for the conv layers this plan
+        // actually dispatches as im2col (fixed-method plans are all
+        // direct; accelerated layers never read the cache) — no point
+        // duplicating conv-weight memory for anything else.
+        let im2col_convs: std::collections::BTreeSet<String> = plan
+            .layers
+            .iter()
+            .filter_map(|l| match l {
+                LayerPlan::ConvCpu { name, variant: KernelVariant::Im2col, .. } => {
+                    Some(name.clone())
+                }
+                _ => None,
+            })
+            .collect();
+        let packed = if im2col_convs.is_empty() {
+            PackedModel::default()
+        } else {
+            PackedModel::prepare_for(&net, &params, &im2col_convs)?
+        };
         let engine = Engine {
             runtime,
             net,
             params,
+            packed,
             plan,
             cfg,
             dev_weights,
@@ -218,20 +241,10 @@ impl Engine {
         Ok(act)
     }
 
-    /// Classify a batch: (label, max-logit) per frame.
+    /// Classify a batch: (label, max-logit) per frame (shared
+    /// [`Tensor::argmax_rows`] helper).
     pub fn classify(&self, x: &Tensor) -> Result<Vec<(usize, f32)>> {
-        let logits = self.infer_batch(x)?;
-        let c = self.net.classes;
-        Ok((0..logits.dim(0))
-            .map(|i| {
-                let row = &logits.data()[i * c..(i + 1) * c];
-                row.iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .map(|(idx, &v)| (idx, v))
-                    .unwrap()
-            })
-            .collect())
+        Ok(self.infer_batch(x)?.argmax_rows())
     }
 
     /// Forward through the fused whole-network artifact (our extension;
@@ -274,36 +287,47 @@ impl Engine {
             LayerPlan::ConvAccel { name, artifact, nhwc, .. } => {
                 self.conv_accel(&name, &artifact, nhwc, act)
             }
-            LayerPlan::ConvCpu { name, spec } => {
-                let (w, b) = self
-                    .params
-                    .get(&name)
-                    .ok_or_else(|| anyhow::anyhow!("missing weights for {name}"))?;
-                Ok(seq::conv_nchw(&act, w, b, &spec))
+            LayerPlan::ConvCpu { name, spec, variant, tiled } => {
+                let opts = if tiled { KernelOpts::tiled() } else { KernelOpts::seq() };
+                match variant {
+                    KernelVariant::Im2col => {
+                        let pc = self
+                            .packed
+                            .conv(&name)
+                            .ok_or_else(|| anyhow::anyhow!("no packed conv for {name}"))?;
+                        Ok(kernels::conv_im2col(&act, pc, opts))
+                    }
+                    KernelVariant::Direct => {
+                        let (w, b) = self
+                            .params
+                            .get(&name)
+                            .ok_or_else(|| anyhow::anyhow!("missing weights for {name}"))?;
+                        Ok(kernels::conv_direct(&act, w, b, &spec, opts))
+                    }
+                }
             }
             LayerPlan::Pool { mode, size, stride, relu, parallel, .. } => {
-                let mut out = match (mode, parallel) {
-                    (PoolMode::Max, true) => par::maxpool_nchw(&act, size, stride),
-                    (PoolMode::Max, false) => seq::maxpool_nchw(&act, size, stride),
-                    (PoolMode::Avg, true) => par::avgpool_nchw(&act, size, stride),
-                    (PoolMode::Avg, false) => seq::avgpool_nchw(&act, size, stride),
+                let opts = if parallel { KernelOpts::tiled() } else { KernelOpts::seq() };
+                let mut out = match mode {
+                    PoolMode::Max => kernels::maxpool_nchw(&act, size, stride, opts),
+                    PoolMode::Avg => kernels::avgpool_nchw(&act, size, stride, opts),
                 };
                 if relu {
                     out.relu_inplace();
                 }
                 Ok(out)
             }
-            LayerPlan::Lrn { size, alpha, beta, k, parallel, .. } => Ok(if parallel {
-                par::lrn_nchw(&act, size, alpha, beta, k)
-            } else {
-                seq::lrn_nchw(&act, size, alpha, beta, k)
-            }),
-            LayerPlan::FcCpu { name, relu } => {
+            LayerPlan::Lrn { size, alpha, beta, k, parallel, .. } => {
+                let opts = if parallel { KernelOpts::tiled() } else { KernelOpts::seq() };
+                Ok(kernels::lrn_nchw(&act, size, alpha, beta, k, opts))
+            }
+            LayerPlan::FcCpu { name, relu, tiled } => {
+                let opts = if tiled { KernelOpts::tiled() } else { KernelOpts::seq() };
                 let (w, b) = self
                     .params
                     .get(&name)
                     .ok_or_else(|| anyhow::anyhow!("missing weights for {name}"))?;
-                Ok(seq::fc(&flatten(act), w, b, relu))
+                Ok(kernels::fc(&flatten(act), w, b, relu, opts))
             }
             LayerPlan::FcAccel { name, artifact_b1, artifact_b16, .. } => {
                 let x = flatten(act);

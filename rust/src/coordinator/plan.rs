@@ -10,6 +10,7 @@
 
 use std::fmt;
 
+use crate::kernels::KernelVariant;
 use crate::model::manifest::Manifest;
 use crate::model::network::{ConvSpec, Layer, Network, PoolMode};
 use crate::Result;
@@ -59,8 +60,11 @@ pub enum LayerPlan {
         /// Inputs/outputs are NHWC; the engine swaps on CPU idle time.
         nhwc: bool,
     },
-    /// Convolution on the sequential CPU (baseline plan).
-    ConvCpu { name: String, spec: ConvSpec },
+    /// Convolution on the CPU kernel core.  The fixed `cpu-seq` plan
+    /// uses the direct sequential configuration (§4.1 baseline); the
+    /// delegate's `cpu-gemm` backend lowers to im2col+GEMM with
+    /// tile-parallelism.
+    ConvCpu { name: String, spec: ConvSpec, variant: KernelVariant, tiled: bool },
     /// Pooling on CPU (multithreaded in accelerated plans, §6.3).
     Pool { name: String, mode: PoolMode, size: usize, stride: usize, relu: bool, parallel: bool },
     /// LRN on CPU.
@@ -76,8 +80,9 @@ pub enum LayerPlan {
         artifact_b1: String,
         artifact_b16: Option<String>,
     },
-    /// Fully connected on the sequential CPU.
-    FcCpu { name: String, relu: bool },
+    /// Fully connected on the CPU kernel core (tile-parallel GEMM when
+    /// `tiled`).
+    FcCpu { name: String, relu: bool, tiled: bool },
 }
 
 impl LayerPlan {
@@ -147,7 +152,12 @@ impl ExecutionPlan {
                             nhwc,
                         }
                     } else {
-                        LayerPlan::ConvCpu { name: name.clone(), spec }
+                        LayerPlan::ConvCpu {
+                            name: name.clone(),
+                            spec,
+                            variant: KernelVariant::Direct,
+                            tiled: false,
+                        }
                     }
                 }
                 Layer::Pool { name, mode, size, stride, relu } => LayerPlan::Pool {
@@ -191,7 +201,7 @@ impl ExecutionPlan {
                             artifact_b16: b16.map(|m| m.name.clone()),
                         }
                     } else {
-                        LayerPlan::FcCpu { name: name.clone(), relu: *relu }
+                        LayerPlan::FcCpu { name: name.clone(), relu: *relu, tiled: false }
                     }
                 }
             };

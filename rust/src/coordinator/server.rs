@@ -244,14 +244,10 @@ fn engine_worker(
         match engine.infer_batch(&stacked) {
             Ok(logits) => {
                 let c = logits.dim(1);
+                let rows = logits.argmax_rows();
                 for (i, req) in batch.into_iter().enumerate() {
+                    let (label, score) = rows[i];
                     let row = &logits.data()[i * c..(i + 1) * c];
-                    let (label, score) = row
-                        .iter()
-                        .enumerate()
-                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                        .map(|(idx, &v)| (idx, v))
-                        .unwrap();
                     let latency = req.enqueued.elapsed();
                     metrics.record(net, latency, n);
                     let fields = vec![

@@ -3,16 +3,52 @@
 //! Tables 3/4 and (b) the numeric reference the accelerated engine is
 //! validated against (`cpu_vs_xla` integration test).
 
-use crate::model::network::{ConvSpec, Layer, Network};
+use crate::kernels::{self, KernelOpts, KernelVariant, PackedModel};
+use crate::model::network::{Layer, Network};
 use crate::model::weights::Params;
 use crate::tensor::Tensor;
 use crate::Result;
 
-use super::seq;
+/// How the packed forward path executes each layer.
+#[derive(Debug, Clone, Copy)]
+pub struct ForwardOpts {
+    /// Conv lowering: the §4.1 direct nest or im2col+GEMM.
+    pub variant: KernelVariant,
+    /// Thread/tile configuration forwarded to every kernel.
+    pub kernel: KernelOpts,
+}
+
+impl ForwardOpts {
+    /// The paper's baseline: direct conv, one thread.
+    pub fn baseline() -> ForwardOpts {
+        ForwardOpts { variant: KernelVariant::Direct, kernel: KernelOpts::seq() }
+    }
+
+    /// The kernel core's fast CPU path: im2col+GEMM, tile-parallel.
+    pub fn fast() -> ForwardOpts {
+        ForwardOpts { variant: KernelVariant::Im2col, kernel: KernelOpts::tiled() }
+    }
+}
 
 /// Run the full forward path single-threaded.  `x` is (N, C, H, W);
-/// returns logits (N, classes).
+/// returns logits (N, classes).  The direct baseline reads weights
+/// straight from `params`, so no packing happens here; im2col callers
+/// should [`PackedModel::prepare`] once and use [`forward_packed`].
 pub fn forward_seq(net: &Network, params: &Params, x: &Tensor) -> Result<Tensor> {
+    forward_packed(net, params, &PackedModel::default(), x, &ForwardOpts::baseline())
+}
+
+/// Run the full forward path with an explicit lowering + parallelism
+/// configuration.  `packed` is only consulted for the im2col variant
+/// (the direct nest reads raw `params`), so the baseline may pass
+/// `PackedModel::default()`.
+pub fn forward_packed(
+    net: &Network,
+    params: &Params,
+    packed: &PackedModel,
+    x: &Tensor,
+    fo: &ForwardOpts,
+) -> Result<Tensor> {
     anyhow::ensure!(
         x.shape()[1..] == [net.in_c, net.in_h, net.in_w],
         "input shape {:?} does not match {} ({},{},{})",
@@ -22,70 +58,73 @@ pub fn forward_seq(net: &Network, params: &Params, x: &Tensor) -> Result<Tensor>
         net.in_h,
         net.in_w
     );
+    // Conv geometry for the direct nest; the im2col variant reads the
+    // spec from its PackedConv instead, so skip the map entirely.
+    let specs: std::collections::BTreeMap<String, crate::model::network::ConvSpec> =
+        if fo.variant == KernelVariant::Direct {
+            net.conv_specs().into_iter().collect()
+        } else {
+            Default::default()
+        };
     let mut h = x.clone();
-    let (mut cc, mut ch, mut cw) = (net.in_c, net.in_h, net.in_w);
     for layer in &net.layers {
         match layer {
-            Layer::Conv { name, nk, kh, kw, stride, pad, relu } => {
-                let (w, b) = params
-                    .get(name)
-                    .ok_or_else(|| anyhow::anyhow!("missing params for {name}"))?;
-                let spec = ConvSpec {
-                    in_c: cc, in_h: ch, in_w: cw,
-                    nk: *nk, kh: *kh, kw: *kw,
-                    stride: *stride, pad: *pad, relu: *relu,
+            Layer::Conv { name, .. } => {
+                h = match fo.variant {
+                    KernelVariant::Direct => {
+                        let (w, b) = params
+                            .get(name)
+                            .ok_or_else(|| anyhow::anyhow!("missing params for {name}"))?;
+                        let spec = specs
+                            .get(name.as_str())
+                            .ok_or_else(|| anyhow::anyhow!("no conv spec for {name}"))?;
+                        kernels::conv_direct(&h, w, b, spec, fo.kernel)
+                    }
+                    KernelVariant::Im2col => {
+                        let pc = packed
+                            .conv(name)
+                            .ok_or_else(|| anyhow::anyhow!("no packed conv for {name}"))?;
+                        kernels::conv_im2col(&h, pc, fo.kernel)
+                    }
                 };
-                h = seq::conv_nchw(&h, w, b, &spec);
-                cc = *nk;
-                ch = spec.out_h();
-                cw = spec.out_w();
             }
             Layer::Pool { mode, size, stride, relu, .. } => {
                 h = match mode {
-                    crate::model::network::PoolMode::Max => seq::maxpool_nchw(&h, *size, *stride),
-                    crate::model::network::PoolMode::Avg => seq::avgpool_nchw(&h, *size, *stride),
+                    crate::model::network::PoolMode::Max => {
+                        kernels::maxpool_nchw(&h, *size, *stride, fo.kernel)
+                    }
+                    crate::model::network::PoolMode::Avg => {
+                        kernels::avgpool_nchw(&h, *size, *stride, fo.kernel)
+                    }
                 };
                 if *relu {
                     h.relu_inplace();
                 }
-                ch = h.dim(2);
-                cw = h.dim(3);
             }
             Layer::Lrn { size, alpha, beta, k, .. } => {
-                h = seq::lrn_nchw(&h, *size, *alpha, *beta, *k);
+                h = kernels::lrn_nchw(&h, *size, *alpha, *beta, *k, fo.kernel);
             }
-            Layer::Fc { name, out, relu } => {
+            Layer::Fc { name, relu, .. } => {
                 let (w, b) = params
                     .get(name)
                     .ok_or_else(|| anyhow::anyhow!("missing params for {name}"))?;
                 if h.shape().len() == 4 {
                     let n = h.dim(0);
-                    h = h.reshape(vec![n, cc * ch * cw]);
+                    let d = h.len() / n;
+                    h = h.reshape(vec![n, d]);
                 }
-                h = seq::fc(&h, w, b, *relu);
-                cc = *out;
-                ch = 1;
-                cw = 1;
+                h = kernels::fc(&h, w, b, *relu, fo.kernel);
             }
         }
     }
     Ok(h)
 }
 
-/// Classify a batch: argmax of the logits per frame.
+/// Classify a batch: argmax of the logits per frame (shared
+/// [`Tensor::argmax_rows`] helper).
 pub fn classify(net: &Network, params: &Params, x: &Tensor) -> Result<Vec<usize>> {
     let logits = forward_seq(net, params, x)?;
-    let classes = net.classes;
-    Ok((0..logits.dim(0))
-        .map(|i| {
-            let row = &logits.data()[i * classes..(i + 1) * classes];
-            row.iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .map(|(idx, _)| idx)
-                .unwrap_or(0)
-        })
-        .collect())
+    Ok(logits.argmax_rows().into_iter().map(|(idx, _)| idx).collect())
 }
 
 #[cfg(test)]
@@ -118,6 +157,36 @@ mod tests {
             .filter(|(p, l)| **p == **l as usize)
             .count();
         assert!(correct * 10 >= n * 9, "only {correct}/{n} fixture digits correct");
+    }
+
+    #[test]
+    fn fast_path_matches_baseline_on_synthetic_weights() {
+        // No artifacts needed: random weights in canonical shapes.
+        let net = zoo::lenet5();
+        let mut rng = crate::util::rng::Pcg::seeded(99);
+        let pairs = net
+            .param_shapes()
+            .into_iter()
+            .map(|(name, ws, bs)| {
+                let wn: usize = ws.iter().product();
+                let bn: usize = bs.iter().product();
+                (
+                    name,
+                    Tensor::new(ws, rng.normal_vec(wn, 0.1)),
+                    Tensor::new(bs, rng.normal_vec(bn, 0.1)),
+                )
+            })
+            .collect();
+        let params = crate::model::weights::Params { pairs };
+        let x = Tensor::new(
+            vec![2, 1, 28, 28],
+            rng.normal_vec(2 * 28 * 28, 0.5),
+        );
+        let baseline = forward_seq(&net, &params, &x).unwrap();
+        let packed = PackedModel::prepare(&net, &params).unwrap();
+        let fast = forward_packed(&net, &params, &packed, &x, &ForwardOpts::fast()).unwrap();
+        let diff = fast.max_abs_diff(&baseline);
+        assert!(diff < 1e-3, "fast vs baseline diff {diff}");
     }
 
     #[test]

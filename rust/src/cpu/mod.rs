@@ -2,16 +2,22 @@
 //! the multi-threaded CPU layers (§6.3 — pooling and LRN are "unsuitable
 //! for GPU-based acceleration" and run on CPU threads instead).
 //!
-//! * [`seq`] — single-thread implementations of every layer, the
-//!   baseline Tables 3/4 measure speedups against.
-//! * [`par`] — thread-pool versions of pooling / LRN / ReLU used by the
-//!   accelerated execution plans.
-//! * [`forward`] — whole-network CPU-sequential forward path (the
-//!   "CPU-only sequential CNN" engine) and the shared reference used to
-//!   validate the accelerated engine's numerics.
+//! Both submodules are thin, API-compatible dispatchers into the
+//! unified kernel core ([`crate::kernels`]):
+//!
+//! * [`seq`] — every layer with `KernelOpts::seq()` (one thread,
+//!   direct conv), the baseline Tables 3/4 measure speedups against.
+//! * [`par`] — the SAME kernels with `KernelOpts::tiled()`:
+//!   tile-parallel within frames (bit-identical to [`seq`]), used by
+//!   the accelerated execution plans.
+//! * [`forward`] — whole-network CPU forward path: [`forward_seq`]
+//!   (the "CPU-only sequential CNN" reference) plus
+//!   [`forward::forward_packed`], which threads a prepared
+//!   [`crate::kernels::PackedModel`] weight cache and an explicit
+//!   lowering/parallelism configuration through every layer.
 
 pub mod forward;
 pub mod par;
 pub mod seq;
 
-pub use forward::forward_seq;
+pub use forward::{forward_packed, forward_seq, ForwardOpts};

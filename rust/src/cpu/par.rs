@@ -1,198 +1,59 @@
 //! Multi-threaded CPU layers (paper §6.3): "Since the pooling and
 //! normalization layers are unsuitable for GPU-based acceleration, they
-//! are accelerated on mobile CPU via multi-threading."  Work splits over
-//! (frame, channel) planes on the shared thread pool; results are
-//! bit-identical to the sequential versions in [`super::seq`].
+//! are accelerated on mobile CPU via multi-threading."
+//!
+//! Since the kernel-core refactor this module is a thin dispatcher:
+//! the SAME kernels as [`super::seq`], run with `KernelOpts::tiled()`.
+//! Work splits over `(plane, row band)` tiles — not whole frames — so
+//! a batch of 1 (the common serving case) still uses every core, and
+//! results are bit-identical to the sequential versions by
+//! construction (fixed reduction order, independent outputs).
 
-use std::sync::Arc;
-
-use crate::model::network::pool_out;
+use crate::kernels::{self, KernelOpts};
+use crate::model::network::ConvSpec;
 use crate::tensor::Tensor;
-use crate::util::threadpool;
 
 /// Multi-threaded max pooling (semantics of [`super::seq::maxpool_nchw`]).
 pub fn maxpool_nchw(x: &Tensor, size: usize, stride: usize) -> Tensor {
-    pool_impl(x, size, stride, true)
+    kernels::maxpool_nchw(x, size, stride, KernelOpts::tiled())
 }
 
 /// Multi-threaded average pooling (semantics of [`super::seq::avgpool_nchw`]).
 pub fn avgpool_nchw(x: &Tensor, size: usize, stride: usize) -> Tensor {
-    pool_impl(x, size, stride, false)
+    kernels::avgpool_nchw(x, size, stride, KernelOpts::tiled())
 }
 
-/// Shared unsafe cell that lets pool workers write disjoint planes of
-/// the output without locks (each index i touches only plane i).
-struct PlanarOut {
-    ptr: *mut f32,
-    len: usize,
-}
-unsafe impl Send for PlanarOut {}
-unsafe impl Sync for PlanarOut {}
-
-fn pool_impl(x: &Tensor, size: usize, stride: usize, is_max: bool) -> Tensor {
-    let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
-    let (oh, ow) = (pool_out(h, size, stride), pool_out(w, size, stride));
-    let mut out = Tensor::zeros(vec![n, c, oh, ow]);
-    let shared = Arc::new(PlanarOut { ptr: out.data_mut().as_mut_ptr(), len: out.len() });
-    let xdata: Arc<Vec<f32>> = Arc::new(x.data().to_vec());
-    threadpool::parallel_for(n * c, move |plane| {
-        let xd = &xdata[plane * h * w..(plane + 1) * h * w];
-        // SAFETY: each task writes only its own [plane*oh*ow, ..) slice.
-        let od = unsafe {
-            debug_assert!((plane + 1) * oh * ow <= shared.len);
-            std::slice::from_raw_parts_mut(shared.ptr.add(plane * oh * ow), oh * ow)
-        };
-        for oy in 0..oh {
-            for ox in 0..ow {
-                let y0 = oy * stride;
-                let x0 = ox * stride;
-                let y1 = (y0 + size).min(h);
-                let x1 = (x0 + size).min(w);
-                od[oy * ow + ox] = if is_max {
-                    let mut m = f32::NEG_INFINITY;
-                    for yy in y0..y1 {
-                        for xx in x0..x1 {
-                            m = m.max(xd[yy * w + xx]);
-                        }
-                    }
-                    m
-                } else {
-                    let mut s = 0.0f32;
-                    for yy in y0..y1 {
-                        for xx in x0..x1 {
-                            s += xd[yy * w + xx];
-                        }
-                    }
-                    s / (size * size) as f32
-                };
-            }
-        }
-    });
-    out
-}
-
-/// Multi-threaded LRN (semantics of [`super::seq::lrn_nchw`]); splits
-/// over (frame, output channel).
+/// Multi-threaded LRN (semantics of [`super::seq::lrn_nchw`]).
 pub fn lrn_nchw(x: &Tensor, size: usize, alpha: f64, beta: f64, k: f64) -> Tensor {
-    let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
-    let half = size / 2;
-    let mut out = Tensor::zeros(vec![n, c, h, w]);
-    let shared = Arc::new(PlanarOut { ptr: out.data_mut().as_mut_ptr(), len: out.len() });
-    let xdata: Arc<Vec<f32>> = Arc::new(x.data().to_vec());
-    let scale = alpha / size as f64;
-    threadpool::parallel_for(n * c, move |plane| {
-        let (ni, ci) = (plane / c, plane % c);
-        let lo = ci.saturating_sub(half);
-        let hi = (ci + half + 1).min(c);
-        // SAFETY: disjoint output planes per task.
-        let od = unsafe {
-            debug_assert!((plane + 1) * h * w <= shared.len);
-            std::slice::from_raw_parts_mut(shared.ptr.add(plane * h * w), h * w)
-        };
-        for pix in 0..h * w {
-            let mut acc = 0.0f64;
-            for cj in lo..hi {
-                let v = xdata[(ni * c + cj) * h * w + pix] as f64;
-                acc += v * v;
-            }
-            let denom = (k + scale * acc).powf(beta);
-            od[pix] = (xdata[plane * h * w + pix] as f64 / denom) as f32;
-        }
-    });
-    out
+    kernels::lrn_nchw(x, size, alpha, beta, k, KernelOpts::tiled())
 }
 
-/// Multi-threaded convolution: the "fair CPU baseline" ablation.  The
-/// paper's baseline is single-threaded (§4.1) and only pool/LRN are
+/// Multi-threaded direct convolution: the "fair CPU baseline" ablation.
+/// The paper's baseline is single-threaded (§4.1) and only pool/LRN are
 /// multi-threaded (§6.3); this variant answers the natural reviewer
 /// question "what if the CPU used all big cores for conv too?" —
 /// `bench_ablation` compares it against the accelerated paths.
-/// Splits over (frame, output channel); semantics of
-/// [`super::seq::conv_nchw`].
-pub fn conv_nchw(
-    x: &Tensor,
-    w: &Tensor,
-    b: &Tensor,
-    spec: &crate::model::network::ConvSpec,
-) -> Tensor {
-    let n = x.dim(0);
-    let (c, h, ww) = (spec.in_c, spec.in_h, spec.in_w);
-    assert_eq!(x.shape(), &[n, c, h, ww], "conv input shape");
-    assert_eq!(w.shape(), &[spec.nk, c, spec.kh, spec.kw], "conv weight shape");
-    let (oh, ow) = (spec.out_h(), spec.out_w());
-    let mut out = Tensor::zeros(vec![n, spec.nk, oh, ow]);
-    let shared = Arc::new(PlanarOut { ptr: out.data_mut().as_mut_ptr(), len: out.len() });
-    let xd: Arc<Vec<f32>> = Arc::new(x.data().to_vec());
-    let wd: Arc<Vec<f32>> = Arc::new(w.data().to_vec());
-    let bd: Arc<Vec<f32>> = Arc::new(b.data().to_vec());
-    let spec = *spec;
-    let nk = spec.nk;
-    threadpool::parallel_for(n * nk, move |plane| {
-        let (ni, k) = (plane / nk, plane % nk);
-        let pad = spec.pad as isize;
-        // SAFETY: each task writes only its own (frame, kernel) plane.
-        let od = unsafe {
-            debug_assert!((plane + 1) * oh * ow <= shared.len);
-            std::slice::from_raw_parts_mut(shared.ptr.add(plane * oh * ow), oh * ow)
-        };
-        for oy in 0..oh {
-            for ox in 0..ow {
-                let mut acc = bd[k];
-                let iy0 = (oy * spec.stride) as isize - pad;
-                let ix0 = (ox * spec.stride) as isize - pad;
-                for ci in 0..spec.in_c {
-                    for ky in 0..spec.kh {
-                        let iy = iy0 + ky as isize;
-                        if iy < 0 || iy >= spec.in_h as isize {
-                            continue;
-                        }
-                        let xrow = ((ni * spec.in_c + ci) * spec.in_h + iy as usize) * spec.in_w;
-                        let wrow = ((k * spec.in_c + ci) * spec.kh + ky) * spec.kw;
-                        for kx in 0..spec.kw {
-                            let ix = ix0 + kx as isize;
-                            if ix < 0 || ix >= spec.in_w as isize {
-                                continue;
-                            }
-                            acc += xd[xrow + ix as usize] * wd[wrow + kx];
-                        }
-                    }
-                }
-                if spec.relu && acc < 0.0 {
-                    acc = 0.0;
-                }
-                od[oy * ow + ox] = acc;
-            }
-        }
-    });
-    out
+/// Semantics of [`super::seq::conv_nchw`].
+pub fn conv_nchw(x: &Tensor, w: &Tensor, b: &Tensor, spec: &ConvSpec) -> Tensor {
+    kernels::conv_direct(x, w, b, spec, KernelOpts::tiled())
+}
+
+/// Multi-threaded im2col+GEMM convolution — the kernel core's fast
+/// path at full tile-parallelism (what `delegate:auto` dispatches for
+/// CPU-placed conv layers).
+pub fn conv_im2col_nchw(x: &Tensor, w: &Tensor, b: &Tensor, spec: &ConvSpec) -> Tensor {
+    kernels::conv_im2col_unpacked(x, w, b, spec, KernelOpts::tiled())
+}
+
+/// Multi-threaded fully connected layer (semantics of
+/// [`super::seq::fc`]; tile-parallel over output columns).
+pub fn fc(x: &Tensor, w: &Tensor, b: &Tensor, relu: bool) -> Tensor {
+    kernels::fc(x, w, b, relu, KernelOpts::tiled())
 }
 
 /// Multi-threaded ReLU over any tensor (chunked by the pool).
 pub fn relu(x: &Tensor) -> Tensor {
-    let mut out = x.clone();
-    let nthreads = threadpool::global().size();
-    let len = out.len();
-    if len < 1 << 14 || nthreads < 2 {
-        out.relu_inplace();
-        return out;
-    }
-    let shared = Arc::new(PlanarOut { ptr: out.data_mut().as_mut_ptr(), len });
-    let chunk = len.div_ceil(nthreads);
-    threadpool::parallel_for(nthreads, move |t| {
-        let lo = t * chunk;
-        let hi = ((t + 1) * chunk).min(shared.len);
-        if lo >= hi {
-            return;
-        }
-        // SAFETY: disjoint [lo, hi) ranges per task.
-        let od = unsafe { std::slice::from_raw_parts_mut(shared.ptr.add(lo), hi - lo) };
-        for v in od {
-            if *v < 0.0 {
-                *v = 0.0;
-            }
-        }
-    });
-    out
+    kernels::relu(x, KernelOpts::tiled())
 }
 
 #[cfg(test)]
@@ -218,6 +79,14 @@ mod tests {
     }
 
     #[test]
+    fn batch_one_pool_matches_sequential() {
+        // The serving case: one frame must still split across tiles
+        // (and stay bit-identical).
+        let x = random(vec![1, 3, 55, 55], 6);
+        assert_eq!(maxpool_nchw(&x, 3, 2), seq::maxpool_nchw(&x, 3, 2));
+    }
+
+    #[test]
     fn avgpool_matches_sequential() {
         let x = random(vec![3, 5, 16, 16], 2);
         assert_eq!(avgpool_nchw(&x, 3, 2), seq::avgpool_nchw(&x, 3, 2));
@@ -233,7 +102,6 @@ mod tests {
 
     #[test]
     fn conv_matches_sequential() {
-        use crate::model::network::ConvSpec;
         for (spec, seed) in [
             (
                 ConvSpec {
@@ -256,7 +124,19 @@ mod tests {
             let par = conv_nchw(&x, &w, &b, &spec);
             let s = seq::conv_nchw(&x, &w, &b, &spec);
             assert_eq!(par, s, "{spec:?}");
+            // The GEMM lowering agrees within float tolerance.
+            let lowered = conv_im2col_nchw(&x, &w, &b, &spec);
+            let diff = lowered.max_abs_diff(&s);
+            assert!(diff < 1e-4, "im2col diff {diff} for {spec:?}");
         }
+    }
+
+    #[test]
+    fn fc_matches_sequential() {
+        let x = random(vec![3, 700], 9);
+        let w = random(vec![700, 40], 10);
+        let b = random(vec![40], 11);
+        assert_eq!(fc(&x, &w, &b, true), seq::fc(&x, &w, &b, true));
     }
 
     #[test]

@@ -1,184 +1,51 @@
 //! Single-thread CPU layers — the paper's §4.1 baseline.  "The entire
-//! convolution layer is executed as a single thread on CPU.  For every
-//! input frame, all kernels sweep the frame while getting convoluted
-//! with the frame."  Loop order matches the paper's basic method: frame,
-//! kernel, output row, output col, then channel/kh/kw with width
-//! innermost.  Numerics must agree with the JAX reference (`ref.py`);
-//! the `cpu_vs_xla` integration test pins them together.
+//! convolution layer is executed as a single thread on CPU."
+//!
+//! Since the kernel-core refactor this module is a thin dispatcher:
+//! every op calls the shared implementation in [`crate::kernels`] with
+//! `KernelOpts::seq()` (one thread, direct conv lowering).  The loop
+//! order and numerics are unchanged — the direct nest moved verbatim
+//! into `kernels::conv::conv_direct`, and the FC/pool/LRN kernels are
+//! bit-identical to the pre-refactor code — so this remains the
+//! numeric reference the accelerated engine is validated against
+//! (`cpu_vs_xla` integration test).
 
-use crate::model::network::{pool_out, ConvSpec};
+use crate::kernels::{self, KernelOpts};
+use crate::model::network::ConvSpec;
 use crate::tensor::Tensor;
 
 /// Sequential convolution.  x: (N,C,H,W), w: (NK,C,KH,KW), b: (NK,) ->
 /// (N,NK,OH,OW), zero padding, optional fused ReLU.
 pub fn conv_nchw(x: &Tensor, w: &Tensor, b: &Tensor, spec: &ConvSpec) -> Tensor {
-    let n = x.dim(0);
-    let (c, h, ww) = (spec.in_c, spec.in_h, spec.in_w);
-    assert_eq!(x.shape(), &[n, c, h, ww], "conv input shape");
-    assert_eq!(w.shape(), &[spec.nk, c, spec.kh, spec.kw], "conv weight shape");
-    let (oh, ow) = (spec.out_h(), spec.out_w());
-    let mut out = Tensor::zeros(vec![n, spec.nk, oh, ow]);
-    let xd = x.data();
-    let wd = w.data();
-    let bd = b.data();
-    let od = out.data_mut();
-    let pad = spec.pad as isize;
-    for ni in 0..n {
-        for k in 0..spec.nk {
-            for oy in 0..oh {
-                for ox in 0..ow {
-                    let mut acc = bd[k];
-                    let iy0 = (oy * spec.stride) as isize - pad;
-                    let ix0 = (ox * spec.stride) as isize - pad;
-                    for ci in 0..c {
-                        for ky in 0..spec.kh {
-                            let iy = iy0 + ky as isize;
-                            if iy < 0 || iy >= h as isize {
-                                continue;
-                            }
-                            let xrow = ((ni * c + ci) * h + iy as usize) * ww;
-                            let wrow = ((k * c + ci) * spec.kh + ky) * spec.kw;
-                            for kx in 0..spec.kw {
-                                let ix = ix0 + kx as isize;
-                                if ix < 0 || ix >= ww as isize {
-                                    continue;
-                                }
-                                acc += xd[xrow + ix as usize] * wd[wrow + kx];
-                            }
-                        }
-                    }
-                    if spec.relu && acc < 0.0 {
-                        acc = 0.0;
-                    }
-                    od[((ni * spec.nk + k) * oh + oy) * ow + ox] = acc;
-                }
-            }
-        }
-    }
-    out
+    kernels::conv_direct(x, w, b, spec, KernelOpts::seq())
 }
 
 /// Sequential fully connected layer.  x: (N,In), w: (In,Out), b: (Out,).
 pub fn fc(x: &Tensor, w: &Tensor, b: &Tensor, relu: bool) -> Tensor {
-    let (n, d_in) = (x.dim(0), x.dim(1));
-    assert_eq!(w.dim(0), d_in, "fc weight shape");
-    let d_out = w.dim(1);
-    let mut out = Tensor::zeros(vec![n, d_out]);
-    let xd = x.data();
-    let wd = w.data();
-    let od = out.data_mut();
-    for ni in 0..n {
-        let xrow = &xd[ni * d_in..(ni + 1) * d_in];
-        let orow = &mut od[ni * d_out..(ni + 1) * d_out];
-        orow.copy_from_slice(b.data());
-        for (i, &xv) in xrow.iter().enumerate() {
-            if xv == 0.0 {
-                continue; // post-ReLU activations are sparse
-            }
-            let wrow = &wd[i * d_out..(i + 1) * d_out];
-            for (o, &wv) in wrow.iter().enumerate() {
-                orow[o] += xv * wv;
-            }
-        }
-        if relu {
-            for v in orow.iter_mut() {
-                if *v < 0.0 {
-                    *v = 0.0;
-                }
-            }
-        }
-    }
-    out
+    kernels::fc(x, w, b, relu, KernelOpts::seq())
 }
 
 /// Max pooling, Caffe ceil semantics (window clipped at the edges).
 pub fn maxpool_nchw(x: &Tensor, size: usize, stride: usize) -> Tensor {
-    pool_impl(x, size, stride, true)
+    kernels::maxpool_nchw(x, size, stride, KernelOpts::seq())
 }
 
 /// Average pooling, Caffe ceil semantics; the divisor is the FULL
 /// window area (out-of-bounds pixels contribute zero) to match the
 /// kernel/reference contract.
 pub fn avgpool_nchw(x: &Tensor, size: usize, stride: usize) -> Tensor {
-    pool_impl(x, size, stride, false)
-}
-
-fn pool_impl(x: &Tensor, size: usize, stride: usize, is_max: bool) -> Tensor {
-    let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
-    let (oh, ow) = (pool_out(h, size, stride), pool_out(w, size, stride));
-    let mut out = Tensor::zeros(vec![n, c, oh, ow]);
-    let xd = x.data();
-    let od = out.data_mut();
-    for ni in 0..n {
-        for ci in 0..c {
-            let plane = (ni * c + ci) * h * w;
-            for oy in 0..oh {
-                for ox in 0..ow {
-                    let y0 = oy * stride;
-                    let x0 = ox * stride;
-                    let y1 = (y0 + size).min(h);
-                    let x1 = (x0 + size).min(w);
-                    let v = if is_max {
-                        let mut m = f32::NEG_INFINITY;
-                        for yy in y0..y1 {
-                            for xx in x0..x1 {
-                                m = m.max(xd[plane + yy * w + xx]);
-                            }
-                        }
-                        m
-                    } else {
-                        let mut s = 0.0f32;
-                        for yy in y0..y1 {
-                            for xx in x0..x1 {
-                                s += xd[plane + yy * w + xx];
-                            }
-                        }
-                        s / (size * size) as f32
-                    };
-                    od[((ni * c + ci) * oh + oy) * ow + ox] = v;
-                }
-            }
-        }
-    }
-    out
+    kernels::avgpool_nchw(x, size, stride, KernelOpts::seq())
 }
 
 /// Caffe-style cross-channel local response normalization:
 /// `out[c] = x[c] / (k + alpha/size * sum_{c' in window} x[c']^2)^beta`.
 pub fn lrn_nchw(x: &Tensor, size: usize, alpha: f64, beta: f64, k: f64) -> Tensor {
-    let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
-    let half = size / 2;
-    let mut out = Tensor::zeros(vec![n, c, h, w]);
-    let xd = x.data();
-    let od = out.data_mut();
-    let scale = alpha / size as f64;
-    for ni in 0..n {
-        for ci in 0..c {
-            let lo = ci.saturating_sub(half);
-            let hi = (ci + half + 1).min(c);
-            for yi in 0..h {
-                for xi in 0..w {
-                    let pix = yi * w + xi;
-                    let mut acc = 0.0f64;
-                    for cj in lo..hi {
-                        let v = xd[(ni * c + cj) * h * w + pix] as f64;
-                        acc += v * v;
-                    }
-                    let denom = (k + scale * acc).powf(beta);
-                    let idx = (ni * c + ci) * h * w + pix;
-                    od[idx] = (xd[idx] as f64 / denom) as f32;
-                }
-            }
-        }
-    }
-    out
+    kernels::lrn_nchw(x, size, alpha, beta, k, KernelOpts::seq())
 }
 
 /// Out-of-place ReLU.
 pub fn relu(x: &Tensor) -> Tensor {
-    let mut out = x.clone();
-    out.relu_inplace();
-    out
+    kernels::relu(x, KernelOpts::seq())
 }
 
 /// Numerically-stable softmax over the last axis of a (N, D) tensor.

@@ -10,12 +10,17 @@
 //! the `simulator::cost` analytic model, and a lowering to the
 //! engine-executable [`LayerPlan`] vocabulary.
 //!
-//! Three adapters wrap the paths that already exist in this repo:
+//! Four adapters wrap the paths that already exist in this repo:
 //!
 //! * [`CpuSeqBackend`] — the §4.1 single-thread CPU baseline
-//!   (`cpu::seq`); runs every layer kind, NCHW.
+//!   (`cpu::seq`); runs every layer kind, NCHW, direct conv lowering.
 //! * [`CpuParBackend`] — the §6.3 multi-threaded CPU layers
 //!   (`cpu::par`); pooling and LRN only, NCHW.
+//! * [`CpuGemmBackend`] — the kernel core's im2col+GEMM fast path
+//!   (`kernels::conv_im2col` / `kernels::fc`), tile-parallel; conv and
+//!   FC, NCHW.  The partitioner choosing between this backend and
+//!   [`CpuSeqBackend`] *is* the per-layer direct-vs-im2col lowering
+//!   decision.
 //! * [`AccelBackend`] — one per manifest acceleration method, wrapping
 //!   the PJRT `runtime` artifacts; conv and FC, NHWC for the SIMD/mxu
 //!   methods ("dimension swapping", §4.3) and NCHW for basic-parallel.
@@ -27,6 +32,7 @@
 use crate::coordinator::plan::{
     conv_artifact_name, fc_artifact_name, LayerPlan, MissingArtifact, NHWC_METHODS,
 };
+use crate::kernels::KernelVariant;
 use crate::model::manifest::Manifest;
 use crate::model::network::{ConvSpec, Layer, Network};
 use crate::simulator::cost::{self, Method};
@@ -59,6 +65,11 @@ pub struct Capability {
     pub max_batch: Option<usize>,
     /// Placements must resolve AOT artifacts from the manifest.
     pub needs_artifacts: bool,
+    /// Which convolution lowering the backend executes: the direct
+    /// per-output nest or the im2col+GEMM kernel core.  The
+    /// partitioner's backend choice therefore selects the lowering per
+    /// layer wherever the cost model predicts a win.
+    pub kernel: KernelVariant,
 }
 
 impl Capability {
@@ -120,6 +131,7 @@ impl CpuSeqBackend {
                 layout: DataLayout::Nchw,
                 max_batch: None,
                 needs_artifacts: false,
+                kernel: KernelVariant::Direct,
             },
         }
     }
@@ -162,6 +174,8 @@ impl Backend for CpuSeqBackend {
             Layer::Conv { name, .. } => LayerPlan::ConvCpu {
                 name: name.clone(),
                 spec: conv_spec_for(net, li).expect("conv layer has a spec"),
+                variant: KernelVariant::Direct,
+                tiled: false,
             },
             Layer::Pool { name, mode, size, stride, relu } => LayerPlan::Pool {
                 name: name.clone(),
@@ -180,7 +194,7 @@ impl Backend for CpuSeqBackend {
                 parallel: false,
             },
             Layer::Fc { name, relu, .. } => {
-                LayerPlan::FcCpu { name: name.clone(), relu: *relu }
+                LayerPlan::FcCpu { name: name.clone(), relu: *relu, tiled: false }
             }
         })
     }
@@ -204,6 +218,7 @@ impl CpuParBackend {
                 layout: DataLayout::Nchw,
                 max_batch: None,
                 needs_artifacts: false,
+                kernel: KernelVariant::Direct,
             },
         }
     }
@@ -261,6 +276,88 @@ impl Backend for CpuParBackend {
 }
 
 // ---------------------------------------------------------------------
+// CPU im2col+GEMM (the kernel core's fast path)
+// ---------------------------------------------------------------------
+
+/// Tile-parallel im2col+GEMM kernels: conv and FC on the CPU at
+/// vectorized-GEMM rates.  Registering this *alongside*
+/// [`CpuSeqBackend`] turns the partitioner's backend choice into a
+/// per-layer lowering decision — small dispatch-dominated convs land
+/// here instead of paying accelerator launch overhead, big convs still
+/// accelerate.
+pub struct CpuGemmBackend {
+    cap: Capability,
+}
+
+impl CpuGemmBackend {
+    pub fn new() -> CpuGemmBackend {
+        CpuGemmBackend {
+            cap: Capability {
+                kinds: vec!["conv", "fc"],
+                layout: DataLayout::Nchw,
+                max_batch: None,
+                needs_artifacts: false,
+                kernel: KernelVariant::Im2col,
+            },
+        }
+    }
+}
+
+impl Default for CpuGemmBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Backend for CpuGemmBackend {
+    fn name(&self) -> &str {
+        "cpu-gemm"
+    }
+
+    fn capability(&self) -> &Capability {
+        &self.cap
+    }
+
+    fn supports(&self, net: &Network, li: usize) -> bool {
+        self.cap.supports_kind(net.layers[li].kind())
+    }
+
+    fn predict(&self, dev: &DeviceSpec, net: &Network, li: usize) -> f64 {
+        // Thread count comes from the DEVICE profile (its big-core
+        // cluster), not the host pool: predictions — and therefore
+        // delegate:auto plans — must be reproducible for a fixed
+        // DeviceSpec on any machine.
+        let threads = dev.cpu_big_cores.max(1) as usize;
+        let ((ic, ih, iw), _) = io_of(net, li);
+        match &net.layers[li] {
+            Layer::Conv { .. } => {
+                let spec = conv_spec_for(net, li).expect("conv layer has a spec");
+                cost::conv_time_cpu_gemm(dev, &spec, threads)
+            }
+            Layer::Fc { out, .. } => cost::fc_time_cpu_gemm(dev, ic * ih * iw, *out, threads),
+            _ => f64::INFINITY,
+        }
+    }
+
+    fn lower(&self, net: &Network, li: usize) -> Result<LayerPlan> {
+        Ok(match &net.layers[li] {
+            Layer::Conv { name, .. } => LayerPlan::ConvCpu {
+                name: name.clone(),
+                spec: conv_spec_for(net, li).expect("conv layer has a spec"),
+                variant: KernelVariant::Im2col,
+                tiled: true,
+            },
+            Layer::Fc { name, relu, .. } => {
+                LayerPlan::FcCpu { name: name.clone(), relu: *relu, tiled: true }
+            }
+            other => {
+                anyhow::bail!("cpu-gemm cannot run {} layer {}", other.kind(), other.name())
+            }
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
 // Accelerator (PJRT runtime artifacts, one backend per method)
 // ---------------------------------------------------------------------
 
@@ -295,6 +392,8 @@ impl AccelBackend {
                 layout: if nhwc { DataLayout::Nhwc } else { DataLayout::Nchw },
                 max_batch: Some(1),
                 needs_artifacts: true,
+                // GPU artifacts run the paper's per-thread direct conv.
+                kernel: KernelVariant::Direct,
             },
             manifest: manifest.cloned(),
         })
@@ -443,6 +542,46 @@ mod tests {
         for (li, layer) in net.layers.iter().enumerate() {
             let want = matches!(layer.kind(), "pool" | "lrn");
             assert_eq!(b.supports(&net, li), want, "{}", layer.name());
+        }
+    }
+
+    #[test]
+    fn cpu_gemm_runs_conv_and_fc_with_im2col_lowering() {
+        let b = CpuGemmBackend::new();
+        assert_eq!(b.capability().kernel, crate::kernels::KernelVariant::Im2col);
+        let net = zoo::lenet5();
+        for (li, layer) in net.layers.iter().enumerate() {
+            let want = matches!(layer.kind(), "conv" | "fc");
+            assert_eq!(b.supports(&net, li), want, "{}", layer.name());
+        }
+        match b.lower(&net, 0).unwrap() {
+            LayerPlan::ConvCpu { variant, tiled, .. } => {
+                assert_eq!(variant, crate::kernels::KernelVariant::Im2col);
+                assert!(tiled);
+            }
+            other => panic!("expected ConvCpu, got {other:?}"),
+        }
+        assert!(b.lower(&net, 1).is_err(), "pool must not lower on cpu-gemm");
+    }
+
+    #[test]
+    fn cpu_gemm_beats_cpu_seq_on_every_conv() {
+        // The whole point of the lowering: the GEMM path is predicted
+        // (and measured, see bench_layers) faster than the direct nest.
+        let dev = galaxy_note4();
+        let seq = CpuSeqBackend::new();
+        let gemm = CpuGemmBackend::new();
+        for net in zoo::all() {
+            for (li, layer) in net.layers.iter().enumerate() {
+                if layer.kind() == "conv" {
+                    assert!(
+                        gemm.predict(&dev, &net, li) < seq.predict(&dev, &net, li),
+                        "{}/{}",
+                        net.name,
+                        layer.name()
+                    );
+                }
+            }
         }
     }
 

@@ -32,7 +32,9 @@ pub mod fallback;
 pub mod partition;
 pub mod registry;
 
-pub use backend::{AccelBackend, Backend, Capability, CpuParBackend, CpuSeqBackend, DataLayout};
+pub use backend::{
+    AccelBackend, Backend, Capability, CpuGemmBackend, CpuParBackend, CpuSeqBackend, DataLayout,
+};
 pub use fallback::{is_retryable, plan_or_fallback, FallbackOutcome};
 pub use partition::{transition_cost, Assignment, PartitionReport, Partitioner};
 pub use registry::Registry;

@@ -315,30 +315,64 @@ mod tests {
     }
 
     #[test]
-    fn pool_and_lrn_stay_on_cpu_and_convs_accelerate() {
+    fn pool_and_lrn_stay_on_cpu_and_heavy_convs_accelerate() {
         // The paper's §6.3 split should fall out of the cost model, not
-        // be hard-coded: conv layers (heavy, GPU-friendly) accelerate,
-        // pool/LRN (streaming, "unsuitable for GPU") stay on CPU.
-        let dev = all_devices().remove(0);
-        for net in zoo::all() {
-            let rep = auto(&net, &dev);
-            for a in &rep.assignments {
-                match a.kind {
-                    "pool" | "lrn" => assert!(
-                        a.backend.starts_with("cpu"),
-                        "{}/{} went to {}",
-                        net.name,
-                        a.layer,
-                        a.backend
-                    ),
-                    "conv" => assert!(
-                        !a.backend.starts_with("cpu"),
-                        "{}/{} stayed on {}",
-                        net.name,
-                        a.layer,
-                        a.backend
-                    ),
-                    _ => {}
+        // be hard-coded: pool/LRN (streaming, "unsuitable for GPU")
+        // stay on CPU, and heavy conv layers accelerate.  Since the
+        // kernel core added the im2col+GEMM CPU backend, *small* convs
+        // legitimately stay on CPU too — their accelerator dispatch
+        // overhead dwarfs a vectorized CPU GEMM (the NNAPI-era
+        // refinement of the paper's rule) — so the accelerate assertion
+        // targets AlexNet's big stride-1 convs, where the GPU genuinely
+        // wins.
+        for dev in all_devices() {
+            for net in zoo::all() {
+                let rep = auto(&net, &dev);
+                for a in &rep.assignments {
+                    if matches!(a.kind, "pool" | "lrn") {
+                        assert!(
+                            a.backend.starts_with("cpu"),
+                            "{}/{} went to {}",
+                            net.name,
+                            a.layer,
+                            a.backend
+                        );
+                    }
+                }
+            }
+            let alex = auto(&zoo::alexnet(), &dev);
+            for layer in ["conv2", "conv3", "conv4", "conv5"] {
+                let a = alex.assignments.iter().find(|a| a.layer == layer).unwrap();
+                assert!(
+                    !a.backend.starts_with("cpu"),
+                    "{}: {layer} stayed on {}",
+                    dev.name,
+                    a.backend
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn small_convs_pick_the_im2col_cpu_lowering() {
+        // LeNet's convs are dispatch-dominated on the accelerator; the
+        // partitioner should place them on cpu-gemm, and the lowered
+        // plan must carry the im2col kernel variant.
+        use crate::coordinator::plan::LayerPlan;
+        use crate::kernels::KernelVariant;
+        for dev in all_devices() {
+            let rep = auto(&zoo::lenet5(), &dev);
+            for (li, a) in rep.assignments.iter().enumerate() {
+                if a.kind != "conv" {
+                    continue;
+                }
+                assert_eq!(a.backend, "cpu-gemm", "{}: {}", dev.name, a.layer);
+                match &rep.plan.layers[li] {
+                    LayerPlan::ConvCpu { variant, tiled, .. } => {
+                        assert_eq!(*variant, KernelVariant::Im2col, "{}", a.layer);
+                        assert!(*tiled, "{}", a.layer);
+                    }
+                    other => panic!("{}: expected ConvCpu, got {other:?}", a.layer),
                 }
             }
         }

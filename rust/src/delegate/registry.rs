@@ -7,7 +7,7 @@
 
 use crate::model::manifest::Manifest;
 
-use super::backend::{AccelBackend, Backend, CpuParBackend, CpuSeqBackend};
+use super::backend::{AccelBackend, Backend, CpuGemmBackend, CpuParBackend, CpuSeqBackend};
 
 /// The set of backends the partitioner may place layers on.
 pub struct Registry {
@@ -16,10 +16,16 @@ pub struct Registry {
 
 impl Registry {
     /// CPU-only registry: always available, no artifacts needed.  The
-    /// terminal target of the fallback policy.
+    /// terminal target of the fallback policy.  Includes the kernel
+    /// core's im2col+GEMM backend, so even artifact-less deployments
+    /// get cost-selected fast-path convolution.
     pub fn cpu_only() -> Registry {
         Registry {
-            backends: vec![Box::new(CpuSeqBackend::new()), Box::new(CpuParBackend::new())],
+            backends: vec![
+                Box::new(CpuSeqBackend::new()),
+                Box::new(CpuParBackend::new()),
+                Box::new(CpuGemmBackend::new()),
+            ],
         }
     }
 
@@ -91,20 +97,20 @@ mod tests {
     use crate::model::zoo;
 
     #[test]
-    fn cpu_only_has_the_two_cpu_substrates() {
+    fn cpu_only_has_the_three_cpu_substrates() {
         let reg = Registry::cpu_only();
-        assert_eq!(reg.names(), vec!["cpu-seq", "cpu-par"]);
-        assert!(!reg.backends()[0].capability().needs_artifacts);
+        assert_eq!(reg.names(), vec!["cpu-seq", "cpu-par", "cpu-gemm"]);
+        assert!(reg.backends().iter().all(|b| !b.capability().needs_artifacts));
     }
 
     #[test]
     fn simulated_registry_covers_every_paper_method() {
         let reg = Registry::simulated();
-        for m in ["cpu-seq", "basic-parallel", "basic-simd", "advanced-simd-4", "advanced-simd-8", "mxu"]
+        for m in ["cpu-seq", "cpu-gemm", "basic-parallel", "basic-simd", "advanced-simd-4", "advanced-simd-8", "mxu"]
         {
             assert!(reg.get(m).is_some(), "missing backend {m}");
         }
-        assert_eq!(reg.len(), 7);
+        assert_eq!(reg.len(), 8);
     }
 
     #[test]

@@ -1,0 +1,253 @@
+//! The two convolution lowerings, selected per layer by the delegate
+//! cost model ([`crate::kernels::KernelVariant`]):
+//!
+//! * [`conv_direct`] — the paper's §4.1 seven-deep loop nest, the
+//!   numeric reference.  Tile-parallel over `(frame, output channel)`
+//!   planes, so batch 1 still spreads across cores.
+//! * [`conv_im2col`] — packed weights x patch matrix GEMM with fused
+//!   bias+ReLU (the fast path; ~contiguous vectorizable inner loops
+//!   instead of the nest's short, branchy window walks).  The GEMM
+//!   tile-parallelizes over output pixels *within* each frame.
+//!
+//! Both produce NCHW outputs of identical shape; the property suite
+//! (`tests/prop_kernels.rs`) pins them together over randomized
+//! geometries including `pad >= kernel` and 1x1 convolutions.
+
+use std::sync::Arc;
+
+use crate::model::network::ConvSpec;
+use crate::tensor::{MatView, Tensor};
+use crate::util::threadpool;
+
+use super::gemm::{gemm_into, BiasMode};
+use super::im2col::{im2col_frame, patch_cols, patch_rows};
+use super::pack::PackedConv;
+use super::KernelOpts;
+
+/// One `(frame, output channel)` plane of the direct loop nest.
+/// `od` is that plane's dense `oh*ow` output slice.
+fn direct_plane(
+    xd: &[f32],
+    wd: &[f32],
+    bd: &[f32],
+    spec: &ConvSpec,
+    ni: usize,
+    k: usize,
+    od: &mut [f32],
+) {
+    let (c, h, ww) = (spec.in_c, spec.in_h, spec.in_w);
+    let (oh, ow) = (spec.out_h(), spec.out_w());
+    let pad = spec.pad as isize;
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let mut acc = bd[k];
+            let iy0 = (oy * spec.stride) as isize - pad;
+            let ix0 = (ox * spec.stride) as isize - pad;
+            for ci in 0..c {
+                for ky in 0..spec.kh {
+                    let iy = iy0 + ky as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    let xrow = ((ni * c + ci) * h + iy as usize) * ww;
+                    let wrow = ((k * c + ci) * spec.kh + ky) * spec.kw;
+                    for kx in 0..spec.kw {
+                        let ix = ix0 + kx as isize;
+                        if ix < 0 || ix >= ww as isize {
+                            continue;
+                        }
+                        acc += xd[xrow + ix as usize] * wd[wrow + kx];
+                    }
+                }
+            }
+            if spec.relu && acc < 0.0 {
+                acc = 0.0;
+            }
+            od[oy * ow + ox] = acc;
+        }
+    }
+}
+
+/// Pointer capsule for the parallel direct path; planes write disjoint
+/// output slices and the entry point blocks on scope completion.
+struct DirectCapsule {
+    x: *const f32,
+    x_len: usize,
+    w: *const f32,
+    w_len: usize,
+    b: *const f32,
+    o: *mut f32,
+    spec: ConvSpec,
+    plane_len: usize,
+}
+
+unsafe impl Send for DirectCapsule {}
+unsafe impl Sync for DirectCapsule {}
+
+/// Direct convolution.  `x: (N, C, H, W)`, `w: (NK, C, KH, KW)`,
+/// `b: (NK,)` -> `(N, NK, OH, OW)`; zero padding, optional fused ReLU.
+pub fn conv_direct(
+    x: &Tensor,
+    w: &Tensor,
+    b: &Tensor,
+    spec: &ConvSpec,
+    opts: KernelOpts,
+) -> Tensor {
+    let n = x.dim(0);
+    assert_eq!(x.shape(), &[n, spec.in_c, spec.in_h, spec.in_w], "conv input shape");
+    assert_eq!(w.shape(), &[spec.nk, spec.in_c, spec.kh, spec.kw], "conv weight shape");
+    assert_eq!(b.len(), spec.nk, "conv bias length");
+    let (oh, ow) = (spec.out_h(), spec.out_w());
+    let mut out = Tensor::zeros(vec![n, spec.nk, oh, ow]);
+    let nk = spec.nk;
+    let plane_len = oh * ow;
+    let planes = n * nk;
+    if !opts.parallel() || planes < 2 {
+        let od = out.data_mut();
+        for p in 0..planes {
+            let (ni, k) = (p / nk, p % nk);
+            direct_plane(
+                x.data(),
+                w.data(),
+                b.data(),
+                spec,
+                ni,
+                k,
+                &mut od[p * plane_len..(p + 1) * plane_len],
+            );
+        }
+        return out;
+    }
+    let cap = Arc::new(DirectCapsule {
+        x: x.data().as_ptr(),
+        x_len: x.len(),
+        w: w.data().as_ptr(),
+        w_len: w.len(),
+        b: b.data().as_ptr(),
+        o: out.data_mut().as_mut_ptr(),
+        spec: *spec,
+        plane_len,
+    });
+    threadpool::parallel_for(planes, move |p| {
+        let (ni, k) = (p / cap.spec.nk, p % cap.spec.nk);
+        // SAFETY: inputs are shared read-only; each task writes only
+        // its own plane slice, and conv_direct blocks on completion.
+        unsafe {
+            let xd = std::slice::from_raw_parts(cap.x, cap.x_len);
+            let wd = std::slice::from_raw_parts(cap.w, cap.w_len);
+            let bd = std::slice::from_raw_parts(cap.b, cap.spec.nk);
+            let od = std::slice::from_raw_parts_mut(cap.o.add(p * cap.plane_len), cap.plane_len);
+            direct_plane(xd, wd, bd, &cap.spec, ni, k, od);
+        }
+    });
+    out
+}
+
+/// im2col+GEMM convolution over a pre-packed weight matrix: for each
+/// frame, `out = wmat (NK, C*KH*KW) · patches (C*KH*KW, OH*OW) + bias`
+/// with ReLU fused into the GEMM epilogue.  Output lands directly in
+/// NCHW plane order.
+pub fn conv_im2col(x: &Tensor, packed: &PackedConv, opts: KernelOpts) -> Tensor {
+    let spec = &packed.spec;
+    let n = x.dim(0);
+    assert_eq!(x.shape(), &[n, spec.in_c, spec.in_h, spec.in_w], "conv input shape");
+    let (oh, ow) = (spec.out_h(), spec.out_w());
+    let rows = patch_rows(spec);
+    let cols = patch_cols(spec);
+    let frame_len = spec.in_c * spec.in_h * spec.in_w;
+    let out_frame = spec.nk * cols;
+    let mut out = Tensor::zeros(vec![n, spec.nk, oh, ow]);
+    // One scratch patch matrix, reused across frames (im2col writes
+    // every element, so no clearing between frames).
+    let mut patches = vec![0.0f32; rows * cols];
+    for ni in 0..n {
+        im2col_frame(&x.data()[ni * frame_len..(ni + 1) * frame_len], spec, &mut patches);
+        let lo = ni * out_frame;
+        gemm_into(
+            packed.wmat.view2d(),
+            MatView::dense(&patches, rows, cols),
+            BiasMode::PerRow(packed.bias.data()),
+            spec.relu,
+            opts,
+            &mut out.data_mut()[lo..lo + out_frame],
+        );
+    }
+    out
+}
+
+/// im2col+GEMM convolution from raw OIHW weights (packs on the fly —
+/// use [`PackedConv`] / [`super::PackedModel`] to amortize the packing
+/// across frames and calls).
+pub fn conv_im2col_unpacked(
+    x: &Tensor,
+    w: &Tensor,
+    b: &Tensor,
+    spec: &ConvSpec,
+    opts: KernelOpts,
+) -> Tensor {
+    conv_im2col(x, &PackedConv::pack(spec, w, b), opts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn random(shape: Vec<usize>, seed: u64) -> Tensor {
+        let n = shape.iter().product();
+        let mut rng = Pcg::seeded(seed);
+        Tensor::new(shape, rng.normal_vec(n, 1.0))
+    }
+
+    fn case(spec: ConvSpec, batch: usize, seed: u64) {
+        let x = random(vec![batch, spec.in_c, spec.in_h, spec.in_w], seed);
+        let w = random(vec![spec.nk, spec.in_c, spec.kh, spec.kw], seed + 1);
+        let b = random(vec![spec.nk], seed + 2);
+        let direct = conv_direct(&x, &w, &b, &spec, KernelOpts::seq());
+        let direct_par = conv_direct(&x, &w, &b, &spec, KernelOpts::tiled());
+        assert_eq!(direct, direct_par, "direct tiled must be bit-identical: {spec:?}");
+        for opts in [KernelOpts::seq(), KernelOpts::tiled()] {
+            let lowered = conv_im2col_unpacked(&x, &w, &b, &spec, opts);
+            let diff = lowered.max_abs_diff(&direct);
+            assert!(diff < 1e-4, "im2col vs direct diff {diff} for {spec:?} ({opts:?})");
+        }
+    }
+
+    #[test]
+    fn lowerings_agree_on_representative_shapes() {
+        case(
+            ConvSpec { in_c: 3, in_h: 16, in_w: 16, nk: 8, kh: 5, kw: 5, stride: 1, pad: 2, relu: true },
+            2,
+            10,
+        );
+        case(
+            ConvSpec { in_c: 4, in_h: 13, in_w: 13, nk: 6, kh: 3, kw: 3, stride: 2, pad: 1, relu: false },
+            1,
+            20,
+        );
+        case(
+            ConvSpec { in_c: 2, in_h: 6, in_w: 6, nk: 4, kh: 1, kw: 1, stride: 1, pad: 0, relu: false },
+            3,
+            30,
+        );
+        case(
+            ConvSpec { in_c: 1, in_h: 5, in_w: 5, nk: 2, kh: 3, kw: 3, stride: 1, pad: 4, relu: true },
+            1,
+            40,
+        );
+    }
+
+    #[test]
+    fn packed_cache_matches_adhoc_packing() {
+        let spec = ConvSpec {
+            in_c: 2, in_h: 8, in_w: 8, nk: 5, kh: 3, kw: 3, stride: 1, pad: 1, relu: true,
+        };
+        let x = random(vec![2, 2, 8, 8], 50);
+        let w = random(vec![5, 2, 3, 3], 51);
+        let b = random(vec![5], 52);
+        let packed = PackedConv::pack(&spec, &w, &b);
+        let a = conv_im2col(&x, &packed, KernelOpts::seq());
+        let b2 = conv_im2col_unpacked(&x, &w, &b, &spec, KernelOpts::seq());
+        assert_eq!(a, b2);
+    }
+}

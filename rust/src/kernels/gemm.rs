@@ -1,0 +1,323 @@
+//! Blocked/tiled GEMM primitive with fused bias + ReLU — the matrix
+//! engine every CPU lowering dispatches into.
+//!
+//! `C (m x n) = A (m x k) · B (k x n) [+ bias] [then ReLU]` over
+//! strided [`MatView`]s, blocked over the reduction axis for cache
+//! reuse and tile-parallelized over **column bands** of `C` (disjoint
+//! output ranges, so no locks).  For every output element the
+//! reduction runs in ascending-`k` order regardless of the block or
+//! tile configuration, so results are bit-identical across
+//! `KernelOpts` settings — `cpu::par` really is "the same kernel on
+//! more tiles", not a second numeric code path.
+//!
+//! The inner loop is a contiguous axpy over a column band
+//! (`c[j] += a_ik * b[k][j]`), which the compiler auto-vectorizes;
+//! this — not threading — is where the 3x+ win over the direct conv
+//! loop nest comes from.
+
+use std::sync::Arc;
+
+use crate::tensor::{MatView, Tensor};
+use crate::util::threadpool;
+
+use super::KernelOpts;
+
+/// Reduction-axis block size (elements of `k` per pass over a band).
+const KC: usize = 256;
+
+/// How the bias vector broadcasts over `C`.
+#[derive(Debug, Clone, Copy)]
+pub enum BiasMode<'a> {
+    /// No bias: `C` starts at zero.
+    None,
+    /// `bias[i]` added to every element of row `i` (conv: one bias per
+    /// output channel, rows are channels).
+    PerRow(&'a [f32]),
+    /// `bias[j]` added to every element of column `j` (FC: one bias
+    /// per output unit, columns are units).
+    PerCol(&'a [f32]),
+}
+
+/// Raw-pointer form of [`BiasMode`] for the scoped parallel bands.
+#[derive(Clone, Copy)]
+enum BiasRaw {
+    None,
+    PerRow(*const f32),
+    PerCol(*const f32),
+}
+
+/// Pointer capsule handed to pool workers.  The public entry point
+/// blocks on scope completion, so the borrowed buffers strictly
+/// outlive every task; bands write disjoint column ranges of `c`.
+struct Capsule {
+    a: *const f32,
+    a_stride: usize,
+    b: *const f32,
+    b_stride: usize,
+    c: *mut f32,
+    m: usize,
+    k: usize,
+    n: usize,
+    bias: BiasRaw,
+    relu: bool,
+    tile: usize,
+}
+
+unsafe impl Send for Capsule {}
+unsafe impl Sync for Capsule {}
+
+/// Compute columns `[j0, j1)` of `C`.
+///
+/// SAFETY: the capsule's pointers must be live for the duration of the
+/// call and no concurrent band may overlap `[j0, j1)`.
+unsafe fn band(cap: &Capsule, j0: usize, j1: usize) {
+    let w = j1 - j0;
+    if w == 0 {
+        return;
+    }
+    // Seed the band from the bias.
+    for i in 0..cap.m {
+        let crow = std::slice::from_raw_parts_mut(cap.c.add(i * cap.n + j0), w);
+        match cap.bias {
+            BiasRaw::None => crow.fill(0.0),
+            BiasRaw::PerRow(p) => crow.fill(*p.add(i)),
+            BiasRaw::PerCol(p) => {
+                crow.copy_from_slice(std::slice::from_raw_parts(p.add(j0), w));
+            }
+        }
+    }
+    // Accumulate, k-blocked; per output element the order is ascending
+    // k, so blocking never changes the float result.
+    let mut kb = 0;
+    while kb < cap.k {
+        let ke = (kb + KC).min(cap.k);
+        for i in 0..cap.m {
+            let arow = std::slice::from_raw_parts(cap.a.add(i * cap.a_stride), cap.k);
+            let crow = std::slice::from_raw_parts_mut(cap.c.add(i * cap.n + j0), w);
+            for kk in kb..ke {
+                let av = arow[kk];
+                if av == 0.0 {
+                    continue; // post-ReLU activations are sparse
+                }
+                let brow = std::slice::from_raw_parts(cap.b.add(kk * cap.b_stride + j0), w);
+                for (cv, bv) in crow.iter_mut().zip(brow) {
+                    *cv += av * *bv;
+                }
+            }
+        }
+        kb = ke;
+    }
+    if cap.relu {
+        for i in 0..cap.m {
+            let crow = std::slice::from_raw_parts_mut(cap.c.add(i * cap.n + j0), w);
+            for v in crow {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+        }
+    }
+}
+
+/// `out = a · b [+ bias] [then ReLU]`, written into the dense row-major
+/// `out` slice of length `a.rows() * b.cols()`.
+pub fn gemm_into(
+    a: MatView<'_>,
+    b: MatView<'_>,
+    bias: BiasMode<'_>,
+    relu: bool,
+    opts: KernelOpts,
+    out: &mut [f32],
+) {
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    assert_eq!(b.rows(), k, "gemm inner dims: a is {m}x{k}, b is {}x{n}", b.rows());
+    assert_eq!(out.len(), m * n, "gemm output length {} != {m}x{n}", out.len());
+    let bias_raw = match bias {
+        BiasMode::None => BiasRaw::None,
+        BiasMode::PerRow(v) => {
+            assert_eq!(v.len(), m, "per-row bias length");
+            BiasRaw::PerRow(v.as_ptr())
+        }
+        BiasMode::PerCol(v) => {
+            assert_eq!(v.len(), n, "per-col bias length");
+            BiasRaw::PerCol(v.as_ptr())
+        }
+    };
+    if n == 0 || m == 0 {
+        return;
+    }
+    let tile = opts.tile.max(16);
+    let cap = Capsule {
+        a: a.as_ptr(),
+        a_stride: a.row_stride(),
+        b: b.as_ptr(),
+        b_stride: b.row_stride(),
+        c: out.as_mut_ptr(),
+        m,
+        k,
+        n,
+        bias: bias_raw,
+        relu,
+        tile,
+    };
+    let ntiles = n.div_ceil(tile);
+    if !opts.parallel() || ntiles < 2 {
+        // SAFETY: single full-width band over live borrows.
+        unsafe { band(&cap, 0, n) };
+        return;
+    }
+    let cap = Arc::new(cap);
+    let shared = Arc::clone(&cap);
+    threadpool::parallel_for(ntiles, move |t| {
+        let j0 = t * shared.tile;
+        let j1 = ((t + 1) * shared.tile).min(shared.n);
+        // SAFETY: tiles are disjoint column bands, and `gemm_into`
+        // blocks on scope completion, keeping the borrows live.
+        unsafe { band(&shared, j0, j1) };
+    });
+}
+
+/// Matrix product `(m, k) x (k, n) -> (m, n)`.
+pub fn matmul(a: &Tensor, b: &Tensor, opts: KernelOpts) -> Tensor {
+    let av = a.view2d();
+    let bv = b.view2d();
+    let mut out = Tensor::zeros(vec![av.rows(), bv.cols()]);
+    gemm_into(av, bv, BiasMode::None, false, opts, out.data_mut());
+    out
+}
+
+/// Fully connected layer: `x (N, In) · w (In, Out) + b`, optional
+/// fused ReLU.  The FC weight layout `(in, out)` is already the GEMM
+/// `B` operand, so FC needs no repacking.
+pub fn fc(x: &Tensor, w: &Tensor, b: &Tensor, relu: bool, opts: KernelOpts) -> Tensor {
+    let (n, d_in) = (x.dim(0), x.dim(1));
+    assert_eq!(w.dim(0), d_in, "fc weight shape");
+    let d_out = w.dim(1);
+    let mut out = Tensor::zeros(vec![n, d_out]);
+    gemm_into(x.view2d(), w.view2d(), BiasMode::PerCol(b.data()), relu, opts, out.data_mut());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn random(shape: Vec<usize>, seed: u64) -> Tensor {
+        let n = shape.iter().product();
+        let mut rng = Pcg::seeded(seed);
+        Tensor::new(shape, rng.normal_vec(n, 1.0))
+    }
+
+    /// Naive triple loop, the oracle.
+    fn naive(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k) = (a.dim(0), a.dim(1));
+        let n = b.dim(1);
+        let mut out = Tensor::zeros(vec![m, n]);
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f32;
+                for kk in 0..k {
+                    acc += a.data()[i * k + kk] * b.data()[kk * n + j];
+                }
+                out.data_mut()[i * n + j] = acc;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matmul_matches_naive_over_shapes() {
+        for (m, k, n, seed) in [(1, 1, 1, 1), (3, 7, 5, 2), (16, 300, 33, 3), (2, 513, 17, 4)] {
+            let a = random(vec![m, k], seed);
+            let b = random(vec![k, n], seed + 100);
+            let got = matmul(&a, &b, KernelOpts::seq());
+            let want = naive(&a, &b);
+            let diff = got.max_abs_diff(&want);
+            assert!(diff < 1e-3, "{m}x{k}x{n}: diff {diff}");
+        }
+    }
+
+    #[test]
+    fn tiled_is_bit_identical_to_seq() {
+        let a = random(vec![24, 700], 5);
+        let b = random(vec![700, 230], 6);
+        let bias = random(vec![230], 7);
+        let mut seq_out = Tensor::zeros(vec![24, 230]);
+        let mut par_out = Tensor::zeros(vec![24, 230]);
+        gemm_into(
+            a.view2d(),
+            b.view2d(),
+            BiasMode::PerCol(bias.data()),
+            true,
+            KernelOpts::seq(),
+            seq_out.data_mut(),
+        );
+        gemm_into(
+            a.view2d(),
+            b.view2d(),
+            BiasMode::PerCol(bias.data()),
+            true,
+            KernelOpts { threads: 8, tile: 16 },
+            par_out.data_mut(),
+        );
+        assert_eq!(seq_out, par_out);
+    }
+
+    #[test]
+    fn per_row_bias_and_relu() {
+        // 2x1 · 1x3 with per-row bias: row 0 = 1*[1,2,3] + 10,
+        // row 1 = -1*[1,2,3] - 10 then ReLU -> 0.
+        let a = Tensor::new(vec![2, 1], vec![1.0, -1.0]);
+        let b = Tensor::new(vec![1, 3], vec![1.0, 2.0, 3.0]);
+        let bias = [10.0f32, -10.0];
+        let mut out = Tensor::zeros(vec![2, 3]);
+        gemm_into(
+            a.view2d(),
+            b.view2d(),
+            BiasMode::PerRow(&bias),
+            true,
+            KernelOpts::seq(),
+            out.data_mut(),
+        );
+        assert_eq!(out.data(), &[11.0, 12.0, 13.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn strided_views_multiply_submatrices() {
+        // B is the left 2 columns of a 2x4 buffer.
+        let bbuf: Vec<f32> = vec![1.0, 2.0, 9.0, 9.0, 3.0, 4.0, 9.0, 9.0];
+        let b = MatView::new(&bbuf, 2, 2, 4);
+        let abuf = [1.0f32, 1.0];
+        let a = MatView::dense(&abuf, 1, 2);
+        let mut out = [0.0f32; 2];
+        gemm_into(a, b, BiasMode::None, false, KernelOpts::seq(), &mut out);
+        assert_eq!(out, [4.0, 6.0]);
+    }
+
+    #[test]
+    fn fc_matches_seq_reference_values() {
+        let x = Tensor::new(vec![1, 2], vec![1.0, 2.0]);
+        let w = Tensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let b = Tensor::new(vec![3], vec![0.1, 0.2, 0.3]);
+        let y = fc(&x, &w, &b, false, KernelOpts::seq());
+        assert_eq!(y.data(), &[9.1, 12.2, 15.3]);
+    }
+
+    #[test]
+    fn empty_k_is_bias_only() {
+        let a = Tensor::zeros(vec![2, 0]);
+        let b = Tensor::zeros(vec![0, 3]);
+        let bias = [1.0f32, 2.0, 3.0];
+        let mut out = [9.0f32; 6];
+        gemm_into(
+            a.view2d(),
+            b.view2d(),
+            BiasMode::PerCol(&bias),
+            false,
+            KernelOpts::seq(),
+            &mut out,
+        );
+        assert_eq!(out, [1.0, 2.0, 3.0, 1.0, 2.0, 3.0]);
+    }
+}

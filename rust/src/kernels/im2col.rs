@@ -1,0 +1,149 @@
+//! The im2col lowering: unroll one frame's convolution windows into a
+//! patch matrix so conv becomes a single GEMM (§4.2's "convert to
+//! data-parallel matrix operations", the dominant fast path for mobile
+//! CNN inference).
+//!
+//! For a frame `(C, H, W)` and a [`ConvSpec`], the patch matrix is
+//! `(C*KH*KW, OH*OW)`: row `(ci, ky, kx)` holds, for every output
+//! position `(oy, ox)`, the input value at
+//! `(ci, oy*stride + ky - pad, ox*stride + kx - pad)` — zero when out
+//! of bounds (this covers `pad >= kernel` too).  Convolution is then
+//! `W_packed (NK, C*KH*KW) · patches + bias`, with the output already
+//! in the frame's NCHW plane order.
+//!
+//! Rows are filled with contiguous copies where the geometry allows
+//! (stride 1), so the lowering itself streams at memcpy speed.
+
+use crate::model::network::ConvSpec;
+
+/// Patch-matrix row count: `C * KH * KW`.
+pub fn patch_rows(spec: &ConvSpec) -> usize {
+    spec.in_c * spec.kh * spec.kw
+}
+
+/// Patch-matrix column count: `OH * OW`.
+pub fn patch_cols(spec: &ConvSpec) -> usize {
+    spec.out_h() * spec.out_w()
+}
+
+/// Fill `out` (length `patch_rows * patch_cols`) with the patch matrix
+/// of one frame (`frame` is the dense `C*H*W` slice of that frame).
+/// Every element of `out` is written, so the buffer may be reused
+/// across frames without clearing.
+pub fn im2col_frame(frame: &[f32], spec: &ConvSpec, out: &mut [f32]) {
+    let (c, h, w) = (spec.in_c, spec.in_h, spec.in_w);
+    let (oh, ow) = (spec.out_h(), spec.out_w());
+    let cols = oh * ow;
+    assert_eq!(frame.len(), c * h * w, "im2col frame length");
+    assert_eq!(out.len(), patch_rows(spec) * cols, "im2col patch buffer length");
+    let s = spec.stride.max(1) as isize;
+    let pad = spec.pad as isize;
+
+    let mut r = 0usize;
+    for ci in 0..c {
+        let plane = &frame[ci * h * w..(ci + 1) * h * w];
+        for ky in 0..spec.kh {
+            for kx in 0..spec.kw {
+                let orow = &mut out[r * cols..(r + 1) * cols];
+                // ix = ox*s + off for off = kx - pad; valid ox range is
+                // [lo, hi] where 0 <= ix < w (empty when hi < lo).
+                let off = kx as isize - pad;
+                let lo_raw = if off >= 0 { 0 } else { (-off + s - 1) / s };
+                let lo = lo_raw.min(ow as isize);
+                let hi_num = w as isize - 1 - off;
+                let hi_raw = if hi_num < 0 { -1 } else { hi_num / s };
+                let hi = hi_raw.min(ow as isize - 1);
+                for oy in 0..oh {
+                    let iy = oy as isize * s + ky as isize - pad;
+                    let dst = &mut orow[oy * ow..(oy + 1) * ow];
+                    if iy < 0 || iy >= h as isize || hi < lo {
+                        dst.fill(0.0);
+                        continue;
+                    }
+                    let src = &plane[iy as usize * w..(iy as usize + 1) * w];
+                    let (lo, hi) = (lo as usize, hi as usize);
+                    dst[..lo].fill(0.0);
+                    if s == 1 {
+                        let i0 = (lo as isize + off) as usize;
+                        dst[lo..=hi].copy_from_slice(&src[i0..i0 + (hi - lo + 1)]);
+                    } else {
+                        for (ox, d) in dst.iter_mut().enumerate().take(hi + 1).skip(lo) {
+                            *d = src[(ox as isize * s + off) as usize];
+                        }
+                    }
+                    dst[hi + 1..].fill(0.0);
+                }
+                r += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(c: usize, h: usize, w: usize, kh: usize, kw: usize, s: usize, p: usize) -> ConvSpec {
+        ConvSpec { in_c: c, in_h: h, in_w: w, nk: 1, kh, kw, stride: s, pad: p, relu: false }
+    }
+
+    /// Element-by-element oracle.
+    fn naive(frame: &[f32], sp: &ConvSpec) -> Vec<f32> {
+        let (oh, ow) = (sp.out_h(), sp.out_w());
+        let mut out = vec![0.0; patch_rows(sp) * patch_cols(sp)];
+        let mut r = 0;
+        for ci in 0..sp.in_c {
+            for ky in 0..sp.kh {
+                for kx in 0..sp.kw {
+                    for oy in 0..oh {
+                        for ox in 0..ow {
+                            let iy = (oy * sp.stride + ky) as isize - sp.pad as isize;
+                            let ix = (ox * sp.stride + kx) as isize - sp.pad as isize;
+                            let v = if iy >= 0
+                                && iy < sp.in_h as isize
+                                && ix >= 0
+                                && ix < sp.in_w as isize
+                            {
+                                frame[(ci * sp.in_h + iy as usize) * sp.in_w + ix as usize]
+                            } else {
+                                0.0
+                            };
+                            out[r * oh * ow + oy * ow + ox] = v;
+                        }
+                    }
+                    r += 1;
+                }
+            }
+        }
+        out
+    }
+
+    fn check(sp: ConvSpec) {
+        let n = sp.in_c * sp.in_h * sp.in_w;
+        let frame: Vec<f32> = (0..n).map(|i| i as f32 + 1.0).collect();
+        let mut got = vec![7.0; patch_rows(&sp) * patch_cols(&sp)]; // dirty buffer
+        im2col_frame(&frame, &sp, &mut got);
+        assert_eq!(got, naive(&frame, &sp), "{sp:?}");
+    }
+
+    #[test]
+    fn matches_naive_across_geometries() {
+        check(spec(1, 4, 4, 3, 3, 1, 0));
+        check(spec(2, 5, 4, 3, 2, 1, 1));
+        check(spec(3, 7, 7, 3, 3, 2, 1));
+        check(spec(1, 6, 6, 1, 1, 1, 0)); // 1x1 conv
+        check(spec(1, 6, 6, 1, 1, 2, 0)); // strided 1x1
+        check(spec(2, 3, 3, 2, 2, 1, 3)); // pad >= kernel
+        check(spec(1, 5, 5, 5, 5, 1, 4)); // big symmetric pad
+        check(spec(1, 9, 9, 3, 3, 3, 0)); // stride == kernel
+    }
+
+    #[test]
+    fn identity_for_1x1_stride_1() {
+        let sp = spec(2, 3, 3, 1, 1, 1, 0);
+        let frame: Vec<f32> = (0..18).map(|i| i as f32).collect();
+        let mut out = vec![0.0; 18];
+        im2col_frame(&frame, &sp, &mut out);
+        assert_eq!(out, frame, "1x1/s1 patch matrix is the frame itself");
+    }
+}

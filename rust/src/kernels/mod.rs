@@ -1,0 +1,143 @@
+//! The unified CPU kernel core — ONE implementation of every layer op,
+//! shared by all backends.
+//!
+//! CNNdroid's speedups come from lowering convolution into
+//! data-parallel matrix operations prepared once at model-load time and
+//! reused across frames (§4.2).  This module is that idea on the CPU
+//! side of the stack:
+//!
+//! * [`gemm`] — a blocked/tiled GEMM primitive over
+//!   [`crate::tensor::MatView`]s with fused bias+ReLU, plus the shared
+//!   FC kernel.  Accumulation order over the reduction axis is fixed,
+//!   so results are **bit-identical** for every `KernelOpts`
+//!   configuration (sequential, tiled, any thread count).
+//! * [`im2col`] — the conv-as-GEMM lowering: materialize the patch
+//!   matrix `(C*KH*KW, OH*OW)` of one frame so convolution becomes
+//!   `packed weights x patches`.
+//! * [`conv`] — both conv lowerings: the paper's §4.1 direct 7-deep
+//!   loop nest ([`conv::conv_direct`], the numeric reference) and
+//!   im2col+GEMM ([`conv::conv_im2col`], the fast path).
+//! * [`pool`] — max/avg pooling, LRN, and ReLU kernels that
+//!   tile-parallelize *within* a frame (plane x row bands), so batch
+//!   size 1 — the common serving case — still uses every core.
+//! * [`pack`] — the [`pack::PackedModel`] weight cache: per-layer
+//!   GEMM-ready weight matrices built once per network at load time
+//!   (CNNdroid's model-preparation step) and stored alongside
+//!   [`crate::model::weights::Params`].
+//!
+//! `cpu::seq` and `cpu::par` are thin API-compatible dispatchers into
+//! these kernels; the engine, the delegate backends, and the property
+//! tests all execute the same code.
+
+pub mod conv;
+pub mod gemm;
+pub mod im2col;
+pub mod pack;
+pub mod pool;
+
+pub use conv::{conv_direct, conv_im2col, conv_im2col_unpacked};
+pub use gemm::{fc, gemm_into, matmul, BiasMode};
+pub use im2col::{im2col_frame, patch_cols, patch_rows};
+pub use pack::{PackedConv, PackedLayer, PackedModel};
+pub use pool::{avgpool_nchw, lrn_nchw, maxpool_nchw, relu};
+
+/// Which convolution lowering a backend dispatches (the capability
+/// field the delegate partitioner selects per layer).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelVariant {
+    /// The paper's §4.1 per-output loop nest.
+    Direct,
+    /// Packed weights x patch matrix GEMM (this module's fast path).
+    Im2col,
+}
+
+impl KernelVariant {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            KernelVariant::Direct => "direct",
+            KernelVariant::Im2col => "im2col",
+        }
+    }
+}
+
+/// Execution options shared by every kernel: parallelism is
+/// tile-parallelism over the *same* kernel, not a second code path.
+#[derive(Debug, Clone, Copy)]
+pub struct KernelOpts {
+    /// `1` runs on the caller's thread; `> 1` splits tiles across the
+    /// shared [`crate::util::threadpool`] (actual concurrency is the
+    /// pool size).
+    pub threads: usize,
+    /// Columns per parallel band of the GEMM output (clamped to a sane
+    /// minimum internally).  The pool/LRN/direct-conv kernels size
+    /// their own `(plane, row band)` units from `threads` and ignore
+    /// this field.
+    pub tile: usize,
+}
+
+impl KernelOpts {
+    /// Sequential execution (the §4.1 baseline configuration).
+    pub fn seq() -> KernelOpts {
+        KernelOpts { threads: 1, tile: 64 }
+    }
+
+    /// Tile-parallel execution on the shared pool.
+    pub fn tiled() -> KernelOpts {
+        KernelOpts { threads: crate::util::threadpool::global().size(), tile: 64 }
+    }
+
+    /// Does this configuration dispatch to the pool?
+    pub fn parallel(&self) -> bool {
+        self.threads > 1
+    }
+}
+
+impl Default for KernelOpts {
+    fn default() -> Self {
+        KernelOpts::seq()
+    }
+}
+
+/// Split `planes x rows` of work into `(bands_per_plane, band_rows)`
+/// so there are enough units to feed `threads` workers even when
+/// `planes` is small (batch-1 pooling on a few channels).
+pub(crate) fn row_bands(planes: usize, rows: usize, threads: usize) -> (usize, usize) {
+    if planes == 0 || rows == 0 {
+        return (1, rows.max(1));
+    }
+    let target_units = 4 * threads.max(1);
+    let per_plane = target_units.div_ceil(planes).clamp(1, rows);
+    let band_rows = rows.div_ceil(per_plane);
+    (rows.div_ceil(band_rows), band_rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_bands_covers_all_rows() {
+        for (planes, rows, threads) in
+            [(1, 55, 8), (96, 55, 8), (3, 1, 4), (16, 27, 1), (1, 1, 16)]
+        {
+            let (bands, band_rows) = row_bands(planes, rows, threads);
+            assert!(bands * band_rows >= rows, "{planes}/{rows}/{threads}");
+            assert!(band_rows > 0 && bands > 0);
+            assert!((bands - 1) * band_rows < rows, "no empty trailing band");
+        }
+    }
+
+    #[test]
+    fn row_bands_splits_single_plane_for_many_threads() {
+        // Batch-1 single-channel work must still fan out.
+        let (bands, _) = row_bands(1, 64, 8);
+        assert!(bands >= 8, "got {bands} bands");
+    }
+
+    #[test]
+    fn opts_defaults() {
+        assert!(!KernelOpts::seq().parallel());
+        assert_eq!(KernelOpts::default().threads, 1);
+        assert!(KernelOpts::tiled().threads >= 1);
+    }
+}

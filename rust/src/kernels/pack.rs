@@ -1,0 +1,196 @@
+//! The [`PackedModel`] weight cache — CNNdroid's model-preparation
+//! step on the CPU side: every conv layer's OIHW weights are repacked
+//! ONCE at network-load time into the GEMM-ready `(NK, C*KH*KW)`
+//! matrix the im2col lowering multiplies against, then reused across
+//! every frame and batch.  The cache lives alongside
+//! [`crate::model::weights::Params`] (the engine holds both); FC
+//! weights are already stored `(in, out)` — exactly the GEMM `B`
+//! operand — so only their geometry is cached.
+
+use std::collections::BTreeMap;
+
+use crate::model::network::{ConvSpec, Layer, Network};
+use crate::model::weights::Params;
+use crate::tensor::Tensor;
+use crate::Result;
+
+use super::im2col::patch_rows;
+
+/// One conv layer's GEMM-ready parameters.
+#[derive(Debug, Clone)]
+pub struct PackedConv {
+    pub spec: ConvSpec,
+    /// GEMM `A` operand `(NK, C*KH*KW)`: row `k` is kernel `k`
+    /// flattened in `(ci, ky, kx)` order — the same order
+    /// [`super::im2col::im2col_frame`] emits patch rows.
+    pub wmat: Tensor,
+    pub bias: Tensor,
+}
+
+impl PackedConv {
+    /// Pack OIHW weights.  OIHW is row-major `(o, i, kh, kw)`, so the
+    /// flatten IS the pack — one copy, no permutation.
+    pub fn pack(spec: &ConvSpec, w: &Tensor, b: &Tensor) -> PackedConv {
+        assert_eq!(w.shape(), &[spec.nk, spec.in_c, spec.kh, spec.kw], "conv weight shape");
+        assert_eq!(b.len(), spec.nk, "conv bias length");
+        PackedConv {
+            spec: *spec,
+            wmat: w.clone().reshape(vec![spec.nk, patch_rows(spec)]),
+            bias: b.clone(),
+        }
+    }
+}
+
+/// One parameterized layer's prepared form.
+#[derive(Debug, Clone)]
+pub enum PackedLayer {
+    Conv(PackedConv),
+    /// FC weights stay in `Params` (already GEMM layout); the cache
+    /// records the validated geometry.
+    Fc { d_in: usize, d_out: usize, relu: bool },
+}
+
+/// Per-network cache of prepared layers, keyed by layer name.
+#[derive(Debug, Clone, Default)]
+pub struct PackedModel {
+    entries: BTreeMap<String, PackedLayer>,
+}
+
+impl PackedModel {
+    /// Build the cache for `net` from loaded `params` (the model-load
+    /// preparation step; call once, reuse for every inference).
+    pub fn prepare(net: &Network, params: &Params) -> Result<PackedModel> {
+        Self::prepare_filtered(net, params, None)
+    }
+
+    /// Build the cache packing only the conv layers named in `convs`
+    /// (the ones an execution plan actually dispatches as im2col) —
+    /// avoids duplicating weight memory for layers that run direct or
+    /// on an accelerator.  `None` packs every conv layer.
+    pub fn prepare_for(
+        net: &Network,
+        params: &Params,
+        convs: &std::collections::BTreeSet<String>,
+    ) -> Result<PackedModel> {
+        Self::prepare_filtered(net, params, Some(convs))
+    }
+
+    fn prepare_filtered(
+        net: &Network,
+        params: &Params,
+        convs: Option<&std::collections::BTreeSet<String>>,
+    ) -> Result<PackedModel> {
+        let specs: BTreeMap<String, ConvSpec> = net.conv_specs().into_iter().collect();
+        let mut entries = BTreeMap::new();
+        for layer in &net.layers {
+            match layer {
+                Layer::Conv { name, .. } => {
+                    if convs.is_some_and(|set| !set.contains(name)) {
+                        continue;
+                    }
+                    let (w, b) = params
+                        .get(name)
+                        .ok_or_else(|| anyhow::anyhow!("missing params for {name}"))?;
+                    let spec = specs
+                        .get(name.as_str())
+                        .ok_or_else(|| anyhow::anyhow!("no conv spec for {name}"))?;
+                    entries.insert(name.clone(), PackedLayer::Conv(PackedConv::pack(spec, w, b)));
+                }
+                Layer::Fc { name, out, relu } => {
+                    let (w, b) = params
+                        .get(name)
+                        .ok_or_else(|| anyhow::anyhow!("missing params for {name}"))?;
+                    anyhow::ensure!(
+                        w.dim(1) == *out && b.len() == *out,
+                        "fc {name}: weight {:?} / bias {} vs out {out}",
+                        w.shape(),
+                        b.len()
+                    );
+                    entries.insert(
+                        name.clone(),
+                        PackedLayer::Fc { d_in: w.dim(0), d_out: *out, relu: *relu },
+                    );
+                }
+                Layer::Pool { .. } | Layer::Lrn { .. } => {}
+            }
+        }
+        Ok(PackedModel { entries })
+    }
+
+    /// Prepared form of one layer.
+    pub fn get(&self, name: &str) -> Option<&PackedLayer> {
+        self.entries.get(name)
+    }
+
+    /// Prepared conv parameters of one layer (None for non-conv).
+    pub fn conv(&self, name: &str) -> Option<&PackedConv> {
+        match self.entries.get(name) {
+            Some(PackedLayer::Conv(p)) => Some(p),
+            _ => None,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::util::rng::Pcg;
+
+    /// Params with random values in the network's canonical shapes.
+    fn synth_params(net: &Network, seed: u64) -> Params {
+        let mut rng = Pcg::seeded(seed);
+        let pairs = net
+            .param_shapes()
+            .into_iter()
+            .map(|(name, ws, bs)| {
+                let wn: usize = ws.iter().product();
+                let bn: usize = bs.iter().product();
+                (
+                    name,
+                    Tensor::new(ws, rng.normal_vec(wn, 0.1)),
+                    Tensor::new(bs, rng.normal_vec(bn, 0.1)),
+                )
+            })
+            .collect();
+        Params { pairs }
+    }
+
+    #[test]
+    fn prepares_every_parameterized_layer() {
+        for net in zoo::all() {
+            let params = synth_params(&net, 1);
+            let packed = PackedModel::prepare(&net, &params).unwrap();
+            assert_eq!(packed.len(), net.param_shapes().len(), "{}", net.name);
+            for (name, spec) in net.conv_specs() {
+                let p = packed.conv(&name).expect("conv packed");
+                assert_eq!(p.wmat.shape(), &[spec.nk, spec.in_c * spec.kh * spec.kw]);
+            }
+        }
+    }
+
+    #[test]
+    fn packing_preserves_weight_values() {
+        let net = zoo::lenet5();
+        let params = synth_params(&net, 2);
+        let packed = PackedModel::prepare(&net, &params).unwrap();
+        let (w, _) = params.get("conv1").unwrap();
+        // OIHW flatten == pack: same data, new shape.
+        assert_eq!(packed.conv("conv1").unwrap().wmat.data(), w.data());
+    }
+
+    #[test]
+    fn missing_params_error() {
+        let net = zoo::lenet5();
+        let params = Params { pairs: Vec::new() };
+        assert!(PackedModel::prepare(&net, &params).is_err());
+    }
+}

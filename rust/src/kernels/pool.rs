@@ -1,0 +1,363 @@
+//! Pooling, LRN, and ReLU kernels — single implementations whose
+//! parallel form is tile-parallelism over `(plane, row band)` units of
+//! the SAME loops, so batch-1 frames (the common serving case) still
+//! spread across every core instead of degenerating to one unit per
+//! frame.  Per-output work is independent, so sequential and tiled
+//! runs are bit-identical.
+
+use std::sync::Arc;
+
+use crate::model::network::pool_out;
+use crate::tensor::Tensor;
+use crate::util::threadpool;
+
+use super::{row_bands, KernelOpts};
+
+/// Max pooling, Caffe ceil semantics (window clipped at the edges).
+pub fn maxpool_nchw(x: &Tensor, size: usize, stride: usize, opts: KernelOpts) -> Tensor {
+    pool_impl(x, size, stride, true, opts)
+}
+
+/// Average pooling, Caffe ceil semantics; the divisor is the FULL
+/// window area (out-of-bounds pixels contribute zero) to match the
+/// kernel/reference contract.
+pub fn avgpool_nchw(x: &Tensor, size: usize, stride: usize, opts: KernelOpts) -> Tensor {
+    pool_impl(x, size, stride, false, opts)
+}
+
+/// Rows `[y0, y1)` of one pooling output plane.  `xp` is the input
+/// plane (`h*w`), `od` the output rows being written (`(y1-y0)*ow`).
+#[allow(clippy::too_many_arguments)]
+fn pool_rows(
+    xp: &[f32],
+    od: &mut [f32],
+    (h, w): (usize, usize),
+    ow: usize,
+    size: usize,
+    stride: usize,
+    is_max: bool,
+    y0: usize,
+    y1: usize,
+) {
+    for oy in y0..y1 {
+        let orow = &mut od[(oy - y0) * ow..(oy - y0 + 1) * ow];
+        for (ox, o) in orow.iter_mut().enumerate() {
+            let ys = oy * stride;
+            let xs = ox * stride;
+            let ye = (ys + size).min(h);
+            let xe = (xs + size).min(w);
+            *o = if is_max {
+                let mut m = f32::NEG_INFINITY;
+                for yy in ys..ye {
+                    for xx in xs..xe {
+                        m = m.max(xp[yy * w + xx]);
+                    }
+                }
+                m
+            } else {
+                let mut s = 0.0f32;
+                for yy in ys..ye {
+                    for xx in xs..xe {
+                        s += xp[yy * w + xx];
+                    }
+                }
+                s / (size * size) as f32
+            };
+        }
+    }
+}
+
+struct PoolCapsule {
+    x: *const f32,
+    o: *mut f32,
+    h: usize,
+    w: usize,
+    oh: usize,
+    ow: usize,
+    size: usize,
+    stride: usize,
+    is_max: bool,
+    bands: usize,
+    band_rows: usize,
+}
+
+unsafe impl Send for PoolCapsule {}
+unsafe impl Sync for PoolCapsule {}
+
+fn pool_impl(x: &Tensor, size: usize, stride: usize, is_max: bool, opts: KernelOpts) -> Tensor {
+    let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let (oh, ow) = (pool_out(h, size, stride), pool_out(w, size, stride));
+    let mut out = Tensor::zeros(vec![n, c, oh, ow]);
+    let planes = n * c;
+    let (bands, band_rows) = row_bands(planes, oh, opts.threads);
+    let units = planes * bands;
+    if !opts.parallel() || units < 2 {
+        let od = out.data_mut();
+        for p in 0..planes {
+            pool_rows(
+                &x.data()[p * h * w..(p + 1) * h * w],
+                &mut od[p * oh * ow..(p + 1) * oh * ow],
+                (h, w),
+                ow,
+                size,
+                stride,
+                is_max,
+                0,
+                oh,
+            );
+        }
+        return out;
+    }
+    let cap = Arc::new(PoolCapsule {
+        x: x.data().as_ptr(),
+        o: out.data_mut().as_mut_ptr(),
+        h,
+        w,
+        oh,
+        ow,
+        size,
+        stride,
+        is_max,
+        bands,
+        band_rows,
+    });
+    threadpool::parallel_for(units, move |u| {
+        let (p, band) = (u / cap.bands, u % cap.bands);
+        let y0 = band * cap.band_rows;
+        let y1 = (y0 + cap.band_rows).min(cap.oh);
+        if y0 >= y1 {
+            return;
+        }
+        // SAFETY: disjoint (plane, row-band) output slices; the entry
+        // point blocks on scope completion.
+        unsafe {
+            let xp = std::slice::from_raw_parts(cap.x.add(p * cap.h * cap.w), cap.h * cap.w);
+            let od = std::slice::from_raw_parts_mut(
+                cap.o.add(p * cap.oh * cap.ow + y0 * cap.ow),
+                (y1 - y0) * cap.ow,
+            );
+            pool_rows(
+                xp,
+                od,
+                (cap.h, cap.w),
+                cap.ow,
+                cap.size,
+                cap.stride,
+                cap.is_max,
+                y0,
+                y1,
+            );
+        }
+    });
+    out
+}
+
+/// Rows `[y0, y1)` of one LRN output plane.  `xd` is the whole input
+/// (the channel window reads neighbouring planes).
+#[allow(clippy::too_many_arguments)]
+fn lrn_rows(
+    xd: &[f32],
+    od: &mut [f32],
+    (c, h, w): (usize, usize, usize),
+    plane: usize,
+    half: usize,
+    scale: f64,
+    beta: f64,
+    k: f64,
+    y0: usize,
+    y1: usize,
+) {
+    let (ni, ci) = (plane / c, plane % c);
+    let lo = ci.saturating_sub(half);
+    let hi = (ci + half + 1).min(c);
+    for yi in y0..y1 {
+        for xi in 0..w {
+            let pix = yi * w + xi;
+            let mut acc = 0.0f64;
+            for cj in lo..hi {
+                let v = xd[(ni * c + cj) * h * w + pix] as f64;
+                acc += v * v;
+            }
+            let denom = (k + scale * acc).powf(beta);
+            od[(yi - y0) * w + xi] = (xd[plane * h * w + pix] as f64 / denom) as f32;
+        }
+    }
+}
+
+struct LrnCapsule {
+    x: *const f32,
+    x_len: usize,
+    o: *mut f32,
+    c: usize,
+    h: usize,
+    w: usize,
+    half: usize,
+    scale: f64,
+    beta: f64,
+    k: f64,
+    bands: usize,
+    band_rows: usize,
+}
+
+unsafe impl Send for LrnCapsule {}
+unsafe impl Sync for LrnCapsule {}
+
+/// Caffe-style cross-channel local response normalization:
+/// `out[c] = x[c] / (k + alpha/size * sum_{c' in window} x[c']^2)^beta`.
+pub fn lrn_nchw(x: &Tensor, size: usize, alpha: f64, beta: f64, k: f64, opts: KernelOpts) -> Tensor {
+    let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let half = size / 2;
+    let scale = alpha / size as f64;
+    let mut out = Tensor::zeros(vec![n, c, h, w]);
+    let planes = n * c;
+    let (bands, band_rows) = row_bands(planes, h, opts.threads);
+    let units = planes * bands;
+    if !opts.parallel() || units < 2 {
+        let od = out.data_mut();
+        for p in 0..planes {
+            lrn_rows(
+                x.data(),
+                &mut od[p * h * w..(p + 1) * h * w],
+                (c, h, w),
+                p,
+                half,
+                scale,
+                beta,
+                k,
+                0,
+                h,
+            );
+        }
+        return out;
+    }
+    let cap = Arc::new(LrnCapsule {
+        x: x.data().as_ptr(),
+        x_len: x.len(),
+        o: out.data_mut().as_mut_ptr(),
+        c,
+        h,
+        w,
+        half,
+        scale,
+        beta,
+        k,
+        bands,
+        band_rows,
+    });
+    threadpool::parallel_for(units, move |u| {
+        let (p, band) = (u / cap.bands, u % cap.bands);
+        let y0 = band * cap.band_rows;
+        let y1 = (y0 + cap.band_rows).min(cap.h);
+        if y0 >= y1 {
+            return;
+        }
+        // SAFETY: disjoint (plane, row-band) output slices.
+        unsafe {
+            let xd = std::slice::from_raw_parts(cap.x, cap.x_len);
+            let od = std::slice::from_raw_parts_mut(
+                cap.o.add(p * cap.h * cap.w + y0 * cap.w),
+                (y1 - y0) * cap.w,
+            );
+            lrn_rows(
+                xd,
+                od,
+                (cap.c, cap.h, cap.w),
+                p,
+                cap.half,
+                cap.scale,
+                cap.beta,
+                cap.k,
+                y0,
+                y1,
+            );
+        }
+    });
+    out
+}
+
+struct ReluCapsule {
+    o: *mut f32,
+    len: usize,
+    chunk: usize,
+}
+
+unsafe impl Send for ReluCapsule {}
+unsafe impl Sync for ReluCapsule {}
+
+/// Out-of-place ReLU; chunk-parallel above a small-size threshold.
+pub fn relu(x: &Tensor, opts: KernelOpts) -> Tensor {
+    let mut out = x.clone();
+    let len = out.len();
+    if !opts.parallel() || len < 1 << 14 {
+        out.relu_inplace();
+        return out;
+    }
+    let chunks = opts.threads.max(2);
+    let cap = Arc::new(ReluCapsule {
+        o: out.data_mut().as_mut_ptr(),
+        len,
+        chunk: len.div_ceil(chunks),
+    });
+    threadpool::parallel_for(chunks, move |t| {
+        let lo = t * cap.chunk;
+        let hi = ((t + 1) * cap.chunk).min(cap.len);
+        if lo >= hi {
+            return;
+        }
+        // SAFETY: disjoint [lo, hi) ranges per task.
+        let od = unsafe { std::slice::from_raw_parts_mut(cap.o.add(lo), hi - lo) };
+        for v in od {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn random(shape: Vec<usize>, seed: u64) -> Tensor {
+        let n = shape.iter().product();
+        let mut rng = Pcg::seeded(seed);
+        Tensor::new(shape, rng.normal_vec(n, 1.0))
+    }
+
+    #[test]
+    fn tiled_pool_bit_identical_even_for_batch_1() {
+        for (shape, size, stride) in
+            [(vec![1, 4, 55, 55], 3, 2), (vec![2, 8, 24, 24], 2, 2), (vec![1, 1, 9, 9], 2, 3)]
+        {
+            let x = random(shape.clone(), 1);
+            assert_eq!(
+                maxpool_nchw(&x, size, stride, KernelOpts::seq()),
+                maxpool_nchw(&x, size, stride, KernelOpts::tiled()),
+                "{shape:?}"
+            );
+            assert_eq!(
+                avgpool_nchw(&x, size, stride, KernelOpts::seq()),
+                avgpool_nchw(&x, size, stride, KernelOpts::tiled()),
+                "{shape:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn tiled_lrn_bit_identical() {
+        let x = random(vec![1, 16, 13, 13], 2);
+        let a = lrn_nchw(&x, 5, 1e-4, 0.75, 1.0, KernelOpts::seq());
+        let b = lrn_nchw(&x, 5, 1e-4, 0.75, 1.0, KernelOpts::tiled());
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn relu_parallel_matches() {
+        let small = random(vec![1, 1, 5, 5], 3);
+        assert_eq!(relu(&small, KernelOpts::tiled()), relu(&small, KernelOpts::seq()));
+        let large = random(vec![4, 32, 32, 32], 4);
+        assert_eq!(relu(&large, KernelOpts::tiled()), relu(&large, KernelOpts::seq()));
+    }
+}

@@ -14,8 +14,13 @@
 //!   micro-benchmark harness, statistics, property-testing kit.
 //! * [`tensor`] — host tensors and NCHW↔NHWC layout transforms.
 //! * [`model`] — the `.cdm` deployment format, converter, network zoo.
+//! * [`kernels`] — the unified CPU kernel core: blocked/tiled GEMM,
+//!   the im2col conv lowering, pool/LRN/FC kernels with explicit
+//!   `KernelOpts` tile-parallelism, and the `PackedModel` weight cache
+//!   built once per network at load time.
 //! * [`cpu`] — the paper's CPU-only sequential baseline (§4.1) plus the
-//!   multi-threaded CPU layers (§6.3).
+//!   multi-threaded CPU layers (§6.3); both are thin dispatchers into
+//!   [`kernels`].
 //! * [`runtime`] — PJRT client wrapper: load/compile/execute the HLO
 //!   artifacts produced by `python/compile/aot.py`.
 //! * [`coordinator`] — the serving engine: layerwise executor with
@@ -35,6 +40,7 @@ pub mod coordinator;
 pub mod cpu;
 pub mod data;
 pub mod delegate;
+pub mod kernels;
 pub mod model;
 pub mod runtime;
 pub mod simulator;

@@ -187,19 +187,7 @@ fn infer(argv: Vec<String>) -> Result<()> {
 
     let t0 = Instant::now();
     let preds = if args.has("fused") {
-        let logits = engine.infer_batch_fused(&batch)?;
-        let c = logits.dim(1);
-        (0..logits.dim(0))
-            .map(|i| {
-                let row = &logits.data()[i * c..(i + 1) * c];
-                let (l, s) = row
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .unwrap();
-                (l, *s)
-            })
-            .collect::<Vec<_>>()
+        engine.infer_batch_fused(&batch)?.argmax_rows()
     } else {
         engine.classify(&batch)?
     };

@@ -155,6 +155,45 @@ pub fn conv_time_gpu(dev: &DeviceSpec, spec: &ConvSpec, method: Method, throttle
     t_compute.max(t_traffic) + t_dispatch
 }
 
+/// Vectorized blocked-GEMM CPU GFLOP/s: NEON-class SIMD MACs with
+/// cache-blocked operands, far above the scalar sequential cap; `mt`
+/// multiplies in the thread-pool speedup when the kernel runs
+/// tile-parallel.
+pub fn cpu_gemm_rate(dev: &DeviceSpec, threads: usize) -> f64 {
+    let mt = if threads > 1 { dev.cpu_mt_speedup } else { 1.0 };
+    dev.cpu_gemm_gflops * mt
+}
+
+/// Time of an `(m x k) · (k x n)` blocked GEMM on CPU, seconds.
+pub fn gemm_time_cpu(dev: &DeviceSpec, m: usize, k: usize, n: usize, threads: usize) -> f64 {
+    let flops = 2.0 * m as f64 * k as f64 * n as f64;
+    flops / (cpu_gemm_rate(dev, threads) * 1e9)
+}
+
+/// im2col patch-matrix materialization time, seconds: the
+/// `(C*KH*KW, OH*OW)` buffer is written once and streamed once by the
+/// GEMM — two word-touches per element at the streaming-op rate.
+pub fn im2col_time(dev: &DeviceSpec, spec: &ConvSpec) -> f64 {
+    let words = (spec.in_c * spec.kh * spec.kw * spec.out_h() * spec.out_w()) as f64;
+    2.0 * words / (dev.cpu_pool_gops * 1e9)
+}
+
+/// CPU conv via the kernel core's im2col+GEMM lowering, seconds for
+/// one frame.  This is what lets the delegate partitioner choose the
+/// lowering per layer: compare against [`conv_time_seq`] (direct nest)
+/// and [`conv_time_gpu`] (accelerator).
+pub fn conv_time_cpu_gemm(dev: &DeviceSpec, spec: &ConvSpec, threads: usize) -> f64 {
+    let k = spec.in_c * spec.kh * spec.kw;
+    let n = spec.out_h() * spec.out_w();
+    im2col_time(dev, spec) + gemm_time_cpu(dev, spec.nk, k, n, threads)
+}
+
+/// CPU FC through the same GEMM kernel (one frame: a `1 x d_in` by
+/// `d_in x d_out` product), seconds.
+pub fn fc_time_cpu_gemm(dev: &DeviceSpec, d_in: usize, d_out: usize, threads: usize) -> f64 {
+    gemm_time_cpu(dev, 1, d_in, d_out, threads)
+}
+
 /// Time of one FC layer for one frame, seconds.  Public for the
 /// delegate partitioner, which prices CPU-vs-accelerator FC placement
 /// per layer instead of hard-coding the paper's AlexNet-only rule.
@@ -392,6 +431,39 @@ mod tests {
             }
         }
         assert!(regressed, "adv-8 never regressed below adv-4 on small nets");
+    }
+
+    #[test]
+    fn gemm_lowering_beats_direct_nest_on_every_zoo_conv() {
+        // The kernel core's acceptance bar, in cost-model form: the
+        // im2col+GEMM path (even single-threaded, even paying for the
+        // patch-matrix materialization) undercuts the scalar nest.
+        for dev in [galaxy_note4(), htc_one_m9()] {
+            for net in zoo::all() {
+                for (name, spec) in net.conv_specs() {
+                    let direct = conv_time_seq(&dev, &spec);
+                    let lowered = conv_time_cpu_gemm(&dev, &spec, 1);
+                    assert!(
+                        lowered < direct,
+                        "{}/{}/{name}: gemm {lowered} >= direct {direct}",
+                        dev.name,
+                        net.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_rate_scales_with_threads_and_exceeds_scalar_cap() {
+        let dev = galaxy_note4();
+        assert!(cpu_gemm_rate(&dev, 1) > dev.cpu_cap_gflops);
+        assert!(cpu_gemm_rate(&dev, 4) > cpu_gemm_rate(&dev, 1));
+        let t1 = gemm_time_cpu(&dev, 96, 363, 3025, 1);
+        let t4 = gemm_time_cpu(&dev, 96, 363, 3025, 4);
+        assert!(t4 < t1);
+        assert!(fc_time_cpu_gemm(&dev, 800, 500, 1) > 0.0);
+        assert!(im2col_time(&dev, &zoo::alexnet().heaviest_conv().1) > 0.0);
     }
 
     #[test]

@@ -54,6 +54,10 @@ pub struct DeviceSpec {
     pub cpu_slope_gflops: f64,
     /// Upper bound on the sequential rate.
     pub cpu_cap_gflops: f64,
+    /// Single-thread vectorized blocked-GEMM GFLOP/s (the kernel
+    /// core's im2col+GEMM path: NEON-class SIMD MACs over cache-blocked
+    /// operands).  Multiplied by `cpu_mt_speedup` when tile-parallel.
+    pub cpu_gemm_gflops: f64,
     /// Sequential CPU Gop/s on simple streaming ops (pool/LRN windows).
     pub cpu_pool_gops: f64,
     /// Multithreaded CPU speedup over sequential for pool/LRN (§6.3).
@@ -103,6 +107,7 @@ pub fn galaxy_note4() -> DeviceSpec {
         cpu_base_gflops: 0.052,
         cpu_slope_gflops: 4.2e-5,
         cpu_cap_gflops: 0.30,
+        cpu_gemm_gflops: 2.0,
         cpu_pool_gops: 0.30,
         cpu_mt_speedup: 3.4,
         throttle_after_s: 40.0,
@@ -133,6 +138,7 @@ pub fn htc_one_m9() -> DeviceSpec {
         cpu_base_gflops: 0.035,
         cpu_slope_gflops: 5.0e-5,
         cpu_cap_gflops: 0.30,
+        cpu_gemm_gflops: 2.1,
         cpu_pool_gops: 0.30,
         cpu_mt_speedup: 3.4,
         // Snapdragon 810 was notorious for aggressive thermal limits;

@@ -7,8 +7,10 @@
 //! that the Fig. 5 pipeline schedules into accelerator-busy windows.
 
 pub mod layout;
+pub mod view;
 
 pub use layout::{hwio_to_oihw, nchw_to_nhwc, nhwc_to_nchw, oihw_to_hwio};
+pub use view::MatView;
 
 use std::fmt;
 
@@ -124,15 +126,36 @@ impl Tensor {
             .fold(0.0, f32::max)
     }
 
-    /// Index of the maximum element (argmax over the whole tensor).
+    /// Index of the maximum element (argmax over the whole tensor) —
+    /// the single-row special case of [`Tensor::argmax_rows`].
     pub fn argmax(&self) -> usize {
-        let mut best = 0;
-        for (i, &x) in self.data.iter().enumerate() {
-            if x > self.data[best] {
-                best = i;
-            }
-        }
-        best
+        argmax_slice(&self.data).0
+    }
+
+    /// Per-row `(argmax index, max value)` over the trailing axis of a
+    /// `(N, D)` tensor (or any tensor reinterpreted as `N` rows of its
+    /// trailing dimension).  Ties resolve to the lowest index.  This is
+    /// the one classification argmax shared by the CPU forward path,
+    /// the engine, the server worker, and the CLI.
+    pub fn argmax_rows(&self) -> Vec<(usize, f32)> {
+        assert!(!self.shape.is_empty(), "argmax_rows needs at least one axis");
+        let d = *self.shape.last().unwrap();
+        assert!(d > 0, "argmax_rows over empty rows");
+        let n = self.data.len() / d;
+        (0..n).map(|i| argmax_slice(&self.data[i * d..(i + 1) * d])).collect()
+    }
+
+    /// Dense 2-D view of an `(N, D)` tensor for the GEMM kernels.
+    pub fn view2d(&self) -> MatView<'_> {
+        assert_eq!(self.shape.len(), 2, "view2d needs a 2-D tensor, got {:?}", self.shape);
+        MatView::dense(&self.data, self.shape[0], self.shape[1])
+    }
+
+    /// Matrix product `(m, k) x (k, n) -> (m, n)` through the blocked
+    /// GEMM primitive in [`crate::kernels`] (single-threaded; use
+    /// [`crate::kernels::gemm_into`] directly for tile-parallel runs).
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        crate::kernels::matmul(self, other, crate::kernels::KernelOpts::seq())
     }
 
     /// In-place ReLU.
@@ -143,6 +166,17 @@ impl Tensor {
             }
         }
     }
+}
+
+/// `(index, value)` of the first maximum in a non-empty slice.
+fn argmax_slice(row: &[f32]) -> (usize, f32) {
+    let mut best = 0;
+    for (i, &x) in row.iter().enumerate() {
+        if x > row[best] {
+            best = i;
+        }
+    }
+    (best, row[best])
 }
 
 impl fmt::Debug for Tensor {
@@ -202,6 +236,24 @@ mod tests {
         assert_eq!(t.max_abs_diff(&t.clone()), 0.0);
         let u = Tensor::new(vec![2], vec![1.0, 2.5]);
         assert_eq!(t.max_abs_diff(&u), 0.5);
+    }
+
+    #[test]
+    fn argmax_rows_per_row_with_values() {
+        let t = Tensor::new(vec![2, 3], vec![1.0, 5.0, 2.0, 7.0, 0.0, 7.0]);
+        let rows = t.argmax_rows();
+        assert_eq!(rows, vec![(1, 5.0), (0, 7.0)]); // ties -> lowest index
+        // Whole-tensor argmax is the 1-row case of the same logic.
+        assert_eq!(t.argmax(), 3);
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::new(vec![2, 2], vec![5.0, 6.0, 7.0, 8.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.shape(), &[2, 2]);
+        assert_eq!(c.data(), &[19.0, 22.0, 43.0, 50.0]);
     }
 
     #[test]

@@ -1,0 +1,138 @@
+//! Strided 2-D matrix views over tensor storage.
+//!
+//! The kernel core ([`crate::kernels`]) operates on matrices that are
+//! frequently *sub*-matrices of a larger buffer (a column band of a
+//! patch matrix, one frame of a batch), so the GEMM primitive takes
+//! these views rather than owned [`super::Tensor`]s: a `(rows, cols)`
+//! window whose consecutive rows are `row_stride` elements apart.
+
+/// Immutable strided 2-D view: `rows x cols`, row `i` beginning at
+/// element `i * row_stride` of `data`.
+#[derive(Clone, Copy)]
+pub struct MatView<'a> {
+    data: &'a [f32],
+    rows: usize,
+    cols: usize,
+    row_stride: usize,
+}
+
+impl<'a> MatView<'a> {
+    /// View with an explicit row stride (`cols <= row_stride`).
+    pub fn new(data: &'a [f32], rows: usize, cols: usize, row_stride: usize) -> MatView<'a> {
+        assert!(cols <= row_stride || rows <= 1, "cols {cols} > row stride {row_stride}");
+        if rows > 0 {
+            let need = (rows - 1) * row_stride + cols;
+            assert!(need <= data.len(), "view {rows}x{cols}+{row_stride} wants {need} elements");
+        }
+        MatView { data, rows, cols, row_stride }
+    }
+
+    /// Dense view: row stride equals the column count.
+    pub fn dense(data: &'a [f32], rows: usize, cols: usize) -> MatView<'a> {
+        MatView::new(data, rows, cols, cols)
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn row_stride(&self) -> usize {
+        self.row_stride
+    }
+
+    /// Row `i` as a contiguous slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &'a [f32] {
+        &self.data[i * self.row_stride..i * self.row_stride + self.cols]
+    }
+
+    /// Element `(i, j)`.
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.row_stride + j]
+    }
+
+    /// Sub-view of columns `[j0, j0 + ncols)` (same rows).
+    pub fn col_band(&self, j0: usize, ncols: usize) -> MatView<'a> {
+        assert!(j0 + ncols <= self.cols, "band {j0}+{ncols} > cols {}", self.cols);
+        MatView {
+            data: &self.data[j0..],
+            rows: self.rows,
+            cols: ncols,
+            row_stride: self.row_stride,
+        }
+    }
+
+    /// Sub-view of rows `[i0, i0 + nrows)` (same columns).
+    pub fn row_band(&self, i0: usize, nrows: usize) -> MatView<'a> {
+        assert!(i0 + nrows <= self.rows, "band {i0}+{nrows} > rows {}", self.rows);
+        MatView {
+            data: &self.data[i0 * self.row_stride..],
+            rows: nrows,
+            cols: self.cols,
+            row_stride: self.row_stride,
+        }
+    }
+
+    /// Base pointer (for the kernel core's scoped parallel bands).
+    pub(crate) fn as_ptr(&self) -> *const f32 {
+        self.data.as_ptr()
+    }
+}
+
+impl std::fmt::Debug for MatView<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "MatView[{}x{} stride {}]", self.rows, self.cols, self.row_stride)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_rows_and_elements() {
+        let data: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        let v = MatView::dense(&data, 3, 4);
+        assert_eq!(v.row(1), &[4.0, 5.0, 6.0, 7.0]);
+        assert_eq!(v.at(2, 3), 11.0);
+    }
+
+    #[test]
+    fn strided_view_skips_padding() {
+        // 2x3 window inside rows of stride 5.
+        let data: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let v = MatView::new(&data, 2, 3, 5);
+        assert_eq!(v.row(0), &[0.0, 1.0, 2.0]);
+        assert_eq!(v.row(1), &[5.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    fn col_band_offsets_columns() {
+        let data: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        let v = MatView::dense(&data, 3, 4);
+        let band = v.col_band(1, 2);
+        assert_eq!(band.row(0), &[1.0, 2.0]);
+        assert_eq!(band.row(2), &[9.0, 10.0]);
+    }
+
+    #[test]
+    fn row_band_offsets_rows() {
+        let data: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        let v = MatView::dense(&data, 3, 4);
+        let band = v.row_band(1, 2);
+        assert_eq!(band.rows(), 2);
+        assert_eq!(band.row(0), &[4.0, 5.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn oversized_view_rejected() {
+        let data = [0.0f32; 5];
+        MatView::dense(&data, 2, 3);
+    }
+}

@@ -1,0 +1,228 @@
+//! Property tests on the unified kernel core:
+//!
+//! (a) the im2col+GEMM conv lowering agrees with the direct §4.1 loop
+//!     nest over randomized shapes/strides/padding — including
+//!     `pad >= kernel` and 1x1 convolutions — sequential and tiled;
+//! (b) FC / pooling / LRN tiled kernels are bit-identical to their
+//!     sequential runs (tile-parallelism is the same kernel, not a
+//!     second numeric path);
+//! (c) the delegate partitioner selects the im2col lowering wherever
+//!     the GEMM cost model predicts a win over the direct nest.
+
+use cnndroid::cpu::seq;
+use cnndroid::delegate::{Partitioner, Registry};
+use cnndroid::kernels::{self, KernelOpts};
+use cnndroid::model::network::ConvSpec;
+use cnndroid::model::zoo;
+use cnndroid::prop_assert;
+use cnndroid::simulator::cost;
+use cnndroid::simulator::device::all_devices;
+use cnndroid::tensor::Tensor;
+use cnndroid::util::prop;
+use cnndroid::util::rng::Pcg;
+
+fn random_tensor(rng: &mut Pcg, shape: Vec<usize>) -> Tensor {
+    let n = shape.iter().product();
+    Tensor::new(shape, rng.normal_vec(n, 1.0))
+}
+
+/// Random conv geometry, biased to cover the edge cases: 1x1 kernels,
+/// strides > 1, pad 0, and pad >= kernel.
+fn random_spec(rng: &mut Pcg) -> ConvSpec {
+    let kh = rng.range(1, 6) as usize;
+    let kw = rng.range(1, 6) as usize;
+    let stride = rng.range(1, 4) as usize;
+    let pad = rng.range(0, kh.max(kw) as i64 + 3) as usize;
+    let in_c = rng.range(1, 9) as usize;
+    let nk = rng.range(1, 9) as usize;
+    let mut in_h = rng.range(1, 14) as usize;
+    let mut in_w = rng.range(1, 14) as usize;
+    // At least one output position: in + 2*pad >= kernel.
+    if (in_h + 2 * pad) < kh {
+        in_h = kh - 2 * pad;
+    }
+    if (in_w + 2 * pad) < kw {
+        in_w = kw - 2 * pad;
+    }
+    ConvSpec { in_c, in_h, in_w, nk, kh, kw, stride, pad, relu: rng.below(2) == 0 }
+}
+
+#[test]
+fn im2col_gemm_conv_matches_direct_nest() {
+    prop::check("conv im2col vs direct", |rng| {
+        let spec = random_spec(rng);
+        let batch = rng.range(1, 4) as usize;
+        let x = random_tensor(rng, vec![batch, spec.in_c, spec.in_h, spec.in_w]);
+        let w = random_tensor(rng, vec![spec.nk, spec.in_c, spec.kh, spec.kw]);
+        let b = random_tensor(rng, vec![spec.nk]);
+        let direct = seq::conv_nchw(&x, &w, &b, &spec);
+        for opts in [KernelOpts::seq(), KernelOpts::tiled(), KernelOpts { threads: 8, tile: 16 }]
+        {
+            let lowered = kernels::conv_im2col_unpacked(&x, &w, &b, &spec, opts);
+            prop_assert!(
+                lowered.shape() == direct.shape(),
+                "shape {:?} vs {:?} for {spec:?}",
+                lowered.shape(),
+                direct.shape()
+            );
+            let diff = lowered.max_abs_diff(&direct);
+            prop_assert!(diff < 1e-4, "diff {diff} for {spec:?} batch {batch} ({opts:?})");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn tiled_direct_conv_bit_identical_to_sequential() {
+    prop::check("conv direct tiled vs seq", |rng| {
+        let spec = random_spec(rng);
+        let x = random_tensor(rng, vec![1, spec.in_c, spec.in_h, spec.in_w]);
+        let w = random_tensor(rng, vec![spec.nk, spec.in_c, spec.kh, spec.kw]);
+        let b = random_tensor(rng, vec![spec.nk]);
+        let a = kernels::conv_direct(&x, &w, &b, &spec, KernelOpts::seq());
+        let t = kernels::conv_direct(&x, &w, &b, &spec, KernelOpts::tiled());
+        prop_assert!(a == t, "tiled direct conv diverged for {spec:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn tiled_fc_bit_identical_to_sequential() {
+    prop::check("fc tiled vs seq", |rng| {
+        let n = rng.range(1, 5) as usize;
+        let d_in = rng.range(1, 600) as usize;
+        let d_out = rng.range(1, 80) as usize;
+        let relu = rng.below(2) == 0;
+        let x = random_tensor(rng, vec![n, d_in]);
+        let w = random_tensor(rng, vec![d_in, d_out]);
+        let b = random_tensor(rng, vec![d_out]);
+        let s = seq::fc(&x, &w, &b, relu);
+        let t = kernels::fc(&x, &w, &b, relu, KernelOpts { threads: 8, tile: 16 });
+        prop_assert!(s == t, "fc diverged for n={n} d_in={d_in} d_out={d_out}");
+        Ok(())
+    });
+}
+
+#[test]
+fn tiled_pool_and_lrn_bit_identical_to_sequential() {
+    prop::check("pool/lrn tiled vs seq", |rng| {
+        let n = rng.range(1, 3) as usize;
+        let c = rng.range(1, 9) as usize;
+        let h = rng.range(2, 20) as usize;
+        let w = rng.range(2, 20) as usize;
+        let size = rng.range(1, 5) as usize;
+        let stride = rng.range(1, 4) as usize;
+        let x = random_tensor(rng, vec![n, c, h, w]);
+        let opts = KernelOpts { threads: 8, tile: 16 };
+        prop_assert!(
+            kernels::maxpool_nchw(&x, size, stride, opts) == seq::maxpool_nchw(&x, size, stride),
+            "maxpool diverged: {n}x{c}x{h}x{w} size {size} stride {stride}"
+        );
+        prop_assert!(
+            kernels::avgpool_nchw(&x, size, stride, opts) == seq::avgpool_nchw(&x, size, stride),
+            "avgpool diverged: {n}x{c}x{h}x{w} size {size} stride {stride}"
+        );
+        prop_assert!(
+            kernels::lrn_nchw(&x, 5, 1e-4, 0.75, 1.0, opts)
+                == seq::lrn_nchw(&x, 5, 1e-4, 0.75, 1.0),
+            "lrn diverged: {n}x{c}x{h}x{w}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn packed_forward_matches_baseline_forward() {
+    prop::check("packed forward vs baseline", |rng| {
+        let net = zoo::lenet5();
+        let pairs = net
+            .param_shapes()
+            .into_iter()
+            .map(|(name, ws, bs)| {
+                let wn: usize = ws.iter().product();
+                let bn: usize = bs.iter().product();
+                (
+                    name,
+                    Tensor::new(ws, rng.normal_vec(wn, 0.1)),
+                    Tensor::new(bs, rng.normal_vec(bn, 0.1)),
+                )
+            })
+            .collect();
+        let params = cnndroid::model::weights::Params { pairs };
+        let x = random_tensor(rng, vec![1, 1, 28, 28]);
+        let baseline = cnndroid::cpu::forward_seq(&net, &params, &x)
+            .map_err(|e| format!("baseline forward failed: {e}"))?;
+        let packed = kernels::PackedModel::prepare(&net, &params)
+            .map_err(|e| format!("prepare failed: {e}"))?;
+        let fast = cnndroid::cpu::forward_packed(
+            &net,
+            &params,
+            &packed,
+            &x,
+            &cnndroid::cpu::ForwardOpts::fast(),
+        )
+        .map_err(|e| format!("packed forward failed: {e}"))?;
+        let diff = fast.max_abs_diff(&baseline);
+        prop_assert!(diff < 1e-3, "fast vs baseline diff {diff}");
+        Ok(())
+    });
+}
+
+/// Acceptance bar: `delegate:auto` plans must select the im2col
+/// lowering wherever the cost model predicts it beats the direct nest
+/// AND no accelerator undercuts both.  With a CPU-only registry (no
+/// artifacts — the fallback deployment) every zoo conv layer satisfies
+/// that, so every conv must land on `cpu-gemm` with the im2col kernel
+/// variant in the lowered plan.
+#[test]
+fn auto_plans_select_im2col_where_cost_predicts_a_win() {
+    use cnndroid::coordinator::plan::LayerPlan;
+    use cnndroid::kernels::KernelVariant;
+    for dev in all_devices() {
+        let reg = Registry::cpu_only();
+        let partitioner = Partitioner::new(&reg, &dev);
+        for net in zoo::all() {
+            // Pre-condition (itself asserted): the GEMM model predicts
+            // a win on every zoo conv shape.
+            for (name, spec) in net.conv_specs() {
+                assert!(
+                    cost::conv_time_cpu_gemm(&dev, &spec, 1) < cost::conv_time_seq(&dev, &spec),
+                    "{}/{}/{name}: cost model no longer predicts an im2col win",
+                    dev.name,
+                    net.name
+                );
+            }
+            let rep = partitioner.partition(&net).unwrap();
+            for (li, a) in rep.assignments.iter().enumerate() {
+                if a.kind != "conv" {
+                    continue;
+                }
+                assert_eq!(a.backend, "cpu-gemm", "{}/{}/{}", dev.name, net.name, a.layer);
+                match &rep.plan.layers[li] {
+                    LayerPlan::ConvCpu { variant, tiled, .. } => {
+                        assert_eq!(*variant, KernelVariant::Im2col, "{}", a.layer);
+                        assert!(*tiled, "{}", a.layer);
+                    }
+                    other => panic!("{}: expected ConvCpu, got {other:?}", a.layer),
+                }
+            }
+        }
+    }
+}
+
+/// With the full simulated registry the same rule produces a split:
+/// LeNet's dispatch-dominated convs pick the im2col CPU lowering,
+/// AlexNet's heavy stride-1 convs still accelerate.
+#[test]
+fn auto_plans_split_lowering_by_cost_with_accelerators_present() {
+    let dev = all_devices().remove(0);
+    let reg = Registry::simulated();
+    let partitioner = Partitioner::new(&reg, &dev);
+    let lenet = partitioner.partition(&zoo::lenet5()).unwrap();
+    for a in lenet.assignments.iter().filter(|a| a.kind == "conv") {
+        assert_eq!(a.backend, "cpu-gemm", "lenet {}", a.layer);
+    }
+    let alex = partitioner.partition(&zoo::alexnet()).unwrap();
+    let conv2 = alex.assignments.iter().find(|a| a.layer == "conv2").unwrap();
+    assert!(!conv2.backend.starts_with("cpu"), "alexnet conv2 on {}", conv2.backend);
+}
