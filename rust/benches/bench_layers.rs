@@ -13,7 +13,7 @@
 //! tracked in CI from this PR on.
 
 use cnndroid::cpu::{par, seq};
-use cnndroid::kernels::{self, KernelOpts, PackedConv};
+use cnndroid::kernels::{self, KernelOpts, PackedConv, PackedConvQ8, PackedFcQ8};
 use cnndroid::model::manifest::{default_dir, Manifest};
 use cnndroid::model::zoo;
 use cnndroid::runtime::Runtime;
@@ -77,6 +77,40 @@ fn kernel_core_cases(
     records
 }
 
+/// f32 vs q8 on one conv shape; returns the JSON record (None when the
+/// cases were filtered out).
+fn q8_conv_case(
+    b: &mut Bench,
+    name: &str,
+    spec: &cnndroid::model::network::ConvSpec,
+    seed: u64,
+) -> Option<Json> {
+    let x = random(vec![1, spec.in_c, spec.in_h, spec.in_w], seed);
+    let w = random(vec![spec.nk, spec.in_c, spec.kh, spec.kw], seed + 1);
+    let bias = random(vec![spec.nk], seed + 2);
+    let packed = PackedConv::pack(spec, &w, &bias);
+    let packed_q8 = PackedConvQ8::pack(spec, &w, &bias);
+    let f32_name = format!("q8/{name}/conv-f32-tiled");
+    let q8_name = format!("q8/{name}/conv-q8-tiled");
+    b.case(&f32_name, || {
+        kernels::conv_im2col(&x, &packed, KernelOpts::tiled());
+    });
+    b.case(&q8_name, || {
+        kernels::conv_im2col_q8(&x, &packed_q8, KernelOpts::tiled());
+    });
+    let (Some(f), Some(q)) = (b.mean_of(&f32_name), b.mean_of(&q8_name)) else {
+        return None;
+    };
+    Some(Json::obj(vec![
+        ("layer", Json::str(name)),
+        ("kind", Json::str("conv")),
+        ("signature", Json::str(spec.signature())),
+        ("f32_ms", Json::num(f.as_secs_f64() * 1e3)),
+        ("q8_ms", Json::num(q.as_secs_f64() * 1e3)),
+        ("speedup", Json::num(f.as_secs_f64() / q.as_secs_f64())),
+    ]))
+}
+
 fn main() {
     let mut b = Bench::new("layer substrates");
 
@@ -109,6 +143,98 @@ fn main() {
             Err(e) => eprintln!("  (could not write {path}: {e})"),
         }
         b.speedup_table("kernel/alexnet-conv2/direct-seq");
+    }
+
+    // --- q8: the quantized path vs f32 on the traffic-bound shapes
+    //     (AlexNet fc6 is the ISSUE-3 acceptance shape: weight traffic
+    //     drops 4x, so the GEMM must come out >= 1.5x faster), plus the
+    //     fixture-set accuracy guardrail.  Emits BENCH_q8.json. ---
+    let mut q8_records = Vec::new();
+    {
+        // AlexNet fc6: 9216 -> 4096, the heaviest FC matvec.
+        let (d_in, d_out) = (9216usize, 4096usize);
+        let x = random(vec![1, d_in], 80);
+        let w = random(vec![d_in, d_out], 81);
+        let bias = random(vec![d_out], 82);
+        let packed_fc = PackedFcQ8::pack(&w, &bias, true);
+        let f32_seq = "q8/alexnet-fc6/gemm-f32-seq";
+        let f32_tiled = "q8/alexnet-fc6/gemm-f32-tiled";
+        let q8_seq = "q8/alexnet-fc6/gemm-q8-seq";
+        let q8_tiled = "q8/alexnet-fc6/gemm-q8-tiled";
+        b.case(f32_seq, || {
+            kernels::fc(&x, &w, &bias, true, KernelOpts::seq());
+        });
+        b.case(f32_tiled, || {
+            kernels::fc(&x, &w, &bias, true, KernelOpts::tiled());
+        });
+        b.case(q8_seq, || {
+            kernels::fc_q8(&x, &packed_fc, KernelOpts::seq());
+        });
+        b.case(q8_tiled, || {
+            kernels::fc_q8(&x, &packed_fc, KernelOpts::tiled());
+        });
+        if let (Some(fs), Some(ft), Some(qs), Some(qt)) = (
+            b.mean_of(f32_seq),
+            b.mean_of(f32_tiled),
+            b.mean_of(q8_seq),
+            b.mean_of(q8_tiled),
+        ) {
+            q8_records.push(Json::obj(vec![
+                ("layer", Json::str("alexnet-fc6")),
+                ("kind", Json::str("fc")),
+                ("signature", Json::str(format!("fc_{d_in}x{d_out}"))),
+                ("f32_seq_ms", Json::num(fs.as_secs_f64() * 1e3)),
+                ("f32_ms", Json::num(ft.as_secs_f64() * 1e3)),
+                ("q8_seq_ms", Json::num(qs.as_secs_f64() * 1e3)),
+                ("q8_ms", Json::num(qt.as_secs_f64() * 1e3)),
+                ("speedup_seq", Json::num(fs.as_secs_f64() / qs.as_secs_f64())),
+                ("speedup", Json::num(ft.as_secs_f64() / qt.as_secs_f64())),
+            ]));
+        }
+        // AlexNet conv2 + the other zoo heaviest convs.
+        if let Some(r) = q8_conv_case(&mut b, "alexnet-conv2", &pick("conv2"), 84) {
+            q8_records.push(r);
+        }
+        if let Some(r) = q8_conv_case(&mut b, le_label.as_str(), &lespec, 88) {
+            q8_records.push(r);
+        }
+        if let Some(r) = q8_conv_case(&mut b, ci_label.as_str(), &cispec, 92) {
+            q8_records.push(r);
+        }
+    }
+    if !q8_records.is_empty() {
+        // Accuracy guardrail on the bundled fixture set: the shared
+        // synthetic LeNet weights (seed 45 — the stream prop_quant
+        // asserts 100% agreement on), the ten canonical digit renders,
+        // top-1 agreement q8 vs f32.
+        let net = zoo::lenet5();
+        let params = cnndroid::model::weights::Params::synthetic(&net, 45, 0.1);
+        let (agree, total) =
+            cnndroid::delegate::q8_agreement(&net, &params).expect("guardrail runs");
+        println!(
+            "  q8 guardrail: {agree}/{total} top-1 agreement vs f32 on the fixture set"
+        );
+        let doc = Json::obj(vec![
+            ("bench", Json::str("bench_layers/q8")),
+            ("unit", Json::str("ms")),
+            (
+                "guardrail",
+                Json::obj(vec![
+                    ("net", Json::str("lenet5")),
+                    ("fixtures", Json::str("canonical digits 0-9")),
+                    ("agree", Json::num(agree as f64)),
+                    ("total", Json::num(total as f64)),
+                    ("top1_agreement", Json::num(agree as f64 / total.max(1) as f64)),
+                ]),
+            ),
+            ("cases", Json::arr(q8_records)),
+        ]);
+        let path = "BENCH_q8.json";
+        match std::fs::write(path, doc.dump()) {
+            Ok(()) => println!("  (q8 results written to {path})"),
+            Err(e) => eprintln!("  (could not write {path}: {e})"),
+        }
+        b.speedup_table("q8/alexnet-fc6/gemm-f32-tiled");
     }
 
     // --- layout swaps (the "dimension swapping" cost the Fig. 5

@@ -86,15 +86,24 @@ impl Engine {
             .ok_or_else(|| anyhow::anyhow!("unknown network {net_name:?}"))?
             .clone();
         let params = load_weights(manifest, &net)?;
-        // "delegate:auto[:<device>]" routes plan construction through
-        // the cost-driven partitioner over detected backends, degrading
-        // to CPU per the fallback policy rather than erroring; fixed
+        // "delegate:auto[:<device>][:q8]" routes plan construction
+        // through the cost-driven partitioner over detected backends,
+        // degrading to CPU per the fallback policy rather than
+        // erroring; the ":q8" opt-in additionally lets the quantized
+        // backend compete once the accuracy guardrail passes.  Fixed
         // methods keep the hand-authored DESIGN §7 plans (strict, so
-        // config errors surface).
-        let plan = match crate::delegate::auto_device(&cfg.method)? {
-            Some(dev) => {
-                let outcome =
-                    crate::delegate::plan_or_fallback(manifest, &net, &cfg.method, &dev)?;
+        // config errors surface) — including "cpu-gemm-q8", which
+        // forces the full quantized CPU path.
+        let plan = match crate::delegate::auto_spec(&cfg.method)? {
+            Some(spec) => {
+                let q8_params = if spec.q8 { Some(&params) } else { None };
+                let outcome = crate::delegate::plan_or_fallback(
+                    manifest,
+                    &net,
+                    &cfg.method,
+                    &spec.dev,
+                    q8_params,
+                )?;
                 for note in &outcome.notes {
                     eprintln!("[engine] {}/{}: {note}", net.name, cfg.method);
                 }
@@ -128,10 +137,12 @@ impl Engine {
             }
         }
 
-        // Pack GEMM-ready weights only for the conv layers this plan
-        // actually dispatches as im2col (fixed-method plans are all
-        // direct; accelerated layers never read the cache) — no point
-        // duplicating conv-weight memory for anything else.
+        // Pack GEMM-ready weights only for the layers this plan
+        // actually dispatches through the kernel caches: f32 im2col
+        // convs get the f32 pack, q8-placed conv/FC layers get the i8
+        // pack (a mixed-precision plan packs each layer exactly once in
+        // the precision it executes).  Fixed-method direct plans and
+        // accelerated layers never read either cache.
         let im2col_convs: std::collections::BTreeSet<String> = plan
             .layers
             .iter()
@@ -142,10 +153,16 @@ impl Engine {
                 _ => None,
             })
             .collect();
-        let packed = if im2col_convs.is_empty() {
+        let q8_layers: std::collections::BTreeSet<String> = plan
+            .layers
+            .iter()
+            .filter(|l| l.on_q8())
+            .map(|l| l.name().to_string())
+            .collect();
+        let packed = if im2col_convs.is_empty() && q8_layers.is_empty() {
             PackedModel::default()
         } else {
-            PackedModel::prepare_for(&net, &params, &im2col_convs)?
+            PackedModel::prepare_mixed(&net, &params, Some(&im2col_convs), Some(&q8_layers))?
         };
         let engine = Engine {
             runtime,
@@ -306,6 +323,13 @@ impl Engine {
                     }
                 }
             }
+            LayerPlan::ConvCpuQ8 { name, .. } => {
+                let pc = self
+                    .packed
+                    .conv_q8(&name)
+                    .ok_or_else(|| anyhow::anyhow!("no packed q8 conv for {name}"))?;
+                Ok(kernels::conv_im2col_q8(&act, pc, KernelOpts::tiled()))
+            }
             LayerPlan::Pool { mode, size, stride, relu, parallel, .. } => {
                 let opts = if parallel { KernelOpts::tiled() } else { KernelOpts::seq() };
                 let mut out = match mode {
@@ -328,6 +352,13 @@ impl Engine {
                     .get(&name)
                     .ok_or_else(|| anyhow::anyhow!("missing weights for {name}"))?;
                 Ok(kernels::fc(&flatten(act), w, b, relu, opts))
+            }
+            LayerPlan::FcCpuQ8 { name, .. } => {
+                let pf = self
+                    .packed
+                    .fc_q8(&name)
+                    .ok_or_else(|| anyhow::anyhow!("no packed q8 fc for {name}"))?;
+                Ok(kernels::fc_q8(&flatten(act), pf, KernelOpts::tiled()))
             }
             LayerPlan::FcAccel { name, artifact_b1, artifact_b16, .. } => {
                 let x = flatten(act);
@@ -493,6 +524,30 @@ mod tests {
             let got = eng.infer_batch(&imgs).unwrap();
             let diff = got.max_abs_diff(&baseline);
             assert!(diff < 1e-3, "{method}: diff {diff}");
+        }
+    }
+
+    #[test]
+    fn q8_methods_agree_with_the_reference_labels() {
+        // The forced q8 plan and the q8-opt-in auto plan both classify
+        // the trained model's digits identically to the f32 baseline
+        // (the guardrail's bar, here at engine level); logits may
+        // differ within quantization error.
+        let dir = default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let (imgs, _) = crate::data::synth::make_dataset(4, 31, 0.05);
+        let baseline: Vec<usize> = {
+            let eng = engine("lenet5", "cpu-seq").unwrap();
+            eng.classify(&imgs).unwrap().into_iter().map(|(l, _)| l).collect()
+        };
+        for method in ["cpu-gemm-q8", "delegate:auto:q8", "delegate:auto:m9:q8"] {
+            let eng = engine("lenet5", method).unwrap();
+            let labels: Vec<usize> =
+                eng.classify(&imgs).unwrap().into_iter().map(|(l, _)| l).collect();
+            assert_eq!(labels, baseline, "{method}");
         }
     }
 

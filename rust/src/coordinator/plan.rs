@@ -65,6 +65,11 @@ pub enum LayerPlan {
     /// delegate's `cpu-gemm` backend lowers to im2col+GEMM with
     /// tile-parallelism.
     ConvCpu { name: String, spec: ConvSpec, variant: KernelVariant, tiled: bool },
+    /// Convolution on the quantized CPU kernel core (i8 weights from
+    /// the `PackedModel` q8 cache, dynamic u8 activations, i32
+    /// accumulators) — the `cpu-gemm-q8` backend's lowering.  Always
+    /// tile-parallel.
+    ConvCpuQ8 { name: String, spec: ConvSpec },
     /// Pooling on CPU (multithreaded in accelerated plans, §6.3).
     Pool { name: String, mode: PoolMode, size: usize, stride: usize, relu: bool, parallel: bool },
     /// LRN on CPU.
@@ -83,6 +88,9 @@ pub enum LayerPlan {
     /// Fully connected on the CPU kernel core (tile-parallel GEMM when
     /// `tiled`).
     FcCpu { name: String, relu: bool, tiled: bool },
+    /// Fully connected on the quantized CPU kernel core (i8 matvec
+    /// over the q8 weight cache).  Always tile-parallel.
+    FcCpuQ8 { name: String, relu: bool },
 }
 
 impl LayerPlan {
@@ -90,16 +98,23 @@ impl LayerPlan {
         match self {
             LayerPlan::ConvAccel { name, .. }
             | LayerPlan::ConvCpu { name, .. }
+            | LayerPlan::ConvCpuQ8 { name, .. }
             | LayerPlan::Pool { name, .. }
             | LayerPlan::Lrn { name, .. }
             | LayerPlan::FcAccel { name, .. }
-            | LayerPlan::FcCpu { name, .. } => name,
+            | LayerPlan::FcCpu { name, .. }
+            | LayerPlan::FcCpuQ8 { name, .. } => name,
         }
     }
 
     /// True when the stage dispatches to the accelerator.
     pub fn on_accel(&self) -> bool {
         matches!(self, LayerPlan::ConvAccel { .. } | LayerPlan::FcAccel { .. })
+    }
+
+    /// True when the stage executes through the quantized i8 kernels.
+    pub fn on_q8(&self) -> bool {
+        matches!(self, LayerPlan::ConvCpuQ8 { .. } | LayerPlan::FcCpuQ8 { .. })
     }
 }
 
@@ -115,9 +130,13 @@ pub struct ExecutionPlan {
 
 impl ExecutionPlan {
     /// Build the plan for `method`, resolving artifacts in `manifest`.
-    /// `method == "cpu-seq"` needs no artifacts.
+    /// `method == "cpu-seq"` needs no artifacts; `method ==
+    /// "cpu-gemm-q8"` forces the full quantized CPU path (conv/FC on
+    /// the i8 kernels, pool/LRN on CPU threads) and also needs none —
+    /// the way to *force* q8 serving regardless of the cost model.
     pub fn build(manifest: &Manifest, net: &Network, method: &str) -> Result<ExecutionPlan> {
-        let accel = method != "cpu-seq";
+        let q8 = method == crate::CPU_GEMM_Q8;
+        let accel = !q8 && method != "cpu-seq";
         let nhwc = NHWC_METHODS.contains(&method);
         anyhow::ensure!(
             !accel || manifest.methods.iter().any(|m| m == method),
@@ -134,7 +153,9 @@ impl ExecutionPlan {
             let plan = match layer {
                 Layer::Conv { name, .. } => {
                     let spec = specs[name.as_str()];
-                    if accel {
+                    if q8 {
+                        LayerPlan::ConvCpuQ8 { name: name.clone(), spec }
+                    } else if accel {
                         let meta = manifest
                             .find_conv(&spec.signature(), method, 1)
                             .ok_or_else(|| {
@@ -166,7 +187,7 @@ impl ExecutionPlan {
                     size: *size,
                     stride: *stride,
                     relu: *relu,
-                    parallel: accel,
+                    parallel: accel || q8,
                 },
                 Layer::Lrn { name, size, alpha, beta, k } => LayerPlan::Lrn {
                     name: name.clone(),
@@ -174,10 +195,12 @@ impl ExecutionPlan {
                     alpha: *alpha,
                     beta: *beta,
                     k: *k,
-                    parallel: accel,
+                    parallel: accel || q8,
                 },
                 Layer::Fc { name, out, relu } => {
-                    if fc_accel {
+                    if q8 {
+                        LayerPlan::FcCpuQ8 { name: name.clone(), relu: *relu }
+                    } else if fc_accel {
                         let (_, wshape, _) = params
                             .iter()
                             .find(|(n, _, _)| n == name)
@@ -330,5 +353,21 @@ mod tests {
         let m = empty_manifest(&[]);
         let plan = ExecutionPlan::build(&m, &zoo::alexnet(), "cpu-seq").unwrap();
         assert!(plan.layers.iter().all(|l| !l.on_accel()));
+    }
+
+    #[test]
+    fn forced_q8_plan_quantizes_conv_and_fc_without_artifacts() {
+        let m = empty_manifest(&[]);
+        let plan = ExecutionPlan::build(&m, &zoo::lenet5(), crate::CPU_GEMM_Q8).unwrap();
+        assert!(plan.layers.iter().all(|l| !l.on_accel()));
+        assert!(plan.artifacts().is_empty());
+        assert!(!plan.nhwc);
+        // conv1, conv2, fc1, fc2 all ride the i8 kernels...
+        assert_eq!(plan.layers.iter().filter(|l| l.on_q8()).count(), 4);
+        // ...and pool layers run on CPU threads like accelerated plans.
+        assert!(plan
+            .layers
+            .iter()
+            .any(|l| matches!(l, LayerPlan::Pool { parallel: true, .. })));
     }
 }

@@ -120,6 +120,68 @@ pub fn forward_packed(
     Ok(h)
 }
 
+/// Run the full forward path in the quantized serving mode: conv and
+/// FC layers execute through the i8/u8 q8 kernels (weights from the
+/// `packed` q8 cache — [`PackedModel::prepare_q8`] — activations
+/// quantized dynamically at each layer entry), pool/LRN stay f32.
+/// This is the numeric path the `cpu-gemm-q8` backend lowers to and
+/// the reference the accuracy guardrail compares against f32.
+pub fn forward_q8(
+    net: &Network,
+    packed: &PackedModel,
+    x: &Tensor,
+    opts: kernels::KernelOpts,
+) -> Result<Tensor> {
+    anyhow::ensure!(
+        x.shape()[1..] == [net.in_c, net.in_h, net.in_w],
+        "input shape {:?} does not match {} ({},{},{})",
+        x.shape(),
+        net.name,
+        net.in_c,
+        net.in_h,
+        net.in_w
+    );
+    let mut h = x.clone();
+    for layer in &net.layers {
+        match layer {
+            Layer::Conv { name, .. } => {
+                let pc = packed
+                    .conv_q8(name)
+                    .ok_or_else(|| anyhow::anyhow!("no packed q8 conv for {name}"))?;
+                h = kernels::conv_im2col_q8(&h, pc, opts);
+            }
+            Layer::Pool { mode, size, stride, relu, .. } => {
+                h = match mode {
+                    crate::model::network::PoolMode::Max => {
+                        kernels::maxpool_nchw(&h, *size, *stride, opts)
+                    }
+                    crate::model::network::PoolMode::Avg => {
+                        kernels::avgpool_nchw(&h, *size, *stride, opts)
+                    }
+                };
+                if *relu {
+                    h.relu_inplace();
+                }
+            }
+            Layer::Lrn { size, alpha, beta, k, .. } => {
+                h = kernels::lrn_nchw(&h, *size, *alpha, *beta, *k, opts);
+            }
+            Layer::Fc { name, .. } => {
+                let pf = packed
+                    .fc_q8(name)
+                    .ok_or_else(|| anyhow::anyhow!("no packed q8 fc for {name}"))?;
+                if h.shape().len() == 4 {
+                    let n = h.dim(0);
+                    let d = h.len() / n;
+                    h = h.reshape(vec![n, d]);
+                }
+                h = kernels::fc_q8(&h, pf, opts);
+            }
+        }
+    }
+    Ok(h)
+}
+
 /// Classify a batch: argmax of the logits per frame (shared
 /// [`Tensor::argmax_rows`] helper).
 pub fn classify(net: &Network, params: &Params, x: &Tensor) -> Result<Vec<usize>> {

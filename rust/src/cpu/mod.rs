@@ -20,4 +20,4 @@ pub mod forward;
 pub mod par;
 pub mod seq;
 
-pub use forward::{forward_packed, forward_seq, ForwardOpts};
+pub use forward::{forward_packed, forward_q8, forward_seq, ForwardOpts};

@@ -57,11 +57,12 @@ pub struct Capability {
     /// Boundary activation layout; the partitioner charges an
     /// NCHW<->NHWC swap at every boundary where it changes.
     pub layout: DataLayout,
-    /// Frames per dispatch (None = unbounded).  Advisory metadata for
-    /// now: the engine already pipelines frames serially through
-    /// batch-1 accelerator artifacts, so nothing enforces it yet; a
-    /// backend with a real dispatch-batch ceiling gets enforcement when
-    /// the partitioner grows batch-aware costing.
+    /// Frames per dispatch (None = unbounded).  ENFORCED by the
+    /// partitioner: `Partitioner::with_batch(n)` excludes backends
+    /// whose ceiling is below `n` from the solve, so over-batch
+    /// placements are rejected rather than silently accepted.  (The
+    /// engine still pipelines frames serially through batch-1
+    /// accelerator artifacts for plans built at the default batch 1.)
     pub max_batch: Option<usize>,
     /// Placements must resolve AOT artifacts from the manifest.
     pub needs_artifacts: bool,
@@ -358,6 +359,87 @@ impl Backend for CpuGemmBackend {
 }
 
 // ---------------------------------------------------------------------
+// CPU quantized im2col+GEMM (i8 weights, dynamic u8 activations)
+// ---------------------------------------------------------------------
+
+/// Quantized CPU kernels: conv and FC through the i8 x u8 -> i32 GEMM
+/// at ~4x weight density ([`crate::kernels::quant`]).  Registered
+/// *conditionally*: `delegate:auto...:q8` adds it only after the
+/// accuracy guardrail ([`super::q8_eligible`]) confirms 100% top-1
+/// agreement with the f32 reference on the fixture set.  Once in the
+/// registry, the DP mixes precisions per layer: traffic-bound layers
+/// (big FC, heavy convs) go q8, dispatch-dominated layers stay on
+/// `cpu-gemm` because the dynamic-quantization streaming passes
+/// ([`cost::quant_time`]) outweigh the MAC savings there.
+pub struct CpuGemmQ8Backend {
+    cap: Capability,
+}
+
+impl CpuGemmQ8Backend {
+    pub fn new() -> CpuGemmQ8Backend {
+        CpuGemmQ8Backend {
+            cap: Capability {
+                kinds: vec!["conv", "fc"],
+                layout: DataLayout::Nchw,
+                max_batch: None,
+                needs_artifacts: false,
+                kernel: KernelVariant::Im2col,
+            },
+        }
+    }
+}
+
+impl Default for CpuGemmQ8Backend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Backend for CpuGemmQ8Backend {
+    fn name(&self) -> &str {
+        crate::CPU_GEMM_Q8
+    }
+
+    fn capability(&self) -> &Capability {
+        &self.cap
+    }
+
+    fn supports(&self, net: &Network, li: usize) -> bool {
+        self.cap.supports_kind(net.layers[li].kind())
+    }
+
+    fn predict(&self, dev: &DeviceSpec, net: &Network, li: usize) -> f64 {
+        // Same reproducibility rule as CpuGemmBackend: thread count
+        // from the device profile, not the host pool.
+        let threads = dev.cpu_big_cores.max(1) as usize;
+        let ((ic, ih, iw), _) = io_of(net, li);
+        match &net.layers[li] {
+            Layer::Conv { .. } => {
+                let spec = conv_spec_for(net, li).expect("conv layer has a spec");
+                cost::conv_time_cpu_gemm_q8(dev, &spec, threads)
+            }
+            Layer::Fc { out, .. } => cost::fc_time_cpu_gemm_q8(dev, ic * ih * iw, *out, threads),
+            _ => f64::INFINITY,
+        }
+    }
+
+    fn lower(&self, net: &Network, li: usize) -> Result<LayerPlan> {
+        Ok(match &net.layers[li] {
+            Layer::Conv { name, .. } => LayerPlan::ConvCpuQ8 {
+                name: name.clone(),
+                spec: conv_spec_for(net, li).expect("conv layer has a spec"),
+            },
+            Layer::Fc { name, relu, .. } => {
+                LayerPlan::FcCpuQ8 { name: name.clone(), relu: *relu }
+            }
+            other => {
+                anyhow::bail!("cpu-gemm-q8 cannot run {} layer {}", other.kind(), other.name())
+            }
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
 // Accelerator (PJRT runtime artifacts, one backend per method)
 // ---------------------------------------------------------------------
 
@@ -581,6 +663,53 @@ mod tests {
                         layer.name()
                     );
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn cpu_gemm_q8_lowers_to_quantized_plan_entries() {
+        let b = CpuGemmQ8Backend::new();
+        let net = zoo::lenet5();
+        for (li, layer) in net.layers.iter().enumerate() {
+            let want = matches!(layer.kind(), "conv" | "fc");
+            assert_eq!(b.supports(&net, li), want, "{}", layer.name());
+        }
+        match b.lower(&net, 0).unwrap() {
+            LayerPlan::ConvCpuQ8 { name, spec } => {
+                assert_eq!(name, "conv1");
+                assert_eq!(spec.nk, 20);
+            }
+            other => panic!("expected ConvCpuQ8, got {other:?}"),
+        }
+        match b.lower(&net, 4).unwrap() {
+            LayerPlan::FcCpuQ8 { name, relu } => {
+                assert_eq!(name, "fc1");
+                assert!(relu);
+            }
+            other => panic!("expected FcCpuQ8, got {other:?}"),
+        }
+        assert!(b.lower(&net, 1).is_err(), "pool must not lower on cpu-gemm-q8");
+    }
+
+    #[test]
+    fn q8_beats_f32_gemm_exactly_where_traffic_dominates() {
+        // The cost contract behind mixed plans: q8 wins AlexNet's fc6,
+        // loses LeNet's tiny convs to the quantization overhead.
+        let dev = galaxy_note4();
+        let gemm = CpuGemmBackend::new();
+        let q8 = CpuGemmQ8Backend::new();
+        let alex = zoo::alexnet();
+        let fc6 = alex.layers.iter().position(|l| l.name() == "fc6").unwrap();
+        assert!(q8.predict(&dev, &alex, fc6) < gemm.predict(&dev, &alex, fc6));
+        let lenet = zoo::lenet5();
+        for (li, layer) in lenet.layers.iter().enumerate() {
+            if layer.kind() == "conv" {
+                assert!(
+                    gemm.predict(&dev, &lenet, li) < q8.predict(&dev, &lenet, li),
+                    "{}: q8 should lose dispatch-dominated convs",
+                    layer.name()
+                );
             }
         }
     }

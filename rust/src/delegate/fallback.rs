@@ -16,10 +16,11 @@
 use crate::coordinator::plan::{ExecutionPlan, MissingArtifact};
 use crate::model::manifest::Manifest;
 use crate::model::network::Network;
+use crate::model::weights::Params;
 use crate::simulator::device::DeviceSpec;
 use crate::Result;
 
-use super::{is_auto, plan_auto};
+use super::{is_auto, plan_auto_with, q8_agreement};
 
 /// A plan plus the human-readable trail of any fallback decisions.
 #[derive(Debug, Clone)]
@@ -37,15 +38,40 @@ pub fn is_retryable(err: &anyhow::Error) -> bool {
 }
 
 /// Build a plan for `method`, falling back per the policy above.
+///
+/// `q8_params`: pass the loaded weights to let the quantized backend
+/// compete in auto plans (the `delegate:auto...:q8` opt-in).  The
+/// accuracy guardrail runs here — `cpu-gemm-q8` only joins the
+/// registry when top-1 agreement with f32 is 100% on the fixture set —
+/// and its verdict is recorded in the notes.  `None` keeps the
+/// f32-only registries (default, and the fallback re-plan path).
 pub fn plan_or_fallback(
     manifest: &Manifest,
     net: &Network,
     method: &str,
     dev: &DeviceSpec,
+    q8_params: Option<&Params>,
 ) -> Result<FallbackOutcome> {
     let mut notes = Vec::new();
+    let q8 = match q8_params {
+        None => false,
+        Some(params) => match q8_agreement(net, params) {
+            Ok((agree, total)) if total > 0 && agree == total => true,
+            Ok((agree, total)) => {
+                notes.push(format!(
+                    "q8 requested but guardrail failed ({agree}/{total} top-1 agreement); \
+                     keeping f32 backends"
+                ));
+                false
+            }
+            Err(e) => {
+                notes.push(format!("q8 guardrail errored ({e:#}); keeping f32 backends"));
+                false
+            }
+        },
+    };
     if is_auto(method) {
-        match plan_auto(manifest, net, dev) {
+        match plan_auto_with(manifest, net, dev, q8) {
             Ok(plan) => return Ok(FallbackOutcome { plan, notes }),
             Err(e) => notes.push(format!("auto-partition failed: {e:#}")),
         }
@@ -54,7 +80,7 @@ pub fn plan_or_fallback(
             Ok(plan) => return Ok(FallbackOutcome { plan, notes }),
             Err(e) if e.downcast_ref::<MissingArtifact>().is_some() => {
                 notes.push(format!("{e}"));
-                match plan_auto(manifest, net, dev) {
+                match plan_auto_with(manifest, net, dev, false) {
                     Ok(plan) => {
                         notes.push("re-planned with delegate:auto over available backends".into());
                         return Ok(FallbackOutcome { plan, notes });
@@ -94,7 +120,7 @@ mod tests {
     fn missing_artifacts_fall_back_instead_of_erroring() {
         let m = artifactless(&["basic-simd"]);
         let dev = galaxy_note4();
-        let out = plan_or_fallback(&m, &zoo::lenet5(), "basic-simd", &dev).unwrap();
+        let out = plan_or_fallback(&m, &zoo::lenet5(), "basic-simd", &dev, None).unwrap();
         assert!(!out.notes.is_empty(), "fallback must be recorded");
         // No artifacts exist, so nothing may land on an accelerator.
         assert!(out.plan.layers.iter().all(|l| !l.on_accel()));
@@ -104,7 +130,7 @@ mod tests {
     fn auto_with_no_artifacts_degrades_to_cpu_placements() {
         let m = artifactless(&["basic-simd", "mxu"]);
         let dev = galaxy_note4();
-        let out = plan_or_fallback(&m, &zoo::cifar10(), crate::DELEGATE_AUTO, &dev).unwrap();
+        let out = plan_or_fallback(&m, &zoo::cifar10(), crate::DELEGATE_AUTO, &dev, None).unwrap();
         assert!(out.plan.layers.iter().all(|l| !l.on_accel()));
     }
 
@@ -112,7 +138,7 @@ mod tests {
     fn unknown_method_still_surfaces_as_an_error() {
         let m = artifactless(&["basic-simd"]);
         let dev = galaxy_note4();
-        assert!(plan_or_fallback(&m, &zoo::lenet5(), "warp-speed", &dev).is_err());
+        assert!(plan_or_fallback(&m, &zoo::lenet5(), "warp-speed", &dev, None).is_err());
     }
 
     #[test]

@@ -6,8 +6,8 @@
 //! later generalized this: a runtime that "distributes the computation
 //! workload across available on-device processors" from capability
 //! descriptions and per-layer costs.  This module is that seam for our
-//! engine — the place every future backend (quantized, sharded,
-//! remote) plugs in:
+//! engine — the place every new backend (sharded, remote, ...) plugs
+//! in, and where the quantized `cpu-gemm-q8` backend already has:
 //!
 //! * [`backend`] — the [`Backend`] trait with [`Capability`]
 //!   descriptors, plus adapters over the existing substrates:
@@ -23,9 +23,11 @@
 //!
 //! Selected with the method string [`crate::DELEGATE_AUTO`]
 //! (`"delegate:auto"`, optionally `"delegate:auto:<device>"` with a
-//! Table-1 device profile: `note4` | `m9`), which rides everywhere a
-//! fixed method string does: `EngineConfig::method`, server model
-//! configs, and the CLI `--method` flags.
+//! Table-1 device profile: `note4` | `m9`, optionally suffixed `:q8`
+//! to let the accuracy-guardrail-gated quantized backend compete for
+//! layers), which rides everywhere a fixed method string does:
+//! `EngineConfig::method`, server model configs, and the CLI
+//! `--method` flags.
 
 pub mod backend;
 pub mod fallback;
@@ -33,16 +35,21 @@ pub mod partition;
 pub mod registry;
 
 pub use backend::{
-    AccelBackend, Backend, Capability, CpuGemmBackend, CpuParBackend, CpuSeqBackend, DataLayout,
+    AccelBackend, Backend, Capability, CpuGemmBackend, CpuGemmQ8Backend, CpuParBackend,
+    CpuSeqBackend, DataLayout,
 };
 pub use fallback::{is_retryable, plan_or_fallback, FallbackOutcome};
 pub use partition::{transition_cost, Assignment, PartitionReport, Partitioner};
 pub use registry::Registry;
 
 use crate::coordinator::plan::ExecutionPlan;
+use crate::cpu;
+use crate::kernels::{KernelOpts, PackedModel};
 use crate::model::manifest::Manifest;
 use crate::model::network::Network;
+use crate::model::weights::Params;
 use crate::simulator::device::{self, DeviceSpec};
+use crate::tensor::Tensor;
 use crate::Result;
 
 /// Is `method` a delegate-auto selector (with or without a device)?
@@ -53,32 +60,118 @@ pub fn is_auto(method: &str) -> bool {
             .is_some_and(|rest| rest.starts_with(':'))
 }
 
-/// Parse a method string: `Ok(Some(dev))` for "delegate:auto" (default
-/// device: the Galaxy Note 4, Table 1's lead platform) or
-/// "delegate:auto:<device>"; `Ok(None)` for fixed methods; `Err` for an
-/// auto selector naming an unknown device.
-pub fn auto_device(method: &str) -> Result<Option<DeviceSpec>> {
+/// Parsed delegate-auto selector: the device profile to cost against
+/// and whether the guardrail-gated quantized backend may compete.
+#[derive(Debug, Clone)]
+pub struct AutoSpec {
+    pub dev: DeviceSpec,
+    /// True when the selector carried a `:q8` segment.  q8 is opt-in:
+    /// the default auto plan keeps f32-identical numerics.
+    pub q8: bool,
+}
+
+/// Parse a method string: `Ok(Some(spec))` for
+/// `delegate:auto[:<device>][:q8|:noq8]` (default device: the Galaxy
+/// Note 4, Table 1's lead platform; default precision: f32-only);
+/// `Ok(None)` for fixed methods; `Err` for an auto selector with an
+/// unknown device or segment.
+pub fn auto_spec(method: &str) -> Result<Option<AutoSpec>> {
     let Some(rest) = method.strip_prefix(crate::DELEGATE_AUTO) else {
         return Ok(None);
     };
-    if rest.is_empty() {
-        return Ok(Some(device::galaxy_note4()));
+    if !rest.is_empty() && !rest.starts_with(':') {
+        return Ok(None); // "delegate:automatic" etc: not our selector
     }
-    let Some(name) = rest.strip_prefix(':') else {
-        return Ok(None);
+    let mut spec = AutoSpec { dev: device::galaxy_note4(), q8: false };
+    let mut dev_named = false;
+    for seg in rest.split(':').filter(|s| !s.is_empty()) {
+        match seg {
+            "q8" => spec.q8 = true,
+            "noq8" => spec.q8 = false,
+            name => match device::by_name(name) {
+                Some(dev) => {
+                    anyhow::ensure!(
+                        !dev_named,
+                        "method {method:?} names two devices ({} and {name}); pick one",
+                        spec.dev.name
+                    );
+                    spec.dev = dev;
+                    dev_named = true;
+                }
+                None => {
+                    return Err(anyhow::anyhow!(
+                        "unknown segment {name:?} in method {method:?} \
+                         (expected a device: note4 | m9, or q8 | noq8)"
+                    ))
+                }
+            },
+        }
+    }
+    Ok(Some(spec))
+}
+
+/// Back-compat device-only view of [`auto_spec`].
+pub fn auto_device(method: &str) -> Result<Option<DeviceSpec>> {
+    Ok(auto_spec(method)?.map(|s| s.dev))
+}
+
+/// The q8 accuracy guardrail: run the bundled fixture set through the
+/// f32 reference forward path and the fully-quantized forward path and
+/// count top-1 agreement.  Returns `(agreeing, total)`.
+///
+/// Fixtures: the ten canonical digit renders for 28x28x1 networks
+/// (LeNet), seeded random frames in the network's input geometry
+/// otherwise — both deterministic, so eligibility is reproducible for
+/// fixed weights.
+pub fn q8_agreement(net: &Network, params: &Params) -> Result<(usize, usize)> {
+    let frames = if (net.in_c, net.in_h, net.in_w) == (1, 28, 28) {
+        let digits: Vec<Tensor> =
+            (0..10).map(|l| crate::data::synth::render_digit(l, 0.0, 0.0, 1.0)).collect();
+        Tensor::stack(&digits)
+    } else {
+        crate::data::synth::random_frames(4, net.in_c, net.in_h, net.in_w, 2024)
     };
-    match device::by_name(name) {
-        Some(dev) => Ok(Some(dev)),
-        None => Err(anyhow::anyhow!(
-            "unknown device profile {name:?} in method {method:?} (try note4 | m9)"
-        )),
-    }
+    // One pass packs both precisions for every layer.  The caches are
+    // transient (the engine later re-packs exactly the subsets its
+    // plan dispatches, keeping steady-state memory minimal) — the
+    // guardrail is a one-time cost at plan time.
+    let packed = PackedModel::prepare_mixed(net, params, None, None)?;
+    let reference = cpu::forward_packed(net, params, &packed, &frames, &cpu::ForwardOpts::fast())?;
+    let quantized = cpu::forward_q8(net, &packed, &frames, KernelOpts::tiled())?;
+    let agree = reference
+        .argmax_rows()
+        .iter()
+        .zip(quantized.argmax_rows())
+        .filter(|((a, _), (b, _))| *a == *b)
+        .count();
+    Ok((agree, frames.dim(0)))
+}
+
+/// Does the quantized backend pass the guardrail for this model?
+/// Eligibility bar: 100% top-1 agreement with f32 on the fixture set.
+pub fn q8_eligible(net: &Network, params: &Params) -> bool {
+    matches!(q8_agreement(net, params), Ok((agree, total)) if total > 0 && agree == total)
 }
 
 /// One-call entry point: detect backends from the manifest and emit the
-/// cost-optimal plan for `net` on `dev`.
+/// cost-optimal plan for `net` on `dev` (f32 backends only).
 pub fn plan_auto(manifest: &Manifest, net: &Network, dev: &DeviceSpec) -> Result<ExecutionPlan> {
-    let registry = Registry::detect(manifest);
+    plan_auto_with(manifest, net, dev, false)
+}
+
+/// [`plan_auto`] with an explicit quantized-backend opt-in: when `q8`
+/// is true the `cpu-gemm-q8` backend joins the registry and the DP may
+/// mix precisions per layer.  Callers gate `q8` on [`q8_eligible`].
+pub fn plan_auto_with(
+    manifest: &Manifest,
+    net: &Network,
+    dev: &DeviceSpec,
+    q8: bool,
+) -> Result<ExecutionPlan> {
+    let mut registry = Registry::detect(manifest);
+    if q8 {
+        registry = registry.with_q8();
+    }
     Ok(Partitioner::new(&registry, dev).partition(net)?.plan)
 }
 
@@ -97,5 +190,33 @@ mod tests {
         assert!(auto_device("delegate:auto").unwrap().unwrap().name.contains("Note 4"));
         assert!(auto_device("delegate:auto:m9").unwrap().unwrap().name.contains("M9"));
         assert!(auto_device("delegate:auto:pixel").is_err());
+    }
+
+    #[test]
+    fn auto_spec_parses_q8_opt_in() {
+        // Default: f32-only (existing serving numerics untouched).
+        let s = auto_spec("delegate:auto").unwrap().unwrap();
+        assert!(!s.q8);
+        let s = auto_spec("delegate:auto:q8").unwrap().unwrap();
+        assert!(s.q8 && s.dev.name.contains("Note 4"));
+        let s = auto_spec("delegate:auto:m9:q8").unwrap().unwrap();
+        assert!(s.q8 && s.dev.name.contains("M9"));
+        let s = auto_spec("delegate:auto:m9:noq8").unwrap().unwrap();
+        assert!(!s.q8);
+        assert!(auto_spec("delegate:auto:q8:warp").is_err());
+        assert!(auto_spec("cpu-seq").unwrap().is_none());
+    }
+
+    #[test]
+    fn q8_guardrail_is_deterministic_on_fixture_digits() {
+        use crate::model::zoo;
+        // Synthetic LeNet weights from a fixed seed: the guardrail must
+        // return the same verdict every time (it gates registration).
+        let net = zoo::lenet5();
+        let params = Params::synthetic(&net, 45, 0.1);
+        let (a1, t1) = q8_agreement(&net, &params).unwrap();
+        let (a2, t2) = q8_agreement(&net, &params).unwrap();
+        assert_eq!((a1, t1), (a2, t2));
+        assert_eq!(t1, 10, "ten canonical digit fixtures");
     }
 }

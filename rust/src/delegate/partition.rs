@@ -76,11 +76,28 @@ pub fn transition_cost(
 pub struct Partitioner<'a> {
     registry: &'a Registry,
     dev: &'a DeviceSpec,
+    /// Frames per dispatch the plan must serve.  `Capability::max_batch`
+    /// is ENFORCED against this: a backend whose per-dispatch ceiling is
+    /// below the batch is excluded from the solve instead of silently
+    /// accepted (it used to be advisory metadata).
+    batch: usize,
 }
 
 impl<'a> Partitioner<'a> {
     pub fn new(registry: &'a Registry, dev: &'a DeviceSpec) -> Partitioner<'a> {
-        Partitioner { registry, dev }
+        Partitioner { registry, dev, batch: 1 }
+    }
+
+    /// Same partitioner, planning for `batch` frames per dispatch
+    /// (builder-style; 1 is the default serving configuration).
+    pub fn with_batch(mut self, batch: usize) -> Partitioner<'a> {
+        self.batch = batch.max(1);
+        self
+    }
+
+    /// Can `b` legally take a placement at this batch size?
+    fn admits_batch(&self, b: &dyn super::backend::Backend) -> bool {
+        !b.capability().max_batch.is_some_and(|mb| mb < self.batch)
     }
 
     /// Assign every layer of `net` and emit an executable plan.
@@ -178,7 +195,7 @@ impl<'a> Partitioner<'a> {
         for li in 0..nlayers {
             let boundary = shapes[li].1;
             for (bi, b) in backends.iter().enumerate() {
-                if !b.supports(net, li) {
+                if !b.supports(net, li) || !self.admits_batch(b.as_ref()) {
                     continue;
                 }
                 let exec = b.predict(self.dev, net, li);
@@ -219,8 +236,9 @@ impl<'a> Partitioner<'a> {
         }
         anyhow::ensure!(
             tail != usize::MAX,
-            "no backend chain can run {} (registry: {:?})",
+            "no backend chain can run {} at batch {} (registry: {:?})",
             net.name,
+            self.batch,
             self.registry.names()
         );
         let mut choice = vec![0usize; nlayers];
@@ -404,6 +422,32 @@ mod tests {
                 assert_eq!(a.choice, b.choice, "{}/{}", dev.name, net.name);
                 assert_eq!(a.predicted_s.to_bits(), b.predicted_s.to_bits());
             }
+        }
+    }
+
+    #[test]
+    fn max_batch_is_enforced_not_advisory() {
+        // Accelerator backends declare `max_batch: Some(1)`; a batch-16
+        // partition must refuse to place anything on them instead of
+        // silently accepting the over-batch placement.
+        for dev in all_devices() {
+            let reg = Registry::simulated();
+            for net in zoo::all() {
+                let rep = Partitioner::new(&reg, &dev).with_batch(16).partition(&net).unwrap();
+                assert!(
+                    rep.plan.layers.iter().all(|l| !l.on_accel()),
+                    "{}/{}: over-batch accel placement",
+                    dev.name,
+                    net.name
+                );
+                for a in &rep.assignments {
+                    assert!(a.backend.starts_with("cpu"), "{}: {}", a.layer, a.backend);
+                }
+            }
+            // Batch 1 (every backend admissible) keeps the optimum.
+            let base = Partitioner::new(&reg, &dev).partition(&zoo::alexnet()).unwrap();
+            let b1 = Partitioner::new(&reg, &dev).with_batch(1).partition(&zoo::alexnet()).unwrap();
+            assert_eq!(base.choice, b1.choice, "{}", dev.name);
         }
     }
 

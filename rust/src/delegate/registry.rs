@@ -7,7 +7,9 @@
 
 use crate::model::manifest::Manifest;
 
-use super::backend::{AccelBackend, Backend, CpuGemmBackend, CpuParBackend, CpuSeqBackend};
+use super::backend::{
+    AccelBackend, Backend, CpuGemmBackend, CpuGemmQ8Backend, CpuParBackend, CpuSeqBackend,
+};
 
 /// The set of backends the partitioner may place layers on.
 pub struct Registry {
@@ -56,10 +58,20 @@ impl Registry {
         reg
     }
 
-    /// Register an additional backend (future: quantized, sharded,
-    /// remote executors plug in here).
+    /// Register an additional backend (sharded, remote, ... executors
+    /// plug in here).
     pub fn register(&mut self, backend: Box<dyn Backend>) {
         self.backends.push(backend);
+    }
+
+    /// Append the quantized `cpu-gemm-q8` backend.  Callers gate this
+    /// on the accuracy guardrail ([`super::q8_eligible`]) — or invoke
+    /// it unconditionally in tests/benches that study placement.  Not
+    /// part of the default registries so f32 serving numerics stay
+    /// untouched unless q8 is requested.
+    pub fn with_q8(mut self) -> Registry {
+        self.backends.push(Box::new(CpuGemmQ8Backend::new()));
+        self
     }
 
     pub fn backends(&self) -> &[Box<dyn Backend>] {
@@ -125,6 +137,17 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn with_q8_appends_the_quantized_backend_last() {
+        let reg = Registry::cpu_only().with_q8();
+        assert_eq!(reg.names(), vec!["cpu-seq", "cpu-par", "cpu-gemm", "cpu-gemm-q8"]);
+        assert!(!reg.get("cpu-gemm-q8").unwrap().capability().needs_artifacts);
+        // Default registries must NOT include it (f32 numerics are the
+        // default; q8 is opt-in + guardrail-gated).
+        assert!(Registry::simulated().get("cpu-gemm-q8").is_none());
+        assert!(Registry::cpu_only().get("cpu-gemm-q8").is_none());
     }
 
     #[test]

@@ -19,9 +19,10 @@ use crate::model::network::ConvSpec;
 use crate::tensor::{MatView, Tensor};
 use crate::util::threadpool;
 
-use super::gemm::{gemm_into, BiasMode};
+use super::gemm::{gemm_into, gemm_q8_into, BiasMode};
 use super::im2col::{im2col_frame, patch_cols, patch_rows};
-use super::pack::PackedConv;
+use super::pack::{PackedConv, PackedConvQ8};
+use super::quant::quantize_activations;
 use super::KernelOpts;
 
 /// One `(frame, output channel)` plane of the direct loop nest.
@@ -175,6 +176,44 @@ pub fn conv_im2col(x: &Tensor, packed: &PackedConv, opts: KernelOpts) -> Tensor 
     out
 }
 
+/// Quantized im2col+GEMM convolution over a pre-quantized weight
+/// cache: for each frame, materialize the f32 patch matrix, quantize
+/// it to u8 **dynamically** (per-tensor scale + zero point computed at
+/// layer entry — padding and post-ReLU zeros stay exact), then run the
+/// i8 x u8 -> i32 GEMM with the fused requantize+bias+ReLU epilogue.
+/// Output is f32 NCHW, same shape as [`conv_im2col`].
+pub fn conv_im2col_q8(x: &Tensor, packed: &PackedConvQ8, opts: KernelOpts) -> Tensor {
+    let spec = &packed.spec;
+    let n = x.dim(0);
+    assert_eq!(x.shape(), &[n, spec.in_c, spec.in_h, spec.in_w], "conv input shape");
+    let (oh, ow) = (spec.out_h(), spec.out_w());
+    let rows = patch_rows(spec);
+    let cols = patch_cols(spec);
+    let frame_len = spec.in_c * spec.in_h * spec.in_w;
+    let out_frame = spec.nk * cols;
+    let mut out = Tensor::zeros(vec![n, spec.nk, oh, ow]);
+    // Scratch patch matrices (f32 then u8), reused across frames —
+    // im2col and the quantizer write every element, so no clearing.
+    let mut patches = vec![0.0f32; rows * cols];
+    let mut qpatches = vec![0u8; rows * cols];
+    for ni in 0..n {
+        im2col_frame(&x.data()[ni * frame_len..(ni + 1) * frame_len], spec, &mut patches);
+        let act = quantize_activations(&patches, &mut qpatches);
+        let lo = ni * out_frame;
+        gemm_q8_into(
+            &packed.wq,
+            &qpatches,
+            cols,
+            act,
+            packed.bias.data(),
+            spec.relu,
+            opts,
+            &mut out.data_mut()[lo..lo + out_frame],
+        );
+    }
+    out
+}
+
 /// im2col+GEMM convolution from raw OIHW weights (packs on the fly —
 /// use [`PackedConv`] / [`super::PackedModel`] to amortize the packing
 /// across frames and calls).
@@ -235,6 +274,26 @@ mod tests {
             1,
             40,
         );
+    }
+
+    #[test]
+    fn q8_conv_tracks_f32_and_is_tile_invariant() {
+        let spec = ConvSpec {
+            in_c: 3, in_h: 10, in_w: 10, nk: 8, kh: 3, kw: 3, stride: 1, pad: 1, relu: true,
+        };
+        let x = random(vec![2, 3, 10, 10], 60);
+        let w = random(vec![8, 3, 3, 3], 61);
+        let b = random(vec![8], 62);
+        let exact = conv_direct(&x, &w, &b, &spec, KernelOpts::seq());
+        let packed = PackedConvQ8::pack(&spec, &w, &b);
+        let q8 = conv_im2col_q8(&x, &packed, KernelOpts::seq());
+        assert_eq!(q8.shape(), exact.shape());
+        let scale = exact.data().iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let diff = q8.max_abs_diff(&exact);
+        assert!(diff <= scale * 0.05 + 0.05, "q8 conv diff {diff} vs scale {scale}");
+        // Integer accumulation: tiled == sequential bit-for-bit.
+        let tiled = conv_im2col_q8(&x, &packed, KernelOpts::tiled());
+        assert_eq!(q8, tiled);
     }
 
     #[test]

@@ -1,29 +1,44 @@
-//! Blocked/tiled GEMM primitive with fused bias + ReLU — the matrix
-//! engine every CPU lowering dispatches into.
+//! Blocked/tiled GEMM primitives with fused epilogues — the matrix
+//! engines every CPU lowering dispatches into.
 //!
-//! `C (m x n) = A (m x k) · B (k x n) [+ bias] [then ReLU]` over
-//! strided [`MatView`]s, blocked over the reduction axis for cache
-//! reuse and tile-parallelized over **column bands** of `C` (disjoint
-//! output ranges, so no locks).  For every output element the
-//! reduction runs in ascending-`k` order regardless of the block or
-//! tile configuration, so results are bit-identical across
-//! `KernelOpts` settings — `cpu::par` really is "the same kernel on
-//! more tiles", not a second numeric code path.
+//! Two numeric paths share the same blocking/tiling discipline:
 //!
-//! The inner loop is a contiguous axpy over a column band
-//! (`c[j] += a_ik * b[k][j]`), which the compiler auto-vectorizes;
-//! this — not threading — is where the 3x+ win over the direct conv
-//! loop nest comes from.
+//! * **f32** ([`gemm_into`]): `C (m x n) = A (m x k) · B (k x n)
+//!   [+ bias] [then ReLU]` over strided [`MatView`]s, blocked over the
+//!   reduction axis for cache reuse and tile-parallelized over
+//!   **column bands** of `C` (disjoint output ranges, so no locks).
+//!   For `m >= 4` the inner loop is a 4x8 **register tile** (32
+//!   accumulators held in registers, each `B` row load amortized over
+//!   four `A` rows); small-`m` products (the batch-1 FC matvec) keep
+//!   the contiguous-axpy form that streams `B` at full-cache-line
+//!   width.  For every output element the reduction runs in
+//!   ascending-`k` order with one partial sum per `KC` block regardless
+//!   of the band or tile configuration, so results are bit-identical
+//!   across `KernelOpts` settings — `cpu::par` really is "the same
+//!   kernel on more tiles", not a second numeric code path.
+//! * **q8** ([`gemm_q8_into`]): `i8` weights x `u8` activations with
+//!   `i32` accumulators and a fused requantize + bias + ReLU epilogue
+//!   (see [`super::quant`] for the scale scheme), tile-parallelized
+//!   over **row bands** (each row is one output channel with its own
+//!   scale).  Integer accumulation is exact, so q8 tiled runs are
+//!   bit-identical to sequential ones by construction.
 
 use std::sync::Arc;
 
 use crate::tensor::{MatView, Tensor};
 use crate::util::threadpool;
 
+use super::quant::{quantize_activations_transposed, ActQuant, QuantizedWeights};
 use super::KernelOpts;
 
 /// Reduction-axis block size (elements of `k` per pass over a band).
 const KC: usize = 256;
+
+/// Register-tile rows (A rows per micro-kernel pass).
+const MR: usize = 4;
+
+/// Register-tile columns (C columns per micro-kernel pass).
+const NR: usize = 8;
 
 /// How the bias vector broadcasts over `C`.
 #[derive(Debug, Clone, Copy)]
@@ -66,6 +81,79 @@ struct Capsule {
 unsafe impl Send for Capsule {}
 unsafe impl Sync for Capsule {}
 
+/// Accumulate columns `[j0, j1)` of rows `[i0, i0 + ir)` for k-block
+/// `[kb, ke)` with per-element register partial sums: each element gets
+/// a fresh accumulator summed in ascending-`k` order, added to `C`
+/// once.  `ir <= MR`; the `ir == MR` / full-`NR` case is the register
+/// micro-kernel, everything else is the (order-identical) edge handler.
+///
+/// SAFETY: caller guarantees pointer liveness and that no concurrent
+/// band overlaps the written C range.
+#[inline]
+unsafe fn tile_block(
+    cap: &Capsule,
+    i0: usize,
+    ir: usize,
+    j0: usize,
+    j1: usize,
+    kb: usize,
+    ke: usize,
+) {
+    let mut j = j0;
+    while j < j1 {
+        let jr = (j1 - j).min(NR);
+        if ir == MR && jr == NR {
+            // 4x8 micro-kernel: 32 accumulators in registers; each B
+            // row load feeds four A rows.
+            let mut acc = [[0.0f32; NR]; MR];
+            let a0 = std::slice::from_raw_parts(cap.a.add(i0 * cap.a_stride), cap.k);
+            let a1 = std::slice::from_raw_parts(cap.a.add((i0 + 1) * cap.a_stride), cap.k);
+            let a2 = std::slice::from_raw_parts(cap.a.add((i0 + 2) * cap.a_stride), cap.k);
+            let a3 = std::slice::from_raw_parts(cap.a.add((i0 + 3) * cap.a_stride), cap.k);
+            for kk in kb..ke {
+                let brow = std::slice::from_raw_parts(cap.b.add(kk * cap.b_stride + j), NR);
+                let av = [a0[kk], a1[kk], a2[kk], a3[kk]];
+                for (accr, &ar) in acc.iter_mut().zip(&av) {
+                    for (cv, &bv) in accr.iter_mut().zip(brow) {
+                        *cv += ar * bv;
+                    }
+                }
+            }
+            for (r, accr) in acc.iter().enumerate() {
+                let crow =
+                    std::slice::from_raw_parts_mut(cap.c.add((i0 + r) * cap.n + j), NR);
+                for (cv, &av) in crow.iter_mut().zip(accr) {
+                    *cv += av;
+                }
+            }
+        } else {
+            // Edge strip: same per-element arithmetic as the
+            // micro-kernel (fresh partial sum in ascending k, one add
+            // to C, no zero-skipping — a column's full-tile-vs-edge
+            // classification depends on the band split, so the two
+            // paths must agree even on non-finite inputs), contiguous
+            // B-row access.
+            for r in 0..ir {
+                let arow = std::slice::from_raw_parts(cap.a.add((i0 + r) * cap.a_stride), cap.k);
+                let mut acc = [0.0f32; NR];
+                for kk in kb..ke {
+                    let av = arow[kk];
+                    let brow = std::slice::from_raw_parts(cap.b.add(kk * cap.b_stride + j), jr);
+                    for (cv, &bv) in acc[..jr].iter_mut().zip(brow) {
+                        *cv += av * bv;
+                    }
+                }
+                let crow =
+                    std::slice::from_raw_parts_mut(cap.c.add((i0 + r) * cap.n + j), jr);
+                for (cv, &av) in crow.iter_mut().zip(&acc[..jr]) {
+                    *cv += av;
+                }
+            }
+        }
+        j += jr;
+    }
+}
+
 /// Compute columns `[j0, j1)` of `C`.
 ///
 /// SAFETY: the capsule's pointers must be live for the duration of the
@@ -86,26 +174,47 @@ unsafe fn band(cap: &Capsule, j0: usize, j1: usize) {
             }
         }
     }
-    // Accumulate, k-blocked; per output element the order is ascending
-    // k, so blocking never changes the float result.
-    let mut kb = 0;
-    while kb < cap.k {
-        let ke = (kb + KC).min(cap.k);
-        for i in 0..cap.m {
-            let arow = std::slice::from_raw_parts(cap.a.add(i * cap.a_stride), cap.k);
-            let crow = std::slice::from_raw_parts_mut(cap.c.add(i * cap.n + j0), w);
-            for kk in kb..ke {
-                let av = arow[kk];
-                if av == 0.0 {
-                    continue; // post-ReLU activations are sparse
-                }
-                let brow = std::slice::from_raw_parts(cap.b.add(kk * cap.b_stride + j0), w);
-                for (cv, bv) in crow.iter_mut().zip(brow) {
-                    *cv += av * *bv;
+    // Accumulate, k-blocked.  Per output element the order is one
+    // fresh ascending-k partial sum per block, added in block order —
+    // identical for every band/tile split, so blocking and threading
+    // never change the float result.
+    if cap.m < MR {
+        // Small-m (batch-1 FC matvec): contiguous axpy over the whole
+        // band keeps B streaming at full cache-line width; an 8-wide
+        // register tile would halve effective bandwidth here.
+        let mut kb = 0;
+        while kb < cap.k {
+            let ke = (kb + KC).min(cap.k);
+            for i in 0..cap.m {
+                let arow = std::slice::from_raw_parts(cap.a.add(i * cap.a_stride), cap.k);
+                let crow = std::slice::from_raw_parts_mut(cap.c.add(i * cap.n + j0), w);
+                for kk in kb..ke {
+                    let av = arow[kk];
+                    if av == 0.0 {
+                        continue; // post-ReLU activations are sparse
+                    }
+                    let brow = std::slice::from_raw_parts(cap.b.add(kk * cap.b_stride + j0), w);
+                    for (cv, bv) in crow.iter_mut().zip(brow) {
+                        *cv += av * *bv;
+                    }
                 }
             }
+            kb = ke;
         }
-        kb = ke;
+    } else {
+        let mut kb = 0;
+        while kb < cap.k {
+            let ke = (kb + KC).min(cap.k);
+            // Row quads inside the k-block: the B sub-block (KC x band)
+            // stays cache-resident and is reused by every quad.
+            let mut i = 0;
+            while i < cap.m {
+                let ir = (cap.m - i).min(MR);
+                tile_block(cap, i, ir, j0, j1, kb, ke);
+                i += ir;
+            }
+            kb = ke;
+        }
     }
     if cap.relu {
         for i in 0..cap.m {
@@ -198,9 +307,200 @@ pub fn fc(x: &Tensor, w: &Tensor, b: &Tensor, relu: bool, opts: KernelOpts) -> T
     out
 }
 
+// ---------------------------------------------------------------------
+// q8: i8 weights x u8 activations -> i32 accumulators -> f32 epilogue
+// ---------------------------------------------------------------------
+
+/// Column-strip width of the q8 accumulator array (i32 partial sums
+/// held on the stack while a strip of `B` streams through cache).
+const QNR: usize = 64;
+
+/// Pointer capsule for the q8 row bands.
+struct Q8Capsule {
+    wq: *const i8,
+    scales: *const f32,
+    row_sums: *const i32,
+    aq: *const u8,
+    bias: *const f32,
+    c: *mut f32,
+    m: usize,
+    k: usize,
+    n: usize,
+    act: ActQuant,
+    relu: bool,
+}
+
+unsafe impl Send for Q8Capsule {}
+unsafe impl Sync for Q8Capsule {}
+
+/// Compute rows `[i0, i1)` of the q8 product.  Row-banded (each row is
+/// one output channel), j-strip outer / k inner so a `(k, QNR)` strip
+/// of the u8 activation matrix stays cache-resident across the band's
+/// rows.  Integer accumulation is exact, so the banding never changes
+/// the result; the f32 epilogue is evaluated identically per element.
+///
+/// SAFETY: pointers live for the call; bands write disjoint row ranges.
+unsafe fn q8_band(cap: &Q8Capsule, i0: usize, i1: usize) {
+    let (k, n) = (cap.k, cap.n);
+    if n == 1 {
+        // Matvec (FC batch 1): one dot product per output row, four
+        // interleaved accumulators to break the dependency chain.
+        let acol = std::slice::from_raw_parts(cap.aq, k);
+        for i in i0..i1 {
+            let wrow = std::slice::from_raw_parts(cap.wq.add(i * k), k);
+            let mut acc = [0i32; 4];
+            let mut kk = 0;
+            while kk + 4 <= k {
+                acc[0] += wrow[kk] as i32 * acol[kk] as i32;
+                acc[1] += wrow[kk + 1] as i32 * acol[kk + 1] as i32;
+                acc[2] += wrow[kk + 2] as i32 * acol[kk + 2] as i32;
+                acc[3] += wrow[kk + 3] as i32 * acol[kk + 3] as i32;
+                kk += 4;
+            }
+            let mut total = acc[0] + acc[1] + acc[2] + acc[3];
+            while kk < k {
+                total += wrow[kk] as i32 * acol[kk] as i32;
+                kk += 1;
+            }
+            *cap.c.add(i) = q8_epilogue(cap, i, total);
+        }
+        return;
+    }
+    let mut j = 0;
+    while j < n {
+        let jw = (n - j).min(QNR);
+        for i in i0..i1 {
+            let wrow = std::slice::from_raw_parts(cap.wq.add(i * k), k);
+            let mut acc = [0i32; QNR];
+            for (kk, &wv) in wrow.iter().enumerate() {
+                let av = wv as i32;
+                if av == 0 {
+                    continue;
+                }
+                let brow = std::slice::from_raw_parts(cap.aq.add(kk * n + j), jw);
+                for (cv, &bv) in acc[..jw].iter_mut().zip(brow) {
+                    *cv += av * bv as i32;
+                }
+            }
+            let crow = std::slice::from_raw_parts_mut(cap.c.add(i * n + j), jw);
+            for (cv, &av) in crow.iter_mut().zip(&acc[..jw]) {
+                *cv = q8_epilogue(cap, i, av);
+            }
+        }
+        j += jw;
+    }
+}
+
+/// Requantize one i32 accumulator of row `i` back to f32:
+/// `bias + w_scale_i * a_scale * (acc - zp * rowsum_i)`, then ReLU.
+#[inline]
+unsafe fn q8_epilogue(cap: &Q8Capsule, i: usize, acc: i32) -> f32 {
+    let corrected = acc - cap.act.zp * *cap.row_sums.add(i);
+    let mut v = *cap.bias.add(i) + *cap.scales.add(i) * cap.act.scale * corrected as f32;
+    if cap.relu && v < 0.0 {
+        v = 0.0;
+    }
+    v
+}
+
+/// Quantized GEMM: `out (m x n) = dequant(wq (m x k, i8) · aq (k x n,
+/// u8)) [+ bias] [then ReLU]`, i32 accumulators, f32 output.  `wq`
+/// carries per-row scales ([`QuantizedWeights`]), `aq` is row-major
+/// with per-tensor parameters `act`.  Tile-parallel over row bands.
+///
+/// The i32 accumulator is exact for `k <= 2^31 / (127 * 255)` (~66k
+/// reduction elements) — far above any layer in the zoo (AlexNet fc6
+/// is k = 9216).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_q8_into(
+    wq: &QuantizedWeights,
+    aq: &[u8],
+    n: usize,
+    act: ActQuant,
+    bias: &[f32],
+    relu: bool,
+    opts: KernelOpts,
+    out: &mut [f32],
+) {
+    let (m, k) = (wq.rows, wq.cols);
+    assert_eq!(aq.len(), k * n, "q8 activation matrix length");
+    assert_eq!(bias.len(), m, "q8 per-row bias length");
+    assert_eq!(out.len(), m * n, "q8 output length {} != {m}x{n}", out.len());
+    if m == 0 || n == 0 {
+        return;
+    }
+    let cap = Q8Capsule {
+        wq: wq.q.as_ptr(),
+        scales: wq.scales.as_ptr(),
+        row_sums: wq.row_sums.as_ptr(),
+        aq: aq.as_ptr(),
+        bias: bias.as_ptr(),
+        c: out.as_mut_ptr(),
+        m,
+        k,
+        n,
+        act,
+        relu,
+    };
+    // Row bands: ~4 units per worker for load balance, never empty.
+    let units = (4 * opts.threads.max(1)).min(m);
+    if !opts.parallel() || units < 2 {
+        // SAFETY: single full band over live borrows.
+        unsafe { q8_band(&cap, 0, m) };
+        return;
+    }
+    let rows_per = m.div_ceil(units);
+    let ntiles = m.div_ceil(rows_per);
+    let cap = Arc::new(cap);
+    let shared = Arc::clone(&cap);
+    threadpool::parallel_for(ntiles, move |t| {
+        let i0 = t * rows_per;
+        let i1 = ((t + 1) * rows_per).min(shared.m);
+        // SAFETY: disjoint row bands; entry point blocks on completion.
+        unsafe { q8_band(&shared, i0, i1) };
+    });
+}
+
+/// Quantized fully connected layer over a prepacked
+/// [`super::pack::PackedFcQ8`]: dynamically quantize `x (N, In)` to u8
+/// (transposed into the `(k, n)` GEMM operand), multiply against the
+/// cached i8 weights `(Out, In)`, and requantize with fused bias+ReLU.
+/// Returns `(N, Out)` f32 logits/activations.
+pub fn fc_q8(x: &Tensor, packed: &super::pack::PackedFcQ8, opts: KernelOpts) -> Tensor {
+    let (n, d_in) = (x.dim(0), x.dim(1));
+    assert_eq!(d_in, packed.d_in, "fc_q8 input width");
+    let d_out = packed.d_out;
+    let mut aq = vec![0u8; d_in * n];
+    let act = quantize_activations_transposed(x.data(), n, d_in, &mut aq);
+    let mut out_t = vec![0.0f32; d_out * n];
+    gemm_q8_into(
+        &packed.wq,
+        &aq,
+        n,
+        act,
+        packed.bias.data(),
+        packed.relu,
+        opts,
+        &mut out_t,
+    );
+    if n == 1 {
+        return Tensor::new(vec![1, d_out], out_t);
+    }
+    // (Out, N) -> (N, Out)
+    let mut out = Tensor::zeros(vec![n, d_out]);
+    let od = out.data_mut();
+    for i in 0..d_out {
+        for j in 0..n {
+            od[j * d_out + i] = out_t[i * n + j];
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kernels::quant::quantize_activations;
     use crate::util::rng::Pcg;
 
     fn random(shape: Vec<usize>, seed: u64) -> Tensor {
@@ -239,6 +539,27 @@ mod tests {
     }
 
     #[test]
+    fn register_tile_shapes_match_naive() {
+        // Exercise every edge of the 4x8 micro-kernel: row remainders
+        // 1..3, column remainders 1..7, k straddling the KC block.
+        for (m, k, n, seed) in [
+            (4, 16, 8, 11),
+            (5, 40, 9, 12),
+            (6, 257, 15, 13),
+            (7, 300, 23, 14),
+            (9, 31, 7, 15),
+            (12, 512, 64, 16),
+        ] {
+            let a = random(vec![m, k], seed);
+            let b = random(vec![k, n], seed + 100);
+            let got = matmul(&a, &b, KernelOpts::seq());
+            let want = naive(&a, &b);
+            let diff = got.max_abs_diff(&want);
+            assert!(diff < 1e-3, "{m}x{k}x{n}: diff {diff}");
+        }
+    }
+
+    #[test]
     fn tiled_is_bit_identical_to_seq() {
         let a = random(vec![24, 700], 5);
         let b = random(vec![700, 230], 6);
@@ -262,6 +583,35 @@ mod tests {
             par_out.data_mut(),
         );
         assert_eq!(seq_out, par_out);
+    }
+
+    #[test]
+    fn odd_tile_widths_stay_bit_identical() {
+        // Bands whose width is not a multiple of the register tile must
+        // not change per-element accumulation order.
+        let a = random(vec![13, 333], 8);
+        let b = random(vec![333, 100], 9);
+        let mut base = Tensor::zeros(vec![13, 100]);
+        gemm_into(
+            a.view2d(),
+            b.view2d(),
+            BiasMode::None,
+            false,
+            KernelOpts::seq(),
+            base.data_mut(),
+        );
+        for tile in [17, 20, 33, 50] {
+            let mut out = Tensor::zeros(vec![13, 100]);
+            gemm_into(
+                a.view2d(),
+                b.view2d(),
+                BiasMode::None,
+                false,
+                KernelOpts { threads: 8, tile },
+                out.data_mut(),
+            );
+            assert_eq!(base, out, "tile {tile} diverged");
+        }
     }
 
     #[test]
@@ -319,5 +669,69 @@ mod tests {
             &mut out,
         );
         assert_eq!(out, [1.0, 2.0, 3.0, 1.0, 2.0, 3.0]);
+    }
+
+    /// q8 GEMM against an exact integer oracle.
+    fn naive_q8(
+        wq: &QuantizedWeights,
+        aq: &[u8],
+        n: usize,
+        act: ActQuant,
+        bias: &[f32],
+        relu: bool,
+    ) -> Vec<f32> {
+        let (m, k) = (wq.rows, wq.cols);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0i32;
+                for kk in 0..k {
+                    acc += wq.q[i * k + kk] as i32 * aq[kk * n + j] as i32;
+                }
+                let corrected = acc - act.zp * wq.row_sums[i];
+                let mut v = bias[i] + wq.scales[i] * act.scale * corrected as f32;
+                if relu && v < 0.0 {
+                    v = 0.0;
+                }
+                out[i * n + j] = v;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn q8_gemm_matches_integer_oracle_and_is_tile_invariant() {
+        for (m, k, n, seed) in [(1, 9, 1, 20), (5, 130, 3, 21), (20, 500, 64, 22), (3, 64, 1, 23)]
+        {
+            let mut rng = Pcg::seeded(seed);
+            let w = rng.normal_vec(m * k, 0.5);
+            let x = rng.normal_vec(k * n, 1.0);
+            let bias = rng.normal_vec(m, 0.1);
+            let wq = QuantizedWeights::quantize_rows(&w, m, k);
+            let mut aq = vec![0u8; k * n];
+            let act = quantize_activations(&x, &mut aq);
+            let want = naive_q8(&wq, &aq, n, act, &bias, true);
+            for opts in [KernelOpts::seq(), KernelOpts { threads: 8, tile: 16 }] {
+                let mut got = vec![0.0f32; m * n];
+                gemm_q8_into(&wq, &aq, n, act, &bias, true, opts, &mut got);
+                assert_eq!(got, want, "{m}x{k}x{n} ({opts:?})");
+            }
+        }
+    }
+
+    #[test]
+    fn fc_q8_tracks_f32_fc() {
+        let mut rng = Pcg::seeded(30);
+        let (n, d_in, d_out) = (3, 120, 40);
+        let x = Tensor::new(vec![n, d_in], rng.normal_vec(n * d_in, 1.0));
+        let w = Tensor::new(vec![d_in, d_out], rng.normal_vec(d_in * d_out, 0.2));
+        let b = Tensor::new(vec![d_out], rng.normal_vec(d_out, 0.1));
+        let packed = crate::kernels::pack::PackedFcQ8::pack(&w, &b, true);
+        let exact = fc(&x, &w, &b, true, KernelOpts::seq());
+        let q8 = fc_q8(&x, &packed, KernelOpts::seq());
+        assert_eq!(q8.shape(), exact.shape());
+        let scale = exact.data().iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let diff = q8.max_abs_diff(&exact);
+        assert!(diff <= scale * 0.08 + 0.1, "q8 fc diff {diff} vs scale {scale}");
     }
 }

@@ -23,7 +23,12 @@
 //! * [`pack`] — the [`pack::PackedModel`] weight cache: per-layer
 //!   GEMM-ready weight matrices built once per network at load time
 //!   (CNNdroid's model-preparation step) and stored alongside
-//!   [`crate::model::weights::Params`].
+//!   [`crate::model::weights::Params`]; its q8 family
+//!   ([`pack::PackedConvQ8`] / [`pack::PackedFcQ8`]) holds the same
+//!   layers as per-channel symmetric i8 at ~4x weight density.
+//! * [`quant`] — 8-bit quantization primitives: per-output-channel
+//!   symmetric i8 weights and per-tensor dynamic u8 activations, the
+//!   numeric contract behind `gemm::gemm_q8_into`.
 //!
 //! `cpu::seq` and `cpu::par` are thin API-compatible dispatchers into
 //! these kernels; the engine, the delegate backends, and the property
@@ -34,12 +39,16 @@ pub mod gemm;
 pub mod im2col;
 pub mod pack;
 pub mod pool;
+pub mod quant;
 
-pub use conv::{conv_direct, conv_im2col, conv_im2col_unpacked};
-pub use gemm::{fc, gemm_into, matmul, BiasMode};
+pub use conv::{conv_direct, conv_im2col, conv_im2col_q8, conv_im2col_unpacked};
+pub use gemm::{fc, fc_q8, gemm_into, gemm_q8_into, matmul, BiasMode};
 pub use im2col::{im2col_frame, patch_cols, patch_rows};
-pub use pack::{PackedConv, PackedLayer, PackedModel};
+pub use pack::{
+    PackedConv, PackedConvQ8, PackedFcQ8, PackedLayer, PackedModel, PackedQ8Layer,
+};
 pub use pool::{avgpool_nchw, lrn_nchw, maxpool_nchw, relu};
+pub use quant::{quantize_activations, ActQuant, QuantizedWeights};
 
 /// Which convolution lowering a backend dispatches (the capability
 /// field the delegate partitioner selects per layer).

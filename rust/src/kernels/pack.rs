@@ -6,6 +6,12 @@
 //! [`crate::model::weights::Params`] (the engine holds both); FC
 //! weights are already stored `(in, out)` — exactly the GEMM `B`
 //! operand — so only their geometry is cached.
+//!
+//! The quantized serving mode adds a second cache family prepared the
+//! same way: [`PackedConvQ8`] / [`PackedFcQ8`] hold per-output-channel
+//! symmetric `i8` weights (plus scales and row sums — see
+//! [`super::quant`]) at ~4x the f32 weight density, quantized once at
+//! load time and reused by every q8-placed layer.
 
 use std::collections::BTreeMap;
 
@@ -15,6 +21,7 @@ use crate::tensor::Tensor;
 use crate::Result;
 
 use super::im2col::patch_rows;
+use super::quant::QuantizedWeights;
 
 /// One conv layer's GEMM-ready parameters.
 #[derive(Debug, Clone)]
@@ -41,6 +48,66 @@ impl PackedConv {
     }
 }
 
+/// One conv layer's quantized GEMM parameters: the `(NK, C*KH*KW)`
+/// weight matrix as per-row symmetric i8 with f32 scales.
+#[derive(Debug, Clone)]
+pub struct PackedConvQ8 {
+    pub spec: ConvSpec,
+    pub wq: QuantizedWeights,
+    pub bias: Tensor,
+}
+
+impl PackedConvQ8 {
+    /// Quantize OIHW weights into the q8 GEMM layout (one scale per
+    /// output channel).
+    pub fn pack(spec: &ConvSpec, w: &Tensor, b: &Tensor) -> PackedConvQ8 {
+        assert_eq!(w.shape(), &[spec.nk, spec.in_c, spec.kh, spec.kw], "conv weight shape");
+        assert_eq!(b.len(), spec.nk, "conv bias length");
+        PackedConvQ8 {
+            spec: *spec,
+            wq: QuantizedWeights::quantize_rows(w.data(), spec.nk, patch_rows(spec)),
+            bias: b.clone(),
+        }
+    }
+}
+
+/// One FC layer's quantized parameters.  The stored `(in, out)` f32
+/// matrix is transposed to `(out, in)` at pack time so each row is one
+/// output unit (per-row scales == per-unit scales) and the q8 GEMM
+/// streams weights row-major.
+#[derive(Debug, Clone)]
+pub struct PackedFcQ8 {
+    pub d_in: usize,
+    pub d_out: usize,
+    pub relu: bool,
+    /// `(d_out, d_in)` per-row symmetric i8.
+    pub wq: QuantizedWeights,
+    pub bias: Tensor,
+}
+
+impl PackedFcQ8 {
+    /// Quantize `(in, out)` FC weights (transposing into the q8 GEMM
+    /// orientation) with a per-output-unit scale.
+    pub fn pack(w: &Tensor, b: &Tensor, relu: bool) -> PackedFcQ8 {
+        let (d_in, d_out) = (w.dim(0), w.dim(1));
+        assert_eq!(b.len(), d_out, "fc bias length");
+        let wd = w.data();
+        let mut t = vec![0.0f32; d_in * d_out];
+        for i in 0..d_in {
+            for o in 0..d_out {
+                t[o * d_in + i] = wd[i * d_out + o];
+            }
+        }
+        PackedFcQ8 {
+            d_in,
+            d_out,
+            relu,
+            wq: QuantizedWeights::quantize_rows(&t, d_out, d_in),
+            bias: b.clone(),
+        }
+    }
+}
+
 /// One parameterized layer's prepared form.
 #[derive(Debug, Clone)]
 pub enum PackedLayer {
@@ -50,17 +117,28 @@ pub enum PackedLayer {
     Fc { d_in: usize, d_out: usize, relu: bool },
 }
 
-/// Per-network cache of prepared layers, keyed by layer name.
+/// One parameterized layer's quantized prepared form.
+#[derive(Debug, Clone)]
+pub enum PackedQ8Layer {
+    Conv(PackedConvQ8),
+    Fc(PackedFcQ8),
+}
+
+/// Per-network cache of prepared layers, keyed by layer name.  The f32
+/// and q8 entries are independent maps so a mixed-precision plan packs
+/// each layer exactly once in the precision it executes.
 #[derive(Debug, Clone, Default)]
 pub struct PackedModel {
     entries: BTreeMap<String, PackedLayer>,
+    q8_entries: BTreeMap<String, PackedQ8Layer>,
 }
 
 impl PackedModel {
-    /// Build the cache for `net` from loaded `params` (the model-load
-    /// preparation step; call once, reuse for every inference).
+    /// Build the f32 cache for `net` from loaded `params` (the
+    /// model-load preparation step; call once, reuse for every
+    /// inference).
     pub fn prepare(net: &Network, params: &Params) -> Result<PackedModel> {
-        Self::prepare_filtered(net, params, None)
+        Self::prepare_mixed(net, params, None, Some(&Default::default()))
     }
 
     /// Build the cache packing only the conv layers named in `convs`
@@ -72,20 +150,34 @@ impl PackedModel {
         params: &Params,
         convs: &std::collections::BTreeSet<String>,
     ) -> Result<PackedModel> {
-        Self::prepare_filtered(net, params, Some(convs))
+        Self::prepare_mixed(net, params, Some(convs), Some(&Default::default()))
     }
 
-    fn prepare_filtered(
+    /// Build the q8 cache for every conv and FC layer (the full
+    /// quantized serving mode / the accuracy-guardrail reference).
+    pub fn prepare_q8(net: &Network, params: &Params) -> Result<PackedModel> {
+        Self::prepare_mixed(net, params, Some(&Default::default()), None)
+    }
+
+    /// Build a mixed-precision cache: f32-pack the conv layers in
+    /// `f32_convs`, q8-pack the conv/FC layers in `q8_layers` (`None`
+    /// means "all layers of that family").  This is what the engine
+    /// calls with the exact layer sets its execution plan dispatches.
+    pub fn prepare_mixed(
         net: &Network,
         params: &Params,
-        convs: Option<&std::collections::BTreeSet<String>>,
+        f32_convs: Option<&std::collections::BTreeSet<String>>,
+        q8_layers: Option<&std::collections::BTreeSet<String>>,
     ) -> Result<PackedModel> {
         let specs: BTreeMap<String, ConvSpec> = net.conv_specs().into_iter().collect();
         let mut entries = BTreeMap::new();
+        let mut q8_entries = BTreeMap::new();
         for layer in &net.layers {
             match layer {
                 Layer::Conv { name, .. } => {
-                    if convs.is_some_and(|set| !set.contains(name)) {
+                    let f32_wanted = !f32_convs.is_some_and(|set| !set.contains(name));
+                    let q8_wanted = !q8_layers.is_some_and(|set| !set.contains(name));
+                    if !f32_wanted && !q8_wanted {
                         continue;
                     }
                     let (w, b) = params
@@ -94,7 +186,16 @@ impl PackedModel {
                     let spec = specs
                         .get(name.as_str())
                         .ok_or_else(|| anyhow::anyhow!("no conv spec for {name}"))?;
-                    entries.insert(name.clone(), PackedLayer::Conv(PackedConv::pack(spec, w, b)));
+                    if f32_wanted {
+                        entries
+                            .insert(name.clone(), PackedLayer::Conv(PackedConv::pack(spec, w, b)));
+                    }
+                    if q8_wanted {
+                        q8_entries.insert(
+                            name.clone(),
+                            PackedQ8Layer::Conv(PackedConvQ8::pack(spec, w, b)),
+                        );
+                    }
                 }
                 Layer::Fc { name, out, relu } => {
                     let (w, b) = params
@@ -110,19 +211,23 @@ impl PackedModel {
                         name.clone(),
                         PackedLayer::Fc { d_in: w.dim(0), d_out: *out, relu: *relu },
                     );
+                    if !q8_layers.is_some_and(|set| !set.contains(name)) {
+                        q8_entries
+                            .insert(name.clone(), PackedQ8Layer::Fc(PackedFcQ8::pack(w, b, *relu)));
+                    }
                 }
                 Layer::Pool { .. } | Layer::Lrn { .. } => {}
             }
         }
-        Ok(PackedModel { entries })
+        Ok(PackedModel { entries, q8_entries })
     }
 
-    /// Prepared form of one layer.
+    /// Prepared f32 form of one layer.
     pub fn get(&self, name: &str) -> Option<&PackedLayer> {
         self.entries.get(name)
     }
 
-    /// Prepared conv parameters of one layer (None for non-conv).
+    /// Prepared f32 conv parameters of one layer (None for non-conv).
     pub fn conv(&self, name: &str) -> Option<&PackedConv> {
         match self.entries.get(name) {
             Some(PackedLayer::Conv(p)) => Some(p),
@@ -130,12 +235,34 @@ impl PackedModel {
         }
     }
 
+    /// Prepared q8 conv parameters of one layer.
+    pub fn conv_q8(&self, name: &str) -> Option<&PackedConvQ8> {
+        match self.q8_entries.get(name) {
+            Some(PackedQ8Layer::Conv(p)) => Some(p),
+            _ => None,
+        }
+    }
+
+    /// Prepared q8 FC parameters of one layer.
+    pub fn fc_q8(&self, name: &str) -> Option<&PackedFcQ8> {
+        match self.q8_entries.get(name) {
+            Some(PackedQ8Layer::Fc(p)) => Some(p),
+            _ => None,
+        }
+    }
+
+    /// Number of f32-prepared layers.
     pub fn len(&self) -> usize {
         self.entries.len()
     }
 
+    /// Number of q8-prepared layers.
+    pub fn q8_len(&self) -> usize {
+        self.q8_entries.len()
+    }
+
     pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
+        self.entries.is_empty() && self.q8_entries.is_empty()
     }
 }
 
@@ -143,25 +270,11 @@ impl PackedModel {
 mod tests {
     use super::*;
     use crate::model::zoo;
-    use crate::util::rng::Pcg;
 
-    /// Params with random values in the network's canonical shapes.
+    /// Params with random values in the network's canonical shapes
+    /// (the shared synthetic-weight fixture).
     fn synth_params(net: &Network, seed: u64) -> Params {
-        let mut rng = Pcg::seeded(seed);
-        let pairs = net
-            .param_shapes()
-            .into_iter()
-            .map(|(name, ws, bs)| {
-                let wn: usize = ws.iter().product();
-                let bn: usize = bs.iter().product();
-                (
-                    name,
-                    Tensor::new(ws, rng.normal_vec(wn, 0.1)),
-                    Tensor::new(bs, rng.normal_vec(bn, 0.1)),
-                )
-            })
-            .collect();
-        Params { pairs }
+        Params::synthetic(net, seed, 0.1)
     }
 
     #[test]
@@ -170,6 +283,7 @@ mod tests {
             let params = synth_params(&net, 1);
             let packed = PackedModel::prepare(&net, &params).unwrap();
             assert_eq!(packed.len(), net.param_shapes().len(), "{}", net.name);
+            assert_eq!(packed.q8_len(), 0, "{}: prepare() is f32-only", net.name);
             for (name, spec) in net.conv_specs() {
                 let p = packed.conv(&name).expect("conv packed");
                 assert_eq!(p.wmat.shape(), &[spec.nk, spec.in_c * spec.kh * spec.kw]);
@@ -185,6 +299,56 @@ mod tests {
         let (w, _) = params.get("conv1").unwrap();
         // OIHW flatten == pack: same data, new shape.
         assert_eq!(packed.conv("conv1").unwrap().wmat.data(), w.data());
+    }
+
+    #[test]
+    fn q8_cache_covers_conv_and_fc_at_quarter_density() {
+        let net = zoo::lenet5();
+        let params = synth_params(&net, 3);
+        let packed = PackedModel::prepare_q8(&net, &params).unwrap();
+        assert_eq!(packed.q8_len(), 4, "conv1 conv2 fc1 fc2");
+        let c1 = packed.conv_q8("conv1").unwrap();
+        assert_eq!(c1.wq.rows, 20);
+        assert_eq!(c1.wq.cols, 25);
+        let f1 = packed.fc_q8("fc1").unwrap();
+        assert_eq!((f1.d_in, f1.d_out), (800, 500));
+        assert!(f1.relu);
+        // ~4x weight density: i8 payload + per-row f32 scale/sum.
+        let f32_bytes = 4 * 800 * 500;
+        assert!(f1.wq.bytes() * 3 < f32_bytes, "{} vs {f32_bytes}", f1.wq.bytes());
+    }
+
+    #[test]
+    fn fc_q8_transpose_is_value_faithful() {
+        let w = Tensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let b = Tensor::new(vec![3], vec![0.0, 0.0, 0.0]);
+        let p = PackedFcQ8::pack(&w, &b, false);
+        let back = p.wq.dequantize();
+        // Row o of the packed matrix is column o of w.
+        for o in 0..3 {
+            for i in 0..2 {
+                let want = w.data()[i * 3 + o];
+                let got = back[o * 2 + i];
+                assert!((got - want).abs() <= p.wq.scales[o] * 0.5 + 1e-6, "({o},{i})");
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_preparation_packs_disjoint_sets() {
+        let net = zoo::lenet5();
+        let params = synth_params(&net, 4);
+        let f32_set: std::collections::BTreeSet<String> = ["conv1".to_string()].into();
+        let q8_set: std::collections::BTreeSet<String> =
+            ["conv2".to_string(), "fc1".to_string()].into();
+        let packed =
+            PackedModel::prepare_mixed(&net, &params, Some(&f32_set), Some(&q8_set)).unwrap();
+        assert!(packed.conv("conv1").is_some());
+        assert!(packed.conv("conv2").is_none());
+        assert!(packed.conv_q8("conv2").is_some());
+        assert!(packed.conv_q8("conv1").is_none());
+        assert!(packed.fc_q8("fc1").is_some());
+        assert!(packed.fc_q8("fc2").is_none());
     }
 
     #[test]

@@ -1,0 +1,257 @@
+//! 8-bit quantization primitives for the q8 inference path.
+//!
+//! The scheme follows the standard mobile-inference recipe (gemmlowp /
+//! TFLite, and the IoT follow-ups to CNNdroid in PAPERS.md):
+//!
+//! * **Weights** — per-output-channel *symmetric* `i8`: each row of a
+//!   GEMM-ready weight matrix (one output channel / unit) gets its own
+//!   `f32` scale `max|row| / 127`, so one badly-scaled channel cannot
+//!   blow up the precision of the rest.  Quantized once at model-load
+//!   time into the [`super::pack::PackedModel`] cache, alongside the
+//!   per-row integer sums the zero-point correction needs.
+//! * **Activations** — per-tensor *asymmetric* `u8` with a zero point,
+//!   computed **dynamically at layer entry** from the actual min/max of
+//!   the tensor (no calibration data needed).  The representable range
+//!   always includes 0.0 so padding zeros and post-ReLU zeros quantize
+//!   exactly.
+//!
+//! With `a = a_scale * (q_a - zp)` and `w_i = w_scale_i * q_w`, a GEMM
+//! row reduces to integer arithmetic plus one f32 epilogue:
+//!
+//! ```text
+//!   out[i][j] = bias[i] + w_scale_i * a_scale
+//!               * (sum_k q_w[i][k] * q_a[k][j]  -  zp * rowsum_i)
+//! ```
+//!
+//! which is what [`super::gemm::gemm_q8_into`] computes with `i32`
+//! accumulators.  Integer accumulation is exact, so tiled q8 runs are
+//! bit-identical to sequential ones *by construction* — only the
+//! epilogue is float, and it is evaluated identically per element.
+
+/// Per-row symmetrically quantized `i8` matrix (row-major `rows x
+/// cols`), with the per-row scales and integer row sums the q8 GEMM
+/// epilogue needs.
+#[derive(Debug, Clone)]
+pub struct QuantizedWeights {
+    /// Row-major `i8` values in `[-127, 127]`.
+    pub q: Vec<i8>,
+    /// `scales[i]` reconstructs row `i`: `w = scales[i] * q`.
+    pub scales: Vec<f32>,
+    /// `sum_k q[i][k]` per row (the zero-point correction term).
+    pub row_sums: Vec<i32>,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl QuantizedWeights {
+    /// Quantize a row-major `rows x cols` f32 matrix, one symmetric
+    /// scale per row.  An all-zero row gets scale 1.0 (quantizes to
+    /// zeros, dequantizes to zeros).
+    pub fn quantize_rows(data: &[f32], rows: usize, cols: usize) -> QuantizedWeights {
+        assert_eq!(data.len(), rows * cols, "quantize_rows matrix length");
+        let mut q = Vec::with_capacity(rows * cols);
+        let mut scales = Vec::with_capacity(rows);
+        let mut row_sums = Vec::with_capacity(rows);
+        for r in 0..rows {
+            let row = &data[r * cols..(r + 1) * cols];
+            let max_abs = row.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let scale = if max_abs > 0.0 { max_abs / 127.0 } else { 1.0 };
+            scales.push(scale);
+            let mut sum = 0i32;
+            for &v in row {
+                let qi = (v / scale).round().clamp(-127.0, 127.0) as i32;
+                sum += qi;
+                q.push(qi as i8);
+            }
+            row_sums.push(sum);
+        }
+        QuantizedWeights { q, scales, row_sums, rows, cols }
+    }
+
+    /// Row `i` as an `i8` slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[i8] {
+        &self.q[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Reconstruct the f32 matrix (tests and error analysis).
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.q.len());
+        for r in 0..self.rows {
+            let s = self.scales[r];
+            for &qi in self.row(r) {
+                out.push(qi as f32 * s);
+            }
+        }
+        out
+    }
+
+    /// Weight bytes of the quantized form (the 4x density headline).
+    pub fn bytes(&self) -> usize {
+        self.q.len() + 4 * (self.scales.len() + self.row_sums.len())
+    }
+}
+
+/// Per-tensor activation quantization parameters:
+/// `real = scale * (q - zp)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ActQuant {
+    pub scale: f32,
+    /// Zero point in `[0, 255]`; `quantize(0.0) == zp` exactly.
+    pub zp: i32,
+}
+
+/// Scan a tensor's min/max (range forced to include 0.0) and derive
+/// the per-tensor `u8` parameters — THE quantization contract both
+/// store orders below share.  A constant-zero tensor gets scale 1.0.
+fn act_params(x: &[f32]) -> ActQuant {
+    let (mut mn, mut mx) = (0.0f32, 0.0f32);
+    for &v in x {
+        mn = mn.min(v);
+        mx = mx.max(v);
+    }
+    let mut scale = (mx - mn) / 255.0;
+    if scale <= 0.0 {
+        scale = 1.0;
+    }
+    let zp = (-mn / scale).round().clamp(0.0, 255.0) as i32;
+    ActQuant { scale, zp }
+}
+
+/// One element through the shared quantization contract.
+#[inline]
+fn quantize_one(v: f32, aq: ActQuant) -> u8 {
+    ((v / aq.scale).round() as i32 + aq.zp).clamp(0, 255) as u8
+}
+
+/// Dynamically quantize an activation tensor to `u8` (asymmetric,
+/// range forced to include 0.0).  Writes `out[i] = quantize(x[i])` and
+/// returns the parameters.
+pub fn quantize_activations(x: &[f32], out: &mut [u8]) -> ActQuant {
+    assert_eq!(x.len(), out.len(), "activation buffer length");
+    let aq = act_params(x);
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = quantize_one(v, aq);
+    }
+    aq
+}
+
+/// Quantize a row-major `(rows, cols)` activation matrix **transposed**
+/// into a `(cols, rows)` `u8` buffer (same parameters as
+/// [`quantize_activations`] — only the store order differs).  This puts
+/// FC activations into the q8 GEMM's `(k, n)` operand orientation in
+/// the same pass that quantizes them.
+pub fn quantize_activations_transposed(
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    out: &mut [u8],
+) -> ActQuant {
+    assert_eq!(x.len(), rows * cols, "activation matrix length");
+    assert_eq!(out.len(), rows * cols, "transposed buffer length");
+    let aq = act_params(x);
+    for r in 0..rows {
+        for c in 0..cols {
+            out[c * rows + r] = quantize_one(x[r * cols + c], aq);
+        }
+    }
+    aq
+}
+
+/// Reconstruct one quantized activation (tests).
+#[inline]
+pub fn dequantize_activation(q: u8, aq: ActQuant) -> f32 {
+    aq.scale * (q as i32 - aq.zp) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn weight_roundtrip_within_half_step_per_row() {
+        let mut rng = Pcg::seeded(401);
+        let (rows, cols) = (7, 53);
+        let w = rng.normal_vec(rows * cols, 0.3);
+        let qw = QuantizedWeights::quantize_rows(&w, rows, cols);
+        let back = qw.dequantize();
+        for r in 0..rows {
+            let half = qw.scales[r] * 0.5 + 1e-6;
+            for c in 0..cols {
+                let diff = (back[r * cols + c] - w[r * cols + c]).abs();
+                assert!(diff <= half, "row {r} col {c}: diff {diff} > {half}");
+            }
+        }
+    }
+
+    #[test]
+    fn weight_row_extremum_hits_127() {
+        let w = [0.5f32, -2.0, 1.0, 0.25];
+        let qw = QuantizedWeights::quantize_rows(&w, 1, 4);
+        assert_eq!(qw.q[1], -127);
+        assert_eq!(qw.scales[0], 2.0 / 127.0);
+        assert_eq!(qw.row_sums[0], qw.q.iter().map(|&v| v as i32).sum::<i32>());
+    }
+
+    #[test]
+    fn zero_row_quantizes_cleanly() {
+        let w = [0.0f32; 6];
+        let qw = QuantizedWeights::quantize_rows(&w, 2, 3);
+        assert!(qw.q.iter().all(|&v| v == 0));
+        assert_eq!(qw.scales, vec![1.0, 1.0]);
+        assert!(qw.dequantize().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn activation_zero_is_exact_and_range_covered() {
+        let x = [-1.0f32, 0.0, 0.5, 3.0];
+        let mut q = [0u8; 4];
+        let aq = quantize_activations(&x, &mut q);
+        // 0.0 maps to the zero point exactly.
+        assert_eq!(q[1] as i32, aq.zp);
+        assert_eq!(dequantize_activation(q[1], aq), 0.0);
+        for (i, &v) in x.iter().enumerate() {
+            let diff = (dequantize_activation(q[i], aq) - v).abs();
+            assert!(diff <= aq.scale + 1e-6, "x[{i}]: diff {diff}");
+        }
+    }
+
+    #[test]
+    fn all_positive_tensor_keeps_zero_in_range() {
+        // Post-ReLU activations are all >= 0; zp must be 0 and zeros
+        // must quantize exactly.
+        let x = [0.0f32, 1.0, 2.0, 255.0];
+        let mut q = [0u8; 4];
+        let aq = quantize_activations(&x, &mut q);
+        assert_eq!(aq.zp, 0);
+        assert_eq!(q[0], 0);
+        assert_eq!(q[3], 255);
+    }
+
+    #[test]
+    fn constant_zero_tensor_does_not_divide_by_zero() {
+        let x = [0.0f32; 5];
+        let mut q = [9u8; 5];
+        let aq = quantize_activations(&x, &mut q);
+        assert_eq!(aq.scale, 1.0);
+        assert!(q.iter().all(|&v| v as i32 == aq.zp));
+    }
+
+    #[test]
+    fn transposed_quantization_matches_plain() {
+        let mut rng = Pcg::seeded(402);
+        let (rows, cols) = (5, 11);
+        let x = rng.normal_vec(rows * cols, 1.0);
+        let mut plain = vec![0u8; rows * cols];
+        let mut trans = vec![0u8; rows * cols];
+        let a = quantize_activations(&x, &mut plain);
+        let b = quantize_activations_transposed(&x, rows, cols, &mut trans);
+        assert_eq!(a, b);
+        for r in 0..rows {
+            for c in 0..cols {
+                assert_eq!(plain[r * cols + c], trans[c * rows + r], "({r},{c})");
+            }
+        }
+    }
+}

@@ -66,6 +66,15 @@ pub const METHODS: [&str; 6] = [
 
 /// Method string selecting cost-driven automatic placement instead of a
 /// fixed plan ("delegate:auto", optionally "delegate:auto:<device>"
-/// with a Table-1 profile: note4 | m9).  Accepted everywhere the fixed
-/// [`METHODS`] are: engine configs, server model specs, CLI `--method`.
+/// with a Table-1 profile: note4 | m9, optionally suffixed ":q8" to let
+/// the guardrail-gated quantized backend compete for layers).  Accepted
+/// everywhere the fixed [`METHODS`] are: engine configs, server model
+/// specs, CLI `--method`.
 pub const DELEGATE_AUTO: &str = "delegate:auto";
+
+/// Method string forcing the full quantized CPU path: conv and FC on
+/// the i8/u8 GEMM kernels (per-channel weight scales, dynamic
+/// activation quantization), pool/LRN on CPU threads.  Needs no
+/// artifacts; the way to force q8 serving regardless of the cost model
+/// or guardrail.
+pub const CPU_GEMM_Q8: &str = "cpu-gemm-q8";

@@ -54,7 +54,10 @@ USAGE:
   cnndroid <inspect|convert|infer|serve|simulate|plan|bench-engine|validate> [OPTIONS]
 
 Methods: cpu-seq | basic-parallel | basic-simd | advanced-simd-4 | advanced-simd-8 | mxu,
-or `--method delegate:auto [--device note4|m9]` for cost-driven automatic placement.
+`cpu-gemm-q8` for the forced 8-bit quantized CPU path, or
+`--method delegate:auto [--device note4|m9]` for cost-driven automatic placement
+(suffix `:q8`, e.g. `delegate:auto:note4:q8`, lets the guardrail-gated quantized
+backend compete for layers).
 
 Run `cnndroid <command> --help` for command options.";
 
@@ -81,23 +84,38 @@ fn device_opt(spec: ArgSpec) -> ArgSpec {
 }
 
 /// Compose `--method` and `--device` into the engine method string:
-/// `delegate:auto` + `--device m9` -> `delegate:auto:m9`.  A --device
-/// that cannot apply (fixed method, or a selector that already names a
-/// device) is reported rather than silently dropped.
+/// `delegate:auto` + `--device m9` -> `delegate:auto:m9`, keeping any
+/// precision suffix (`delegate:auto:q8` + `--device m9` ->
+/// `delegate:auto:m9:q8`).  A --device that cannot apply (fixed
+/// method, or a selector that already names a device) is reported
+/// rather than silently dropped.
 fn method_with_device(args: &cnndroid::util::args::Args) -> Result<String> {
     let method = args.get("method").to_string();
-    match args.get_opt("device") {
-        None => Ok(method),
-        Some(dev) if method == cnndroid::DELEGATE_AUTO => Ok(format!("{method}:{dev}")),
-        Some(dev) => Err(anyhow::anyhow!(
-            "--device {dev} only applies to --method delegate:auto (got --method {method:?}{})",
-            if cnndroid::delegate::is_auto(&method) {
-                ", which already names a device"
-            } else {
-                ""
-            }
-        )),
+    let Some(dev) = args.get_opt("device") else {
+        return Ok(method);
+    };
+    let rest = match method.strip_prefix(cnndroid::DELEGATE_AUTO) {
+        Some(rest) if rest.is_empty() || rest.starts_with(':') => rest,
+        _ => {
+            return Err(anyhow::anyhow!(
+                "--device {dev} only applies to --method delegate:auto (got --method {method:?})"
+            ))
+        }
+    };
+    // Precision suffixes ride along; anything else is a device name
+    // already baked into the selector.
+    let segs: Vec<&str> = rest.split(':').filter(|s| !s.is_empty()).collect();
+    if segs.iter().any(|s| !matches!(*s, "q8" | "noq8")) {
+        return Err(anyhow::anyhow!(
+            "--device {dev} conflicts with --method {method:?}, which already names a device"
+        ));
     }
+    let mut out = format!("{}:{dev}", cnndroid::DELEGATE_AUTO);
+    for s in segs {
+        out.push(':');
+        out.push_str(s);
+    }
+    Ok(out)
 }
 
 fn inspect(argv: Vec<String>) -> Result<()> {
@@ -158,7 +176,7 @@ fn infer(argv: Vec<String>) -> Result<()> {
     let spec = device_opt(artifacts_opt(
         ArgSpec::new("cnndroid infer", "classify images with the accelerated engine")
             .opt("net", "lenet5", "network")
-            .opt("method", "advanced-simd-4", "cpu-seq | basic-parallel | basic-simd | advanced-simd-4 | advanced-simd-8 | mxu | delegate:auto")
+            .opt("method", "advanced-simd-4", "cpu-seq | basic-parallel | basic-simd | advanced-simd-4 | advanced-simd-8 | mxu | cpu-gemm-q8 | delegate:auto[...:q8]")
             .opt("synthetic", "4", "number of synthetic digits when no --image given")
             .opt("seed", "1", "synthetic workload seed")
             .opt_no_default("image", "PGM/PPM image file to classify")

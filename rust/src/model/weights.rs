@@ -42,6 +42,29 @@ impl Params {
         }
         out
     }
+
+    /// Seeded random parameters in `net`'s canonical shapes (N(0, std)
+    /// per element, one PCG stream in `param_shapes` order) — THE
+    /// synthetic-weight fixture shared by tests and benches.  The q8
+    /// accuracy-guardrail assertions depend on the exact (seed, std)
+    /// stream, so callers must not reimplement this.
+    pub fn synthetic(net: &Network, seed: u64, std: f32) -> Params {
+        let mut rng = crate::util::rng::Pcg::seeded(seed);
+        let pairs = net
+            .param_shapes()
+            .into_iter()
+            .map(|(name, ws, bs)| {
+                let wn: usize = ws.iter().product();
+                let bn: usize = bs.iter().product();
+                (
+                    name,
+                    Tensor::new(ws, rng.normal_vec(wn, std)),
+                    Tensor::new(bs, rng.normal_vec(bn, std)),
+                )
+            })
+            .collect();
+        Params { pairs }
+    }
 }
 
 /// Load a raw blob against a network's expected parameter shapes.

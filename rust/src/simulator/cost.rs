@@ -194,6 +194,45 @@ pub fn fc_time_cpu_gemm(dev: &DeviceSpec, d_in: usize, d_out: usize, threads: us
     gemm_time_cpu(dev, 1, d_in, d_out, threads)
 }
 
+/// Quantized-GEMM CPU Gop/s: i8 x u8 MACs in wider SIMD lanes over
+/// quarter-width weight streams; `mt` multiplies in the thread-pool
+/// speedup exactly like [`cpu_gemm_rate`].
+pub fn cpu_gemm_q8_rate(dev: &DeviceSpec, threads: usize) -> f64 {
+    let mt = if threads > 1 { dev.cpu_mt_speedup } else { 1.0 };
+    dev.cpu_gemm_q8_gops * mt
+}
+
+/// Time of an `(m x k) · (k x n)` quantized GEMM on CPU, seconds.
+pub fn gemm_time_cpu_q8(dev: &DeviceSpec, m: usize, k: usize, n: usize, threads: usize) -> f64 {
+    let ops = 2.0 * m as f64 * k as f64 * n as f64;
+    ops / (cpu_gemm_q8_rate(dev, threads) * 1e9)
+}
+
+/// Dynamic activation-quantization time for `words` f32 elements,
+/// seconds: a min/max scan plus a round-and-store pass — three
+/// streaming word-touches at the simple-op rate.  This is the per-layer
+/// overhead the q8 path pays that the f32 path does not, and what keeps
+/// dispatch-dominated small layers on `cpu-gemm` in mixed plans.
+pub fn quant_time(dev: &DeviceSpec, words: usize) -> f64 {
+    3.0 * words as f64 / (dev.cpu_pool_gops * 1e9)
+}
+
+/// CPU conv via the quantized im2col+GEMM lowering, seconds for one
+/// frame: patch-matrix materialization + dynamic patch quantization +
+/// the i8 GEMM at the q8 rate.  The `cpu-gemm-q8` backend's conv cost.
+pub fn conv_time_cpu_gemm_q8(dev: &DeviceSpec, spec: &ConvSpec, threads: usize) -> f64 {
+    let k = spec.in_c * spec.kh * spec.kw;
+    let n = spec.out_h() * spec.out_w();
+    im2col_time(dev, spec) + quant_time(dev, k * n) + gemm_time_cpu_q8(dev, spec.nk, k, n, threads)
+}
+
+/// CPU FC through the quantized GEMM (one frame: quantize the `d_in`
+/// activation vector, then a `(d_out x d_in) · (d_in x 1)` i8 matvec
+/// at quarter weight traffic), seconds.
+pub fn fc_time_cpu_gemm_q8(dev: &DeviceSpec, d_in: usize, d_out: usize, threads: usize) -> f64 {
+    quant_time(dev, d_in) + gemm_time_cpu_q8(dev, d_out, d_in, 1, threads)
+}
+
 /// Time of one FC layer for one frame, seconds.  Public for the
 /// delegate partitioner, which prices CPU-vs-accelerator FC placement
 /// per layer instead of hard-coding the paper's AlexNet-only rule.
@@ -464,6 +503,40 @@ mod tests {
         assert!(t4 < t1);
         assert!(fc_time_cpu_gemm(&dev, 800, 500, 1) > 0.0);
         assert!(im2col_time(&dev, &zoo::alexnet().heaviest_conv().1) > 0.0);
+    }
+
+    #[test]
+    fn q8_rate_exceeds_f32_rate_and_wins_on_big_fc() {
+        for dev in [galaxy_note4(), htc_one_m9()] {
+            assert!(cpu_gemm_q8_rate(&dev, 1) > cpu_gemm_rate(&dev, 1), "{}", dev.name);
+            assert!(cpu_gemm_q8_rate(&dev, 4) > cpu_gemm_q8_rate(&dev, 1), "{}", dev.name);
+            // AlexNet fc6 (9216 -> 4096): weight traffic dominates, so
+            // q8 must undercut both the f32 GEMM and the accelerator.
+            let q8 = fc_time_cpu_gemm_q8(&dev, 9216, 4096, 4);
+            assert!(q8 < fc_time_cpu_gemm(&dev, 9216, 4096, 4), "{}", dev.name);
+            assert!(q8 < fc_time(&dev, 9216, 4096, true, 1.0), "{}", dev.name);
+        }
+    }
+
+    #[test]
+    fn q8_quantization_overhead_protects_small_layers() {
+        // LeNet's convs and its 500x10 head are dominated by the
+        // im2col/quantization streaming passes, not MACs: f32 cpu-gemm
+        // must stay cheaper there, so mixed plans keep them f32.
+        for dev in [galaxy_note4(), htc_one_m9()] {
+            for (_, spec) in zoo::lenet5().conv_specs() {
+                assert!(
+                    conv_time_cpu_gemm(&dev, &spec, 4) < conv_time_cpu_gemm_q8(&dev, &spec, 4),
+                    "{}: q8 must not win a tiny conv",
+                    dev.name
+                );
+            }
+            assert!(
+                fc_time_cpu_gemm(&dev, 500, 10, 4) < fc_time_cpu_gemm_q8(&dev, 500, 10, 4),
+                "{}: q8 must not win the 500x10 head",
+                dev.name
+            );
+        }
     }
 
     #[test]

@@ -58,6 +58,11 @@ pub struct DeviceSpec {
     /// core's im2col+GEMM path: NEON-class SIMD MACs over cache-blocked
     /// operands).  Multiplied by `cpu_mt_speedup` when tile-parallel.
     pub cpu_gemm_gflops: f64,
+    /// Single-thread quantized-GEMM Gop/s (i8 x u8 -> i32 MACs): wider
+    /// SIMD lanes per register plus 4x less weight traffic put this
+    /// ~2.2x above `cpu_gemm_gflops`.  Multiplied by `cpu_mt_speedup`
+    /// when tile-parallel; the `cpu-gemm-q8` backend's rate.
+    pub cpu_gemm_q8_gops: f64,
     /// Sequential CPU Gop/s on simple streaming ops (pool/LRN windows).
     pub cpu_pool_gops: f64,
     /// Multithreaded CPU speedup over sequential for pool/LRN (§6.3).
@@ -108,6 +113,7 @@ pub fn galaxy_note4() -> DeviceSpec {
         cpu_slope_gflops: 4.2e-5,
         cpu_cap_gflops: 0.30,
         cpu_gemm_gflops: 2.0,
+        cpu_gemm_q8_gops: 4.5,
         cpu_pool_gops: 0.30,
         cpu_mt_speedup: 3.4,
         throttle_after_s: 40.0,
@@ -139,6 +145,7 @@ pub fn htc_one_m9() -> DeviceSpec {
         cpu_slope_gflops: 5.0e-5,
         cpu_cap_gflops: 0.30,
         cpu_gemm_gflops: 2.1,
+        cpu_gemm_q8_gops: 4.7,
         cpu_pool_gops: 0.30,
         cpu_mt_speedup: 3.4,
         // Snapdragon 810 was notorious for aggressive thermal limits;

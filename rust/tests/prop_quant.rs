@@ -1,0 +1,254 @@
+//! Property tests on the quantized (q8) inference path:
+//!
+//! (a) quantize/dequantize round trips stay within the analytic error
+//!     bounds — half a step per element for per-row symmetric weights,
+//!     one step for dynamic asymmetric activations — over randomized
+//!     tensors, with exact zeros preserved;
+//! (b) `gemm_q8` tracks the f32 GEMM within the rigorous worst-case
+//!     bound implied by the scales, and is bit-identical across
+//!     thread/tile configurations (integer accumulation is exact);
+//! (c) the fully-quantized forward path agrees with the f32 reference
+//!     on the bundled fixture set (the accuracy guardrail's 100%
+//!     top-1 bar);
+//! (d) plan level: with the q8 backend registered, the partitioner
+//!     sends traffic-bound layers (AlexNet's fc6) to `cpu-gemm-q8`
+//!     under a q8-favorable `DeviceSpec` while dispatch-dominated
+//!     layers stay on `cpu-gemm` — a genuinely mixed-precision plan.
+
+use cnndroid::coordinator::plan::LayerPlan;
+use cnndroid::cpu;
+use cnndroid::delegate::{Partitioner, Registry};
+use cnndroid::kernels::{
+    self, quantize_activations, KernelOpts, PackedModel, QuantizedWeights,
+};
+use cnndroid::model::weights::Params;
+use cnndroid::model::zoo;
+use cnndroid::prop_assert;
+use cnndroid::simulator::device::{all_devices, galaxy_note4};
+use cnndroid::tensor::{MatView, Tensor};
+use cnndroid::util::prop;
+use cnndroid::util::rng::Pcg;
+
+/// LeNet plus the shared synthetic-weight fixture (seed 45 is the
+/// guardrail-verified stream; see `Params::synthetic`).
+fn synth_lenet_params(seed: u64) -> (cnndroid::model::network::Network, Params) {
+    let net = zoo::lenet5();
+    let params = Params::synthetic(&net, seed, 0.1);
+    (net, params)
+}
+
+#[test]
+fn weight_roundtrip_error_bounded_by_half_step() {
+    prop::check("q8 weight round trip", |rng| {
+        let rows = rng.range(1, 12) as usize;
+        let cols = rng.range(1, 200) as usize;
+        let std = rng.range_f64(0.01, 2.0) as f32;
+        let w = rng.normal_vec(rows * cols, std);
+        let qw = QuantizedWeights::quantize_rows(&w, rows, cols);
+        let back = qw.dequantize();
+        for r in 0..rows {
+            // Symmetric rounding: at most half a quantization step.
+            let bound = qw.scales[r] * 0.5 + 1e-6;
+            for c in 0..cols {
+                let diff = (back[r * cols + c] - w[r * cols + c]).abs();
+                prop_assert!(
+                    diff <= bound,
+                    "row {r} col {c}: diff {diff} > bound {bound} (scale {})",
+                    qw.scales[r]
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn activation_roundtrip_error_bounded_by_one_step() {
+    prop::check("q8 activation round trip", |rng| {
+        let n = rng.range(1, 400) as usize;
+        let std = rng.range_f64(0.01, 3.0) as f32;
+        let mut x = rng.normal_vec(n, std);
+        // Sprinkle exact zeros (padding / post-ReLU) — they must
+        // survive the round trip exactly.
+        for i in 0..n {
+            if rng.below(4) == 0 {
+                x[i] = 0.0;
+            }
+        }
+        let mut q = vec![0u8; n];
+        let aq = quantize_activations(&x, &mut q);
+        // One step: half for rounding, half for the zero-point shift.
+        let bound = aq.scale + 1e-6;
+        for i in 0..n {
+            let back = aq.scale * (q[i] as i32 - aq.zp) as f32;
+            let diff = (back - x[i]).abs();
+            prop_assert!(diff <= bound, "x[{i}]={}: diff {diff} > {bound}", x[i]);
+            if x[i] == 0.0 {
+                prop_assert!(back == 0.0, "exact zero became {back}");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn gemm_q8_tracks_f32_within_the_analytic_bound() {
+    prop::check("q8 gemm error bound", |rng| {
+        let m = rng.range(1, 24) as usize;
+        let k = rng.range(1, 300) as usize;
+        let n = rng.range(1, 40) as usize;
+        let w = rng.normal_vec(m * k, 0.5);
+        let x = rng.normal_vec(k * n, 1.0);
+        let bias = rng.normal_vec(m, 0.1);
+        // f32 reference through the production GEMM.
+        let mut exact = vec![0.0f32; m * n];
+        kernels::gemm_into(
+            MatView::dense(&w, m, k),
+            MatView::dense(&x, k, n),
+            kernels::BiasMode::PerRow(&bias),
+            false,
+            KernelOpts::seq(),
+            &mut exact,
+        );
+        // Quantized product.
+        let qw = QuantizedWeights::quantize_rows(&w, m, k);
+        let mut aq = vec![0u8; k * n];
+        let act = quantize_activations(&x, &mut aq);
+        let mut got = vec![0.0f32; m * n];
+        kernels::gemm_q8_into(&qw, &aq, n, act, &bias, false, KernelOpts::seq(), &mut got);
+        // Worst-case per element for row i:
+        //   sum_k |w dA| + |a dW| + |dW dA|
+        //   <= k * (127 ws * as + 255 as * ws/2 + ws * as)
+        //   <= 255 * k * ws_i * as        (generous)
+        // plus slack for the f32 reference's own summation rounding.
+        let c_max = exact.iter().fold(0.0f32, |mm, v| mm.max(v.abs()));
+        for i in 0..m {
+            let bound = 255.0 * k as f32 * qw.scales[i] * act.scale + 1e-3 * (1.0 + c_max);
+            for j in 0..n {
+                let diff = (got[i * n + j] - exact[i * n + j]).abs();
+                prop_assert!(
+                    diff <= bound,
+                    "({i},{j}) of {m}x{k}x{n}: diff {diff} > bound {bound}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn q8_forward_is_bit_identical_across_tile_configs() {
+    let (net, params) = synth_lenet_params(45);
+    let packed = PackedModel::prepare_q8(&net, &params).unwrap();
+    let mut rng = Pcg::seeded(7);
+    let x = Tensor::new(vec![3, 1, 28, 28], rng.normal_vec(3 * 28 * 28, 0.5));
+    let seq = cpu::forward_q8(&net, &packed, &x, KernelOpts::seq()).unwrap();
+    let tiled = cpu::forward_q8(&net, &packed, &x, KernelOpts { threads: 8, tile: 16 }).unwrap();
+    assert_eq!(seq, tiled, "integer accumulation must make tiling invisible");
+}
+
+#[test]
+fn q8_forward_matches_f32_within_small_logit_error() {
+    let (net, params) = synth_lenet_params(45);
+    let packed_f32 = PackedModel::prepare(&net, &params).unwrap();
+    let packed_q8 = PackedModel::prepare_q8(&net, &params).unwrap();
+    let digits: Vec<Tensor> =
+        (0..10).map(|l| cnndroid::data::synth::render_digit(l, 0.0, 0.0, 1.0)).collect();
+    let x = Tensor::stack(&digits);
+    let reference =
+        cpu::forward_packed(&net, &params, &packed_f32, &x, &cpu::ForwardOpts::fast()).unwrap();
+    let quantized = cpu::forward_q8(&net, &packed_q8, &x, KernelOpts::tiled()).unwrap();
+    let diff = quantized.max_abs_diff(&reference);
+    assert!(diff < 0.5, "q8 logits drifted {diff} from f32");
+}
+
+/// The accuracy guardrail's bar, asserted end to end: 100% top-1
+/// agreement on the bundled fixture set (the ten canonical digit
+/// renders) — which is exactly what gates `cpu-gemm-q8` registration
+/// for `delegate:auto...:q8`.
+#[test]
+fn guardrail_reports_full_agreement_on_the_fixture_set() {
+    let (net, params) = synth_lenet_params(45);
+    let (agree, total) = cnndroid::delegate::q8_agreement(&net, &params).unwrap();
+    assert_eq!(total, 10);
+    assert_eq!(agree, total, "top-1 agreement must be 100% ({agree}/{total})");
+    assert!(cnndroid::delegate::q8_eligible(&net, &params));
+}
+
+#[test]
+fn partitioner_sends_large_fc_to_q8_under_a_favorable_device() {
+    // A q8-favorable profile: stock Note 4 with the quantized GEMM rate
+    // doubled (a big.LITTLE core with sdot-class i8 instructions).
+    let mut dev = galaxy_note4();
+    dev.cpu_gemm_q8_gops *= 2.0;
+    let reg = Registry::simulated().with_q8();
+    let rep = Partitioner::new(&reg, &dev).partition(&zoo::alexnet()).unwrap();
+    let fc6 = rep.assignments.iter().find(|a| a.layer == "fc6").unwrap();
+    assert_eq!(fc6.backend, "cpu-gemm-q8", "fc6 went to {}", fc6.backend);
+    // The lowered plan entry is the quantized FC kernel.
+    let li = rep.assignments.iter().position(|a| a.layer == "fc6").unwrap();
+    match &rep.plan.layers[li] {
+        LayerPlan::FcCpuQ8 { relu, .. } => assert!(*relu, "fc6 carries its ReLU"),
+        other => panic!("fc6 lowered to {other:?}"),
+    }
+}
+
+#[test]
+fn auto_plans_mix_q8_and_f32_per_layer() {
+    // The acceptance criterion: with the q8 backend registered, LeNet
+    // comes out genuinely mixed on both Table-1 devices — the
+    // traffic-bound 800x500 fc1 quantizes, while the tiny convs and
+    // the 500x10 head stay on the f32 GEMM backend (their
+    // im2col/quantization streaming passes dominate).
+    for dev in all_devices() {
+        let reg = Registry::simulated().with_q8();
+        let rep = Partitioner::new(&reg, &dev).partition(&zoo::lenet5()).unwrap();
+        let backend_of = |name: &str| {
+            rep.assignments.iter().find(|a| a.layer == name).unwrap().backend.clone()
+        };
+        assert_eq!(backend_of("fc1"), "cpu-gemm-q8", "{}", dev.name);
+        assert_eq!(backend_of("conv1"), "cpu-gemm", "{}", dev.name);
+        assert_eq!(backend_of("conv2"), "cpu-gemm", "{}", dev.name);
+        assert_eq!(backend_of("fc2"), "cpu-gemm", "{}", dev.name);
+        let q8_layers = rep.plan.layers.iter().filter(|l| l.on_q8()).count();
+        assert_eq!(q8_layers, 1, "{}: exactly fc1 quantizes", dev.name);
+    }
+}
+
+#[test]
+fn q8_registration_does_not_perturb_f32_only_plans() {
+    // Adding the q8 backend must never make a plan *worse*: its cost
+    // is finite only where it wins, and ties break toward lower
+    // registry indices (q8 is appended last).
+    for dev in all_devices() {
+        for net in zoo::all() {
+            let base_reg = Registry::simulated();
+            let base = Partitioner::new(&base_reg, &dev).partition(&net).unwrap();
+            let q8_reg = Registry::simulated().with_q8();
+            let with_q8 = Partitioner::new(&q8_reg, &dev).partition(&net).unwrap();
+            assert!(
+                with_q8.predicted_s <= base.predicted_s * (1.0 + 1e-9),
+                "{}/{}: q8 registry made the plan slower ({} > {})",
+                dev.name,
+                net.name,
+                with_q8.predicted_s,
+                base.predicted_s
+            );
+        }
+    }
+}
+
+#[test]
+fn batched_partition_respects_max_batch_with_q8_registered() {
+    // cpu-gemm-q8 is batch-unbounded; accelerators cap at 1.  A
+    // batch-16 plan over the full registry must keep everything on the
+    // CPU backends and still be buildable.
+    let dev = galaxy_note4();
+    let reg = Registry::simulated().with_q8();
+    let rep = Partitioner::new(&reg, &dev).with_batch(16).partition(&zoo::alexnet()).unwrap();
+    assert!(rep.plan.layers.iter().all(|l| !l.on_accel()));
+    assert!(
+        rep.assignments.iter().all(|a| a.backend.starts_with("cpu")),
+        "over-batch placement leaked to an accelerator"
+    );
+}
