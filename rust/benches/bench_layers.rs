@@ -13,7 +13,10 @@
 //! tracked in CI from this PR on.
 
 use cnndroid::cpu::{par, seq};
-use cnndroid::kernels::{self, KernelOpts, PackedConv, PackedConvQ8, PackedFcQ8};
+use cnndroid::kernels::{
+    self, ConvSource, KernelOpts, PackedConv, PackedConvQ8, PackedFcQ8, TailOp,
+};
+use cnndroid::model::network::PoolMode;
 use cnndroid::model::manifest::{default_dir, Manifest};
 use cnndroid::model::zoo;
 use cnndroid::runtime::Runtime;
@@ -235,6 +238,90 @@ fn main() {
             Err(e) => eprintln!("  (could not write {path}: {e})"),
         }
         b.speedup_table("q8/alexnet-fc6/gemm-f32-tiled");
+    }
+
+    // --- fusion: conv→ReLU→pool chains fused vs unfused (the stage-IR
+    //     acceptance benchmark).  The AlexNet chains use overlapping
+    //     3x3/s2 pools (the two-phase schedule); batch > 1 makes the
+    //     eliminated whole-batch intermediate visible.  LeNet's 2x2/s2
+    //     chain exercises the band-local schedule.  Emits
+    //     BENCH_fusion.json. ---
+    let mut fusion_records = Vec::new();
+    {
+        let fusion_case = |b: &mut Bench,
+                               name: &str,
+                               spec: &cnndroid::model::network::ConvSpec,
+                               (psize, pstride): (usize, usize),
+                               batch: usize,
+                               seed: u64|
+         -> Option<Json> {
+            let x = random(vec![batch, spec.in_c, spec.in_h, spec.in_w], seed);
+            let w = random(vec![spec.nk, spec.in_c, spec.kh, spec.kw], seed + 1);
+            let bias = random(vec![spec.nk], seed + 2);
+            let packed = PackedConv::pack(spec, &w, &bias);
+            let ops =
+                [TailOp::Pool { mode: PoolMode::Max, size: psize, stride: pstride, relu: false }];
+            let unfused_name = format!("fusion/{name}/unfused");
+            let fused_name = format!("fusion/{name}/fused");
+            b.case(&unfused_name, || {
+                let y = kernels::conv_im2col(&x, &packed, KernelOpts::tiled());
+                kernels::maxpool_nchw(&y, psize, pstride, KernelOpts::tiled());
+            });
+            b.case(&fused_name, || {
+                kernels::conv_stage(&x, ConvSource::F32(&packed), &ops, KernelOpts::tiled());
+            });
+            let (Some(u), Some(f)) = (b.mean_of(&unfused_name), b.mean_of(&fused_name)) else {
+                return None;
+            };
+            // Sanity: the timed fused path must be bit-identical to the
+            // timed unfused path.
+            {
+                let fused =
+                    kernels::conv_stage(&x, ConvSource::F32(&packed), &ops, KernelOpts::tiled());
+                let unfused = kernels::maxpool_nchw(
+                    &kernels::conv_im2col(&x, &packed, KernelOpts::tiled()),
+                    psize,
+                    pstride,
+                    KernelOpts::tiled(),
+                );
+                assert_eq!(fused, unfused, "{name}: fused diverged from unfused");
+            }
+            Some(Json::obj(vec![
+                ("chain", Json::str(name)),
+                ("signature", Json::str(spec.signature())),
+                ("pool", Json::str(format!("max{psize}x{psize}s{pstride}"))),
+                ("batch", Json::num(batch as f64)),
+                ("unfused_ms", Json::num(u.as_secs_f64() * 1e3)),
+                ("fused_ms", Json::num(f.as_secs_f64() * 1e3)),
+                ("speedup", Json::num(u.as_secs_f64() / f.as_secs_f64())),
+            ]))
+        };
+        // AlexNet conv1→(relu)→pool1 and conv5→(relu)→pool5.
+        if let Some(r) = fusion_case(&mut b, "alexnet-conv1-pool1", &pick("conv1"), (3, 2), 4, 100)
+        {
+            fusion_records.push(r);
+        }
+        if let Some(r) = fusion_case(&mut b, "alexnet-conv5-pool5", &pick("conv5"), (3, 2), 4, 104)
+        {
+            fusion_records.push(r);
+        }
+        // LeNet conv2→pool2 (band-local schedule, batch 1 serving).
+        if let Some(r) = fusion_case(&mut b, "lenet5-conv2-pool2", &lespec, (2, 2), 1, 108) {
+            fusion_records.push(r);
+        }
+    }
+    if !fusion_records.is_empty() {
+        let doc = Json::obj(vec![
+            ("bench", Json::str("bench_layers/fusion")),
+            ("unit", Json::str("ms")),
+            ("cases", Json::arr(fusion_records)),
+        ]);
+        let path = "BENCH_fusion.json";
+        match std::fs::write(path, doc.dump()) {
+            Ok(()) => println!("  (fusion results written to {path})"),
+            Err(e) => eprintln!("  (could not write {path}: {e})"),
+        }
+        b.speedup_table("fusion/alexnet-conv1-pool1/unfused");
     }
 
     // --- layout swaps (the "dimension swapping" cost the Fig. 5

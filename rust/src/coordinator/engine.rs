@@ -1,6 +1,11 @@
-//! The layerwise inference engine: executes an [`ExecutionPlan`]
-//! against the PJRT runtime and the CPU substrate, with the Fig. 5
-//! pipeline hiding layout swaps in accelerator-busy windows.
+//! The stage-granular inference engine: executes an [`ExecutionPlan`]
+//! through its fused-stage grouping ([`ExecutionPlan::fuse`]) against
+//! the PJRT runtime and the CPU substrate, with the Fig. 5 pipeline
+//! hiding layout swaps in accelerator-busy windows.  Fused stages
+//! (conv→ReLU→pool chains, pool→LRN runs) execute through the
+//! [`crate::kernels::fuse`] kernels, so intermediate activations live
+//! in per-stage tile scratch instead of whole-batch tensors;
+//! single-layer stages keep the layerwise path.
 //!
 //! An `Engine` is deliberately **not** `Send` (the PJRT client is
 //! `Rc`-based): it lives on one engine thread, exactly like the paper's
@@ -14,8 +19,8 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::coordinator::pipeline::{run_pipeline, PipelineTrace};
-use crate::coordinator::plan::{ExecutionPlan, LayerPlan};
-use crate::kernels::{self, KernelOpts, KernelVariant, PackedModel};
+use crate::coordinator::plan::{ExecutionPlan, FusedStage, LayerPlan};
+use crate::kernels::{self, KernelOpts, KernelVariant, PackedModel, TailOp};
 use crate::model::manifest::Manifest;
 use crate::model::network::{Network, PoolMode};
 use crate::model::weights::{load_weights, Params};
@@ -57,9 +62,13 @@ pub struct Engine {
     net: Network,
     params: Params,
     /// GEMM-ready weight cache, packed once at load time (CNNdroid's
-    /// model-preparation step) and reused by every CPU-placed conv.
+    /// model-preparation step) and reused by every CPU-placed conv;
+    /// also caches each fused stage's tail ops.
     packed: PackedModel,
     plan: ExecutionPlan,
+    /// The fused-stage grouping of `plan` this engine executes
+    /// (`ExecutionPlan::fuse`, or layerwise under `:nofuse`).
+    stages: Vec<FusedStage>,
     cfg: EngineConfig,
     /// Per-layer weights pre-swapped to the artifact layout (the
     /// weight half of "dimension swapping") and uploaded to
@@ -94,7 +103,12 @@ impl Engine {
         // methods keep the hand-authored DESIGN §7 plans (strict, so
         // config errors surface) — including "cpu-gemm-q8", which
         // forces the full quantized CPU path.
-        let plan = match crate::delegate::auto_spec(&cfg.method)? {
+        let auto = crate::delegate::auto_spec(&cfg.method)?;
+        // Fixed methods always run the fused-stage IR (fused stages
+        // are bit-identical to the layerwise path); the auto selector
+        // can opt back into layerwise execution with ":nofuse".
+        let fuse_plan = auto.as_ref().map(|s| s.fuse).unwrap_or(true);
+        let plan = match auto {
             Some(spec) => {
                 let q8_params = if spec.q8 { Some(&params) } else { None };
                 let outcome = crate::delegate::plan_or_fallback(
@@ -159,17 +173,34 @@ impl Engine {
             .filter(|l| l.on_q8())
             .map(|l| l.name().to_string())
             .collect();
-        let packed = if im2col_convs.is_empty() && q8_layers.is_empty() {
+        let mut packed = if im2col_convs.is_empty() && q8_layers.is_empty() {
             PackedModel::default()
         } else {
             PackedModel::prepare_mixed(&net, &params, Some(&im2col_convs), Some(&q8_layers))?
         };
+
+        // Group the plan into fused stages and cache each conv-led
+        // stage's tail ops alongside its packed weights, so
+        // per-inference dispatch never re-walks the plan.
+        let stages = if fuse_plan { plan.fuse() } else { plan.unfused_stages() };
+        for st in &stages {
+            if !st.is_fused() {
+                continue;
+            }
+            let head = &plan.layers[st.start];
+            if matches!(head, LayerPlan::ConvCpu { .. } | LayerPlan::ConvCpuQ8 { .. }) {
+                if let Some(ops) = plan.stage_tail_ops(st) {
+                    packed.set_stage_tail(head.name(), ops);
+                }
+            }
+        }
         let engine = Engine {
             runtime,
             net,
             params,
             packed,
             plan,
+            stages,
             cfg,
             dev_weights,
             dev_flat: RefCell::new(None),
@@ -202,6 +233,11 @@ impl Engine {
 
     pub fn plan(&self) -> &ExecutionPlan {
         &self.plan
+    }
+
+    /// The fused-stage grouping this engine executes.
+    pub fn stages(&self) -> &[FusedStage] {
+        &self.stages
     }
 
     pub fn runtime(&self) -> &Rc<Runtime> {
@@ -248,10 +284,11 @@ impl Engine {
             self.traces.borrow_mut().clear();
         }
         let mut act = x.clone();
-        for li in 0..self.plan.layers.len() {
+        for si in 0..self.stages.len() {
+            let st = self.stages[si].clone();
             let t0 = Instant::now();
-            act = self.run_layer(li, act)?;
-            self.record_time(self.plan.layers[li].name(), t0.elapsed().as_secs_f64());
+            act = self.run_stage(&st, act)?;
+            self.record_time(&self.plan.stage_name(&st), t0.elapsed().as_secs_f64());
         }
         *self.batches.borrow_mut() += 1;
         *self.frames.borrow_mut() += n;
@@ -295,6 +332,72 @@ impl Engine {
         let mut args: Vec<Arg> = vec![Arg::Host(x)];
         args.extend(bufs.iter().map(Arg::Dev));
         art.run_args(&args)
+    }
+
+    /// Execute one fused stage: single-layer stages keep the layerwise
+    /// path; multi-layer stages run through the fused kernels, so
+    /// intermediate activations stay in per-stage tile scratch instead
+    /// of whole-batch tensors.
+    fn run_stage(&self, st: &FusedStage, act: Tensor) -> Result<Tensor> {
+        if !st.is_fused() {
+            return self.run_layer(st.start, act);
+        }
+        let head = self.plan.layers[st.start].clone();
+        match head {
+            LayerPlan::ConvCpu { name, tiled, .. } => {
+                let opts = if tiled { KernelOpts::tiled() } else { KernelOpts::seq() };
+                let pc = self
+                    .packed
+                    .conv(&name)
+                    .ok_or_else(|| anyhow::anyhow!("no packed conv for {name}"))?;
+                let ops = self.stage_ops(&name, st)?;
+                Ok(kernels::conv_stage(&act, kernels::ConvSource::F32(pc), &ops, opts))
+            }
+            LayerPlan::ConvCpuQ8 { name, .. } => {
+                let pc = self
+                    .packed
+                    .conv_q8(&name)
+                    .ok_or_else(|| anyhow::anyhow!("no packed q8 conv for {name}"))?;
+                let ops = self.stage_ops(&name, st)?;
+                Ok(kernels::conv_stage(
+                    &act,
+                    kernels::ConvSource::Q8(pc),
+                    &ops,
+                    KernelOpts::tiled(),
+                ))
+            }
+            LayerPlan::Pool { .. } | LayerPlan::Lrn { .. } => {
+                let parallel = self.plan.layers[st.start..st.end].iter().any(|l| {
+                    matches!(
+                        l,
+                        LayerPlan::Pool { parallel: true, .. }
+                            | LayerPlan::Lrn { parallel: true, .. }
+                    )
+                });
+                let opts = if parallel { KernelOpts::tiled() } else { KernelOpts::seq() };
+                let ops = self
+                    .plan
+                    .stage_tail_ops(st)
+                    .ok_or_else(|| anyhow::anyhow!("tail stage without tail ops"))?;
+                Ok(kernels::tail_stage(&act, &ops, opts))
+            }
+            other => {
+                anyhow::bail!("plan entry {:?} cannot head a fused stage", other.name())
+            }
+        }
+    }
+
+    /// Tail ops of a conv-led fused stage: the load-time cache in the
+    /// `PackedModel` first (borrowed, no per-inference copy), the plan
+    /// grouping as fallback.
+    fn stage_ops(&self, head: &str, st: &FusedStage) -> Result<std::borrow::Cow<'_, [TailOp]>> {
+        if let Some(ops) = self.packed.stage_tail(head) {
+            return Ok(std::borrow::Cow::Borrowed(ops));
+        }
+        self.plan
+            .stage_tail_ops(st)
+            .map(std::borrow::Cow::Owned)
+            .ok_or_else(|| anyhow::anyhow!("fused stage headed by {head} has no tail ops"))
     }
 
     fn run_layer(&self, li: usize, act: Tensor) -> Result<Tensor> {
@@ -549,6 +652,50 @@ mod tests {
                 eng.classify(&imgs).unwrap().into_iter().map(|(l, _)| l).collect();
             assert_eq!(labels, baseline, "{method}");
         }
+    }
+
+    #[test]
+    fn fused_and_layerwise_auto_plans_agree_bitwise() {
+        // The fused-stage IR must be a pure execution-schedule change:
+        // "delegate:auto" (fused) and "delegate:auto:nofuse"
+        // (layerwise) produce bit-identical logits.
+        let dir = default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let (imgs, _) = crate::data::synth::make_dataset(3, 37, 0.05);
+        let fused = engine("lenet5", "delegate:auto").unwrap();
+        let layerwise = engine("lenet5", "delegate:auto:nofuse").unwrap();
+        assert!(
+            fused.stages().iter().any(|s| s.is_fused()),
+            "lenet auto plan should fuse conv+pool chains: {:?}",
+            fused.stages()
+        );
+        assert_eq!(layerwise.stages().len(), layerwise.plan().layers.len());
+        let a = fused.infer_batch(&imgs).unwrap();
+        let b = layerwise.infer_batch(&imgs).unwrap();
+        assert_eq!(a, b, "fused vs layerwise logits must be bit-identical");
+    }
+
+    #[test]
+    fn q8_fused_stages_agree_with_layerwise() {
+        // Same contract on the forced-q8 plan (ConvCpuQ8 heads).
+        let dir = default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let (imgs, _) = crate::data::synth::make_dataset(2, 41, 0.05);
+        let fused = engine("lenet5", "cpu-gemm-q8").unwrap();
+        assert!(fused.stages().iter().any(|s| s.is_fused()), "q8 plan should fuse");
+        let got = fused.infer_batch(&imgs).unwrap();
+        // Layerwise q8 reference via the forward path (same kernels,
+        // unfused).
+        let packed = PackedModel::prepare_q8(fused.network(), &fused.params).unwrap();
+        let want =
+            crate::cpu::forward_q8(fused.network(), &packed, &imgs, KernelOpts::tiled()).unwrap();
+        assert_eq!(got, want, "fused q8 vs layerwise q8 must be bit-identical");
     }
 
     #[test]

@@ -10,7 +10,7 @@
 
 use std::fmt;
 
-use crate::kernels::KernelVariant;
+use crate::kernels::{KernelVariant, TailOp};
 use crate::model::manifest::Manifest;
 use crate::model::network::{ConvSpec, Layer, Network, PoolMode};
 use crate::Result;
@@ -115,6 +115,34 @@ impl LayerPlan {
     /// True when the stage executes through the quantized i8 kernels.
     pub fn on_q8(&self) -> bool {
         matches!(self, LayerPlan::ConvCpuQ8 { .. } | LayerPlan::FcCpuQ8 { .. })
+    }
+}
+
+/// One stage of the fused-stage IR: a contiguous run `[start, end)` of
+/// plan layers the engine executes as a unit.  Multi-layer stages run
+/// through the fused kernels ([`crate::kernels::fuse`]) with
+/// intermediate activations in per-stage tile scratch; single-layer
+/// stages keep the layerwise path (FC→ReLU stages are single-layer
+/// because the ReLU is already fused into the GEMM epilogue).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FusedStage {
+    pub start: usize,
+    /// Exclusive end index into `ExecutionPlan::layers`.
+    pub end: usize,
+}
+
+impl FusedStage {
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+
+    /// Does this stage fuse more than one plan layer?
+    pub fn is_fused(&self) -> bool {
+        self.len() > 1
     }
 }
 
@@ -231,6 +259,113 @@ impl ExecutionPlan {
             layers.push(plan);
         }
         Ok(ExecutionPlan { net: net.name.clone(), method: method.to_string(), layers, nhwc })
+    }
+
+    /// Can this plan entry head a fused stage?  CPU convs lowered to
+    /// im2col (f32 or q8) own a banded GEMM epilogue the tail can
+    /// consume; direct-nest and accelerator convs cannot.
+    fn fusable_head(lp: &LayerPlan) -> bool {
+        matches!(
+            lp,
+            LayerPlan::ConvCpu { variant: KernelVariant::Im2col, .. } | LayerPlan::ConvCpuQ8 { .. }
+        )
+    }
+
+    /// Can this plan entry ride a stage tail?
+    fn fusable_tail(lp: &LayerPlan) -> bool {
+        matches!(lp, LayerPlan::Pool { .. } | LayerPlan::Lrn { .. })
+    }
+
+    /// The fusion pass: group the layer plan into [`FusedStage`]s.
+    ///
+    /// * A CPU im2col conv (f32 or q8) absorbs the following run of
+    ///   pool/LRN layers — the conv→ReLU→pool chain (ReLU is already
+    ///   fused into the GEMM epilogue) with LRN folded in as a
+    ///   post-band normalization.
+    /// * A run of two or more consecutive pool/LRN layers with no
+    ///   fusable conv head (e.g. pool1→norm1 after an accelerated
+    ///   conv) fuses into a tail-only stage.
+    /// * Everything else — accelerated layers, direct-nest convs, FC
+    ///   layers (whose ReLU is already fused) — stays a single-layer
+    ///   stage.
+    ///
+    /// Stages partition `layers` exactly, in order, so stage-granular
+    /// execution visits every layer once.
+    pub fn fuse(&self) -> Vec<FusedStage> {
+        let n = self.layers.len();
+        let mut stages = Vec::new();
+        let mut i = 0;
+        while i < n {
+            let mut j = i + 1;
+            // A lone pool/LRN extends nothing and stays single-layer.
+            if Self::fusable_head(&self.layers[i]) || Self::fusable_tail(&self.layers[i]) {
+                while j < n && Self::fusable_tail(&self.layers[j]) {
+                    j += 1;
+                }
+            }
+            stages.push(FusedStage { start: i, end: j });
+            i = j;
+        }
+        stages
+    }
+
+    /// Layerwise stages — the `delegate:auto...:nofuse` escape hatch
+    /// and the reference the fusion property tests compare against.
+    pub fn unfused_stages(&self) -> Vec<FusedStage> {
+        (0..self.layers.len()).map(|i| FusedStage { start: i, end: i + 1 }).collect()
+    }
+
+    /// Metrics/report label of a stage: member layer names joined with
+    /// `+` (a single-layer stage keeps its layer name, so layerwise
+    /// metrics are unchanged for unfused plans).
+    pub fn stage_name(&self, st: &FusedStage) -> String {
+        self.layers[st.start..st.end]
+            .iter()
+            .map(|l| l.name())
+            .collect::<Vec<_>>()
+            .join("+")
+    }
+
+    /// Stage kind for reports: `conv+tail` (fused conv-led), `tail`
+    /// (fused pool/LRN run), or `layer`.
+    pub fn stage_kind(&self, st: &FusedStage) -> &'static str {
+        if st.is_fused() {
+            if Self::fusable_head(&self.layers[st.start]) {
+                "conv+tail"
+            } else {
+                "tail"
+            }
+        } else {
+            "layer"
+        }
+    }
+
+    /// Tail ops of a fused stage in execution order: the members after
+    /// the conv head, or every member of a tail-only stage.  None for
+    /// single-layer stages (nothing to fuse) or if a member is not a
+    /// pool/LRN plan entry (impossible for stages from [`Self::fuse`]).
+    pub fn stage_tail_ops(&self, st: &FusedStage) -> Option<Vec<TailOp>> {
+        if !st.is_fused() {
+            return None;
+        }
+        let from =
+            if Self::fusable_head(&self.layers[st.start]) { st.start + 1 } else { st.start };
+        let mut ops = Vec::with_capacity(st.end - from);
+        for lp in &self.layers[from..st.end] {
+            match lp {
+                LayerPlan::Pool { mode, size, stride, relu, .. } => ops.push(TailOp::Pool {
+                    mode: *mode,
+                    size: *size,
+                    stride: *stride,
+                    relu: *relu,
+                }),
+                LayerPlan::Lrn { size, alpha, beta, k, .. } => {
+                    ops.push(TailOp::Lrn { size: *size, alpha: *alpha, beta: *beta, k: *k })
+                }
+                _ => return None,
+            }
+        }
+        Some(ops)
     }
 
     /// Artifact names this plan dispatches (for preloading).
@@ -353,6 +488,68 @@ mod tests {
         let m = empty_manifest(&[]);
         let plan = ExecutionPlan::build(&m, &zoo::alexnet(), "cpu-seq").unwrap();
         assert!(plan.layers.iter().all(|l| !l.on_accel()));
+    }
+
+    #[test]
+    fn q8_plan_fuses_conv_pool_chains() {
+        let m = empty_manifest(&[]);
+        let plan = ExecutionPlan::build(&m, &zoo::lenet5(), crate::CPU_GEMM_Q8).unwrap();
+        let stages = plan.fuse();
+        // [conv1+pool1][conv2+pool2][fc1][fc2]
+        let names: Vec<String> = stages.iter().map(|s| plan.stage_name(s)).collect();
+        assert_eq!(names, vec!["conv1+pool1", "conv2+pool2", "fc1", "fc2"]);
+        assert_eq!(plan.stage_kind(&stages[0]), "conv+tail");
+        assert_eq!(plan.stage_kind(&stages[2]), "layer");
+        // Stages partition the plan exactly.
+        assert_eq!(stages.iter().map(|s| s.len()).sum::<usize>(), plan.layers.len());
+        assert_eq!(stages[0].start, 0);
+        for w in stages.windows(2) {
+            assert_eq!(w[0].end, w[1].start);
+        }
+        // Tail ops carry the pool geometry.
+        let ops = plan.stage_tail_ops(&stages[0]).unwrap();
+        assert_eq!(
+            ops,
+            vec![crate::kernels::TailOp::Pool {
+                mode: PoolMode::Max,
+                size: 2,
+                stride: 2,
+                relu: false
+            }]
+        );
+        assert!(plan.stage_tail_ops(&stages[2]).is_none(), "fc stays single-layer");
+    }
+
+    #[test]
+    fn cpu_seq_plan_fuses_only_tail_runs() {
+        // Direct-nest convs have no banded epilogue, so the §4.1
+        // baseline keeps them layerwise; AlexNet's pool→norm runs
+        // still fuse into tail-only stages.
+        let m = empty_manifest(&[]);
+        let plan = ExecutionPlan::build(&m, &zoo::alexnet(), "cpu-seq").unwrap();
+        let stages = plan.fuse();
+        let names: Vec<String> = stages.iter().map(|s| plan.stage_name(s)).collect();
+        assert!(names.contains(&"pool1+norm1".to_string()), "{names:?}");
+        assert!(names.contains(&"pool2+norm2".to_string()), "{names:?}");
+        assert!(names.contains(&"conv1".to_string()), "direct conv unfused: {names:?}");
+        assert!(names.contains(&"pool5".to_string()), "lone pool unfused: {names:?}");
+        let tail = stages.iter().find(|s| plan.stage_name(s) == "pool1+norm1").unwrap();
+        assert_eq!(plan.stage_kind(tail), "tail");
+        assert_eq!(plan.stage_tail_ops(tail).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn unfused_stages_are_layerwise() {
+        let m = empty_manifest(&[]);
+        let plan = ExecutionPlan::build(&m, &zoo::lenet5(), crate::CPU_GEMM_Q8).unwrap();
+        let stages = plan.unfused_stages();
+        assert_eq!(stages.len(), plan.layers.len());
+        assert!(stages.iter().all(|s| !s.is_fused()));
+        // Single-layer stage names are the layer names (metrics keys
+        // unchanged for unfused plans).
+        for (s, l) in stages.iter().zip(&plan.layers) {
+            assert_eq!(plan.stage_name(s), l.name());
+        }
     }
 
     #[test]

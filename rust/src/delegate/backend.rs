@@ -71,6 +71,12 @@ pub struct Capability {
     /// partitioner's backend choice therefore selects the lowering per
     /// layer wherever the cost model predicts a win.
     pub kernel: KernelVariant,
+    /// Conv placements own a banded GEMM epilogue that fused-stage
+    /// execution can extend with pool/LRN tails
+    /// ([`crate::kernels::fuse`]).  The partitioner grants the
+    /// fusion memory-traffic credit ([`cost::fusion_saving`]) only on
+    /// conv→tail edges leaving such a backend.
+    pub fused_epilogue: bool,
 }
 
 impl Capability {
@@ -133,6 +139,7 @@ impl CpuSeqBackend {
                 max_batch: None,
                 needs_artifacts: false,
                 kernel: KernelVariant::Direct,
+                fused_epilogue: false,
             },
         }
     }
@@ -220,6 +227,7 @@ impl CpuParBackend {
                 max_batch: None,
                 needs_artifacts: false,
                 kernel: KernelVariant::Direct,
+                fused_epilogue: false,
             },
         }
     }
@@ -285,7 +293,11 @@ impl Backend for CpuParBackend {
 /// [`CpuSeqBackend`] turns the partitioner's backend choice into a
 /// per-layer lowering decision — small dispatch-dominated convs land
 /// here instead of paying accelerator launch overhead, big convs still
-/// accelerate.
+/// accelerate.  Since the fused-stage IR, it also runs pool/LRN (the
+/// same tile-parallel kernels `cpu-par` dispatches), so a fusable
+/// conv→pool chain can live entirely on this backend and the DP's
+/// fusion credit never has to split a chain just to reach a
+/// pool-capable backend.
 pub struct CpuGemmBackend {
     cap: Capability,
 }
@@ -294,11 +306,12 @@ impl CpuGemmBackend {
     pub fn new() -> CpuGemmBackend {
         CpuGemmBackend {
             cap: Capability {
-                kinds: vec!["conv", "fc"],
+                kinds: vec!["conv", "pool", "lrn", "fc"],
                 layout: DataLayout::Nchw,
                 max_batch: None,
                 needs_artifacts: false,
                 kernel: KernelVariant::Im2col,
+                fused_epilogue: true,
             },
         }
     }
@@ -329,14 +342,18 @@ impl Backend for CpuGemmBackend {
         // delegate:auto plans — must be reproducible for a fixed
         // DeviceSpec on any machine.
         let threads = dev.cpu_big_cores.max(1) as usize;
-        let ((ic, ih, iw), _) = io_of(net, li);
+        let ((ic, ih, iw), (oc, oh, ow)) = io_of(net, li);
         match &net.layers[li] {
             Layer::Conv { .. } => {
                 let spec = conv_spec_for(net, li).expect("conv layer has a spec");
                 cost::conv_time_cpu_gemm(dev, &spec, threads)
             }
+            // Pool/LRN run the same tile-parallel kernels as cpu-par,
+            // so the predictions match and placement between the two
+            // stays a pure tie broken by registry order.
+            Layer::Pool { size, .. } => cost::pool_time(dev, oc, oh, ow, *size, true),
+            Layer::Lrn { size, .. } => cost::lrn_time(dev, ic, ih, iw, *size, true),
             Layer::Fc { out, .. } => cost::fc_time_cpu_gemm(dev, ic * ih * iw, *out, threads),
-            _ => f64::INFINITY,
         }
     }
 
@@ -348,11 +365,24 @@ impl Backend for CpuGemmBackend {
                 variant: KernelVariant::Im2col,
                 tiled: true,
             },
+            Layer::Pool { name, mode, size, stride, relu } => LayerPlan::Pool {
+                name: name.clone(),
+                mode: *mode,
+                size: *size,
+                stride: *stride,
+                relu: *relu,
+                parallel: true,
+            },
+            Layer::Lrn { name, size, alpha, beta, k } => LayerPlan::Lrn {
+                name: name.clone(),
+                size: *size,
+                alpha: *alpha,
+                beta: *beta,
+                k: *k,
+                parallel: true,
+            },
             Layer::Fc { name, relu, .. } => {
                 LayerPlan::FcCpu { name: name.clone(), relu: *relu, tiled: true }
-            }
-            other => {
-                anyhow::bail!("cpu-gemm cannot run {} layer {}", other.kind(), other.name())
             }
         })
     }
@@ -384,6 +414,7 @@ impl CpuGemmQ8Backend {
                 max_batch: None,
                 needs_artifacts: false,
                 kernel: KernelVariant::Im2col,
+                fused_epilogue: true,
             },
         }
     }
@@ -476,6 +507,7 @@ impl AccelBackend {
                 needs_artifacts: true,
                 // GPU artifacts run the paper's per-thread direct conv.
                 kernel: KernelVariant::Direct,
+                fused_epilogue: false,
             },
             manifest: manifest.cloned(),
         })
@@ -628,13 +660,13 @@ mod tests {
     }
 
     #[test]
-    fn cpu_gemm_runs_conv_and_fc_with_im2col_lowering() {
+    fn cpu_gemm_runs_every_layer_kind_with_im2col_lowering() {
         let b = CpuGemmBackend::new();
         assert_eq!(b.capability().kernel, crate::kernels::KernelVariant::Im2col);
+        assert!(b.capability().fused_epilogue, "cpu-gemm convs own a banded epilogue");
         let net = zoo::lenet5();
-        for (li, layer) in net.layers.iter().enumerate() {
-            let want = matches!(layer.kind(), "conv" | "fc");
-            assert_eq!(b.supports(&net, li), want, "{}", layer.name());
+        for li in 0..net.layers.len() {
+            assert!(b.supports(&net, li), "{}", net.layers[li].name());
         }
         match b.lower(&net, 0).unwrap() {
             LayerPlan::ConvCpu { variant, tiled, .. } => {
@@ -643,7 +675,34 @@ mod tests {
             }
             other => panic!("expected ConvCpu, got {other:?}"),
         }
-        assert!(b.lower(&net, 1).is_err(), "pool must not lower on cpu-gemm");
+        // Pool lowers like cpu-par (tile-parallel), keeping fusable
+        // chains on one backend.
+        match b.lower(&net, 1).unwrap() {
+            LayerPlan::Pool { parallel, .. } => assert!(parallel),
+            other => panic!("expected Pool, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn cpu_gemm_pool_and_lrn_predictions_match_cpu_par() {
+        // Same kernels => same predicted cost: pool/LRN placement
+        // between cpu-par and cpu-gemm is a pure registry-order tie.
+        let dev = galaxy_note4();
+        let par = CpuParBackend::new();
+        let gemm = CpuGemmBackend::new();
+        for net in zoo::all() {
+            for (li, layer) in net.layers.iter().enumerate() {
+                if matches!(layer.kind(), "pool" | "lrn") {
+                    assert_eq!(
+                        par.predict(&dev, &net, li).to_bits(),
+                        gemm.predict(&dev, &net, li).to_bits(),
+                        "{}/{}",
+                        net.name,
+                        layer.name()
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -25,7 +25,9 @@
 //! (`"delegate:auto"`, optionally `"delegate:auto:<device>"` with a
 //! Table-1 device profile: `note4` | `m9`, optionally suffixed `:q8`
 //! to let the accuracy-guardrail-gated quantized backend compete for
-//! layers), which rides everywhere a fixed method string does:
+//! layers, and/or `:nofuse` to run the emitted plan layer-by-layer
+//! instead of through the fused-stage IR), which rides everywhere a
+//! fixed method string does:
 //! `EngineConfig::method`, server model configs, and the CLI
 //! `--method` flags.
 
@@ -60,21 +62,29 @@ pub fn is_auto(method: &str) -> bool {
             .is_some_and(|rest| rest.starts_with(':'))
 }
 
-/// Parsed delegate-auto selector: the device profile to cost against
-/// and whether the guardrail-gated quantized backend may compete.
+/// Parsed delegate-auto selector: the device profile to cost against,
+/// whether the guardrail-gated quantized backend may compete, and
+/// whether the engine runs the plan through the fused-stage IR.
 #[derive(Debug, Clone)]
 pub struct AutoSpec {
     pub dev: DeviceSpec,
     /// True when the selector carried a `:q8` segment.  q8 is opt-in:
     /// the default auto plan keeps f32-identical numerics.
     pub q8: bool,
+    /// False when the selector carried a `:nofuse` segment: the engine
+    /// then executes the plan layer-by-layer instead of through
+    /// `ExecutionPlan::fuse` stages.  Fusion is on by default — fused
+    /// stages are bit-identical to the layerwise path, so the switch
+    /// exists for A/B measurement and bisection, not safety.
+    pub fuse: bool,
 }
 
 /// Parse a method string: `Ok(Some(spec))` for
-/// `delegate:auto[:<device>][:q8|:noq8]` (default device: the Galaxy
-/// Note 4, Table 1's lead platform; default precision: f32-only);
-/// `Ok(None)` for fixed methods; `Err` for an auto selector with an
-/// unknown device or segment.
+/// `delegate:auto[:<device>][:q8|:noq8][:fuse|:nofuse]` (default
+/// device: the Galaxy Note 4, Table 1's lead platform; default
+/// precision: f32-only; default execution: fused stages); `Ok(None)`
+/// for fixed methods; `Err` for an auto selector with an unknown
+/// device or segment.
 pub fn auto_spec(method: &str) -> Result<Option<AutoSpec>> {
     let Some(rest) = method.strip_prefix(crate::DELEGATE_AUTO) else {
         return Ok(None);
@@ -82,12 +92,14 @@ pub fn auto_spec(method: &str) -> Result<Option<AutoSpec>> {
     if !rest.is_empty() && !rest.starts_with(':') {
         return Ok(None); // "delegate:automatic" etc: not our selector
     }
-    let mut spec = AutoSpec { dev: device::galaxy_note4(), q8: false };
+    let mut spec = AutoSpec { dev: device::galaxy_note4(), q8: false, fuse: true };
     let mut dev_named = false;
     for seg in rest.split(':').filter(|s| !s.is_empty()) {
         match seg {
             "q8" => spec.q8 = true,
             "noq8" => spec.q8 = false,
+            "fuse" => spec.fuse = true,
+            "nofuse" => spec.fuse = false,
             name => match device::by_name(name) {
                 Some(dev) => {
                     anyhow::ensure!(
@@ -101,7 +113,7 @@ pub fn auto_spec(method: &str) -> Result<Option<AutoSpec>> {
                 None => {
                     return Err(anyhow::anyhow!(
                         "unknown segment {name:?} in method {method:?} \
-                         (expected a device: note4 | m9, or q8 | noq8)"
+                         (expected a device: note4 | m9, or q8 | noq8 | fuse | nofuse)"
                     ))
                 }
             },
@@ -205,6 +217,20 @@ mod tests {
         assert!(!s.q8);
         assert!(auto_spec("delegate:auto:q8:warp").is_err());
         assert!(auto_spec("cpu-seq").unwrap().is_none());
+    }
+
+    #[test]
+    fn auto_spec_parses_nofuse_opt_out() {
+        // Default: fused-stage execution on.
+        let s = auto_spec("delegate:auto").unwrap().unwrap();
+        assert!(s.fuse);
+        let s = auto_spec("delegate:auto:nofuse").unwrap().unwrap();
+        assert!(!s.fuse);
+        // Composes with device and precision segments in any order.
+        let s = auto_spec("delegate:auto:m9:q8:nofuse").unwrap().unwrap();
+        assert!(!s.fuse && s.q8 && s.dev.name.contains("M9"));
+        let s = auto_spec("delegate:auto:nofuse:fuse").unwrap().unwrap();
+        assert!(s.fuse, "later segment wins");
     }
 
     #[test]

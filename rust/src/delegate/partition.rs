@@ -14,13 +14,27 @@
 //! Determinism: backends are scanned in registry order and ties broken
 //! strictly toward the lower index, so a fixed (network, device,
 //! registry) triple always yields the same plan.
+//!
+//! **Stage costing:** since the fused-stage IR, the DP prices stages,
+//! not layers.  Every edge whose adjacency the fusion pass merges
+//! (conv→pool/LRN leaving a banded-epilogue backend, pool↔LRN runs)
+//! and whose endpoints both execute on the CPU side earns a
+//! memory-traffic credit ([`cost::fusion_saving`]) — the intermediate
+//! activation's write+read round trip that fused execution eliminates.
+//! The credit is edge-local, so the DP stays exact, and it is shared
+//! verbatim by [`Partitioner::cost_of`], preserving the
+//! auto-never-worse-than-fixed acceptance bar.  Its magnitude (µs) is
+//! far below accel-vs-CPU layer gaps (ms), so it refines placements —
+//! the partitioner stops splitting fusable chains when per-layer costs
+//! tie — without rewriting them.
 
 use crate::coordinator::plan::{ExecutionPlan, LayerPlan};
 use crate::model::network::{Layer, Network};
+use crate::simulator::cost;
 use crate::simulator::device::DeviceSpec;
 use crate::Result;
 
-use super::backend::DataLayout;
+use super::backend::{Backend, DataLayout};
 use super::registry::Registry;
 
 /// One layer's placement in a partition report.
@@ -34,6 +48,10 @@ pub struct Assignment {
     pub cost_s: f64,
     /// Layout-transition seconds charged entering this layer.
     pub swap_s: f64,
+    /// Fusion memory-traffic credit granted entering this layer — the
+    /// predicted seconds saved by keeping this boundary inside a fused
+    /// stage; 0 when the edge does not fuse.
+    pub fuse_s: f64,
 }
 
 /// The partitioner's full output.
@@ -64,12 +82,28 @@ pub fn transition_cost(
     dev: &DeviceSpec,
     from: DataLayout,
     to: DataLayout,
-    (c, h, w): (usize, usize, usize),
+    shape: (usize, usize, usize),
 ) -> f64 {
     if from == to {
         return 0.0;
     }
-    2.0 * (c * h * w) as f64 * 4.0 / (dev.cache_gbps * 1e9)
+    cost::round_trip_traffic(dev, shape)
+}
+
+/// Can this backend's placements participate in a fused CPU stage?
+/// The engine's fused stages execute only NCHW, artifact-free plan
+/// entries.
+fn cpu_side(b: &dyn Backend) -> bool {
+    let cap = b.capability();
+    cap.layout == DataLayout::Nchw && !cap.needs_artifacts
+}
+
+/// Is the `li-1 → li` adjacency one the fusion pass merges when both
+/// sides land on CPU?  (conv→pool, conv→lrn, and pool/LRN runs.)
+fn fusable_link(net: &Network, li: usize) -> bool {
+    li > 0
+        && matches!(net.layers[li].kind(), "pool" | "lrn")
+        && matches!(net.layers[li - 1].kind(), "conv" | "pool" | "lrn")
 }
 
 /// Cost-driven layer-to-backend assignment for one device profile.
@@ -100,6 +134,30 @@ impl<'a> Partitioner<'a> {
         !b.capability().max_batch.is_some_and(|mb| mb < self.batch)
     }
 
+    /// Fusion memory-traffic credit for the edge entering layer `li`
+    /// on `b` from layer `li - 1` on `p`: [`cost::fusion_saving`] of
+    /// the boundary activation when the adjacency is a chain the
+    /// fusion pass merges and both placements execute on the CPU side,
+    /// else 0.  A conv head must own a banded epilogue
+    /// (`Capability::fused_epilogue` — im2col/q8 GEMM); pool/LRN tails
+    /// chain on any CPU placement.
+    fn fusion_credit(
+        &self,
+        net: &Network,
+        boundary: (usize, usize, usize),
+        li: usize,
+        p: &dyn Backend,
+        b: &dyn Backend,
+    ) -> f64 {
+        if !fusable_link(net, li) || !cpu_side(p) || !cpu_side(b) {
+            return 0.0;
+        }
+        if net.layers[li - 1].kind() == "conv" && !p.capability().fused_epilogue {
+            return 0.0;
+        }
+        cost::fusion_saving(self.dev, boundary)
+    }
+
     /// Assign every layer of `net` and emit an executable plan.
     pub fn partition(&self, net: &Network) -> Result<PartitionReport> {
         let choice = self.solve(net)?;
@@ -107,19 +165,26 @@ impl<'a> Partitioner<'a> {
     }
 
     /// Total predicted seconds of an explicit assignment (same
-    /// accounting the solver optimizes, so solver output is comparable
-    /// against any forced assignment).
+    /// accounting the solver optimizes — transitions charged, fusion
+    /// credits granted — so solver output is comparable against any
+    /// forced assignment).
     pub fn cost_of(&self, net: &Network, choice: &[usize]) -> f64 {
         let backends = self.registry.backends();
         let shapes = net.shapes();
-        let mut prev = DataLayout::Nchw;
+        let mut prev_layout = DataLayout::Nchw;
+        let mut prev_bi: Option<usize> = None;
         let mut total = 0.0;
         for (li, &bi) in choice.iter().enumerate() {
             let b = &backends[bi];
             let layout = b.capability().layout;
-            total += transition_cost(self.dev, prev, layout, shapes[li].1)
-                + b.predict(self.dev, net, li);
-            prev = layout;
+            let boundary = shapes[li].1;
+            let mut link = transition_cost(self.dev, prev_layout, layout, boundary);
+            if let Some(pi) = prev_bi {
+                link -= self.fusion_credit(net, boundary, li, backends[pi].as_ref(), b.as_ref());
+            }
+            total += link + b.predict(self.dev, net, li);
+            prev_layout = layout;
+            prev_bi = Some(bi);
         }
         total
     }
@@ -212,8 +277,11 @@ impl<'a> Partitioner<'a> {
                     if !cost[li - 1][pi].is_finite() {
                         continue;
                     }
+                    // Transition charged, fusion credit granted: the
+                    // DP prices stages, not layers.
                     let through = cost[li - 1][pi]
-                        + transition_cost(self.dev, p.capability().layout, layout, boundary);
+                        + transition_cost(self.dev, p.capability().layout, layout, boundary)
+                        - self.fusion_credit(net, boundary, li, p.as_ref(), b.as_ref());
                     if through < best {
                         best = through;
                         arg = pi;
@@ -256,19 +324,29 @@ impl<'a> Partitioner<'a> {
         let shapes = net.shapes();
         let mut layers = Vec::with_capacity(choice.len());
         let mut assignments = Vec::with_capacity(choice.len());
-        let mut prev = DataLayout::Nchw;
+        let mut prev_layout = DataLayout::Nchw;
+        let mut prev_bi: Option<usize> = None;
         for (li, &bi) in choice.iter().enumerate() {
             let b = &backends[bi];
             let layout = b.capability().layout;
             layers.push(b.lower(net, li)?);
+            let boundary = shapes[li].1;
+            let fuse_s = match prev_bi {
+                Some(pi) => {
+                    self.fusion_credit(net, boundary, li, backends[pi].as_ref(), b.as_ref())
+                }
+                None => 0.0,
+            };
             assignments.push(Assignment {
                 layer: net.layers[li].name().to_string(),
                 kind: net.layers[li].kind(),
                 backend: b.name().to_string(),
                 cost_s: b.predict(self.dev, net, li),
-                swap_s: transition_cost(self.dev, prev, layout, shapes[li].1),
+                swap_s: transition_cost(self.dev, prev_layout, layout, boundary),
+                fuse_s,
             });
-            prev = layout;
+            prev_layout = layout;
+            prev_bi = Some(bi);
         }
         let nhwc = layers.iter().any(|l| matches!(l, LayerPlan::ConvAccel { nhwc: true, .. }));
         let predicted_s = self.cost_of(net, &choice);
@@ -410,6 +488,53 @@ mod tests {
             let lenet = auto(&zoo::lenet5(), &dev);
             let fc2 = lenet.assignments.iter().find(|a| a.layer == "fc2").unwrap();
             assert!(fc2.backend.starts_with("cpu"), "{}: fc2 on {}", dev.name, fc2.backend);
+        }
+    }
+
+    #[test]
+    fn fusable_chains_stay_unsplit_under_cost_ties() {
+        // Pool predictions tie exactly between cpu-par and cpu-gemm
+        // (same kernels); whichever way the tie breaks, the emitted
+        // plan must keep fusable conv→pool chains in fused stages, and
+        // the fusion credit must appear on the fused edges.
+        for dev in all_devices() {
+            let rep = auto(&zoo::lenet5(), &dev);
+            let stage_names: Vec<String> =
+                rep.plan.fuse().iter().map(|s| rep.plan.stage_name(s)).collect();
+            for chain in ["conv1+pool1", "conv2+pool2"] {
+                assert!(
+                    stage_names.contains(&chain.to_string()),
+                    "{}: chain {chain} split — stages {stage_names:?}",
+                    dev.name
+                );
+            }
+            for pool in ["pool1", "pool2"] {
+                let a = rep.assignments.iter().find(|a| a.layer == pool).unwrap();
+                assert!(a.fuse_s > 0.0, "{}: {pool} edge earned no fusion credit", dev.name);
+            }
+        }
+    }
+
+    #[test]
+    fn tail_runs_behind_accel_convs_still_fuse() {
+        // AlexNet conv2 rides the accelerator (asserted above), so its
+        // conv→pool edge cannot fuse — but the pool2→norm2 CPU run
+        // still must.
+        for dev in all_devices() {
+            let rep = auto(&zoo::alexnet(), &dev);
+            let conv2 = rep.assignments.iter().find(|a| a.layer == "conv2").unwrap();
+            assert!(!conv2.backend.starts_with("cpu"), "{}", dev.name);
+            let pool2 = rep.assignments.iter().find(|a| a.layer == "pool2").unwrap();
+            assert_eq!(pool2.fuse_s, 0.0, "{}: accel conv edge must not be credited", dev.name);
+            let norm2 = rep.assignments.iter().find(|a| a.layer == "norm2").unwrap();
+            assert!(norm2.fuse_s > 0.0, "{}: pool2→norm2 run uncredited", dev.name);
+            let stage_names: Vec<String> =
+                rep.plan.fuse().iter().map(|s| rep.plan.stage_name(s)).collect();
+            assert!(
+                stage_names.contains(&"pool2+norm2".to_string()),
+                "{}: {stage_names:?}",
+                dev.name
+            );
         }
     }
 

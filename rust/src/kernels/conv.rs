@@ -20,9 +20,8 @@ use crate::tensor::{MatView, Tensor};
 use crate::util::threadpool;
 
 use super::gemm::{gemm_into, gemm_q8_into, BiasMode};
-use super::im2col::{im2col_frame, patch_cols, patch_rows};
+use super::im2col::{im2col_frame, im2col_q8_frame, patch_cols, patch_rows};
 use super::pack::{PackedConv, PackedConvQ8};
-use super::quant::quantize_activations;
 use super::KernelOpts;
 
 /// One `(frame, output channel)` plane of the direct loop nest.
@@ -177,9 +176,11 @@ pub fn conv_im2col(x: &Tensor, packed: &PackedConv, opts: KernelOpts) -> Tensor 
 }
 
 /// Quantized im2col+GEMM convolution over a pre-quantized weight
-/// cache: for each frame, materialize the f32 patch matrix, quantize
-/// it to u8 **dynamically** (per-tensor scale + zero point computed at
-/// layer entry — padding and post-ReLU zeros stay exact), then run the
+/// cache: for each frame, quantize the patch matrix **directly from
+/// the frame** into the u8 GEMM operand ([`im2col_q8_frame`] — the
+/// per-tensor scale + zero point come from the same dynamic min/max
+/// contract, padding and post-ReLU zeros stay exact, and the
+/// intermediate f32 patch matrix is never materialized), then run the
 /// i8 x u8 -> i32 GEMM with the fused requantize+bias+ReLU epilogue.
 /// Output is f32 NCHW, same shape as [`conv_im2col`].
 pub fn conv_im2col_q8(x: &Tensor, packed: &PackedConvQ8, opts: KernelOpts) -> Tensor {
@@ -192,13 +193,12 @@ pub fn conv_im2col_q8(x: &Tensor, packed: &PackedConvQ8, opts: KernelOpts) -> Te
     let frame_len = spec.in_c * spec.in_h * spec.in_w;
     let out_frame = spec.nk * cols;
     let mut out = Tensor::zeros(vec![n, spec.nk, oh, ow]);
-    // Scratch patch matrices (f32 then u8), reused across frames —
-    // im2col and the quantizer write every element, so no clearing.
-    let mut patches = vec![0.0f32; rows * cols];
+    // u8 patch scratch, reused across frames — the quantizer writes
+    // every element, so no clearing.
     let mut qpatches = vec![0u8; rows * cols];
     for ni in 0..n {
-        im2col_frame(&x.data()[ni * frame_len..(ni + 1) * frame_len], spec, &mut patches);
-        let act = quantize_activations(&patches, &mut qpatches);
+        let act =
+            im2col_q8_frame(&x.data()[ni * frame_len..(ni + 1) * frame_len], spec, &mut qpatches);
         let lo = ni * out_frame;
         gemm_q8_into(
             &packed.wq,

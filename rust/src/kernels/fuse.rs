@@ -1,0 +1,777 @@
+//! Fused-stage execution — the kernel-level half of the fused-stage
+//! IR (`coordinator::plan::ExecutionPlan::fuse`).
+//!
+//! A fused stage runs a conv→ReLU→pool(/LRN) chain without ever
+//! materializing the intermediate activations as whole-batch tensors:
+//! the GEMM's fused bias+ReLU epilogue already exists, and this module
+//! extends it with **tail ops** ([`TailOp`]) that consume GEMM output
+//! band-by-band while it is cache-hot.  Two schedules cover every
+//! chain, chosen per stage from the pool geometry:
+//!
+//! * **Band-local** (pool `stride >= size`, e.g. LeNet's 2x2/s2, and
+//!   every LRN): the final output rows are split into bands; each band
+//!   task computes exactly the GEMM columns its tail consumes
+//!   ([`super::gemm::gemm_cols_into`] / [`gemm_q8_cols_into`]) into a
+//!   band-sized tile scratch, then applies the tail ops through a
+//!   ping-pong scratch pair and writes only the stage output.  Nothing
+//!   is recomputed (non-overlapping windows partition the conv rows)
+//!   and the conv surface never exists outside L1-sized scratch.
+//! * **Two-phase** (overlapping pool windows, `stride < size`, e.g.
+//!   the 3x3/s2 AlexNet pools): recomputing shared window rows per
+//!   band would cost more GEMM work than the traffic it saves, so the
+//!   conv surface of ONE frame is computed once into per-stage scratch
+//!   by the regular tile-parallel GEMM, and the tail bands then read
+//!   it (still cache-resident for mobile-scale frames) — the
+//!   whole-*batch* intermediate tensor and its allocation/zeroing are
+//!   still eliminated.
+//!
+//! Both schedules are **bit-identical** to the unfused path: the GEMM
+//! column bands reproduce the whole-matrix per-element reduction order
+//! exactly, and the tail ops replicate the standalone pool/LRN kernel
+//! arithmetic per element (same window walk order, same f64 LRN
+//! accumulation).  `tests/prop_fusion.rs` pins this across randomized
+//! shapes, precisions, and thread/tile configurations.
+//!
+//! [`gemm_q8_cols_into`]: super::gemm::gemm_q8_cols_into
+
+use std::sync::Arc;
+
+use crate::model::network::{pool_out, PoolMode};
+use crate::tensor::{MatView, Tensor};
+use crate::util::threadpool;
+
+use super::gemm::{gemm_cols_into, gemm_into, gemm_q8_cols_into, gemm_q8_into, BiasMode};
+use super::im2col::{im2col_frame, im2col_q8_frame, patch_cols, patch_rows};
+use super::pack::{PackedConv, PackedConvQ8};
+use super::quant::{ActQuant, QuantizedWeights};
+use super::{row_bands, KernelOpts};
+
+/// One post-GEMM member of a fused stage, applied band-by-band to the
+/// cache-hot conv output (or, for tail-only stages, to the stage
+/// input).  ReLU needs no op: the conv head fuses it into the GEMM
+/// epilogue and pools carry their own trailing `relu` flag.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TailOp {
+    /// Cross-channel LRN — band-local by construction: a band carries
+    /// every output channel of its pixels, which is exactly the window
+    /// the normalization needs.
+    Lrn { size: usize, alpha: f64, beta: f64, k: f64 },
+    /// Spatial pooling; `relu` applies after the window reduce (the
+    /// standalone kernel's `relu_inplace` step, fused per element).
+    Pool { mode: PoolMode, size: usize, stride: usize, relu: bool },
+}
+
+impl TailOp {
+    /// Output `(h, w)` for an input surface `(h, w)`.
+    fn out_hw(&self, h: usize, w: usize) -> (usize, usize) {
+        match self {
+            TailOp::Lrn { .. } => (h, w),
+            TailOp::Pool { size, stride, .. } => {
+                (pool_out(h, *size, *stride), pool_out(w, *size, *stride))
+            }
+        }
+    }
+
+    /// Input row range needed to produce output rows `[y0, y1)` of an
+    /// input surface `in_h` rows tall.
+    fn in_rows(&self, y0: usize, y1: usize, in_h: usize) -> (usize, usize) {
+        match self {
+            TailOp::Lrn { .. } => (y0, y1),
+            TailOp::Pool { size, stride, .. } => {
+                (y0 * stride, ((y1 - 1) * stride + size).min(in_h))
+            }
+        }
+    }
+
+    /// Do adjacent output bands re-read shared input rows?  True for
+    /// overlapping pool windows (`stride < size`) — the case where the
+    /// band-local schedule would recompute GEMM rows and the two-phase
+    /// schedule wins.
+    fn overlapping(&self) -> bool {
+        matches!(self, TailOp::Pool { size, stride, .. } if stride < size)
+    }
+}
+
+/// `(h, w)` at each tail level: index 0 is the conv/stage input
+/// surface, index `i + 1` the output of `ops[i]`.  Channels are
+/// invariant through every tail op.
+fn level_hw(h: usize, w: usize, ops: &[TailOp]) -> Vec<(usize, usize)> {
+    let mut v = Vec::with_capacity(ops.len() + 1);
+    v.push((h, w));
+    for op in ops {
+        let (ph, pw) = *v.last().unwrap();
+        v.push(op.out_hw(ph, pw));
+    }
+    v
+}
+
+/// Final output shape `(c, h, w)` of a tail over an input `(c, h, w)`.
+pub fn tail_out_shape(c: usize, h: usize, w: usize, ops: &[TailOp]) -> (usize, usize, usize) {
+    let (fh, fw) = *level_hw(h, w, ops).last().unwrap();
+    (c, fh, fw)
+}
+
+/// Row ranges needed at every level to produce final rows `[y0, y1)`,
+/// back-propagated through the tail.
+fn level_rows(
+    levels: &[(usize, usize)],
+    ops: &[TailOp],
+    y0: usize,
+    y1: usize,
+) -> Vec<(usize, usize)> {
+    let mut rows = vec![(0usize, 0usize); levels.len()];
+    rows[ops.len()] = (y0, y1);
+    for (i, op) in ops.iter().enumerate().rev() {
+        let (s0, s1) = rows[i + 1];
+        rows[i] = op.in_rows(s0, s1, levels[i].0);
+    }
+    rows
+}
+
+/// Read-only row window of one level: element `(ci, y, x)` (logical
+/// row `y`) lives at `ptr + ci * chan_stride + (y - y_base) * width + x`.
+#[derive(Clone, Copy)]
+struct RowsRef {
+    ptr: *const f32,
+    chan_stride: usize,
+    y_base: usize,
+    width: usize,
+}
+
+/// Writable counterpart of [`RowsRef`].
+#[derive(Clone, Copy)]
+struct RowsMut {
+    ptr: *mut f32,
+    chan_stride: usize,
+    y_base: usize,
+    width: usize,
+}
+
+/// Apply one tail op, producing logical output rows `[s0, s1)` (width
+/// `ow`) from input rows already available in `src` (full surface
+/// `(ih, iw)` for window clipping).  Per-element arithmetic is
+/// identical to the standalone pool/LRN kernels, so fused output is
+/// bit-identical to the unfused path.
+///
+/// SAFETY: caller guarantees `src` holds every row the op reads and
+/// `dst` every row it writes, with live, non-overlapping storage.
+unsafe fn apply_op(
+    op: &TailOp,
+    c: usize,
+    (ih, iw): (usize, usize),
+    ow: usize,
+    (s0, s1): (usize, usize),
+    src: RowsRef,
+    dst: RowsMut,
+) {
+    match op {
+        TailOp::Pool { mode, size, stride, relu } => {
+            let is_max = *mode == PoolMode::Max;
+            for ci in 0..c {
+                for oy in s0..s1 {
+                    let ys = oy * stride;
+                    let ye = (ys + size).min(ih);
+                    let drow = std::slice::from_raw_parts_mut(
+                        dst.ptr.add(ci * dst.chan_stride + (oy - dst.y_base) * dst.width),
+                        ow,
+                    );
+                    for (ox, o) in drow.iter_mut().enumerate() {
+                        let xs = ox * stride;
+                        let xe = (xs + size).min(iw);
+                        let mut v = if is_max { f32::NEG_INFINITY } else { 0.0 };
+                        for yy in ys..ye {
+                            let srow = std::slice::from_raw_parts(
+                                src.ptr.add(ci * src.chan_stride + (yy - src.y_base) * src.width),
+                                iw,
+                            );
+                            for &sv in &srow[xs..xe] {
+                                if is_max {
+                                    v = v.max(sv);
+                                } else {
+                                    v += sv;
+                                }
+                            }
+                        }
+                        if !is_max {
+                            v /= (size * size) as f32;
+                        }
+                        if *relu && v < 0.0 {
+                            v = 0.0;
+                        }
+                        *o = v;
+                    }
+                }
+            }
+        }
+        TailOp::Lrn { size, alpha, beta, k } => {
+            let half = size / 2;
+            let scale = alpha / *size as f64;
+            for ci in 0..c {
+                let lo = ci.saturating_sub(half);
+                let hi = (ci + half + 1).min(c);
+                for y in s0..s1 {
+                    let drow = std::slice::from_raw_parts_mut(
+                        dst.ptr.add(ci * dst.chan_stride + (y - dst.y_base) * dst.width),
+                        ow,
+                    );
+                    for (x, o) in drow.iter_mut().enumerate() {
+                        let mut acc = 0.0f64;
+                        for cj in lo..hi {
+                            let v = *src
+                                .ptr
+                                .add(cj * src.chan_stride + (y - src.y_base) * src.width + x)
+                                as f64;
+                            acc += v * v;
+                        }
+                        let denom = (*k + scale * acc).powf(*beta);
+                        let v = *src
+                            .ptr
+                            .add(ci * src.chan_stride + (y - src.y_base) * src.width + x)
+                            as f64;
+                        *o = (v / denom) as f32;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Run the tail ops of one band: level-0 rows come from `src` (tile
+/// scratch, per-stage scratch, or the stage input tensor), the final
+/// level lands in `dst` (this frame's slice of the stage output), and
+/// intermediate levels bounce through the ping-pong `pair`.
+///
+/// SAFETY: caller guarantees `src` covers `rows[0]`, `dst` covers the
+/// final rows, and both outlive the call.
+unsafe fn run_tail_band(
+    c: usize,
+    levels: &[(usize, usize)],
+    ops: &[TailOp],
+    rows: &[(usize, usize)],
+    src: RowsRef,
+    dst: RowsMut,
+    pair: &mut (Vec<f32>, Vec<f32>),
+) {
+    debug_assert!(!ops.is_empty());
+    let last = ops.len() - 1;
+    let mut cur = src;
+    for (i, op) in ops.iter().enumerate() {
+        let (ih, iw) = levels[i];
+        let ow = levels[i + 1].1;
+        let (s0, s1) = rows[i + 1];
+        if i == last {
+            apply_op(op, c, (ih, iw), ow, (s0, s1), cur, dst);
+        } else {
+            let buf = if i % 2 == 0 { &mut pair.0 } else { &mut pair.1 };
+            let need = c * (s1 - s0) * ow;
+            if buf.len() < need {
+                buf.resize(need, 0.0);
+            }
+            let d = RowsMut {
+                ptr: buf.as_mut_ptr(),
+                chan_stride: (s1 - s0) * ow,
+                y_base: s0,
+                width: ow,
+            };
+            apply_op(op, c, (ih, iw), ow, (s0, s1), cur, d);
+            cur = RowsRef {
+                ptr: buf.as_ptr(),
+                chan_stride: (s1 - s0) * ow,
+                y_base: s0,
+                width: ow,
+            };
+        }
+    }
+}
+
+/// The conv head of a fused stage: which packed-weight cache family
+/// feeds the GEMM.
+pub enum ConvSource<'a> {
+    F32(&'a PackedConv),
+    Q8(&'a PackedConvQ8),
+}
+
+/// Band-local f32 GEMM source (pointers into the packed weights and
+/// this frame's patch matrix).
+struct F32Gemm {
+    wmat: *const f32,
+    k: usize,
+    patches: *const f32,
+    cols: usize,
+    bias: *const f32,
+    relu: bool,
+}
+
+/// Band-local q8 GEMM source.
+struct Q8Gemm {
+    wq: *const QuantizedWeights,
+    patches: *const u8,
+    cols: usize,
+    act: ActQuant,
+    bias: *const f32,
+    relu: bool,
+}
+
+/// Pointer capsule for one frame's fused-stage band tasks.  The entry
+/// point blocks on scope completion, so the borrowed buffers strictly
+/// outlive every task; bands write disjoint output row ranges.
+struct ConvStageCapsule {
+    /// Band-local f32 GEMM (None in two-phase mode / q8 stages).
+    f32_gemm: Option<F32Gemm>,
+    /// Band-local q8 GEMM (None in two-phase mode / f32 stages).
+    q8_gemm: Option<Q8Gemm>,
+    /// Materialized level-0 surface for the two-phase schedule (the
+    /// per-frame conv scratch); unused when a GEMM source is set.
+    src: RowsRef,
+    c: usize,
+    levels: Vec<(usize, usize)>,
+    ops: Vec<TailOp>,
+    band_rows: usize,
+    fh: usize,
+    /// This frame's slice of the stage output.
+    dst: RowsMut,
+}
+
+unsafe impl Send for ConvStageCapsule {}
+unsafe impl Sync for ConvStageCapsule {}
+
+/// One band of a fused conv stage: (optionally) GEMM the band's conv
+/// columns into tile scratch, then run the tail into the output.
+///
+/// SAFETY: capsule pointers live for the call; bands write disjoint
+/// output row ranges.
+unsafe fn conv_stage_band(cap: &ConvStageCapsule, t: usize) {
+    let y0 = t * cap.band_rows;
+    let y1 = (y0 + cap.band_rows).min(cap.fh);
+    if y0 >= y1 {
+        return;
+    }
+    let rows = level_rows(&cap.levels, &cap.ops, y0, y1);
+    let (r0, r1) = rows[0];
+    let w0 = cap.levels[0].1;
+    // Level-0 surface: GEMM'd here into band scratch (band-local), or
+    // already materialized per frame (two-phase).
+    let mut conv_buf: Vec<f32> = Vec::new();
+    let src = if let Some(g) = &cap.f32_gemm {
+        conv_buf.resize(cap.c * (r1 - r0) * w0, 0.0);
+        let wmat = std::slice::from_raw_parts(g.wmat, cap.c * g.k);
+        let patches = std::slice::from_raw_parts(g.patches, g.k * g.cols);
+        let bias = std::slice::from_raw_parts(g.bias, cap.c);
+        gemm_cols_into(
+            MatView::dense(wmat, cap.c, g.k),
+            MatView::dense(patches, g.k, g.cols),
+            BiasMode::PerRow(bias),
+            g.relu,
+            r0 * w0,
+            r1 * w0,
+            &mut conv_buf,
+        );
+        RowsRef { ptr: conv_buf.as_ptr(), chan_stride: (r1 - r0) * w0, y_base: r0, width: w0 }
+    } else if let Some(g) = &cap.q8_gemm {
+        conv_buf.resize(cap.c * (r1 - r0) * w0, 0.0);
+        let wq = &*g.wq;
+        let patches = std::slice::from_raw_parts(g.patches, wq.cols * g.cols);
+        let bias = std::slice::from_raw_parts(g.bias, cap.c);
+        gemm_q8_cols_into(
+            wq,
+            patches,
+            g.cols,
+            g.act,
+            bias,
+            g.relu,
+            r0 * w0,
+            r1 * w0,
+            &mut conv_buf,
+        );
+        RowsRef { ptr: conv_buf.as_ptr(), chan_stride: (r1 - r0) * w0, y_base: r0, width: w0 }
+    } else {
+        cap.src
+    };
+    let mut pair = (Vec::new(), Vec::new());
+    run_tail_band(cap.c, &cap.levels, &cap.ops, &rows, src, cap.dst, &mut pair);
+}
+
+/// Execute a fused conv-led stage: im2col + GEMM (f32 or q8, with the
+/// fused bias+ReLU epilogue) and the `ops` tail, per the module-level
+/// schedule selection.  Returns the final tail surface in NCHW —
+/// bit-identical to running [`super::conv_im2col`] /
+/// [`super::conv_im2col_q8`] followed by the standalone pool/LRN
+/// kernels, with no whole-batch intermediate tensor in between.
+/// An empty tail degenerates to the plain conv kernels.
+pub fn conv_stage(x: &Tensor, src: ConvSource<'_>, ops: &[TailOp], opts: KernelOpts) -> Tensor {
+    if ops.is_empty() {
+        return match src {
+            ConvSource::F32(p) => super::conv::conv_im2col(x, p, opts),
+            ConvSource::Q8(p) => super::conv::conv_im2col_q8(x, p, opts),
+        };
+    }
+    let spec = match &src {
+        ConvSource::F32(p) => p.spec,
+        ConvSource::Q8(p) => p.spec,
+    };
+    let n = x.dim(0);
+    assert_eq!(x.shape(), &[n, spec.in_c, spec.in_h, spec.in_w], "conv input shape");
+    let (oh, ow) = (spec.out_h(), spec.out_w());
+    let levels = level_hw(oh, ow, ops);
+    let (fh, fw) = *levels.last().unwrap();
+    let nk = spec.nk;
+    let rows_k = patch_rows(&spec);
+    let cols = patch_cols(&spec);
+    let frame_len = spec.in_c * spec.in_h * spec.in_w;
+    let out_frame = nk * fh * fw;
+    let mut out = Tensor::zeros(vec![n, nk, fh, fw]);
+    let two_phase = ops.iter().any(|o| o.overlapping());
+    let (bands, band_rows) = row_bands(1, fh, opts.threads);
+    let par = opts.parallel() && bands >= 2;
+
+    // Per-frame patch scratch (and, in two-phase mode, the per-stage
+    // conv scratch), reused across frames — every element is written
+    // each frame, so no clearing.
+    let mut patches_f: Vec<f32> = Vec::new();
+    let mut patches_q: Vec<u8> = Vec::new();
+    match &src {
+        ConvSource::F32(_) => patches_f = vec![0.0; rows_k * cols],
+        ConvSource::Q8(_) => patches_q = vec![0u8; rows_k * cols],
+    }
+    let mut conv_scratch: Vec<f32> = if two_phase { vec![0.0; nk * cols] } else { Vec::new() };
+
+    let out_ptr = out.data_mut().as_mut_ptr();
+    for ni in 0..n {
+        let frame = &x.data()[ni * frame_len..(ni + 1) * frame_len];
+        let mut act = ActQuant { scale: 1.0, zp: 0 };
+        match &src {
+            ConvSource::F32(_) => im2col_frame(frame, &spec, &mut patches_f),
+            ConvSource::Q8(_) => act = im2col_q8_frame(frame, &spec, &mut patches_q),
+        }
+        if two_phase {
+            // Phase 1: this frame's conv surface, computed once into
+            // per-stage scratch (never a whole-batch tensor) by the
+            // regular tile-parallel GEMM.
+            match &src {
+                ConvSource::F32(p) => gemm_into(
+                    p.wmat.view2d(),
+                    MatView::dense(&patches_f, rows_k, cols),
+                    BiasMode::PerRow(p.bias.data()),
+                    spec.relu,
+                    opts,
+                    &mut conv_scratch,
+                ),
+                ConvSource::Q8(p) => gemm_q8_into(
+                    &p.wq,
+                    &patches_q,
+                    cols,
+                    act,
+                    p.bias.data(),
+                    spec.relu,
+                    opts,
+                    &mut conv_scratch,
+                ),
+            }
+        }
+        let cap = ConvStageCapsule {
+            f32_gemm: match (&src, two_phase) {
+                (ConvSource::F32(p), false) => Some(F32Gemm {
+                    wmat: p.wmat.data().as_ptr(),
+                    k: rows_k,
+                    patches: patches_f.as_ptr(),
+                    cols,
+                    bias: p.bias.data().as_ptr(),
+                    relu: spec.relu,
+                }),
+                _ => None,
+            },
+            q8_gemm: match (&src, two_phase) {
+                (ConvSource::Q8(p), false) => Some(Q8Gemm {
+                    wq: &p.wq,
+                    patches: patches_q.as_ptr(),
+                    cols,
+                    act,
+                    bias: p.bias.data().as_ptr(),
+                    relu: spec.relu,
+                }),
+                _ => None,
+            },
+            src: RowsRef { ptr: conv_scratch.as_ptr(), chan_stride: cols, y_base: 0, width: ow },
+            c: nk,
+            levels: levels.clone(),
+            ops: ops.to_vec(),
+            band_rows,
+            fh,
+            // SAFETY: in-bounds frame offset of the output tensor.
+            dst: RowsMut {
+                ptr: unsafe { out_ptr.add(ni * out_frame) },
+                chan_stride: fh * fw,
+                y_base: 0,
+                width: fw,
+            },
+        };
+        if par {
+            let cap = Arc::new(cap);
+            let shared = Arc::clone(&cap);
+            threadpool::parallel_for(bands, move |t| {
+                // SAFETY: bands write disjoint output row ranges; the
+                // pool scope blocks before the borrows expire.
+                unsafe { conv_stage_band(&shared, t) };
+            });
+        } else {
+            for t in 0..bands {
+                // SAFETY: sequential bands over live borrows.
+                unsafe { conv_stage_band(&cap, t) };
+            }
+        }
+    }
+    out
+}
+
+/// Pointer capsule for tail-only stage bands (whole batch).
+struct TailStageCapsule {
+    x: *const f32,
+    in_frame: usize,
+    out: *mut f32,
+    out_frame: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    fh: usize,
+    fw: usize,
+    levels: Vec<(usize, usize)>,
+    ops: Vec<TailOp>,
+    bands: usize,
+    band_rows: usize,
+}
+
+unsafe impl Send for TailStageCapsule {}
+unsafe impl Sync for TailStageCapsule {}
+
+/// One `(frame, row band)` unit of a tail-only stage.
+///
+/// SAFETY: capsule pointers live for the call; units write disjoint
+/// output slices.
+unsafe fn tail_stage_band(cap: &TailStageCapsule, u: usize) {
+    let (ni, t) = (u / cap.bands, u % cap.bands);
+    let y0 = t * cap.band_rows;
+    let y1 = (y0 + cap.band_rows).min(cap.fh);
+    if y0 >= y1 {
+        return;
+    }
+    let rows = level_rows(&cap.levels, &cap.ops, y0, y1);
+    let src = RowsRef {
+        ptr: cap.x.add(ni * cap.in_frame),
+        chan_stride: cap.h * cap.w,
+        y_base: 0,
+        width: cap.w,
+    };
+    let dst = RowsMut {
+        ptr: cap.out.add(ni * cap.out_frame),
+        chan_stride: cap.fh * cap.fw,
+        y_base: 0,
+        width: cap.fw,
+    };
+    let mut pair = (Vec::new(), Vec::new());
+    run_tail_band(cap.c, &cap.levels, &cap.ops, &rows, src, dst, &mut pair);
+}
+
+/// Execute a tail-only fused stage (a pool/LRN run with no fusable
+/// conv head, e.g. AlexNet's pool1→norm1 after an accelerated conv):
+/// each band reads the stage input directly and bounces intermediates
+/// through band-sized scratch, so the pool→LRN intermediate never
+/// materializes as a whole-batch tensor.  Bit-identical to chaining
+/// the standalone kernels.
+pub fn tail_stage(x: &Tensor, ops: &[TailOp], opts: KernelOpts) -> Tensor {
+    assert!(!ops.is_empty(), "tail stage needs at least one op");
+    assert_eq!(x.shape().len(), 4, "tail stage input must be NCHW");
+    let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let levels = level_hw(h, w, ops);
+    let (fh, fw) = *levels.last().unwrap();
+    let mut out = Tensor::zeros(vec![n, c, fh, fw]);
+    if n == 0 {
+        return out;
+    }
+    let (bands, band_rows) = row_bands(n, fh, opts.threads);
+    let units = n * bands;
+    let cap = TailStageCapsule {
+        x: x.data().as_ptr(),
+        in_frame: c * h * w,
+        out: out.data_mut().as_mut_ptr(),
+        out_frame: c * fh * fw,
+        c,
+        h,
+        w,
+        fh,
+        fw,
+        levels,
+        ops: ops.to_vec(),
+        bands,
+        band_rows,
+    };
+    if !opts.parallel() || units < 2 {
+        for u in 0..units {
+            // SAFETY: sequential units over live borrows.
+            unsafe { tail_stage_band(&cap, u) };
+        }
+        return out;
+    }
+    let cap = Arc::new(cap);
+    let shared = Arc::clone(&cap);
+    threadpool::parallel_for(units, move |u| {
+        // SAFETY: disjoint (frame, row band) output slices; the pool
+        // scope blocks before the borrows expire.
+        unsafe { tail_stage_band(&shared, u) };
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{self, KernelOpts};
+    use crate::model::network::ConvSpec;
+    use crate::util::rng::Pcg;
+
+    fn random(shape: Vec<usize>, seed: u64) -> Tensor {
+        let n = shape.iter().product();
+        let mut rng = Pcg::seeded(seed);
+        Tensor::new(shape, rng.normal_vec(n, 1.0))
+    }
+
+    /// Unfused reference: conv kernel + standalone tail kernels.
+    fn unfused(x: &Tensor, packed: &PackedConv, ops: &[TailOp], opts: KernelOpts) -> Tensor {
+        let mut h = kernels::conv_im2col(x, packed, opts);
+        for op in ops {
+            h = apply_unfused(&h, op, opts);
+        }
+        h
+    }
+
+    fn apply_unfused(h: &Tensor, op: &TailOp, opts: KernelOpts) -> Tensor {
+        match op {
+            TailOp::Pool { mode, size, stride, relu } => {
+                let mut out = match mode {
+                    PoolMode::Max => kernels::maxpool_nchw(h, *size, *stride, opts),
+                    PoolMode::Avg => kernels::avgpool_nchw(h, *size, *stride, opts),
+                };
+                if *relu {
+                    out.relu_inplace();
+                }
+                out
+            }
+            TailOp::Lrn { size, alpha, beta, k } => {
+                kernels::lrn_nchw(h, *size, *alpha, *beta, *k, opts)
+            }
+        }
+    }
+
+    #[test]
+    fn band_local_conv_pool_is_bit_identical() {
+        // 2x2/s2 pool: non-overlapping windows, the band-local schedule.
+        let spec = ConvSpec {
+            in_c: 3, in_h: 12, in_w: 12, nk: 6, kh: 5, kw: 5, stride: 1, pad: 0, relu: true,
+        };
+        let x = random(vec![2, 3, 12, 12], 70);
+        let w = random(vec![6, 3, 5, 5], 71);
+        let b = random(vec![6], 72);
+        let packed = PackedConv::pack(&spec, &w, &b);
+        let ops = [TailOp::Pool { mode: PoolMode::Max, size: 2, stride: 2, relu: false }];
+        for opts in [KernelOpts::seq(), KernelOpts::tiled()] {
+            let fused = conv_stage(&x, ConvSource::F32(&packed), &ops, opts);
+            let want = unfused(&x, &packed, &ops, opts);
+            assert_eq!(fused, want, "{opts:?}");
+        }
+    }
+
+    #[test]
+    fn two_phase_conv_pool_is_bit_identical() {
+        // 3x3/s2 pool: overlapping windows, the two-phase schedule.
+        let spec = ConvSpec {
+            in_c: 2, in_h: 15, in_w: 15, nk: 8, kh: 3, kw: 3, stride: 1, pad: 1, relu: true,
+        };
+        let x = random(vec![1, 2, 15, 15], 73);
+        let w = random(vec![8, 2, 3, 3], 74);
+        let b = random(vec![8], 75);
+        let packed = PackedConv::pack(&spec, &w, &b);
+        let ops = [TailOp::Pool { mode: PoolMode::Avg, size: 3, stride: 2, relu: true }];
+        for opts in [KernelOpts::seq(), KernelOpts::tiled()] {
+            let fused = conv_stage(&x, ConvSource::F32(&packed), &ops, opts);
+            let want = unfused(&x, &packed, &ops, opts);
+            assert_eq!(fused, want, "{opts:?}");
+        }
+    }
+
+    #[test]
+    fn conv_pool_lrn_chain_matches() {
+        let spec = ConvSpec {
+            in_c: 2, in_h: 14, in_w: 14, nk: 8, kh: 3, kw: 3, stride: 1, pad: 1, relu: true,
+        };
+        let x = random(vec![2, 2, 14, 14], 76);
+        let w = random(vec![8, 2, 3, 3], 77);
+        let b = random(vec![8], 78);
+        let packed = PackedConv::pack(&spec, &w, &b);
+        let ops = [
+            TailOp::Pool { mode: PoolMode::Max, size: 3, stride: 2, relu: false },
+            TailOp::Lrn { size: 5, alpha: 1e-4, beta: 0.75, k: 1.0 },
+        ];
+        let fused = conv_stage(&x, ConvSource::F32(&packed), &ops, KernelOpts::tiled());
+        let want = unfused(&x, &packed, &ops, KernelOpts::tiled());
+        assert_eq!(fused, want);
+    }
+
+    #[test]
+    fn tail_only_stage_matches_chained_kernels() {
+        let x = random(vec![2, 8, 13, 13], 79);
+        let ops = [
+            TailOp::Pool { mode: PoolMode::Max, size: 3, stride: 2, relu: false },
+            TailOp::Lrn { size: 5, alpha: 1e-4, beta: 0.75, k: 1.0 },
+        ];
+        for opts in [KernelOpts::seq(), KernelOpts::tiled()] {
+            let fused = tail_stage(&x, &ops, opts);
+            let mut want = x.clone();
+            for op in &ops {
+                want = apply_unfused(&want, op, opts);
+            }
+            assert_eq!(fused, want, "{opts:?}");
+        }
+    }
+
+    #[test]
+    fn empty_tail_degenerates_to_plain_conv() {
+        let spec = ConvSpec {
+            in_c: 1, in_h: 8, in_w: 8, nk: 3, kh: 3, kw: 3, stride: 1, pad: 0, relu: false,
+        };
+        let x = random(vec![1, 1, 8, 8], 80);
+        let w = random(vec![3, 1, 3, 3], 81);
+        let b = random(vec![3], 82);
+        let packed = PackedConv::pack(&spec, &w, &b);
+        let fused = conv_stage(&x, ConvSource::F32(&packed), &[], KernelOpts::seq());
+        assert_eq!(fused, kernels::conv_im2col(&x, &packed, KernelOpts::seq()));
+    }
+
+    #[test]
+    fn q8_conv_pool_stage_matches_unfused_q8() {
+        let spec = ConvSpec {
+            in_c: 3, in_h: 10, in_w: 10, nk: 8, kh: 3, kw: 3, stride: 1, pad: 1, relu: true,
+        };
+        let x = random(vec![2, 3, 10, 10], 83);
+        let w = random(vec![8, 3, 3, 3], 84);
+        let b = random(vec![8], 85);
+        let packed = PackedConvQ8::pack(&spec, &w, &b);
+        for (size, stride) in [(2usize, 2usize), (3, 2)] {
+            let ops = [TailOp::Pool { mode: PoolMode::Max, size, stride, relu: false }];
+            for opts in [KernelOpts::seq(), KernelOpts::tiled()] {
+                let fused = conv_stage(&x, ConvSource::Q8(&packed), &ops, opts);
+                let mut want = kernels::conv_im2col_q8(&x, &packed, opts);
+                want = apply_unfused(&want, &ops[0], opts);
+                assert_eq!(fused, want, "{size}x{size}/s{stride} ({opts:?})");
+            }
+        }
+    }
+
+    #[test]
+    fn tail_shape_propagation() {
+        let ops = [
+            TailOp::Pool { mode: PoolMode::Max, size: 3, stride: 2, relu: false },
+            TailOp::Lrn { size: 5, alpha: 1e-4, beta: 0.75, k: 1.0 },
+        ];
+        assert_eq!(tail_out_shape(96, 55, 55, &ops), (96, 27, 27));
+        assert_eq!(tail_out_shape(96, 55, 55, &[]), (96, 55, 55));
+    }
+}

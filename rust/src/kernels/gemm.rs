@@ -64,12 +64,20 @@ enum BiasRaw {
 /// Pointer capsule handed to pool workers.  The public entry point
 /// blocks on scope completion, so the borrowed buffers strictly
 /// outlive every task; bands write disjoint column ranges of `c`.
+///
+/// `C` storage is decoupled from the logical product geometry so the
+/// fused-stage path can compute a column band straight into tile
+/// scratch: logical element `(i, j)` lands at
+/// `c[i * c_stride + (j - c_j0)]`.  The whole-matrix callers use
+/// `c_stride = n, c_j0 = 0`.
 struct Capsule {
     a: *const f32,
     a_stride: usize,
     b: *const f32,
     b_stride: usize,
     c: *mut f32,
+    c_stride: usize,
+    c_j0: usize,
     m: usize,
     k: usize,
     n: usize,
@@ -120,8 +128,10 @@ unsafe fn tile_block(
                 }
             }
             for (r, accr) in acc.iter().enumerate() {
-                let crow =
-                    std::slice::from_raw_parts_mut(cap.c.add((i0 + r) * cap.n + j), NR);
+                let crow = std::slice::from_raw_parts_mut(
+                    cap.c.add((i0 + r) * cap.c_stride + (j - cap.c_j0)),
+                    NR,
+                );
                 for (cv, &av) in crow.iter_mut().zip(accr) {
                     *cv += av;
                 }
@@ -143,8 +153,10 @@ unsafe fn tile_block(
                         *cv += av * bv;
                     }
                 }
-                let crow =
-                    std::slice::from_raw_parts_mut(cap.c.add((i0 + r) * cap.n + j), jr);
+                let crow = std::slice::from_raw_parts_mut(
+                    cap.c.add((i0 + r) * cap.c_stride + (j - cap.c_j0)),
+                    jr,
+                );
                 for (cv, &av) in crow.iter_mut().zip(&acc[..jr]) {
                     *cv += av;
                 }
@@ -165,7 +177,8 @@ unsafe fn band(cap: &Capsule, j0: usize, j1: usize) {
     }
     // Seed the band from the bias.
     for i in 0..cap.m {
-        let crow = std::slice::from_raw_parts_mut(cap.c.add(i * cap.n + j0), w);
+        let crow =
+            std::slice::from_raw_parts_mut(cap.c.add(i * cap.c_stride + (j0 - cap.c_j0)), w);
         match cap.bias {
             BiasRaw::None => crow.fill(0.0),
             BiasRaw::PerRow(p) => crow.fill(*p.add(i)),
@@ -187,7 +200,10 @@ unsafe fn band(cap: &Capsule, j0: usize, j1: usize) {
             let ke = (kb + KC).min(cap.k);
             for i in 0..cap.m {
                 let arow = std::slice::from_raw_parts(cap.a.add(i * cap.a_stride), cap.k);
-                let crow = std::slice::from_raw_parts_mut(cap.c.add(i * cap.n + j0), w);
+                let crow = std::slice::from_raw_parts_mut(
+                    cap.c.add(i * cap.c_stride + (j0 - cap.c_j0)),
+                    w,
+                );
                 for kk in kb..ke {
                     let av = arow[kk];
                     if av == 0.0 {
@@ -218,7 +234,8 @@ unsafe fn band(cap: &Capsule, j0: usize, j1: usize) {
     }
     if cap.relu {
         for i in 0..cap.m {
-            let crow = std::slice::from_raw_parts_mut(cap.c.add(i * cap.n + j0), w);
+            let crow =
+                std::slice::from_raw_parts_mut(cap.c.add(i * cap.c_stride + (j0 - cap.c_j0)), w);
             for v in crow {
                 if *v < 0.0 {
                     *v = 0.0;
@@ -262,6 +279,8 @@ pub fn gemm_into(
         b: b.as_ptr(),
         b_stride: b.row_stride(),
         c: out.as_mut_ptr(),
+        c_stride: n,
+        c_j0: 0,
         m,
         k,
         n,
@@ -284,6 +303,62 @@ pub fn gemm_into(
         // blocks on scope completion, keeping the borrows live.
         unsafe { band(&shared, j0, j1) };
     });
+}
+
+/// Columns `[j0, j1)` of `a · b [+ bias] [then ReLU]`, written into the
+/// dense `out` slice of shape `(a.rows(), j1 - j0)` — the fused-stage
+/// entry point: a stage band computes exactly the GEMM columns its
+/// pool/LRN epilogue consumes, directly into tile scratch, so the conv
+/// output never materializes as a whole tensor.  Per-element reduction
+/// order is identical to [`gemm_into`] (one fresh ascending-k partial
+/// sum per `KC` block), so fused stages stay bit-identical to the
+/// unfused path.  Runs on the caller's thread: stage-level code
+/// parallelizes over bands, not inside them.
+pub fn gemm_cols_into(
+    a: MatView<'_>,
+    b: MatView<'_>,
+    bias: BiasMode<'_>,
+    relu: bool,
+    j0: usize,
+    j1: usize,
+    out: &mut [f32],
+) {
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    assert_eq!(b.rows(), k, "gemm inner dims: a is {m}x{k}, b is {}x{n}", b.rows());
+    assert!(j0 <= j1 && j1 <= n, "gemm column band [{j0}, {j1}) out of 0..{n}");
+    assert_eq!(out.len(), m * (j1 - j0), "gemm band output length");
+    let bias_raw = match bias {
+        BiasMode::None => BiasRaw::None,
+        BiasMode::PerRow(v) => {
+            assert_eq!(v.len(), m, "per-row bias length");
+            BiasRaw::PerRow(v.as_ptr())
+        }
+        BiasMode::PerCol(v) => {
+            assert_eq!(v.len(), n, "per-col bias length");
+            BiasRaw::PerCol(v.as_ptr())
+        }
+    };
+    if m == 0 || j0 == j1 {
+        return;
+    }
+    let cap = Capsule {
+        a: a.as_ptr(),
+        a_stride: a.row_stride(),
+        b: b.as_ptr(),
+        b_stride: b.row_stride(),
+        c: out.as_mut_ptr(),
+        c_stride: j1 - j0,
+        c_j0: j0,
+        m,
+        k,
+        n,
+        bias: bias_raw,
+        relu,
+        tile: j1 - j0,
+    };
+    // SAFETY: single band over live borrows; `out` is exactly the
+    // band's storage.
+    unsafe { band(&cap, j0, j1) };
 }
 
 /// Matrix product `(m, k) x (k, n) -> (m, n)`.
@@ -315,7 +390,10 @@ pub fn fc(x: &Tensor, w: &Tensor, b: &Tensor, relu: bool, opts: KernelOpts) -> T
 /// held on the stack while a strip of `B` streams through cache).
 const QNR: usize = 64;
 
-/// Pointer capsule for the q8 row bands.
+/// Pointer capsule for the q8 bands.  Like [`Capsule`], `C` storage is
+/// decoupled from the logical geometry (`c[i * c_stride + (j - c_j0)]`)
+/// so the fused-stage path can compute a column band into tile scratch;
+/// the whole-matrix row bands use `c_stride = n, c_j0 = 0`.
 struct Q8Capsule {
     wq: *const i8,
     scales: *const f32,
@@ -323,6 +401,8 @@ struct Q8Capsule {
     aq: *const u8,
     bias: *const f32,
     c: *mut f32,
+    c_stride: usize,
+    c_j0: usize,
     m: usize,
     k: usize,
     n: usize,
@@ -362,7 +442,7 @@ unsafe fn q8_band(cap: &Q8Capsule, i0: usize, i1: usize) {
                 total += wrow[kk] as i32 * acol[kk] as i32;
                 kk += 1;
             }
-            *cap.c.add(i) = q8_epilogue(cap, i, total);
+            *cap.c.add(i * cap.c_stride) = q8_epilogue(cap, i, total);
         }
         return;
     }
@@ -382,7 +462,43 @@ unsafe fn q8_band(cap: &Q8Capsule, i0: usize, i1: usize) {
                     *cv += av * bv as i32;
                 }
             }
-            let crow = std::slice::from_raw_parts_mut(cap.c.add(i * n + j), jw);
+            let crow =
+                std::slice::from_raw_parts_mut(cap.c.add(i * cap.c_stride + (j - cap.c_j0)), jw);
+            for (cv, &av) in crow.iter_mut().zip(&acc[..jw]) {
+                *cv = q8_epilogue(cap, i, av);
+            }
+        }
+        j += jw;
+    }
+}
+
+/// Every row of the q8 product restricted to columns `[j0, j1)` — the
+/// fused-stage counterpart of [`q8_band`]'s row bands.  Integer
+/// accumulation is exact and the f32 epilogue is per-element, so the
+/// band is bit-identical to the same columns of the full product.
+///
+/// SAFETY: pointers live for the call; the capsule's `C` storage is the
+/// band's scratch (`c_stride = j1 - j0, c_j0 = j0`).
+unsafe fn q8_band_cols(cap: &Q8Capsule, j0: usize, j1: usize) {
+    let k = cap.k;
+    let mut j = j0;
+    while j < j1 {
+        let jw = (j1 - j).min(QNR);
+        for i in 0..cap.m {
+            let wrow = std::slice::from_raw_parts(cap.wq.add(i * k), k);
+            let mut acc = [0i32; QNR];
+            for (kk, &wv) in wrow.iter().enumerate() {
+                let av = wv as i32;
+                if av == 0 {
+                    continue;
+                }
+                let brow = std::slice::from_raw_parts(cap.aq.add(kk * cap.n + j), jw);
+                for (cv, &bv) in acc[..jw].iter_mut().zip(brow) {
+                    *cv += av * bv as i32;
+                }
+            }
+            let crow =
+                std::slice::from_raw_parts_mut(cap.c.add(i * cap.c_stride + (j - cap.c_j0)), jw);
             for (cv, &av) in crow.iter_mut().zip(&acc[..jw]) {
                 *cv = q8_epilogue(cap, i, av);
             }
@@ -436,6 +552,8 @@ pub fn gemm_q8_into(
         aq: aq.as_ptr(),
         bias: bias.as_ptr(),
         c: out.as_mut_ptr(),
+        c_stride: n,
+        c_j0: 0,
         m,
         k,
         n,
@@ -459,6 +577,50 @@ pub fn gemm_q8_into(
         // SAFETY: disjoint row bands; entry point blocks on completion.
         unsafe { q8_band(&shared, i0, i1) };
     });
+}
+
+/// Columns `[j0, j1)` of the quantized GEMM, written into the dense
+/// `out` scratch of shape `(m, j1 - j0)` — the fused-stage q8 entry
+/// point, mirroring [`gemm_cols_into`].  Bit-identical to the same
+/// columns of [`gemm_q8_into`] (exact integer accumulation, per-element
+/// f32 epilogue).  Runs on the caller's thread.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_q8_cols_into(
+    wq: &QuantizedWeights,
+    aq: &[u8],
+    n: usize,
+    act: ActQuant,
+    bias: &[f32],
+    relu: bool,
+    j0: usize,
+    j1: usize,
+    out: &mut [f32],
+) {
+    let (m, k) = (wq.rows, wq.cols);
+    assert_eq!(aq.len(), k * n, "q8 activation matrix length");
+    assert_eq!(bias.len(), m, "q8 per-row bias length");
+    assert!(j0 <= j1 && j1 <= n, "q8 column band [{j0}, {j1}) out of 0..{n}");
+    assert_eq!(out.len(), m * (j1 - j0), "q8 band output length");
+    if m == 0 || j0 == j1 {
+        return;
+    }
+    let cap = Q8Capsule {
+        wq: wq.q.as_ptr(),
+        scales: wq.scales.as_ptr(),
+        row_sums: wq.row_sums.as_ptr(),
+        aq: aq.as_ptr(),
+        bias: bias.as_ptr(),
+        c: out.as_mut_ptr(),
+        c_stride: j1 - j0,
+        c_j0: j0,
+        m,
+        k,
+        n,
+        act,
+        relu,
+    };
+    // SAFETY: single band over live borrows; `out` is the band scratch.
+    unsafe { q8_band_cols(&cap, j0, j1) };
 }
 
 /// Quantized fully connected layer over a prepacked
@@ -715,6 +877,74 @@ mod tests {
                 let mut got = vec![0.0f32; m * n];
                 gemm_q8_into(&wq, &aq, n, act, &bias, true, opts, &mut got);
                 assert_eq!(got, want, "{m}x{k}x{n} ({opts:?})");
+            }
+        }
+    }
+
+    #[test]
+    fn column_bands_are_bit_identical_slices_of_the_full_product() {
+        // The fused-stage entry must reproduce exactly the columns the
+        // whole-matrix GEMM computes — this is the bit-identity anchor
+        // of the fused execution path.
+        let (m, k, n) = (9usize, 300usize, 57usize);
+        let a = random(vec![m, k], 40);
+        let b = random(vec![k, n], 41);
+        let bias = random(vec![m], 42);
+        let mut full = Tensor::zeros(vec![m, n]);
+        gemm_into(
+            a.view2d(),
+            b.view2d(),
+            BiasMode::PerRow(bias.data()),
+            true,
+            KernelOpts::seq(),
+            full.data_mut(),
+        );
+        for (j0, j1) in [(0, n), (3, 20), (20, n), (55, n), (7, 8)] {
+            let mut band_out = vec![0.0f32; m * (j1 - j0)];
+            gemm_cols_into(
+                a.view2d(),
+                b.view2d(),
+                BiasMode::PerRow(bias.data()),
+                true,
+                j0,
+                j1,
+                &mut band_out,
+            );
+            for i in 0..m {
+                for j in j0..j1 {
+                    assert_eq!(
+                        band_out[i * (j1 - j0) + (j - j0)].to_bits(),
+                        full.data()[i * n + j].to_bits(),
+                        "({i},{j}) band [{j0},{j1})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn q8_column_bands_match_the_full_product() {
+        let (m, k, n) = (7usize, 130usize, 40usize);
+        let mut rng = Pcg::seeded(43);
+        let w = rng.normal_vec(m * k, 0.5);
+        let x = rng.normal_vec(k * n, 1.0);
+        let bias = rng.normal_vec(m, 0.1);
+        let wq = QuantizedWeights::quantize_rows(&w, m, k);
+        let mut aq = vec![0u8; k * n];
+        let act = quantize_activations(&x, &mut aq);
+        let mut full = vec![0.0f32; m * n];
+        gemm_q8_into(&wq, &aq, n, act, &bias, true, KernelOpts::seq(), &mut full);
+        for (j0, j1) in [(0, n), (5, 17), (17, n), (39, n)] {
+            let mut band_out = vec![0.0f32; m * (j1 - j0)];
+            gemm_q8_cols_into(&wq, &aq, n, act, &bias, true, j0, j1, &mut band_out);
+            for i in 0..m {
+                for j in j0..j1 {
+                    assert_eq!(
+                        band_out[i * (j1 - j0) + (j - j0)].to_bits(),
+                        full[i * n + j].to_bits(),
+                        "({i},{j}) band [{j0},{j1})"
+                    );
+                }
             }
         }
     }

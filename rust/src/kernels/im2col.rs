@@ -16,6 +16,8 @@
 
 use crate::model::network::ConvSpec;
 
+use super::quant::{act_params_from_range, quantize_one, ActQuant};
+
 /// Patch-matrix row count: `C * KH * KW`.
 pub fn patch_rows(spec: &ConvSpec) -> usize {
     spec.in_c * spec.kh * spec.kw
@@ -79,6 +81,119 @@ pub fn im2col_frame(frame: &[f32], spec: &ConvSpec, out: &mut [f32]) {
     }
 }
 
+/// Quantize one frame's patch matrix straight into the `u8` GEMM
+/// operand, without materializing the f32 patch matrix: pass 1 walks
+/// the patch geometry folding min/max, pass 2 emits the quantized
+/// bytes.  This halves the q8 conv's streaming passes — the old path
+/// wrote a full f32 patch matrix, then re-read it twice (min/max scan
+/// + quantize), while here the only patch-matrix-sized traffic is the
+/// quarter-width `u8` write and both read passes touch the much
+/// smaller, cache-resident frame.
+///
+/// Bit-identical to `im2col_frame` + [`quantize_activations`]: the
+/// min/max fold starts at `(0.0, 0.0)` (the contract's forced zero,
+/// which also covers every out-of-bounds zero fill), repeated samples
+/// cannot move extrema, and each element goes through the same
+/// [`quantize_one`] contract.
+///
+/// [`quantize_activations`]: super::quant::quantize_activations
+pub fn im2col_q8_frame(frame: &[f32], spec: &ConvSpec, out: &mut [u8]) -> ActQuant {
+    let (c, h, w) = (spec.in_c, spec.in_h, spec.in_w);
+    let (oh, ow) = (spec.out_h(), spec.out_w());
+    let cols = oh * ow;
+    assert_eq!(frame.len(), c * h * w, "im2col frame length");
+    assert_eq!(out.len(), patch_rows(spec) * cols, "im2col patch buffer length");
+    let s = spec.stride.max(1) as isize;
+    let pad = spec.pad as isize;
+
+    // Pass 1: patch-matrix min/max without the patch matrix.
+    let (mut mn, mut mx) = (0.0f32, 0.0f32);
+    for ci in 0..c {
+        let plane = &frame[ci * h * w..(ci + 1) * h * w];
+        for ky in 0..spec.kh {
+            for kx in 0..spec.kw {
+                let off = kx as isize - pad;
+                let lo_raw = if off >= 0 { 0 } else { (-off + s - 1) / s };
+                let lo = lo_raw.min(ow as isize);
+                let hi_num = w as isize - 1 - off;
+                let hi_raw = if hi_num < 0 { -1 } else { hi_num / s };
+                let hi = hi_raw.min(ow as isize - 1);
+                if hi < lo {
+                    continue;
+                }
+                let (lo, hi) = (lo as usize, hi as usize);
+                for oy in 0..oh {
+                    let iy = oy as isize * s + ky as isize - pad;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    let src = &plane[iy as usize * w..(iy as usize + 1) * w];
+                    if s == 1 {
+                        let i0 = (lo as isize + off) as usize;
+                        for &v in &src[i0..i0 + (hi - lo + 1)] {
+                            mn = mn.min(v);
+                            mx = mx.max(v);
+                        }
+                    } else {
+                        for ox in lo..=hi {
+                            let v = src[(ox as isize * s + off) as usize];
+                            mn = mn.min(v);
+                            mx = mx.max(v);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let aq = act_params_from_range(mn, mx);
+    // quantize(0.0) == zp exactly, so fills are a single byte.
+    let zero = aq.zp as u8;
+
+    // Pass 2: emit the quantized patch matrix, same fill structure as
+    // `im2col_frame`.
+    let mut r = 0usize;
+    for ci in 0..c {
+        let plane = &frame[ci * h * w..(ci + 1) * h * w];
+        for ky in 0..spec.kh {
+            for kx in 0..spec.kw {
+                let orow = &mut out[r * cols..(r + 1) * cols];
+                let off = kx as isize - pad;
+                let lo_raw = if off >= 0 { 0 } else { (-off + s - 1) / s };
+                let lo = lo_raw.min(ow as isize);
+                let hi_num = w as isize - 1 - off;
+                let hi_raw = if hi_num < 0 { -1 } else { hi_num / s };
+                let hi = hi_raw.min(ow as isize - 1);
+                for oy in 0..oh {
+                    let iy = oy as isize * s + ky as isize - pad;
+                    let dst = &mut orow[oy * ow..(oy + 1) * ow];
+                    if iy < 0 || iy >= h as isize || hi < lo {
+                        dst.fill(zero);
+                        continue;
+                    }
+                    let src = &plane[iy as usize * w..(iy as usize + 1) * w];
+                    let (lo, hi) = (lo as usize, hi as usize);
+                    dst[..lo].fill(zero);
+                    if s == 1 {
+                        let i0 = (lo as isize + off) as usize;
+                        for (d, &v) in
+                            dst[lo..=hi].iter_mut().zip(&src[i0..i0 + (hi - lo + 1)])
+                        {
+                            *d = quantize_one(v, aq);
+                        }
+                    } else {
+                        for (ox, d) in dst.iter_mut().enumerate().take(hi + 1).skip(lo) {
+                            *d = quantize_one(src[(ox as isize * s + off) as usize], aq);
+                        }
+                    }
+                    dst[hi + 1..].fill(zero);
+                }
+                r += 1;
+            }
+        }
+    }
+    aq
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -136,6 +251,36 @@ mod tests {
         check(spec(2, 3, 3, 2, 2, 1, 3)); // pad >= kernel
         check(spec(1, 5, 5, 5, 5, 1, 4)); // big symmetric pad
         check(spec(1, 9, 9, 3, 3, 3, 0)); // stride == kernel
+    }
+
+    #[test]
+    fn q8_patch_path_matches_f32_then_quantize() {
+        // The direct-from-frame quantizer must be byte-identical to
+        // materializing the f32 patch matrix and quantizing it — the
+        // q8 guardrail's 100%-agreement bar depends on this.
+        use super::super::quant::quantize_activations;
+        for sp in [
+            spec(1, 4, 4, 3, 3, 1, 0),
+            spec(2, 5, 4, 3, 2, 1, 1),
+            spec(3, 7, 7, 3, 3, 2, 1),
+            spec(1, 6, 6, 1, 1, 1, 0),
+            spec(1, 6, 6, 1, 1, 2, 0),
+            spec(2, 3, 3, 2, 2, 1, 3), // pad >= kernel
+            spec(1, 5, 5, 5, 5, 1, 4),
+            spec(1, 9, 9, 3, 3, 3, 0), // stride == kernel
+        ] {
+            let n = sp.in_c * sp.in_h * sp.in_w;
+            // Mixed-sign values so min/max are both load-bearing.
+            let frame: Vec<f32> = (0..n).map(|i| (i as f32) * 0.37 - 3.0).collect();
+            let mut patches = vec![0.0f32; patch_rows(&sp) * patch_cols(&sp)];
+            im2col_frame(&frame, &sp, &mut patches);
+            let mut want_q = vec![0u8; patches.len()];
+            let want_aq = quantize_activations(&patches, &mut want_q);
+            let mut got_q = vec![7u8; patches.len()]; // dirty buffer
+            let got_aq = im2col_q8_frame(&frame, &sp, &mut got_q);
+            assert_eq!(got_aq, want_aq, "{sp:?}");
+            assert_eq!(got_q, want_q, "{sp:?}");
+        }
     }
 
     #[test]

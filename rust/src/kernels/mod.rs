@@ -17,6 +17,10 @@
 //! * [`conv`] — both conv lowerings: the paper's §4.1 direct 7-deep
 //!   loop nest ([`conv::conv_direct`], the numeric reference) and
 //!   im2col+GEMM ([`conv::conv_im2col`], the fast path).
+//! * [`fuse`] — fused-stage execution: conv→ReLU→pool(/LRN) chains
+//!   ([`fuse::TailOp`]) run band-by-band through per-stage tile
+//!   scratch, bit-identical to the unfused kernels, so intermediate
+//!   activations never round-trip memory as whole-batch tensors.
 //! * [`pool`] — max/avg pooling, LRN, and ReLU kernels that
 //!   tile-parallelize *within* a frame (plane x row bands), so batch
 //!   size 1 — the common serving case — still uses every core.
@@ -35,6 +39,7 @@
 //! tests all execute the same code.
 
 pub mod conv;
+pub mod fuse;
 pub mod gemm;
 pub mod im2col;
 pub mod pack;
@@ -42,8 +47,11 @@ pub mod pool;
 pub mod quant;
 
 pub use conv::{conv_direct, conv_im2col, conv_im2col_q8, conv_im2col_unpacked};
-pub use gemm::{fc, fc_q8, gemm_into, gemm_q8_into, matmul, BiasMode};
-pub use im2col::{im2col_frame, patch_cols, patch_rows};
+pub use fuse::{conv_stage, tail_out_shape, tail_stage, ConvSource, TailOp};
+pub use gemm::{
+    fc, fc_q8, gemm_cols_into, gemm_into, gemm_q8_cols_into, gemm_q8_into, matmul, BiasMode,
+};
+pub use im2col::{im2col_frame, im2col_q8_frame, patch_cols, patch_rows};
 pub use pack::{
     PackedConv, PackedConvQ8, PackedFcQ8, PackedLayer, PackedModel, PackedQ8Layer,
 };

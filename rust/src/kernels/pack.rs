@@ -20,6 +20,7 @@ use crate::model::weights::Params;
 use crate::tensor::Tensor;
 use crate::Result;
 
+use super::fuse::TailOp;
 use super::im2col::patch_rows;
 use super::quant::QuantizedWeights;
 
@@ -126,11 +127,16 @@ pub enum PackedQ8Layer {
 
 /// Per-network cache of prepared layers, keyed by layer name.  The f32
 /// and q8 entries are independent maps so a mixed-precision plan packs
-/// each layer exactly once in the precision it executes.
+/// each layer exactly once in the precision it executes.  Fused-stage
+/// parameters ride alongside: `stage_tails` records, per conv-led
+/// fused stage (keyed by the head conv's layer name, f32 or q8), the
+/// tail ops its banded epilogue executes — resolved once at load time
+/// so per-inference stage dispatch does no plan re-walking.
 #[derive(Debug, Clone, Default)]
 pub struct PackedModel {
     entries: BTreeMap<String, PackedLayer>,
     q8_entries: BTreeMap<String, PackedQ8Layer>,
+    stage_tails: BTreeMap<String, Vec<TailOp>>,
 }
 
 impl PackedModel {
@@ -219,7 +225,25 @@ impl PackedModel {
                 Layer::Pool { .. } | Layer::Lrn { .. } => {}
             }
         }
-        Ok(PackedModel { entries, q8_entries })
+        Ok(PackedModel { entries, q8_entries, stage_tails: BTreeMap::new() })
+    }
+
+    /// Record the tail ops of a conv-led fused stage, keyed by the
+    /// head conv's layer name (the engine calls this once per fused
+    /// stage at load time, from its `ExecutionPlan::fuse` grouping).
+    pub fn set_stage_tail(&mut self, head: &str, ops: Vec<TailOp>) {
+        self.stage_tails.insert(head.to_string(), ops);
+    }
+
+    /// Cached tail ops of the fused stage headed by conv layer `head`
+    /// (None when the layer heads no fused stage).
+    pub fn stage_tail(&self, head: &str) -> Option<&[TailOp]> {
+        self.stage_tails.get(head).map(|v| v.as_slice())
+    }
+
+    /// Number of cached fused-stage tails.
+    pub fn stage_count(&self) -> usize {
+        self.stage_tails.len()
     }
 
     /// Prepared f32 form of one layer.
@@ -349,6 +373,24 @@ mod tests {
         assert!(packed.conv_q8("conv1").is_none());
         assert!(packed.fc_q8("fc1").is_some());
         assert!(packed.fc_q8("fc2").is_none());
+    }
+
+    #[test]
+    fn stage_tail_cache_round_trips() {
+        let net = zoo::lenet5();
+        let params = synth_params(&net, 5);
+        let mut packed = PackedModel::prepare(&net, &params).unwrap();
+        assert_eq!(packed.stage_count(), 0);
+        assert!(packed.stage_tail("conv1").is_none());
+        let ops = vec![crate::kernels::TailOp::Pool {
+            mode: crate::model::network::PoolMode::Max,
+            size: 2,
+            stride: 2,
+            relu: false,
+        }];
+        packed.set_stage_tail("conv1", ops.clone());
+        assert_eq!(packed.stage_tail("conv1"), Some(ops.as_slice()));
+        assert_eq!(packed.stage_count(), 1);
     }
 
     #[test]

@@ -27,6 +27,11 @@ pub fn avgpool_nchw(x: &Tensor, size: usize, stride: usize, opts: KernelOpts) ->
 
 /// Rows `[y0, y1)` of one pooling output plane.  `xp` is the input
 /// plane (`h*w`), `od` the output rows being written (`(y1-y0)*ow`).
+///
+/// NOTE: the fused-stage twin (`super::fuse::apply_op`, Pool arm) must
+/// stay in per-element lockstep with this loop — window walk order,
+/// divisor, edge clipping — or fused stages lose bit-identity with the
+/// layerwise path (`tests/prop_fusion.rs` pins it).
 #[allow(clippy::too_many_arguments)]
 fn pool_rows(
     xp: &[f32],
@@ -154,6 +159,11 @@ fn pool_impl(x: &Tensor, size: usize, stride: usize, is_max: bool, opts: KernelO
 
 /// Rows `[y0, y1)` of one LRN output plane.  `xd` is the whole input
 /// (the channel window reads neighbouring planes).
+///
+/// NOTE: the fused-stage twin (`super::fuse::apply_op`, Lrn arm) must
+/// stay in per-element lockstep with this loop — f64 accumulation,
+/// ascending channel window, `powf` — or fused stages lose bit-identity
+/// with the layerwise path (`tests/prop_fusion.rs` pins it).
 #[allow(clippy::too_many_arguments)]
 fn lrn_rows(
     xd: &[f32],

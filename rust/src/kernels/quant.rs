@@ -101,15 +101,15 @@ pub struct ActQuant {
     pub zp: i32,
 }
 
-/// Scan a tensor's min/max (range forced to include 0.0) and derive
-/// the per-tensor `u8` parameters — THE quantization contract both
-/// store orders below share.  A constant-zero tensor gets scale 1.0.
-fn act_params(x: &[f32]) -> ActQuant {
-    let (mut mn, mut mx) = (0.0f32, 0.0f32);
-    for &v in x {
-        mn = mn.min(v);
-        mx = mx.max(v);
-    }
+/// Derive the per-tensor `u8` parameters from an observed value range —
+/// THE quantization contract every activation-quantizing path shares.
+/// Callers fold their min/max starting from `(0.0, 0.0)` (the range is
+/// forced to include 0.0, so padding and post-ReLU zeros quantize
+/// exactly); a constant-zero range gets scale 1.0.  Public so paths
+/// that scan values without materializing them (the direct-from-frame
+/// im2col quantizer, [`crate::kernels::im2col::im2col_q8_frame`]) stay
+/// bit-identical to [`quantize_activations`].
+pub fn act_params_from_range(mn: f32, mx: f32) -> ActQuant {
     let mut scale = (mx - mn) / 255.0;
     if scale <= 0.0 {
         scale = 1.0;
@@ -118,9 +118,20 @@ fn act_params(x: &[f32]) -> ActQuant {
     ActQuant { scale, zp }
 }
 
+/// Scan a tensor's min/max (range forced to include 0.0) and derive
+/// the per-tensor `u8` parameters.
+fn act_params(x: &[f32]) -> ActQuant {
+    let (mut mn, mut mx) = (0.0f32, 0.0f32);
+    for &v in x {
+        mn = mn.min(v);
+        mx = mx.max(v);
+    }
+    act_params_from_range(mn, mx)
+}
+
 /// One element through the shared quantization contract.
 #[inline]
-fn quantize_one(v: f32, aq: ActQuant) -> u8 {
+pub fn quantize_one(v: f32, aq: ActQuant) -> u8 {
     ((v / aq.scale).round() as i32 + aq.zp).clamp(0, 255) as u8
 }
 

@@ -57,7 +57,8 @@ Methods: cpu-seq | basic-parallel | basic-simd | advanced-simd-4 | advanced-simd
 `cpu-gemm-q8` for the forced 8-bit quantized CPU path, or
 `--method delegate:auto [--device note4|m9]` for cost-driven automatic placement
 (suffix `:q8`, e.g. `delegate:auto:note4:q8`, lets the guardrail-gated quantized
-backend compete for layers).
+backend compete for layers; suffix `:nofuse` runs the plan layer-by-layer
+instead of through the fused-stage IR).
 
 Run `cnndroid <command> --help` for command options.";
 
@@ -102,10 +103,10 @@ fn method_with_device(args: &cnndroid::util::args::Args) -> Result<String> {
             ))
         }
     };
-    // Precision suffixes ride along; anything else is a device name
-    // already baked into the selector.
+    // Precision/fusion suffixes ride along; anything else is a device
+    // name already baked into the selector.
     let segs: Vec<&str> = rest.split(':').filter(|s| !s.is_empty()).collect();
-    if segs.iter().any(|s| !matches!(*s, "q8" | "noq8")) {
+    if segs.iter().any(|s| !matches!(*s, "q8" | "noq8" | "fuse" | "nofuse")) {
         return Err(anyhow::anyhow!(
             "--device {dev} conflicts with --method {method:?}, which already names a device"
         ));
@@ -389,6 +390,32 @@ fn plan_cmd(argv: Vec<String>) -> Result<()> {
                 a.backend,
                 a.cost_s * 1e3,
                 a.swap_s * 1e3
+            );
+        }
+        // Fused-stage view of the emitted plan: stage boundaries, the
+        // per-stage execution estimate, and the memory-traffic saving
+        // the fused schedule earns vs running the same plan unfused.
+        let stages = report.plan.fuse();
+        let fused: Vec<_> = stages.iter().filter(|s| s.is_fused()).collect();
+        if !fused.is_empty() {
+            println!("  fused stages (disable with --method delegate:auto...:nofuse):");
+            for st in &fused {
+                let exec: f64 =
+                    report.assignments[st.start..st.end].iter().map(|a| a.cost_s).sum();
+                let saved: f64 =
+                    report.assignments[st.start + 1..st.end].iter().map(|a| a.fuse_s).sum();
+                println!(
+                    "    {:<24} {:<10} exec {:>9.4} ms   traffic saved {:>9.4} ms",
+                    report.plan.stage_name(st),
+                    report.plan.stage_kind(st),
+                    exec * 1e3,
+                    saved * 1e3
+                );
+            }
+            let total_saved: f64 = report.assignments.iter().map(|a| a.fuse_s).sum();
+            println!(
+                "    total fusion traffic saving vs unfused: {:.4} ms/frame",
+                total_saved * 1e3
             );
         }
         println!("  fixed-method predictions:");

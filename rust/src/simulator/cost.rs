@@ -233,6 +233,28 @@ pub fn fc_time_cpu_gemm_q8(dev: &DeviceSpec, d_in: usize, d_out: usize, threads:
     quant_time(dev, d_in) + gemm_time_cpu_q8(dev, d_out, d_in, 1, threads)
 }
 
+/// Memory-traffic seconds of one write+read round trip of a `(c, h,
+/// w)` f32 activation through the cache hierarchy — THE shared traffic
+/// term behind both the layout-swap charge
+/// ([`crate::delegate::transition_cost`]) and the fusion credit
+/// ([`fusion_saving`]), which are inverses of each other by design:
+/// one round trip taken, one not taken.
+pub fn round_trip_traffic(dev: &DeviceSpec, (c, h, w): (usize, usize, usize)) -> f64 {
+    2.0 * (c * h * w) as f64 * 4.0 / (dev.cache_gbps * 1e9)
+}
+
+/// Memory-traffic seconds a fused stage saves at one interior
+/// boundary: the intermediate activation's write+read round trip,
+/// which banded stage execution eliminates (the stage tail consumes
+/// conv/GEMM output while it is cache-hot instead of re-streaming a
+/// whole-batch tensor).  `(c, h, w)` is the activation shape crossing
+/// the fused boundary.  The partitioner credits it on fusable
+/// CPU-to-CPU edges so the DP costs stages, not layers, and stops
+/// splitting fusable chains across backends when per-layer costs tie.
+pub fn fusion_saving(dev: &DeviceSpec, shape: (usize, usize, usize)) -> f64 {
+    round_trip_traffic(dev, shape)
+}
+
 /// Time of one FC layer for one frame, seconds.  Public for the
 /// delegate partitioner, which prices CPU-vs-accelerator FC placement
 /// per layer instead of hard-coding the paper's AlexNet-only rule.
@@ -536,6 +558,33 @@ mod tests {
                 "{}: q8 must not win the 500x10 head",
                 dev.name
             );
+        }
+    }
+
+    #[test]
+    fn fusion_saving_is_positive_but_never_flips_heavy_conv_placement() {
+        // The credit must stay far below the accel-vs-CPU gap on the
+        // layers the placement tests pin (AlexNet conv2/conv5 ride the
+        // accelerator), so stage costing refines plans instead of
+        // rewriting them.
+        for dev in [galaxy_note4(), htc_one_m9()] {
+            let alex = zoo::alexnet();
+            let shapes = alex.shapes();
+            for (layer, next) in [("conv2", "pool2"), ("conv5", "pool5")] {
+                let li = alex.layers.iter().position(|l| l.name() == layer).unwrap();
+                assert_eq!(alex.layers[li + 1].name(), next);
+                let out_shape = shapes[li + 1].1;
+                let saving = fusion_saving(&dev, out_shape);
+                assert!(saving > 0.0, "{}: saving must be positive", dev.name);
+                let spec = &alex.conv_specs().iter().find(|(n, _)| n == layer).unwrap().1;
+                let cpu = conv_time_cpu_gemm(&dev, spec, dev.cpu_big_cores as usize);
+                let gpu = conv_time_gpu(&dev, spec, Method::AdvancedSimd4, 1.0);
+                assert!(
+                    saving < (cpu - gpu).abs() * 0.1,
+                    "{}/{layer}: saving {saving} rivals the placement gap",
+                    dev.name
+                );
+            }
         }
     }
 

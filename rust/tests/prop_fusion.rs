@@ -1,0 +1,306 @@
+//! Property tests on the fused-stage execution path:
+//!
+//! (a) fused conv→ReLU→pool(/LRN) stages are **bit-identical** to the
+//!     unfused kernels over randomized conv geometries (pad >= kernel,
+//!     1x1, stride > 1), randomized tails (overlapping and
+//!     non-overlapping pool windows — both fused schedules), batch
+//!     sizes, and thread/tile configurations — for f32 and q8 heads;
+//! (b) tail-only stages (pool/LRN runs with no fusable conv head)
+//!     match the chained standalone kernels bitwise;
+//! (c) the direct-from-frame u8 patch quantizer is byte-identical to
+//!     materializing the f32 patch matrix and quantizing it;
+//! (d) the partitioner never splits a fusable conv→pool chain: when a
+//!     conv lands on a banded-epilogue CPU backend (pool costs tie
+//!     exactly between cpu-par and cpu-gemm, so only the fusion credit
+//!     and deterministic tie-breaking order the choice), the emitted
+//!     plan's fusion pass keeps the chain in one stage.
+
+use cnndroid::coordinator::plan::LayerPlan;
+use cnndroid::delegate::{Partitioner, Registry};
+use cnndroid::kernels::{self, ConvSource, KernelOpts, PackedConv, PackedConvQ8, TailOp};
+use cnndroid::model::network::{ConvSpec, PoolMode};
+use cnndroid::model::zoo;
+use cnndroid::prop_assert;
+use cnndroid::simulator::device::{galaxy_note4, htc_one_m9, DeviceSpec};
+use cnndroid::tensor::Tensor;
+use cnndroid::util::prop;
+use cnndroid::util::rng::Pcg;
+
+fn random_tensor(rng: &mut Pcg, shape: Vec<usize>) -> Tensor {
+    let n = shape.iter().product();
+    Tensor::new(shape, rng.normal_vec(n, 1.0))
+}
+
+/// Random conv geometry biased to the edge cases (same distribution as
+/// `prop_kernels`): 1x1 kernels, strides > 1, pad 0, pad >= kernel.
+fn random_spec(rng: &mut Pcg) -> ConvSpec {
+    let kh = rng.range(1, 6) as usize;
+    let kw = rng.range(1, 6) as usize;
+    let stride = rng.range(1, 4) as usize;
+    let pad = rng.range(0, kh.max(kw) as i64 + 3) as usize;
+    let in_c = rng.range(1, 7) as usize;
+    let nk = rng.range(1, 9) as usize;
+    let mut in_h = rng.range(2, 14) as usize;
+    let mut in_w = rng.range(2, 14) as usize;
+    if (in_h + 2 * pad) < kh {
+        in_h = kh - 2 * pad;
+    }
+    if (in_w + 2 * pad) < kw {
+        in_w = kw - 2 * pad;
+    }
+    ConvSpec { in_c, in_h, in_w, nk, kh, kw, stride, pad, relu: rng.below(2) == 0 }
+}
+
+fn random_pool(rng: &mut Pcg) -> TailOp {
+    TailOp::Pool {
+        mode: if rng.below(2) == 0 { PoolMode::Max } else { PoolMode::Avg },
+        // size/stride in [1, 3]: covers overlapping (stride < size,
+        // the two-phase schedule), non-overlapping (band-local), and
+        // stride > size (skipped conv rows).
+        size: rng.range(1, 4) as usize,
+        stride: rng.range(1, 4) as usize,
+        relu: rng.below(2) == 0,
+    }
+}
+
+fn random_lrn(rng: &mut Pcg) -> TailOp {
+    TailOp::Lrn {
+        size: 1 + 2 * rng.range(0, 3) as usize,
+        alpha: 1e-4,
+        beta: 0.75,
+        k: 1.0,
+    }
+}
+
+/// Random stage tail: pool, pool+LRN, LRN+pool, or lone LRN.
+fn random_tail(rng: &mut Pcg) -> Vec<TailOp> {
+    match rng.below(4) {
+        0 => vec![random_pool(rng)],
+        1 => vec![random_pool(rng), random_lrn(rng)],
+        2 => vec![random_lrn(rng), random_pool(rng)],
+        _ => vec![random_lrn(rng)],
+    }
+}
+
+/// Unfused reference: the standalone kernels chained exactly as the
+/// layerwise engine path runs them.
+fn apply_unfused(h: &Tensor, op: &TailOp, opts: KernelOpts) -> Tensor {
+    match op {
+        TailOp::Pool { mode, size, stride, relu } => {
+            let mut out = match mode {
+                PoolMode::Max => kernels::maxpool_nchw(h, *size, *stride, opts),
+                PoolMode::Avg => kernels::avgpool_nchw(h, *size, *stride, opts),
+            };
+            if *relu {
+                out.relu_inplace();
+            }
+            out
+        }
+        TailOp::Lrn { size, alpha, beta, k } => {
+            kernels::lrn_nchw(h, *size, *alpha, *beta, *k, opts)
+        }
+    }
+}
+
+fn opts_cases() -> [KernelOpts; 3] {
+    [KernelOpts::seq(), KernelOpts::tiled(), KernelOpts { threads: 8, tile: 16 }]
+}
+
+#[test]
+fn fused_f32_conv_stages_bit_identical_to_unfused() {
+    prop::check("fused f32 conv stage vs unfused", |rng| {
+        let spec = random_spec(rng);
+        let tail = random_tail(rng);
+        let batch = rng.range(1, 4) as usize;
+        let x = random_tensor(rng, vec![batch, spec.in_c, spec.in_h, spec.in_w]);
+        let w = random_tensor(rng, vec![spec.nk, spec.in_c, spec.kh, spec.kw]);
+        let b = random_tensor(rng, vec![spec.nk]);
+        let packed = PackedConv::pack(&spec, &w, &b);
+        for opts in opts_cases() {
+            let fused = kernels::conv_stage(&x, ConvSource::F32(&packed), &tail, opts);
+            let mut want = kernels::conv_im2col(&x, &packed, opts);
+            for op in &tail {
+                want = apply_unfused(&want, op, opts);
+            }
+            prop_assert!(
+                fused == want,
+                "f32 stage diverged for {spec:?} tail {tail:?} batch {batch} ({opts:?})"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fused_q8_conv_stages_bit_identical_to_unfused() {
+    prop::check("fused q8 conv stage vs unfused", |rng| {
+        let spec = random_spec(rng);
+        let tail = random_tail(rng);
+        let batch = rng.range(1, 3) as usize;
+        let x = random_tensor(rng, vec![batch, spec.in_c, spec.in_h, spec.in_w]);
+        let w = random_tensor(rng, vec![spec.nk, spec.in_c, spec.kh, spec.kw]);
+        let b = random_tensor(rng, vec![spec.nk]);
+        let packed = PackedConvQ8::pack(&spec, &w, &b);
+        for opts in opts_cases() {
+            let fused = kernels::conv_stage(&x, ConvSource::Q8(&packed), &tail, opts);
+            let mut want = kernels::conv_im2col_q8(&x, &packed, opts);
+            for op in &tail {
+                want = apply_unfused(&want, op, opts);
+            }
+            prop_assert!(
+                fused == want,
+                "q8 stage diverged for {spec:?} tail {tail:?} batch {batch} ({opts:?})"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn tail_only_stages_bit_identical_to_chained_kernels() {
+    prop::check("tail-only stage vs chained kernels", |rng| {
+        let n = rng.range(1, 3) as usize;
+        let c = rng.range(1, 9) as usize;
+        let h = rng.range(2, 20) as usize;
+        let w = rng.range(2, 20) as usize;
+        let x = random_tensor(rng, vec![n, c, h, w]);
+        // Tail-only stages are pool/LRN runs of length >= 2.
+        let ops = match rng.below(3) {
+            0 => vec![random_pool(rng), random_lrn(rng)],
+            1 => vec![random_lrn(rng), random_pool(rng)],
+            _ => vec![random_pool(rng), random_pool(rng)],
+        };
+        for opts in opts_cases() {
+            let fused = kernels::tail_stage(&x, &ops, opts);
+            let mut want = x.clone();
+            for op in &ops {
+                want = apply_unfused(&want, op, opts);
+            }
+            prop_assert!(
+                fused == want,
+                "tail stage diverged: {n}x{c}x{h}x{w} ops {ops:?} ({opts:?})"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn direct_u8_patch_quantizer_matches_f32_reference() {
+    prop::check("im2col q8 patch path vs f32+quantize", |rng| {
+        let spec = random_spec(rng);
+        let frame =
+            rng.normal_vec(spec.in_c * spec.in_h * spec.in_w, 1.0);
+        let rows = kernels::patch_rows(&spec);
+        let cols = kernels::patch_cols(&spec);
+        let mut patches = vec![0.0f32; rows * cols];
+        kernels::im2col_frame(&frame, &spec, &mut patches);
+        let mut want_q = vec![0u8; rows * cols];
+        let want_aq = kernels::quantize_activations(&patches, &mut want_q);
+        let mut got_q = vec![123u8; rows * cols]; // dirty buffer
+        let got_aq = kernels::im2col_q8_frame(&frame, &spec, &mut got_q);
+        prop_assert!(got_aq == want_aq, "params diverged for {spec:?}");
+        prop_assert!(got_q == want_q, "bytes diverged for {spec:?}");
+        Ok(())
+    });
+}
+
+/// Random multiplicative jitter in [0.5, 2) for one calibration field
+/// (same scheme as `prop_delegate`).
+fn scale(rng: &mut Pcg) -> f64 {
+    4f64.powf(rng.uniform() - 0.5)
+}
+
+fn jittered_device(rng: &mut Pcg) -> DeviceSpec {
+    let mut dev = if rng.below(2) == 0 { galaxy_note4() } else { htc_one_m9() };
+    dev.gpu_ach_gflops *= scale(rng);
+    dev.cache_gbps *= scale(rng);
+    dev.copy_gbps *= scale(rng);
+    dev.launch_base_ms *= scale(rng);
+    dev.cpu_gemm_gflops *= scale(rng);
+    dev.cpu_pool_gops *= scale(rng);
+    dev.cpu_mt_speedup = 1.0 + (dev.cpu_mt_speedup - 1.0) * scale(rng);
+    dev
+}
+
+/// The satellite placement property: whenever a conv lands on a
+/// banded-epilogue CPU backend and the next layer is a fusable pool,
+/// the emitted plan keeps the chain in one fused stage — for any
+/// plausible device calibration.  Pool exec costs tie exactly between
+/// cpu-par and cpu-gemm, so this is precisely the costs-are-equal case
+/// the fusion credit plus deterministic tie-breaking must not split.
+#[test]
+fn partitioner_never_splits_fusable_conv_pool_chains() {
+    prop::check("fusable chains unsplit", |rng| {
+        let dev = jittered_device(rng);
+        let registry = if rng.below(2) == 0 {
+            Registry::simulated().with_q8()
+        } else {
+            Registry::simulated()
+        };
+        let nets = zoo::all();
+        let net = nets[rng.below(nets.len() as u64) as usize].clone();
+        let rep = Partitioner::new(&registry, &dev)
+            .partition(&net)
+            .map_err(|e| format!("partition failed: {e}"))?;
+        let stages = rep.plan.fuse();
+        for li in 0..rep.plan.layers.len().saturating_sub(1) {
+            let head_fusable = matches!(
+                rep.plan.layers[li],
+                LayerPlan::ConvCpu { variant: cnndroid::kernels::KernelVariant::Im2col, .. }
+                    | LayerPlan::ConvCpuQ8 { .. }
+            );
+            let tail_fusable =
+                matches!(rep.plan.layers[li + 1], LayerPlan::Pool { .. } | LayerPlan::Lrn { .. });
+            if !(head_fusable && tail_fusable) {
+                continue;
+            }
+            let stage = stages
+                .iter()
+                .find(|s| s.start <= li && li < s.end)
+                .ok_or_else(|| format!("layer {li} not covered by any stage"))?;
+            prop_assert!(
+                stage.end > li + 1,
+                "{}/{}: fusable chain split at layer {li} (stage {stage:?})",
+                dev.name,
+                net.name
+            );
+            // The DP must actually have credited the fused edge — this
+            // is what pins the stage-costing path (fusion_credit in
+            // solve/emit), not just the plan-level grouping.
+            prop_assert!(
+                rep.assignments[li + 1].fuse_s > 0.0,
+                "{}/{}: fused edge into {} earned no credit",
+                dev.name,
+                net.name,
+                rep.assignments[li + 1].layer
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Unjittered acceptance: on both Table-1 devices LeNet's conv→pool
+/// chains fuse, earn the fusion credit in the report, and the fused
+/// grouping matches between f32 and q8-enabled registries.
+#[test]
+fn acceptance_lenet_chains_fuse_on_table1_devices() {
+    for dev in [galaxy_note4(), htc_one_m9()] {
+        for registry in [Registry::simulated(), Registry::simulated().with_q8()] {
+            let rep = Partitioner::new(&registry, &dev).partition(&zoo::lenet5()).unwrap();
+            let names: Vec<String> =
+                rep.plan.fuse().iter().map(|s| rep.plan.stage_name(s)).collect();
+            for chain in ["conv1+pool1", "conv2+pool2"] {
+                assert!(
+                    names.contains(&chain.to_string()),
+                    "{}: {chain} missing from {names:?}",
+                    dev.name
+                );
+            }
+            for pool in ["pool1", "pool2"] {
+                let a = rep.assignments.iter().find(|a| a.layer == pool).unwrap();
+                assert!(a.fuse_s > 0.0, "{}: {pool} earned no fusion credit", dev.name);
+            }
+        }
+    }
+}
