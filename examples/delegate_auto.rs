@@ -11,13 +11,13 @@
 //! cargo run --release --example delegate_auto [-- --net alexnet --device m9]
 //! ```
 
-use cnndroid::coordinator::{Engine, EngineConfig};
 use cnndroid::cpu::forward_seq;
 use cnndroid::data::synth;
 use cnndroid::delegate::{Partitioner, Registry};
 use cnndroid::model::manifest::{default_dir, Manifest};
 use cnndroid::model::weights::load_weights;
 use cnndroid::model::zoo;
+use cnndroid::session::Session;
 use cnndroid::simulator::device;
 use cnndroid::util::args::ArgSpec;
 
@@ -89,28 +89,28 @@ fn main() -> cnndroid::Result<()> {
         }
     }
 
-    // 3. End-to-end: run a delegate-auto engine against the CPU
-    //    reference when the artifact set exists.
+    // 3. End-to-end: run an auto-placement session against the CPU
+    //    reference when the artifact set exists.  The builder defaults
+    //    to automatic placement — no method string anywhere.
     let Some(manifest) = manifest else {
         println!("\n(artifacts not built — skipping end-to-end engine run)");
         return Ok(());
     };
-    match Engine::from_artifacts(
-        &dir,
-        "lenet5",
-        EngineConfig { method: cnndroid::DELEGATE_AUTO.into(), record_trace: false, preload: true },
-    ) {
-        Ok(engine) => {
+    match Session::for_net("lenet5").build_from_artifacts(&dir) {
+        Ok(session) => {
             let (images, _) = synth::make_dataset(4, 42, 0.08);
-            let got = engine.infer_batch(&images)?;
+            let got = session.infer_batch(&images)?;
             let net = zoo::lenet5();
             let params = load_weights(&manifest, &net)?;
             let want = forward_seq(&net, &params, &images)?;
             let diff = got.max_abs_diff(&want);
-            println!("\ndelegate:auto engine vs cpu::forward_seq: max|diff| = {diff:.2e}");
+            println!(
+                "\n{} session vs cpu::forward_seq: max|diff| = {diff:.2e}",
+                session.canonical()
+            );
             assert!(diff < 1e-3, "delegate-auto numerics diverged: {diff}");
         }
-        Err(e) => println!("\n(delegate:auto engine unavailable here: {e:#})"),
+        Err(e) => println!("\n(delegate:auto session unavailable here: {e:#})"),
     }
     Ok(())
 }

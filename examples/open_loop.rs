@@ -32,7 +32,7 @@ fn main() -> cnndroid::Result<()> {
 
     let handle = serve(ServerConfig {
         addr: "127.0.0.1:0".into(),
-        models: vec![("lenet5".into(), args.get("method").to_string(), 1)],
+        models: vec![ServerConfig::model("lenet5", args.get("method"), 1)?],
         batcher: BatcherConfig { max_batch: 16, max_wait: Duration::from_millis(3) },
         artifacts_dir: dir,
     })?;

@@ -26,7 +26,7 @@ fn main() -> cnndroid::Result<()> {
     let engine = Engine::from_artifacts(
         &dir,
         args.get("net"),
-        EngineConfig { method: args.get("method").into(), record_trace: true, preload: true },
+        EngineConfig::for_method(args.get("method"))?.trace(true),
     )?;
     let net = engine.network().clone();
     let batch = args.get_usize("batch");

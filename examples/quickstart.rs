@@ -6,27 +6,28 @@
 //! cargo run --release --example quickstart
 //! ```
 
-use cnndroid::coordinator::{Engine, EngineConfig};
 use cnndroid::cpu::forward::classify;
 use cnndroid::data::synth;
 use cnndroid::model::manifest::{default_dir, Manifest};
 use cnndroid::model::weights::load_weights;
 use cnndroid::model::zoo;
+use cnndroid::session::Session;
 
 fn main() -> cnndroid::Result<()> {
     let dir = default_dir();
 
     // 1. The deployed model: trained by `make artifacts` (the paper's
     //    Fig. 2 desktop-training stage) and loaded from the manifest.
-    let engine = Engine::from_artifacts(
-        &dir,
-        "lenet5",
-        EngineConfig { method: "advanced-simd-4".into(), record_trace: false, preload: true },
-    )?;
+    //    Sessions are configured with the typed builder — no method
+    //    strings to assemble.
+    let session = Session::for_net("lenet5")
+        .method("advanced-simd-4")
+        .build_from_artifacts(&dir)?;
+    let engine = session.engine();
     println!(
-        "engine up: {} via {} on PJRT/{}",
+        "session up: {} via {} on PJRT/{}",
         engine.network().name,
-        engine.method(),
+        session.canonical(),
         engine.runtime().platform()
     );
 
@@ -71,14 +72,11 @@ fn main() -> cnndroid::Result<()> {
         cpu_dt.as_secs_f64() / dt.as_secs_f64()
     );
 
-    // 5. Automatic placement: instead of naming a method, let the
-    //    delegate subsystem assign each layer to a backend by predicted
-    //    cost ("delegate:auto", optionally "delegate:auto:m9").
-    let auto = Engine::from_artifacts(
-        &dir,
-        "lenet5",
-        EngineConfig { method: cnndroid::DELEGATE_AUTO.into(), record_trace: false, preload: true },
-    )?;
+    // 5. Automatic placement: the builder's default backend is the
+    //    delegate subsystem's cost-driven auto-partitioner; `.device`
+    //    picks the Table-1 profile it costs against.
+    let auto = Session::for_net("lenet5").build_from_artifacts(&dir)?;
+    println!("auto session spec: {}", auto.canonical());
     let auto_preds = auto.classify(&images)?;
     assert_eq!(
         auto_preds.iter().map(|(l, _)| *l).collect::<Vec<_>>(),

@@ -81,7 +81,7 @@ fn time_method(
     let engine = Engine::from_artifacts(
         dir,
         net,
-        EngineConfig { method: method.into(), record_trace: false, preload: true },
+        EngineConfig::for_method(method)?,
     )?;
     let n = engine.network().clone();
     let frames = synth::random_frames(batch, n.in_c, n.in_h, n.in_w, 5);

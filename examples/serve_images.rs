@@ -37,7 +37,7 @@ fn main() -> cnndroid::Result<()> {
     // Serve LeNet-5 on an ephemeral port.
     let handle = serve(ServerConfig {
         addr: "127.0.0.1:0".into(),
-        models: vec![("lenet5".into(), args.get("method").to_string(), 1)],
+        models: vec![ServerConfig::model("lenet5", args.get("method"), 1)?],
         batcher: BatcherConfig {
             max_batch: args.get_usize("max-batch"),
             max_wait: std::time::Duration::from_millis(4),

@@ -26,7 +26,7 @@ fn main() {
     let eng = Engine::from_artifacts(
         &dir,
         "lenet5",
-        EngineConfig { method: "advanced-simd-4".into(), record_trace: false, preload: true },
+        EngineConfig::for_method("advanced-simd-4").unwrap(),
     )
     .unwrap();
     for batch in [1usize, 4, 16] {
@@ -40,7 +40,7 @@ fn main() {
     let eng16 = Engine::from_artifacts(
         &dir,
         "lenet5",
-        EngineConfig { method: "basic-simd".into(), record_trace: false, preload: true },
+        EngineConfig::for_method("basic-simd").unwrap(),
     )
     .unwrap();
     let (frames16, _) = synth::make_dataset(16, 3, 0.05);

@@ -28,7 +28,7 @@ fn main() {
     let eng = Engine::from_artifacts(
         &dir,
         "lenet5",
-        EngineConfig { method: "advanced-simd-4".into(), record_trace: false, preload: true },
+        EngineConfig::for_method("advanced-simd-4").unwrap(),
     )
     .unwrap();
     let (one, _) = synth::make_dataset(1, 1, 0.05);
@@ -43,7 +43,7 @@ fn main() {
     // Server round trip, single client (per-request latency).
     let handle = serve(ServerConfig {
         addr: "127.0.0.1:0".into(),
-        models: vec![("lenet5".into(), "advanced-simd-4".into(), 1)],
+        models: vec![ServerConfig::model("lenet5", "advanced-simd-4", 1).unwrap()],
         batcher: BatcherConfig { max_batch: 16, max_wait: Duration::from_millis(2) },
         artifacts_dir: dir.clone(),
     })
@@ -86,7 +86,7 @@ fn main() {
     // Batching ablation: same fleet against a max_batch=1 server.
     let handle_nb = serve(ServerConfig {
         addr: "127.0.0.1:0".into(),
-        models: vec![("lenet5".into(), "advanced-simd-4".into(), 1)],
+        models: vec![ServerConfig::model("lenet5", "advanced-simd-4", 1).unwrap()],
         batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_micros(1) },
         artifacts_dir: dir.clone(),
     })

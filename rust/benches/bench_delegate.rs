@@ -83,7 +83,7 @@ fn main() {
         Engine::from_artifacts(
             &dir,
             "lenet5",
-            EngineConfig { method: method.into(), record_trace: false, preload: true },
+            EngineConfig::for_method(method).unwrap(),
         )
     };
     let (frames, _) = synth::make_dataset(16, 7, 0.05);

@@ -36,7 +36,7 @@ fn main() {
     let eng = Engine::new(
         std::rc::Rc::clone(&rt),
         "cifar10",
-        EngineConfig { method: "basic-simd".into(), record_trace: false, preload: true },
+        EngineConfig::for_method("basic-simd").unwrap(),
     )
     .unwrap();
     let frames = synth::random_frames(16, 3, 32, 32, 3);

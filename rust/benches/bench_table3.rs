@@ -38,7 +38,7 @@ fn main() {
                 Engine::from_artifacts(
                     &dir,
                     net,
-                    EngineConfig { method: m.into(), record_trace: false, preload: true },
+                    EngineConfig::for_method(m).unwrap(),
                 )
                 .expect("engine"),
             ));

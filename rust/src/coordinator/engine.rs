@@ -25,6 +25,7 @@ use crate::model::manifest::Manifest;
 use crate::model::network::{Network, PoolMode};
 use crate::model::weights::{load_weights, Params};
 use crate::runtime::{Arg, LoadedArtifact, Runtime};
+use crate::session::spec::{BackendSel, ExecSpec, Precision, SpecError};
 use crate::tensor::{layout, Tensor};
 use crate::util::json::Json;
 use crate::util::stats::Samples;
@@ -33,10 +34,10 @@ use crate::Result;
 /// Engine construction options.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
-    /// Execution method: "cpu-seq", a manifest method, or
-    /// "delegate:auto[:<device>]" for cost-driven automatic placement
-    /// (see [`crate::delegate`]).
-    pub method: String,
+    /// The typed execution spec: backend selection (fixed method or
+    /// cost-driven auto placement), precision, fusion, batch, and
+    /// kernel-parallelism overrides (see [`crate::session`]).
+    pub spec: ExecSpec,
     /// Record per-layer pipeline traces (timeline example).
     pub record_trace: bool,
     /// Pre-compile all artifacts at construction (excludes compile time
@@ -44,9 +45,38 @@ pub struct EngineConfig {
     pub preload: bool,
 }
 
+impl EngineConfig {
+    /// Config for a validated spec, traces off, preload on.
+    pub fn for_spec(spec: ExecSpec) -> EngineConfig {
+        EngineConfig { spec, record_trace: false, preload: true }
+    }
+
+    /// Back-compat `&str` shim: parse a legacy or canonical method
+    /// string through [`ExecSpec`]'s grammar.  Prefer
+    /// [`crate::session::Session::for_net`] or [`Self::for_spec`] —
+    /// this exists so string-configured call sites (CLI boundaries,
+    /// old tests) keep working.
+    pub fn for_method(method: &str) -> crate::Result<EngineConfig> {
+        let spec: ExecSpec = method.parse().map_err(anyhow::Error::new)?;
+        Ok(EngineConfig::for_spec(spec))
+    }
+
+    /// Builder-style: record per-layer pipeline traces.
+    pub fn trace(mut self, on: bool) -> EngineConfig {
+        self.record_trace = on;
+        self
+    }
+
+    /// Builder-style: pre-compile artifacts at construction.
+    pub fn preload(mut self, on: bool) -> EngineConfig {
+        self.preload = on;
+        self
+    }
+}
+
 impl Default for EngineConfig {
     fn default() -> Self {
-        EngineConfig { method: "advanced-simd-4".into(), record_trace: false, preload: true }
+        EngineConfig::for_method("advanced-simd-4").expect("default method parses")
     }
 }
 
@@ -70,6 +100,8 @@ pub struct Engine {
     /// (`ExecutionPlan::fuse`, or layerwise under `:nofuse`).
     stages: Vec<FusedStage>,
     cfg: EngineConfig,
+    /// Canonical string form of `cfg.spec`, cached for reporting.
+    method: String,
     /// Per-layer weights pre-swapped to the artifact layout (the
     /// weight half of "dimension swapping") and uploaded to
     /// device-resident buffers ONCE — re-uploading AlexNet's 151 MB
@@ -95,35 +127,53 @@ impl Engine {
             .ok_or_else(|| anyhow::anyhow!("unknown network {net_name:?}"))?
             .clone();
         let params = load_weights(manifest, &net)?;
-        // "delegate:auto[:<device>][:q8]" routes plan construction
-        // through the cost-driven partitioner over detected backends,
-        // degrading to CPU per the fallback policy rather than
-        // erroring; the ":q8" opt-in additionally lets the quantized
-        // backend compete once the accuracy guardrail passes.  Fixed
-        // methods keep the hand-authored DESIGN §7 plans (strict, so
-        // config errors surface) — including "cpu-gemm-q8", which
-        // forces the full quantized CPU path.
-        let auto = crate::delegate::auto_spec(&cfg.method)?;
-        // Fixed methods always run the fused-stage IR (fused stages
-        // are bit-identical to the layerwise path); the auto selector
-        // can opt back into layerwise execution with ":nofuse".
-        let fuse_plan = auto.as_ref().map(|s| s.fuse).unwrap_or(true);
-        let plan = match auto {
-            Some(spec) => {
-                let q8_params = if spec.q8 { Some(&params) } else { None };
-                let outcome = crate::delegate::plan_or_fallback(
-                    manifest,
-                    &net,
-                    &cfg.method,
-                    &spec.dev,
-                    q8_params,
-                )?;
+        let spec = cfg.spec.clone();
+        let method = spec.to_string();
+        // An over-`max_batch` placement on a fixed backend is a spec
+        // error, reported typed at construction instead of surfacing
+        // as a DP- or dispatch-time surprise.  (Auto specs enforce the
+        // same ceiling inside the partitioner: over-batch backends are
+        // excluded from the solve.)  Gated on batch > 1 so the common
+        // batch-1 path skips building a throwaway registry — no
+        // backend caps dispatches below 1.
+        if spec.batch() > 1 {
+            if let BackendSel::Fixed(name) = spec.backend() {
+                let registry = crate::delegate::Registry::detect(manifest).with_q8();
+                if let Some(b) = registry.get(name) {
+                    if let Some(max) = b.capability().max_batch {
+                        if spec.batch() > max {
+                            return Err(anyhow::Error::new(SpecError::BatchExceedsBackend {
+                                backend: name.clone(),
+                                batch: spec.batch(),
+                                max,
+                            }));
+                        }
+                    }
+                }
+            }
+        }
+        // Auto specs route plan construction through the cost-driven
+        // partitioner over detected backends (batch-aware: the spec's
+        // batch drives `Partitioner::with_batch`), degrading to CPU
+        // per the fallback policy rather than erroring; `Q8Opt`
+        // additionally lets the quantized backend compete once the
+        // accuracy guardrail passes.  Fixed backends keep the
+        // hand-authored DESIGN §7 plans (strict, so config errors
+        // surface) — including "cpu-gemm-q8", which forces the full
+        // quantized CPU path.
+        let fuse_plan = spec.fusion();
+        let plan = match spec.backend() {
+            BackendSel::Auto { .. } => {
+                let q8_params =
+                    if spec.precision() == Precision::Q8Opt { Some(&params) } else { None };
+                let outcome =
+                    crate::delegate::plan_or_fallback(manifest, &net, &spec, q8_params)?;
                 for note in &outcome.notes {
-                    eprintln!("[engine] {}/{}: {note}", net.name, cfg.method);
+                    eprintln!("[engine] {}/{method}: {note}", net.name);
                 }
                 outcome.plan
             }
-            None => ExecutionPlan::build(manifest, &net, &cfg.method)?,
+            BackendSel::Fixed(name) => ExecutionPlan::build(manifest, &net, name)?,
         };
 
         // Swap conv weights once (paper: kernels are swapped together
@@ -202,6 +252,7 @@ impl Engine {
             plan,
             stages,
             cfg,
+            method,
             dev_weights,
             dev_flat: RefCell::new(None),
             artifacts: RefCell::new(BTreeMap::new()),
@@ -227,8 +278,29 @@ impl Engine {
         &self.net
     }
 
+    /// Canonical string form of the spec this engine executes.
     pub fn method(&self) -> &str {
-        &self.cfg.method
+        &self.method
+    }
+
+    /// The typed spec this engine executes.
+    pub fn spec(&self) -> &ExecSpec {
+        &self.cfg.spec
+    }
+
+    /// Kernel options for a plan position: the plan's tiled/sequential
+    /// choice, with the spec's explicit `threads`/`tile` overrides
+    /// applied on top.  Kernels are bit-identical across these values,
+    /// so the overrides change speed, never numerics.
+    fn kopts(&self, tiled: bool) -> KernelOpts {
+        let mut opts = if tiled { KernelOpts::tiled() } else { KernelOpts::seq() };
+        if let Some(t) = self.cfg.spec.threads() {
+            opts.threads = t;
+        }
+        if let Some(t) = self.cfg.spec.tile() {
+            opts.tile = t;
+        }
+        opts
     }
 
     pub fn plan(&self) -> &ExecutionPlan {
@@ -308,12 +380,12 @@ impl Engine {
         let meta = self
             .runtime
             .manifest()
-            .find_fused(&self.net.name, &self.cfg.method, n)
+            .find_fused(&self.net.name, self.cfg.spec.method_name(), n)
             .ok_or_else(|| {
                 anyhow::anyhow!(
                     "no fused artifact for {}/{} batch {n}",
                     self.net.name,
-                    self.cfg.method
+                    self.method
                 )
             })?
             .name
@@ -345,7 +417,7 @@ impl Engine {
         let head = self.plan.layers[st.start].clone();
         match head {
             LayerPlan::ConvCpu { name, tiled, .. } => {
-                let opts = if tiled { KernelOpts::tiled() } else { KernelOpts::seq() };
+                let opts = self.kopts(tiled);
                 let pc = self
                     .packed
                     .conv(&name)
@@ -363,7 +435,7 @@ impl Engine {
                     &act,
                     kernels::ConvSource::Q8(pc),
                     &ops,
-                    KernelOpts::tiled(),
+                    self.kopts(true),
                 ))
             }
             LayerPlan::Pool { .. } | LayerPlan::Lrn { .. } => {
@@ -374,7 +446,7 @@ impl Engine {
                             | LayerPlan::Lrn { parallel: true, .. }
                     )
                 });
-                let opts = if parallel { KernelOpts::tiled() } else { KernelOpts::seq() };
+                let opts = self.kopts(parallel);
                 let ops = self
                     .plan
                     .stage_tail_ops(st)
@@ -408,7 +480,7 @@ impl Engine {
                 self.conv_accel(&name, &artifact, nhwc, act)
             }
             LayerPlan::ConvCpu { name, spec, variant, tiled } => {
-                let opts = if tiled { KernelOpts::tiled() } else { KernelOpts::seq() };
+                let opts = self.kopts(tiled);
                 match variant {
                     KernelVariant::Im2col => {
                         let pc = self
@@ -431,10 +503,10 @@ impl Engine {
                     .packed
                     .conv_q8(&name)
                     .ok_or_else(|| anyhow::anyhow!("no packed q8 conv for {name}"))?;
-                Ok(kernels::conv_im2col_q8(&act, pc, KernelOpts::tiled()))
+                Ok(kernels::conv_im2col_q8(&act, pc, self.kopts(true)))
             }
             LayerPlan::Pool { mode, size, stride, relu, parallel, .. } => {
-                let opts = if parallel { KernelOpts::tiled() } else { KernelOpts::seq() };
+                let opts = self.kopts(parallel);
                 let mut out = match mode {
                     PoolMode::Max => kernels::maxpool_nchw(&act, size, stride, opts),
                     PoolMode::Avg => kernels::avgpool_nchw(&act, size, stride, opts),
@@ -445,11 +517,11 @@ impl Engine {
                 Ok(out)
             }
             LayerPlan::Lrn { size, alpha, beta, k, parallel, .. } => {
-                let opts = if parallel { KernelOpts::tiled() } else { KernelOpts::seq() };
+                let opts = self.kopts(parallel);
                 Ok(kernels::lrn_nchw(&act, size, alpha, beta, k, opts))
             }
             LayerPlan::FcCpu { name, relu, tiled } => {
-                let opts = if tiled { KernelOpts::tiled() } else { KernelOpts::seq() };
+                let opts = self.kopts(tiled);
                 let (w, b) = self
                     .params
                     .get(&name)
@@ -461,7 +533,7 @@ impl Engine {
                     .packed
                     .fc_q8(&name)
                     .ok_or_else(|| anyhow::anyhow!("no packed q8 fc for {name}"))?;
-                Ok(kernels::fc_q8(&flatten(act), pf, KernelOpts::tiled()))
+                Ok(kernels::fc_q8(&flatten(act), pf, self.kopts(true)))
             }
             LayerPlan::FcAccel { name, artifact_b1, artifact_b16, .. } => {
                 let x = flatten(act);
@@ -556,7 +628,7 @@ impl Engine {
         }
         Json::obj(vec![
             ("net", Json::str(self.net.name.clone())),
-            ("method", Json::str(self.cfg.method.clone())),
+            ("method", Json::str(self.method.clone())),
             ("batches", Json::num(*self.batches.borrow() as f64)),
             ("frames", Json::num(*self.frames.borrow() as f64)),
             ("artifacts_loaded", Json::num(self.runtime.loaded_count() as f64)),
@@ -593,7 +665,7 @@ mod tests {
             Engine::from_artifacts(
                 &dir,
                 net,
-                EngineConfig { method: method.into(), record_trace: true, preload: true },
+                EngineConfig::for_method(method).unwrap().trace(true),
             )
             .unwrap(),
         )

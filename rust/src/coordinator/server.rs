@@ -30,6 +30,7 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::router::Router;
 use crate::delegate::fallback;
 use crate::model::manifest::Manifest;
+use crate::session::ExecSpec;
 use crate::tensor::Tensor;
 use crate::util::json::Json;
 use crate::Result;
@@ -49,10 +50,21 @@ type Handle = Arc<Batcher<Request>>;
 pub struct ServerConfig {
     /// Bind address, e.g. "127.0.0.1:0" (0 = ephemeral port).
     pub addr: String,
-    /// (network, method, replicas) to deploy.
-    pub models: Vec<(String, String, usize)>,
+    /// (network, spec, replicas) to deploy.  The spec is typed all the
+    /// way to the engine worker; use [`ServerConfig::model`] to deploy
+    /// from a method string through the back-compat parser.
+    pub models: Vec<(String, ExecSpec, usize)>,
     pub batcher: BatcherConfig,
     pub artifacts_dir: PathBuf,
+}
+
+impl ServerConfig {
+    /// Back-compat helper: one (network, method-string, replicas)
+    /// deployment entry, parsed through [`ExecSpec`]'s grammar.
+    pub fn model(net: &str, method: &str, replicas: usize) -> Result<(String, ExecSpec, usize)> {
+        let spec: ExecSpec = method.parse().map_err(anyhow::Error::new)?;
+        Ok((net.to_string(), spec, replicas))
+    }
 }
 
 /// A running server; drop or call [`ServerHandle::shutdown`] to stop.
@@ -89,23 +101,39 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle> {
     let mut batchers = Vec::new();
 
     // Engine worker threads.
-    for (net, method, replicas) in &cfg.models {
+    for (net, spec, replicas) in &cfg.models {
         anyhow::ensure!(
             manifest.networks.contains_key(net),
             "unknown network {net:?} in server config"
         );
+        // An explicit spec batch caps this model's batcher, so the
+        // batches the engine receives never exceed the batch its plan
+        // was partitioned (and `max_batch`-filtered) for — an operator
+        // batcher ceiling that is already tighter stays in force (min,
+        // not replace).  The default batch (1) keeps the server-wide
+        // batching policy: plans are built batch-1 and frame-serial
+        // dispatch absorbs bigger batches, exactly as before.
+        let batcher_cfg = if spec.batch() > 1 {
+            BatcherConfig {
+                max_batch: cfg.batcher.max_batch.min(spec.batch()),
+                max_wait: cfg.batcher.max_wait,
+            }
+        } else {
+            cfg.batcher.clone()
+        };
+        let canonical = spec.to_string();
         for r in 0..(*replicas).max(1) {
-            let batcher: Handle = Arc::new(Batcher::new(cfg.batcher.clone()));
-            router.add(net, (method.clone(), Arc::clone(&batcher)));
+            let batcher: Handle = Arc::new(Batcher::new(batcher_cfg.clone()));
+            router.add(net, (canonical.clone(), Arc::clone(&batcher)));
             batchers.push(Arc::clone(&batcher));
             let net = net.clone();
-            let method = method.clone();
+            let spec = spec.clone();
             let dir = cfg.artifacts_dir.clone();
             let metrics = Arc::clone(&metrics);
             threads.push(
                 std::thread::Builder::new()
-                    .name(format!("engine-{net}-{method}-{r}"))
-                    .spawn(move || engine_worker(&dir, &net, &method, batcher, metrics))
+                    .name(format!("engine-{net}-{canonical}-{r}"))
+                    .spawn(move || engine_worker(&dir, &net, &spec, batcher, metrics))
                     .expect("spawn engine worker"),
             );
         }
@@ -118,13 +146,26 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle> {
     // Acceptor thread.
     let router = Arc::new(router);
     let nets: Vec<String> = router.names();
-    // Methods this deployment understands: the manifest's accelerated
-    // methods plus the artifact-free baseline and the delegate's
-    // automatic placement selector.
-    let methods: Vec<String> = std::iter::once("cpu-seq".to_string())
-        .chain(manifest.methods.iter().cloned())
-        .chain(std::iter::once(crate::DELEGATE_AUTO.to_string()))
-        .collect();
+    // Specs this deployment understands, reported in canonical form
+    // (every name is round-tripped through the `ExecSpec` parser): the
+    // artifact-free baselines, the manifest's accelerated methods, the
+    // automatic placement selector, and whatever the deployed models
+    // actually run.
+    let mut methods: Vec<String> = Vec::new();
+    for name in std::iter::once("cpu-seq")
+        .chain(manifest.methods.iter().map(String::as_str))
+        .chain([crate::DELEGATE_AUTO, crate::CPU_GEMM_Q8])
+    {
+        match name.parse::<ExecSpec>() {
+            Ok(spec) => methods.push(spec.to_string()),
+            Err(e) => eprintln!("[server] skipping unparseable manifest method {name:?}: {e}"),
+        }
+    }
+    for (_, spec, _) in &cfg.models {
+        methods.push(spec.to_string());
+    }
+    let mut seen = std::collections::BTreeSet::new();
+    methods.retain(|m| seen.insert(m.clone()));
     let input_dims: std::collections::BTreeMap<String, (usize, usize, usize)> = manifest
         .networks
         .iter()
@@ -170,38 +211,65 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle> {
 }
 
 /// Build a worker's engine, applying the delegate fallback policy:
-/// when the requested method fails retryably (missing artifacts, or an
+/// when the requested spec fails retryably (missing artifacts, or an
 /// accelerator backend that cannot compile), degrade to cost-driven
 /// auto-placement over whatever is available, and terminally to the
 /// artifact-free CPU baseline — a degraded worker beats a dead one.
+/// Fallback specs keep the requested fusion/batch/parallelism knobs;
+/// only the backend selection degrades.
 fn build_engine_with_fallback(
     dir: &std::path::Path,
     net: &str,
-    method: &str,
+    spec: &ExecSpec,
 ) -> Result<(Engine, Option<String>)> {
-    let make = |m: &str| {
-        Engine::from_artifacts(
-            dir,
-            net,
-            EngineConfig { method: m.to_string(), record_trace: false, preload: true },
-        )
-    };
-    let first = match make(method) {
+    let make = |s: &ExecSpec| Engine::from_artifacts(dir, net, EngineConfig::for_spec(s.clone()));
+    let requested = spec.to_string();
+    let first = match make(spec) {
         Ok(engine) => return Ok((engine, None)),
         Err(e) => e,
     };
     if !fallback::is_retryable(&first) {
         return Err(first);
     }
-    let mut trail = format!("{method} failed ({first:#})");
-    for alt in [crate::DELEGATE_AUTO, "cpu-seq"] {
-        if alt == method {
+    let mut trail = format!("{requested} failed ({first:#})");
+    // Rebase the non-backend knobs onto each fallback base: only the
+    // backend selection degrades; fusion/batch/threads/tile carry
+    // over.  One place, so future ExecSpec knobs cannot be carried for
+    // one alternate and dropped for the other.
+    let carry_knobs = |base: ExecSpec| -> ExecSpec {
+        let mut alt =
+            base.with_fusion(spec.fusion()).with_batch(spec.batch()).expect("batch validated");
+        if let Some(t) = spec.threads() {
+            alt = alt.with_threads(t).expect("threads validated");
+        }
+        if let Some(t) = spec.tile() {
+            alt = alt.with_tile(t).expect("tile validated");
+        }
+        alt
+    };
+    let auto_alt = carry_knobs(ExecSpec::auto());
+    let cpu_alt =
+        carry_knobs(ExecSpec::fixed("cpu-seq").expect("cpu-seq is a valid backend name"));
+    for alt in [auto_alt, cpu_alt] {
+        let canonical = alt.to_string();
+        // Skip alternates that are semantically the spec that just
+        // failed — not just string-identical ones: a "delegate:auto:
+        // note4" deployment must not be "re-planned" as the equivalent
+        // "delegate:auto" (same device profile, guaranteed same
+        // failure, misleading note).
+        let same_auto = alt.is_auto()
+            && spec.is_auto()
+            && alt.device_spec().name == spec.device_spec().name
+            && alt.precision() == spec.precision();
+        if canonical == requested || same_auto {
             continue;
         }
-        match make(alt) {
-            Ok(engine) => return Ok((engine, Some(format!("{trail}; running on {alt}")))),
+        match make(&alt) {
+            Ok(engine) => {
+                return Ok((engine, Some(format!("{trail}; running on {canonical}"))))
+            }
             Err(e) if fallback::is_retryable(&e) => {
-                trail = format!("{trail}; {alt} failed ({e:#})");
+                trail = format!("{trail}; {canonical} failed ({e:#})");
             }
             Err(e) => return Err(e),
         }
@@ -213,11 +281,11 @@ fn build_engine_with_fallback(
 fn engine_worker(
     dir: &std::path::Path,
     net: &str,
-    method: &str,
+    spec: &ExecSpec,
     batcher: Handle,
     metrics: Arc<Metrics>,
 ) {
-    let engine = match build_engine_with_fallback(dir, net, method) {
+    let engine = match build_engine_with_fallback(dir, net, spec) {
         Ok((e, note)) => {
             if let Some(note) = note {
                 eprintln!("[server] {net}: {note}");

@@ -17,10 +17,10 @@ use crate::coordinator::plan::{ExecutionPlan, MissingArtifact};
 use crate::model::manifest::Manifest;
 use crate::model::network::Network;
 use crate::model::weights::Params;
-use crate::simulator::device::DeviceSpec;
+use crate::session::spec::ExecSpec;
 use crate::Result;
 
-use super::{is_auto, plan_auto_with, q8_agreement};
+use super::{plan_auto_with, q8_agreement};
 
 /// A plan plus the human-readable trail of any fallback decisions.
 #[derive(Debug, Clone)]
@@ -37,10 +37,12 @@ pub fn is_retryable(err: &anyhow::Error) -> bool {
     err.downcast_ref::<MissingArtifact>().is_some() || err.downcast_ref::<xla::Error>().is_some()
 }
 
-/// Build a plan for `method`, falling back per the policy above.
+/// Build a plan for `spec`, falling back per the policy above.  The
+/// spec carries everything the old `(method, dev)` pair did, plus the
+/// batch the partitioner must enforce `max_batch` against.
 ///
 /// `q8_params`: pass the loaded weights to let the quantized backend
-/// compete in auto plans (the `delegate:auto...:q8` opt-in).  The
+/// compete in auto plans (the `Precision::Q8Opt` opt-in).  The
 /// accuracy guardrail runs here — `cpu-gemm-q8` only joins the
 /// registry when top-1 agreement with f32 is 100% on the fixture set —
 /// and its verdict is recorded in the notes.  `None` keeps the
@@ -48,11 +50,11 @@ pub fn is_retryable(err: &anyhow::Error) -> bool {
 pub fn plan_or_fallback(
     manifest: &Manifest,
     net: &Network,
-    method: &str,
-    dev: &DeviceSpec,
+    spec: &ExecSpec,
     q8_params: Option<&Params>,
 ) -> Result<FallbackOutcome> {
     let mut notes = Vec::new();
+    let dev = spec.device_spec();
     let q8 = match q8_params {
         None => false,
         Some(params) => match q8_agreement(net, params) {
@@ -70,17 +72,17 @@ pub fn plan_or_fallback(
             }
         },
     };
-    if is_auto(method) {
-        match plan_auto_with(manifest, net, dev, q8) {
+    if spec.is_auto() {
+        match plan_auto_with(manifest, net, &dev, q8, spec.batch()) {
             Ok(plan) => return Ok(FallbackOutcome { plan, notes }),
             Err(e) => notes.push(format!("auto-partition failed: {e:#}")),
         }
     } else {
-        match ExecutionPlan::build(manifest, net, method) {
+        match ExecutionPlan::build(manifest, net, spec.method_name()) {
             Ok(plan) => return Ok(FallbackOutcome { plan, notes }),
             Err(e) if e.downcast_ref::<MissingArtifact>().is_some() => {
                 notes.push(format!("{e}"));
-                match plan_auto_with(manifest, net, dev, false) {
+                match plan_auto_with(manifest, net, &dev, false, spec.batch()) {
                     Ok(plan) => {
                         notes.push("re-planned with delegate:auto over available backends".into());
                         return Ok(FallbackOutcome { plan, notes });
@@ -100,7 +102,6 @@ pub fn plan_or_fallback(
 mod tests {
     use super::*;
     use crate::model::zoo;
-    use crate::simulator::device::galaxy_note4;
     use std::collections::BTreeMap;
 
     /// Manifest that advertises methods but has no artifacts built.
@@ -116,11 +117,14 @@ mod tests {
         }
     }
 
+    fn spec(s: &str) -> ExecSpec {
+        s.parse().unwrap()
+    }
+
     #[test]
     fn missing_artifacts_fall_back_instead_of_erroring() {
         let m = artifactless(&["basic-simd"]);
-        let dev = galaxy_note4();
-        let out = plan_or_fallback(&m, &zoo::lenet5(), "basic-simd", &dev, None).unwrap();
+        let out = plan_or_fallback(&m, &zoo::lenet5(), &spec("basic-simd"), None).unwrap();
         assert!(!out.notes.is_empty(), "fallback must be recorded");
         // No artifacts exist, so nothing may land on an accelerator.
         assert!(out.plan.layers.iter().all(|l| !l.on_accel()));
@@ -129,16 +133,26 @@ mod tests {
     #[test]
     fn auto_with_no_artifacts_degrades_to_cpu_placements() {
         let m = artifactless(&["basic-simd", "mxu"]);
-        let dev = galaxy_note4();
-        let out = plan_or_fallback(&m, &zoo::cifar10(), crate::DELEGATE_AUTO, &dev, None).unwrap();
+        let out =
+            plan_or_fallback(&m, &zoo::cifar10(), &spec(crate::DELEGATE_AUTO), None).unwrap();
         assert!(out.plan.layers.iter().all(|l| !l.on_accel()));
     }
 
     #[test]
     fn unknown_method_still_surfaces_as_an_error() {
         let m = artifactless(&["basic-simd"]);
-        let dev = galaxy_note4();
-        assert!(plan_or_fallback(&m, &zoo::lenet5(), "warp-speed", &dev, None).is_err());
+        assert!(plan_or_fallback(&m, &zoo::lenet5(), &spec("warp-speed"), None).is_err());
+    }
+
+    #[test]
+    fn spec_device_steers_the_replan() {
+        // The device the spec names is the one the fallback re-plan
+        // costs against (it rode in the method string before).
+        let m = artifactless(&[]);
+        let s = spec("delegate:auto:m9");
+        assert!(s.device_spec().name.contains("M9"));
+        let out = plan_or_fallback(&m, &zoo::lenet5(), &s, None).unwrap();
+        assert!(out.plan.layers.iter().all(|l| !l.on_accel()));
     }
 
     #[test]

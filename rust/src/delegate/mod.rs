@@ -21,15 +21,16 @@
 //! * [`fallback`] — re-plan onto CPU when an accelerator artifact is
 //!   missing or fails to compile, instead of erroring.
 //!
-//! Selected with the method string [`crate::DELEGATE_AUTO`]
-//! (`"delegate:auto"`, optionally `"delegate:auto:<device>"` with a
-//! Table-1 device profile: `note4` | `m9`, optionally suffixed `:q8`
-//! to let the accuracy-guardrail-gated quantized backend compete for
-//! layers, and/or `:nofuse` to run the emitted plan layer-by-layer
-//! instead of through the fused-stage IR), which rides everywhere a
-//! fixed method string does:
-//! `EngineConfig::method`, server model configs, and the CLI
-//! `--method` flags.
+//! Selected with [`crate::session::BackendSel::Auto`] in a typed
+//! [`crate::session::ExecSpec`] — whose string form is the method
+//! selector [`crate::DELEGATE_AUTO`] (`"delegate:auto"`, optionally
+//! `:<device>` with a Table-1 profile `note4` | `m9`, `:q8` to let the
+//! accuracy-guardrail-gated quantized backend compete for layers,
+//! `:nofuse` to run the emitted plan layer-by-layer instead of through
+//! the fused-stage IR, and `:batch=<n>` to make the partitioner
+//! enforce per-backend dispatch ceilings for that batch).  The spec
+//! rides everywhere a fixed backend does: `EngineConfig::spec`, server
+//! model configs, and the CLI `--method`/`--device`/`--q8` flags.
 
 pub mod backend;
 pub mod fallback;
@@ -50,7 +51,7 @@ use crate::kernels::{KernelOpts, PackedModel};
 use crate::model::manifest::Manifest;
 use crate::model::network::Network;
 use crate::model::weights::Params;
-use crate::simulator::device::{self, DeviceSpec};
+use crate::simulator::device::DeviceSpec;
 use crate::tensor::Tensor;
 use crate::Result;
 
@@ -62,9 +63,12 @@ pub fn is_auto(method: &str) -> bool {
             .is_some_and(|rest| rest.starts_with(':'))
 }
 
-/// Parsed delegate-auto selector: the device profile to cost against,
-/// whether the guardrail-gated quantized backend may compete, and
-/// whether the engine runs the plan through the fused-stage IR.
+/// Legacy device-level view of a parsed auto selector: the device
+/// profile to cost against, whether the guardrail-gated quantized
+/// backend may compete, and whether the engine runs the plan through
+/// the fused-stage IR.  Superseded by [`crate::session::ExecSpec`],
+/// which carries the same facts (plus batch and kernel parallelism)
+/// as validated fields; kept for callers that only need this triple.
 #[derive(Debug, Clone)]
 pub struct AutoSpec {
     pub dev: DeviceSpec,
@@ -79,47 +83,26 @@ pub struct AutoSpec {
     pub fuse: bool,
 }
 
-/// Parse a method string: `Ok(Some(spec))` for
-/// `delegate:auto[:<device>][:q8|:noq8][:fuse|:nofuse]` (default
-/// device: the Galaxy Note 4, Table 1's lead platform; default
-/// precision: f32-only; default execution: fused stages); `Ok(None)`
-/// for fixed methods; `Err` for an auto selector with an unknown
-/// device or segment.
+/// Back-compat shim over [`crate::session::ExecSpec`]'s parser:
+/// `Ok(Some(spec))` for
+/// `delegate:auto[:<device>][:q8|:noq8][:fuse|:nofuse]` selectors
+/// (default device: the Galaxy Note 4, Table 1's lead platform;
+/// default precision: f32-only; default execution: fused stages);
+/// `Ok(None)` for anything that is not the auto selector; `Err` for an
+/// auto selector with an unknown device/segment or — unlike the old
+/// splicing parser, which silently let the later segment win —
+/// *conflicting* segments (`:q8:noq8`, `:nofuse:fuse`, two different
+/// devices).
 pub fn auto_spec(method: &str) -> Result<Option<AutoSpec>> {
-    let Some(rest) = method.strip_prefix(crate::DELEGATE_AUTO) else {
+    if !is_auto(method) {
         return Ok(None);
-    };
-    if !rest.is_empty() && !rest.starts_with(':') {
-        return Ok(None); // "delegate:automatic" etc: not our selector
     }
-    let mut spec = AutoSpec { dev: device::galaxy_note4(), q8: false, fuse: true };
-    let mut dev_named = false;
-    for seg in rest.split(':').filter(|s| !s.is_empty()) {
-        match seg {
-            "q8" => spec.q8 = true,
-            "noq8" => spec.q8 = false,
-            "fuse" => spec.fuse = true,
-            "nofuse" => spec.fuse = false,
-            name => match device::by_name(name) {
-                Some(dev) => {
-                    anyhow::ensure!(
-                        !dev_named,
-                        "method {method:?} names two devices ({} and {name}); pick one",
-                        spec.dev.name
-                    );
-                    spec.dev = dev;
-                    dev_named = true;
-                }
-                None => {
-                    return Err(anyhow::anyhow!(
-                        "unknown segment {name:?} in method {method:?} \
-                         (expected a device: note4 | m9, or q8 | noq8 | fuse | nofuse)"
-                    ))
-                }
-            },
-        }
-    }
-    Ok(Some(spec))
+    let spec: crate::session::ExecSpec = method.parse().map_err(anyhow::Error::new)?;
+    Ok(Some(AutoSpec {
+        dev: spec.device_spec(),
+        q8: spec.precision() == crate::session::Precision::Q8Opt,
+        fuse: spec.fusion(),
+    }))
 }
 
 /// Back-compat device-only view of [`auto_spec`].
@@ -166,25 +149,30 @@ pub fn q8_eligible(net: &Network, params: &Params) -> bool {
 }
 
 /// One-call entry point: detect backends from the manifest and emit the
-/// cost-optimal plan for `net` on `dev` (f32 backends only).
+/// cost-optimal plan for `net` on `dev` (f32 backends only, batch 1).
 pub fn plan_auto(manifest: &Manifest, net: &Network, dev: &DeviceSpec) -> Result<ExecutionPlan> {
-    plan_auto_with(manifest, net, dev, false)
+    plan_auto_with(manifest, net, dev, false, 1)
 }
 
-/// [`plan_auto`] with an explicit quantized-backend opt-in: when `q8`
-/// is true the `cpu-gemm-q8` backend joins the registry and the DP may
-/// mix precisions per layer.  Callers gate `q8` on [`q8_eligible`].
+/// [`plan_auto`] with an explicit quantized-backend opt-in and batch:
+/// when `q8` is true the `cpu-gemm-q8` backend joins the registry and
+/// the DP may mix precisions per layer (callers gate `q8` on
+/// [`q8_eligible`]); `batch` is the frames-per-dispatch the plan must
+/// serve, enforced against every backend's `Capability::max_batch` by
+/// the partitioner — the field [`crate::session::ExecSpec::batch`]
+/// drives end to end.
 pub fn plan_auto_with(
     manifest: &Manifest,
     net: &Network,
     dev: &DeviceSpec,
     q8: bool,
+    batch: usize,
 ) -> Result<ExecutionPlan> {
     let mut registry = Registry::detect(manifest);
     if q8 {
         registry = registry.with_q8();
     }
-    Ok(Partitioner::new(&registry, dev).partition(net)?.plan)
+    Ok(Partitioner::new(&registry, dev).with_batch(batch).partition(net)?.plan)
 }
 
 #[cfg(test)]
@@ -229,8 +217,13 @@ mod tests {
         // Composes with device and precision segments in any order.
         let s = auto_spec("delegate:auto:m9:q8:nofuse").unwrap().unwrap();
         assert!(!s.fuse && s.q8 && s.dev.name.contains("M9"));
-        let s = auto_spec("delegate:auto:nofuse:fuse").unwrap().unwrap();
-        assert!(s.fuse, "later segment wins");
+        // Conflicting segments are rejected by the ExecSpec
+        // canonicalizer (the old splicer silently let the later one
+        // win); identical duplicates dedupe.
+        assert!(auto_spec("delegate:auto:nofuse:fuse").is_err());
+        assert!(auto_spec("delegate:auto:q8:noq8").is_err());
+        let s = auto_spec("delegate:auto:m9:m9").unwrap().unwrap();
+        assert!(s.dev.name.contains("M9"));
     }
 
     #[test]

@@ -31,6 +31,12 @@
 //!   [`cpu`] and [`runtime`], placed per layer by [`simulator`] costs
 //!   plus layout-swap penalties, with CPU fallback when accelerator
 //!   artifacts are missing or fail to compile.
+//! * [`session`] — the typed execution-spec subsystem: [`session::ExecSpec`]
+//!   (backend/precision/fusion/batch/parallelism as validated struct
+//!   fields with a canonical round-tripping string form) and the
+//!   fluent [`session::Session`] builder; every engine, server, CLI,
+//!   and bench entry point is plumbed through it, and the legacy
+//!   method-string grammar survives only as its back-compat parser.
 //! * [`simulator`] — analytic mobile-GPU performance model that
 //!   regenerates the paper's Tables 3/4 at Mali-T760/Adreno-430 scale.
 //! * [`data`] — procedural digit corpus (mirrors `python/compile/digits.py`)
@@ -43,6 +49,7 @@ pub mod delegate;
 pub mod kernels;
 pub mod model;
 pub mod runtime;
+pub mod session;
 pub mod simulator;
 pub mod tensor;
 pub mod util;

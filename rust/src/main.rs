@@ -19,8 +19,10 @@ use cnndroid::data::{image, synth};
 use cnndroid::delegate::{Partitioner, Registry};
 use cnndroid::model::manifest::{default_dir, Manifest};
 use cnndroid::model::{convert_to_cdm, zoo};
+use cnndroid::session::ExecSpec;
 use cnndroid::simulator::{device, tables};
 use cnndroid::util::args::ArgSpec;
+use cnndroid::util::json::Json;
 use cnndroid::Result;
 
 fn main() {
@@ -53,12 +55,20 @@ const HELP: &str = "cnndroid — GPU-accelerated CNN engine reproduction (three-
 USAGE:
   cnndroid <inspect|convert|infer|serve|simulate|plan|bench-engine|validate> [OPTIONS]
 
-Methods: cpu-seq | basic-parallel | basic-simd | advanced-simd-4 | advanced-simd-8 | mxu,
-`cpu-gemm-q8` for the forced 8-bit quantized CPU path, or
-`--method delegate:auto [--device note4|m9]` for cost-driven automatic placement
-(suffix `:q8`, e.g. `delegate:auto:note4:q8`, lets the guardrail-gated quantized
-backend compete for layers; suffix `:nofuse` runs the plan layer-by-layer
-instead of through the fused-stage IR).
+Execution is configured by a typed spec built from flags:
+  --method M          cpu-seq | basic-parallel | basic-simd | advanced-simd-4 |
+                      advanced-simd-8 | mxu | cpu-gemm-q8 (forced 8-bit CPU path) |
+                      delegate:auto (cost-driven automatic placement)
+  --device note4|m9   device profile for delegate:auto
+  --q8                let the guardrail-gated quantized backend compete (auto only)
+  --nofuse            run the plan layer-by-layer instead of the fused-stage IR
+  --plan-batch N      frames per dispatch the plan must serve (enforces max_batch)
+
+Every spec has a canonical string form (e.g. `delegate:auto:m9:q8:batch=4`)
+accepted anywhere --method is.  Conflicting values — device, precision,
+batch/threads/tile — are rejected instead of spliced; restating the same
+value dedupes (--nofuse is an explicit override of the spec's fusion
+setting).  `plan --json` emits placements machine-readably.
 
 Run `cnndroid <command> --help` for command options.";
 
@@ -80,43 +90,48 @@ fn artifacts_dir(args: &cnndroid::util::args::Args) -> PathBuf {
     args.get_opt("artifacts").map(PathBuf::from).unwrap_or_else(default_dir)
 }
 
-fn device_opt(spec: ArgSpec) -> ArgSpec {
+/// Spec-building flags shared by infer / serve / bench-engine: the
+/// `--method` string plus typed knobs that compose into an
+/// [`ExecSpec`] instead of splicing suffixes.
+fn spec_opts(spec: ArgSpec) -> ArgSpec {
     spec.opt_no_default("device", "device profile for --method delegate:auto (note4 | m9)")
+        .flag("q8", "let the guardrail-gated quantized backend compete (delegate:auto only)")
+        .flag("nofuse", "run the plan layer-by-layer instead of through the fused-stage IR")
 }
 
-/// Compose `--method` and `--device` into the engine method string:
-/// `delegate:auto` + `--device m9` -> `delegate:auto:m9`, keeping any
-/// precision suffix (`delegate:auto:q8` + `--device m9` ->
-/// `delegate:auto:m9:q8`).  A --device that cannot apply (fixed
-/// method, or a selector that already names a device) is reported
-/// rather than silently dropped.
-fn method_with_device(args: &cnndroid::util::args::Args) -> Result<String> {
-    let method = args.get("method").to_string();
-    let Some(dev) = args.get_opt("device") else {
-        return Ok(method);
-    };
-    let rest = match method.strip_prefix(cnndroid::DELEGATE_AUTO) {
-        Some(rest) if rest.is_empty() || rest.starts_with(':') => rest,
-        _ => {
-            return Err(anyhow::anyhow!(
-                "--device {dev} only applies to --method delegate:auto (got --method {method:?})"
-            ))
-        }
-    };
-    // Precision/fusion suffixes ride along; anything else is a device
-    // name already baked into the selector.
-    let segs: Vec<&str> = rest.split(':').filter(|s| !s.is_empty()).collect();
-    if segs.iter().any(|s| !matches!(*s, "q8" | "noq8" | "fuse" | "nofuse")) {
-        return Err(anyhow::anyhow!(
-            "--device {dev} conflicts with --method {method:?}, which already names a device"
-        ));
+/// `--plan-batch` rider for commands that also take a spec batch
+/// (named so it cannot collide with workload `--batch` options).
+fn plan_batch_opt(spec: ArgSpec) -> ArgSpec {
+    spec.opt_no_default(
+        "plan-batch",
+        "frames per dispatch the plan must serve (enforces backend max_batch)",
+    )
+}
+
+/// Build the typed [`ExecSpec`] from `--method` plus the knob flags.
+/// The old suffix splicer (`method_with_device`) is gone: every flag
+/// routes through the spec's validating modifiers, so duplicates
+/// dedupe (`--device m9` on `delegate:auto:m9`) and conflicts fail
+/// with a typed error (`--device note4` on `delegate:auto:m9`,
+/// `--q8` on a fixed f32 method) instead of composing a broken string.
+fn exec_spec(args: &cnndroid::util::args::Args) -> Result<ExecSpec> {
+    let mut spec: ExecSpec = args.get("method").parse().map_err(anyhow::Error::new)?;
+    if let Some(dev) = args.get_opt("device") {
+        spec = spec.with_device(dev).map_err(anyhow::Error::new)?;
     }
-    let mut out = format!("{}:{dev}", cnndroid::DELEGATE_AUTO);
-    for s in segs {
-        out.push(':');
-        out.push_str(s);
+    if args.has("q8") {
+        spec = spec.with_q8().map_err(anyhow::Error::new)?;
     }
-    Ok(out)
+    if args.has("nofuse") {
+        spec = spec.with_fusion(false);
+    }
+    if let Some(batch) = args.get_opt("plan-batch") {
+        let batch: usize = batch
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--plan-batch expects an integer, got {batch:?}"))?;
+        spec = spec.with_batch(batch).map_err(anyhow::Error::new)?;
+    }
+    Ok(spec)
 }
 
 fn inspect(argv: Vec<String>) -> Result<()> {
@@ -174,7 +189,7 @@ fn convert(argv: Vec<String>) -> Result<()> {
 }
 
 fn infer(argv: Vec<String>) -> Result<()> {
-    let spec = device_opt(artifacts_opt(
+    let spec = plan_batch_opt(spec_opts(artifacts_opt(
         ArgSpec::new("cnndroid infer", "classify images with the accelerated engine")
             .opt("net", "lenet5", "network")
             .opt("method", "advanced-simd-4", "cpu-seq | basic-parallel | basic-simd | advanced-simd-4 | advanced-simd-8 | mxu | cpu-gemm-q8 | delegate:auto[...:q8]")
@@ -182,15 +197,12 @@ fn infer(argv: Vec<String>) -> Result<()> {
             .opt("seed", "1", "synthetic workload seed")
             .opt_no_default("image", "PGM/PPM image file to classify")
             .flag("fused", "use the fused whole-network artifact"),
-    ));
+    )));
     let args = spec.parse_from(argv).map_err(|e| anyhow::anyhow!("{e}"))?;
     let dir = artifacts_dir(&args);
-    let method = method_with_device(&args)?;
-    let engine = Engine::from_artifacts(
-        &dir,
-        args.get("net"),
-        EngineConfig { method: method.clone(), record_trace: false, preload: true },
-    )?;
+    let exec = exec_spec(&args)?;
+    let method = exec.to_string();
+    let engine = Engine::from_artifacts(&dir, args.get("net"), EngineConfig::for_spec(exec))?;
 
     let (batch, labels): (cnndroid::tensor::Tensor, Option<Vec<u8>>) =
         if let Some(path) = args.get_opt("image") {
@@ -235,21 +247,21 @@ fn infer(argv: Vec<String>) -> Result<()> {
 }
 
 fn serve_cmd(argv: Vec<String>) -> Result<()> {
-    let spec = device_opt(artifacts_opt(
+    let spec = plan_batch_opt(spec_opts(artifacts_opt(
         ArgSpec::new("cnndroid serve", "TCP JSON-lines serving front end")
             .opt("addr", "127.0.0.1:7878", "bind address")
             .opt("net", "lenet5", "comma-separated networks to deploy")
-            .opt("method", "advanced-simd-4", "execution method (fixed or delegate:auto)")
+            .opt("method", "advanced-simd-4", "execution spec (fixed or delegate:auto)")
             .opt("replicas", "1", "engine replicas per network")
             .opt("max-batch", "16", "dynamic batcher max batch")
             .opt("max-wait-ms", "5", "dynamic batcher max wait"),
-    ));
+    )));
     let args = spec.parse_from(argv).map_err(|e| anyhow::anyhow!("{e}"))?;
-    let method = method_with_device(&args)?;
+    let exec = exec_spec(&args)?;
     let models = args
         .get("net")
         .split(',')
-        .map(|n| (n.trim().to_string(), method.clone(), args.get_usize("replicas")))
+        .map(|n| (n.trim().to_string(), exec.clone(), args.get_usize("replicas")))
         .collect();
     let handle = serve(ServerConfig {
         addr: args.get("addr").to_string(),
@@ -260,7 +272,11 @@ fn serve_cmd(argv: Vec<String>) -> Result<()> {
         },
         artifacts_dir: artifacts_dir(&args),
     })?;
-    println!("serving on {} (nets: {}); Ctrl-C to stop", handle.addr, args.get("net"));
+    println!(
+        "serving on {} (nets: {}, spec: {exec}); Ctrl-C to stop",
+        handle.addr,
+        args.get("net")
+    );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
@@ -331,7 +347,7 @@ fn validate(argv: Vec<String>) -> Result<()> {
             let eng = Engine::new(
                 std::rc::Rc::clone(&runtime),
                 net_name,
-                EngineConfig { method: method.clone(), record_trace: false, preload: false },
+                EngineConfig::for_method(method)?.preload(false),
             )?;
             let got = eng.infer_batch(&x)?;
             let diff = got.max_abs_diff(&want);
@@ -357,29 +373,60 @@ fn plan_cmd(argv: Vec<String>) -> Result<()> {
             "preview the delegate subsystem's cost-driven auto-placement",
         )
         .opt("net", "all", "network to plan (lenet5 | cifar10 | alexnet | all)")
-        .opt("device", "note4", "device profile: note4 | m9")
+        .opt_no_default("device", "device profile: note4 | m9 (default: note4)")
+        .opt("batch", "1", "frames per dispatch (enforces backend max_batch in the solve)")
+        .flag("q8", "let the quantized backend compete in the preview (no guardrail run)")
+        .flag("json", "emit the canonical spec, placements, and cost estimates as JSON")
         .flag("simulated", "assume every artifact exists (no manifest needed)"),
     );
     let args = spec.parse_from(argv).map_err(|e| anyhow::anyhow!("{e}"))?;
-    let dev = device::by_name(args.get("device"))
-        .ok_or_else(|| anyhow::anyhow!("unknown device {:?} (try note4 | m9)", args.get("device")))?;
+    // The preview's configuration IS an ExecSpec, built from the typed
+    // flags; its canonical form is what --json reports.  The device is
+    // applied only when explicitly given, so the canonical spec here
+    // matches what ping.methods / the engine report for the same
+    // configuration ("delegate:auto", not "delegate:auto:note4").
+    let mut exec = ExecSpec::auto()
+        .with_batch(args.get_usize("batch"))
+        .map_err(anyhow::Error::new)?;
+    if let Some(dev) = args.get_opt("device") {
+        exec = exec.with_device(dev).map_err(anyhow::Error::new)?;
+    }
+    if args.has("q8") {
+        exec = exec.with_q8().map_err(anyhow::Error::new)?;
+    }
+    let dev = exec.device_spec();
     let dir = artifacts_dir(&args);
     let manifest = if args.has("simulated") { None } else { Manifest::load(&dir).ok() };
-    let registry = match &manifest {
+    let mut registry = match &manifest {
         Some(m) => Registry::detect(m),
         None => {
-            println!("(no manifest at {} — planning over simulated artifacts)\n", dir.display());
+            if !args.has("json") {
+                println!(
+                    "(no manifest at {} — planning over simulated artifacts)\n",
+                    dir.display()
+                );
+            }
             Registry::simulated()
         }
     };
+    if args.has("q8") {
+        // Placement preview only: the engine still runs the accuracy
+        // guardrail before a real q8 plan executes.
+        registry = registry.with_q8();
+    }
     let nets: Vec<_> = match args.get("net") {
         "all" => zoo::all(),
         name => vec![zoo::by_name(name)
             .ok_or_else(|| anyhow::anyhow!("unknown network {name:?}"))?],
     };
-    let partitioner = Partitioner::new(&registry, &dev);
+    let partitioner = Partitioner::new(&registry, &dev).with_batch(exec.batch());
+    let mut json_nets = Vec::new();
     for net in &nets {
         let report = partitioner.partition(net)?;
+        if args.has("json") {
+            json_nets.push(plan_json(net, &exec, &partitioner, &report));
+            continue;
+        }
         println!("{} on {} — predicted {:.3} ms/frame", net.name, dev.name, report.predicted_s * 1e3);
         println!("  {:<10} {:<6} {:<18} {:>12} {:>12}", "layer", "kind", "backend", "exec ms", "swap ms");
         for a in &report.assignments {
@@ -432,26 +479,97 @@ fn plan_cmd(argv: Vec<String>) -> Result<()> {
             );
         }
     }
+    if args.has("json") {
+        let doc = Json::obj(vec![
+            ("spec", Json::str(exec.to_string())),
+            ("device", Json::str(dev.name)),
+            ("batch", Json::num(exec.batch() as f64)),
+            ("nets", Json::arr(json_nets)),
+        ]);
+        println!("{}", doc.dump());
+    }
     Ok(())
 }
 
+/// Machine-readable placement report for one network: the canonical
+/// spec, per-layer assignments with cost estimates, fused-stage
+/// boundaries, and the fixed-method baselines (hand-rolled [`Json`],
+/// same substrate as the engine's `metrics_json`).
+fn plan_json(
+    net: &cnndroid::model::network::Network,
+    exec: &ExecSpec,
+    partitioner: &Partitioner<'_>,
+    report: &cnndroid::delegate::PartitionReport,
+) -> Json {
+    let assignments = report
+        .assignments
+        .iter()
+        .map(|a| {
+            Json::obj(vec![
+                ("layer", Json::str(a.layer.clone())),
+                ("kind", Json::str(a.kind)),
+                ("backend", Json::str(a.backend.clone())),
+                ("exec_ms", Json::num(a.cost_s * 1e3)),
+                ("swap_ms", Json::num(a.swap_s * 1e3)),
+                ("fuse_saving_ms", Json::num(a.fuse_s * 1e3)),
+            ])
+        })
+        .collect();
+    let stages = report
+        .plan
+        .fuse()
+        .iter()
+        .map(|st| {
+            let exec_ms: f64 =
+                report.assignments[st.start..st.end].iter().map(|a| a.cost_s * 1e3).sum();
+            let saved_ms: f64 = report.assignments[st.start + 1..st.end]
+                .iter()
+                .map(|a| a.fuse_s * 1e3)
+                .sum();
+            Json::obj(vec![
+                ("name", Json::str(report.plan.stage_name(st))),
+                ("kind", Json::str(report.plan.stage_kind(st))),
+                ("fused", Json::Bool(st.is_fused())),
+                ("exec_ms", Json::num(exec_ms)),
+                ("traffic_saved_ms", Json::num(saved_ms)),
+            ])
+        })
+        .collect();
+    let fixed = cnndroid::METHODS
+        .iter()
+        .filter_map(|m| {
+            partitioner.predicted_fixed(net, m).map(|cost| {
+                Json::obj(vec![
+                    ("method", Json::str(*m)),
+                    ("predicted_ms", Json::num(cost * 1e3)),
+                ])
+            })
+        })
+        .collect();
+    Json::obj(vec![
+        ("net", Json::str(net.name.clone())),
+        ("spec", Json::str(exec.to_string())),
+        ("predicted_ms", Json::num(report.predicted_s * 1e3)),
+        ("assignments", Json::arr(assignments)),
+        ("stages", Json::arr(stages)),
+        ("fixed", Json::arr(fixed)),
+    ])
+}
+
 fn bench_engine(argv: Vec<String>) -> Result<()> {
-    let spec = device_opt(artifacts_opt(
+    let spec = plan_batch_opt(spec_opts(artifacts_opt(
         ArgSpec::new("cnndroid bench-engine", "quick engine throughput probe")
             .opt("net", "lenet5", "network")
-            .opt("method", "advanced-simd-4", "execution method (fixed or delegate:auto)")
-            .opt("batch", "16", "frames per batch")
+            .opt("method", "advanced-simd-4", "execution spec (fixed or delegate:auto)")
+            .opt("batch", "16", "frames per timed batch (workload size, not the plan batch)")
             .opt("iters", "5", "timed iterations"),
-    ));
+    )));
     let args = spec.parse_from(argv).map_err(|e| anyhow::anyhow!("{e}"))?;
     let dir = artifacts_dir(&args);
     let net = args.get("net");
-    let method = method_with_device(&args)?;
-    let engine = Engine::from_artifacts(
-        &dir,
-        net,
-        EngineConfig { method: method.clone(), record_trace: false, preload: true },
-    )?;
+    let exec = exec_spec(&args)?;
+    let method = exec.to_string();
+    let engine = Engine::from_artifacts(&dir, net, EngineConfig::for_spec(exec))?;
     let n = args.get_usize("batch");
     let net_desc = engine.network().clone();
     let frames = synth::random_frames(n, net_desc.in_c, net_desc.in_h, net_desc.in_w, 3);

@@ -1,0 +1,346 @@
+//! [`Session`] and [`SessionBuilder`] — the fluent front door.
+//!
+//! CNNdroid's headline developer-experience claim is a
+//! compilation-free, configuration-object API: construct the library
+//! with a model plus a small set of knobs instead of hand-assembling
+//! execution strings (PAPER.md §3).  The builder is that API for this
+//! reproduction:
+//!
+//! ```no_run
+//! # use cnndroid::session::{Precision, Session};
+//! # fn main() -> cnndroid::Result<()> {
+//! let dir = cnndroid::model::manifest::default_dir();
+//! let session = Session::for_net("lenet5")
+//!     .device("m9")
+//!     .precision(Precision::Q8Opt)
+//!     .batch(4)
+//!     .build_from_artifacts(&dir)?;
+//! let (frames, _) = cnndroid::data::synth::make_dataset(4, 42, 0.08);
+//! let _labels = session.classify(&frames)?;
+//! # Ok(()) }
+//! ```
+//!
+//! Invalid combinations fail at `build` time with a typed
+//! [`SpecError`] (quantizing a fixed f32 backend, a device on a fixed
+//! method, a batch above a backend's per-dispatch ceiling) instead of
+//! surfacing later as plan or DP-time surprises.
+
+use std::rc::Rc;
+
+use crate::coordinator::engine::{Engine, EngineConfig};
+use crate::coordinator::plan::ExecutionPlan;
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use crate::Result;
+
+use super::spec::{ExecSpec, Precision, SpecError};
+
+/// A built inference session: one network bound to one validated
+/// [`ExecSpec`], ready to serve.  Thin, honest wrapper over [`Engine`]
+/// — `engine()` exposes the full surface for callers that need plan
+/// introspection or traces.
+pub struct Session {
+    engine: Engine,
+}
+
+impl Session {
+    /// Start building a session for a zoo network ("lenet5" |
+    /// "cifar10" | "alexnet").  All knobs default to automatic
+    /// placement at f32, fused stages, batch 1.
+    pub fn for_net(net: &str) -> SessionBuilder {
+        SessionBuilder {
+            net: net.to_string(),
+            method: None,
+            device: None,
+            precision: None,
+            fusion: None,
+            batch: None,
+            threads: None,
+            tile: None,
+            record_trace: false,
+            preload: true,
+        }
+    }
+
+    /// The validated spec this session executes (the engine owns the
+    /// single copy).
+    pub fn spec(&self) -> &ExecSpec {
+        self.engine.spec()
+    }
+
+    /// Canonical string form of the spec (what `ping.methods` and the
+    /// CLI report).
+    pub fn canonical(&self) -> String {
+        self.engine.method().to_string()
+    }
+
+    /// The underlying engine.
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// The resolved execution plan.
+    pub fn plan(&self) -> &ExecutionPlan {
+        self.engine.plan()
+    }
+
+    /// Forward a batch of NCHW frames; returns logits `(n, classes)`.
+    pub fn infer_batch(&self, x: &Tensor) -> Result<Tensor> {
+        self.engine.infer_batch(x)
+    }
+
+    /// Classify a batch: `(label, max-logit)` per frame.
+    pub fn classify(&self, x: &Tensor) -> Result<Vec<(usize, f32)>> {
+        self.engine.classify(x)
+    }
+
+    /// Metrics snapshot (per-stage mean ms + totals).
+    pub fn metrics_json(&self) -> Json {
+        self.engine.metrics_json()
+    }
+}
+
+/// Fluent, validating builder for [`Session`]s.  Every setter is
+/// infallible; all validation happens once in [`SessionBuilder::spec`]
+/// / [`SessionBuilder::build`], so chains read linearly.
+#[derive(Debug, Clone)]
+pub struct SessionBuilder {
+    net: String,
+    /// A fixed backend name or a full spec string; `None` = auto.
+    method: Option<String>,
+    device: Option<String>,
+    precision: Option<Precision>,
+    fusion: Option<bool>,
+    batch: Option<usize>,
+    threads: Option<usize>,
+    tile: Option<usize>,
+    record_trace: bool,
+    preload: bool,
+}
+
+impl SessionBuilder {
+    /// Select a fixed backend by name ("cpu-seq", "basic-simd", ...,
+    /// "mxu", "cpu-gemm-q8"), or pass any canonical/legacy spec string
+    /// — this is the one `&str` entry point, everything else is typed.
+    pub fn method(mut self, method: &str) -> Self {
+        self.method = Some(method.to_string());
+        self
+    }
+
+    /// Cost-driven automatic placement (the default).
+    pub fn auto(mut self) -> Self {
+        self.method = None;
+        self
+    }
+
+    /// Device profile the auto partitioner costs against
+    /// ("note4" | "m9", any accepted alias).
+    pub fn device(mut self, device: &str) -> Self {
+        self.device = Some(device.to_string());
+        self
+    }
+
+    /// Precision policy; see [`Precision`] for the valid combinations.
+    pub fn precision(mut self, p: Precision) -> Self {
+        self.precision = Some(p);
+        self
+    }
+
+    /// Sugar for `.precision(Precision::Q8Opt)`.
+    pub fn q8(self) -> Self {
+        self.precision(Precision::Q8Opt)
+    }
+
+    /// Fused-stage execution on/off (on by default; off = layerwise,
+    /// bit-identical, for A/B measurement and bisection).
+    pub fn fusion(mut self, on: bool) -> Self {
+        self.fusion = Some(on);
+        self
+    }
+
+    /// Frames per dispatch the plan must serve.  Drives the
+    /// partitioner's enforced `max_batch` filtering and the server's
+    /// per-model batcher ceiling.
+    pub fn batch(mut self, batch: usize) -> Self {
+        self.batch = Some(batch);
+        self
+    }
+
+    /// Kernel thread-count override (bit-identical across values).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = Some(threads);
+        self
+    }
+
+    /// GEMM tile-width override (bit-identical across values).
+    pub fn tile(mut self, tile: usize) -> Self {
+        self.tile = Some(tile);
+        self
+    }
+
+    /// Record per-layer pipeline traces.
+    pub fn record_trace(mut self, on: bool) -> Self {
+        self.record_trace = on;
+        self
+    }
+
+    /// Pre-compile all artifacts at construction (default on).
+    pub fn preload(mut self, on: bool) -> Self {
+        self.preload = on;
+        self
+    }
+
+    /// Validate the accumulated knobs into an [`ExecSpec`] without
+    /// building an engine — the point where invalid combinations are
+    /// rejected with a typed [`SpecError`].
+    pub fn spec(&self) -> std::result::Result<ExecSpec, SpecError> {
+        let mut spec = match (&self.method, self.precision) {
+            // Q8Force with no explicit backend selects the forced
+            // quantized path (the only backend that can honor it).
+            (None, Some(Precision::Q8Force)) => ExecSpec::fixed(crate::CPU_GEMM_Q8)?,
+            (None, _) => ExecSpec::auto(),
+            (Some(m), _) => m.parse()?,
+        };
+        if let Some(d) = &self.device {
+            spec = spec.with_device(d)?;
+        }
+        if let Some(p) = self.precision {
+            // Q8Opt routes through with_q8 so `.q8()` is a no-op on the
+            // always-quantized backend, exactly like the string
+            // grammar's `cpu-gemm-q8:q8` and the CLI's `--q8`.
+            spec = match p {
+                Precision::Q8Opt => spec.with_q8()?,
+                _ => spec.with_precision(p)?,
+            };
+        }
+        if let Some(f) = self.fusion {
+            spec = spec.with_fusion(f);
+        }
+        if let Some(b) = self.batch {
+            spec = spec.with_batch(b)?;
+        }
+        if let Some(t) = self.threads {
+            spec = spec.with_threads(t)?;
+        }
+        if let Some(t) = self.tile {
+            spec = spec.with_tile(t)?;
+        }
+        Ok(spec)
+    }
+
+    /// The engine configuration this builder resolves to.
+    pub fn engine_config(&self) -> std::result::Result<EngineConfig, SpecError> {
+        Ok(EngineConfig {
+            spec: self.spec()?,
+            record_trace: self.record_trace,
+            preload: self.preload,
+        })
+    }
+
+    /// Build the session over a shared runtime.
+    pub fn build(self, runtime: Rc<Runtime>) -> Result<Session> {
+        let cfg = self.engine_config()?;
+        Ok(Session { engine: Engine::new(runtime, &self.net, cfg)? })
+    }
+
+    /// Convenience: load manifest + runtime + session in one step.
+    pub fn build_from_artifacts(self, dir: &std::path::Path) -> Result<Session> {
+        let cfg = self.engine_config()?;
+        Ok(Session { engine: Engine::from_artifacts(dir, &self.net, cfg)? })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::session::spec::BackendSel;
+
+    #[test]
+    fn builder_defaults_to_auto_f32_fused_batch1() {
+        let spec = Session::for_net("lenet5").spec().unwrap();
+        assert_eq!(spec, ExecSpec::auto());
+        assert_eq!(spec.to_string(), "delegate:auto");
+    }
+
+    #[test]
+    fn builder_chains_compose_into_canonical_specs() {
+        let spec = Session::for_net("alexnet")
+            .device("m9")
+            .precision(Precision::Q8Opt)
+            .batch(4)
+            .spec()
+            .unwrap();
+        assert_eq!(spec.to_string(), "delegate:auto:m9:q8:batch=4");
+
+        let spec = Session::for_net("lenet5")
+            .method("basic-simd")
+            .fusion(false)
+            .threads(2)
+            .spec()
+            .unwrap();
+        assert_eq!(spec.to_string(), "basic-simd:nofuse:threads=2");
+    }
+
+    #[test]
+    fn invalid_combinations_fail_with_typed_errors() {
+        // Quantizing a fixed f32 backend.
+        assert!(matches!(
+            Session::for_net("lenet5").method("mxu").q8().spec(),
+            Err(SpecError::PrecisionConflict { .. })
+        ));
+        // Un-quantizing the forced q8 backend (the type-level
+        // impossibility from the issue).
+        assert!(matches!(
+            Session::for_net("lenet5").method("cpu-gemm-q8").precision(Precision::F32).spec(),
+            Err(SpecError::PrecisionConflict { .. })
+        ));
+        // A device on a fixed method.
+        assert!(matches!(
+            Session::for_net("lenet5").method("cpu-seq").device("m9").spec(),
+            Err(SpecError::DeviceOnFixed { .. })
+        ));
+        // Conflicting devices between the method string and the knob.
+        assert!(matches!(
+            Session::for_net("lenet5").method("delegate:auto:note4").device("m9").spec(),
+            Err(SpecError::DeviceConflict { .. })
+        ));
+        // Zero batch.
+        assert!(matches!(
+            Session::for_net("lenet5").batch(0).spec(),
+            Err(SpecError::BadValue { .. })
+        ));
+    }
+
+    #[test]
+    fn q8_knob_is_a_noop_on_the_forced_backend() {
+        // Parity with the grammar ("cpu-gemm-q8:q8" parses) and the
+        // CLI (`--method cpu-gemm-q8 --q8` works): the builder's .q8()
+        // must not reject the always-quantized backend.
+        let spec =
+            Session::for_net("lenet5").method("cpu-gemm-q8").q8().spec().unwrap();
+        assert_eq!(spec.precision(), Precision::Q8Force);
+        assert_eq!(spec.to_string(), "cpu-gemm-q8");
+    }
+
+    #[test]
+    fn q8force_without_a_method_selects_the_forced_backend() {
+        let spec =
+            Session::for_net("lenet5").precision(Precision::Q8Force).spec().unwrap();
+        assert_eq!(spec.backend(), &BackendSel::Fixed(crate::CPU_GEMM_Q8.to_string()));
+        assert_eq!(spec.precision(), Precision::Q8Force);
+    }
+
+    #[test]
+    fn method_accepts_full_spec_strings_and_knobs_dedupe() {
+        // The one &str entry point takes legacy strings too; knobs that
+        // restate what the string already says are fine.
+        let spec = Session::for_net("lenet5")
+            .method("delegate:auto:m9:q8")
+            .device("m9")
+            .q8()
+            .spec()
+            .unwrap();
+        assert_eq!(spec.to_string(), "delegate:auto:m9:q8");
+    }
+}

@@ -1,0 +1,31 @@
+//! `session` — the typed execution-spec subsystem.
+//!
+//! CNNdroid's integration story is a configuration object, not a
+//! string protocol: the app hands the library a model plus a small set
+//! of knobs (GPU on/off, parallelism) and never assembles execution
+//! strings by hand (PAPER.md §3).  This module is that seam for the
+//! reproduction, replacing the method-string grammar that had grown
+//! `"delegate:auto:m9:q8:nofuse"`-style suffixes parsed in one place
+//! and re-spliced in three others:
+//!
+//! * [`spec`] — [`ExecSpec`]: backend selection, precision, fusion,
+//!   batch, and kernel parallelism as validated struct fields, with a
+//!   canonical `Display` form and a single [`std::str::FromStr`]
+//!   parser that also accepts the full legacy method-string grammar
+//!   (the back-compat path every remaining `&str` shim routes
+//!   through).
+//! * [`builder`] — [`Session`] / [`SessionBuilder`]: the fluent,
+//!   build-time-validating front door
+//!   (`Session::for_net("alexnet").device("m9").precision(Q8Opt)
+//!   .batch(4).build(runtime)`).
+//!
+//! Everything downstream — [`crate::coordinator::engine::EngineConfig`],
+//! the server's model table, the CLI flags, the benches — carries an
+//! `ExecSpec`; new execution knobs become struct fields here instead
+//! of another suffix in a string grammar.
+
+pub mod builder;
+pub mod spec;
+
+pub use builder::{Session, SessionBuilder};
+pub use spec::{BackendSel, ExecSpec, Precision, SpecError};

@@ -1,0 +1,757 @@
+//! [`ExecSpec`] — the typed execution specification.
+//!
+//! Every way of telling the engine *how* to run a network used to be a
+//! hand-spliced method string (`"delegate:auto:m9:q8:nofuse"`), parsed
+//! in one place, re-composed in another, and threaded as a raw `&str`
+//! through engine, server, and benches.  `ExecSpec` replaces that
+//! grammar with a struct: backend selection, precision, fusion, batch,
+//! and kernel parallelism are fields, validated once at construction.
+//!
+//! The spec has a **canonical string form** (`Display`), and
+//! [`FromStr`] is the single parser for both the canonical grammar and
+//! the legacy method-string grammar (which is a subset of it):
+//!
+//! ```text
+//!   spec    := "delegate:auto" segment*          cost-driven auto placement
+//!            | <backend-name>  segment*          fixed backend ("cpu-seq", "mxu", ...)
+//!   segment := ":" ( <device>                    note4 | m9 (auto only)
+//!            | "q8" | "noq8"                     quantized backend opt-in (auto only)
+//!            | "fuse" | "nofuse"                 fused-stage IR on/off
+//!            | "batch=" <n>                      frames per dispatch the plan serves
+//!            | "threads=" <n>                    kernel thread override
+//!            | "tile=" <n> )                     GEMM tile-width override
+//! ```
+//!
+//! Unlike the old splicers, the parser **canonicalizes**: duplicate
+//! identical segments dedupe (`:m9:m9`, `:q8:q8`), conflicting ones are
+//! rejected with a typed [`SpecError`] (`:q8:noq8`, `:nofuse:fuse`, two
+//! different devices, `batch=2:batch=4`) instead of silently letting
+//! the later segment win.  Defaults are omitted from the canonical
+//! form, so every legacy string prints back as itself.
+//!
+//! Whether a *fixed* backend name actually exists is deliberately not
+//! validated here: that depends on the artifact manifest and stays
+//! where it always was (`ExecutionPlan::build` / engine construction),
+//! so unknown methods fail with the same errors they always did.
+
+use std::fmt;
+use std::str::FromStr;
+
+use crate::simulator::device::{self, DeviceSpec};
+
+/// Which backend(s) may execute the plan.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum BackendSel {
+    /// Cost-driven automatic placement over the detected registry
+    /// (the `delegate:auto` selector).  `device` is the canonical
+    /// Table-1 profile alias to cost against; `None` costs against the
+    /// default profile (the Galaxy Note 4, Table 1's lead platform).
+    Auto { device: Option<String> },
+    /// One named backend for the whole plan: a paper method
+    /// (`"cpu-seq"`, `"basic-simd"`, ..., `"mxu"`) or the forced
+    /// quantized path (`"cpu-gemm-q8"`).
+    Fixed(String),
+}
+
+/// Numeric precision policy of the plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    /// f32 everywhere — the default; serving numerics untouched.
+    F32,
+    /// Let the guardrail-gated quantized backend *compete* for layers
+    /// in auto plans (the `:q8` opt-in).  Only meaningful with
+    /// [`BackendSel::Auto`].
+    Q8Opt,
+    /// Force the full quantized CPU path.  Implied by — and only valid
+    /// with — `Fixed("cpu-gemm-q8")`, so a `cpu-gemm-q8` spec that is
+    /// not quantized cannot be constructed.
+    Q8Force,
+}
+
+/// The typed execution specification: everything the engine needs to
+/// decide *how* to run a network, as a validated struct instead of a
+/// method-string grammar.  Construct via [`ExecSpec::auto`] /
+/// [`ExecSpec::fixed`] + the `with_*` modifiers, via
+/// [`crate::session::Session::for_net`]'s builder, or by parsing any
+/// legacy or canonical method string ([`FromStr`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ExecSpec {
+    backend: BackendSel,
+    precision: Precision,
+    fusion: bool,
+    batch: usize,
+    threads: Option<usize>,
+    tile: Option<usize>,
+}
+
+/// Typed spec-construction failure: every way a spec can be invalid,
+/// reported at build/parse time instead of surfacing later as a plan
+/// or DP-time surprise.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SpecError {
+    /// Empty method string.
+    Empty,
+    /// The backend head of the string is not a plausible selector
+    /// (e.g. `"delegate:automatic"`, or a name containing `=`).
+    UnknownBackend(String),
+    /// A `:`-segment is neither a known option nor a device alias.
+    UnknownSegment { seg: String, spec: String },
+    /// `--device` / `.device()` named an unknown profile.
+    UnknownDevice(String),
+    /// A device was given for a fixed backend (devices only steer the
+    /// auto partitioner's cost model).
+    DeviceOnFixed { device: String, backend: String },
+    /// Two *different* devices were named (identical duplicates
+    /// dedupe).
+    DeviceConflict { first: String, second: String },
+    /// A precision option was applied to a backend that cannot honor
+    /// it (`:q8` on a fixed f32 backend, `precision(F32)` on
+    /// `cpu-gemm-q8`, `Q8Force` on auto).
+    PrecisionConflict { backend: String, requested: &'static str },
+    /// Mutually exclusive keyword segments (`q8`+`noq8`,
+    /// `fuse`+`nofuse`).
+    SegmentConflict { a: &'static str, b: &'static str },
+    /// The same `key=value` option was given twice with different
+    /// values.
+    ValueConflict { key: &'static str, first: usize, second: usize },
+    /// A `key=value` segment whose value is not a positive integer.
+    BadValue { key: &'static str, value: String },
+    /// The spec's batch exceeds what the selected fixed backend can
+    /// take per dispatch (`Capability::max_batch`) — rejected at
+    /// session build time instead of partition time.
+    BatchExceedsBackend { backend: String, batch: usize, max: usize },
+}
+
+impl fmt::Display for SpecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SpecError::Empty => write!(f, "empty execution spec"),
+            SpecError::UnknownBackend(s) => write!(
+                f,
+                "unknown backend selector {s:?} (expected a method name or \"delegate:auto\")"
+            ),
+            SpecError::UnknownSegment { seg, spec } => write!(
+                f,
+                "unknown segment {seg:?} in spec {spec:?} (expected a device: note4 | m9, \
+                 q8 | noq8 | fuse | nofuse, or batch= | threads= | tile=)"
+            ),
+            SpecError::UnknownDevice(d) => {
+                write!(f, "unknown device {d:?} (try note4 | m9)")
+            }
+            SpecError::DeviceOnFixed { device, backend } => write!(
+                f,
+                "device {device:?} only applies to delegate:auto specs, not the fixed \
+                 backend {backend:?}"
+            ),
+            SpecError::DeviceConflict { first, second } => {
+                write!(f, "spec names two devices ({first} and {second}); pick one")
+            }
+            SpecError::PrecisionConflict { backend, requested } => write!(
+                f,
+                "precision {requested} is impossible for backend {backend:?} \
+                 (q8 opt-in applies to delegate:auto; cpu-gemm-q8 is always quantized)"
+            ),
+            SpecError::SegmentConflict { a, b } => {
+                write!(f, "conflicting segments {a:?} and {b:?}; pick one")
+            }
+            SpecError::ValueConflict { key, first, second } => {
+                write!(f, "{key} given twice with different values ({first} and {second})")
+            }
+            SpecError::BadValue { key, value } => {
+                write!(f, "{key}= expects a positive integer, got {value:?}")
+            }
+            SpecError::BatchExceedsBackend { backend, batch, max } => write!(
+                f,
+                "batch {batch} exceeds backend {backend:?}'s per-dispatch ceiling of {max} \
+                 (use delegate:auto:batch={batch} to let the partitioner place around it)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SpecError {}
+
+impl Default for ExecSpec {
+    fn default() -> Self {
+        ExecSpec::auto()
+    }
+}
+
+impl ExecSpec {
+    /// Cost-driven automatic placement with every knob at its default:
+    /// default device profile, f32, fused stages, batch 1.
+    pub fn auto() -> ExecSpec {
+        ExecSpec {
+            backend: BackendSel::Auto { device: None },
+            precision: Precision::F32,
+            fusion: true,
+            batch: 1,
+            threads: None,
+            tile: None,
+        }
+    }
+
+    /// A fixed-backend spec.  `"cpu-gemm-q8"` implies
+    /// [`Precision::Q8Force`]; every other name starts at f32.  The
+    /// name's *existence* is validated later against the manifest
+    /// (exactly where the legacy strings were), but structurally
+    /// invalid names (empty, containing `:` or `=`) are rejected here.
+    pub fn fixed(name: &str) -> Result<ExecSpec, SpecError> {
+        if name.is_empty() {
+            return Err(SpecError::Empty);
+        }
+        if name.contains(':') || name.contains('=') {
+            return Err(SpecError::UnknownBackend(name.to_string()));
+        }
+        let precision =
+            if name == crate::CPU_GEMM_Q8 { Precision::Q8Force } else { Precision::F32 };
+        Ok(ExecSpec {
+            backend: BackendSel::Fixed(name.to_string()),
+            precision,
+            fusion: true,
+            batch: 1,
+            threads: None,
+            tile: None,
+        })
+    }
+
+    // ---- accessors -------------------------------------------------
+
+    pub fn backend(&self) -> &BackendSel {
+        &self.backend
+    }
+
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    /// Does the engine run the plan through the fused-stage IR?
+    pub fn fusion(&self) -> bool {
+        self.fusion
+    }
+
+    /// Frames per dispatch the plan must serve; drives
+    /// `Partitioner::with_batch`'s enforced `max_batch` filtering.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Kernel thread-count override (None: plan-driven defaults).
+    pub fn threads(&self) -> Option<usize> {
+        self.threads
+    }
+
+    /// GEMM tile-width override (None: kernel default).
+    pub fn tile(&self) -> Option<usize> {
+        self.tile
+    }
+
+    /// Is this the auto-placement selector?
+    pub fn is_auto(&self) -> bool {
+        matches!(self.backend, BackendSel::Auto { .. })
+    }
+
+    /// Canonical device alias, when one was named.
+    pub fn device(&self) -> Option<&str> {
+        match &self.backend {
+            BackendSel::Auto { device } => device.as_deref(),
+            BackendSel::Fixed(_) => None,
+        }
+    }
+
+    /// The device profile the auto partitioner costs against (the
+    /// default profile when none was named).
+    pub fn device_spec(&self) -> DeviceSpec {
+        self.device()
+            .and_then(device::by_name)
+            .unwrap_or_else(device::galaxy_note4)
+    }
+
+    /// The plan-level method name: the fixed backend name, or
+    /// [`crate::DELEGATE_AUTO`] for auto specs.
+    pub fn method_name(&self) -> &str {
+        match &self.backend {
+            BackendSel::Auto { .. } => crate::DELEGATE_AUTO,
+            BackendSel::Fixed(name) => name,
+        }
+    }
+
+    // ---- modifiers (used by the builder and the CLI flags) ---------
+
+    /// Pin the device profile.  Errors on fixed backends and on a
+    /// *different* already-named device; naming the same device twice
+    /// is a no-op (the dedupe the old `--device` splicer got wrong).
+    pub fn with_device(mut self, name: &str) -> Result<ExecSpec, SpecError> {
+        let alias = device::canonical_alias(name)
+            .ok_or_else(|| SpecError::UnknownDevice(name.to_string()))?;
+        match &mut self.backend {
+            BackendSel::Fixed(b) => Err(SpecError::DeviceOnFixed {
+                device: name.to_string(),
+                backend: b.clone(),
+            }),
+            BackendSel::Auto { device } => {
+                if let Some(existing) = device {
+                    if existing.as_str() != alias {
+                        return Err(SpecError::DeviceConflict {
+                            first: existing.clone(),
+                            second: alias.to_string(),
+                        });
+                    }
+                }
+                *device = Some(alias.to_string());
+                Ok(self)
+            }
+        }
+    }
+
+    /// Set the precision policy, validating it against the backend:
+    /// `Q8Opt` needs auto, `Q8Force` needs `cpu-gemm-q8` (whose specs
+    /// in turn refuse `F32` — the type-level impossibility).
+    pub fn with_precision(mut self, p: Precision) -> Result<ExecSpec, SpecError> {
+        let ok = match (&self.backend, p) {
+            (BackendSel::Auto { .. }, Precision::F32 | Precision::Q8Opt) => true,
+            (BackendSel::Auto { .. }, Precision::Q8Force) => false,
+            (BackendSel::Fixed(name), p) if name == crate::CPU_GEMM_Q8 => {
+                p == Precision::Q8Force
+            }
+            (BackendSel::Fixed(_), p) => p == Precision::F32,
+        };
+        if !ok {
+            return Err(SpecError::PrecisionConflict {
+                backend: self.method_name().to_string(),
+                requested: match p {
+                    Precision::F32 => "F32",
+                    Precision::Q8Opt => "Q8Opt",
+                    Precision::Q8Force => "Q8Force",
+                },
+            });
+        }
+        self.precision = p;
+        Ok(self)
+    }
+
+    /// Opt the guardrail-gated quantized backend into auto placement
+    /// (the `:q8` segment).
+    pub fn with_q8(self) -> Result<ExecSpec, SpecError> {
+        match &self.backend {
+            BackendSel::Fixed(name) if name == crate::CPU_GEMM_Q8 => Ok(self), // already forced
+            _ => self.with_precision(Precision::Q8Opt),
+        }
+    }
+
+    /// Run the plan through / around the fused-stage IR.
+    pub fn with_fusion(mut self, on: bool) -> ExecSpec {
+        self.fusion = on;
+        self
+    }
+
+    /// Frames per dispatch the plan must serve (must be >= 1).  Like
+    /// the device knob, a *different* already-set value is a conflict
+    /// (`delegate:auto:batch=4` + `--plan-batch 8` must not silently
+    /// splice); restating the same value dedupes.
+    pub fn with_batch(mut self, batch: usize) -> Result<ExecSpec, SpecError> {
+        if batch == 0 {
+            return Err(SpecError::BadValue { key: "batch", value: "0".into() });
+        }
+        if self.batch != 1 && self.batch != batch {
+            return Err(SpecError::ValueConflict {
+                key: "batch",
+                first: self.batch,
+                second: batch,
+            });
+        }
+        self.batch = batch;
+        Ok(self)
+    }
+
+    /// Kernel thread-count override (must be >= 1; conflicts like
+    /// [`Self::with_batch`]).  Kernels are bit-identical across thread
+    /// counts, so this only changes speed.
+    pub fn with_threads(mut self, threads: usize) -> Result<ExecSpec, SpecError> {
+        if threads == 0 {
+            return Err(SpecError::BadValue { key: "threads", value: "0".into() });
+        }
+        if let Some(prev) = self.threads {
+            if prev != threads {
+                return Err(SpecError::ValueConflict {
+                    key: "threads",
+                    first: prev,
+                    second: threads,
+                });
+            }
+        }
+        self.threads = Some(threads);
+        Ok(self)
+    }
+
+    /// GEMM tile-width override (must be >= 1; conflicts like
+    /// [`Self::with_batch`]; also bit-identical).
+    pub fn with_tile(mut self, tile: usize) -> Result<ExecSpec, SpecError> {
+        if tile == 0 {
+            return Err(SpecError::BadValue { key: "tile", value: "0".into() });
+        }
+        if let Some(prev) = self.tile {
+            if prev != tile {
+                return Err(SpecError::ValueConflict { key: "tile", first: prev, second: tile });
+            }
+        }
+        self.tile = Some(tile);
+        Ok(self)
+    }
+}
+
+impl fmt::Display for ExecSpec {
+    /// The canonical string form.  Defaults are omitted, device
+    /// aliases are canonical, and segment order is fixed, so two specs
+    /// compare equal iff their strings do — and every string round
+    /// trips through [`FromStr`] unchanged.  One deliberate nuance: an
+    /// *explicitly named* default device is preserved
+    /// (`delegate:auto:note4` ≠ `delegate:auto` as specs, though both
+    /// cost against the Note 4) — explicitness is recorded so later
+    /// `--device` knobs conflict/dedupe correctly; callers comparing
+    /// semantics should compare [`ExecSpec::device_spec`] instead.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match &self.backend {
+            BackendSel::Auto { device } => {
+                f.write_str(crate::DELEGATE_AUTO)?;
+                if let Some(d) = device {
+                    write!(f, ":{d}")?;
+                }
+            }
+            BackendSel::Fixed(name) => f.write_str(name)?,
+        }
+        if self.precision == Precision::Q8Opt {
+            f.write_str(":q8")?;
+        }
+        if !self.fusion {
+            f.write_str(":nofuse")?;
+        }
+        if self.batch != 1 {
+            write!(f, ":batch={}", self.batch)?;
+        }
+        if let Some(t) = self.threads {
+            write!(f, ":threads={t}")?;
+        }
+        if let Some(t) = self.tile {
+            write!(f, ":tile={t}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Option segments accumulated during parsing, kept separate from the
+/// spec so duplicate/conflict detection can distinguish "explicitly
+/// set to the default" from "never mentioned".
+#[derive(Default)]
+struct Segments {
+    device: Option<String>,
+    q8: Option<bool>,
+    fuse: Option<bool>,
+    batch: Option<usize>,
+    threads: Option<usize>,
+    tile: Option<usize>,
+}
+
+fn parse_value(key: &'static str, value: &str) -> Result<usize, SpecError> {
+    match value.parse::<usize>() {
+        Ok(n) if n >= 1 => Ok(n),
+        _ => Err(SpecError::BadValue { key, value: value.to_string() }),
+    }
+}
+
+fn merge_value(
+    key: &'static str,
+    slot: &mut Option<usize>,
+    value: usize,
+) -> Result<(), SpecError> {
+    match *slot {
+        Some(prev) if prev != value => {
+            Err(SpecError::ValueConflict { key, first: prev, second: value })
+        }
+        _ => {
+            *slot = Some(value);
+            Ok(())
+        }
+    }
+}
+
+impl FromStr for ExecSpec {
+    type Err = SpecError;
+
+    /// The one parser for canonical *and* legacy method strings.  The
+    /// legacy grammar (`cpu-seq` | ... | `cpu-gemm-q8` |
+    /// `delegate:auto[:<dev>][:q8|:noq8][:fuse|:nofuse]`) is a strict
+    /// subset of the canonical grammar, except that the legacy
+    /// splicers tolerated conflicting segments (later one silently
+    /// won) — those now fail with a typed [`SpecError`].
+    fn from_str(s: &str) -> Result<ExecSpec, SpecError> {
+        let s = s.trim();
+        if s.is_empty() {
+            return Err(SpecError::Empty);
+        }
+        let (base, rest) = if let Some(rest) = s.strip_prefix(crate::DELEGATE_AUTO) {
+            if !rest.is_empty() && !rest.starts_with(':') {
+                // "delegate:automatic" etc — not the selector, and not
+                // a plausible fixed name either.
+                return Err(SpecError::UnknownBackend(s.to_string()));
+            }
+            (ExecSpec::auto(), rest)
+        } else {
+            let (name, rest) = match s.split_once(':') {
+                Some((name, rest)) => (name, rest),
+                None => (s, ""),
+            };
+            (ExecSpec::fixed(name)?, rest)
+        };
+
+        let mut seen = Segments::default();
+        for seg in rest.split(':').filter(|x| !x.is_empty()) {
+            match seg {
+                "q8" => match seen.q8 {
+                    Some(false) => {
+                        return Err(SpecError::SegmentConflict { a: "noq8", b: "q8" })
+                    }
+                    _ => seen.q8 = Some(true),
+                },
+                "noq8" => match seen.q8 {
+                    Some(true) => {
+                        return Err(SpecError::SegmentConflict { a: "q8", b: "noq8" })
+                    }
+                    _ => seen.q8 = Some(false),
+                },
+                "fuse" => match seen.fuse {
+                    Some(false) => {
+                        return Err(SpecError::SegmentConflict { a: "nofuse", b: "fuse" })
+                    }
+                    _ => seen.fuse = Some(true),
+                },
+                "nofuse" => match seen.fuse {
+                    Some(true) => {
+                        return Err(SpecError::SegmentConflict { a: "fuse", b: "nofuse" })
+                    }
+                    _ => seen.fuse = Some(false),
+                },
+                _ => {
+                    if let Some((key, value)) = seg.split_once('=') {
+                        match key {
+                            "batch" => {
+                                merge_value("batch", &mut seen.batch, parse_value("batch", value)?)?
+                            }
+                            "threads" => merge_value(
+                                "threads",
+                                &mut seen.threads,
+                                parse_value("threads", value)?,
+                            )?,
+                            "tile" => {
+                                merge_value("tile", &mut seen.tile, parse_value("tile", value)?)?
+                            }
+                            _ => {
+                                return Err(SpecError::UnknownSegment {
+                                    seg: seg.to_string(),
+                                    spec: s.to_string(),
+                                })
+                            }
+                        }
+                    } else if let Some(alias) = device::canonical_alias(seg) {
+                        match &seen.device {
+                            Some(prev) if prev != alias => {
+                                return Err(SpecError::DeviceConflict {
+                                    first: prev.clone(),
+                                    second: alias.to_string(),
+                                })
+                            }
+                            _ => seen.device = Some(alias.to_string()),
+                        }
+                    } else {
+                        return Err(SpecError::UnknownSegment {
+                            seg: seg.to_string(),
+                            spec: s.to_string(),
+                        });
+                    }
+                }
+            }
+        }
+
+        // Apply the accumulated segments through the validating
+        // modifiers, so grammar and builder share one rulebook.
+        let mut spec = base;
+        if let Some(d) = seen.device {
+            spec = spec.with_device(&d)?;
+        }
+        match seen.q8 {
+            Some(true) => spec = spec.with_q8()?,
+            Some(false) => {
+                // Explicit :noq8 — valid on auto (the default) and as a
+                // no-op on fixed f32 backends; contradictory on the
+                // always-quantized backend.
+                if spec.method_name() == crate::CPU_GEMM_Q8 {
+                    return Err(SpecError::PrecisionConflict {
+                        backend: crate::CPU_GEMM_Q8.to_string(),
+                        requested: "F32",
+                    });
+                }
+            }
+            None => {}
+        }
+        if let Some(fuse) = seen.fuse {
+            spec = spec.with_fusion(fuse);
+        }
+        if let Some(b) = seen.batch {
+            spec = spec.with_batch(b)?;
+        }
+        if let Some(t) = seen.threads {
+            spec = spec.with_threads(t)?;
+        }
+        if let Some(t) = seen.tile {
+            spec = spec.with_tile(t)?;
+        }
+        Ok(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> ExecSpec {
+        s.parse().unwrap_or_else(|e| panic!("{s:?} should parse: {e}"))
+    }
+
+    #[test]
+    fn legacy_fixed_methods_parse_and_print_back() {
+        for m in ["cpu-seq", "cpu-par", "cpu-gemm", "basic-parallel", "basic-simd",
+                  "advanced-simd-4", "advanced-simd-8", "mxu"]
+        {
+            let spec = parse(m);
+            assert_eq!(spec.backend(), &BackendSel::Fixed(m.to_string()));
+            assert_eq!(spec.precision(), Precision::F32);
+            assert!(spec.fusion() && spec.batch() == 1);
+            assert_eq!(spec.to_string(), m, "canonical form is the legacy string");
+        }
+    }
+
+    #[test]
+    fn cpu_gemm_q8_is_always_quantized() {
+        let spec = parse("cpu-gemm-q8");
+        assert_eq!(spec.precision(), Precision::Q8Force);
+        assert_eq!(spec.to_string(), "cpu-gemm-q8");
+        // The type-level impossibility: no f32 cpu-gemm-q8 spec exists.
+        assert!(matches!(
+            spec.clone().with_precision(Precision::F32),
+            Err(SpecError::PrecisionConflict { .. })
+        ));
+        assert!(matches!("cpu-gemm-q8:noq8".parse::<ExecSpec>(),
+            Err(SpecError::PrecisionConflict { .. })));
+        // Redundant :q8 is accepted (already forced).
+        assert_eq!(parse("cpu-gemm-q8:q8"), spec);
+    }
+
+    #[test]
+    fn legacy_auto_selectors_parse() {
+        let spec = parse("delegate:auto");
+        assert!(spec.is_auto() && spec.device().is_none());
+        assert!(spec.device_spec().name.contains("Note 4"), "default profile");
+
+        let spec = parse("delegate:auto:m9:q8:nofuse");
+        assert_eq!(spec.device(), Some("m9"));
+        assert_eq!(spec.precision(), Precision::Q8Opt);
+        assert!(!spec.fusion());
+        assert_eq!(spec.to_string(), "delegate:auto:m9:q8:nofuse");
+
+        // :noq8 and :fuse are the defaults — canonical form drops them.
+        assert_eq!(parse("delegate:auto:noq8:fuse").to_string(), "delegate:auto");
+    }
+
+    #[test]
+    fn device_aliases_normalize_to_canonical() {
+        for alias in ["m9", "one-m9", "htc-one-m9", "HTC One M9"] {
+            let spec = parse(&format!("delegate:auto:{alias}"));
+            assert_eq!(spec.device(), Some("m9"), "{alias}");
+            assert_eq!(spec.to_string(), "delegate:auto:m9");
+        }
+    }
+
+    #[test]
+    fn conflicting_segments_are_rejected_not_last_wins() {
+        // The old parser let the later segment win; the canonicalizer
+        // rejects (the regression the ISSUE pins).
+        assert!(matches!("delegate:auto:q8:noq8".parse::<ExecSpec>(),
+            Err(SpecError::SegmentConflict { a: "q8", b: "noq8" })));
+        assert!(matches!("delegate:auto:nofuse:fuse".parse::<ExecSpec>(),
+            Err(SpecError::SegmentConflict { a: "nofuse", b: "fuse" })));
+        assert!(matches!("delegate:auto:note4:m9".parse::<ExecSpec>(),
+            Err(SpecError::DeviceConflict { .. })));
+        assert!(matches!("delegate:auto:batch=2:batch=4".parse::<ExecSpec>(),
+            Err(SpecError::ValueConflict { key: "batch", first: 2, second: 4 })));
+    }
+
+    #[test]
+    fn duplicate_identical_segments_dedupe() {
+        assert_eq!(parse("delegate:auto:m9:m9").to_string(), "delegate:auto:m9");
+        assert_eq!(parse("delegate:auto:q8:q8").to_string(), "delegate:auto:q8");
+        assert_eq!(
+            parse("delegate:auto:batch=4:batch=4").to_string(),
+            "delegate:auto:batch=4"
+        );
+    }
+
+    #[test]
+    fn extended_knobs_round_trip() {
+        let spec = parse("delegate:auto:m9:q8:batch=4:threads=2:tile=96");
+        assert_eq!(spec.batch(), 4);
+        assert_eq!(spec.threads(), Some(2));
+        assert_eq!(spec.tile(), Some(96));
+        assert_eq!(spec.to_string(), "delegate:auto:m9:q8:batch=4:threads=2:tile=96");
+        let fixed = parse("cpu-gemm:batch=8:nofuse");
+        assert_eq!(fixed.batch(), 8);
+        assert!(!fixed.fusion());
+        assert_eq!(fixed.to_string(), "cpu-gemm:nofuse:batch=8");
+    }
+
+    #[test]
+    fn structurally_invalid_specs_fail_typed() {
+        assert_eq!("".parse::<ExecSpec>(), Err(SpecError::Empty));
+        assert!(matches!("delegate:automatic".parse::<ExecSpec>(),
+            Err(SpecError::UnknownBackend(_))));
+        assert!(matches!("delegate:auto:pixel".parse::<ExecSpec>(),
+            Err(SpecError::UnknownSegment { .. })));
+        assert!(matches!("delegate:auto:batch=0".parse::<ExecSpec>(),
+            Err(SpecError::BadValue { key: "batch", .. })));
+        assert!(matches!("delegate:auto:batch=lots".parse::<ExecSpec>(),
+            Err(SpecError::BadValue { .. })));
+        assert!(matches!("cpu-seq:q8".parse::<ExecSpec>(),
+            Err(SpecError::PrecisionConflict { .. })));
+        assert!(matches!("cpu-seq:m9".parse::<ExecSpec>(),
+            Err(SpecError::DeviceOnFixed { .. })));
+    }
+
+    #[test]
+    fn modifiers_dedupe_and_conflict_like_the_grammar() {
+        // Same device twice: fine (the case the old --device splicer
+        // rejected spuriously).
+        let spec = parse("delegate:auto:m9").with_device("m9").unwrap();
+        assert_eq!(spec.device(), Some("m9"));
+        // Different device: conflict (the case it silently mangled).
+        assert!(matches!(parse("delegate:auto:m9").with_device("note4"),
+            Err(SpecError::DeviceConflict { .. })));
+        assert!(matches!(parse("cpu-seq").with_device("m9"),
+            Err(SpecError::DeviceOnFixed { .. })));
+        assert!(matches!(parse("basic-simd").with_q8(),
+            Err(SpecError::PrecisionConflict { .. })));
+        assert!(parse("cpu-gemm-q8").with_q8().is_ok(), "no-op on the forced backend");
+        assert!(matches!(ExecSpec::auto().with_batch(0), Err(SpecError::BadValue { .. })));
+        // Valued knobs conflict like devices: a different already-set
+        // value is rejected (the --plan-batch-vs-:batch= splice),
+        // restating the same value dedupes.
+        assert!(parse("delegate:auto:batch=4").with_batch(4).is_ok());
+        assert!(matches!(
+            parse("delegate:auto:batch=4").with_batch(8),
+            Err(SpecError::ValueConflict { key: "batch", first: 4, second: 8 })
+        ));
+        assert!(matches!(
+            parse("delegate:auto:threads=2").with_threads(4),
+            Err(SpecError::ValueConflict { key: "threads", .. })
+        ));
+        assert!(parse("delegate:auto:tile=64").with_tile(64).is_ok());
+    }
+}

@@ -170,6 +170,20 @@ pub fn by_name(name: &str) -> Option<DeviceSpec> {
     }
 }
 
+/// Canonical short alias of a device name or alias — the form
+/// [`crate::session::ExecSpec`] stores and prints, so every accepted
+/// spelling of a device normalizes to one canonical spec string.
+pub fn canonical_alias(name: &str) -> Option<&'static str> {
+    let dev = by_name(name)?;
+    if dev.name == galaxy_note4().name {
+        Some("note4")
+    } else if dev.name == htc_one_m9().name {
+        Some("m9")
+    } else {
+        None
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

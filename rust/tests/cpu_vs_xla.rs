@@ -25,7 +25,7 @@ fn engine(rt: &Rc<Runtime>, net: &str, method: &str) -> Engine {
     Engine::new(
         Rc::clone(rt),
         net,
-        EngineConfig { method: method.into(), record_trace: false, preload: false },
+        EngineConfig::for_method(method).unwrap().preload(false),
     )
     .unwrap()
 }

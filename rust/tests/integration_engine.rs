@@ -26,7 +26,7 @@ fn engines_share_one_runtime_and_cache() {
     let e1 = Engine::new(
         Rc::clone(&rt),
         "lenet5",
-        EngineConfig { method: "basic-simd".into(), record_trace: false, preload: true },
+        EngineConfig::for_method("basic-simd").unwrap(),
     )
     .unwrap();
     let loaded_after_first = rt.loaded_count();
@@ -35,7 +35,7 @@ fn engines_share_one_runtime_and_cache() {
     let _e2 = Engine::new(
         Rc::clone(&rt),
         "lenet5",
-        EngineConfig { method: "basic-simd".into(), record_trace: false, preload: true },
+        EngineConfig::for_method("basic-simd").unwrap(),
     )
     .unwrap();
     assert_eq!(rt.loaded_count(), loaded_after_first, "cache must dedupe across engines");
@@ -48,7 +48,7 @@ fn batch_size_one_and_many_agree() {
     let eng = Engine::new(
         Rc::clone(&rt),
         "lenet5",
-        EngineConfig { method: "advanced-simd-4".into(), record_trace: false, preload: true },
+        EngineConfig::for_method("advanced-simd-4").unwrap(),
     )
     .unwrap();
     let (imgs, _) = synth::make_dataset(5, 9, 0.05);
@@ -67,7 +67,7 @@ fn wrong_input_shape_is_an_error_not_a_panic() {
     let eng = Engine::new(
         Rc::clone(&rt),
         "lenet5",
-        EngineConfig { method: "basic-simd".into(), record_trace: false, preload: false },
+        EngineConfig::for_method("basic-simd").unwrap().preload(false),
     )
     .unwrap();
     assert!(eng.infer_batch(&Tensor::zeros(vec![1, 3, 28, 28])).is_err());
@@ -81,7 +81,7 @@ fn unknown_network_or_method_fail_cleanly() {
     assert!(Engine::new(
         Rc::clone(&rt),
         "lenet5",
-        EngineConfig { method: "hyperspeed".into(), record_trace: false, preload: false }
+        EngineConfig::for_method("hyperspeed").unwrap().preload(false)
     )
     .is_err());
 }
@@ -104,7 +104,7 @@ fn traces_only_when_enabled() {
     let silent = Engine::new(
         Rc::clone(&rt),
         "lenet5",
-        EngineConfig { method: "basic-simd".into(), record_trace: false, preload: true },
+        EngineConfig::for_method("basic-simd").unwrap(),
     )
     .unwrap();
     let (imgs, _) = synth::make_dataset(2, 3, 0.05);
@@ -114,7 +114,7 @@ fn traces_only_when_enabled() {
     let traced = Engine::new(
         Rc::clone(&rt),
         "lenet5",
-        EngineConfig { method: "basic-simd".into(), record_trace: true, preload: true },
+        EngineConfig::for_method("basic-simd").unwrap().trace(true),
     )
     .unwrap();
     traced.infer_batch(&imgs).unwrap();
@@ -142,7 +142,7 @@ fn cdm_deployment_roundtrip_preserves_inference() {
     let eng = Engine::new(
         Rc::clone(&rt),
         "lenet5",
-        EngineConfig { method: "cpu-seq".into(), record_trace: false, preload: false },
+        EngineConfig::for_method("cpu-seq").unwrap().preload(false),
     )
     .unwrap();
     let (imgs, labels) = synth::make_dataset(4, 21, 0.05);
@@ -162,7 +162,7 @@ fn metrics_json_is_valid_and_grows() {
     let eng = Engine::new(
         Rc::clone(&rt),
         "cifar10",
-        EngineConfig { method: "mxu".into(), record_trace: false, preload: true },
+        EngineConfig::for_method("mxu").unwrap(),
     )
     .unwrap();
     let frames = synth::random_frames(2, 3, 32, 32, 1);

@@ -15,6 +15,12 @@ fn start(models: Vec<(String, String, usize)>) -> Option<cnndroid::coordinator::
         eprintln!("skipping: artifacts not built");
         return None;
     }
+    // Method strings go through the ExecSpec back-compat parser, the
+    // only place strings still enter the server.
+    let models = models
+        .into_iter()
+        .map(|(net, method, replicas)| ServerConfig::model(&net, &method, replicas).unwrap())
+        .collect();
     Some(
         serve(ServerConfig {
             addr: "127.0.0.1:0".into(),
@@ -135,6 +141,35 @@ fn protocol_errors_are_reported_not_fatal() {
     let (imgs, _) = synth::make_dataset(1, 80, 0.05);
     let ok = c.classify("lenet5", &imgs.frame(0), 1).unwrap();
     assert!(ok.get("error").is_null());
+    handle.shutdown();
+}
+
+#[test]
+fn ping_reports_canonical_specs() {
+    // Every entry in ping.methods must be a canonical ExecSpec string
+    // (round-trips unchanged through the parser), and the deployed
+    // model's spec — including non-default knobs — must be listed.
+    let Some(handle) = start(vec![("lenet5".into(), "delegate:auto:fuse:noq8".into(), 1)])
+    else {
+        return;
+    };
+    let mut c = Client::connect(handle.addr).unwrap();
+    let pong = c.call(&Json::obj(vec![("cmd", Json::str("ping"))])).unwrap();
+    let methods: Vec<String> = pong
+        .get("methods")
+        .as_arr()
+        .expect("ping carries methods")
+        .iter()
+        .map(|m| m.as_str().unwrap().to_string())
+        .collect();
+    for m in &methods {
+        let spec: cnndroid::session::ExecSpec = m.parse().unwrap();
+        assert_eq!(&spec.to_string(), m, "non-canonical method in ping: {m:?}");
+    }
+    // ":fuse" and ":noq8" are defaults: the canonical deployed spec is
+    // plain "delegate:auto".
+    assert!(methods.iter().any(|m| m == "delegate:auto"), "{methods:?}");
+    assert!(methods.iter().any(|m| m == "cpu-seq"), "{methods:?}");
     handle.shutdown();
 }
 

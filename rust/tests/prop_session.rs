@@ -1,0 +1,297 @@
+//! Property tests on the typed session spec ([`cnndroid::session`]):
+//!
+//! (a) `ExecSpec -> Display -> FromStr` round-trips for randomized
+//!     specs (the canonical grammar is total over valid specs);
+//! (b) every legacy method string accepted before the redesign parses
+//!     to an equivalent spec — the full legacy matrix is pinned:
+//!     `cpu-seq | cpu-par | cpu-gemm | cpu-gemm-q8 |` the five
+//!     accelerator methods `| delegate:auto[:<dev>][:q8|:noq8]
+//!     [:fuse|:nofuse]` in any segment order;
+//! (c) the conflicts the old splicers mishandled (duplicate devices,
+//!     `:q8:noq8`, `:nofuse:fuse`) are rejected typed, and identical
+//!     duplicates dedupe;
+//! (d) legacy auto selectors drive placements identical to the
+//!     PR 4 string-driven path (same partitioner inputs -> same
+//!     choice vector, bit-identical predicted cost).
+
+use cnndroid::delegate::{Partitioner, Registry};
+use cnndroid::model::zoo;
+use cnndroid::prop_assert;
+use cnndroid::session::{BackendSel, ExecSpec, Precision, SpecError};
+use cnndroid::simulator::device;
+use cnndroid::util::prop;
+use cnndroid::util::rng::Pcg;
+
+/// Every fixed backend name the legacy protocol accepted somewhere
+/// (engine methods, registry names, the forced q8 path).
+const FIXED_NAMES: [&str; 9] = [
+    "cpu-seq",
+    "cpu-par",
+    "cpu-gemm",
+    "cpu-gemm-q8",
+    "basic-parallel",
+    "basic-simd",
+    "advanced-simd-4",
+    "advanced-simd-8",
+    "mxu",
+];
+
+/// A random valid spec, built through the validating modifiers.
+fn random_spec(rng: &mut Pcg) -> ExecSpec {
+    let mut spec = if rng.below(2) == 0 {
+        let mut s = ExecSpec::auto();
+        match rng.below(3) {
+            0 => {}
+            1 => s = s.with_device("note4").unwrap(),
+            _ => s = s.with_device("m9").unwrap(),
+        }
+        if rng.below(3) == 0 {
+            s = s.with_q8().unwrap();
+        }
+        s
+    } else {
+        ExecSpec::fixed(FIXED_NAMES[rng.below(FIXED_NAMES.len() as u64) as usize]).unwrap()
+    };
+    if rng.below(3) == 0 {
+        spec = spec.with_fusion(false);
+    }
+    if rng.below(3) == 0 {
+        spec = spec.with_batch(1 + rng.below(32) as usize).unwrap();
+    }
+    if rng.below(4) == 0 {
+        spec = spec.with_threads(1 + rng.below(8) as usize).unwrap();
+    }
+    if rng.below(4) == 0 {
+        spec = spec.with_tile(16 + rng.below(112) as usize).unwrap();
+    }
+    spec
+}
+
+#[test]
+fn display_fromstr_round_trips_for_random_specs() {
+    prop::check("ExecSpec round trip", |rng| {
+        let spec = random_spec(rng);
+        let canonical = spec.to_string();
+        let reparsed: ExecSpec = canonical
+            .parse()
+            .map_err(|e: SpecError| format!("canonical {canonical:?} failed to parse: {e}"))?;
+        prop_assert!(
+            reparsed == spec,
+            "round trip changed the spec: {spec:?} -> {canonical:?} -> {reparsed:?}"
+        );
+        // Canonical forms are fixed points of canonicalization.
+        prop_assert!(
+            reparsed.to_string() == canonical,
+            "canonical form not a fixed point: {canonical:?} -> {}",
+            reparsed.to_string()
+        );
+        Ok(())
+    });
+}
+
+/// The legacy `delegate:auto` matrix: every selector the old
+/// `auto_spec` parser accepted, with the semantics it assigned.
+/// Returns `(string, device_alias, q8, fuse)`.
+fn legacy_auto_matrix() -> Vec<(String, Option<&'static str>, bool, bool)> {
+    let mut cases = Vec::new();
+    for dev in [None, Some("note4"), Some("m9")] {
+        for q8 in [None, Some("q8"), Some("noq8")] {
+            for fuse in [None, Some("fuse"), Some("nofuse")] {
+                let mut s = "delegate:auto".to_string();
+                if let Some(d) = dev {
+                    s.push(':');
+                    s.push_str(d);
+                }
+                if let Some(q) = q8 {
+                    s.push(':');
+                    s.push_str(q);
+                }
+                if let Some(f) = fuse {
+                    s.push(':');
+                    s.push_str(f);
+                }
+                cases.push((s, dev, q8 == Some("q8"), fuse != Some("nofuse")));
+            }
+        }
+    }
+    // The old parser accepted segments in any order; pin a few
+    // permutations explicitly.
+    cases.push(("delegate:auto:q8:m9".into(), Some("m9"), true, true));
+    cases.push(("delegate:auto:nofuse:note4".into(), Some("note4"), false, false));
+    cases.push(("delegate:auto:q8:nofuse:m9".into(), Some("m9"), true, false));
+    cases
+}
+
+#[test]
+fn every_legacy_method_string_parses_to_an_equivalent_spec() {
+    // Fixed methods: the name is the whole story.
+    for name in FIXED_NAMES {
+        let spec: ExecSpec = name.parse().unwrap();
+        assert_eq!(spec.backend(), &BackendSel::Fixed(name.to_string()), "{name}");
+        assert_eq!(spec.method_name(), name);
+        assert_eq!(
+            spec.precision(),
+            if name == "cpu-gemm-q8" { Precision::Q8Force } else { Precision::F32 },
+            "{name}"
+        );
+        assert!(spec.fusion(), "{name}: fusion defaults on (matches PR 4 fixed plans)");
+        assert_eq!(spec.batch(), 1, "{name}");
+        assert_eq!(spec.to_string(), name, "{name}: canonical form is the legacy string");
+    }
+    // Auto selectors: device / q8 / fusion carry over exactly.
+    for (s, dev, q8, fuse) in legacy_auto_matrix() {
+        let spec: ExecSpec = s.parse().unwrap_or_else(|e| panic!("{s:?}: {e}"));
+        assert!(spec.is_auto(), "{s}");
+        let want_dev = device::by_name(dev.unwrap_or("note4")).unwrap();
+        assert_eq!(spec.device_spec().name, want_dev.name, "{s}");
+        assert_eq!(spec.precision() == Precision::Q8Opt, q8, "{s}");
+        assert_eq!(spec.fusion(), fuse, "{s}");
+        assert_eq!(spec.batch(), 1, "{s}");
+        // The legacy shim agrees with the typed spec.
+        let shim = cnndroid::delegate::auto_spec(&s).unwrap().unwrap();
+        assert_eq!(shim.dev.name, want_dev.name, "{s}");
+        assert_eq!(shim.q8, q8, "{s}");
+        assert_eq!(shim.fuse, fuse, "{s}");
+    }
+}
+
+#[test]
+fn conflicting_suffixes_are_rejected_and_duplicates_dedupe() {
+    // The cases the old splicer got wrong (ISSUE satellite): the
+    // later-segment-wins tolerance and the spurious duplicate-device
+    // rejection are both gone.
+    for bad in [
+        "delegate:auto:q8:noq8",
+        "delegate:auto:noq8:q8",
+        "delegate:auto:fuse:nofuse",
+        "delegate:auto:nofuse:fuse",
+        "delegate:auto:note4:m9",
+        "delegate:auto:m9:galaxy-note4",
+        "delegate:auto:batch=2:batch=3",
+        "cpu-seq:q8",
+        "cpu-gemm-q8:noq8",
+        "cpu-seq:m9",
+    ] {
+        assert!(bad.parse::<ExecSpec>().is_err(), "{bad:?} must be rejected");
+    }
+    for (dup, canonical) in [
+        ("delegate:auto:m9:m9", "delegate:auto:m9"),
+        ("delegate:auto:m9:one-m9", "delegate:auto:m9"),
+        ("delegate:auto:q8:q8", "delegate:auto:q8"),
+        ("delegate:auto:nofuse:nofuse", "delegate:auto:nofuse"),
+        ("delegate:auto:batch=4:batch=4", "delegate:auto:batch=4"),
+    ] {
+        let spec: ExecSpec = dup.parse().unwrap_or_else(|e| panic!("{dup:?}: {e}"));
+        assert_eq!(spec.to_string(), canonical, "{dup}");
+    }
+    // The CLI composition path (`--device` on a selector already
+    // naming it) dedupes instead of erroring like the old splicer...
+    let spec: ExecSpec = "delegate:auto:m9:q8".parse().unwrap();
+    assert_eq!(spec.clone().with_device("m9").unwrap().to_string(), "delegate:auto:m9:q8");
+    // ...and a *different* device is a typed conflict instead of a
+    // silently mangled string.
+    assert!(matches!(
+        spec.with_device("note4"),
+        Err(SpecError::DeviceConflict { .. })
+    ));
+}
+
+#[test]
+fn legacy_auto_strings_drive_identical_placements() {
+    // PR 4's string-driven path fed (device-from-string, batch 1) to
+    // the partitioner.  The spec-driven engine feeds
+    // (spec.device_spec(), spec.batch()).  For every legacy selector
+    // these inputs must coincide, so the emitted plan — choice vector
+    // and bit-exact predicted cost — is identical.
+    let registry = Registry::simulated();
+    for net in zoo::all() {
+        for (s, dev, _q8, _fuse) in legacy_auto_matrix() {
+            let spec: ExecSpec = s.parse().unwrap();
+            let legacy_dev = device::by_name(dev.unwrap_or("note4")).unwrap();
+            let old = Partitioner::new(&registry, &legacy_dev).partition(&net).unwrap();
+            let new = Partitioner::new(&registry, &spec.device_spec())
+                .with_batch(spec.batch())
+                .partition(&net)
+                .unwrap();
+            assert_eq!(old.choice, new.choice, "{}/{s}", net.name);
+            assert_eq!(
+                old.predicted_s.to_bits(),
+                new.predicted_s.to_bits(),
+                "{}/{s}",
+                net.name
+            );
+        }
+    }
+}
+
+#[test]
+fn spec_batch_drives_max_batch_enforcement() {
+    // `:batch=16` in a spec must reach Partitioner::with_batch: accel
+    // backends (max_batch 1) are excluded from the solve, so nothing
+    // lands on them — the end-to-end wiring of ExecSpec.batch.
+    let registry = Registry::simulated();
+    let spec: ExecSpec = "delegate:auto:batch=16".parse().unwrap();
+    for net in zoo::all() {
+        let rep = Partitioner::new(&registry, &spec.device_spec())
+            .with_batch(spec.batch())
+            .partition(&net)
+            .unwrap();
+        assert!(
+            rep.plan.layers.iter().all(|l| !l.on_accel()),
+            "{}: over-batch accel placement from spec batch",
+            net.name
+        );
+    }
+}
+
+#[test]
+fn builder_and_string_paths_agree() {
+    use cnndroid::session::Session;
+    // The fluent builder and the back-compat parser are two doors to
+    // the same struct: equivalent configurations produce equal specs.
+    let from_builder = Session::for_net("alexnet")
+        .device("m9")
+        .q8()
+        .batch(4)
+        .fusion(false)
+        .spec()
+        .unwrap();
+    let from_string: ExecSpec = "delegate:auto:m9:q8:nofuse:batch=4".parse().unwrap();
+    assert_eq!(from_builder, from_string);
+    assert_eq!(from_builder.to_string(), from_string.to_string());
+}
+
+#[test]
+fn engine_level_equivalence_when_artifacts_exist() {
+    // Gated end-to-end pin of the acceptance bar: for legacy method
+    // strings, the spec-driven engine (string through the back-compat
+    // parser) produces bit-identical outputs and identical placements
+    // to an engine configured through the typed builder.
+    use cnndroid::coordinator::{Engine, EngineConfig};
+    use cnndroid::model::manifest::default_dir;
+    use cnndroid::session::Session;
+    let dir = default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let (imgs, _) = cnndroid::data::synth::make_dataset(3, 47, 0.05);
+    for method in ["cpu-seq", "basic-simd", "delegate:auto", "delegate:auto:m9:nofuse"] {
+        let via_string = Engine::from_artifacts(
+            &dir,
+            "lenet5",
+            EngineConfig::for_method(method).unwrap(),
+        )
+        .unwrap();
+        let via_builder =
+            Session::for_net("lenet5").method(method).build_from_artifacts(&dir).unwrap();
+        let a = via_string.infer_batch(&imgs).unwrap();
+        let b = via_builder.infer_batch(&imgs).unwrap();
+        assert_eq!(a, b, "{method}: outputs must be bit-identical");
+        let pa: Vec<String> =
+            via_string.plan().layers.iter().map(|l| format!("{l:?}")).collect();
+        let pb: Vec<String> =
+            via_builder.plan().layers.iter().map(|l| format!("{l:?}")).collect();
+        assert_eq!(pa, pb, "{method}: placements must be identical");
+    }
+}
