@@ -324,6 +324,72 @@ fn main() {
         b.speedup_table("fusion/alexnet-conv1-pool1/unfused");
     }
 
+    // --- obs: tracing overhead guard.  `off` is the instrumented
+    //     kernel with recording disabled (the shipping configuration),
+    //     `off-probed` adds 256 extra disabled span probes per run, and
+    //     `kernel-level` runs with recording on (spans drained each
+    //     iteration).  The guard pins the disabled path: 256 probes —
+    //     each one relaxed atomic load, name closure never run — must
+    //     stay under 2% of the kernel.  Emits BENCH_obs.json. ---
+    {
+        use cnndroid::obs::{self, TraceLevel};
+        obs::set_level(TraceLevel::Off);
+        let x = random(vec![1, lespec.in_c, lespec.in_h, lespec.in_w], 120);
+        let w = random(vec![lespec.nk, lespec.in_c, lespec.kh, lespec.kw], 121);
+        let bias = random(vec![lespec.nk], 122);
+        let packed = PackedConv::pack(&lespec, &w, &bias);
+        let off_name = format!("obs/{le_label}/off");
+        let probed_name = format!("obs/{le_label}/off-probed");
+        let on_name = format!("obs/{le_label}/kernel-level");
+        b.case(&off_name, || {
+            kernels::conv_im2col(&x, &packed, KernelOpts::seq());
+        });
+        b.case(&probed_name, || {
+            for _ in 0..256 {
+                let _probe =
+                    obs::span_with(TraceLevel::Kernel, "kernel", || "probe".to_string());
+            }
+            kernels::conv_im2col(&x, &packed, KernelOpts::seq());
+        });
+        obs::set_level(TraceLevel::Kernel);
+        b.case(&on_name, || {
+            kernels::conv_im2col(&x, &packed, KernelOpts::seq());
+            obs::clear();
+        });
+        obs::set_level(TraceLevel::Off);
+        if let (Some(off), Some(probed), Some(on)) =
+            (b.mean_of(&off_name), b.mean_of(&probed_name), b.mean_of(&on_name))
+        {
+            let disabled_overhead = probed.as_secs_f64() / off.as_secs_f64() - 1.0;
+            let recording_overhead = on.as_secs_f64() / off.as_secs_f64() - 1.0;
+            let doc = Json::obj(vec![
+                ("bench", Json::str("bench_layers/obs")),
+                ("unit", Json::str("ms")),
+                ("disabled_ms", Json::num(off.as_secs_f64() * 1e3)),
+                ("disabled_probed_ms", Json::num(probed.as_secs_f64() * 1e3)),
+                ("kernel_level_ms", Json::num(on.as_secs_f64() * 1e3)),
+                ("probes_per_run", Json::num(256.0)),
+                ("disabled_overhead_frac", Json::num(disabled_overhead)),
+                ("recording_overhead_frac", Json::num(recording_overhead)),
+            ]);
+            let path = "BENCH_obs.json";
+            match std::fs::write(path, doc.dump()) {
+                Ok(()) => println!("  (obs overhead results written to {path})"),
+                Err(e) => eprintln!("  (could not write {path}: {e})"),
+            }
+            println!(
+                "  obs guard: 256 disabled probes add {:+.2}% (recording on: {:+.2}%)",
+                disabled_overhead * 100.0,
+                recording_overhead * 100.0
+            );
+            assert!(
+                disabled_overhead < 0.02,
+                "disabled tracing must be free: 256 probes added {:.2}% (limit 2%)",
+                disabled_overhead * 100.0
+            );
+        }
+    }
+
     // --- layout swaps (the "dimension swapping" cost the Fig. 5
     //     pipeline must hide) ---
     let act = random(vec![1, 96, 27, 27], 1);

@@ -18,12 +18,13 @@ use std::rc::Rc;
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::coordinator::pipeline::{run_pipeline, PipelineTrace};
+use crate::coordinator::pipeline::{run_pipeline, PipelineTrace, Proc};
 use crate::coordinator::plan::{ExecutionPlan, FusedStage, LayerPlan};
 use crate::kernels::{self, KernelOpts, KernelVariant, PackedModel, TailOp};
 use crate::model::manifest::Manifest;
 use crate::model::network::{Network, PoolMode};
 use crate::model::weights::{load_weights, Params};
+use crate::obs::{self, TraceLevel};
 use crate::runtime::{Arg, LoadedArtifact, Runtime};
 use crate::session::spec::{BackendSel, ExecSpec, Precision, SpecError};
 use crate::tensor::{layout, Tensor};
@@ -113,6 +114,9 @@ pub struct Engine {
     artifacts: RefCell<BTreeMap<String, Rc<LoadedArtifact>>>,
     layer_stats: RefCell<BTreeMap<String, LayerStat>>,
     traces: RefCell<Vec<(String, PipelineTrace)>>,
+    /// (stage name, wall secs) of the most recent `infer_batch` — the
+    /// per-stage breakdown the server worker forwards into `Metrics`.
+    last_stage_times: RefCell<Vec<(String, f64)>>,
     batches: RefCell<usize>,
     frames: RefCell<usize>,
 }
@@ -127,8 +131,51 @@ impl Engine {
             .ok_or_else(|| anyhow::anyhow!("unknown network {net_name:?}"))?
             .clone();
         let params = load_weights(manifest, &net)?;
+        Engine::with_parts(runtime, net, params, cfg)
+    }
+
+    /// Build an engine over an in-memory manifest with deterministic
+    /// synthetic weights (the fixture shared with tests and benches) —
+    /// no artifacts on disk.  Only artifact-free placements can build
+    /// (the CPU backends, or auto placement over them); accelerated
+    /// specs fail artifact resolution exactly as on a fresh checkout.
+    /// This is what `profile --synthetic` runs on in CI.
+    pub fn synthetic(net_name: &str, cfg: EngineConfig, seed: u64) -> Result<Engine> {
+        let net = crate::model::zoo::by_name(net_name)
+            .ok_or_else(|| anyhow::anyhow!("unknown network {net_name:?}"))?;
+        let mut networks = BTreeMap::new();
+        for n in crate::model::zoo::all() {
+            networks.insert(n.name.clone(), n);
+        }
+        let manifest = Manifest {
+            dir: std::path::PathBuf::from("synthetic"),
+            source_hash: String::new(),
+            networks,
+            methods: Vec::new(),
+            heaviest_conv: Default::default(),
+            artifacts: Vec::new(),
+            weights: Default::default(),
+        };
+        let runtime = Rc::new(Runtime::new(manifest)?);
+        let params = Params::synthetic(&net, seed, 0.1);
+        Engine::with_parts(runtime, net, params, cfg)
+    }
+
+    /// Shared constructor body: everything after the network and its
+    /// parameters are resolved.
+    fn with_parts(
+        runtime: Rc<Runtime>,
+        net: Network,
+        params: Params,
+        cfg: EngineConfig,
+    ) -> Result<Engine> {
+        let manifest = runtime.manifest();
         let spec = cfg.spec.clone();
         let method = spec.to_string();
+        // The spec's trace knob raises the process-global recorder
+        // monotonically: one engine asking for kernel spans must not be
+        // silenced by a later engine built with tracing off.
+        obs::set_level_at_least(spec.trace());
         // An over-`max_batch` placement on a fixed backend is a spec
         // error, reported typed at construction instead of surfacing
         // as a DP- or dispatch-time surprise.  (Auto specs enforce the
@@ -258,6 +305,7 @@ impl Engine {
             artifacts: RefCell::new(BTreeMap::new()),
             layer_stats: RefCell::new(BTreeMap::new()),
             traces: RefCell::new(Vec::new()),
+            last_stage_times: RefCell::new(Vec::new()),
             batches: RefCell::new(0),
             frames: RefCell::new(0),
         };
@@ -339,6 +387,13 @@ impl Engine {
         self.traces.borrow().clone()
     }
 
+    /// (stage name, wall seconds) of the most recent batch, in
+    /// execution order — the per-stage breakdown `profile` and the
+    /// server metrics consume without re-walking the span stream.
+    pub fn last_stage_times(&self) -> Vec<(String, f64)> {
+        self.last_stage_times.borrow().clone()
+    }
+
     /// Forward a batch of NCHW frames; returns logits (n, classes).
     pub fn infer_batch(&self, x: &Tensor) -> Result<Tensor> {
         anyhow::ensure!(
@@ -355,12 +410,24 @@ impl Engine {
         if self.cfg.record_trace {
             self.traces.borrow_mut().clear();
         }
+        self.last_stage_times.borrow_mut().clear();
+        let _batch_span = obs::span_with(TraceLevel::Stage, "request", || {
+            format!("infer {} n={n}", self.net.name)
+        })
+        .arg("net", Json::str(self.net.name.clone()))
+        .arg("frames", Json::num(n as f64))
+        .arg("spec", Json::str(self.method.clone()));
         let mut act = x.clone();
         for si in 0..self.stages.len() {
             let st = self.stages[si].clone();
+            let name = self.plan.stage_name(&st);
+            let _stage_span =
+                obs::span_with(TraceLevel::Stage, "stage", || name.clone());
             let t0 = Instant::now();
             act = self.run_stage(&st, act)?;
-            self.record_time(&self.plan.stage_name(&st), t0.elapsed().as_secs_f64());
+            let secs = t0.elapsed().as_secs_f64();
+            self.record_time(&name, secs);
+            self.last_stage_times.borrow_mut().push((name, secs));
         }
         *self.batches.borrow_mut() += 1;
         *self.frames.borrow_mut() += n;
@@ -568,6 +635,9 @@ impl Engine {
 
         let pre_input = Arc::clone(&input);
         let mut mid_err: Option<anyhow::Error> = None;
+        // Base of the pipeline's relative clock on the trace clock, so
+        // absorbed events line up with the surrounding stage span.
+        let t_base = obs::now_us();
         let (frames, trace) = run_pipeline(
             n,
             move |i| {
@@ -596,6 +666,26 @@ impl Engine {
         );
         if let Some(e) = mid_err {
             return Err(e.context(format!("conv {name} ({artifact})")));
+        }
+        if obs::enabled(TraceLevel::Stage) {
+            // Absorb the Fig. 5 pipeline events onto the synthetic
+            // accelerator/CPU lanes of the span stream, preserving the
+            // overlap picture in the Chrome trace.
+            for ev in &trace.events {
+                let lane = match ev.proc {
+                    Proc::Accel => obs::TID_ACCEL_LANE,
+                    Proc::Cpu => obs::TID_CPU_LANE,
+                };
+                obs::record_manual(
+                    TraceLevel::Stage,
+                    "pipeline",
+                    format!("{name} {} f{}", ev.stage, ev.frame),
+                    lane,
+                    t_base + (ev.start_s * 1e6) as u64,
+                    t_base + (ev.end_s * 1e6) as u64,
+                    vec![("layer", Json::str(name))],
+                );
+            }
         }
         if self.cfg.record_trace {
             self.traces.borrow_mut().push((name.to_string(), trace));

@@ -1,30 +1,44 @@
-//! Serving metrics: request counters and end-to-end latency summaries,
-//! exported as JSON over the server's `metrics` command.
+//! Serving metrics: request counters, end-to-end latency summaries and
+//! histograms, per-stage breakdowns, and a queue-depth gauge — exported
+//! as JSON over the server's `metrics` command.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use crate::util::json::Json;
-use crate::util::stats::Samples;
+use crate::util::stats::{LatencyHistogram, Samples};
 
-#[derive(Default)]
+#[derive(Default, Clone)]
 struct NetStats {
     requests: u64,
     errors: u64,
     latency: Samples,
     batch_sizes: Samples,
+    /// O(1)-insert log-scale histogram: raw samples cover exact
+    /// percentiles early on, the histogram keeps serving them after
+    /// days of uptime without unbounded memory.
+    hist: LatencyHistogram,
+    /// Engine-reported per-stage wall times (secs), keyed by stage name.
+    stages: BTreeMap<String, Samples>,
 }
 
 /// Process-wide serving metrics (thread-safe).
 pub struct Metrics {
     started: Instant,
     nets: Mutex<BTreeMap<String, NetStats>>,
+    /// Most recent batcher depth reported by any engine worker.
+    queue_depth: AtomicUsize,
 }
 
 impl Metrics {
     pub fn new() -> Metrics {
-        Metrics { started: Instant::now(), nets: Mutex::new(BTreeMap::new()) }
+        Metrics {
+            started: Instant::now(),
+            nets: Mutex::new(BTreeMap::new()),
+            queue_depth: AtomicUsize::new(0),
+        }
     }
 
     /// Record one completed request.
@@ -33,6 +47,7 @@ impl Metrics {
         let st = g.entry(net.to_string()).or_default();
         st.requests += 1;
         st.latency.push_duration(latency);
+        st.hist.record(latency);
         st.batch_sizes.push(batch as f64);
     }
 
@@ -42,37 +57,92 @@ impl Metrics {
         g.entry(net.to_string()).or_default().errors += 1;
     }
 
+    /// Record one stage execution (seconds) from an engine worker.
+    pub fn record_stage(&self, net: &str, stage: &str, secs: f64) {
+        let mut g = self.nets.lock().unwrap();
+        g.entry(net.to_string()).or_default().stages.entry(stage.to_string()).or_default().push(
+            secs,
+        );
+    }
+
+    /// Update the queue-depth gauge (workers report their batcher's
+    /// depth after each drain).
+    pub fn set_queue_depth(&self, depth: usize) {
+        self.queue_depth.store(depth, Ordering::Relaxed);
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.queue_depth.load(Ordering::Relaxed)
+    }
+
     pub fn total_requests(&self) -> u64 {
         self.nets.lock().unwrap().values().map(|s| s.requests).sum()
     }
 
     /// JSON snapshot (latency in ms, throughput in req/s since start).
+    ///
+    /// The per-net stats are *cloned out* under the lock and formatted
+    /// after it is released: JSON assembly is O(samples), and holding
+    /// the mutex through it would stall every worker's `record` for the
+    /// duration of a `metrics` command.
     pub fn snapshot(&self) -> Json {
         let uptime = self.started.elapsed().as_secs_f64();
-        let mut g = self.nets.lock().unwrap();
-        let total: u64 = g.values().map(|s| s.requests).sum();
+        let copied: Vec<(String, NetStats)> = {
+            let g = self.nets.lock().unwrap();
+            g.iter().map(|(k, v)| (k.clone(), v.clone())).collect()
+        };
+        let total: u64 = copied.iter().map(|(_, s)| s.requests).sum();
         let mut nets = Vec::new();
-        for (name, st) in g.iter_mut() {
+        for (name, mut st) in copied {
+            let denom = (st.requests + st.errors) as f64;
+            let error_rate = if denom > 0.0 { st.errors as f64 / denom } else { 0.0 };
+            let mut stages = Vec::new();
+            for (stage, samples) in st.stages.iter_mut() {
+                stages.push((
+                    stage.as_str(),
+                    Json::obj(vec![
+                        ("n", Json::num(samples.len() as f64)),
+                        ("mean_ms", Json::num(samples.mean() * 1e3)),
+                        ("p50_ms", Json::num(samples.percentile(50.0) * 1e3)),
+                        ("p95_ms", Json::num(samples.percentile(95.0) * 1e3)),
+                    ]),
+                ));
+            }
+            let stages = Json::obj(stages);
             nets.push((
-                name.as_str(),
+                name,
                 Json::obj(vec![
                     ("requests", Json::num(st.requests as f64)),
                     ("errors", Json::num(st.errors as f64)),
+                    ("error_rate", Json::num(error_rate)),
                     ("latency_ms_mean", Json::num(st.latency.mean() * 1e3)),
                     ("latency_ms_p50", Json::num(st.latency.percentile(50.0) * 1e3)),
                     ("latency_ms_p95", Json::num(st.latency.percentile(95.0) * 1e3)),
                     ("latency_ms_p99", Json::num(st.latency.percentile(99.0) * 1e3)),
+                    (
+                        "latency_hist",
+                        Json::obj(vec![
+                            ("count", Json::num(st.hist.count() as f64)),
+                            ("mean_ms", Json::num(st.hist.mean() * 1e3)),
+                            ("p50_ms", Json::num(st.hist.percentile(50.0) * 1e3)),
+                            ("p95_ms", Json::num(st.hist.percentile(95.0) * 1e3)),
+                            ("p99_ms", Json::num(st.hist.percentile(99.0) * 1e3)),
+                        ]),
+                    ),
                     ("mean_batch", Json::num(st.batch_sizes.mean())),
                     (
                         "throughput_rps",
                         Json::num(if uptime > 0.0 { st.requests as f64 / uptime } else { 0.0 }),
                     ),
+                    ("stages", stages),
                 ]),
             ));
         }
+        let nets: Vec<(&str, Json)> = nets.iter().map(|(n, j)| (n.as_str(), j.clone())).collect();
         Json::obj(vec![
             ("uptime_s", Json::num(uptime)),
             ("total_requests", Json::num(total as f64)),
+            ("queue_depth", Json::num(self.queue_depth() as f64)),
             ("nets", Json::obj(nets)),
         ])
     }
@@ -87,6 +157,7 @@ impl Default for Metrics {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::Arc;
 
     #[test]
     fn records_and_snapshots() {
@@ -106,10 +177,84 @@ mod tests {
     }
 
     #[test]
+    fn error_rate_reaches_the_snapshot() {
+        let m = Metrics::new();
+        m.record("x", Duration::from_millis(1), 1);
+        m.record("x", Duration::from_millis(1), 1);
+        m.record("x", Duration::from_millis(1), 1);
+        m.record_error("x");
+        let s = m.snapshot();
+        let rate = s.get("nets").get("x").get("error_rate").as_f64().unwrap();
+        assert!((rate - 0.25).abs() < 1e-12, "rate {rate}");
+        // A net with only errors still reports a sane rate (and its
+        // empty latency stats are NaN -> null, not infinity).
+        let m2 = Metrics::new();
+        m2.record_error("y");
+        let s2 = m2.snapshot();
+        assert_eq!(s2.get("nets").get("y").get("error_rate").as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn histogram_and_stage_breakdowns_export() {
+        let m = Metrics::new();
+        for i in 1..=100u64 {
+            m.record("lenet5", Duration::from_millis(i), 1);
+            m.record_stage("lenet5", "conv1+pool1", i as f64 * 1e-3);
+        }
+        m.set_queue_depth(7);
+        let s = m.snapshot();
+        let net = s.get("nets").get("lenet5");
+        assert_eq!(net.get("latency_hist").get("count").as_usize(), Some(100));
+        let p50 = net.get("latency_hist").get("p50_ms").as_f64().unwrap();
+        assert!((p50 - 50.0).abs() / 50.0 < 0.15, "hist p50 {p50}");
+        let stage = net.get("stages").get("conv1+pool1");
+        assert_eq!(stage.get("n").as_usize(), Some(100));
+        assert!(stage.get("p95_ms").as_f64().unwrap() > 90.0);
+        assert_eq!(s.get("queue_depth").as_usize(), Some(7));
+    }
+
+    #[test]
     fn snapshot_parses_as_json() {
         let m = Metrics::new();
         m.record("x", Duration::from_millis(1), 1);
         let text = m.snapshot().dump();
         assert!(crate::util::json::Json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn snapshot_does_not_block_concurrent_records() {
+        // Writers hammer `record` while readers snapshot continuously.
+        // With JSON formatting inside the lock this takes long enough
+        // to be visibly quadratic; with clone-out-then-format, writers
+        // never wait on formatting and everything lands.
+        let m = Arc::new(Metrics::new());
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let m = Arc::clone(&m);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..500 {
+                    m.record("net", Duration::from_micros(i + t), 1);
+                    m.record_stage("net", "s", 1e-6);
+                }
+            }));
+        }
+        for _ in 0..2 {
+            let m = Arc::clone(&m);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..50 {
+                    // Each snapshot is internally consistent JSON even
+                    // while writers are mid-flight.
+                    let s = m.snapshot();
+                    assert!(Json::parse(&s.dump()).is_ok());
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.total_requests(), 2000);
+        let s = m.snapshot();
+        assert_eq!(s.get("nets").get("net").get("requests").as_usize(), Some(2000));
+        assert_eq!(s.get("nets").get("net").get("stages").get("s").get("n").as_usize(), Some(2000));
     }
 }

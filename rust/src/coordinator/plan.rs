@@ -162,9 +162,13 @@ impl ExecutionPlan {
     /// "cpu-gemm-q8"` forces the full quantized CPU path (conv/FC on
     /// the i8 kernels, pool/LRN on CPU threads) and also needs none —
     /// the way to *force* q8 serving regardless of the cost model.
+    /// `method == "cpu-gemm"` likewise needs none: the delegate's f32
+    /// im2col+GEMM lowering (tile-parallel conv/FC, threaded pool/LRN)
+    /// as a fixed whole-network plan.
     pub fn build(manifest: &Manifest, net: &Network, method: &str) -> Result<ExecutionPlan> {
         let q8 = method == crate::CPU_GEMM_Q8;
-        let accel = !q8 && method != "cpu-seq";
+        let gemm = method == crate::CPU_GEMM;
+        let accel = !q8 && !gemm && method != "cpu-seq";
         let nhwc = NHWC_METHODS.contains(&method);
         anyhow::ensure!(
             !accel || manifest.methods.iter().any(|m| m == method),
@@ -183,6 +187,13 @@ impl ExecutionPlan {
                     let spec = specs[name.as_str()];
                     if q8 {
                         LayerPlan::ConvCpuQ8 { name: name.clone(), spec }
+                    } else if gemm {
+                        LayerPlan::ConvCpu {
+                            name: name.clone(),
+                            spec,
+                            variant: KernelVariant::Im2col,
+                            tiled: true,
+                        }
                     } else if accel {
                         let meta = manifest
                             .find_conv(&spec.signature(), method, 1)
@@ -215,7 +226,7 @@ impl ExecutionPlan {
                     size: *size,
                     stride: *stride,
                     relu: *relu,
-                    parallel: accel || q8,
+                    parallel: accel || q8 || gemm,
                 },
                 Layer::Lrn { name, size, alpha, beta, k } => LayerPlan::Lrn {
                     name: name.clone(),
@@ -223,7 +234,7 @@ impl ExecutionPlan {
                     alpha: *alpha,
                     beta: *beta,
                     k: *k,
-                    parallel: accel || q8,
+                    parallel: accel || q8 || gemm,
                 },
                 Layer::Fc { name, out, relu } => {
                     if q8 {
@@ -252,7 +263,7 @@ impl ExecutionPlan {
                             artifact_b16: b16.map(|m| m.name.clone()),
                         }
                     } else {
-                        LayerPlan::FcCpu { name: name.clone(), relu: *relu, tiled: false }
+                        LayerPlan::FcCpu { name: name.clone(), relu: *relu, tiled: gemm }
                     }
                 }
             };
@@ -550,6 +561,25 @@ mod tests {
         for (s, l) in stages.iter().zip(&plan.layers) {
             assert_eq!(plan.stage_name(s), l.name());
         }
+    }
+
+    #[test]
+    fn fixed_cpu_gemm_plan_is_artifact_free_and_fuses() {
+        let m = empty_manifest(&[]);
+        let plan = ExecutionPlan::build(&m, &zoo::lenet5(), crate::CPU_GEMM).unwrap();
+        assert!(plan.layers.iter().all(|l| !l.on_accel() && !l.on_q8()));
+        assert!(plan.artifacts().is_empty());
+        // The delegate's lowering: tile-parallel im2col convs whose
+        // banded epilogue lets pool tails fuse, threaded pool, tiled FC.
+        assert!(plan.layers.iter().all(|l| !matches!(
+            l,
+            LayerPlan::ConvCpu { variant: KernelVariant::Direct, .. }
+                | LayerPlan::ConvCpu { tiled: false, .. }
+                | LayerPlan::Pool { parallel: false, .. }
+                | LayerPlan::FcCpu { tiled: false, .. }
+        )));
+        let names: Vec<String> = plan.fuse().iter().map(|s| plan.stage_name(s)).collect();
+        assert_eq!(names, vec!["conv1+pool1", "conv2+pool2", "fc1", "fc2"]);
     }
 
     #[test]

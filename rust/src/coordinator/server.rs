@@ -13,13 +13,14 @@
 //!   <- {"id": 7, "label": 3, "logits": [...], "latency_ms": 1.9, "batch": 4}
 //!   -> {"cmd": "ping"}            <- {"ok": true, "nets": ["lenet5", ...]}
 //!   -> {"cmd": "metrics"}         <- {<metrics snapshot>}
+//!   -> {"cmd": "trace"}           <- {<Chrome trace-event JSON, drains spans>}
 //!   -> anything else              <- {"error": "..."}
 //! ```
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -30,10 +31,15 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::router::Router;
 use crate::delegate::fallback;
 use crate::model::manifest::Manifest;
+use crate::obs::{self, TraceLevel};
 use crate::session::ExecSpec;
 use crate::tensor::Tensor;
 use crate::util::json::Json;
 use crate::Result;
+
+/// Process-wide request sequence: the `req#N` correlation id threading
+/// one request's queue/exec/respond spans through the trace.
+static NEXT_REQ: AtomicU64 = AtomicU64::new(1);
 
 /// One queued inference request.
 pub struct Request {
@@ -41,6 +47,8 @@ pub struct Request {
     pub image: Tensor,
     pub resp: mpsc::Sender<Json>,
     pub enqueued: Instant,
+    /// Server-assigned sequence number (span correlation id).
+    pub seq: u64,
 }
 
 type Handle = Arc<Batcher<Request>>;
@@ -245,6 +253,9 @@ fn build_engine_with_fallback(
         if let Some(t) = spec.tile() {
             alt = alt.with_tile(t).expect("tile validated");
         }
+        if spec.trace() != TraceLevel::Off {
+            alt = alt.with_trace(spec.trace()).expect("trace knob carries onto a fresh base");
+        }
         alt
     };
     let auto_alt = carry_knobs(ExecSpec::auto());
@@ -307,10 +318,42 @@ fn engine_worker(
     };
     while let Some(batch) = batcher.next_batch() {
         let n = batch.len();
+        metrics.set_queue_depth(batcher.depth());
+        if obs::enabled(TraceLevel::Stage) {
+            // Queue-wait spans: enqueue (connection thread) → dequeue
+            // (here).  Recorded manually because the interval straddles
+            // threads; `instant_us` saturates pre-epoch enqueues to 0.
+            let dequeued = obs::now_us();
+            for req in &batch {
+                obs::record_manual(
+                    TraceLevel::Stage,
+                    "request",
+                    format!("req#{} queue {net}", req.seq),
+                    obs::tid(),
+                    obs::instant_us(req.enqueued),
+                    dequeued,
+                    vec![("batch", Json::num(n as f64))],
+                );
+            }
+        }
         let frames: Vec<Tensor> = batch.iter().map(|r| r.image.clone()).collect();
         let stacked = Tensor::stack(&frames);
-        match engine.infer_batch(&stacked) {
+        let exec0 = obs::now_us();
+        let result = {
+            let _exec_span = obs::span_with(TraceLevel::Stage, "request", || {
+                format!("exec {net} n={n}")
+            });
+            engine.infer_batch(&stacked)
+        };
+        match result {
             Ok(logits) => {
+                let exec1 = obs::now_us();
+                for (stage, secs) in engine.last_stage_times() {
+                    metrics.record_stage(net, &stage, secs);
+                }
+                let _resp_span = obs::span_with(TraceLevel::Stage, "request", || {
+                    format!("respond {net} n={n}")
+                });
                 let c = logits.dim(1);
                 let rows = logits.argmax_rows();
                 for (i, req) in batch.into_iter().enumerate() {
@@ -318,6 +361,17 @@ fn engine_worker(
                     let row = &logits.data()[i * c..(i + 1) * c];
                     let latency = req.enqueued.elapsed();
                     metrics.record(net, latency, n);
+                    if obs::enabled(TraceLevel::Stage) {
+                        obs::record_manual(
+                            TraceLevel::Stage,
+                            "request",
+                            format!("req#{} exec {net}", req.seq),
+                            obs::tid(),
+                            exec0,
+                            exec1,
+                            vec![("batch", Json::num(n as f64))],
+                        );
+                    }
                     let fields = vec![
                         ("id", req.id.clone()),
                         ("label", Json::num(label as f64)),
@@ -392,6 +446,12 @@ fn dispatch(
             ]);
         }
         Some("metrics") => return metrics.snapshot(),
+        Some("trace") => {
+            // Drain the recorder: each `trace` call exports the spans
+            // accumulated since the previous one.
+            let spans = obs::take();
+            return obs::chrome_trace(&spans);
+        }
         Some(other) => {
             return Json::obj(vec![("error", Json::str(format!("unknown cmd {other:?}")))]);
         }
@@ -423,6 +483,7 @@ fn dispatch(
         image,
         resp: tx,
         enqueued: Instant::now(),
+        seq: NEXT_REQ.fetch_add(1, Ordering::Relaxed),
     });
     if !pushed {
         return Json::obj(vec![("error", Json::str("server shutting down"))]);

@@ -37,6 +37,7 @@
 use std::sync::Arc;
 
 use crate::model::network::{pool_out, PoolMode};
+use crate::obs::{self, TraceLevel};
 use crate::tensor::{MatView, Tensor};
 use crate::util::threadpool;
 
@@ -509,6 +510,8 @@ pub fn conv_stage(x: &Tensor, src: ConvSource<'_>, ops: &[TailOp], opts: KernelO
             let cap = Arc::new(cap);
             let shared = Arc::clone(&cap);
             threadpool::parallel_for(bands, move |t| {
+                let _b_span =
+                    obs::span_with(TraceLevel::Kernel, "kernel", || format!("fuse.conv_band t{t}"));
                 // SAFETY: bands write disjoint output row ranges; the
                 // pool scope blocks before the borrows expire.
                 unsafe { conv_stage_band(&shared, t) };
@@ -614,6 +617,8 @@ pub fn tail_stage(x: &Tensor, ops: &[TailOp], opts: KernelOpts) -> Tensor {
     let cap = Arc::new(cap);
     let shared = Arc::clone(&cap);
     threadpool::parallel_for(units, move |u| {
+        let _b_span =
+            obs::span_with(TraceLevel::Kernel, "kernel", || format!("fuse.tail_band u{u}"));
         // SAFETY: disjoint (frame, row band) output slices; the pool
         // scope blocks before the borrows expire.
         unsafe { tail_stage_band(&shared, u) };

@@ -25,6 +25,7 @@
 
 use std::sync::Arc;
 
+use crate::obs::{self, TraceLevel};
 use crate::tensor::{MatView, Tensor};
 use crate::util::threadpool;
 
@@ -272,6 +273,7 @@ pub fn gemm_into(
     if n == 0 || m == 0 {
         return;
     }
+    let _k_span = obs::span_with(TraceLevel::Kernel, "kernel", || format!("gemm {m}x{k}x{n}"));
     let tile = opts.tile.max(16);
     let cap = Capsule {
         a: a.as_ptr(),
@@ -299,6 +301,8 @@ pub fn gemm_into(
     threadpool::parallel_for(ntiles, move |t| {
         let j0 = t * shared.tile;
         let j1 = ((t + 1) * shared.tile).min(shared.n);
+        let _b_span =
+            obs::span_with(TraceLevel::Kernel, "kernel", || format!("gemm.band j{j0}..{j1}"));
         // SAFETY: tiles are disjoint column bands, and `gemm_into`
         // blocks on scope completion, keeping the borrows live.
         unsafe { band(&shared, j0, j1) };
@@ -545,6 +549,7 @@ pub fn gemm_q8_into(
     if m == 0 || n == 0 {
         return;
     }
+    let _k_span = obs::span_with(TraceLevel::Kernel, "kernel", || format!("gemm_q8 {m}x{k}x{n}"));
     let cap = Q8Capsule {
         wq: wq.q.as_ptr(),
         scales: wq.scales.as_ptr(),
@@ -574,6 +579,8 @@ pub fn gemm_q8_into(
     threadpool::parallel_for(ntiles, move |t| {
         let i0 = t * rows_per;
         let i1 = ((t + 1) * rows_per).min(shared.m);
+        let _b_span =
+            obs::span_with(TraceLevel::Kernel, "kernel", || format!("gemm_q8.band r{i0}..{i1}"));
         // SAFETY: disjoint row bands; entry point blocks on completion.
         unsafe { q8_band(&shared, i0, i1) };
     });

@@ -35,6 +35,9 @@ pub fn patch_cols(spec: &ConvSpec) -> usize {
 pub fn im2col_frame(frame: &[f32], spec: &ConvSpec, out: &mut [f32]) {
     let (c, h, w) = (spec.in_c, spec.in_h, spec.in_w);
     let (oh, ow) = (spec.out_h(), spec.out_w());
+    let _k_span = crate::obs::span_with(crate::obs::TraceLevel::Kernel, "kernel", || {
+        format!("im2col {c}x{h}x{w} k{}x{}", spec.kh, spec.kw)
+    });
     let cols = oh * ow;
     assert_eq!(frame.len(), c * h * w, "im2col frame length");
     assert_eq!(out.len(), patch_rows(spec) * cols, "im2col patch buffer length");
@@ -100,6 +103,9 @@ pub fn im2col_frame(frame: &[f32], spec: &ConvSpec, out: &mut [f32]) {
 pub fn im2col_q8_frame(frame: &[f32], spec: &ConvSpec, out: &mut [u8]) -> ActQuant {
     let (c, h, w) = (spec.in_c, spec.in_h, spec.in_w);
     let (oh, ow) = (spec.out_h(), spec.out_w());
+    let _k_span = crate::obs::span_with(crate::obs::TraceLevel::Kernel, "kernel", || {
+        format!("im2col_q8 {c}x{h}x{w} k{}x{}", spec.kh, spec.kw)
+    });
     let cols = oh * ow;
     assert_eq!(frame.len(), c * h * w, "im2col frame length");
     assert_eq!(out.len(), patch_rows(spec) * cols, "im2col patch buffer length");

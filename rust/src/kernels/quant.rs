@@ -140,6 +140,9 @@ pub fn quantize_one(v: f32, aq: ActQuant) -> u8 {
 /// returns the parameters.
 pub fn quantize_activations(x: &[f32], out: &mut [u8]) -> ActQuant {
     assert_eq!(x.len(), out.len(), "activation buffer length");
+    let _k_span = crate::obs::span_with(crate::obs::TraceLevel::Kernel, "kernel", || {
+        format!("quant n={}", x.len())
+    });
     let aq = act_params(x);
     for (o, &v) in out.iter_mut().zip(x) {
         *o = quantize_one(v, aq);
@@ -160,6 +163,9 @@ pub fn quantize_activations_transposed(
 ) -> ActQuant {
     assert_eq!(x.len(), rows * cols, "activation matrix length");
     assert_eq!(out.len(), rows * cols, "transposed buffer length");
+    let _k_span = crate::obs::span_with(crate::obs::TraceLevel::Kernel, "kernel", || {
+        format!("quant_t {rows}x{cols}")
+    });
     let aq = act_params(x);
     for r in 0..rows {
         for c in 0..cols {

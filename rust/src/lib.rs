@@ -37,6 +37,10 @@
 //!   fluent [`session::Session`] builder; every engine, server, CLI,
 //!   and bench entry point is plumbed through it, and the legacy
 //!   method-string grammar survives only as its back-compat parser.
+//! * [`obs`] — the span-based tracing/profiling substrate: a
+//!   process-global recorder (request → stage → kernel-band spans,
+//!   no-op when disabled) with Chrome trace-event export; feeds the
+//!   CLI `profile` residual report and the server's expanded metrics.
 //! * [`simulator`] — analytic mobile-GPU performance model that
 //!   regenerates the paper's Tables 3/4 at Mali-T760/Adreno-430 scale.
 //! * [`data`] — procedural digit corpus (mirrors `python/compile/digits.py`)
@@ -48,6 +52,7 @@ pub mod data;
 pub mod delegate;
 pub mod kernels;
 pub mod model;
+pub mod obs;
 pub mod runtime;
 pub mod session;
 pub mod simulator;
@@ -85,3 +90,9 @@ pub const DELEGATE_AUTO: &str = "delegate:auto";
 /// artifacts; the way to force q8 serving regardless of the cost model
 /// or guardrail.
 pub const CPU_GEMM_Q8: &str = "cpu-gemm-q8";
+
+/// Method string forcing the f32 im2col+GEMM CPU path on every layer
+/// (the delegate's `cpu-gemm` backend as a fixed plan).  Needs no
+/// artifacts; the layerwise reference the `profile` subcommand measures
+/// cost-model residuals against.
+pub const CPU_GEMM: &str = "cpu-gemm";

@@ -9,20 +9,23 @@
 //!   cnndroid simulate [--claims]               regenerate paper Tables 3/4
 //!   cnndroid plan --net N --device D           delegate auto-placement preview
 //!   cnndroid bench-engine --net N --method M   quick engine throughput probe
+//!   cnndroid profile --net N --method M        per-layer residuals vs the cost model
 //! ```
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 use cnndroid::coordinator::{serve, BatcherConfig, Engine, EngineConfig, ServerConfig};
 use cnndroid::data::{image, synth};
-use cnndroid::delegate::{Partitioner, Registry};
+use cnndroid::delegate::{Backend, Partitioner, Registry};
 use cnndroid::model::manifest::{default_dir, Manifest};
 use cnndroid::model::{convert_to_cdm, zoo};
-use cnndroid::session::ExecSpec;
+use cnndroid::obs::{self, TraceLevel};
+use cnndroid::session::{ExecSpec, Precision};
 use cnndroid::simulator::{device, tables};
 use cnndroid::util::args::ArgSpec;
 use cnndroid::util::json::Json;
+use cnndroid::util::stats::Samples;
 use cnndroid::Result;
 
 fn main() {
@@ -37,6 +40,7 @@ fn main() {
         "simulate" => run(simulate(rest)),
         "plan" => run(plan_cmd(rest)),
         "bench-engine" => run(bench_engine(rest)),
+        "profile" => run(profile(rest)),
         "validate" => run(validate(rest)),
         "" | "--help" | "-h" | "help" => {
             eprintln!("{}", HELP);
@@ -53,7 +57,7 @@ fn main() {
 const HELP: &str = "cnndroid — GPU-accelerated CNN engine reproduction (three-layer Rust+JAX+Pallas)
 
 USAGE:
-  cnndroid <inspect|convert|infer|serve|simulate|plan|bench-engine|validate> [OPTIONS]
+  cnndroid <inspect|convert|infer|serve|simulate|plan|bench-engine|profile|validate> [OPTIONS]
 
 Execution is configured by a typed spec built from flags:
   --method M          cpu-seq | basic-parallel | basic-simd | advanced-simd-4 |
@@ -69,6 +73,14 @@ accepted anywhere --method is.  Conflicting values — device, precision,
 batch/threads/tile — are rejected instead of spliced; restating the same
 value dedupes (--nofuse is an explicit override of the spec's fusion
 setting).  `plan --json` emits placements machine-readably.
+
+Observability (infer / profile):
+  --trace stage|kernel  record request->stage->kernel spans while running
+  --trace-out FILE      export recorded spans as Chrome trace-event JSON
+                        (open in chrome://tracing or Perfetto)
+`profile` runs warm frames and reports per-layer wall times against the
+delegate cost model's predictions (the residuals that placement
+decisions ride on); `--json` writes the report to BENCH_profile.json.
 
 Run `cnndroid <command> --help` for command options.";
 
@@ -108,6 +120,45 @@ fn plan_batch_opt(spec: ArgSpec) -> ArgSpec {
     )
 }
 
+/// Tracing riders shared by infer / profile: `--trace` raises the span
+/// level, `--trace-out` exports everything the command records as
+/// Chrome trace-event JSON (and implies at least stage-level spans).
+fn trace_opts(spec: ArgSpec) -> ArgSpec {
+    spec.opt_no_default("trace", "record spans at this level: stage | kernel")
+        .opt_no_default("trace-out", "write recorded spans as Chrome trace-event JSON here")
+}
+
+/// Arm the global span recorder from the trace riders.  Returns the
+/// `--trace-out` path; the export itself happens after the workload via
+/// [`finish_trace`].
+fn trace_setup(args: &cnndroid::util::args::Args) -> Result<Option<PathBuf>> {
+    if let Some(level) = args.get_opt("trace") {
+        let parsed = TraceLevel::parse(level).ok_or_else(|| {
+            anyhow::anyhow!("--trace expects off | stage | kernel, got {level:?}")
+        })?;
+        obs::set_level_at_least(parsed);
+    }
+    let out = args.get_opt("trace-out").map(PathBuf::from);
+    if out.is_some() {
+        obs::set_level_at_least(TraceLevel::Stage);
+    }
+    Ok(out)
+}
+
+/// Drain the recorder into a Chrome trace-event file if one was asked
+/// for.
+fn finish_trace(out: Option<PathBuf>) -> Result<()> {
+    let Some(path) = out else { return Ok(()) };
+    let spans = obs::take();
+    obs::write_chrome_trace(&path, &spans)?;
+    eprintln!(
+        "wrote {} span(s) to {} (load in chrome://tracing)",
+        spans.len(),
+        path.display()
+    );
+    Ok(())
+}
+
 /// Build the typed [`ExecSpec`] from `--method` plus the knob flags.
 /// The old suffix splicer (`method_with_device`) is gone: every flag
 /// routes through the spec's validating modifiers, so duplicates
@@ -115,7 +166,15 @@ fn plan_batch_opt(spec: ArgSpec) -> ArgSpec {
 /// with a typed error (`--device note4` on `delegate:auto:m9`,
 /// `--q8` on a fixed f32 method) instead of composing a broken string.
 fn exec_spec(args: &cnndroid::util::args::Args) -> Result<ExecSpec> {
-    let mut spec: ExecSpec = args.get("method").parse().map_err(anyhow::Error::new)?;
+    apply_spec_knobs(args.get("method").parse().map_err(anyhow::Error::new)?, args)
+}
+
+/// Apply the shared knob flags to an already-parsed spec (profile
+/// iterates several `--method` strings through the same knobs).
+fn apply_spec_knobs(
+    mut spec: ExecSpec,
+    args: &cnndroid::util::args::Args,
+) -> Result<ExecSpec> {
     if let Some(dev) = args.get_opt("device") {
         spec = spec.with_device(dev).map_err(anyhow::Error::new)?;
     }
@@ -189,7 +248,7 @@ fn convert(argv: Vec<String>) -> Result<()> {
 }
 
 fn infer(argv: Vec<String>) -> Result<()> {
-    let spec = plan_batch_opt(spec_opts(artifacts_opt(
+    let spec = trace_opts(plan_batch_opt(spec_opts(artifacts_opt(
         ArgSpec::new("cnndroid infer", "classify images with the accelerated engine")
             .opt("net", "lenet5", "network")
             .opt("method", "advanced-simd-4", "cpu-seq | basic-parallel | basic-simd | advanced-simd-4 | advanced-simd-8 | mxu | cpu-gemm-q8 | delegate:auto[...:q8]")
@@ -197,8 +256,9 @@ fn infer(argv: Vec<String>) -> Result<()> {
             .opt("seed", "1", "synthetic workload seed")
             .opt_no_default("image", "PGM/PPM image file to classify")
             .flag("fused", "use the fused whole-network artifact"),
-    )));
+    ))));
     let args = spec.parse_from(argv).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let trace_out = trace_setup(&args)?;
     let dir = artifacts_dir(&args);
     let exec = exec_spec(&args)?;
     let method = exec.to_string();
@@ -243,7 +303,7 @@ fn infer(argv: Vec<String>) -> Result<()> {
         args.get("net"),
         method
     );
-    Ok(())
+    finish_trace(trace_out)
 }
 
 fn serve_cmd(argv: Vec<String>) -> Result<()> {
@@ -588,4 +648,265 @@ fn bench_engine(argv: Vec<String>) -> Result<()> {
         dt * 1e3 / n as f64
     );
     Ok(())
+}
+
+/// Shared knobs of one `profile` run.
+struct ProfileCfg {
+    frames: usize,
+    iters: usize,
+    warmup: usize,
+    seed: u64,
+}
+
+fn profile(argv: Vec<String>) -> Result<()> {
+    let spec = trace_opts(plan_batch_opt(spec_opts(artifacts_opt(
+        ArgSpec::new(
+            "cnndroid profile",
+            "warm-frame profiling: per-layer/per-stage wall times vs the cost model's predictions",
+        )
+        .opt("net", "lenet5", "comma-separated networks (lenet5 | cifar10 | alexnet)")
+        .opt("method", "cpu-gemm", "comma-separated execution specs to profile")
+        .opt("frames", "4", "frames per inference batch")
+        .opt("iters", "8", "timed iterations per engine")
+        .opt("warmup", "2", "warmup iterations per engine")
+        .opt("seed", "7", "synthetic workload (and synthetic-weight) seed")
+        .opt("out", "BENCH_profile.json", "report path for --json")
+        .flag("json", "print the report as JSON and write it to --out")
+        .flag("synthetic", "run on deterministic synthetic weights (no artifacts needed)"),
+    ))));
+    let args = spec.parse_from(argv).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let trace_out = trace_setup(&args)?;
+    let dir = artifacts_dir(&args);
+    // Synthetic weights make the residual report runnable anywhere (CI
+    // builds no artifacts); fall back to them when the manifest is
+    // absent rather than erroring.
+    let manifest = if args.has("synthetic") { None } else { Manifest::load(&dir).ok() };
+    let cfg = ProfileCfg {
+        frames: args.get_usize("frames").max(1),
+        iters: args.get_usize("iters").max(1),
+        warmup: args.get_usize("warmup"),
+        seed: args.get_usize("seed") as u64,
+    };
+    let json = args.has("json");
+    let mut results = Vec::new();
+    for net_name in args.get("net").split(',').map(str::trim) {
+        for method in args.get("method").split(',').map(str::trim) {
+            let exec = apply_spec_knobs(method.parse().map_err(anyhow::Error::new)?, &args)?;
+            results.push(profile_one(net_name, &exec, manifest.as_ref(), &dir, &cfg, !json)?);
+        }
+    }
+    if json {
+        let doc = Json::obj(vec![
+            ("bench", Json::str("profile")),
+            ("frames", Json::num(cfg.frames as f64)),
+            ("iters", Json::num(cfg.iters as f64)),
+            ("synthetic", Json::Bool(manifest.is_none())),
+            ("results", Json::arr(results)),
+        ]);
+        std::fs::write(args.get("out"), doc.dump())?;
+        println!("{}", doc.dump());
+    }
+    finish_trace(trace_out)
+}
+
+/// Profile one (network, spec) pair.  Per-layer wall times come from a
+/// fusion-disabled build of the same plan — stage == layer there, so
+/// the residual table covers every layer even when the profiled spec
+/// fuses — and are joined against the delegate cost model's per-layer
+/// predictions.  The as-specified build supplies the fused-stage
+/// breakdown.
+fn profile_one(
+    net_name: &str,
+    exec: &ExecSpec,
+    manifest: Option<&Manifest>,
+    dir: &Path,
+    cfg: &ProfileCfg,
+    text: bool,
+) -> Result<Json> {
+    let build = |spec: ExecSpec| -> Result<Engine> {
+        let ecfg = EngineConfig::for_spec(spec);
+        match manifest {
+            Some(_) => Engine::from_artifacts(dir, net_name, ecfg),
+            None => Engine::synthetic(net_name, ecfg, cfg.seed),
+        }
+    };
+    let layer_engine = build(exec.clone().with_fusion(false))?;
+    let net = layer_engine.network().clone();
+    let x = synth::random_frames(cfg.frames, net.in_c, net.in_h, net.in_w, cfg.seed);
+    let mut per_layer = measure_stages(&layer_engine, &x, cfg)?;
+    // Reuse the layerwise numbers when the spec already runs unfused.
+    let mut per_stage = if exec.fusion() {
+        measure_stages(&build(exec.clone())?, &x, cfg)?
+    } else {
+        per_layer.clone()
+    };
+    let predicted = layer_predictions(&net, exec, manifest)?;
+
+    // Join measurement and prediction per layer, in network order.
+    // Everything is reported per frame (samples hold secs per batch).
+    let per_frame = 1.0 / cfg.frames as f64;
+    let mut rows = Vec::new();
+    let (mut total_meas, mut total_pred) = (0.0f64, 0.0f64);
+    for (lname, backend, pred) in &predicted {
+        let (p50, p95) = match per_layer.iter_mut().find(|(n, _)| n == lname) {
+            Some((_, s)) => (s.p50() * per_frame, s.percentile(95.0) * per_frame),
+            None => (f64::NAN, f64::NAN),
+        };
+        if p50.is_finite() {
+            total_meas += p50;
+        }
+        total_pred += pred;
+        rows.push((lname.clone(), backend.clone(), p50, p95, *pred));
+    }
+
+    if text {
+        println!(
+            "{} / {exec} — {} frame(s) x {} iters (+{} warmup){}",
+            net.name,
+            cfg.frames,
+            cfg.iters,
+            cfg.warmup,
+            if manifest.is_none() { ", synthetic weights" } else { "" }
+        );
+        println!(
+            "  {:<10} {:<16} {:>10} {:>10} {:>10} {:>9}",
+            "layer", "backend", "p50 ms", "p95 ms", "pred ms", "resid"
+        );
+        for (lname, backend, p50, p95, pred) in &rows {
+            println!(
+                "  {:<10} {:<16} {:>10.4} {:>10.4} {:>10.4} {:>+8.1}%",
+                lname,
+                backend,
+                p50 * 1e3,
+                p95 * 1e3,
+                pred * 1e3,
+                (p50 / pred - 1.0) * 100.0
+            );
+        }
+        println!(
+            "  {:<27} {:>10.4} {:>21.4} {:>+8.1}%",
+            "total",
+            total_meas * 1e3,
+            total_pred * 1e3,
+            (total_meas / total_pred - 1.0) * 100.0
+        );
+        if exec.fusion() {
+            println!("  fused-stage breakdown:");
+            for (name, s) in per_stage.iter_mut() {
+                println!(
+                    "    {:<24} p50 {:>9.4} ms  p95 {:>9.4} ms",
+                    name,
+                    s.p50() * per_frame * 1e3,
+                    s.percentile(95.0) * per_frame * 1e3
+                );
+            }
+        }
+        println!();
+    }
+
+    let layer_rows = rows
+        .iter()
+        .map(|(lname, backend, p50, p95, pred)| {
+            Json::obj(vec![
+                ("layer", Json::str(lname.clone())),
+                ("backend", Json::str(backend.clone())),
+                ("measured_p50_ms", Json::num(p50 * 1e3)),
+                ("measured_p95_ms", Json::num(p95 * 1e3)),
+                ("predicted_ms", Json::num(pred * 1e3)),
+                ("residual_ms", Json::num((p50 - pred) * 1e3)),
+                ("ratio", Json::num(p50 / pred)),
+            ])
+        })
+        .collect();
+    let stage_rows = per_stage
+        .iter_mut()
+        .map(|(name, s)| {
+            Json::obj(vec![
+                ("stage", Json::str(name.clone())),
+                ("p50_ms", Json::num(s.p50() * per_frame * 1e3)),
+                ("p95_ms", Json::num(s.percentile(95.0) * per_frame * 1e3)),
+                ("mean_ms", Json::num(s.mean() * per_frame * 1e3)),
+            ])
+        })
+        .collect();
+    Ok(Json::obj(vec![
+        ("net", Json::str(net.name.clone())),
+        ("spec", Json::str(exec.to_string())),
+        ("layers", Json::arr(layer_rows)),
+        ("stages", Json::arr(stage_rows)),
+        ("measured_ms_per_frame", Json::num(total_meas * 1e3)),
+        ("predicted_ms_per_frame", Json::num(total_pred * 1e3)),
+    ]))
+}
+
+/// Run warmup + timed batches, folding the engine's per-stage wall
+/// times into ordered [`Samples`] (seconds per batch).
+fn measure_stages(
+    engine: &Engine,
+    x: &cnndroid::tensor::Tensor,
+    cfg: &ProfileCfg,
+) -> Result<Vec<(String, Samples)>> {
+    let mut acc: Vec<(String, Samples)> = Vec::new();
+    for it in 0..cfg.warmup + cfg.iters {
+        engine.infer_batch(x)?;
+        if it < cfg.warmup {
+            continue;
+        }
+        for (stage, secs) in engine.last_stage_times() {
+            match acc.iter_mut().find(|(n, _)| *n == stage) {
+                Some((_, s)) => s.push(secs),
+                None => {
+                    let mut s = Samples::new();
+                    s.push(secs);
+                    acc.push((stage, s));
+                }
+            }
+        }
+    }
+    Ok(acc)
+}
+
+/// Per-layer `(layer, backend, predicted secs/frame)` from the delegate
+/// cost model: the partitioner's own assignments for auto specs, its
+/// fixed-method choice (the assignment `ExecutionPlan::build` makes)
+/// for everything else.
+fn layer_predictions(
+    net: &cnndroid::model::network::Network,
+    exec: &ExecSpec,
+    manifest: Option<&Manifest>,
+) -> Result<Vec<(String, String, f64)>> {
+    let dev = exec.device_spec();
+    let mut registry = match manifest {
+        Some(m) => Registry::detect(m),
+        None => Registry::cpu_only(),
+    };
+    if exec.precision() != Precision::F32 {
+        registry = registry.with_q8();
+    }
+    let partitioner = Partitioner::new(&registry, &dev).with_batch(exec.batch());
+    if exec.is_auto() {
+        let report = partitioner.partition(net)?;
+        return Ok(report
+            .assignments
+            .iter()
+            .map(|a| (a.layer.clone(), a.backend.clone(), a.cost_s))
+            .collect());
+    }
+    let method = exec.method_name();
+    let choice = partitioner.fixed_choice(net, method).ok_or_else(|| {
+        anyhow::anyhow!(
+            "no cost model for {method:?} on {} (accelerated methods need their artifacts)",
+            net.name
+        )
+    })?;
+    let backends = registry.backends();
+    Ok(net
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(li, layer)| {
+            let b = &backends[choice[li]];
+            (layer.name().to_string(), b.name().to_string(), b.predict(&dev, net, li))
+        })
+        .collect())
 }

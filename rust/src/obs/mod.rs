@@ -1,0 +1,451 @@
+//! obs — span-based tracing and profiling substrate.
+//!
+//! A process-global span recorder behind a single atomic level gate.
+//! Three layers of the engine emit spans into it:
+//!
+//! ```text
+//!   request  req#42 lenet5              (serving: queue/exec/respond)
+//!     stage  conv1+relu1+pool1          (engine stage loop)
+//!       kernel  gemm.band / im2col ...  (pool-worker band tasks)
+//! ```
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Disabled is free.**  [`enabled`] is one relaxed atomic load;
+//!    [`span_with`] takes the name as a closure so a disabled call
+//!    never formats, never allocates, and never touches the mutex.
+//!    The [`Span`] guard it returns is a `None` that drops to nothing.
+//! 2. **Thread-safe without ceremony.**  Completed spans are pushed
+//!    into one mutex-guarded vector; the lock is held for a push, not
+//!    for the span's lifetime, so worker bands never serialize on it
+//!    while computing.
+//! 3. **Balanced by construction.**  A span is recorded complete
+//!    (begin + end) when its guard drops, so an exported trace can
+//!    never contain an unmatched begin.
+//!
+//! Thread ids are a process-local monotonic counter (stable
+//! `ThreadId::as_u64` is unavailable); the Fig. 5 pipeline's absorbed
+//! events land on two synthetic lanes ([`TID_ACCEL_LANE`],
+//! [`TID_CPU_LANE`]) so the accelerator/CPU overlap picture survives
+//! into the Chrome trace.
+//!
+//! Export: [`chrome_trace`] renders any span slice as Chrome
+//! trace-event JSON (`chrome://tracing` / Perfetto "load trace"), all
+//! `ph: "X"` complete events in microseconds since the process epoch.
+
+use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// How deep the recorder looks.  Ordered: each level includes the ones
+/// above it (`Kernel` records request and stage spans too).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+#[repr(u8)]
+pub enum TraceLevel {
+    /// Record nothing (the default); the span path is a no-op.
+    #[default]
+    Off = 0,
+    /// Request- and stage-granularity spans (engine stage loop, serving
+    /// lifecycle, absorbed pipeline events).
+    Stage = 1,
+    /// Everything, down to per-band kernel tasks on pool workers.
+    Kernel = 2,
+}
+
+impl TraceLevel {
+    /// Canonical lowercase name (the `trace=` segment value).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TraceLevel::Off => "off",
+            TraceLevel::Stage => "stage",
+            TraceLevel::Kernel => "kernel",
+        }
+    }
+
+    /// Parse a `trace=` segment value.
+    pub fn parse(s: &str) -> Option<TraceLevel> {
+        match s {
+            "off" => Some(TraceLevel::Off),
+            "stage" => Some(TraceLevel::Stage),
+            "kernel" => Some(TraceLevel::Kernel),
+            _ => None,
+        }
+    }
+
+    fn from_u8(v: u8) -> TraceLevel {
+        match v {
+            2 => TraceLevel::Kernel,
+            1 => TraceLevel::Stage,
+            _ => TraceLevel::Off,
+        }
+    }
+}
+
+impl std::fmt::Display for TraceLevel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One completed span.
+#[derive(Debug, Clone)]
+pub struct SpanRecord {
+    /// Hierarchy layer: "request" | "stage" | "kernel" | "pipeline".
+    pub cat: &'static str,
+    pub name: String,
+    /// Process-local lane id (see module docs).
+    pub tid: u64,
+    /// Microseconds since the process trace epoch.
+    pub t0_us: u64,
+    pub t1_us: u64,
+    /// Typed attributes, exported under Chrome's `args`.
+    pub args: Vec<(&'static str, Json)>,
+}
+
+/// Synthetic lane for absorbed Fig. 5 accelerator-row events.
+pub const TID_ACCEL_LANE: u64 = 1 << 32;
+/// Synthetic lane for absorbed Fig. 5 CPU-row events.
+pub const TID_CPU_LANE: u64 = (1 << 32) + 1;
+
+/// Recorder capacity: beyond this, spans are counted as dropped rather
+/// than grown without bound (a long-running server with tracing left on
+/// must not leak; `take`/`clear` reset the budget).
+const MAX_SPANS: usize = 1 << 20;
+
+static LEVEL: AtomicU8 = AtomicU8::new(0);
+static DROPPED: AtomicUsize = AtomicUsize::new(0);
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static TID: u64 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+}
+
+fn epoch() -> &'static Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now)
+}
+
+fn store() -> &'static Mutex<Vec<SpanRecord>> {
+    static S: OnceLock<Mutex<Vec<SpanRecord>>> = OnceLock::new();
+    S.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// The current recording level.
+pub fn level() -> TraceLevel {
+    TraceLevel::from_u8(LEVEL.load(Ordering::Relaxed))
+}
+
+/// Would a span at `l` record right now?  One relaxed atomic load —
+/// the whole cost of the disabled path.
+#[inline]
+pub fn enabled(l: TraceLevel) -> bool {
+    l != TraceLevel::Off && LEVEL.load(Ordering::Relaxed) >= l as u8
+}
+
+/// Set the recording level exactly (CLI/tests).
+pub fn set_level(l: TraceLevel) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// Raise the recording level monotonically: an engine asking for
+/// `Stage` must not silence another asking for `Kernel`.
+pub fn set_level_at_least(l: TraceLevel) {
+    LEVEL.fetch_max(l as u8, Ordering::Relaxed);
+}
+
+/// This thread's stable lane id.
+pub fn tid() -> u64 {
+    TID.with(|t| *t)
+}
+
+/// Microseconds since the process trace epoch.
+pub fn now_us() -> u64 {
+    Instant::now().checked_duration_since(*epoch()).map_or(0, |d| d.as_micros() as u64)
+}
+
+/// Convert an externally captured [`Instant`] onto the trace clock
+/// (saturating at 0 for instants predating the epoch).
+pub fn instant_us(t: Instant) -> u64 {
+    t.checked_duration_since(*epoch()).map_or(0, |d| d.as_micros() as u64)
+}
+
+/// RAII span guard: records a complete span when dropped.  Created
+/// disabled it is a no-op carrying no allocation.
+#[must_use = "a span measures the scope it lives in"]
+pub struct Span(Option<Open>);
+
+struct Open {
+    cat: &'static str,
+    name: String,
+    tid: u64,
+    t0_us: u64,
+    args: Vec<(&'static str, Json)>,
+}
+
+impl Span {
+    /// A span that records nothing (what disabled creation returns).
+    pub fn disabled() -> Span {
+        Span(None)
+    }
+
+    /// Is this span actually recording?
+    pub fn is_recording(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// Attach an attribute (no-op when disabled).
+    pub fn arg(mut self, key: &'static str, val: Json) -> Span {
+        if let Some(o) = self.0.as_mut() {
+            o.args.push((key, val));
+        }
+        self
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(o) = self.0.take() {
+            push(SpanRecord {
+                cat: o.cat,
+                name: o.name,
+                tid: o.tid,
+                t0_us: o.t0_us,
+                t1_us: now_us(),
+                args: o.args,
+            });
+        }
+    }
+}
+
+fn push(rec: SpanRecord) {
+    let mut g = store().lock().unwrap();
+    if g.len() >= MAX_SPANS {
+        DROPPED.fetch_add(1, Ordering::Relaxed);
+        return;
+    }
+    g.push(rec);
+}
+
+/// Open a span with a pre-built name.  Prefer [`span_with`] whenever
+/// the name needs formatting — this form still allocates the `String`
+/// even when recording is off, `span_with` does not.
+pub fn span(l: TraceLevel, cat: &'static str, name: &str) -> Span {
+    if !enabled(l) {
+        return Span(None);
+    }
+    Span(Some(Open {
+        cat,
+        name: name.to_string(),
+        tid: tid(),
+        t0_us: now_us(),
+        args: Vec::new(),
+    }))
+}
+
+/// Open a span with a lazily built name: the closure runs only when
+/// the level gate passes, so a disabled call does no formatting and no
+/// allocation — the form every kernel band uses.
+pub fn span_with(l: TraceLevel, cat: &'static str, name: impl FnOnce() -> String) -> Span {
+    if !enabled(l) {
+        return Span(None);
+    }
+    Span(Some(Open { cat, name: name(), tid: tid(), t0_us: now_us(), args: Vec::new() }))
+}
+
+/// Record an already-measured interval (used to absorb the Fig. 5
+/// [`crate::coordinator::pipeline::PipelineTrace`] events onto the
+/// synthetic processor lanes).  Gated at `l` like span creation.
+pub fn record_manual(
+    l: TraceLevel,
+    cat: &'static str,
+    name: String,
+    tid: u64,
+    t0_us: u64,
+    t1_us: u64,
+    args: Vec<(&'static str, Json)>,
+) {
+    if !enabled(l) {
+        return;
+    }
+    push(SpanRecord { cat, name, tid, t0_us, t1_us: t1_us.max(t0_us), args });
+}
+
+/// Drain every recorded span (and reset the drop budget).
+pub fn take() -> Vec<SpanRecord> {
+    DROPPED.store(0, Ordering::Relaxed);
+    std::mem::take(&mut *store().lock().unwrap())
+}
+
+/// Copy the recorded spans without draining.
+pub fn snapshot() -> Vec<SpanRecord> {
+    store().lock().unwrap().clone()
+}
+
+/// Discard all recorded spans.
+pub fn clear() {
+    take();
+}
+
+/// Spans discarded since the last `take`/`clear` because the recorder
+/// was full — nonzero means the exported trace is a prefix.
+pub fn dropped() -> usize {
+    DROPPED.load(Ordering::Relaxed)
+}
+
+/// Render spans as Chrome trace-event JSON (the `chrome://tracing` /
+/// Perfetto format): complete `ph: "X"` events, timestamps and
+/// durations in microseconds, plus thread-name metadata for the
+/// synthetic pipeline lanes.
+pub fn chrome_trace(spans: &[SpanRecord]) -> Json {
+    let mut events: Vec<Json> = Vec::with_capacity(spans.len() + 2);
+    let mut lanes_seen = (false, false);
+    for s in spans {
+        lanes_seen.0 |= s.tid == TID_ACCEL_LANE;
+        lanes_seen.1 |= s.tid == TID_CPU_LANE;
+        let mut fields = vec![
+            ("name", Json::str(s.name.clone())),
+            ("cat", Json::str(s.cat)),
+            ("ph", Json::str("X")),
+            ("ts", Json::num(s.t0_us as f64)),
+            ("dur", Json::num(s.t1_us.saturating_sub(s.t0_us) as f64)),
+            ("pid", Json::num(1.0)),
+            ("tid", Json::num(s.tid as f64)),
+        ];
+        if !s.args.is_empty() {
+            fields.push((
+                "args",
+                Json::obj(s.args.iter().map(|(k, v)| (*k, v.clone())).collect()),
+            ));
+        }
+        events.push(Json::obj(fields));
+    }
+    for (present, lane, label) in [
+        (lanes_seen.0, TID_ACCEL_LANE, "accelerator (Fig. 5 row)"),
+        (lanes_seen.1, TID_CPU_LANE, "cpu swap/relu (Fig. 5 row)"),
+    ] {
+        if present {
+            events.push(Json::obj(vec![
+                ("name", Json::str("thread_name")),
+                ("ph", Json::str("M")),
+                ("pid", Json::num(1.0)),
+                ("tid", Json::num(lane as f64)),
+                ("args", Json::obj(vec![("name", Json::str(label))])),
+            ]));
+        }
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::arr(events)),
+        ("displayTimeUnit", Json::str("ms")),
+    ])
+}
+
+/// Write spans to `path` as Chrome trace-event JSON.
+pub fn write_chrome_trace(path: &std::path::Path, spans: &[SpanRecord]) -> crate::Result<()> {
+    std::fs::write(path, chrome_trace(spans).dump())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Level mutations are process-global; these tests only ever *raise*
+    // the level and assert on uniquely named spans, so they tolerate
+    // any concurrently running test doing the same.
+
+    #[test]
+    fn trace_level_orders_and_round_trips() {
+        assert!(TraceLevel::Off < TraceLevel::Stage);
+        assert!(TraceLevel::Stage < TraceLevel::Kernel);
+        for l in [TraceLevel::Off, TraceLevel::Stage, TraceLevel::Kernel] {
+            assert_eq!(TraceLevel::parse(l.as_str()), Some(l));
+        }
+        assert_eq!(TraceLevel::parse("verbose"), None);
+    }
+
+    #[test]
+    fn spans_record_when_enabled_and_carry_args() {
+        set_level_at_least(TraceLevel::Kernel);
+        {
+            let _s = span(TraceLevel::Kernel, "kernel", "obs-test-unique-a1")
+                .arg("m", Json::num(3.0));
+        }
+        let recs = snapshot();
+        let rec = recs
+            .iter()
+            .find(|r| r.name == "obs-test-unique-a1")
+            .expect("span recorded");
+        assert_eq!(rec.cat, "kernel");
+        assert!(rec.t1_us >= rec.t0_us);
+        assert_eq!(rec.args[0].0, "m");
+    }
+
+    #[test]
+    fn lazily_named_spans_and_manual_records_land() {
+        set_level_at_least(TraceLevel::Stage);
+        {
+            let _s = span_with(TraceLevel::Stage, "stage", || "obs-test-unique-b2".to_string());
+        }
+        record_manual(
+            TraceLevel::Stage,
+            "pipeline",
+            "obs-test-unique-c3".into(),
+            TID_ACCEL_LANE,
+            10,
+            20,
+            vec![],
+        );
+        let recs = snapshot();
+        assert!(recs.iter().any(|r| r.name == "obs-test-unique-b2"));
+        let c = recs.iter().find(|r| r.name == "obs-test-unique-c3").unwrap();
+        assert_eq!(c.tid, TID_ACCEL_LANE);
+        assert_eq!((c.t0_us, c.t1_us), (10, 20));
+    }
+
+    #[test]
+    fn fetch_max_never_lowers_the_level() {
+        set_level_at_least(TraceLevel::Kernel);
+        set_level_at_least(TraceLevel::Stage);
+        assert_eq!(level(), TraceLevel::Kernel);
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json_with_complete_events() {
+        let spans = vec![
+            SpanRecord {
+                cat: "stage",
+                name: "conv1+relu1".into(),
+                tid: 1,
+                t0_us: 5,
+                t1_us: 25,
+                args: vec![("frames", Json::num(4.0))],
+            },
+            SpanRecord {
+                cat: "pipeline",
+                name: "mid f0".into(),
+                tid: TID_ACCEL_LANE,
+                t0_us: 7,
+                t1_us: 9,
+                args: vec![],
+            },
+        ];
+        let j = chrome_trace(&spans);
+        let parsed = Json::parse(&j.dump()).expect("chrome trace parses");
+        let events = parsed.get("traceEvents").as_arr().unwrap();
+        // 2 spans + 1 lane-name metadata event.
+        assert_eq!(events.len(), 3);
+        assert_eq!(events[0].get("ph").as_str(), Some("X"));
+        assert_eq!(events[0].get("dur").as_f64(), Some(20.0));
+        assert_eq!(events[1].get("tid").as_f64(), Some(TID_ACCEL_LANE as f64));
+    }
+
+    #[test]
+    fn distinct_threads_get_distinct_tids() {
+        let here = tid();
+        let there = std::thread::spawn(tid).join().unwrap();
+        assert_ne!(here, there);
+        assert_eq!(here, tid(), "tid stable per thread");
+    }
+}

@@ -34,6 +34,8 @@ use crate::tensor::Tensor;
 use crate::util::json::Json;
 use crate::Result;
 
+use crate::obs::TraceLevel;
+
 use super::spec::{ExecSpec, Precision, SpecError};
 
 /// A built inference session: one network bound to one validated
@@ -58,6 +60,7 @@ impl Session {
             batch: None,
             threads: None,
             tile: None,
+            trace: None,
             record_trace: false,
             preload: true,
         }
@@ -115,6 +118,7 @@ pub struct SessionBuilder {
     batch: Option<usize>,
     threads: Option<usize>,
     tile: Option<usize>,
+    trace: Option<TraceLevel>,
     record_trace: bool,
     preload: bool,
 }
@@ -179,6 +183,13 @@ impl SessionBuilder {
         self
     }
 
+    /// Span-recording level for the [`crate::obs`] recorder
+    /// (composes with every method/knob combination; off by default).
+    pub fn trace(mut self, level: TraceLevel) -> Self {
+        self.trace = Some(level);
+        self
+    }
+
     /// Record per-layer pipeline traces.
     pub fn record_trace(mut self, on: bool) -> Self {
         self.record_trace = on;
@@ -225,6 +236,9 @@ impl SessionBuilder {
         }
         if let Some(t) = self.tile {
             spec = spec.with_tile(t)?;
+        }
+        if let Some(t) = self.trace {
+            spec = spec.with_trace(t)?;
         }
         Ok(spec)
     }
@@ -280,6 +294,13 @@ mod tests {
             .spec()
             .unwrap();
         assert_eq!(spec.to_string(), "basic-simd:nofuse:threads=2");
+
+        let spec = Session::for_net("lenet5")
+            .method("cpu-gemm")
+            .trace(TraceLevel::Kernel)
+            .spec()
+            .unwrap();
+        assert_eq!(spec.to_string(), "cpu-gemm:trace=kernel");
     }
 
     #[test]

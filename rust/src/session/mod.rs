@@ -29,3 +29,7 @@ pub mod spec;
 
 pub use builder::{Session, SessionBuilder};
 pub use spec::{BackendSel, ExecSpec, Precision, SpecError};
+
+// The `trace=` knob's value type lives in [`crate::obs`]; re-exported
+// here because it is part of the spec surface.
+pub use crate::obs::TraceLevel;

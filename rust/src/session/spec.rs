@@ -19,7 +19,8 @@
 //!            | "fuse" | "nofuse"                 fused-stage IR on/off
 //!            | "batch=" <n>                      frames per dispatch the plan serves
 //!            | "threads=" <n>                    kernel thread override
-//!            | "tile=" <n> )                     GEMM tile-width override
+//!            | "tile=" <n>                       GEMM tile-width override
+//!            | "trace=" <level> )                span recording: off | stage | kernel
 //! ```
 //!
 //! Unlike the old splicers, the parser **canonicalizes**: duplicate
@@ -37,6 +38,7 @@
 use std::fmt;
 use std::str::FromStr;
 
+use crate::obs::TraceLevel;
 use crate::simulator::device::{self, DeviceSpec};
 
 /// Which backend(s) may execute the plan.
@@ -82,6 +84,7 @@ pub struct ExecSpec {
     batch: usize,
     threads: Option<usize>,
     tile: Option<usize>,
+    trace: TraceLevel,
 }
 
 /// Typed spec-construction failure: every way a spec can be invalid,
@@ -116,6 +119,8 @@ pub enum SpecError {
     ValueConflict { key: &'static str, first: usize, second: usize },
     /// A `key=value` segment whose value is not a positive integer.
     BadValue { key: &'static str, value: String },
+    /// A `trace=` segment whose value is not a [`TraceLevel`] name.
+    BadTrace { value: String },
     /// The spec's batch exceeds what the selected fixed backend can
     /// take per dispatch (`Capability::max_batch`) — rejected at
     /// session build time instead of partition time.
@@ -160,6 +165,9 @@ impl fmt::Display for SpecError {
             SpecError::BadValue { key, value } => {
                 write!(f, "{key}= expects a positive integer, got {value:?}")
             }
+            SpecError::BadTrace { value } => {
+                write!(f, "trace= expects off | stage | kernel, got {value:?}")
+            }
             SpecError::BatchExceedsBackend { backend, batch, max } => write!(
                 f,
                 "batch {batch} exceeds backend {backend:?}'s per-dispatch ceiling of {max} \
@@ -188,6 +196,7 @@ impl ExecSpec {
             batch: 1,
             threads: None,
             tile: None,
+            trace: TraceLevel::Off,
         }
     }
 
@@ -212,6 +221,7 @@ impl ExecSpec {
             batch: 1,
             threads: None,
             tile: None,
+            trace: TraceLevel::Off,
         })
     }
 
@@ -244,6 +254,12 @@ impl ExecSpec {
     /// GEMM tile-width override (None: kernel default).
     pub fn tile(&self) -> Option<usize> {
         self.tile
+    }
+
+    /// Span-recording level the engine raises the global
+    /// [`crate::obs`] recorder to ([`TraceLevel::Off`] by default).
+    pub fn trace(&self) -> TraceLevel {
+        self.trace
     }
 
     /// Is this the auto-placement selector?
@@ -398,6 +414,20 @@ impl ExecSpec {
         self.tile = Some(tile);
         Ok(self)
     }
+
+    /// Span-recording level (conflicts like the keyword segments: a
+    /// *different* already-set level is rejected, restating dedupes).
+    /// Tracing never changes numerics, only what the recorder sees.
+    pub fn with_trace(mut self, level: TraceLevel) -> Result<ExecSpec, SpecError> {
+        if self.trace != TraceLevel::Off && self.trace != level {
+            return Err(SpecError::SegmentConflict {
+                a: self.trace.as_str(),
+                b: level.as_str(),
+            });
+        }
+        self.trace = level;
+        Ok(self)
+    }
 }
 
 impl fmt::Display for ExecSpec {
@@ -435,6 +465,9 @@ impl fmt::Display for ExecSpec {
         if let Some(t) = self.tile {
             write!(f, ":tile={t}")?;
         }
+        if self.trace != TraceLevel::Off {
+            write!(f, ":trace={}", self.trace)?;
+        }
         Ok(())
     }
 }
@@ -450,6 +483,7 @@ struct Segments {
     batch: Option<usize>,
     threads: Option<usize>,
     tile: Option<usize>,
+    trace: Option<TraceLevel>,
 }
 
 fn parse_value(key: &'static str, value: &str) -> Result<usize, SpecError> {
@@ -545,6 +579,20 @@ impl FromStr for ExecSpec {
                             "tile" => {
                                 merge_value("tile", &mut seen.tile, parse_value("tile", value)?)?
                             }
+                            "trace" => {
+                                let level = TraceLevel::parse(value).ok_or_else(|| {
+                                    SpecError::BadTrace { value: value.to_string() }
+                                })?;
+                                match seen.trace {
+                                    Some(prev) if prev != level => {
+                                        return Err(SpecError::SegmentConflict {
+                                            a: prev.as_str(),
+                                            b: level.as_str(),
+                                        })
+                                    }
+                                    _ => seen.trace = Some(level),
+                                }
+                            }
                             _ => {
                                 return Err(SpecError::UnknownSegment {
                                     seg: seg.to_string(),
@@ -604,6 +652,9 @@ impl FromStr for ExecSpec {
         }
         if let Some(t) = seen.tile {
             spec = spec.with_tile(t)?;
+        }
+        if let Some(t) = seen.trace {
+            spec = spec.with_trace(t)?;
         }
         Ok(spec)
     }
@@ -706,6 +757,35 @@ mod tests {
         assert_eq!(fixed.batch(), 8);
         assert!(!fixed.fusion());
         assert_eq!(fixed.to_string(), "cpu-gemm:nofuse:batch=8");
+    }
+
+    #[test]
+    fn trace_knob_round_trips_and_conflicts() {
+        let spec = parse("delegate:auto:m9:q8:batch=4:trace=kernel");
+        assert_eq!(spec.trace(), TraceLevel::Kernel);
+        assert_eq!(spec.to_string(), "delegate:auto:m9:q8:batch=4:trace=kernel");
+        let fixed = parse("cpu-gemm:trace=stage:nofuse");
+        assert_eq!(fixed.trace(), TraceLevel::Stage);
+        assert_eq!(fixed.to_string(), "cpu-gemm:nofuse:trace=stage");
+        // Default is off and stays out of the canonical form.
+        assert_eq!(parse("cpu-gemm").trace(), TraceLevel::Off);
+        assert_eq!(parse("cpu-gemm:trace=off").to_string(), "cpu-gemm");
+        // Duplicates dedupe, different levels conflict, junk is typed.
+        assert_eq!(parse("cpu-seq:trace=stage:trace=stage").trace(), TraceLevel::Stage);
+        assert!(matches!(
+            "cpu-seq:trace=stage:trace=kernel".parse::<ExecSpec>(),
+            Err(SpecError::SegmentConflict { a: "stage", b: "kernel" })
+        ));
+        assert!(matches!(
+            "cpu-seq:trace=verbose".parse::<ExecSpec>(),
+            Err(SpecError::BadTrace { .. })
+        ));
+        // Modifier mirrors the grammar.
+        assert!(parse("cpu-seq:trace=kernel").with_trace(TraceLevel::Kernel).is_ok());
+        assert!(matches!(
+            parse("cpu-seq:trace=kernel").with_trace(TraceLevel::Stage),
+            Err(SpecError::SegmentConflict { .. })
+        ));
     }
 
     #[test]

@@ -101,7 +101,12 @@ impl Json {
             Json::Bool(true) => out.push_str("true"),
             Json::Bool(false) => out.push_str("false"),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // JSON has no NaN/Infinity literal; emitting one
+                    // would make every downstream parse fail.  An
+                    // absent measurement serializes as null.
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     out.push_str(&format!("{}", *n as i64));
                 } else {
                     out.push_str(&format!("{}", n));
@@ -391,6 +396,14 @@ fn utf8_len(first: u8) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn non_finite_numbers_dump_as_null() {
+        assert_eq!(Json::num(f64::NAN).dump(), "null");
+        assert_eq!(Json::num(f64::INFINITY).dump(), "null");
+        let obj = Json::obj(vec![("x", Json::num(f64::NAN))]);
+        assert!(Json::parse(&obj.dump()).is_ok());
+    }
 
     #[test]
     fn parses_scalars() {

@@ -41,10 +41,16 @@ impl Samples {
     }
 
     pub fn min(&self) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
         self.xs.iter().copied().fold(f64::INFINITY, f64::min)
     }
 
     pub fn max(&self) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
         self.xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
     }
 
@@ -257,6 +263,10 @@ mod tests {
         let mut s = Samples::new();
         assert!(s.mean().is_nan());
         assert!(s.p50().is_nan());
+        // min/max agree with mean on empty sets: NaN, not ±INFINITY
+        // (an empty stage's "min latency" must not print as inf).
+        assert!(s.min().is_nan());
+        assert!(s.max().is_nan());
     }
 
     #[test]

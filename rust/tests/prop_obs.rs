@@ -1,0 +1,212 @@
+//! Property tests on the span-based tracing subsystem
+//! ([`cnndroid::obs`]) and the profile residual report's coverage:
+//!
+//! (a) under randomized multi-threaded engine configs every recorded
+//!     span is balanced (`t1 >= t0`), nested inside its batch's
+//!     "request" span, and per-lane *end* times are monotone in record
+//!     order (spans record when they close, and one thread closes its
+//!     spans in completion order — nesting makes start times go
+//!     backwards by design: a kernel records before its enclosing
+//!     stage, which started earlier);
+//! (b) with tracing off, runs record nothing and stay bit-identical to
+//!     each other (the disabled path is one relaxed atomic load; the
+//!     lazy-name closures never run, so no span strings are built);
+//! (c) the predictions side of `cnndroid profile`'s residual table —
+//!     partitioner assignments for auto specs, `fixed_choice` for
+//!     fixed methods — covers every layer of the LeNet and AlexNet
+//!     plans with no gaps or reordering.
+//!
+//! The recorder's level and store are process-global, so every test
+//! here serializes through `OBS_LOCK` and sets the level it needs
+//! while holding it.  (The library's own unit tests only ever *raise*
+//! the level; asserting on `Off` behavior is what needs the lock.)
+
+use std::sync::Mutex;
+
+use cnndroid::coordinator::{Engine, EngineConfig};
+use cnndroid::data::synth;
+use cnndroid::delegate::{Partitioner, Registry};
+use cnndroid::model::zoo;
+use cnndroid::obs::{self, SpanRecord, TraceLevel};
+use cnndroid::prop_assert;
+use cnndroid::session::ExecSpec;
+use cnndroid::util::prop;
+use cnndroid::util::rng::Pcg;
+
+static OBS_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    OBS_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// A random artifact-free spec over the CPU backends the test
+/// container can always run: f32 GEMM or forced q8, fused or not,
+/// small random plan batch.
+fn random_cpu_spec(rng: &mut Pcg) -> ExecSpec {
+    let mut spec: ExecSpec = if rng.below(2) == 0 {
+        "cpu-gemm".parse().unwrap()
+    } else {
+        "cpu-gemm-q8".parse().unwrap()
+    };
+    if rng.below(2) == 0 {
+        spec = spec.with_fusion(false);
+    }
+    spec
+}
+
+#[test]
+fn spans_balance_nest_and_stay_monotone_per_lane() {
+    let _g = lock();
+    obs::set_level(TraceLevel::Kernel);
+    prop::check("span balance under random engine configs", |rng| {
+        let spec = random_cpu_spec(rng);
+        let batch = 1 + rng.below(3) as usize;
+        let seed = rng.below(1 << 20);
+        let engine = Engine::synthetic("lenet5", EngineConfig::for_spec(spec), seed).unwrap();
+        let net = engine.network().clone();
+        let x = synth::random_frames(batch, net.in_c, net.in_h, net.in_w, seed);
+        obs::clear();
+        engine.infer_batch(&x).unwrap();
+        let spans = obs::take();
+        prop_assert!(!spans.is_empty(), "kernel-level run recorded nothing");
+        let request: Vec<&SpanRecord> = spans.iter().filter(|s| s.cat == "request").collect();
+        prop_assert!(
+            request.len() == 1,
+            "one infer_batch must record exactly one request span, got {}",
+            request.len()
+        );
+        let (r0, r1) = (request[0].t0_us, request[0].t1_us);
+        let mut last_t1_by_tid: Vec<(u64, u64)> = Vec::new();
+        for s in &spans {
+            prop_assert!(s.t1_us >= s.t0_us, "unbalanced span {:?}: t1 < t0", s.name);
+            // Stage and kernel spans both live strictly inside the
+            // batch's request span (the request guard opens before the
+            // stage loop and closes after it).
+            if s.cat != "request" {
+                prop_assert!(
+                    s.t0_us >= r0 && s.t1_us <= r1,
+                    "span {:?} [{}, {}] escapes its request [{r0}, {r1}]",
+                    s.name,
+                    s.t0_us,
+                    s.t1_us
+                );
+            }
+            // Spans record when they *close*, and each lane is a real
+            // thread closing its spans in completion order, so record
+            // order must be t1-monotone within a tid.  (t0 goes
+            // backwards by design under nesting: a kernel span records
+            // before its enclosing stage, which started earlier.)
+            match last_t1_by_tid.iter_mut().find(|(tid, _)| *tid == s.tid) {
+                Some((_, last)) => {
+                    prop_assert!(
+                        s.t1_us >= *last,
+                        "lane {} closed out of order: {} after {}",
+                        s.tid,
+                        s.t1_us,
+                        *last
+                    );
+                    *last = s.t1_us;
+                }
+                None => last_t1_by_tid.push((s.tid, s.t1_us)),
+            }
+        }
+        Ok(())
+    });
+    obs::set_level(TraceLevel::Off);
+}
+
+#[test]
+fn disabled_tracing_records_nothing_and_is_bit_identical() {
+    let _g = lock();
+    obs::set_level(TraceLevel::Off);
+    obs::clear();
+    let spec: ExecSpec = "cpu-gemm".parse().unwrap();
+    let engine = Engine::synthetic("lenet5", EngineConfig::for_spec(spec), 11).unwrap();
+    let net = engine.network().clone();
+    let x = synth::random_frames(2, net.in_c, net.in_h, net.in_w, 11);
+    let a = engine.infer_batch(&x).unwrap();
+    let b = engine.infer_batch(&x).unwrap();
+    // Bit-identical across repeat runs: the disabled instrumentation
+    // must not perturb the numeric path in any way.
+    assert_eq!(a.max_abs_diff(&b), 0.0, "repeat runs diverged with tracing off");
+    assert!(
+        obs::snapshot().is_empty(),
+        "tracing off still recorded {} span(s)",
+        obs::snapshot().len()
+    );
+    assert_eq!(obs::dropped(), 0, "tracing off counted dropped spans");
+}
+
+#[test]
+fn raising_level_mid_process_starts_recording() {
+    let _g = lock();
+    obs::set_level(TraceLevel::Off);
+    obs::clear();
+    let spec: ExecSpec = "cpu-gemm".parse().unwrap();
+    let engine = Engine::synthetic("lenet5", EngineConfig::for_spec(spec), 3).unwrap();
+    let net = engine.network().clone();
+    let x = synth::random_frames(1, net.in_c, net.in_h, net.in_w, 3);
+    engine.infer_batch(&x).unwrap();
+    assert!(obs::snapshot().is_empty(), "off run recorded spans");
+    obs::set_level_at_least(TraceLevel::Stage);
+    engine.infer_batch(&x).unwrap();
+    let spans = obs::take();
+    assert!(
+        spans.iter().any(|s| s.cat == "stage"),
+        "stage level recorded no stage spans"
+    );
+    assert!(
+        !spans.iter().any(|s| s.cat == "kernel"),
+        "stage level must not record kernel-band spans"
+    );
+    obs::set_level(TraceLevel::Off);
+}
+
+/// The measured side of the residual table: a fusion-disabled engine
+/// reports one stage per plan layer, in network order, so the join
+/// against per-layer predictions can never miss a row.
+#[test]
+fn layerwise_stage_times_cover_every_lenet_layer() {
+    let _g = lock();
+    obs::set_level(TraceLevel::Off);
+    for method in ["cpu-gemm", "cpu-gemm-q8"] {
+        let spec: ExecSpec = method.parse().unwrap();
+        let engine =
+            Engine::synthetic("lenet5", EngineConfig::for_spec(spec.with_fusion(false)), 5)
+                .unwrap();
+        let net = engine.network().clone();
+        let x = synth::random_frames(1, net.in_c, net.in_h, net.in_w, 5);
+        engine.infer_batch(&x).unwrap();
+        let stages: Vec<String> =
+            engine.last_stage_times().into_iter().map(|(n, _)| n).collect();
+        let layers: Vec<String> =
+            net.layers.iter().map(|l| l.name().to_string()).collect();
+        assert_eq!(stages, layers, "{method}: unfused stages != layers");
+    }
+}
+
+/// The predictions side: auto-plan assignments and the fixed-method
+/// choice both cover every layer of LeNet and AlexNet, in order —
+/// exactly the rows `cnndroid profile` joins measurements against.
+#[test]
+fn residual_predictions_cover_every_layer_of_lenet_and_alexnet() {
+    let registry = Registry::simulated().with_q8();
+    let dev = ExecSpec::auto().device_spec();
+    let partitioner = Partitioner::new(&registry, &dev);
+    for name in ["lenet5", "alexnet"] {
+        let net = zoo::by_name(name).unwrap();
+        let layers: Vec<&str> = net.layers.iter().map(|l| l.name()).collect();
+        let report = partitioner.partition(&net).unwrap();
+        let assigned: Vec<&str> = report.assignments.iter().map(|a| a.layer.as_str()).collect();
+        assert_eq!(assigned, layers, "{name}: auto assignments miss layers");
+        for a in &report.assignments {
+            assert!(a.cost_s.is_finite() && a.cost_s >= 0.0, "{name}/{}: bad cost", a.layer);
+        }
+        for method in ["cpu-gemm", "cpu-gemm-q8"] {
+            let choice = partitioner
+                .fixed_choice(&net, method)
+                .unwrap_or_else(|| panic!("{name}: no fixed choice for {method}"));
+            assert_eq!(choice.len(), layers.len(), "{name}/{method}: choice length");
+        }
+    }
+}
