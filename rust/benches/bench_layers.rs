@@ -10,11 +10,15 @@
 //!
 //! The kernel-core section also writes `BENCH_kernels.json` (per-shape
 //! direct vs im2col times and speedups) so the perf trajectory is
-//! tracked in CI from this PR on.
+//! tracked in CI from this PR on; the winograd and simd sections
+//! likewise emit `BENCH_winograd.json` (F(2,3) vs the best baseline
+//! lowering on the 3x3 stride-1 shapes, plus the accuracy guardrail)
+//! and `BENCH_simd.json` (GEMM micro-kernel tiles, tagged with whether
+//! the `portable-simd` lanes were compiled in).
 
 use cnndroid::cpu::{par, seq};
 use cnndroid::kernels::{
-    self, ConvSource, KernelOpts, PackedConv, PackedConvQ8, PackedFcQ8, TailOp,
+    self, ConvSource, KernelOpts, PackedConv, PackedConvQ8, PackedConvWg, PackedFcQ8, TailOp,
 };
 use cnndroid::model::network::PoolMode;
 use cnndroid::model::manifest::{default_dir, Manifest};
@@ -112,6 +116,80 @@ fn q8_conv_case(
         ("q8_ms", Json::num(q.as_secs_f64() * 1e3)),
         ("speedup", Json::num(f.as_secs_f64() / q.as_secs_f64())),
     ]))
+}
+
+/// Direct vs im2col vs Winograd F(2,3) on one conv shape; the
+/// winograd case only runs when the shape is eligible (3x3 stride-1),
+/// so ineligible controls record `eligible: false` with the two
+/// baseline lowerings only.
+fn winograd_conv_case(
+    b: &mut Bench,
+    name: &str,
+    spec: &cnndroid::model::network::ConvSpec,
+    seed: u64,
+) -> Option<Json> {
+    let x = random(vec![1, spec.in_c, spec.in_h, spec.in_w], seed);
+    let w = random(vec![spec.nk, spec.in_c, spec.kh, spec.kw], seed + 1);
+    let bias = random(vec![spec.nk], seed + 2);
+    let packed = PackedConv::pack(spec, &w, &bias);
+    let eligible = kernels::winograd_supported(spec);
+    let direct_name = format!("winograd/{name}/direct-tiled");
+    let im2col_name = format!("winograd/{name}/im2col-tiled");
+    let wino_name = format!("winograd/{name}/winograd-tiled");
+    b.case(&direct_name, || {
+        kernels::conv_direct(&x, &w, &bias, spec, KernelOpts::tiled());
+    });
+    b.case(&im2col_name, || {
+        kernels::conv_im2col(&x, &packed, KernelOpts::tiled());
+    });
+    let wino_ms = if eligible {
+        let packed_wg = PackedConvWg::pack(spec, &w, &bias);
+        b.case(&wino_name, || {
+            kernels::conv_winograd(&x, &packed_wg, KernelOpts::tiled());
+        });
+        b.mean_of(&wino_name)
+    } else {
+        None
+    };
+    let (Some(direct), Some(lowered)) = (b.mean_of(&direct_name), b.mean_of(&im2col_name)) else {
+        return None;
+    };
+    let mut fields = vec![
+        ("layer", Json::str(name)),
+        ("signature", Json::str(spec.signature())),
+        ("eligible", Json::Bool(eligible)),
+        ("direct_ms", Json::num(direct.as_secs_f64() * 1e3)),
+        ("im2col_ms", Json::num(lowered.as_secs_f64() * 1e3)),
+    ];
+    if let Some(wg) = wino_ms {
+        // The acceptance bar compares winograd against the *best*
+        // baseline lowering, not a strawman.
+        let best = direct.as_secs_f64().min(lowered.as_secs_f64());
+        fields.push(("winograd_ms", Json::num(wg.as_secs_f64() * 1e3)));
+        fields.push(("speedup_vs_best", Json::num(best / wg.as_secs_f64())));
+    }
+    Some(Json::obj(fields))
+}
+
+/// The small 3x3 stride-1 digit-shaped net the Winograd guardrail can
+/// exercise its real transform path on (LeNet's 5x5 convs all fall
+/// back, which would make the guardrail record vacuous).
+fn wino_digit_net() -> cnndroid::model::network::Network {
+    use cnndroid::model::network::{Layer, Network};
+    Network {
+        name: "wino-digits".into(),
+        in_c: 1,
+        in_h: 28,
+        in_w: 28,
+        classes: 10,
+        layers: vec![
+            Layer::Conv { name: "conv1".into(), nk: 8, kh: 3, kw: 3, stride: 1, pad: 1, relu: true },
+            Layer::Pool { name: "pool1".into(), mode: PoolMode::Max, size: 2, stride: 2, relu: false },
+            Layer::Conv { name: "conv2".into(), nk: 16, kh: 3, kw: 3, stride: 1, pad: 1, relu: true },
+            Layer::Pool { name: "pool2".into(), mode: PoolMode::Max, size: 2, stride: 2, relu: false },
+            Layer::Fc { name: "fc1".into(), out: 10, relu: false },
+        ],
+    }
 }
 
 fn main() {
@@ -238,6 +316,119 @@ fn main() {
             Err(e) => eprintln!("  (could not write {path}: {e})"),
         }
         b.speedup_table("q8/alexnet-fc6/gemm-f32-tiled");
+    }
+
+    // --- winograd: F(2,3) vs the direct/im2col lowerings on the 3x3
+    //     stride-1 shapes (AlexNet conv3-5, the ISSUE-7 acceptance
+    //     shapes) plus LeNet conv2 as the ineligible 5x5 control, and
+    //     the fixture-set accuracy guardrail on a net whose convs
+    //     actually take the transform path.  Emits
+    //     BENCH_winograd.json. ---
+    let mut wg_records = Vec::new();
+    {
+        if let Some(r) = winograd_conv_case(&mut b, "alexnet-conv3", &pick("conv3"), 130) {
+            wg_records.push(r);
+        }
+        if let Some(r) = winograd_conv_case(&mut b, "alexnet-conv4", &pick("conv4"), 134) {
+            wg_records.push(r);
+        }
+        if let Some(r) = winograd_conv_case(&mut b, "alexnet-conv5", &pick("conv5"), 138) {
+            wg_records.push(r);
+        }
+        if let Some(r) = winograd_conv_case(&mut b, le_label.as_str(), &lespec, 142) {
+            wg_records.push(r);
+        }
+    }
+    if !wg_records.is_empty() {
+        let net = wino_digit_net();
+        let params = cnndroid::model::weights::Params::synthetic(&net, 45, 0.1);
+        let (agree, total) =
+            cnndroid::delegate::winograd_agreement(&net, &params).expect("guardrail runs");
+        println!(
+            "  winograd guardrail: {agree}/{total} top-1 agreement vs f32 im2col on the fixture set"
+        );
+        let doc = Json::obj(vec![
+            ("bench", Json::str("bench_layers/winograd")),
+            ("unit", Json::str("ms")),
+            (
+                "guardrail",
+                Json::obj(vec![
+                    ("net", Json::str("wino-digits")),
+                    ("fixtures", Json::str("canonical digits 0-9")),
+                    ("agree", Json::num(agree as f64)),
+                    ("total", Json::num(total as f64)),
+                    ("top1_agreement", Json::num(agree as f64 / total.max(1) as f64)),
+                ]),
+            ),
+            ("cases", Json::arr(wg_records)),
+        ]);
+        let path = "BENCH_winograd.json";
+        match std::fs::write(path, doc.dump()) {
+            Ok(()) => println!("  (winograd results written to {path})"),
+            Err(e) => eprintln!("  (could not write {path}: {e})"),
+        }
+        b.speedup_table("winograd/alexnet-conv3/im2col-tiled");
+    }
+
+    // --- simd: the GEMM micro-kernel tiles under the build's lane
+    //     config.  The `portable-simd` feature swaps the scalar 4x8
+    //     micro-kernel for std::simd lanes at compile time (the scalar
+    //     fallback is bit-identical, so one binary carries one
+    //     implementation); the JSON records which was compiled in so
+    //     CI can diff the two builds' artifacts.  Shapes: AlexNet
+    //     conv3's im2col GEMM (384x2304 x 2304x169) and the fc6 matvec
+    //     through the q8 path.  Emits BENCH_simd.json. ---
+    {
+        let (m, k, n) = (384usize, 2304usize, 169usize);
+        let ga = random(vec![m, k], 150);
+        let gb = random(vec![k, n], 151);
+        let f32_seq = "simd/gemm-384x2304x169/f32-seq";
+        let f32_tiled = "simd/gemm-384x2304x169/f32-tiled";
+        b.case(f32_seq, || {
+            kernels::matmul(&ga, &gb, KernelOpts::seq());
+        });
+        b.case(f32_tiled, || {
+            kernels::matmul(&ga, &gb, KernelOpts::tiled());
+        });
+        let (d_in, d_out) = (9216usize, 4096usize);
+        let fx = random(vec![1, d_in], 154);
+        let fw = random(vec![d_in, d_out], 155);
+        let fb = random(vec![d_out], 156);
+        let packed_fc = PackedFcQ8::pack(&fw, &fb, true);
+        let q8_tiled = "simd/fc6-9216x4096/q8-tiled";
+        b.case(q8_tiled, || {
+            kernels::fc_q8(&fx, &packed_fc, KernelOpts::tiled());
+        });
+        if let (Some(gs), Some(gt), Some(qt)) =
+            (b.mean_of(f32_seq), b.mean_of(f32_tiled), b.mean_of(q8_tiled))
+        {
+            let doc = Json::obj(vec![
+                ("bench", Json::str("bench_layers/simd")),
+                ("unit", Json::str("ms")),
+                ("simd_enabled", Json::Bool(cfg!(feature = "portable-simd"))),
+                ("cases", Json::arr(vec![
+                    Json::obj(vec![
+                        ("case", Json::str("gemm-384x2304x169")),
+                        ("kind", Json::str("f32-gemm")),
+                        ("seq_ms", Json::num(gs.as_secs_f64() * 1e3)),
+                        ("tiled_ms", Json::num(gt.as_secs_f64() * 1e3)),
+                    ]),
+                    Json::obj(vec![
+                        ("case", Json::str("fc6-9216x4096")),
+                        ("kind", Json::str("q8-gemm")),
+                        ("tiled_ms", Json::num(qt.as_secs_f64() * 1e3)),
+                    ]),
+                ])),
+            ]);
+            let path = "BENCH_simd.json";
+            match std::fs::write(path, doc.dump()) {
+                Ok(()) => println!(
+                    "  (simd results written to {path}; portable-simd {})",
+                    if cfg!(feature = "portable-simd") { "ON" } else { "off — scalar micro-kernels" }
+                ),
+                Err(e) => eprintln!("  (could not write {path}: {e})"),
+            }
+        }
     }
 
     // --- fusion: conv→ReLU→pool chains fused vs unfused (the stage-IR

@@ -211,10 +211,17 @@ impl Engine {
         let fuse_plan = spec.fusion();
         let plan = match spec.backend() {
             BackendSel::Auto { .. } => {
-                let q8_params =
-                    if spec.precision() == Precision::Q8Opt { Some(&params) } else { None };
+                // The fallback layer runs the guardrails internally,
+                // gated on what the spec opted into (q8 and/or
+                // Winograd) — it only needs the weights when at least
+                // one gated backend is requested.
+                let guard_params = if spec.precision() == Precision::Q8Opt || spec.winograd() {
+                    Some(&params)
+                } else {
+                    None
+                };
                 let outcome =
-                    crate::delegate::plan_or_fallback(manifest, &net, &spec, q8_params)?;
+                    crate::delegate::plan_or_fallback(manifest, &net, &spec, guard_params)?;
                 for note in &outcome.notes {
                     eprintln!("[engine] {}/{method}: {note}", net.name);
                 }
@@ -270,11 +277,25 @@ impl Engine {
             .filter(|l| l.on_q8())
             .map(|l| l.name().to_string())
             .collect();
-        let mut packed = if im2col_convs.is_empty() && q8_layers.is_empty() {
+        let wg_convs: std::collections::BTreeSet<String> = plan
+            .layers
+            .iter()
+            .filter_map(|l| match l {
+                LayerPlan::ConvCpu { name, variant: KernelVariant::Winograd, .. } => {
+                    Some(name.clone())
+                }
+                _ => None,
+            })
+            .collect();
+        let mut packed = if im2col_convs.is_empty() && q8_layers.is_empty() && wg_convs.is_empty()
+        {
             PackedModel::default()
         } else {
             PackedModel::prepare_mixed(&net, &params, Some(&im2col_convs), Some(&q8_layers))?
         };
+        if !wg_convs.is_empty() {
+            packed.prepare_winograd(&net, &params, Some(&wg_convs))?;
+        }
 
         // Group the plan into fused stages and cache each conv-led
         // stage's tail ops alongside its packed weights, so
@@ -483,14 +504,22 @@ impl Engine {
         }
         let head = self.plan.layers[st.start].clone();
         match head {
-            LayerPlan::ConvCpu { name, tiled, .. } => {
+            LayerPlan::ConvCpu { name, variant, tiled, .. } => {
                 let opts = self.kopts(tiled);
-                let pc = self
-                    .packed
-                    .conv(&name)
-                    .ok_or_else(|| anyhow::anyhow!("no packed conv for {name}"))?;
                 let ops = self.stage_ops(&name, st)?;
-                Ok(kernels::conv_stage(&act, kernels::ConvSource::F32(pc), &ops, opts))
+                let src = match variant {
+                    KernelVariant::Winograd => kernels::ConvSource::Wg(
+                        self.packed
+                            .conv_wg(&name)
+                            .ok_or_else(|| anyhow::anyhow!("no packed wg conv for {name}"))?,
+                    ),
+                    _ => kernels::ConvSource::F32(
+                        self.packed
+                            .conv(&name)
+                            .ok_or_else(|| anyhow::anyhow!("no packed conv for {name}"))?,
+                    ),
+                };
+                Ok(kernels::conv_stage(&act, src, &ops, opts))
             }
             LayerPlan::ConvCpuQ8 { name, .. } => {
                 let pc = self
@@ -562,6 +591,13 @@ impl Engine {
                             .get(&name)
                             .ok_or_else(|| anyhow::anyhow!("missing weights for {name}"))?;
                         Ok(kernels::conv_direct(&act, w, b, &spec, opts))
+                    }
+                    KernelVariant::Winograd => {
+                        let pw = self
+                            .packed
+                            .conv_wg(&name)
+                            .ok_or_else(|| anyhow::anyhow!("no packed wg conv for {name}"))?;
+                        Ok(kernels::conv_winograd(&act, pw, opts))
                     }
                 }
             }

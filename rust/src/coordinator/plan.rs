@@ -273,12 +273,17 @@ impl ExecutionPlan {
     }
 
     /// Can this plan entry head a fused stage?  CPU convs lowered to
-    /// im2col (f32 or q8) own a banded GEMM epilogue the tail can
-    /// consume; direct-nest and accelerator convs cannot.
+    /// im2col (f32 or q8) or Winograd own a banded epilogue the tail
+    /// can consume (Winograd bands recompute boundary tiles into
+    /// private scratch — see [`crate::kernels::winograd`]); direct-nest
+    /// and accelerator convs cannot.
     fn fusable_head(lp: &LayerPlan) -> bool {
         matches!(
             lp,
-            LayerPlan::ConvCpu { variant: KernelVariant::Im2col, .. } | LayerPlan::ConvCpuQ8 { .. }
+            LayerPlan::ConvCpu {
+                variant: KernelVariant::Im2col | KernelVariant::Winograd,
+                ..
+            } | LayerPlan::ConvCpuQ8 { .. }
         )
     }
 

@@ -28,6 +28,15 @@ impl ForwardOpts {
     pub fn fast() -> ForwardOpts {
         ForwardOpts { variant: KernelVariant::Im2col, kernel: KernelOpts::tiled() }
     }
+
+    /// The Winograd F(2,3) path, tile-parallel: eligible 3x3 stride-1
+    /// convs run the transform-domain lowering (from the
+    /// [`PackedModel::prepare_winograd`] cache), everything else falls
+    /// back to im2col — the forward path the numerics guardrail
+    /// compares against [`ForwardOpts::fast`].
+    pub fn winograd() -> ForwardOpts {
+        ForwardOpts { variant: KernelVariant::Winograd, kernel: KernelOpts::tiled() }
+    }
 }
 
 /// Run the full forward path single-threaded.  `x` is (N, C, H, W);
@@ -86,6 +95,20 @@ pub fn forward_packed(
                             .ok_or_else(|| anyhow::anyhow!("no packed conv for {name}"))?;
                         kernels::conv_im2col(&h, pc, fo.kernel)
                     }
+                    KernelVariant::Winograd => match packed.conv_wg(name) {
+                        // Eligible 3x3 stride-1 conv with a transformed
+                        // weight cache.
+                        Some(pw) => kernels::conv_winograd(&h, pw, fo.kernel),
+                        // Ineligible geometry: the Winograd forward
+                        // path degrades to im2col so whole networks
+                        // still run end to end.
+                        None => {
+                            let pc = packed
+                                .conv(name)
+                                .ok_or_else(|| anyhow::anyhow!("no packed conv for {name}"))?;
+                            kernels::conv_im2col(&h, pc, fo.kernel)
+                        }
+                    },
                 };
             }
             Layer::Pool { mode, size, stride, relu, .. } => {
@@ -249,6 +272,21 @@ mod tests {
         let fast = forward_packed(&net, &params, &packed, &x, &ForwardOpts::fast()).unwrap();
         let diff = fast.max_abs_diff(&baseline);
         assert!(diff < 1e-3, "fast vs baseline diff {diff}");
+    }
+
+    #[test]
+    fn winograd_variant_falls_back_to_im2col_where_ineligible() {
+        // LeNet's convs are 5x5, so the Winograd forward path must
+        // degrade to im2col on every layer — bit-identically.
+        let net = zoo::lenet5();
+        let params = crate::model::weights::Params::synthetic(&net, 7, 0.1);
+        let mut packed = PackedModel::prepare(&net, &params).unwrap();
+        packed.prepare_winograd(&net, &params, None).unwrap();
+        assert_eq!(packed.wg_len(), 0, "no eligible convs in lenet5");
+        let x = crate::data::synth::random_frames(2, 1, 28, 28, 5);
+        let fast = forward_packed(&net, &params, &packed, &x, &ForwardOpts::fast()).unwrap();
+        let wino = forward_packed(&net, &params, &packed, &x, &ForwardOpts::winograd()).unwrap();
+        assert_eq!(fast, wino, "fallback path must be bit-identical to im2col");
     }
 
     #[test]

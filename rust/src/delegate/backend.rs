@@ -471,6 +471,100 @@ impl Backend for CpuGemmQ8Backend {
 }
 
 // ---------------------------------------------------------------------
+// CPU Winograd F(2,3) (transform-domain conv lowering)
+// ---------------------------------------------------------------------
+
+/// Winograd F(2,3) conv kernels: 3x3 stride-1 convolutions through the
+/// transform-domain lowering ([`crate::kernels::winograd`]) at 2.25x
+/// fewer GEMM MACs, weights transformed once at pack time.  Registered
+/// *conditionally*, exactly like [`CpuGemmQ8Backend`]:
+/// `delegate:auto...:wino` adds it only after the numerics guardrail
+/// ([`super::winograd_eligible`]) confirms 100% top-1 agreement with
+/// the f32 im2col reference on the fixture set (Winograd is
+/// band-invariant but not bit-identical to im2col).  Once in the
+/// registry, the DP places it per layer: deep 3x3 layers (AlexNet
+/// conv3–5) win on MAC count, everything else — other geometries,
+/// transform-dominated small layers — stays where it was.
+pub struct CpuWinogradBackend {
+    cap: Capability,
+}
+
+impl CpuWinogradBackend {
+    pub fn new() -> CpuWinogradBackend {
+        CpuWinogradBackend {
+            cap: Capability {
+                kinds: vec!["conv"],
+                layout: DataLayout::Nchw,
+                max_batch: None,
+                needs_artifacts: false,
+                kernel: KernelVariant::Winograd,
+                fused_epilogue: true,
+            },
+        }
+    }
+}
+
+impl Default for CpuWinogradBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Backend for CpuWinogradBackend {
+    fn name(&self) -> &str {
+        "cpu-wino"
+    }
+
+    fn capability(&self) -> &Capability {
+        &self.cap
+    }
+
+    fn supports(&self, net: &Network, li: usize) -> bool {
+        self.cap.supports_kind(net.layers[li].kind())
+            && conv_spec_for(net, li)
+                .is_some_and(|spec| crate::kernels::winograd_supported(&spec))
+    }
+
+    fn predict(&self, dev: &DeviceSpec, net: &Network, li: usize) -> f64 {
+        // Same reproducibility rule as CpuGemmBackend: thread count
+        // from the device profile, not the host pool.
+        let threads = dev.cpu_big_cores.max(1) as usize;
+        match &net.layers[li] {
+            Layer::Conv { .. } => {
+                let spec = conv_spec_for(net, li).expect("conv layer has a spec");
+                if crate::kernels::winograd_supported(&spec) {
+                    cost::conv_time_cpu_winograd(dev, &spec, threads)
+                } else {
+                    f64::INFINITY
+                }
+            }
+            _ => f64::INFINITY,
+        }
+    }
+
+    fn lower(&self, net: &Network, li: usize) -> Result<LayerPlan> {
+        match &net.layers[li] {
+            Layer::Conv { name, .. } => {
+                let spec = conv_spec_for(net, li).expect("conv layer has a spec");
+                anyhow::ensure!(
+                    crate::kernels::winograd_supported(&spec),
+                    "cpu-wino cannot lower {name}: not a 3x3 stride-1 conv"
+                );
+                Ok(LayerPlan::ConvCpu {
+                    name: name.clone(),
+                    spec,
+                    variant: KernelVariant::Winograd,
+                    tiled: true,
+                })
+            }
+            other => {
+                anyhow::bail!("cpu-wino cannot run {} layer {}", other.kind(), other.name())
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
 // Accelerator (PJRT runtime artifacts, one backend per method)
 // ---------------------------------------------------------------------
 
@@ -769,6 +863,62 @@ mod tests {
                     "{}: q8 should lose dispatch-dominated convs",
                     layer.name()
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn cpu_wino_supports_exactly_the_3x3_stride1_convs() {
+        let b = CpuWinogradBackend::new();
+        assert_eq!(b.capability().kernel, crate::kernels::KernelVariant::Winograd);
+        assert!(b.capability().fused_epilogue, "wino convs own a banded epilogue");
+        // AlexNet: conv3/4/5 are 3x3 stride-1; conv1 (11x11/s4) and
+        // conv2 (5x5) are not; non-conv layers never qualify.
+        let alex = zoo::alexnet();
+        for (li, layer) in alex.layers.iter().enumerate() {
+            let want = matches!(layer.name(), "conv3" | "conv4" | "conv5");
+            assert_eq!(b.supports(&alex, li), want, "{}", layer.name());
+        }
+        // LeNet's 5x5 convs are all ineligible.
+        let lenet = zoo::lenet5();
+        for li in 0..lenet.layers.len() {
+            assert!(!b.supports(&lenet, li), "{}", lenet.layers[li].name());
+        }
+    }
+
+    #[test]
+    fn cpu_wino_lowers_eligible_convs_and_rejects_the_rest() {
+        let b = CpuWinogradBackend::new();
+        let alex = zoo::alexnet();
+        let li = alex.layers.iter().position(|l| l.name() == "conv3").unwrap();
+        match b.lower(&alex, li).unwrap() {
+            LayerPlan::ConvCpu { name, variant, tiled, .. } => {
+                assert_eq!(name, "conv3");
+                assert_eq!(variant, crate::kernels::KernelVariant::Winograd);
+                assert!(tiled);
+            }
+            other => panic!("expected ConvCpu, got {other:?}"),
+        }
+        let conv1 = alex.layers.iter().position(|l| l.name() == "conv1").unwrap();
+        assert!(b.lower(&alex, conv1).is_err(), "11x11/s4 must not lower on cpu-wino");
+        assert!(b.lower(&alex, conv1 + 1).is_err(), "non-conv must not lower on cpu-wino");
+    }
+
+    #[test]
+    fn cpu_wino_beats_cpu_gemm_exactly_on_the_deep_3x3_layers() {
+        // The placement contract: AlexNet conv3/4/5 are predicted
+        // faster through the F(2,3) lowering; ineligible layers cost
+        // infinity so the DP can never pick them.
+        let dev = galaxy_note4();
+        let gemm = CpuGemmBackend::new();
+        let wino = CpuWinogradBackend::new();
+        let alex = zoo::alexnet();
+        for (li, layer) in alex.layers.iter().enumerate() {
+            let w = wino.predict(&dev, &alex, li);
+            if matches!(layer.name(), "conv3" | "conv4" | "conv5") {
+                assert!(w < gemm.predict(&dev, &alex, li), "{}", layer.name());
+            } else {
+                assert!(w.is_infinite(), "{}", layer.name());
             }
         }
     }

@@ -17,10 +17,10 @@ use crate::coordinator::plan::{ExecutionPlan, MissingArtifact};
 use crate::model::manifest::Manifest;
 use crate::model::network::Network;
 use crate::model::weights::Params;
-use crate::session::spec::ExecSpec;
+use crate::session::spec::{ExecSpec, Precision};
 use crate::Result;
 
-use super::{plan_auto_with, q8_agreement};
+use super::{plan_auto_with, q8_agreement, winograd_agreement};
 
 /// A plan plus the human-readable trail of any fallback decisions.
 #[derive(Debug, Clone)]
@@ -41,23 +41,25 @@ pub fn is_retryable(err: &anyhow::Error) -> bool {
 /// spec carries everything the old `(method, dev)` pair did, plus the
 /// batch the partitioner must enforce `max_batch` against.
 ///
-/// `q8_params`: pass the loaded weights to let the quantized backend
-/// compete in auto plans (the `Precision::Q8Opt` opt-in).  The
-/// accuracy guardrail runs here — `cpu-gemm-q8` only joins the
-/// registry when top-1 agreement with f32 is 100% on the fixture set —
-/// and its verdict is recorded in the notes.  `None` keeps the
+/// `guard_params`: pass the loaded weights to let the guardrail-gated
+/// opt-in backends compete in auto plans.  Which opt-ins are *live* is
+/// read off the spec itself — `cpu-gemm-q8` when
+/// [`Precision::Q8Opt`], `cpu-wino` when [`ExecSpec::winograd`] — and
+/// each backend only joins the registry after its guardrail confirms
+/// 100% top-1 agreement with the f32 im2col reference on the fixture
+/// set; every verdict is recorded in the notes.  `None` keeps the
 /// f32-only registries (default, and the fallback re-plan path).
 pub fn plan_or_fallback(
     manifest: &Manifest,
     net: &Network,
     spec: &ExecSpec,
-    q8_params: Option<&Params>,
+    guard_params: Option<&Params>,
 ) -> Result<FallbackOutcome> {
     let mut notes = Vec::new();
     let dev = spec.device_spec();
-    let q8 = match q8_params {
-        None => false,
-        Some(params) => match q8_agreement(net, params) {
+    let q8 = match (spec.precision() == Precision::Q8Opt, guard_params) {
+        (false, _) | (true, None) => false,
+        (true, Some(params)) => match q8_agreement(net, params) {
             Ok((agree, total)) if total > 0 && agree == total => true,
             Ok((agree, total)) => {
                 notes.push(format!(
@@ -72,8 +74,36 @@ pub fn plan_or_fallback(
             }
         },
     };
+    let any_wg_conv =
+        || net.conv_specs().iter().any(|(_, s)| crate::kernels::winograd_supported(s));
+    let wino = match (spec.winograd(), guard_params) {
+        (false, _) | (true, None) => false,
+        (true, Some(params)) => {
+            if !any_wg_conv() {
+                notes.push(
+                    "wino requested but no 3x3 stride-1 convs; keeping im2col".to_string(),
+                );
+                false
+            } else {
+                match winograd_agreement(net, params) {
+                    Ok((agree, total)) if total > 0 && agree == total => true,
+                    Ok((agree, total)) => {
+                        notes.push(format!(
+                            "wino requested but guardrail failed ({agree}/{total} top-1 \
+                             agreement); keeping im2col"
+                        ));
+                        false
+                    }
+                    Err(e) => {
+                        notes.push(format!("wino guardrail errored ({e:#}); keeping im2col"));
+                        false
+                    }
+                }
+            }
+        }
+    };
     if spec.is_auto() {
-        match plan_auto_with(manifest, net, &dev, q8, spec.batch()) {
+        match plan_auto_with(manifest, net, &dev, q8, wino, spec.batch()) {
             Ok(plan) => return Ok(FallbackOutcome { plan, notes }),
             Err(e) => notes.push(format!("auto-partition failed: {e:#}")),
         }
@@ -82,7 +112,7 @@ pub fn plan_or_fallback(
             Ok(plan) => return Ok(FallbackOutcome { plan, notes }),
             Err(e) if e.downcast_ref::<MissingArtifact>().is_some() => {
                 notes.push(format!("{e}"));
-                match plan_auto_with(manifest, net, &dev, false, spec.batch()) {
+                match plan_auto_with(manifest, net, &dev, false, false, spec.batch()) {
                     Ok(plan) => {
                         notes.push("re-planned with delegate:auto over available backends".into());
                         return Ok(FallbackOutcome { plan, notes });
@@ -136,6 +166,25 @@ mod tests {
         let out =
             plan_or_fallback(&m, &zoo::cifar10(), &spec(crate::DELEGATE_AUTO), None).unwrap();
         assert!(out.plan.layers.iter().all(|l| !l.on_accel()));
+    }
+
+    #[test]
+    fn wino_spec_does_not_quietly_enable_q8() {
+        use crate::coordinator::plan::LayerPlan;
+        let m = artifactless(&[]);
+        let net = zoo::lenet5();
+        let params = Params::synthetic(&net, 45, 0.1);
+        let out =
+            plan_or_fallback(&m, &net, &spec("delegate:auto:wino"), Some(&params)).unwrap();
+        // LeNet has no 3x3 stride-1 convs: the request is noted and the
+        // plan stays on the f32 im2col backends — and, critically, the
+        // params passed for the wino guardrail must NOT flip q8 on (the
+        // spec's precision is still F32).
+        assert!(out.notes.iter().any(|n| n.contains("no 3x3 stride-1 convs")), "{:?}", out.notes);
+        assert!(!out.plan.layers.iter().any(|l| matches!(
+            l,
+            LayerPlan::ConvCpuQ8 { .. } | LayerPlan::FcCpuQ8 { .. }
+        )));
     }
 
     #[test]

@@ -26,11 +26,13 @@
 //! selector [`crate::DELEGATE_AUTO`] (`"delegate:auto"`, optionally
 //! `:<device>` with a Table-1 profile `note4` | `m9`, `:q8` to let the
 //! accuracy-guardrail-gated quantized backend compete for layers,
-//! `:nofuse` to run the emitted plan layer-by-layer instead of through
-//! the fused-stage IR, and `:batch=<n>` to make the partitioner
-//! enforce per-backend dispatch ceilings for that batch).  The spec
-//! rides everywhere a fixed backend does: `EngineConfig::spec`, server
-//! model configs, and the CLI `--method`/`--device`/`--q8` flags.
+//! `:wino` to let the numerics-guardrail-gated Winograd F(2,3) backend
+//! compete for eligible 3x3 stride-1 convs, `:nofuse` to run the
+//! emitted plan layer-by-layer instead of through the fused-stage IR,
+//! and `:batch=<n>` to make the partitioner enforce per-backend
+//! dispatch ceilings for that batch).  The spec rides everywhere a
+//! fixed backend does: `EngineConfig::spec`, server model configs, and
+//! the CLI `--method`/`--device`/`--q8`/`--wino` flags.
 
 pub mod backend;
 pub mod fallback;
@@ -39,7 +41,7 @@ pub mod registry;
 
 pub use backend::{
     AccelBackend, Backend, Capability, CpuGemmBackend, CpuGemmQ8Backend, CpuParBackend,
-    CpuSeqBackend, DataLayout,
+    CpuSeqBackend, CpuWinogradBackend, DataLayout,
 };
 pub use fallback::{is_retryable, plan_or_fallback, FallbackOutcome};
 pub use partition::{transition_cost, Assignment, PartitionReport, Partitioner};
@@ -75,6 +77,10 @@ pub struct AutoSpec {
     /// True when the selector carried a `:q8` segment.  q8 is opt-in:
     /// the default auto plan keeps f32-identical numerics.
     pub q8: bool,
+    /// True when the selector carried a `:wino` segment.  Winograd is
+    /// opt-in for the same reason: its lowering is numerically close
+    /// to, but not bit-identical with, the im2col reference.
+    pub winograd: bool,
     /// False when the selector carried a `:nofuse` segment: the engine
     /// then executes the plan layer-by-layer instead of through
     /// `ExecutionPlan::fuse` stages.  Fusion is on by default — fused
@@ -101,6 +107,7 @@ pub fn auto_spec(method: &str) -> Result<Option<AutoSpec>> {
     Ok(Some(AutoSpec {
         dev: spec.device_spec(),
         q8: spec.precision() == crate::session::Precision::Q8Opt,
+        winograd: spec.winograd(),
         fuse: spec.fusion(),
     }))
 }
@@ -119,13 +126,7 @@ pub fn auto_device(method: &str) -> Result<Option<DeviceSpec>> {
 /// otherwise — both deterministic, so eligibility is reproducible for
 /// fixed weights.
 pub fn q8_agreement(net: &Network, params: &Params) -> Result<(usize, usize)> {
-    let frames = if (net.in_c, net.in_h, net.in_w) == (1, 28, 28) {
-        let digits: Vec<Tensor> =
-            (0..10).map(|l| crate::data::synth::render_digit(l, 0.0, 0.0, 1.0)).collect();
-        Tensor::stack(&digits)
-    } else {
-        crate::data::synth::random_frames(4, net.in_c, net.in_h, net.in_w, 2024)
-    };
+    let frames = guardrail_frames(net);
     // One pass packs both precisions for every layer.  The caches are
     // transient (the engine later re-packs exactly the subsets its
     // plan dispatches, keeping steady-state memory minimal) — the
@@ -148,29 +149,88 @@ pub fn q8_eligible(net: &Network, params: &Params) -> bool {
     matches!(q8_agreement(net, params), Ok((agree, total)) if total > 0 && agree == total)
 }
 
+/// The deterministic fixture batch both guardrails classify: the ten
+/// canonical digit renders for 28x28x1 networks (LeNet), seeded random
+/// frames in the network's input geometry otherwise.
+fn guardrail_frames(net: &Network) -> Tensor {
+    if (net.in_c, net.in_h, net.in_w) == (1, 28, 28) {
+        let digits: Vec<Tensor> =
+            (0..10).map(|l| crate::data::synth::render_digit(l, 0.0, 0.0, 1.0)).collect();
+        Tensor::stack(&digits)
+    } else {
+        crate::data::synth::random_frames(4, net.in_c, net.in_h, net.in_w, 2024)
+    }
+}
+
+/// The Winograd numerics guardrail: run the fixture set through the
+/// f32 im2col reference forward path and the Winograd forward path
+/// (eligible 3x3 stride-1 convs in the transform domain, everything
+/// else falling back to im2col) and count top-1 agreement.  Returns
+/// `(agreeing, total)`.  Winograd F(2,3) is algebraically exact but
+/// reassociates the reduction, so outputs are close-but-not-identical
+/// to im2col — the same class of numeric drift q8 has, gated the same
+/// way.
+pub fn winograd_agreement(net: &Network, params: &Params) -> Result<(usize, usize)> {
+    let frames = guardrail_frames(net);
+    let mut packed = PackedModel::prepare_mixed(net, params, None, None)?;
+    packed.prepare_winograd(net, params, None)?;
+    let reference = cpu::forward_packed(net, params, &packed, &frames, &cpu::ForwardOpts::fast())?;
+    let wino =
+        cpu::forward_packed(net, params, &packed, &frames, &cpu::ForwardOpts::winograd())?;
+    let agree = reference
+        .argmax_rows()
+        .iter()
+        .zip(wino.argmax_rows())
+        .filter(|((a, _), (b, _))| *a == *b)
+        .count();
+    Ok((agree, frames.dim(0)))
+}
+
+/// Does the Winograd backend pass the guardrail for this model?
+/// `false` without running any forward pass when no conv is Winograd-
+/// eligible (nothing to gain, so `cpu-wino` should not even register);
+/// otherwise the bar is 100% top-1 agreement with the f32 im2col
+/// reference on the fixture set.
+pub fn winograd_eligible(net: &Network, params: &Params) -> bool {
+    let any_eligible = net
+        .conv_specs()
+        .iter()
+        .any(|(_, spec)| crate::kernels::winograd_supported(spec));
+    if !any_eligible {
+        return false;
+    }
+    matches!(winograd_agreement(net, params), Ok((agree, total)) if total > 0 && agree == total)
+}
+
 /// One-call entry point: detect backends from the manifest and emit the
 /// cost-optimal plan for `net` on `dev` (f32 backends only, batch 1).
 pub fn plan_auto(manifest: &Manifest, net: &Network, dev: &DeviceSpec) -> Result<ExecutionPlan> {
-    plan_auto_with(manifest, net, dev, false, 1)
+    plan_auto_with(manifest, net, dev, false, false, 1)
 }
 
-/// [`plan_auto`] with an explicit quantized-backend opt-in and batch:
-/// when `q8` is true the `cpu-gemm-q8` backend joins the registry and
-/// the DP may mix precisions per layer (callers gate `q8` on
-/// [`q8_eligible`]); `batch` is the frames-per-dispatch the plan must
-/// serve, enforced against every backend's `Capability::max_batch` by
-/// the partitioner — the field [`crate::session::ExecSpec::batch`]
+/// [`plan_auto`] with explicit opt-in backends and batch: when `q8` is
+/// true the `cpu-gemm-q8` backend joins the registry and the DP may
+/// mix precisions per layer (callers gate `q8` on [`q8_eligible`]);
+/// when `wino` is true the `cpu-wino` Winograd backend joins and may
+/// win eligible 3x3 stride-1 convs (callers gate `wino` on
+/// [`winograd_eligible`]); `batch` is the frames-per-dispatch the plan
+/// must serve, enforced against every backend's `Capability::max_batch`
+/// by the partitioner — the field [`crate::session::ExecSpec::batch`]
 /// drives end to end.
 pub fn plan_auto_with(
     manifest: &Manifest,
     net: &Network,
     dev: &DeviceSpec,
     q8: bool,
+    wino: bool,
     batch: usize,
 ) -> Result<ExecutionPlan> {
     let mut registry = Registry::detect(manifest);
     if q8 {
         registry = registry.with_q8();
+    }
+    if wino {
+        registry = registry.with_winograd();
     }
     Ok(Partitioner::new(&registry, dev).with_batch(batch).partition(net)?.plan)
 }
@@ -224,6 +284,38 @@ mod tests {
         assert!(auto_spec("delegate:auto:q8:noq8").is_err());
         let s = auto_spec("delegate:auto:m9:m9").unwrap().unwrap();
         assert!(s.dev.name.contains("M9"));
+    }
+
+    #[test]
+    fn auto_spec_parses_wino_opt_in() {
+        // Default: im2col-only kernel competition.
+        let s = auto_spec("delegate:auto").unwrap().unwrap();
+        assert!(!s.winograd);
+        let s = auto_spec("delegate:auto:wino").unwrap().unwrap();
+        assert!(s.winograd && !s.q8);
+        // Composes with the other segments in any order.
+        let s = auto_spec("delegate:auto:m9:q8:wino:nofuse").unwrap().unwrap();
+        assert!(s.winograd && s.q8 && !s.fuse && s.dev.name.contains("M9"));
+        let s = auto_spec("delegate:auto:nowino").unwrap().unwrap();
+        assert!(!s.winograd);
+        // Conflicts are rejected like every other keyword pair.
+        assert!(auto_spec("delegate:auto:wino:nowino").is_err());
+    }
+
+    #[test]
+    fn winograd_guardrail_is_deterministic_and_skips_ineligible_nets() {
+        use crate::model::zoo;
+        // LeNet: all convs 5x5 — no eligible layer, so eligibility is
+        // false without any forward pass, while the agreement count
+        // itself is trivially perfect (both paths run im2col).
+        let net = zoo::lenet5();
+        let params = Params::synthetic(&net, 45, 0.1);
+        assert!(!winograd_eligible(&net, &params));
+        let (a, t) = winograd_agreement(&net, &params).unwrap();
+        assert_eq!((a, t), (10, 10), "fallback path is bit-identical to im2col");
+        // The verdict is reproducible (it gates registration).
+        let again = winograd_agreement(&net, &params).unwrap();
+        assert_eq!((a, t), again);
     }
 
     #[test]

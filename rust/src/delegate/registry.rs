@@ -9,6 +9,7 @@ use crate::model::manifest::Manifest;
 
 use super::backend::{
     AccelBackend, Backend, CpuGemmBackend, CpuGemmQ8Backend, CpuParBackend, CpuSeqBackend,
+    CpuWinogradBackend,
 };
 
 /// The set of backends the partitioner may place layers on.
@@ -71,6 +72,17 @@ impl Registry {
     /// untouched unless q8 is requested.
     pub fn with_q8(mut self) -> Registry {
         self.backends.push(Box::new(CpuGemmQ8Backend::new()));
+        self
+    }
+
+    /// Append the Winograd F(2,3) `cpu-wino` backend.  Callers gate
+    /// this on the numerics guardrail ([`super::winograd_eligible`]) —
+    /// or invoke it unconditionally in tests/benches that study
+    /// placement.  Not part of the default registries because Winograd
+    /// is not bit-identical to the im2col lowering: it stays opt-in
+    /// (`:wino`) so default serving numerics are untouched.
+    pub fn with_winograd(mut self) -> Registry {
+        self.backends.push(Box::new(CpuWinogradBackend::new()));
         self
     }
 
@@ -148,6 +160,21 @@ mod tests {
         // default; q8 is opt-in + guardrail-gated).
         assert!(Registry::simulated().get("cpu-gemm-q8").is_none());
         assert!(Registry::cpu_only().get("cpu-gemm-q8").is_none());
+    }
+
+    #[test]
+    fn with_winograd_appends_the_wino_backend_last() {
+        let reg = Registry::cpu_only().with_winograd();
+        assert_eq!(reg.names(), vec!["cpu-seq", "cpu-par", "cpu-gemm", "cpu-wino"]);
+        assert!(!reg.get("cpu-wino").unwrap().capability().needs_artifacts);
+        // Default registries must NOT include it (Winograd numerics
+        // are opt-in + guardrail-gated, like q8).
+        assert!(Registry::simulated().get("cpu-wino").is_none());
+        assert!(Registry::cpu_only().get("cpu-wino").is_none());
+        // Composes with q8 in call order.
+        let both = Registry::cpu_only().with_q8().with_winograd();
+        assert_eq!(both.names().last(), Some(&"cpu-wino"));
+        assert!(both.get("cpu-gemm-q8").is_some());
     }
 
     #[test]

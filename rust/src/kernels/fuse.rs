@@ -43,8 +43,9 @@ use crate::util::threadpool;
 
 use super::gemm::{gemm_cols_into, gemm_into, gemm_q8_cols_into, gemm_q8_into, BiasMode};
 use super::im2col::{im2col_frame, im2col_q8_frame, patch_cols, patch_rows};
-use super::pack::{PackedConv, PackedConvQ8};
+use super::pack::{PackedConv, PackedConvQ8, PackedConvWg};
 use super::quant::{ActQuant, QuantizedWeights};
+use super::winograd;
 use super::{row_bands, KernelOpts};
 
 /// One post-GEMM member of a fused stage, applied band-by-band to the
@@ -286,10 +287,14 @@ unsafe fn run_tail_band(
 }
 
 /// The conv head of a fused stage: which packed-weight cache family
-/// feeds the GEMM.
+/// feeds the GEMM.  A `Wg` head runs the Winograd pipeline band-local
+/// (each band computes exactly the conv rows its tail consumes —
+/// boundary tiles are recomputed whole and edge-clipped, which never
+/// changes a value), so Winograd stages fuse like im2col ones.
 pub enum ConvSource<'a> {
     F32(&'a PackedConv),
     Q8(&'a PackedConvQ8),
+    Wg(&'a PackedConvWg),
 }
 
 /// Band-local f32 GEMM source (pointers into the packed weights and
@@ -313,14 +318,26 @@ struct Q8Gemm {
     relu: bool,
 }
 
+/// Band-local Winograd source (the band runs the whole transform →
+/// point-GEMM → inverse pipeline for its conv rows).
+struct WgGemm {
+    packed: *const PackedConvWg,
+    frame: *const f32,
+    frame_len: usize,
+    tile: usize,
+}
+
 /// Pointer capsule for one frame's fused-stage band tasks.  The entry
 /// point blocks on scope completion, so the borrowed buffers strictly
 /// outlive every task; bands write disjoint output row ranges.
 struct ConvStageCapsule {
-    /// Band-local f32 GEMM (None in two-phase mode / q8 stages).
+    /// Band-local f32 GEMM (None in two-phase mode / non-f32 stages).
     f32_gemm: Option<F32Gemm>,
-    /// Band-local q8 GEMM (None in two-phase mode / f32 stages).
+    /// Band-local q8 GEMM (None in two-phase mode / non-q8 stages).
     q8_gemm: Option<Q8Gemm>,
+    /// Band-local Winograd pipeline (None in two-phase mode /
+    /// non-Winograd stages).
+    wg_gemm: Option<WgGemm>,
     /// Materialized level-0 surface for the two-phase schedule (the
     /// per-frame conv scratch); unused when a GEMM source is set.
     src: RowsRef,
@@ -385,6 +402,17 @@ unsafe fn conv_stage_band(cap: &ConvStageCapsule, t: usize) {
             &mut conv_buf,
         );
         RowsRef { ptr: conv_buf.as_ptr(), chan_stride: (r1 - r0) * w0, y_base: r0, width: w0 }
+    } else if let Some(g) = &cap.wg_gemm {
+        conv_buf.resize(cap.c * (r1 - r0) * w0, 0.0);
+        let frame = std::slice::from_raw_parts(g.frame, g.frame_len);
+        let dst = winograd::WgOut {
+            ptr: conv_buf.as_mut_ptr(),
+            chan_stride: (r1 - r0) * w0,
+            y_base: r0,
+            width: w0,
+        };
+        winograd::winograd_rows_into(frame, &*g.packed, r0, r1, g.tile, dst);
+        RowsRef { ptr: conv_buf.as_ptr(), chan_stride: (r1 - r0) * w0, y_base: r0, width: w0 }
     } else {
         cap.src
     };
@@ -404,11 +432,13 @@ pub fn conv_stage(x: &Tensor, src: ConvSource<'_>, ops: &[TailOp], opts: KernelO
         return match src {
             ConvSource::F32(p) => super::conv::conv_im2col(x, p, opts),
             ConvSource::Q8(p) => super::conv::conv_im2col_q8(x, p, opts),
+            ConvSource::Wg(p) => winograd::conv_winograd(x, p, opts),
         };
     }
     let spec = match &src {
         ConvSource::F32(p) => p.spec,
         ConvSource::Q8(p) => p.spec,
+        ConvSource::Wg(p) => p.spec,
     };
     let n = x.dim(0);
     assert_eq!(x.shape(), &[n, spec.in_c, spec.in_h, spec.in_w], "conv input shape");
@@ -433,6 +463,8 @@ pub fn conv_stage(x: &Tensor, src: ConvSource<'_>, ops: &[TailOp], opts: KernelO
     match &src {
         ConvSource::F32(_) => patches_f = vec![0.0; rows_k * cols],
         ConvSource::Q8(_) => patches_q = vec![0u8; rows_k * cols],
+        // The Winograd pipeline reads the frame directly.
+        ConvSource::Wg(_) => {}
     }
     let mut conv_scratch: Vec<f32> = if two_phase { vec![0.0; nk * cols] } else { Vec::new() };
 
@@ -443,6 +475,7 @@ pub fn conv_stage(x: &Tensor, src: ConvSource<'_>, ops: &[TailOp], opts: KernelO
         match &src {
             ConvSource::F32(_) => im2col_frame(frame, &spec, &mut patches_f),
             ConvSource::Q8(_) => act = im2col_q8_frame(frame, &spec, &mut patches_q),
+            ConvSource::Wg(_) => {}
         }
         if two_phase {
             // Phase 1: this frame's conv surface, computed once into
@@ -467,6 +500,9 @@ pub fn conv_stage(x: &Tensor, src: ConvSource<'_>, ops: &[TailOp], opts: KernelO
                     opts,
                     &mut conv_scratch,
                 ),
+                ConvSource::Wg(p) => {
+                    winograd::winograd_frame_into(frame, p, opts, &mut conv_scratch)
+                }
             }
         }
         let cap = ConvStageCapsule {
@@ -489,6 +525,15 @@ pub fn conv_stage(x: &Tensor, src: ConvSource<'_>, ops: &[TailOp], opts: KernelO
                     act,
                     bias: p.bias.data().as_ptr(),
                     relu: spec.relu,
+                }),
+                _ => None,
+            },
+            wg_gemm: match (&src, two_phase) {
+                (ConvSource::Wg(p), false) => Some(WgGemm {
+                    packed: *p,
+                    frame: frame.as_ptr(),
+                    frame_len: frame.len(),
+                    tile: opts.tile,
                 }),
                 _ => None,
             },
@@ -768,6 +813,30 @@ mod tests {
                 assert_eq!(fused, want, "{size}x{size}/s{stride} ({opts:?})");
             }
         }
+    }
+
+    #[test]
+    fn winograd_conv_pool_stage_matches_unfused_winograd() {
+        let spec = ConvSpec {
+            in_c: 3, in_h: 12, in_w: 12, nk: 6, kh: 3, kw: 3, stride: 1, pad: 1, relu: true,
+        };
+        let x = random(vec![2, 3, 12, 12], 86);
+        let w = random(vec![6, 3, 3, 3], 87);
+        let b = random(vec![6], 88);
+        let packed = PackedConvWg::pack(&spec, &w, &b);
+        // 2x2/s2 exercises the band-local schedule, 3x2 the two-phase.
+        for (size, stride) in [(2usize, 2usize), (3, 2)] {
+            let ops = [TailOp::Pool { mode: PoolMode::Max, size, stride, relu: false }];
+            for opts in [KernelOpts::seq(), KernelOpts::tiled()] {
+                let fused = conv_stage(&x, ConvSource::Wg(&packed), &ops, opts);
+                let mut want = kernels::conv_winograd(&x, &packed, opts);
+                want = apply_unfused(&want, &ops[0], opts);
+                assert_eq!(fused, want, "{size}x{size}/s{stride} ({opts:?})");
+            }
+        }
+        // Empty tail degenerates to the standalone Winograd kernel.
+        let fused = conv_stage(&x, ConvSource::Wg(&packed), &[], KernelOpts::tiled());
+        assert_eq!(fused, kernels::conv_winograd(&x, &packed, KernelOpts::tiled()));
     }
 
     #[test]

@@ -30,6 +30,7 @@ use crate::tensor::{MatView, Tensor};
 use crate::util::threadpool;
 
 use super::quant::{quantize_activations_transposed, ActQuant, QuantizedWeights};
+use super::simd::{self, F32x8, I32x8};
 use super::KernelOpts;
 
 /// Reduction-axis block size (elements of `k` per pass over a band).
@@ -38,8 +39,13 @@ const KC: usize = 256;
 /// Register-tile rows (A rows per micro-kernel pass).
 const MR: usize = 4;
 
-/// Register-tile columns (C columns per micro-kernel pass).
+/// Register-tile columns (C columns per micro-kernel pass) — one
+/// [`simd`] vector wide, so the micro-kernel's accumulators are four
+/// 8-lane vectors whether the `portable-simd` feature is on (real
+/// vector registers) or off (the bit-identical scalar fallback).
 const NR: usize = 8;
+
+const _: () = assert!(NR == simd::LANES, "register tile width must match the SIMD lane count");
 
 /// How the bias vector broadcasts over `C`.
 #[derive(Debug, Clone, Copy)]
@@ -112,28 +118,30 @@ unsafe fn tile_block(
     while j < j1 {
         let jr = (j1 - j).min(NR);
         if ir == MR && jr == NR {
-            // 4x8 micro-kernel: 32 accumulators in registers; each B
-            // row load feeds four A rows.
-            let mut acc = [[0.0f32; NR]; MR];
+            // 4x8 micro-kernel: 32 accumulators in registers (four
+            // 8-lane vectors); each B row load feeds four A rows.
+            // `mul_acc` is a separate per-lane multiply then add, so
+            // every element's value matches the scalar edge strip.
+            let mut acc = [F32x8::zero(); MR];
             let a0 = std::slice::from_raw_parts(cap.a.add(i0 * cap.a_stride), cap.k);
             let a1 = std::slice::from_raw_parts(cap.a.add((i0 + 1) * cap.a_stride), cap.k);
             let a2 = std::slice::from_raw_parts(cap.a.add((i0 + 2) * cap.a_stride), cap.k);
             let a3 = std::slice::from_raw_parts(cap.a.add((i0 + 3) * cap.a_stride), cap.k);
             for kk in kb..ke {
                 let brow = std::slice::from_raw_parts(cap.b.add(kk * cap.b_stride + j), NR);
+                let bv = F32x8::load(brow);
                 let av = [a0[kk], a1[kk], a2[kk], a3[kk]];
                 for (accr, &ar) in acc.iter_mut().zip(&av) {
-                    for (cv, &bv) in accr.iter_mut().zip(brow) {
-                        *cv += ar * bv;
-                    }
+                    *accr = accr.mul_acc(F32x8::splat(ar), bv);
                 }
             }
             for (r, accr) in acc.iter().enumerate() {
+                let vals = accr.to_array();
                 let crow = std::slice::from_raw_parts_mut(
                     cap.c.add((i0 + r) * cap.c_stride + (j - cap.c_j0)),
                     NR,
                 );
-                for (cv, &av) in crow.iter_mut().zip(accr) {
+                for (cv, &av) in crow.iter_mut().zip(&vals) {
                     *cv += av;
                 }
             }
@@ -427,21 +435,20 @@ unsafe impl Sync for Q8Capsule {}
 unsafe fn q8_band(cap: &Q8Capsule, i0: usize, i1: usize) {
     let (k, n) = (cap.k, cap.n);
     if n == 1 {
-        // Matvec (FC batch 1): one dot product per output row, four
-        // interleaved accumulators to break the dependency chain.
+        // Matvec (FC batch 1): one dot product per output row, eight
+        // interleaved lanes (i8/u8 widened to i32 — exact, so the
+        // interleave never changes the result) to break the dependency
+        // chain.
         let acol = std::slice::from_raw_parts(cap.aq, k);
         for i in i0..i1 {
             let wrow = std::slice::from_raw_parts(cap.wq.add(i * k), k);
-            let mut acc = [0i32; 4];
+            let mut acc = I32x8::zero();
             let mut kk = 0;
-            while kk + 4 <= k {
-                acc[0] += wrow[kk] as i32 * acol[kk] as i32;
-                acc[1] += wrow[kk + 1] as i32 * acol[kk + 1] as i32;
-                acc[2] += wrow[kk + 2] as i32 * acol[kk + 2] as i32;
-                acc[3] += wrow[kk + 3] as i32 * acol[kk + 3] as i32;
-                kk += 4;
+            while kk + simd::LANES <= k {
+                acc = acc.mul_acc(I32x8::from_i8(&wrow[kk..]), I32x8::from_u8(&acol[kk..]));
+                kk += simd::LANES;
             }
-            let mut total = acc[0] + acc[1] + acc[2] + acc[3];
+            let mut total = acc.sum();
             while kk < k {
                 total += wrow[kk] as i32 * acol[kk] as i32;
                 kk += 1;
@@ -462,9 +469,7 @@ unsafe fn q8_band(cap: &Q8Capsule, i0: usize, i1: usize) {
                     continue;
                 }
                 let brow = std::slice::from_raw_parts(cap.aq.add(kk * n + j), jw);
-                for (cv, &bv) in acc[..jw].iter_mut().zip(brow) {
-                    *cv += av * bv as i32;
-                }
+                q8_axpy_strip(&mut acc[..jw], av, brow);
             }
             let crow =
                 std::slice::from_raw_parts_mut(cap.c.add(i * cap.c_stride + (j - cap.c_j0)), jw);
@@ -473,6 +478,24 @@ unsafe fn q8_band(cap: &Q8Capsule, i0: usize, i1: usize) {
             }
         }
         j += jw;
+    }
+}
+
+/// One weight's contribution to a q8 column strip:
+/// `acc[j] += av * brow[j]`, eight lanes at a time with a scalar tail.
+/// Exact i32 arithmetic — lane order cannot change the result.
+#[inline(always)]
+fn q8_axpy_strip(acc: &mut [i32], av: i32, brow: &[u8]) {
+    let jw = acc.len();
+    let avx = I32x8::splat(av);
+    let mut jj = 0;
+    while jj + simd::LANES <= jw {
+        let accv = I32x8::load(&acc[jj..]).mul_acc(avx, I32x8::from_u8(&brow[jj..]));
+        accv.store(&mut acc[jj..]);
+        jj += simd::LANES;
+    }
+    for (cv, &bv) in acc[jj..].iter_mut().zip(&brow[jj..]) {
+        *cv += av * bv as i32;
     }
 }
 
@@ -497,9 +520,7 @@ unsafe fn q8_band_cols(cap: &Q8Capsule, j0: usize, j1: usize) {
                     continue;
                 }
                 let brow = std::slice::from_raw_parts(cap.aq.add(kk * cap.n + j), jw);
-                for (cv, &bv) in acc[..jw].iter_mut().zip(brow) {
-                    *cv += av * bv as i32;
-                }
+                q8_axpy_strip(&mut acc[..jw], av, brow);
             }
             let crow =
                 std::slice::from_raw_parts_mut(cap.c.add(i * cap.c_stride + (j - cap.c_j0)), jw);

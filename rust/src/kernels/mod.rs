@@ -14,9 +14,17 @@
 //! * [`im2col`] — the conv-as-GEMM lowering: materialize the patch
 //!   matrix `(C*KH*KW, OH*OW)` of one frame so convolution becomes
 //!   `packed weights x patches`.
-//! * [`conv`] — both conv lowerings: the paper's §4.1 direct 7-deep
-//!   loop nest ([`conv::conv_direct`], the numeric reference) and
-//!   im2col+GEMM ([`conv::conv_im2col`], the fast path).
+//! * [`conv`] — both spatial-domain conv lowerings: the paper's §4.1
+//!   direct 7-deep loop nest ([`conv::conv_direct`], the numeric
+//!   reference) and im2col+GEMM ([`conv::conv_im2col`], the fast
+//!   path).
+//! * [`winograd`] — the transform-domain F(2,3) lowering for 3x3
+//!   stride-1 convs: 2.25x fewer GEMM flops, weights transformed once
+//!   at pack time ([`pack::PackedConvWg`]), cross-variant numerics
+//!   gated by the delegate's top-1 guardrail.
+//! * [`simd`] — lane-width-8 micro-kernel primitives behind the
+//!   `portable-simd` feature, with a bit-identical scalar fallback on
+//!   stable toolchains.
 //! * [`fuse`] — fused-stage execution: conv→ReLU→pool(/LRN) chains
 //!   ([`fuse::TailOp`]) run band-by-band through per-stage tile
 //!   scratch, bit-identical to the unfused kernels, so intermediate
@@ -45,6 +53,8 @@ pub mod im2col;
 pub mod pack;
 pub mod pool;
 pub mod quant;
+pub mod simd;
+pub mod winograd;
 
 pub use conv::{conv_direct, conv_im2col, conv_im2col_q8, conv_im2col_unpacked};
 pub use fuse::{conv_stage, tail_out_shape, tail_stage, ConvSource, TailOp};
@@ -53,10 +63,11 @@ pub use gemm::{
 };
 pub use im2col::{im2col_frame, im2col_q8_frame, patch_cols, patch_rows};
 pub use pack::{
-    PackedConv, PackedConvQ8, PackedFcQ8, PackedLayer, PackedModel, PackedQ8Layer,
+    PackedConv, PackedConvQ8, PackedConvWg, PackedFcQ8, PackedLayer, PackedModel, PackedQ8Layer,
 };
 pub use pool::{avgpool_nchw, lrn_nchw, maxpool_nchw, relu};
 pub use quant::{quantize_activations, ActQuant, QuantizedWeights};
+pub use winograd::{conv_winograd, winograd_supported};
 
 /// Which convolution lowering a backend dispatches (the capability
 /// field the delegate partitioner selects per layer).
@@ -66,6 +77,9 @@ pub enum KernelVariant {
     Direct,
     /// Packed weights x patch matrix GEMM (this module's fast path).
     Im2col,
+    /// Winograd F(2,3) transform-domain GEMMs (3x3 stride-1 only;
+    /// guardrail-gated numerics — see [`winograd`]).
+    Winograd,
 }
 
 impl KernelVariant {
@@ -73,6 +87,7 @@ impl KernelVariant {
         match self {
             KernelVariant::Direct => "direct",
             KernelVariant::Im2col => "im2col",
+            KernelVariant::Winograd => "winograd",
         }
     }
 }

@@ -72,6 +72,39 @@ impl PackedConvQ8 {
     }
 }
 
+/// One conv layer's Winograd F(2,3) parameters: the 16 transformed
+/// point matrices `U = G·g·Gᵀ`, computed once at load time (see
+/// [`super::winograd`]).  Only 3x3 stride-1 convs are eligible
+/// ([`super::winograd::winograd_supported`]).
+#[derive(Debug, Clone)]
+pub struct PackedConvWg {
+    pub spec: ConvSpec,
+    /// `POINTS * NK * C` transformed weights, indexed
+    /// `u[p*nk*c + k*c + ci]` — each point a GEMM-ready `(NK, C)`
+    /// operand.
+    pub u: Vec<f32>,
+    pub bias: Tensor,
+}
+
+impl PackedConvWg {
+    /// Transform OIHW weights into the Winograd point matrices.
+    /// Panics on ineligible specs — callers gate on
+    /// [`super::winograd::winograd_supported`].
+    pub fn pack(spec: &ConvSpec, w: &Tensor, b: &Tensor) -> PackedConvWg {
+        assert!(
+            super::winograd::winograd_supported(spec),
+            "winograd pack needs a 3x3 stride-1 conv, got {spec:?}"
+        );
+        assert_eq!(w.shape(), &[spec.nk, spec.in_c, spec.kh, spec.kw], "conv weight shape");
+        assert_eq!(b.len(), spec.nk, "conv bias length");
+        PackedConvWg {
+            spec: *spec,
+            u: super::winograd::transform_weights(spec, w.data()),
+            bias: b.clone(),
+        }
+    }
+}
+
 /// One FC layer's quantized parameters.  The stored `(in, out)` f32
 /// matrix is transposed to `(out, in)` at pack time so each row is one
 /// output unit (per-row scales == per-unit scales) and the q8 GEMM
@@ -132,10 +165,15 @@ pub enum PackedQ8Layer {
 /// fused stage (keyed by the head conv's layer name, f32 or q8), the
 /// tail ops its banded epilogue executes — resolved once at load time
 /// so per-inference stage dispatch does no plan re-walking.
+/// The Winograd transforms live in a third, independent cache
+/// (`wg_entries`): a layer placed on the Winograd variant carries BOTH
+/// its transformed weights and (optionally) its f32 im2col entry — the
+/// guardrail compares the two, and ineligible layers fall back.
 #[derive(Debug, Clone, Default)]
 pub struct PackedModel {
     entries: BTreeMap<String, PackedLayer>,
     q8_entries: BTreeMap<String, PackedQ8Layer>,
+    wg_entries: BTreeMap<String, PackedConvWg>,
     stage_tails: BTreeMap<String, Vec<TailOp>>,
 }
 
@@ -225,7 +263,38 @@ impl PackedModel {
                 Layer::Pool { .. } | Layer::Lrn { .. } => {}
             }
         }
-        Ok(PackedModel { entries, q8_entries, stage_tails: BTreeMap::new() })
+        Ok(PackedModel {
+            entries,
+            q8_entries,
+            wg_entries: BTreeMap::new(),
+            stage_tails: BTreeMap::new(),
+        })
+    }
+
+    /// Add Winograd weight transforms for the conv layers named in
+    /// `convs` (`None` transforms every eligible conv).  Called after
+    /// `prepare*` when a plan dispatches Winograd stages; ineligible
+    /// layers in the set are skipped (they keep their im2col/direct
+    /// entries), so callers may pass plan sets verbatim.
+    pub fn prepare_winograd(
+        &mut self,
+        net: &Network,
+        params: &Params,
+        convs: Option<&std::collections::BTreeSet<String>>,
+    ) -> Result<()> {
+        for (name, spec) in net.conv_specs() {
+            if convs.is_some_and(|set| !set.contains(&name)) {
+                continue;
+            }
+            if !super::winograd::winograd_supported(&spec) {
+                continue;
+            }
+            let (w, b) = params
+                .get(&name)
+                .ok_or_else(|| anyhow::anyhow!("missing params for {name}"))?;
+            self.wg_entries.insert(name.clone(), PackedConvWg::pack(&spec, w, b));
+        }
+        Ok(())
     }
 
     /// Record the tail ops of a conv-led fused stage, keyed by the
@@ -273,6 +342,17 @@ impl PackedModel {
             Some(PackedQ8Layer::Fc(p)) => Some(p),
             _ => None,
         }
+    }
+
+    /// Prepared Winograd parameters of one layer (None when the layer
+    /// was not Winograd-prepared or is ineligible).
+    pub fn conv_wg(&self, name: &str) -> Option<&PackedConvWg> {
+        self.wg_entries.get(name)
+    }
+
+    /// Number of Winograd-prepared layers.
+    pub fn wg_len(&self) -> usize {
+        self.wg_entries.len()
     }
 
     /// Number of f32-prepared layers.
@@ -373,6 +453,39 @@ mod tests {
         assert!(packed.conv_q8("conv1").is_none());
         assert!(packed.fc_q8("fc1").is_some());
         assert!(packed.fc_q8("fc2").is_none());
+    }
+
+    #[test]
+    fn winograd_cache_covers_only_eligible_convs() {
+        // LeNet's convs are 5x5 — nothing to transform; AlexNet's
+        // conv3..5 are the 3x3/s1 class.
+        let lenet = zoo::lenet5();
+        let lp = synth_params(&lenet, 6);
+        let mut packed = PackedModel::prepare(&lenet, &lp).unwrap();
+        packed.prepare_winograd(&lenet, &lp, None).unwrap();
+        assert_eq!(packed.wg_len(), 0, "no 3x3/s1 convs in lenet5");
+        assert!(packed.conv_wg("conv1").is_none());
+
+        let alex = zoo::alexnet();
+        let ap = synth_params(&alex, 7);
+        let mut packed = PackedModel::prepare(&alex, &ap).unwrap();
+        assert_eq!(packed.wg_len(), 0, "prepare() never transforms");
+        packed.prepare_winograd(&alex, &ap, None).unwrap();
+        assert_eq!(packed.wg_len(), 3, "conv3 conv4 conv5");
+        for name in ["conv3", "conv4", "conv5"] {
+            let p = packed.conv_wg(name).expect(name);
+            assert_eq!(p.u.len(), 16 * p.spec.nk * p.spec.in_c, "{name}");
+            // The f32 im2col entry stays alongside (guardrail pair).
+            assert!(packed.conv(name).is_some(), "{name}");
+        }
+        assert!(packed.conv_wg("conv1").is_none(), "11x11/s4 is ineligible");
+
+        // Named subset: only the requested layer is transformed.
+        let mut packed = PackedModel::prepare(&alex, &ap).unwrap();
+        let set: std::collections::BTreeSet<String> = ["conv4".to_string()].into();
+        packed.prepare_winograd(&alex, &ap, Some(&set)).unwrap();
+        assert_eq!(packed.wg_len(), 1);
+        assert!(packed.conv_wg("conv4").is_some());
     }
 
     #[test]

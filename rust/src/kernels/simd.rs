@@ -1,0 +1,262 @@
+//! Lane-width-8 SIMD primitives for the GEMM micro-kernels — the Rust
+//! analogue of CNNdroid's vectorized RenderScript kernels (§4.2's
+//! `float8`/`dot` bodies).
+//!
+//! Two implementations share one API, selected by the `portable-simd`
+//! cargo feature:
+//!
+//! * **feature on** (nightly toolchains): thin wrappers over
+//!   `std::simd`, compiling to real vector instructions.
+//! * **feature off** (stable, the default): `[T; LANES]` newtypes with
+//!   per-lane loops in the same element order.
+//!
+//! Both are **bit-identical** to the pre-SIMD scalar kernels and to
+//! each other: [`F32x8::mul_acc`] is an explicit multiply *then* add
+//! per lane (never a fused multiply-add, which would change f32
+//! rounding), and the callers keep every cross-lane reduction in a
+//! fixed order.  The integer lanes are exact in any order, so the q8
+//! kernels stay equal to their integer oracle.  The gemm unit tests
+//! and `tests/prop_kernels.rs` pin this contract in both
+//! configurations.
+
+/// Vector width shared by every micro-kernel: the f32 register tile's
+/// `NR` and the q8 inner-loop interleave are sized to this.
+pub const LANES: usize = 8;
+
+#[cfg(feature = "portable-simd")]
+mod imp {
+    use super::LANES;
+    use std::simd::prelude::*;
+
+    /// Eight f32 lanes.
+    #[derive(Clone, Copy)]
+    pub struct F32x8(Simd<f32, LANES>);
+
+    impl F32x8 {
+        #[inline(always)]
+        pub fn zero() -> F32x8 {
+            F32x8(Simd::splat(0.0))
+        }
+
+        #[inline(always)]
+        pub fn splat(v: f32) -> F32x8 {
+            F32x8(Simd::splat(v))
+        }
+
+        /// Load the first `LANES` elements of `s`.
+        #[inline(always)]
+        pub fn load(s: &[f32]) -> F32x8 {
+            F32x8(Simd::from_slice(&s[..LANES]))
+        }
+
+        /// `self + a * b` — a separate multiply then add per lane,
+        /// never an FMA: f32 bit-identity with the scalar kernels
+        /// depends on the two roundings.
+        #[inline(always)]
+        pub fn mul_acc(self, a: F32x8, b: F32x8) -> F32x8 {
+            F32x8(self.0 + a.0 * b.0)
+        }
+
+        #[inline(always)]
+        pub fn to_array(self) -> [f32; LANES] {
+            self.0.to_array()
+        }
+    }
+
+    /// Eight i32 lanes (exact arithmetic — reassociation-safe).
+    #[derive(Clone, Copy)]
+    pub struct I32x8(Simd<i32, LANES>);
+
+    impl I32x8 {
+        #[inline(always)]
+        pub fn zero() -> I32x8 {
+            I32x8(Simd::splat(0))
+        }
+
+        #[inline(always)]
+        pub fn splat(v: i32) -> I32x8 {
+            I32x8(Simd::splat(v))
+        }
+
+        /// Load the first `LANES` elements of `s`.
+        #[inline(always)]
+        pub fn load(s: &[i32]) -> I32x8 {
+            I32x8(Simd::from_slice(&s[..LANES]))
+        }
+
+        /// Widen the first `LANES` bytes of `s` (u8 activations).
+        #[inline(always)]
+        pub fn from_u8(s: &[u8]) -> I32x8 {
+            I32x8(Simd::<u8, LANES>::from_slice(&s[..LANES]).cast::<i32>())
+        }
+
+        /// Widen the first `LANES` bytes of `s` (i8 weights).
+        #[inline(always)]
+        pub fn from_i8(s: &[i8]) -> I32x8 {
+            I32x8(Simd::<i8, LANES>::from_slice(&s[..LANES]).cast::<i32>())
+        }
+
+        /// `self + a * b` per lane.
+        #[inline(always)]
+        pub fn mul_acc(self, a: I32x8, b: I32x8) -> I32x8 {
+            I32x8(self.0 + a.0 * b.0)
+        }
+
+        /// Store into the first `LANES` elements of `s`.
+        #[inline(always)]
+        pub fn store(self, s: &mut [i32]) {
+            self.0.copy_to_slice(&mut s[..LANES]);
+        }
+
+        /// Horizontal sum (exact for i32 in any lane order).
+        #[inline(always)]
+        pub fn sum(self) -> i32 {
+            self.0.reduce_sum()
+        }
+    }
+}
+
+#[cfg(not(feature = "portable-simd"))]
+mod imp {
+    use super::LANES;
+
+    /// Eight f32 lanes — scalar fallback with the identical per-lane
+    /// operation order as the `std::simd` build.
+    #[derive(Clone, Copy)]
+    pub struct F32x8([f32; LANES]);
+
+    impl F32x8 {
+        #[inline(always)]
+        pub fn zero() -> F32x8 {
+            F32x8([0.0; LANES])
+        }
+
+        #[inline(always)]
+        pub fn splat(v: f32) -> F32x8 {
+            F32x8([v; LANES])
+        }
+
+        /// Load the first `LANES` elements of `s`.
+        #[inline(always)]
+        pub fn load(s: &[f32]) -> F32x8 {
+            let mut v = [0.0; LANES];
+            v.copy_from_slice(&s[..LANES]);
+            F32x8(v)
+        }
+
+        /// `self + a * b` — multiply then add per lane (no FMA).
+        #[inline(always)]
+        pub fn mul_acc(mut self, a: F32x8, b: F32x8) -> F32x8 {
+            for ((acc, &av), &bv) in self.0.iter_mut().zip(&a.0).zip(&b.0) {
+                *acc += av * bv;
+            }
+            self
+        }
+
+        #[inline(always)]
+        pub fn to_array(self) -> [f32; LANES] {
+            self.0
+        }
+    }
+
+    /// Eight i32 lanes — scalar fallback (exact arithmetic).
+    #[derive(Clone, Copy)]
+    pub struct I32x8([i32; LANES]);
+
+    impl I32x8 {
+        #[inline(always)]
+        pub fn zero() -> I32x8 {
+            I32x8([0; LANES])
+        }
+
+        #[inline(always)]
+        pub fn splat(v: i32) -> I32x8 {
+            I32x8([v; LANES])
+        }
+
+        /// Load the first `LANES` elements of `s`.
+        #[inline(always)]
+        pub fn load(s: &[i32]) -> I32x8 {
+            let mut v = [0; LANES];
+            v.copy_from_slice(&s[..LANES]);
+            I32x8(v)
+        }
+
+        /// Widen the first `LANES` bytes of `s` (u8 activations).
+        #[inline(always)]
+        pub fn from_u8(s: &[u8]) -> I32x8 {
+            let mut v = [0; LANES];
+            for (d, &b) in v.iter_mut().zip(&s[..LANES]) {
+                *d = b as i32;
+            }
+            I32x8(v)
+        }
+
+        /// Widen the first `LANES` bytes of `s` (i8 weights).
+        #[inline(always)]
+        pub fn from_i8(s: &[i8]) -> I32x8 {
+            let mut v = [0; LANES];
+            for (d, &b) in v.iter_mut().zip(&s[..LANES]) {
+                *d = b as i32;
+            }
+            I32x8(v)
+        }
+
+        /// `self + a * b` per lane.
+        #[inline(always)]
+        pub fn mul_acc(mut self, a: I32x8, b: I32x8) -> I32x8 {
+            for ((acc, &av), &bv) in self.0.iter_mut().zip(&a.0).zip(&b.0) {
+                *acc += av * bv;
+            }
+            self
+        }
+
+        /// Store into the first `LANES` elements of `s`.
+        #[inline(always)]
+        pub fn store(self, s: &mut [i32]) {
+            s[..LANES].copy_from_slice(&self.0);
+        }
+
+        /// Horizontal sum (exact for i32 in any lane order).
+        #[inline(always)]
+        pub fn sum(self) -> i32 {
+            self.0.iter().sum()
+        }
+    }
+}
+
+pub use imp::{F32x8, I32x8};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_mul_acc_matches_per_lane_scalar() {
+        let a: Vec<f32> = (0..LANES).map(|i| i as f32 * 0.5 - 1.75).collect();
+        let b: Vec<f32> = (0..LANES).map(|i| 2.25 - i as f32 * 0.375).collect();
+        let acc = F32x8::splat(0.5).mul_acc(F32x8::load(&a), F32x8::load(&b)).to_array();
+        for (l, &v) in acc.iter().enumerate() {
+            // Exactly one mul and one add per lane — bitwise equal.
+            assert_eq!(v.to_bits(), (0.5f32 + a[l] * b[l]).to_bits(), "lane {l}");
+        }
+        assert_eq!(F32x8::zero().to_array(), [0.0; LANES]);
+    }
+
+    #[test]
+    fn i32_lanes_round_trip_and_reduce() {
+        let w: Vec<i8> = (0..LANES as i8).map(|i| i - 3).collect();
+        let x: Vec<u8> = (0..LANES as u8).map(|i| i.wrapping_mul(37)).collect();
+        let acc = I32x8::splat(10).mul_acc(I32x8::from_i8(&w), I32x8::from_u8(&x));
+        let mut got = [0i32; LANES];
+        acc.store(&mut got);
+        let mut want_sum = 0i32;
+        for (l, &g) in got.iter().enumerate() {
+            let want = 10 + (w[l] as i32) * (x[l] as i32);
+            assert_eq!(g, want, "lane {l}");
+            want_sum += want;
+        }
+        assert_eq!(acc.sum(), want_sum);
+        assert_eq!(I32x8::load(&got).sum(), want_sum);
+    }
+}

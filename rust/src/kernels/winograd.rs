@@ -1,0 +1,440 @@
+//! Winograd F(2x2, 3x3) convolution — the transform-domain lowering
+//! for 3x3 stride-1 layers (AlexNet conv3–5's layer class, where
+//! "Fast and Energy-Efficient CNN Inference on IoT Devices" shows it
+//! is the decisive CPU win).
+//!
+//! Each 2x2 output tile costs 16 multiply points instead of the 36
+//! MACs the direct/im2col forms spend — a 2.25x reduction in GEMM
+//! flops, bought with cheap streaming transforms:
+//!
+//! 1. **Weight transform** (once, at pack time — [`transform_weights`]
+//!    feeds [`super::pack::PackedConvWg`]): `U = G·g·Gᵀ` per
+//!    `(k, c)` 3x3 kernel, stored as 16 point matrices `(NK, C)`.
+//! 2. **Input transform** (per frame): gather each 4x4 input tile `d`
+//!    (zero-padded at the borders) and compute `V = Bᵀ·d·B`,
+//!    scattered into 16 point matrices `(C, T)` over the `T` tiles.
+//! 3. **16 point GEMMs**: `M_p = U_p · V_p` — plain [`gemm_into`]
+//!    calls in a fixed point order, so the per-element reduction order
+//!    over `C` is fixed.
+//! 4. **Inverse transform**: `Y = Aᵀ·M·A` per `(k, tile)`, plus bias
+//!    and fused ReLU, written as 2x2 output tiles (edge-clipped for
+//!    odd output sizes).
+//!
+//! **Numerics contract.**  Winograd output is *not* bit-identical to
+//! the im2col/direct lowerings (the transforms reassociate the f32
+//! reduction); cross-variant agreement is gated by the delegate's
+//! top-1 guardrail ([`crate::delegate::winograd_agreement`]), like the
+//! q8 gate.  *Within* the variant, results are bit-identical across
+//! every thread/tile configuration: each output element's value
+//! depends only on its tile's fixed transform arithmetic and the
+//! fixed-k-order point GEMMs, never on how the surface was banded.
+//! `tests/prop_kernels.rs` pins both properties.
+
+use std::sync::Arc;
+
+use crate::model::network::ConvSpec;
+use crate::obs::{self, TraceLevel};
+use crate::tensor::{MatView, Tensor};
+use crate::util::threadpool;
+
+use super::gemm::{gemm_into, BiasMode};
+use super::pack::PackedConvWg;
+use super::{row_bands, KernelOpts};
+
+/// Multiply points of F(2x2, 3x3): the 4x4 transform domain.
+pub const POINTS: usize = 16;
+
+/// Is this conv shape eligible for the Winograd lowering?  F(2,3)
+/// covers exactly the 3x3 stride-1 class (any padding, any channel
+/// counts); everything else stays on direct/im2col.
+pub fn winograd_supported(spec: &ConvSpec) -> bool {
+    spec.kh == 3 && spec.kw == 3 && spec.stride == 1
+}
+
+/// Transform OIHW weights `(NK, C, 3, 3)` into the 16 point matrices:
+/// `U = G·g·Gᵀ` per `(k, c)` kernel, returned as a dense
+/// `POINTS * NK * C` buffer indexed `u[p*nk*c + k*c + ci]` (each point
+/// matrix is a GEMM-ready `(NK, C)` operand).
+pub(crate) fn transform_weights(spec: &ConvSpec, w: &[f32]) -> Vec<f32> {
+    let (nk, c) = (spec.nk, spec.in_c);
+    assert_eq!(w.len(), nk * c * 9, "winograd weight length");
+    let mut u = vec![0.0f32; POINTS * nk * c];
+    for k in 0..nk {
+        for ci in 0..c {
+            let g = &w[(k * c + ci) * 9..(k * c + ci) * 9 + 9];
+            // t = G·g (4x3), G = [[1,0,0],[.5,.5,.5],[.5,-.5,.5],[0,0,1]].
+            let mut t = [0.0f32; 12];
+            for x in 0..3 {
+                let (g0, g1, g2) = (g[x], g[3 + x], g[6 + x]);
+                t[x] = g0;
+                t[3 + x] = 0.5 * (g0 + g1 + g2);
+                t[6 + x] = 0.5 * (g0 - g1 + g2);
+                t[9 + x] = g2;
+            }
+            // U = t·Gᵀ (4x4), scattered per point p = y*4 + x.
+            for y in 0..4 {
+                let (t0, t1, t2) = (t[3 * y], t[3 * y + 1], t[3 * y + 2]);
+                let row = [t0, 0.5 * (t0 + t1 + t2), 0.5 * (t0 - t1 + t2), t2];
+                for (x, &v) in row.iter().enumerate() {
+                    u[(y * 4 + x) * nk * c + k * c + ci] = v;
+                }
+            }
+        }
+    }
+    u
+}
+
+/// Writable window of one frame's conv output surface: element
+/// `(k, y, x)` (logical row `y`) lives at
+/// `ptr + k * chan_stride + (y - y_base) * width + x`.
+#[derive(Clone, Copy)]
+pub(crate) struct WgOut {
+    pub ptr: *mut f32,
+    pub chan_stride: usize,
+    pub y_base: usize,
+    pub width: usize,
+}
+
+/// Compute conv output rows `[r0, r1)` of ONE frame through the full
+/// Winograd pipeline (input transform → 16 point GEMMs → inverse
+/// transform + bias + ReLU).  Tiles overlapping the range are
+/// processed whole and edge-clipped on write, so any banding of the
+/// surface yields bit-identical values per element.
+///
+/// SAFETY: `out` must provide live, exclusive storage for rows
+/// `[r0, min(r1, oh))` of every output channel.
+pub(crate) unsafe fn winograd_rows_into(
+    frame: &[f32],
+    p: &PackedConvWg,
+    r0: usize,
+    r1: usize,
+    tile: usize,
+    out: WgOut,
+) {
+    let spec = &p.spec;
+    let (c, h, w) = (spec.in_c, spec.in_h, spec.in_w);
+    let (oh, ow) = (spec.out_h(), spec.out_w());
+    let nk = spec.nk;
+    let pad = spec.pad as isize;
+    assert_eq!(frame.len(), c * h * w, "winograd frame length");
+    let tiles_x = ow.div_ceil(2);
+    let ty0 = r0 / 2;
+    let ty1 = r1.min(oh).div_ceil(2);
+    if ty0 >= ty1 {
+        return;
+    }
+    let t_cnt = tiles_x * (ty1 - ty0);
+
+    // Input transform: V = Bᵀ·d·B per (ci, tile), scattered into the
+    // 16 point matrices (C, T).
+    let mut v = vec![0.0f32; POINTS * c * t_cnt];
+    for ci in 0..c {
+        let plane = &frame[ci * h * w..(ci + 1) * h * w];
+        for ty in ty0..ty1 {
+            let iy0 = (2 * ty) as isize - pad;
+            for tx in 0..tiles_x {
+                let ix0 = (2 * tx) as isize - pad;
+                let t = (ty - ty0) * tiles_x + tx;
+                // Gather the 4x4 input tile, zero beyond the borders.
+                let mut d = [0.0f32; 16];
+                for (y, drow) in d.chunks_exact_mut(4).enumerate() {
+                    let iy = iy0 + y as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    let row = &plane[iy as usize * w..(iy as usize + 1) * w];
+                    for (x, dv) in drow.iter_mut().enumerate() {
+                        let ix = ix0 + x as isize;
+                        if ix >= 0 && ix < w as isize {
+                            *dv = row[ix as usize];
+                        }
+                    }
+                }
+                // Bᵀ·d, then ·B.
+                let mut bt = [0.0f32; 16];
+                for x in 0..4 {
+                    bt[x] = d[x] - d[8 + x];
+                    bt[4 + x] = d[4 + x] + d[8 + x];
+                    bt[8 + x] = d[8 + x] - d[4 + x];
+                    bt[12 + x] = d[4 + x] - d[12 + x];
+                }
+                for y in 0..4 {
+                    let r = &bt[4 * y..4 * y + 4];
+                    let vals = [r[0] - r[2], r[1] + r[2], r[2] - r[1], r[1] - r[3]];
+                    for (x, &val) in vals.iter().enumerate() {
+                        v[(y * 4 + x) * c * t_cnt + ci * t_cnt + t] = val;
+                    }
+                }
+            }
+        }
+    }
+
+    // 16 point GEMMs in fixed order: M_p (NK, T) = U_p (NK, C) · V_p.
+    // Sequential single-threaded GEMMs keep the per-element k-order
+    // fixed, so the surrounding band split never changes a value.
+    let mut m = vec![0.0f32; POINTS * nk * t_cnt];
+    let gopts = KernelOpts { threads: 1, tile };
+    for pt in 0..POINTS {
+        gemm_into(
+            MatView::dense(&p.u[pt * nk * c..(pt + 1) * nk * c], nk, c),
+            MatView::dense(&v[pt * c * t_cnt..(pt + 1) * c * t_cnt], c, t_cnt),
+            BiasMode::None,
+            false,
+            gopts,
+            &mut m[pt * nk * t_cnt..(pt + 1) * nk * t_cnt],
+        );
+    }
+
+    // Inverse transform: Y = Aᵀ·M·A + bias (+ ReLU), 2x2 tiles
+    // edge-clipped to [r0, min(r1, oh)) x [0, ow).
+    let bias = p.bias.data();
+    let r1c = r1.min(oh);
+    for k in 0..nk {
+        let bk = bias[k];
+        let kt = k * t_cnt;
+        for ty in ty0..ty1 {
+            for tx in 0..tiles_x {
+                let t = (ty - ty0) * tiles_x + tx;
+                let mut mm = [0.0f32; 16];
+                for (pt, slot) in mm.iter_mut().enumerate() {
+                    *slot = m[pt * nk * t_cnt + kt + t];
+                }
+                let mut z = [0.0f32; 8];
+                for x in 0..4 {
+                    z[x] = mm[x] + mm[4 + x] + mm[8 + x];
+                    z[4 + x] = mm[4 + x] - mm[8 + x] - mm[12 + x];
+                }
+                for i in 0..2 {
+                    let oy = 2 * ty + i;
+                    if oy < r0 || oy >= r1c {
+                        continue;
+                    }
+                    let zr = &z[4 * i..4 * i + 4];
+                    let pair = [zr[0] + zr[1] + zr[2], zr[1] - zr[2] - zr[3]];
+                    for (j, yv) in pair.into_iter().enumerate() {
+                        let ox = 2 * tx + j;
+                        if ox >= ow {
+                            continue;
+                        }
+                        let mut val = yv + bk;
+                        if spec.relu && val < 0.0 {
+                            val = 0.0;
+                        }
+                        *out.ptr.add(k * out.chan_stride + (oy - out.y_base) * out.width + ox) =
+                            val;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Pointer capsule for the tile-row-banded frame dispatch; bands write
+/// disjoint output row pairs and the entry point blocks on scope
+/// completion.
+struct WgCapsule {
+    frame: *const f32,
+    frame_len: usize,
+    packed: *const PackedConvWg,
+    oh: usize,
+    band_tiles: usize,
+    tile: usize,
+    dst: WgOut,
+}
+
+unsafe impl Send for WgCapsule {}
+unsafe impl Sync for WgCapsule {}
+
+/// Run one frame's Winograd conv into `dst`, split into tile-row
+/// bands (each band owns output rows `[2*ty0, min(2*ty1, oh))` —
+/// disjoint and covering, with no tile recomputation).
+fn frame_bands(frame: &[f32], p: &PackedConvWg, opts: KernelOpts, dst: WgOut) {
+    let oh = p.spec.out_h();
+    let tiles_y = oh.div_ceil(2);
+    let (bands, band_tiles) = row_bands(1, tiles_y, opts.threads);
+    if !opts.parallel() || bands < 2 {
+        for t in 0..bands {
+            let r0 = t * band_tiles * 2;
+            let r1 = ((t + 1) * band_tiles * 2).min(oh);
+            if r0 >= r1 {
+                continue;
+            }
+            // SAFETY: sequential bands over live borrows; dst covers
+            // the full surface.
+            unsafe { winograd_rows_into(frame, p, r0, r1, opts.tile, dst) };
+        }
+        return;
+    }
+    let cap = Arc::new(WgCapsule {
+        frame: frame.as_ptr(),
+        frame_len: frame.len(),
+        packed: p,
+        oh,
+        band_tiles,
+        tile: opts.tile,
+        dst,
+    });
+    threadpool::parallel_for(bands, move |t| {
+        let _b_span =
+            obs::span_with(TraceLevel::Kernel, "kernel", || format!("wino.band t{t}"));
+        let r0 = t * cap.band_tiles * 2;
+        let r1 = ((t + 1) * cap.band_tiles * 2).min(cap.oh);
+        if r0 >= r1 {
+            return;
+        }
+        // SAFETY: bands write disjoint row-pair ranges of dst; the
+        // pool scope blocks before the borrows expire.
+        unsafe {
+            let frame = std::slice::from_raw_parts(cap.frame, cap.frame_len);
+            winograd_rows_into(frame, &*cap.packed, r0, r1, cap.tile, cap.dst);
+        }
+    });
+}
+
+/// Compute the full conv surface of one frame into `dst` (dense
+/// `(NK, OH*OW)` scratch), tile-row-parallel — the fused two-phase
+/// schedule's phase 1 for Winograd heads.
+pub(crate) fn winograd_frame_into(
+    frame: &[f32],
+    p: &PackedConvWg,
+    opts: KernelOpts,
+    dst: &mut [f32],
+) {
+    let (oh, ow) = (p.spec.out_h(), p.spec.out_w());
+    assert_eq!(dst.len(), p.spec.nk * oh * ow, "winograd surface scratch length");
+    let out = WgOut { ptr: dst.as_mut_ptr(), chan_stride: oh * ow, y_base: 0, width: ow };
+    frame_bands(frame, p, opts, out);
+}
+
+/// Winograd F(2,3) convolution over a pre-transformed weight cache.
+/// `x: (N, C, H, W)` -> `(N, NK, OH, OW)` with bias and fused ReLU —
+/// same shape and layout as [`super::conv_im2col`], within the
+/// guardrailed numeric tolerance of it, and bit-identical to itself
+/// across every `KernelOpts` configuration.
+pub fn conv_winograd(x: &Tensor, p: &PackedConvWg, opts: KernelOpts) -> Tensor {
+    let spec = &p.spec;
+    let n = x.dim(0);
+    assert_eq!(x.shape(), &[n, spec.in_c, spec.in_h, spec.in_w], "conv input shape");
+    let (oh, ow) = (spec.out_h(), spec.out_w());
+    let frame_len = spec.in_c * spec.in_h * spec.in_w;
+    let out_frame = spec.nk * oh * ow;
+    let mut out = Tensor::zeros(vec![n, spec.nk, oh, ow]);
+    let out_ptr = out.data_mut().as_mut_ptr();
+    for ni in 0..n {
+        let _k_span = obs::span_with(TraceLevel::Kernel, "kernel", || {
+            format!("winograd {}x{}x{} nk{}", spec.in_c, spec.in_h, spec.in_w, spec.nk)
+        });
+        let frame = &x.data()[ni * frame_len..(ni + 1) * frame_len];
+        // SAFETY: in-bounds frame offset of the output tensor.
+        let dst = WgOut {
+            ptr: unsafe { out_ptr.add(ni * out_frame) },
+            chan_stride: oh * ow,
+            y_base: 0,
+            width: ow,
+        };
+        frame_bands(frame, p, opts, dst);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::conv::conv_direct;
+    use crate::util::rng::Pcg;
+
+    fn random(shape: Vec<usize>, seed: u64) -> Tensor {
+        let n = shape.iter().product();
+        let mut rng = Pcg::seeded(seed);
+        Tensor::new(shape, rng.normal_vec(n, 1.0))
+    }
+
+    fn case(spec: ConvSpec, batch: usize, seed: u64) {
+        let x = random(vec![batch, spec.in_c, spec.in_h, spec.in_w], seed);
+        let w = random(vec![spec.nk, spec.in_c, 3, 3], seed + 1);
+        let b = random(vec![spec.nk], seed + 2);
+        let packed = PackedConvWg::pack(&spec, &w, &b);
+        let want = conv_direct(&x, &w, &b, &spec, KernelOpts::seq());
+        let base = conv_winograd(&x, &packed, KernelOpts::seq());
+        assert_eq!(base.shape(), want.shape(), "{spec:?}");
+        let diff = base.max_abs_diff(&want);
+        assert!(diff < 1e-3, "winograd vs direct diff {diff} for {spec:?}");
+        // Bit-identity across thread/tile configurations.
+        for opts in [
+            KernelOpts::tiled(),
+            KernelOpts { threads: 3, tile: 17 },
+            KernelOpts { threads: 8, tile: 64 },
+        ] {
+            let got = conv_winograd(&x, &packed, opts);
+            assert_eq!(got, base, "{spec:?} ({opts:?})");
+        }
+    }
+
+    #[test]
+    fn matches_direct_across_geometries() {
+        // Even and odd output sizes, pad 0/1/2, batch > 1.
+        case(
+            ConvSpec { in_c: 3, in_h: 12, in_w: 12, nk: 6, kh: 3, kw: 3, stride: 1, pad: 1, relu: true },
+            2,
+            90,
+        );
+        case(
+            ConvSpec { in_c: 2, in_h: 13, in_w: 11, nk: 5, kh: 3, kw: 3, stride: 1, pad: 0, relu: false },
+            1,
+            91,
+        );
+        case(
+            ConvSpec { in_c: 1, in_h: 7, in_w: 7, nk: 3, kh: 3, kw: 3, stride: 1, pad: 2, relu: true },
+            3,
+            92,
+        );
+        case(
+            ConvSpec { in_c: 4, in_h: 5, in_w: 9, nk: 2, kh: 3, kw: 3, stride: 1, pad: 1, relu: false },
+            1,
+            93,
+        );
+    }
+
+    #[test]
+    fn eligibility_is_exactly_3x3_stride_1() {
+        let base = ConvSpec {
+            in_c: 1, in_h: 8, in_w: 8, nk: 1, kh: 3, kw: 3, stride: 1, pad: 1, relu: false,
+        };
+        assert!(winograd_supported(&base));
+        assert!(!winograd_supported(&ConvSpec { kh: 5, kw: 5, ..base }));
+        assert!(!winograd_supported(&ConvSpec { stride: 2, ..base }));
+        assert!(!winograd_supported(&ConvSpec { kh: 1, kw: 1, ..base }));
+        assert!(winograd_supported(&ConvSpec { pad: 0, ..base }));
+    }
+
+    #[test]
+    fn banded_rows_reassemble_the_full_surface() {
+        // Computing [0, oh) in one call vs arbitrary (odd) splits must
+        // produce bit-identical surfaces — the fused band contract.
+        let spec = ConvSpec {
+            in_c: 2, in_h: 9, in_w: 9, nk: 4, kh: 3, kw: 3, stride: 1, pad: 1, relu: true,
+        };
+        let x = random(vec![1, 2, 9, 9], 94);
+        let w = random(vec![4, 2, 3, 3], 95);
+        let b = random(vec![4], 96);
+        let packed = PackedConvWg::pack(&spec, &w, &b);
+        let (oh, ow) = (spec.out_h(), spec.out_w());
+        let mut whole = vec![0.0f32; 4 * oh * ow];
+        winograd_frame_into(x.data(), &packed, KernelOpts::seq(), &mut whole);
+        for splits in [vec![0, 3, oh], vec![0, 1, 5, oh], vec![0, oh]] {
+            let mut pieced = vec![-1.0f32; 4 * oh * ow];
+            for wdw in splits.windows(2) {
+                let (r0, r1) = (wdw[0], wdw[1]);
+                let out = WgOut {
+                    ptr: pieced.as_mut_ptr(),
+                    chan_stride: oh * ow,
+                    y_base: 0,
+                    width: ow,
+                };
+                // SAFETY: single-threaded, disjoint row ranges.
+                unsafe { winograd_rows_into(x.data(), &packed, r0, r1, 64, out) };
+            }
+            assert_eq!(pieced, whole, "splits {splits:?}");
+        }
+    }
+}

@@ -46,6 +46,11 @@
 //! * [`data`] — procedural digit corpus (mirrors `python/compile/digits.py`)
 //!   and PGM/PPM image IO.
 
+// The `portable-simd` cargo feature swaps the scalar micro-kernel
+// fallback in `kernels::simd` for real `std::simd` vectors (nightly
+// toolchains only; results are bit-identical either way).
+#![cfg_attr(feature = "portable-simd", feature(portable_simd))]
+
 pub mod coordinator;
 pub mod cpu;
 pub mod data;

@@ -65,6 +65,7 @@ Execution is configured by a typed spec built from flags:
                       delegate:auto (cost-driven automatic placement)
   --device note4|m9   device profile for delegate:auto
   --q8                let the guardrail-gated quantized backend compete (auto only)
+  --wino              let the guardrail-gated Winograd F(2,3) backend compete (auto only)
   --nofuse            run the plan layer-by-layer instead of the fused-stage IR
   --plan-batch N      frames per dispatch the plan must serve (enforces max_batch)
 
@@ -108,6 +109,10 @@ fn artifacts_dir(args: &cnndroid::util::args::Args) -> PathBuf {
 fn spec_opts(spec: ArgSpec) -> ArgSpec {
     spec.opt_no_default("device", "device profile for --method delegate:auto (note4 | m9)")
         .flag("q8", "let the guardrail-gated quantized backend compete (delegate:auto only)")
+        .flag(
+            "wino",
+            "let the guardrail-gated Winograd F(2,3) backend compete (delegate:auto only)",
+        )
         .flag("nofuse", "run the plan layer-by-layer instead of through the fused-stage IR")
 }
 
@@ -180,6 +185,9 @@ fn apply_spec_knobs(
     }
     if args.has("q8") {
         spec = spec.with_q8().map_err(anyhow::Error::new)?;
+    }
+    if args.has("wino") {
+        spec = spec.with_winograd().map_err(anyhow::Error::new)?;
     }
     if args.has("nofuse") {
         spec = spec.with_fusion(false);
@@ -436,6 +444,7 @@ fn plan_cmd(argv: Vec<String>) -> Result<()> {
         .opt_no_default("device", "device profile: note4 | m9 (default: note4)")
         .opt("batch", "1", "frames per dispatch (enforces backend max_batch in the solve)")
         .flag("q8", "let the quantized backend compete in the preview (no guardrail run)")
+        .flag("wino", "let the Winograd backend compete in the preview (no guardrail run)")
         .flag("json", "emit the canonical spec, placements, and cost estimates as JSON")
         .flag("simulated", "assume every artifact exists (no manifest needed)"),
     );
@@ -474,6 +483,11 @@ fn plan_cmd(argv: Vec<String>) -> Result<()> {
         // guardrail before a real q8 plan executes.
         registry = registry.with_q8();
     }
+    if args.has("wino") {
+        // Same preview-only deal for the Winograd backend.
+        exec = exec.with_winograd().map_err(anyhow::Error::new)?;
+        registry = registry.with_winograd();
+    }
     let nets: Vec<_> = match args.get("net") {
         "all" => zoo::all(),
         name => vec![zoo::by_name(name)
@@ -484,17 +498,21 @@ fn plan_cmd(argv: Vec<String>) -> Result<()> {
     for net in &nets {
         let report = partitioner.partition(net)?;
         if args.has("json") {
-            json_nets.push(plan_json(net, &exec, &partitioner, &report));
+            json_nets.push(plan_json(net, &exec, &registry, &partitioner, &report));
             continue;
         }
         println!("{} on {} — predicted {:.3} ms/frame", net.name, dev.name, report.predicted_s * 1e3);
-        println!("  {:<10} {:<6} {:<18} {:>12} {:>12}", "layer", "kind", "backend", "exec ms", "swap ms");
+        println!(
+            "  {:<10} {:<6} {:<18} {:<10} {:>12} {:>12}",
+            "layer", "kind", "backend", "variant", "exec ms", "swap ms"
+        );
         for a in &report.assignments {
             println!(
-                "  {:<10} {:<6} {:<18} {:>12.4} {:>12.4}",
+                "  {:<10} {:<6} {:<18} {:<10} {:>12.4} {:>12.4}",
                 a.layer,
                 a.kind,
                 a.backend,
+                conv_variant(&registry, &a.backend, a.kind),
                 a.cost_s * 1e3,
                 a.swap_s * 1e3
             );
@@ -558,6 +576,7 @@ fn plan_cmd(argv: Vec<String>) -> Result<()> {
 fn plan_json(
     net: &cnndroid::model::network::Network,
     exec: &ExecSpec,
+    registry: &Registry,
     partitioner: &Partitioner<'_>,
     report: &cnndroid::delegate::PartitionReport,
 ) -> Json {
@@ -569,6 +588,7 @@ fn plan_json(
                 ("layer", Json::str(a.layer.clone())),
                 ("kind", Json::str(a.kind)),
                 ("backend", Json::str(a.backend.clone())),
+                ("variant", Json::str(conv_variant(registry, &a.backend, a.kind))),
                 ("exec_ms", Json::num(a.cost_s * 1e3)),
                 ("swap_ms", Json::num(a.swap_s * 1e3)),
                 ("fuse_saving_ms", Json::num(a.fuse_s * 1e3)),
@@ -747,7 +767,7 @@ fn profile_one(
     let per_frame = 1.0 / cfg.frames as f64;
     let mut rows = Vec::new();
     let (mut total_meas, mut total_pred) = (0.0f64, 0.0f64);
-    for (lname, backend, pred) in &predicted {
+    for (lname, backend, variant, pred) in &predicted {
         let (p50, p95) = match per_layer.iter_mut().find(|(n, _)| n == lname) {
             Some((_, s)) => (s.p50() * per_frame, s.percentile(95.0) * per_frame),
             None => (f64::NAN, f64::NAN),
@@ -756,7 +776,7 @@ fn profile_one(
             total_meas += p50;
         }
         total_pred += pred;
-        rows.push((lname.clone(), backend.clone(), p50, p95, *pred));
+        rows.push((lname.clone(), backend.clone(), variant.clone(), p50, p95, *pred));
     }
 
     if text {
@@ -769,14 +789,15 @@ fn profile_one(
             if manifest.is_none() { ", synthetic weights" } else { "" }
         );
         println!(
-            "  {:<10} {:<16} {:>10} {:>10} {:>10} {:>9}",
-            "layer", "backend", "p50 ms", "p95 ms", "pred ms", "resid"
+            "  {:<10} {:<16} {:<9} {:>10} {:>10} {:>10} {:>9}",
+            "layer", "backend", "variant", "p50 ms", "p95 ms", "pred ms", "resid"
         );
-        for (lname, backend, p50, p95, pred) in &rows {
+        for (lname, backend, variant, p50, p95, pred) in &rows {
             println!(
-                "  {:<10} {:<16} {:>10.4} {:>10.4} {:>10.4} {:>+8.1}%",
+                "  {:<10} {:<16} {:<9} {:>10.4} {:>10.4} {:>10.4} {:>+8.1}%",
                 lname,
                 backend,
+                variant,
                 p50 * 1e3,
                 p95 * 1e3,
                 pred * 1e3,
@@ -784,7 +805,7 @@ fn profile_one(
             );
         }
         println!(
-            "  {:<27} {:>10.4} {:>21.4} {:>+8.1}%",
+            "  {:<37} {:>10.4} {:>21.4} {:>+8.1}%",
             "total",
             total_meas * 1e3,
             total_pred * 1e3,
@@ -806,10 +827,11 @@ fn profile_one(
 
     let layer_rows = rows
         .iter()
-        .map(|(lname, backend, p50, p95, pred)| {
+        .map(|(lname, backend, variant, p50, p95, pred)| {
             Json::obj(vec![
                 ("layer", Json::str(lname.clone())),
                 ("backend", Json::str(backend.clone())),
+                ("variant", Json::str(variant.clone())),
                 ("measured_p50_ms", Json::num(p50 * 1e3)),
                 ("measured_p95_ms", Json::num(p95 * 1e3)),
                 ("predicted_ms", Json::num(pred * 1e3)),
@@ -839,6 +861,19 @@ fn profile_one(
     ]))
 }
 
+/// The conv-kernel variant `backend` executes conv layers with
+/// (direct | im2col | winograd), or "-" for non-conv rows where the
+/// variant axis does not apply.
+fn conv_variant(registry: &Registry, backend: &str, kind: &str) -> String {
+    if kind != "conv" {
+        return "-".to_string();
+    }
+    registry
+        .get(backend)
+        .map(|b| b.capability().kernel.as_str().to_string())
+        .unwrap_or_else(|| "-".to_string())
+}
+
 /// Run warmup + timed batches, folding the engine's per-stage wall
 /// times into ordered [`Samples`] (seconds per batch).
 fn measure_stages(
@@ -866,15 +901,15 @@ fn measure_stages(
     Ok(acc)
 }
 
-/// Per-layer `(layer, backend, predicted secs/frame)` from the delegate
-/// cost model: the partitioner's own assignments for auto specs, its
-/// fixed-method choice (the assignment `ExecutionPlan::build` makes)
-/// for everything else.
+/// Per-layer `(layer, backend, conv variant, predicted secs/frame)`
+/// from the delegate cost model: the partitioner's own assignments for
+/// auto specs, its fixed-method choice (the assignment
+/// `ExecutionPlan::build` makes) for everything else.
 fn layer_predictions(
     net: &cnndroid::model::network::Network,
     exec: &ExecSpec,
     manifest: Option<&Manifest>,
-) -> Result<Vec<(String, String, f64)>> {
+) -> Result<Vec<(String, String, String, f64)>> {
     let dev = exec.device_spec();
     let mut registry = match manifest {
         Some(m) => Registry::detect(m),
@@ -883,13 +918,19 @@ fn layer_predictions(
     if exec.precision() != Precision::F32 {
         registry = registry.with_q8();
     }
+    if exec.winograd() {
+        registry = registry.with_winograd();
+    }
     let partitioner = Partitioner::new(&registry, &dev).with_batch(exec.batch());
     if exec.is_auto() {
         let report = partitioner.partition(net)?;
         return Ok(report
             .assignments
             .iter()
-            .map(|a| (a.layer.clone(), a.backend.clone(), a.cost_s))
+            .map(|a| {
+                let variant = conv_variant(&registry, &a.backend, a.kind);
+                (a.layer.clone(), a.backend.clone(), variant, a.cost_s)
+            })
             .collect());
     }
     let method = exec.method_name();
@@ -906,7 +947,12 @@ fn layer_predictions(
         .enumerate()
         .map(|(li, layer)| {
             let b = &backends[choice[li]];
-            (layer.name().to_string(), b.name().to_string(), b.predict(&dev, net, li))
+            let variant = if layer.kind() == "conv" {
+                b.capability().kernel.as_str().to_string()
+            } else {
+                "-".to_string()
+            };
+            (layer.name().to_string(), b.name().to_string(), variant, b.predict(&dev, net, li))
         })
         .collect())
 }

@@ -56,6 +56,7 @@ impl Session {
             method: None,
             device: None,
             precision: None,
+            winograd: None,
             fusion: None,
             batch: None,
             threads: None,
@@ -114,6 +115,7 @@ pub struct SessionBuilder {
     method: Option<String>,
     device: Option<String>,
     precision: Option<Precision>,
+    winograd: Option<bool>,
     fusion: Option<bool>,
     batch: Option<usize>,
     threads: Option<usize>,
@@ -154,6 +156,16 @@ impl SessionBuilder {
     /// Sugar for `.precision(Precision::Q8Opt)`.
     pub fn q8(self) -> Self {
         self.precision(Precision::Q8Opt)
+    }
+
+    /// Let the guardrail-gated Winograd F(2,3) backend compete for
+    /// eligible 3x3 stride-1 convs in auto placement (the `:wino`
+    /// opt-in; off by default so serving numerics stay at the im2col
+    /// reference).  Errors at `spec()`/`build()` time on fixed
+    /// backends, whose kernel variant is already pinned.
+    pub fn winograd(mut self, on: bool) -> Self {
+        self.winograd = Some(on);
+        self
     }
 
     /// Fused-stage execution on/off (on by default; off = layerwise,
@@ -224,6 +236,11 @@ impl SessionBuilder {
                 Precision::Q8Opt => spec.with_q8()?,
                 _ => spec.with_precision(p)?,
             };
+        }
+        match self.winograd {
+            Some(true) => spec = spec.with_winograd()?,
+            // .winograd(false) restates the default, like :nowino.
+            Some(false) | None => {}
         }
         if let Some(f) = self.fusion {
             spec = spec.with_fusion(f);
@@ -330,6 +347,28 @@ mod tests {
         assert!(matches!(
             Session::for_net("lenet5").batch(0).spec(),
             Err(SpecError::BadValue { .. })
+        ));
+    }
+
+    #[test]
+    fn winograd_knob_composes_and_rejects_fixed_backends() {
+        let spec = Session::for_net("alexnet")
+            .device("m9")
+            .q8()
+            .winograd(true)
+            .batch(4)
+            .spec()
+            .unwrap();
+        assert!(spec.winograd());
+        assert_eq!(spec.to_string(), "delegate:auto:m9:q8:wino:batch=4");
+        // Off restates the default and stays out of the canonical form.
+        let spec = Session::for_net("alexnet").winograd(false).spec().unwrap();
+        assert!(!spec.winograd());
+        assert_eq!(spec.to_string(), "delegate:auto");
+        // Fixed backends pin their kernel variant.
+        assert!(matches!(
+            Session::for_net("lenet5").method("cpu-gemm").winograd(true).spec(),
+            Err(SpecError::WinogradOnFixed { .. })
         ));
     }
 

@@ -16,6 +16,7 @@
 //!            | <backend-name>  segment*          fixed backend ("cpu-seq", "mxu", ...)
 //!   segment := ":" ( <device>                    note4 | m9 (auto only)
 //!            | "q8" | "noq8"                     quantized backend opt-in (auto only)
+//!            | "wino" | "nowino"                 Winograd F(2,3) opt-in (auto only)
 //!            | "fuse" | "nofuse"                 fused-stage IR on/off
 //!            | "batch=" <n>                      frames per dispatch the plan serves
 //!            | "threads=" <n>                    kernel thread override
@@ -80,6 +81,7 @@ pub enum Precision {
 pub struct ExecSpec {
     backend: BackendSel,
     precision: Precision,
+    winograd: bool,
     fusion: bool,
     batch: usize,
     threads: Option<usize>,
@@ -111,6 +113,9 @@ pub enum SpecError {
     /// it (`:q8` on a fixed f32 backend, `precision(F32)` on
     /// `cpu-gemm-q8`, `Q8Force` on auto).
     PrecisionConflict { backend: String, requested: &'static str },
+    /// `:wino` on a fixed backend — the Winograd opt-in only steers
+    /// the auto partitioner's kernel competition.
+    WinogradOnFixed { backend: String },
     /// Mutually exclusive keyword segments (`q8`+`noq8`,
     /// `fuse`+`nofuse`).
     SegmentConflict { a: &'static str, b: &'static str },
@@ -138,7 +143,7 @@ impl fmt::Display for SpecError {
             SpecError::UnknownSegment { seg, spec } => write!(
                 f,
                 "unknown segment {seg:?} in spec {spec:?} (expected a device: note4 | m9, \
-                 q8 | noq8 | fuse | nofuse, or batch= | threads= | tile=)"
+                 q8 | noq8 | wino | nowino | fuse | nofuse, or batch= | threads= | tile=)"
             ),
             SpecError::UnknownDevice(d) => {
                 write!(f, "unknown device {d:?} (try note4 | m9)")
@@ -155,6 +160,11 @@ impl fmt::Display for SpecError {
                 f,
                 "precision {requested} is impossible for backend {backend:?} \
                  (q8 opt-in applies to delegate:auto; cpu-gemm-q8 is always quantized)"
+            ),
+            SpecError::WinogradOnFixed { backend } => write!(
+                f,
+                "wino only applies to delegate:auto specs, not the fixed backend {backend:?} \
+                 (the Winograd opt-in lets cpu-wino compete in auto placement)"
             ),
             SpecError::SegmentConflict { a, b } => {
                 write!(f, "conflicting segments {a:?} and {b:?}; pick one")
@@ -192,6 +202,7 @@ impl ExecSpec {
         ExecSpec {
             backend: BackendSel::Auto { device: None },
             precision: Precision::F32,
+            winograd: false,
             fusion: true,
             batch: 1,
             threads: None,
@@ -217,6 +228,7 @@ impl ExecSpec {
         Ok(ExecSpec {
             backend: BackendSel::Fixed(name.to_string()),
             precision,
+            winograd: false,
             fusion: true,
             batch: 1,
             threads: None,
@@ -233,6 +245,12 @@ impl ExecSpec {
 
     pub fn precision(&self) -> Precision {
         self.precision
+    }
+
+    /// Is the guardrail-gated Winograd F(2,3) backend allowed to
+    /// compete for eligible 3x3 stride-1 convs (the `:wino` opt-in)?
+    pub fn winograd(&self) -> bool {
+        self.winograd
     }
 
     /// Does the engine run the plan through the fused-stage IR?
@@ -355,6 +373,22 @@ impl ExecSpec {
         }
     }
 
+    /// Opt the guardrail-gated Winograd F(2,3) backend into auto
+    /// placement (the `:wino` segment).  Like `:q8`, this is
+    /// meaningless on fixed backends — their kernel variant is already
+    /// pinned — so those error instead of silently ignoring the knob.
+    pub fn with_winograd(mut self) -> Result<ExecSpec, SpecError> {
+        match &self.backend {
+            BackendSel::Fixed(name) => {
+                Err(SpecError::WinogradOnFixed { backend: name.clone() })
+            }
+            BackendSel::Auto { .. } => {
+                self.winograd = true;
+                Ok(self)
+            }
+        }
+    }
+
     /// Run the plan through / around the fused-stage IR.
     pub fn with_fusion(mut self, on: bool) -> ExecSpec {
         self.fusion = on;
@@ -453,6 +487,9 @@ impl fmt::Display for ExecSpec {
         if self.precision == Precision::Q8Opt {
             f.write_str(":q8")?;
         }
+        if self.winograd {
+            f.write_str(":wino")?;
+        }
         if !self.fusion {
             f.write_str(":nofuse")?;
         }
@@ -479,6 +516,7 @@ impl fmt::Display for ExecSpec {
 struct Segments {
     device: Option<String>,
     q8: Option<bool>,
+    wino: Option<bool>,
     fuse: Option<bool>,
     batch: Option<usize>,
     threads: Option<usize>,
@@ -552,6 +590,18 @@ impl FromStr for ExecSpec {
                         return Err(SpecError::SegmentConflict { a: "q8", b: "noq8" })
                     }
                     _ => seen.q8 = Some(false),
+                },
+                "wino" => match seen.wino {
+                    Some(false) => {
+                        return Err(SpecError::SegmentConflict { a: "nowino", b: "wino" })
+                    }
+                    _ => seen.wino = Some(true),
+                },
+                "nowino" => match seen.wino {
+                    Some(true) => {
+                        return Err(SpecError::SegmentConflict { a: "wino", b: "nowino" })
+                    }
+                    _ => seen.wino = Some(false),
                 },
                 "fuse" => match seen.fuse {
                     Some(false) => {
@@ -640,6 +690,12 @@ impl FromStr for ExecSpec {
                 }
             }
             None => {}
+        }
+        match seen.wino {
+            Some(true) => spec = spec.with_winograd()?,
+            // Explicit :nowino restates the default — a no-op on every
+            // backend (nothing forces Winograd).
+            Some(false) | None => {}
         }
         if let Some(fuse) = seen.fuse {
             spec = spec.with_fusion(fuse);
@@ -757,6 +813,34 @@ mod tests {
         assert_eq!(fixed.batch(), 8);
         assert!(!fixed.fusion());
         assert_eq!(fixed.to_string(), "cpu-gemm:nofuse:batch=8");
+    }
+
+    #[test]
+    fn wino_knob_round_trips_and_conflicts() {
+        let spec = parse("delegate:auto:wino");
+        assert!(spec.winograd());
+        assert_eq!(spec.to_string(), "delegate:auto:wino");
+        // Canonical segment order: after :q8, before :nofuse.
+        let full = parse("delegate:auto:m9:nofuse:wino:q8");
+        assert_eq!(full.to_string(), "delegate:auto:m9:q8:wino:nofuse");
+        // Defaults stay out of the canonical form; duplicates dedupe.
+        assert!(!parse("delegate:auto").winograd());
+        assert_eq!(parse("delegate:auto:nowino").to_string(), "delegate:auto");
+        assert_eq!(parse("delegate:auto:wino:wino").to_string(), "delegate:auto:wino");
+        // Conflicting keyword pair is rejected, not last-wins.
+        assert!(matches!("delegate:auto:wino:nowino".parse::<ExecSpec>(),
+            Err(SpecError::SegmentConflict { a: "wino", b: "nowino" })));
+        assert!(matches!("delegate:auto:nowino:wino".parse::<ExecSpec>(),
+            Err(SpecError::SegmentConflict { a: "nowino", b: "wino" })));
+        // Fixed backends pin their kernel variant: :wino errors there
+        // (while :nowino restates the universal default — a no-op).
+        assert!(matches!("cpu-gemm:wino".parse::<ExecSpec>(),
+            Err(SpecError::WinogradOnFixed { .. })));
+        assert!(matches!(parse("cpu-gemm").with_winograd(),
+            Err(SpecError::WinogradOnFixed { .. })));
+        assert_eq!(parse("cpu-gemm:nowino").to_string(), "cpu-gemm");
+        // Modifier mirrors the grammar on auto specs.
+        assert!(ExecSpec::auto().with_winograd().unwrap().winograd());
     }
 
     #[test]

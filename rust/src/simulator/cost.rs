@@ -188,6 +188,30 @@ pub fn conv_time_cpu_gemm(dev: &DeviceSpec, spec: &ConvSpec, threads: usize) -> 
     im2col_time(dev, spec) + gemm_time_cpu(dev, spec.nk, k, n, threads)
 }
 
+/// CPU conv via the Winograd F(2,3) transform-domain lowering, seconds
+/// for one frame — defined only for 3x3 stride-1 convs (the caller
+/// gates on [`crate::kernels::winograd_supported`]).
+///
+/// With `T = ceil(oh/2) * ceil(ow/2)` output tiles, the lowering does:
+///
+/// * input + output transforms: the 4x4 tile gather, the Bᵀ·d·B /
+///   Aᵀ·m·A butterflies, and the point-matrix scatter touch roughly
+///   `16*(c + nk)` words per tile at the irregular-access
+///   `cpu_wino_gops` rate (no multithread credit, matching the
+///   [`im2col_time`] convention for lowering overhead);
+/// * 16 elementwise-point GEMMs of `(nk x c) · (c x T)` at the blocked
+///   f32 GEMM rate — `2*16*nk*c*T` flops versus im2col's
+///   `2*nk*9c*oh*ow ≈ 2*nk*36c*T`, the 2.25x MAC reduction that makes
+///   this lowering win on deep 3x3 layers (AlexNet conv3–5).
+pub fn conv_time_cpu_winograd(dev: &DeviceSpec, spec: &ConvSpec, threads: usize) -> f64 {
+    let tiles = spec.out_h().div_ceil(2) * spec.out_w().div_ceil(2);
+    let transform_words = 4.0 * (16 * (spec.in_c + spec.nk) * tiles) as f64;
+    let t_transform = transform_words / (dev.cpu_wino_gops * 1e9);
+    let gemm_flops = 2.0 * (16 * spec.nk * spec.in_c * tiles) as f64;
+    let t_gemm = gemm_flops / (cpu_gemm_rate(dev, threads) * 1e9);
+    t_transform + t_gemm
+}
+
 /// CPU FC through the same GEMM kernel (one frame: a `1 x d_in` by
 /// `d_in x d_out` product), seconds.
 pub fn fc_time_cpu_gemm(dev: &DeviceSpec, d_in: usize, d_out: usize, threads: usize) -> f64 {
@@ -525,6 +549,46 @@ mod tests {
         assert!(t4 < t1);
         assert!(fc_time_cpu_gemm(&dev, 800, 500, 1) > 0.0);
         assert!(im2col_time(&dev, &zoo::alexnet().heaviest_conv().1) > 0.0);
+    }
+
+    #[test]
+    fn winograd_wins_the_deep_3x3_alexnet_convs() {
+        // The acceptance bar for the F(2,3) lowering: on AlexNet's
+        // conv3/conv4/conv5 (3x3 stride-1, c and nk in the hundreds)
+        // the 2.25x MAC reduction must beat im2col even after paying
+        // the tile-transform traffic, on both devices, sequential and
+        // tile-parallel.
+        for dev in [galaxy_note4(), htc_one_m9()] {
+            for name in ["conv3", "conv4", "conv5"] {
+                let alex = zoo::alexnet();
+                let spec = &alex.conv_specs().iter().find(|(n, _)| n == name).unwrap().1;
+                for threads in [1usize, 4] {
+                    let wino = conv_time_cpu_winograd(&dev, spec, threads);
+                    let gemm = conv_time_cpu_gemm(&dev, spec, threads);
+                    assert!(
+                        wino < gemm,
+                        "{}/{name}/t{threads}: wino {wino} >= im2col {gemm}",
+                        dev.name
+                    );
+                    assert!(wino < conv_time_seq(&dev, spec), "{}/{name}", dev.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn winograd_transform_term_charges_no_multithread_credit() {
+        // Same convention as im2col_time: only the GEMM term scales
+        // with threads, so t(1) - t(4) must equal the pure GEMM delta.
+        let dev = galaxy_note4();
+        let spec = &zoo::alexnet().conv_specs().iter().find(|(n, _)| n == "conv3").unwrap().1;
+        let tiles = spec.out_h().div_ceil(2) * spec.out_w().div_ceil(2);
+        let flops = 2.0 * (16 * spec.nk * spec.in_c * tiles) as f64;
+        let gemm_delta =
+            flops / (cpu_gemm_rate(&dev, 1) * 1e9) - flops / (cpu_gemm_rate(&dev, 4) * 1e9);
+        let wino_delta =
+            conv_time_cpu_winograd(&dev, spec, 1) - conv_time_cpu_winograd(&dev, spec, 4);
+        assert!((wino_delta - gemm_delta).abs() < 1e-12);
     }
 
     #[test]

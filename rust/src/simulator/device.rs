@@ -63,6 +63,12 @@ pub struct DeviceSpec {
     /// ~2.2x above `cpu_gemm_gflops`.  Multiplied by `cpu_mt_speedup`
     /// when tile-parallel; the `cpu-gemm-q8` backend's rate.
     pub cpu_gemm_q8_gops: f64,
+    /// Sequential Gword/s of the Winograd F(2,3) input/output
+    /// transforms (gather a 4x4 tile, a handful of adds, scatter):
+    /// irregular strided access keeps this well below the blocked-GEMM
+    /// MAC rate but above the plain streaming-op rate.  The
+    /// transform-side term of `conv_time_cpu_winograd`.
+    pub cpu_wino_gops: f64,
     /// Sequential CPU Gop/s on simple streaming ops (pool/LRN windows).
     pub cpu_pool_gops: f64,
     /// Multithreaded CPU speedup over sequential for pool/LRN (§6.3).
@@ -114,6 +120,7 @@ pub fn galaxy_note4() -> DeviceSpec {
         cpu_cap_gflops: 0.30,
         cpu_gemm_gflops: 2.0,
         cpu_gemm_q8_gops: 4.5,
+        cpu_wino_gops: 1.2,
         cpu_pool_gops: 0.30,
         cpu_mt_speedup: 3.4,
         throttle_after_s: 40.0,
@@ -146,6 +153,7 @@ pub fn htc_one_m9() -> DeviceSpec {
         cpu_cap_gflops: 0.30,
         cpu_gemm_gflops: 2.1,
         cpu_gemm_q8_gops: 4.7,
+        cpu_wino_gops: 1.3,
         cpu_pool_gops: 0.30,
         cpu_mt_speedup: 3.4,
         // Snapdragon 810 was notorious for aggressive thermal limits;

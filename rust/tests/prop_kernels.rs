@@ -7,7 +7,12 @@
 //!     sequential runs (tile-parallelism is the same kernel, not a
 //!     second numeric path);
 //! (c) the delegate partitioner selects the im2col lowering wherever
-//!     the GEMM cost model predicts a win over the direct nest.
+//!     the GEMM cost model predicts a win over the direct nest;
+//! (d) the Winograd F(2,3) lowering is bit-identical across
+//!     thread/tile configs, agrees with im2col within an analytic
+//!     reassociation bound, passes the top-1 guardrail on the digit
+//!     fixtures, and is only ever auto-selected for eligible
+//!     3x3 stride-1 convs.
 
 use cnndroid::cpu::seq;
 use cnndroid::delegate::{Partitioner, Registry};
@@ -205,6 +210,181 @@ fn auto_plans_select_im2col_where_cost_predicts_a_win() {
                     }
                     other => panic!("{}: expected ConvCpu, got {other:?}", a.layer),
                 }
+            }
+        }
+    }
+}
+
+/// Random Winograd-eligible conv geometry (3x3 stride-1), covering odd
+/// output sizes (edge-clipped 2x2 tiles) and pad 0..2.
+fn random_wino_spec(rng: &mut Pcg) -> ConvSpec {
+    ConvSpec {
+        in_c: rng.range(1, 9) as usize,
+        in_h: rng.range(3, 17) as usize,
+        in_w: rng.range(3, 17) as usize,
+        nk: rng.range(1, 9) as usize,
+        kh: 3,
+        kw: 3,
+        stride: 1,
+        pad: rng.range(0, 3) as usize,
+        relu: rng.below(2) == 0,
+    }
+}
+
+#[test]
+fn winograd_bit_identical_across_thread_and_tile_configs() {
+    prop::check("winograd threads/tiles", |rng| {
+        let spec = random_wino_spec(rng);
+        let batch = rng.range(1, 3) as usize;
+        let x = random_tensor(rng, vec![batch, spec.in_c, spec.in_h, spec.in_w]);
+        let w = random_tensor(rng, vec![spec.nk, spec.in_c, 3, 3]);
+        let b = random_tensor(rng, vec![spec.nk]);
+        let pw = kernels::PackedConvWg::pack(&spec, &w, &b);
+        let reference = kernels::conv_winograd(&x, &pw, KernelOpts::seq());
+        for opts in
+            [KernelOpts::tiled(), KernelOpts { threads: 8, tile: 16 }, KernelOpts { threads: 3, tile: 5 }]
+        {
+            let other = kernels::conv_winograd(&x, &pw, opts);
+            prop_assert!(
+                reference == other,
+                "winograd diverged across configs for {spec:?} ({opts:?})"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn winograd_matches_im2col_within_analytic_bound() {
+    prop::check("winograd vs im2col", |rng| {
+        let spec = random_wino_spec(rng);
+        let x = random_tensor(rng, vec![1, spec.in_c, spec.in_h, spec.in_w]);
+        let w = random_tensor(rng, vec![spec.nk, spec.in_c, 3, 3]);
+        let b = random_tensor(rng, vec![spec.nk]);
+        let pw = kernels::PackedConvWg::pack(&spec, &w, &b);
+        let wino = kernels::conv_winograd(&x, &pw, KernelOpts::tiled());
+        let lowered = kernels::conv_im2col_unpacked(&x, &w, &b, &spec, KernelOpts::tiled());
+        prop_assert!(
+            wino.shape() == lowered.shape(),
+            "shape {:?} vs {:?} for {spec:?}",
+            wino.shape(),
+            lowered.shape()
+        );
+        // F(2,3) is algebraically exact: the only divergence is fp
+        // reassociation across the 9*C-term reduction, so the bound
+        // scales with the reduction length.
+        let bound = 1e-4 + (9 * spec.in_c) as f32 * 5e-5;
+        let diff = wino.max_abs_diff(&lowered);
+        prop_assert!(diff <= bound, "diff {diff} > bound {bound} for {spec:?}");
+        Ok(())
+    });
+}
+
+/// A LeNet-shaped digit classifier whose convs ARE Winograd-eligible
+/// (3x3 stride-1), so the guardrail exercises the real transform path
+/// on the ten canonical digit fixtures.
+fn wino_digit_net() -> cnndroid::model::network::Network {
+    use cnndroid::model::network::{Layer, Network, PoolMode};
+    Network {
+        name: "wino-digits".into(),
+        in_c: 1,
+        in_h: 28,
+        in_w: 28,
+        classes: 10,
+        layers: vec![
+            Layer::Conv { name: "conv1".into(), nk: 8, kh: 3, kw: 3, stride: 1, pad: 1, relu: true },
+            Layer::Pool { name: "pool1".into(), mode: PoolMode::Max, size: 2, stride: 2, relu: false },
+            Layer::Conv { name: "conv2".into(), nk: 16, kh: 3, kw: 3, stride: 1, pad: 1, relu: true },
+            Layer::Pool { name: "pool2".into(), mode: PoolMode::Max, size: 2, stride: 2, relu: false },
+            Layer::Fc { name: "fc1".into(), out: 10, relu: false },
+        ],
+    }
+}
+
+/// Acceptance bar: the Winograd guardrail holds at 100% top-1
+/// agreement with the f32 im2col reference on the canonical digit
+/// fixtures — on a network where the transform path actually runs.
+#[test]
+fn winograd_guardrail_agrees_on_digit_fixtures() {
+    let net = wino_digit_net();
+    let params = cnndroid::model::weights::Params::synthetic(&net, 45, 0.1);
+    assert!(
+        cnndroid::delegate::winograd_eligible(&net, &params),
+        "3x3 stride-1 digit net must pass the guardrail"
+    );
+    let (agree, total) = cnndroid::delegate::winograd_agreement(&net, &params).unwrap();
+    assert_eq!(total, 10, "ten canonical digit fixtures");
+    assert_eq!(agree, total, "top-1 agreement must be perfect");
+    // Deterministic: the verdict gates backend registration.
+    assert_eq!((agree, total), cnndroid::delegate::winograd_agreement(&net, &params).unwrap());
+}
+
+/// The partitioner only ever places `cpu-wino` on eligible 3x3
+/// stride-1 convs — AlexNet's conv3–5 under the default device, never
+/// its 11x11/5x5 heads and never any LeNet conv — and the emitted plan
+/// carries the Winograd kernel variant on exactly those layers.
+#[test]
+fn auto_plans_select_winograd_only_on_eligible_convs() {
+    use cnndroid::coordinator::plan::LayerPlan;
+    use cnndroid::kernels::KernelVariant;
+    let dev = all_devices().remove(0);
+    let reg = Registry::cpu_only().with_winograd();
+    let partitioner = Partitioner::new(&reg, &dev);
+
+    let alex = zoo::alexnet();
+    let specs: std::collections::BTreeMap<_, _> = alex.conv_specs().into_iter().collect();
+    let rep = partitioner.partition(&alex).unwrap();
+    for (li, a) in rep.assignments.iter().enumerate() {
+        if a.kind != "conv" {
+            continue;
+        }
+        if kernels::winograd_supported(&specs[a.layer.as_str()]) {
+            assert_eq!(a.backend, "cpu-wino", "{} should take the Winograd lowering", a.layer);
+            match &rep.plan.layers[li] {
+                LayerPlan::ConvCpu { variant, .. } => {
+                    assert_eq!(*variant, KernelVariant::Winograd, "{}", a.layer)
+                }
+                other => panic!("{}: expected ConvCpu, got {other:?}", a.layer),
+            }
+        } else {
+            assert_eq!(a.backend, "cpu-gemm", "{} is not 3x3 stride-1", a.layer);
+        }
+    }
+    // Sanity on the zoo: AlexNet's eligible set is exactly conv3-5.
+    let eligible: Vec<_> = alex
+        .conv_specs()
+        .into_iter()
+        .filter(|(_, s)| kernels::winograd_supported(s))
+        .map(|(n, _)| n)
+        .collect();
+    assert_eq!(eligible, vec!["conv3", "conv4", "conv5"]);
+
+    // LeNet has no eligible conv, so cpu-wino must never appear.
+    let lenet = partitioner.partition(&zoo::lenet5()).unwrap();
+    for a in &lenet.assignments {
+        assert_ne!(a.backend, "cpu-wino", "lenet {}", a.layer);
+    }
+}
+
+/// Adding the Winograd backend can only improve (or tie) the DP's
+/// predicted latency — and strictly improves it on AlexNet, where
+/// eligible convs exist for it to win.
+#[test]
+fn winograd_registry_never_degrades_predicted_latency() {
+    for dev in all_devices() {
+        let plain = Registry::cpu_only();
+        let wino = Registry::cpu_only().with_winograd();
+        for net in zoo::all() {
+            let base = Partitioner::new(&plain, &dev).partition(&net).unwrap().predicted_s;
+            let with = Partitioner::new(&wino, &dev).partition(&net).unwrap().predicted_s;
+            assert!(
+                with <= base + 1e-12,
+                "{}/{}: {with} > {base} — a superset registry degraded the plan",
+                dev.name,
+                net.name
+            );
+            if net.name == "alexnet" {
+                assert!(with < base, "{}: winograd should win conv3-5 outright", dev.name);
             }
         }
     }
