@@ -33,8 +33,13 @@ fn main() -> cnndroid::Result<()> {
     let handle = serve(ServerConfig {
         addr: "127.0.0.1:0".into(),
         models: vec![ServerConfig::model("lenet5", args.get("method"), 1)?],
-        batcher: BatcherConfig { max_batch: 16, max_wait: Duration::from_millis(3) },
+        batcher: BatcherConfig {
+            max_batch: 16,
+            max_wait: Duration::from_millis(3),
+            ..BatcherConfig::default()
+        },
         artifacts_dir: dir,
+        ..ServerConfig::default()
     })?;
     let addr = handle.addr;
     {

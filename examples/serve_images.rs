@@ -41,8 +41,10 @@ fn main() -> cnndroid::Result<()> {
         batcher: BatcherConfig {
             max_batch: args.get_usize("max-batch"),
             max_wait: std::time::Duration::from_millis(4),
+            ..BatcherConfig::default()
         },
         artifacts_dir: dir.clone(),
+        ..ServerConfig::default()
     })?;
     let addr = handle.addr;
     println!("serving lenet5/{} on {addr}", args.get("method"));

@@ -94,6 +94,7 @@ fn main() {
         let batcher = cnndroid::coordinator::Batcher::new(cnndroid::coordinator::BatcherConfig {
             max_batch: 16,
             max_wait: std::time::Duration::from_millis(wait_ms),
+            ..cnndroid::coordinator::BatcherConfig::default()
         });
         b.case(&format!("batcher/idle single req, max_wait={wait_ms}ms"), || {
             batcher.push(1u32);

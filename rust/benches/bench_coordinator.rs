@@ -44,8 +44,13 @@ fn main() {
     let handle = serve(ServerConfig {
         addr: "127.0.0.1:0".into(),
         models: vec![ServerConfig::model("lenet5", "advanced-simd-4", 1).unwrap()],
-        batcher: BatcherConfig { max_batch: 16, max_wait: Duration::from_millis(2) },
+        batcher: BatcherConfig {
+            max_batch: 16,
+            max_wait: Duration::from_millis(2),
+            ..BatcherConfig::default()
+        },
         artifacts_dir: dir.clone(),
+        ..ServerConfig::default()
     })
     .unwrap();
     let addr = handle.addr;
@@ -87,8 +92,13 @@ fn main() {
     let handle_nb = serve(ServerConfig {
         addr: "127.0.0.1:0".into(),
         models: vec![ServerConfig::model("lenet5", "advanced-simd-4", 1).unwrap()],
-        batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_micros(1) },
+        batcher: BatcherConfig {
+            max_batch: 1,
+            max_wait: Duration::from_micros(1),
+            ..BatcherConfig::default()
+        },
         artifacts_dir: dir.clone(),
+        ..ServerConfig::default()
     })
     .unwrap();
     let addr_nb = handle_nb.addr;

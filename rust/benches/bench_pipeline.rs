@@ -89,6 +89,7 @@ fn main() {
     let batcher = cnndroid::coordinator::Batcher::new(cnndroid::coordinator::BatcherConfig {
         max_batch: 16,
         max_wait: std::time::Duration::from_micros(50),
+        ..cnndroid::coordinator::BatcherConfig::default()
     });
     b.case_with_items("batcher/push+drain 1024", Some(1024.0), || {
         for i in 0..1024 {

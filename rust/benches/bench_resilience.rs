@@ -1,0 +1,415 @@
+//! Chaos smoke for the serving resilience subsystem: serve the
+//! LeNet-5 and AlexNet zoo models on synthetic weights (no artifacts
+//! needed), measure a clean baseline, then arm a seeded fault plan and
+//! drive a concurrent burst through it.  Asserts the PR's acceptance
+//! criteria — zero hangs (every request answers within its deadline +
+//! grace + margin), at least one degraded *and labeled* response, and
+//! bit-identical outputs once injection is disarmed — and writes
+//! `BENCH_resilience.json` for the CI artifact trail.
+//!
+//! ```bash
+//! cargo bench --bench bench_resilience [-- --requests 32 --clients 4 --seed 1234]
+//! ```
+
+use std::time::{Duration, Instant};
+
+use cnndroid::coordinator::server::Client;
+use cnndroid::coordinator::{
+    serve, BatcherConfig, GateConfig, LadderConfig, ServerConfig, ServerHandle,
+};
+use cnndroid::data::synth;
+use cnndroid::faults;
+use cnndroid::model::zoo;
+use cnndroid::util::args::ArgSpec;
+use cnndroid::util::json::Json;
+use cnndroid::util::stats::Samples;
+
+/// Synthetic-weight seed the q8 guardrail is known to pass on.
+const WEIGHT_SEED: u64 = 45;
+
+/// Per-net outcome tally for one phase.
+#[derive(Default, Clone)]
+struct Tally {
+    lat: Vec<f64>,
+    ok: usize,
+    degraded_labeled: usize,
+    expired: usize,
+    overloaded: usize,
+    failed: usize,
+    deadline_misses: usize,
+}
+
+impl Tally {
+    fn absorb(&mut self, other: Tally) {
+        self.lat.extend(other.lat);
+        self.ok += other.ok;
+        self.degraded_labeled += other.degraded_labeled;
+        self.expired += other.expired;
+        self.overloaded += other.overloaded;
+        self.failed += other.failed;
+        self.deadline_misses += other.deadline_misses;
+    }
+
+    fn record(&mut self, resp: &Json, wall: Duration, deadline: Duration, grace: Duration) {
+        self.lat.push(wall.as_secs_f64());
+        if wall > deadline + grace + Duration::from_millis(500) {
+            self.deadline_misses += 1;
+        }
+        if resp.get("error").is_null() {
+            self.ok += 1;
+            if resp.get("degraded").as_bool() == Some(true)
+                && !resp.get("served_by").is_null()
+            {
+                self.degraded_labeled += 1;
+            }
+        } else {
+            match resp.get("code").as_str() {
+                Some("expired") => self.expired += 1,
+                Some("overloaded") => self.overloaded += 1,
+                _ => self.failed += 1,
+            }
+        }
+    }
+
+    fn json(&self, unit_ms: bool) -> Json {
+        let mut s = Samples::new();
+        for &v in &self.lat {
+            s.push(if unit_ms { v * 1e3 } else { v });
+        }
+        Json::obj(vec![
+            ("n", Json::num(self.lat.len() as f64)),
+            ("p50_ms", Json::num(s.percentile(50.0))),
+            ("p95_ms", Json::num(s.percentile(95.0))),
+            ("ok", Json::num(self.ok as f64)),
+            ("degraded_labeled", Json::num(self.degraded_labeled as f64)),
+            ("expired", Json::num(self.expired as f64)),
+            ("overloaded", Json::num(self.overloaded as f64)),
+            ("failed", Json::num(self.failed as f64)),
+            ("deadline_misses", Json::num(self.deadline_misses as f64)),
+        ])
+    }
+}
+
+fn request(net: &str, frame: &cnndroid::tensor::Tensor, id: u64, deadline_ms: u64) -> Json {
+    Json::obj(vec![
+        ("net", Json::str(net)),
+        ("id", Json::num(id as f64)),
+        ("deadline_ms", Json::num(deadline_ms as f64)),
+        (
+            "image",
+            Json::arr(frame.data().iter().map(|&v| Json::num(v as f64)).collect()),
+        ),
+    ])
+}
+
+/// One request with the hard zero-hang bound enforced: the wire must
+/// answer within deadline + grace + `margin` or the smoke fails.
+fn bounded_call(
+    client: &mut Client,
+    req: &Json,
+    deadline: Duration,
+    grace: Duration,
+    margin: Duration,
+) -> (Json, Duration) {
+    let t = Instant::now();
+    let resp = client.call(req).expect("wire answered");
+    let wall = t.elapsed();
+    assert!(
+        wall <= deadline + grace + margin,
+        "HANG: request took {wall:?} (deadline {deadline:?} + grace {grace:?} + margin {margin:?}): {}",
+        resp.dump()
+    );
+    (resp, wall)
+}
+
+fn resilience_counters(client: &mut Client, net: &str) -> Json {
+    let m = client
+        .call(&Json::obj(vec![("cmd", Json::str("metrics"))]))
+        .expect("metrics");
+    m.get("nets").get(net).get("resilience").clone()
+}
+
+fn main() -> cnndroid::Result<()> {
+    let args = ArgSpec::new("bench_resilience", "serving chaos smoke")
+        .opt("requests", "32", "lenet5 requests per phase")
+        .opt("clients", "4", "concurrent clients in the faulted burst")
+        .opt("alexnet-requests", "3", "alexnet requests per phase")
+        .opt("seed", "1234", "fault plan seed")
+        .parse();
+    let requests = args.get_usize("requests").max(4);
+    let clients = args.get_usize("clients").max(1);
+    let alex_requests = args.get_usize("alexnet-requests");
+    let seed = args.get_usize("seed") as u64;
+
+    // A gate that is guaranteed to climb to Degraded on this hardware:
+    // any real exec latency dwarfs a 100 us SLO, two samples is dwell,
+    // and the shed rungs sit out of reach so every admitted request is
+    // still answered (the smoke wants degrades, not a closed door).
+    let chaos_gate = GateConfig {
+        ladder: LadderConfig {
+            degrade_hi: 0.5,
+            degrade_lo: 0.05,
+            shed_hi: 1e9,
+            shed_lo: 1e8,
+            alpha: 1.0,
+            dwell: 2,
+        },
+        slo: Duration::from_micros(100),
+        ..GateConfig::default()
+    };
+    let grace = chaos_gate.grace;
+
+    println!("chaos smoke: lenet5 + alexnet on synthetic weights (seed {WEIGHT_SEED})");
+    let handle: ServerHandle = serve(ServerConfig {
+        models: vec![
+            ServerConfig::model("lenet5", "cpu-gemm", 1)?,
+            ServerConfig::model("alexnet", "cpu-gemm", 1)?,
+        ],
+        batcher: BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            ..BatcherConfig::default()
+        },
+        gate: chaos_gate,
+        synthetic: Some(WEIGHT_SEED),
+        ..ServerConfig::default()
+    })?;
+    let addr = handle.addr;
+
+    let lenet = zoo::lenet5();
+    let alex = zoo::alexnet();
+    let lenet_frames = synth::random_frames(8, lenet.in_c, lenet.in_h, lenet.in_w, 7);
+    let alex_frame = synth::random_frames(1, alex.in_c, alex.in_h, alex.in_w, 7);
+
+    // Warm both engines (primary + degraded sibling are built at
+    // worker start; the first request waits on that).
+    {
+        let mut c = Client::connect(addr)?;
+        let (r, _) = bounded_call(
+            &mut c,
+            &request("lenet5", &lenet_frames.frame(0), 0, 120_000),
+            Duration::from_secs(120),
+            grace,
+            Duration::from_secs(60),
+        );
+        anyhow::ensure!(r.get("error").is_null(), "lenet5 warmup failed: {}", r.dump());
+        if alex_requests > 0 {
+            let (r, _) = bounded_call(
+                &mut c,
+                &request("alexnet", &alex_frame.frame(0), 0, 300_000),
+                Duration::from_secs(300),
+                grace,
+                Duration::from_secs(120),
+            );
+            anyhow::ensure!(r.get("error").is_null(), "alexnet warmup failed: {}", r.dump());
+        }
+    }
+
+    // --- Phase 1: clean baseline (injection disarmed). ---
+    faults::disarm();
+    let deadline = Duration::from_millis(2_000);
+    let mut clean_lenet = Tally::default();
+    let mut clean_alex = Tally::default();
+    {
+        let mut c = Client::connect(addr)?;
+        for i in 0..requests {
+            let (r, wall) = bounded_call(
+                &mut c,
+                &request("lenet5", &lenet_frames.frame(i % 8), i as u64, 2_000),
+                deadline,
+                grace,
+                Duration::from_secs(8),
+            );
+            clean_lenet.record(&r, wall, deadline, grace);
+        }
+        let alex_deadline = Duration::from_secs(120);
+        for i in 0..alex_requests {
+            let (r, wall) = bounded_call(
+                &mut c,
+                &request("alexnet", &alex_frame.frame(0), i as u64, 120_000),
+                alex_deadline,
+                grace,
+                Duration::from_secs(60),
+            );
+            clean_alex.record(&r, wall, alex_deadline, grace);
+        }
+    }
+    println!(
+        "clean:   lenet5 {} reqs, p50 {:.2} ms  p95 {:.2} ms  ({} degraded+labeled)",
+        clean_lenet.lat.len(),
+        percentile_ms(&clean_lenet.lat, 50.0),
+        percentile_ms(&clean_lenet.lat, 95.0),
+        clean_lenet.degraded_labeled,
+    );
+
+    // --- Phase 2: the seeded fault plan, concurrent burst. ---
+    let plan: faults::FaultPlan = format!(
+        "seed={seed}:backend.exec=err@0.25:backend.exec=delay5ms@0.3:queue.stall=delay10ms@0.2"
+    )
+    .parse()
+    .map_err(anyhow::Error::msg)?;
+    println!("faulted: arming `{plan}`, {clients} clients x {} reqs", requests / clients);
+    faults::arm(plan);
+    let mut fault_lenet = Tally::default();
+    let mut threads = Vec::new();
+    for t in 0..clients {
+        let frames = lenet_frames.clone();
+        let per = requests / clients;
+        threads.push(std::thread::spawn(move || {
+            let mut c = Client::connect(addr).expect("connect");
+            let mut tally = Tally::default();
+            for i in 0..per {
+                let id = (t * 1000 + i) as u64;
+                let (r, wall) = bounded_call(
+                    &mut c,
+                    &request("lenet5", &frames.frame(i % 8), id, 2_000),
+                    deadline,
+                    grace,
+                    Duration::from_secs(8),
+                );
+                tally.record(&r, wall, deadline, grace);
+            }
+            tally
+        }));
+    }
+    for t in threads {
+        fault_lenet.absorb(t.join().expect("client thread"));
+    }
+    let mut fault_alex = Tally::default();
+    {
+        let mut c = Client::connect(addr)?;
+        let alex_deadline = Duration::from_secs(120);
+        for i in 0..alex_requests {
+            let (r, wall) = bounded_call(
+                &mut c,
+                &request("alexnet", &alex_frame.frame(0), i as u64, 120_000),
+                alex_deadline,
+                grace,
+                Duration::from_secs(60),
+            );
+            fault_alex.record(&r, wall, alex_deadline, grace);
+        }
+    }
+
+    // --- Phase 3: forced expiry — a stall far past a short deadline
+    //     must come back typed within deadline + grace, not hang. ---
+    faults::arm(format!("seed={seed}:queue.stall=delay600ms@1x2").parse().unwrap());
+    {
+        let mut c = Client::connect(addr)?;
+        let short = Duration::from_millis(100);
+        for i in 0..2u64 {
+            let req = request("lenet5", &lenet_frames.frame(0), i, 100);
+            let (r, wall) = bounded_call(&mut c, &req, short, grace, Duration::from_secs(8));
+            fault_lenet.record(&r, wall, short, grace);
+        }
+    }
+    faults::disarm();
+    std::thread::sleep(Duration::from_millis(700)); // drain the stalled worker
+
+    let (counters_lenet, counters_alex, fire_counts) = {
+        let mut c = Client::connect(addr)?;
+        let fires: Vec<Json> = faults::counts()
+            .into_iter()
+            .map(|(site, probes, fires)| {
+                Json::obj(vec![
+                    ("site", Json::str(&site)),
+                    ("probes", Json::num(probes as f64)),
+                    ("fires", Json::num(fires as f64)),
+                ])
+            })
+            .collect();
+        (
+            resilience_counters(&mut c, "lenet5"),
+            resilience_counters(&mut c, "alexnet"),
+            fires,
+        )
+    };
+    println!(
+        "faulted: lenet5 {} reqs, p50 {:.2} ms  p95 {:.2} ms  ok {}  expired {}  overloaded {}  failed {}  degraded+labeled {}",
+        fault_lenet.lat.len(),
+        percentile_ms(&fault_lenet.lat, 50.0),
+        percentile_ms(&fault_lenet.lat, 95.0),
+        fault_lenet.ok,
+        fault_lenet.expired,
+        fault_lenet.overloaded,
+        fault_lenet.failed,
+        fault_lenet.degraded_labeled,
+    );
+    println!("server:  lenet5 counters {}", counters_lenet.dump());
+    handle.shutdown();
+
+    // --- Phase 4: bit-identity on a calm server (gate never leaves
+    //     Normal): a no-op armed plan and a disarmed harness must both
+    //     leave the instrumented sites invisible in the output. ---
+    let calm = serve(ServerConfig {
+        models: vec![ServerConfig::model("lenet5", "cpu-gemm", 1)?],
+        gate: GateConfig {
+            slo: Duration::from_secs(600),
+            target_depth: 1_000_000,
+            ..GateConfig::default()
+        },
+        synthetic: Some(WEIGHT_SEED),
+        ..ServerConfig::default()
+    })?;
+    let identity_ok = {
+        let mut c = Client::connect(calm.addr)?;
+        let req = request("lenet5", &lenet_frames.frame(0), 9, 120_000);
+        let base = c.call(&req)?;
+        anyhow::ensure!(base.get("error").is_null(), "identity baseline failed: {}", base.dump());
+        faults::arm(format!("seed={seed}").parse().unwrap()); // armed, zero rules
+        let noop = c.call(&req)?;
+        faults::disarm();
+        let off = c.call(&req)?;
+        let same = noop.get("logits").dump() == base.get("logits").dump()
+            && off.get("logits").dump() == base.get("logits").dump()
+            && noop.get("label").dump() == base.get("label").dump();
+        anyhow::ensure!(same, "outputs diverged with injection disarmed");
+        same
+    };
+    calm.shutdown();
+    println!("identity: disarmed serving bit-identical — ok");
+
+    // --- Acceptance asserts. ---
+    let total_misses = clean_lenet.deadline_misses
+        + fault_lenet.deadline_misses
+        + fault_alex.deadline_misses
+        + clean_alex.deadline_misses;
+    let degraded_total = fault_lenet.degraded_labeled + clean_lenet.degraded_labeled;
+    anyhow::ensure!(
+        degraded_total >= 1,
+        "chaos smoke: the ladder never produced a degraded+labeled response"
+    );
+    let served = counters_lenet.get("degraded").as_usize().unwrap_or(0);
+    anyhow::ensure!(served >= 1, "metrics never counted a degraded request");
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("bench_resilience/chaos-smoke")),
+        ("seed", Json::num(seed as f64)),
+        ("unit", Json::str("ms")),
+        ("clean_lenet5", clean_lenet.json(true)),
+        ("clean_alexnet", clean_alex.json(true)),
+        ("faulted_lenet5", fault_lenet.json(true)),
+        ("faulted_alexnet", fault_alex.json(true)),
+        ("counters_lenet5", counters_lenet),
+        ("counters_alexnet", counters_alex),
+        ("fault_sites", Json::arr(fire_counts)),
+        ("deadline_misses", Json::num(total_misses as f64)),
+        ("hangs", Json::num(0.0)),
+        ("identity_ok", Json::Bool(identity_ok)),
+    ]);
+    let path = "BENCH_resilience.json";
+    match std::fs::write(path, doc.dump()) {
+        Ok(()) => println!("results written to {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+    println!("ok");
+    Ok(())
+}
+
+fn percentile_ms(lat: &[f64], p: f64) -> f64 {
+    let mut s = Samples::new();
+    for &v in lat {
+        s.push(v * 1e3);
+    }
+    s.percentile(p)
+}

@@ -16,11 +16,34 @@ pub struct BatcherConfig {
     pub max_batch: usize,
     /// Longest a request may wait for co-batched peers.
     pub max_wait: Duration,
+    /// Queue-depth ceiling: a `push` against a full queue is rejected
+    /// ([`Push::Full`]) instead of growing the backlog without bound —
+    /// the admission-control backstop under overload.
+    pub max_queue: usize,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        BatcherConfig { max_batch: 16, max_wait: Duration::from_millis(5) }
+        BatcherConfig { max_batch: 16, max_wait: Duration::from_millis(5), max_queue: 1024 }
+    }
+}
+
+/// Outcome of [`Batcher::push`], so callers can distinguish (and
+/// count) queue-full rejection from shutdown instead of collapsing
+/// both into a bare bool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Push {
+    /// Enqueued; carries the queue depth after the push.
+    Queued(usize),
+    /// Rejected: the queue is at `max_queue`.
+    Full,
+    /// Rejected: the batcher is closed (server shutting down).
+    Closed,
+}
+
+impl Push {
+    pub fn accepted(&self) -> bool {
+        matches!(self, Push::Queued(_))
     }
 }
 
@@ -49,15 +72,19 @@ impl<T> Batcher<T> {
         &self.cfg
     }
 
-    /// Enqueue one request; returns false if the batcher is closed.
-    pub fn push(&self, item: T) -> bool {
+    /// Enqueue one request; rejects when closed or at `max_queue`.
+    pub fn push(&self, item: T) -> Push {
         let mut st = self.state.lock().unwrap();
         if st.closed {
-            return false;
+            return Push::Closed;
+        }
+        if st.queue.len() >= self.cfg.max_queue {
+            return Push::Full;
         }
         st.queue.push_back(item);
+        let depth = st.queue.len();
         self.cv.notify_all();
-        true
+        Push::Queued(depth)
     }
 
     /// Number of queued requests (diagnostic).
@@ -110,14 +137,18 @@ mod tests {
     use std::sync::Arc;
 
     fn quick(max_batch: usize, wait_ms: u64) -> BatcherConfig {
-        BatcherConfig { max_batch, max_wait: Duration::from_millis(wait_ms) }
+        BatcherConfig {
+            max_batch,
+            max_wait: Duration::from_millis(wait_ms),
+            ..BatcherConfig::default()
+        }
     }
 
     #[test]
     fn batches_up_to_max() {
         let b = Batcher::new(quick(4, 20));
         for i in 0..10 {
-            assert!(b.push(i));
+            assert!(b.push(i).accepted());
         }
         assert_eq!(b.next_batch().unwrap(), vec![0, 1, 2, 3]);
         assert_eq!(b.next_batch().unwrap(), vec![4, 5, 6, 7]);
@@ -155,7 +186,23 @@ mod tests {
         assert!(h.join().unwrap().is_none());
         // Items pushed before close still drain... but push after close
         // is rejected.
-        assert!(!b.push(1u32));
+        assert_eq!(b.push(1u32), Push::Closed);
+    }
+
+    #[test]
+    fn full_queue_rejects_typed() {
+        let b = Batcher::new(BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            max_queue: 3,
+        });
+        assert_eq!(b.push(0u32), Push::Queued(1));
+        assert_eq!(b.push(1u32), Push::Queued(2));
+        assert_eq!(b.push(2u32), Push::Queued(3));
+        assert_eq!(b.push(3u32), Push::Full);
+        // Draining frees capacity again.
+        assert_eq!(b.next_batch().unwrap(), vec![0, 1, 2]);
+        assert_eq!(b.push(4u32), Push::Queued(1));
     }
 
     #[test]

@@ -143,20 +143,7 @@ impl Engine {
     pub fn synthetic(net_name: &str, cfg: EngineConfig, seed: u64) -> Result<Engine> {
         let net = crate::model::zoo::by_name(net_name)
             .ok_or_else(|| anyhow::anyhow!("unknown network {net_name:?}"))?;
-        let mut networks = BTreeMap::new();
-        for n in crate::model::zoo::all() {
-            networks.insert(n.name.clone(), n);
-        }
-        let manifest = Manifest {
-            dir: std::path::PathBuf::from("synthetic"),
-            source_hash: String::new(),
-            networks,
-            methods: Vec::new(),
-            heaviest_conv: Default::default(),
-            artifacts: Vec::new(),
-            weights: Default::default(),
-        };
-        let runtime = Rc::new(Runtime::new(manifest)?);
+        let runtime = Rc::new(Runtime::new(Manifest::synthetic())?);
         let params = Params::synthetic(&net, seed, 0.1);
         Engine::with_parts(runtime, net, params, cfg)
     }
@@ -417,6 +404,15 @@ impl Engine {
 
     /// Forward a batch of NCHW frames; returns logits (n, classes).
     pub fn infer_batch(&self, x: &Tensor) -> Result<Tensor> {
+        self.infer_deadline(x, None)
+    }
+
+    /// [`Self::infer_batch`] with an absolute deadline: the stage loop
+    /// is already stage-granular, so the engine checks the deadline
+    /// between stages and abandons the remaining work with a typed
+    /// [`crate::coordinator::resilience::DeadlineExpired`] instead of
+    /// computing a result nobody will read.  `None` never expires.
+    pub fn infer_deadline(&self, x: &Tensor, deadline: Option<Instant>) -> Result<Tensor> {
         anyhow::ensure!(
             x.shape().len() == 4
                 && x.shape()[1..] == [self.net.in_c, self.net.in_h, self.net.in_w],
@@ -442,6 +438,22 @@ impl Engine {
         for si in 0..self.stages.len() {
             let st = self.stages[si].clone();
             let name = self.plan.stage_name(&st);
+            if let Some(dl) = deadline {
+                let now = Instant::now();
+                if now >= dl {
+                    return Err(anyhow::Error::new(
+                        crate::coordinator::resilience::DeadlineExpired {
+                            net: self.net.name.clone(),
+                            stage: name,
+                            over_ms: (now - dl).as_millis() as u64,
+                        },
+                    ));
+                }
+            }
+            // Fault-injection probe: disarmed cost is one relaxed
+            // atomic load; armed plans can delay this stage or fail it
+            // with a typed, retryable error.
+            crate::faults::check(crate::faults::SITE_BACKEND_EXEC)?;
             let _stage_span =
                 obs::span_with(TraceLevel::Stage, "stage", || name.clone());
             let t0 = Instant::now();

@@ -10,10 +10,29 @@ use std::time::{Duration, Instant};
 use crate::util::json::Json;
 use crate::util::stats::{LatencyHistogram, Samples};
 
+/// Per-net resilience counters: how often the serving stack rejected,
+/// degraded, expired, retried, or tripped instead of serving normally.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct ResilienceCounts {
+    /// Requests rejected because the model's queue was at `max_queue`.
+    pub rejected_full: u64,
+    /// Requests rejected typed-`overloaded` by the admission gate.
+    pub shed: u64,
+    /// Requests served by the degraded sibling engine.
+    pub degraded: u64,
+    /// Requests abandoned past their deadline (at dequeue or mid-run).
+    pub expired: u64,
+    /// Backend circuit-breaker trips (closed/half-open -> open).
+    pub breaker_trips: u64,
+    /// Retry attempts after a serve-time backend failure.
+    pub retries: u64,
+}
+
 #[derive(Default, Clone)]
 struct NetStats {
     requests: u64,
     errors: u64,
+    resilience: ResilienceCounts,
     latency: Samples,
     batch_sizes: Samples,
     /// O(1)-insert log-scale histogram: raw samples cover exact
@@ -55,6 +74,46 @@ impl Metrics {
     pub fn record_error(&self, net: &str) {
         let mut g = self.nets.lock().unwrap();
         g.entry(net.to_string()).or_default().errors += 1;
+    }
+
+    /// Record one queue-full rejection (the batcher refused the push).
+    pub fn record_rejected_full(&self, net: &str) {
+        self.with_resilience(net, |r| r.rejected_full += 1);
+    }
+
+    /// Record one admission-gate shed (typed `overloaded` rejection).
+    pub fn record_shed(&self, net: &str) {
+        self.with_resilience(net, |r| r.shed += 1);
+    }
+
+    /// Record one request served by the degraded sibling engine.
+    pub fn record_degraded(&self, net: &str) {
+        self.with_resilience(net, |r| r.degraded += 1);
+    }
+
+    /// Record one deadline expiry (typed `expired` response).
+    pub fn record_expired(&self, net: &str) {
+        self.with_resilience(net, |r| r.expired += 1);
+    }
+
+    /// Record one circuit-breaker trip.
+    pub fn record_breaker_trip(&self, net: &str) {
+        self.with_resilience(net, |r| r.breaker_trips += 1);
+    }
+
+    /// Record one serve-time retry attempt.
+    pub fn record_retry(&self, net: &str) {
+        self.with_resilience(net, |r| r.retries += 1);
+    }
+
+    fn with_resilience(&self, net: &str, f: impl FnOnce(&mut ResilienceCounts)) {
+        let mut g = self.nets.lock().unwrap();
+        f(&mut g.entry(net.to_string()).or_default().resilience);
+    }
+
+    /// Current resilience counters for one net.
+    pub fn resilience_counts(&self, net: &str) -> ResilienceCounts {
+        self.nets.lock().unwrap().get(net).map(|s| s.resilience).unwrap_or_default()
     }
 
     /// Record one stage execution (seconds) from an engine worker.
@@ -134,6 +193,17 @@ impl Metrics {
                         "throughput_rps",
                         Json::num(if uptime > 0.0 { st.requests as f64 / uptime } else { 0.0 }),
                     ),
+                    (
+                        "resilience",
+                        Json::obj(vec![
+                            ("rejected_full", Json::num(st.resilience.rejected_full as f64)),
+                            ("shed", Json::num(st.resilience.shed as f64)),
+                            ("degraded", Json::num(st.resilience.degraded as f64)),
+                            ("expired", Json::num(st.resilience.expired as f64)),
+                            ("breaker_trips", Json::num(st.resilience.breaker_trips as f64)),
+                            ("retries", Json::num(st.resilience.retries as f64)),
+                        ]),
+                    ),
                     ("stages", stages),
                 ]),
             ));
@@ -211,6 +281,34 @@ mod tests {
         assert_eq!(stage.get("n").as_usize(), Some(100));
         assert!(stage.get("p95_ms").as_f64().unwrap() > 90.0);
         assert_eq!(s.get("queue_depth").as_usize(), Some(7));
+    }
+
+    #[test]
+    fn resilience_counters_reach_the_snapshot() {
+        let m = Metrics::new();
+        m.record_rejected_full("lenet5");
+        m.record_rejected_full("lenet5");
+        m.record_shed("lenet5");
+        m.record_degraded("lenet5");
+        m.record_expired("lenet5");
+        m.record_breaker_trip("lenet5");
+        m.record_retry("lenet5");
+        let c = m.resilience_counts("lenet5");
+        assert_eq!(c.rejected_full, 2);
+        assert_eq!(c.shed, 1);
+        assert_eq!(c.degraded, 1);
+        assert_eq!(c.expired, 1);
+        assert_eq!(c.breaker_trips, 1);
+        assert_eq!(c.retries, 1);
+        let r = m.snapshot().get("nets").get("lenet5").get("resilience").clone();
+        assert_eq!(r.get("rejected_full").as_usize(), Some(2));
+        assert_eq!(r.get("shed").as_usize(), Some(1));
+        assert_eq!(r.get("degraded").as_usize(), Some(1));
+        assert_eq!(r.get("expired").as_usize(), Some(1));
+        assert_eq!(r.get("breaker_trips").as_usize(), Some(1));
+        assert_eq!(r.get("retries").as_usize(), Some(1));
+        // Unknown nets report zeros, not panics.
+        assert_eq!(m.resilience_counts("nope"), ResilienceCounts::default());
     }
 
     #[test]

@@ -13,18 +13,25 @@
 //! * [`router`] — routes requests across per-network engine threads.
 //! * [`server`] — TCP JSON-lines front end + engine worker threads.
 //! * [`metrics`] — counters and latency summaries.
+//! * [`resilience`] — per-request deadlines, the admission-control
+//!   degradation ladder, and the runtime backend circuit breaker.
 
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
 pub mod pipeline;
 pub mod plan;
+pub mod resilience;
 pub mod router;
 pub mod server;
 
-pub use batcher::{Batcher, BatcherConfig};
+pub use batcher::{Batcher, BatcherConfig, Push};
 pub use engine::{Engine, EngineConfig};
+pub use metrics::{Metrics, ResilienceCounts};
 pub use pipeline::{PipelineTrace, TraceEvent};
 pub use plan::{ExecutionPlan, LayerPlan};
+pub use resilience::{
+    Breaker, BreakerConfig, BreakerState, Gate, GateConfig, Ladder, LadderConfig, LadderState,
+};
 pub use router::Router;
 pub use server::{serve, Client, Request, ServerConfig, ServerHandle};

@@ -1,0 +1,667 @@
+//! Serving resilience: per-request deadlines, the admission-control
+//! degradation ladder, and the runtime backend circuit breaker.
+//!
+//! The serving stack's failure story used to end at engine *build*
+//! time (the PR 5 fallback chain) plus a hard-coded 120 s wire
+//! timeout.  This module owns what happens *after* a model is up and
+//! traffic turns hostile:
+//!
+//! - **Deadlines** — every request carries an absolute deadline
+//!   (wire `deadline_ms` > spec `:dl<ms>` > gate default).  Expired
+//!   work is dropped at dequeue, abandoned between engine stages
+//!   ([`DeadlineExpired`]), and answered with a typed `expired` error.
+//! - **Ladder** — a pressure EWMA (queue depth + exec latency vs the
+//!   SLO) drives `Normal -> Degraded -> Shedding` one rung at a time
+//!   with dwell-count hysteresis, so the gate cannot flap.  Degraded
+//!   requests are re-routed to a cheaper pre-built sibling engine and
+//!   labeled with the spec that actually served them; shedding answers
+//!   a typed `overloaded` rejection with a retry-after hint.
+//! - **Breaker** — consecutive serve-time backend failures trip a
+//!   per-model circuit open; in-flight work retries down the fallback
+//!   chain with seeded jittered backoff ([`backoff_delay`]), and a
+//!   half-open probe restores the backend when it recovers.
+//!
+//! Everything here is deterministic given a seed and a call sequence —
+//! the property the fault-injection harness ([`crate::faults`]) and
+//! `tests/prop_resilience.rs` lean on.
+
+use std::fmt;
+use std::time::{Duration, Instant};
+
+use crate::session::spec::ExecSpec;
+use crate::util::rng::Pcg;
+
+/// Wire error code for a request that ran out of deadline.
+pub const CODE_EXPIRED: &str = "expired";
+/// Wire error code for a shed / queue-full rejection.
+pub const CODE_OVERLOADED: &str = "overloaded";
+/// Wire error code for malformed client input.
+pub const CODE_BAD_REQUEST: &str = "bad_request";
+
+/// Typed engine-side deadline expiry: the stage loop noticed the
+/// request's deadline passed and abandoned the remaining stages.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DeadlineExpired {
+    pub net: String,
+    /// The stage about to run when the deadline was found expired.
+    pub stage: String,
+    /// How far past the deadline the check ran, in milliseconds.
+    pub over_ms: u64,
+}
+
+impl fmt::Display for DeadlineExpired {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "deadline expired {}ms before stage {} of {}",
+            self.over_ms, self.stage, self.net
+        )
+    }
+}
+
+impl std::error::Error for DeadlineExpired {}
+
+// ---------------------------------------------------------------------
+// Degradation ladder
+// ---------------------------------------------------------------------
+
+/// The admission gate's three rungs, worst-first recoverable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum LadderState {
+    /// Serve normally on the deployed spec.
+    Normal,
+    /// Serve admitted requests on the cheaper sibling engine.
+    Degraded,
+    /// Reject new requests typed `overloaded` with a retry-after hint.
+    Shedding,
+}
+
+impl LadderState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            LadderState::Normal => "normal",
+            LadderState::Degraded => "degraded",
+            LadderState::Shedding => "shedding",
+        }
+    }
+}
+
+/// Thresholds and hysteresis of the [`Ladder`].  Pressure is a
+/// dimensionless signal (1.0 = at capacity); `*_hi` must exceed the
+/// matching `*_lo` so every rung has a dead band.
+#[derive(Debug, Clone)]
+pub struct LadderConfig {
+    /// EWMA above this pushes Normal toward Degraded.
+    pub degrade_hi: f64,
+    /// EWMA below this pulls Degraded back toward Normal.
+    pub degrade_lo: f64,
+    /// EWMA above this pushes Degraded toward Shedding.
+    pub shed_hi: f64,
+    /// EWMA below this pulls Shedding back toward Degraded.
+    pub shed_lo: f64,
+    /// EWMA smoothing factor in (0, 1]; 1.0 = no smoothing.
+    pub alpha: f64,
+    /// Consecutive beyond-threshold samples required before any
+    /// transition — at least `dwell` samples separate two transitions.
+    pub dwell: u32,
+}
+
+impl Default for LadderConfig {
+    fn default() -> Self {
+        LadderConfig {
+            degrade_hi: 0.5,
+            degrade_lo: 0.25,
+            shed_hi: 0.9,
+            shed_lo: 0.6,
+            alpha: 0.3,
+            dwell: 3,
+        }
+    }
+}
+
+/// Hysteresis state machine over a pressure EWMA.  Single-threaded by
+/// itself; the [`Gate`] wraps it in a mutex.
+#[derive(Debug, Clone)]
+pub struct Ladder {
+    cfg: LadderConfig,
+    state: LadderState,
+    ewma: Option<f64>,
+    /// Consecutive samples pushing up (toward Shedding) / down.
+    up_run: u32,
+    down_run: u32,
+    transitions: u64,
+}
+
+impl Ladder {
+    pub fn new(cfg: LadderConfig) -> Ladder {
+        Ladder {
+            cfg,
+            state: LadderState::Normal,
+            ewma: None,
+            up_run: 0,
+            down_run: 0,
+            transitions: 0,
+        }
+    }
+
+    pub fn state(&self) -> LadderState {
+        self.state
+    }
+
+    /// Smoothed pressure (0 until the first sample).
+    pub fn ewma(&self) -> f64 {
+        self.ewma.unwrap_or(0.0)
+    }
+
+    pub fn transitions(&self) -> u64 {
+        self.transitions
+    }
+
+    /// Feed one pressure sample; returns the (possibly new) state.
+    ///
+    /// Transitions move one rung at a time and only after `dwell`
+    /// *consecutive* beyond-threshold samples, and the run counters
+    /// reset on every transition — so any two transitions are at least
+    /// `dwell` samples apart (the no-flap property the tests pin).
+    pub fn on_sample(&mut self, pressure: f64) -> LadderState {
+        let p = pressure.max(0.0);
+        let e = match self.ewma {
+            None => p,
+            Some(prev) => prev + self.cfg.alpha * (p - prev),
+        };
+        self.ewma = Some(e);
+
+        let (up, down) = match self.state {
+            LadderState::Normal => (e > self.cfg.degrade_hi, false),
+            LadderState::Degraded => (e > self.cfg.shed_hi, e < self.cfg.degrade_lo),
+            LadderState::Shedding => (false, e < self.cfg.shed_lo),
+        };
+        self.up_run = if up { self.up_run + 1 } else { 0 };
+        self.down_run = if down { self.down_run + 1 } else { 0 };
+
+        if self.up_run >= self.cfg.dwell {
+            self.state = match self.state {
+                LadderState::Normal => LadderState::Degraded,
+                LadderState::Degraded | LadderState::Shedding => LadderState::Shedding,
+            };
+            self.up_run = 0;
+            self.down_run = 0;
+            self.transitions += 1;
+        } else if self.down_run >= self.cfg.dwell {
+            self.state = match self.state {
+                LadderState::Shedding => LadderState::Degraded,
+                LadderState::Degraded | LadderState::Normal => LadderState::Normal,
+            };
+            self.up_run = 0;
+            self.down_run = 0;
+            self.transitions += 1;
+        }
+        self.state
+    }
+}
+
+// ---------------------------------------------------------------------
+// Circuit breaker
+// ---------------------------------------------------------------------
+
+/// Breaker states, textbook shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Traffic flows; consecutive failures are counted.
+    Closed,
+    /// Backend is quarantined; admits nothing until `cooldown` passes.
+    Open,
+    /// One probe request is allowed through to test recovery.
+    HalfOpen,
+}
+
+#[derive(Debug, Clone)]
+pub struct BreakerConfig {
+    /// Consecutive failures that trip Closed -> Open.
+    pub trip_after: u32,
+    /// How long Open refuses before allowing a half-open probe.
+    pub cooldown: Duration,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> Self {
+        BreakerConfig { trip_after: 3, cooldown: Duration::from_millis(250) }
+    }
+}
+
+/// Per-backend circuit breaker.  Deterministic given the sequence of
+/// `admit`/`record_*` calls (the only wall-clock input is the Open
+/// cooldown, which tests zero out).
+#[derive(Debug, Clone)]
+pub struct Breaker {
+    cfg: BreakerConfig,
+    state: BreakerState,
+    consecutive_failures: u32,
+    opened_at: Option<Instant>,
+    probe_inflight: bool,
+    trips: u64,
+}
+
+impl Breaker {
+    pub fn new(cfg: BreakerConfig) -> Breaker {
+        Breaker {
+            cfg,
+            state: BreakerState::Closed,
+            consecutive_failures: 0,
+            opened_at: None,
+            probe_inflight: false,
+            trips: 0,
+        }
+    }
+
+    pub fn state(&self) -> BreakerState {
+        self.state
+    }
+
+    /// Total Closed/HalfOpen -> Open transitions.
+    pub fn trips(&self) -> u64 {
+        self.trips
+    }
+
+    /// May the primary backend take this request?  Open flips to
+    /// HalfOpen once the cooldown has passed, admitting exactly one
+    /// probe; concurrent requests keep being refused until the probe
+    /// reports back.
+    pub fn admit(&mut self) -> bool {
+        match self.state {
+            BreakerState::Closed => true,
+            BreakerState::Open => {
+                let cooled =
+                    self.opened_at.map(|t| t.elapsed() >= self.cfg.cooldown).unwrap_or(true);
+                if cooled {
+                    self.state = BreakerState::HalfOpen;
+                    self.probe_inflight = true;
+                    true
+                } else {
+                    false
+                }
+            }
+            BreakerState::HalfOpen => {
+                if self.probe_inflight {
+                    false
+                } else {
+                    self.probe_inflight = true;
+                    true
+                }
+            }
+        }
+    }
+
+    /// The admitted request succeeded: recovery confirmed.
+    pub fn record_success(&mut self) {
+        self.state = BreakerState::Closed;
+        self.consecutive_failures = 0;
+        self.opened_at = None;
+        self.probe_inflight = false;
+    }
+
+    /// The admitted request failed.  Returns `true` when this failure
+    /// tripped the breaker open (so callers can count trips).
+    pub fn record_failure(&mut self) -> bool {
+        match self.state {
+            BreakerState::Closed => {
+                self.consecutive_failures += 1;
+                if self.consecutive_failures >= self.cfg.trip_after {
+                    self.trip();
+                    true
+                } else {
+                    false
+                }
+            }
+            BreakerState::HalfOpen => {
+                // The probe failed: straight back to Open.
+                self.trip();
+                true
+            }
+            BreakerState::Open => false,
+        }
+    }
+
+    fn trip(&mut self) {
+        self.state = BreakerState::Open;
+        self.consecutive_failures = 0;
+        self.opened_at = Some(Instant::now());
+        self.probe_inflight = false;
+        self.trips += 1;
+    }
+}
+
+// ---------------------------------------------------------------------
+// Backoff
+// ---------------------------------------------------------------------
+
+/// Jittered exponential backoff: `base * 2^attempt` capped at `cap`,
+/// scaled by a seeded jitter in [0.5, 1.0].  Pure in `(seed, attempt)`
+/// so retry schedules reproduce under a fixed fault plan.
+pub fn backoff_delay(seed: u64, attempt: u32, base: Duration, cap: Duration) -> Duration {
+    let exp = base.saturating_mul(1u32 << attempt.min(16));
+    let exp = exp.min(cap);
+    let mut rng = Pcg::new(seed, attempt as u64);
+    let jitter = 0.5 + 0.5 * rng.uniform();
+    Duration::from_secs_f64(exp.as_secs_f64() * jitter)
+}
+
+// ---------------------------------------------------------------------
+// Gate: one per deployed model
+// ---------------------------------------------------------------------
+
+/// Everything tunable about one model's resilience behavior.
+#[derive(Debug, Clone)]
+pub struct GateConfig {
+    pub ladder: LadderConfig,
+    pub breaker: BreakerConfig,
+    /// Deadline applied when neither the request nor the spec names
+    /// one (the old hard-coded wire timeout, now one shared default).
+    pub default_deadline: Duration,
+    /// Slack past the deadline before the *wire* gives up on the
+    /// worker — engine checks are between stages, so a response can
+    /// legitimately land this much after the deadline.
+    pub grace: Duration,
+    /// Retry budget for serve-time backend failures.
+    pub max_retries: u32,
+    /// First retry backoff (doubles per attempt, jittered).
+    pub backoff_base: Duration,
+    /// Backoff ceiling.
+    pub backoff_cap: Duration,
+    /// Retry-after hint attached to shed responses.
+    pub retry_after: Duration,
+    /// Queue depth treated as pressure 1.0.
+    pub target_depth: usize,
+    /// Per-batch exec latency treated as pressure 1.0.
+    pub slo: Duration,
+}
+
+impl Default for GateConfig {
+    fn default() -> Self {
+        GateConfig {
+            ladder: LadderConfig::default(),
+            breaker: BreakerConfig::default(),
+            default_deadline: Duration::from_secs(120),
+            grace: Duration::from_millis(250),
+            max_retries: 2,
+            backoff_base: Duration::from_millis(5),
+            backoff_cap: Duration::from_millis(100),
+            retry_after: Duration::from_millis(50),
+            target_depth: 32,
+            slo: Duration::from_millis(50),
+        }
+    }
+}
+
+/// Per-model resilience state, shared by every replica's worker and
+/// the connection threads (wrap in an `Arc`).
+pub struct Gate {
+    cfg: GateConfig,
+    ladder: std::sync::Mutex<Ladder>,
+    breaker: std::sync::Mutex<Breaker>,
+}
+
+impl Gate {
+    pub fn new(cfg: GateConfig) -> Gate {
+        let ladder = Ladder::new(cfg.ladder.clone());
+        let breaker = Breaker::new(cfg.breaker.clone());
+        Gate {
+            cfg,
+            ladder: std::sync::Mutex::new(ladder),
+            breaker: std::sync::Mutex::new(breaker),
+        }
+    }
+
+    pub fn config(&self) -> &GateConfig {
+        &self.cfg
+    }
+
+    /// Current ladder rung (what admission decisions read).
+    pub fn state(&self) -> LadderState {
+        self.ladder.lock().unwrap().state()
+    }
+
+    /// Feed one pressure observation from a worker: queue depth after
+    /// a drain plus the batch's exec wall time, both normalized
+    /// against the gate's capacity targets.
+    pub fn observe(&self, depth: usize, exec: Duration) -> LadderState {
+        let p_depth = depth as f64 / self.cfg.target_depth.max(1) as f64;
+        let p_lat = exec.as_secs_f64() / self.cfg.slo.as_secs_f64().max(1e-9);
+        self.ladder.lock().unwrap().on_sample(p_depth.max(p_lat))
+    }
+
+    /// May the *primary* backend take this work right now?
+    pub fn admit_backend(&self) -> bool {
+        self.breaker.lock().unwrap().admit()
+    }
+
+    pub fn record_backend_success(&self) {
+        self.breaker.lock().unwrap().record_success();
+    }
+
+    /// Returns `true` when this failure tripped the breaker open.
+    pub fn record_backend_failure(&self) -> bool {
+        self.breaker.lock().unwrap().record_failure()
+    }
+
+    pub fn breaker_state(&self) -> BreakerState {
+        self.breaker.lock().unwrap().state()
+    }
+
+    pub fn breaker_trips(&self) -> u64 {
+        self.breaker.lock().unwrap().trips()
+    }
+
+    /// The deadline a request gets when it names none itself: the
+    /// deployed spec's `:dl<ms>`, else the gate default.
+    pub fn default_deadline(&self, spec: &ExecSpec) -> Duration {
+        spec.deadline().unwrap_or(self.cfg.default_deadline)
+    }
+}
+
+/// The cheaper sibling spec a model degrades to under pressure: auto
+/// placement on the same device with the guardrail-gated q8 backend
+/// opted in and fusion forced on.  Batch/threads/tile/trace/deadline
+/// knobs carry over unchanged — the sibling must accept the same
+/// batches the primary's batcher emits.  Returns `None` when the
+/// sibling would be the primary itself (nothing cheaper to offer).
+pub fn degraded_spec(spec: &ExecSpec) -> Option<ExecSpec> {
+    let mut sib = ExecSpec::auto();
+    if let Some(dev) = spec.device() {
+        sib = sib.with_device(dev).ok()?;
+    }
+    sib = sib.with_q8().ok()?.with_fusion(true);
+    if spec.batch() != 1 {
+        sib = sib.with_batch(spec.batch()).ok()?;
+    }
+    if let Some(t) = spec.threads() {
+        sib = sib.with_threads(t).ok()?;
+    }
+    if let Some(t) = spec.tile() {
+        sib = sib.with_tile(t).ok()?;
+    }
+    if let Some(ms) = spec.deadline_ms() {
+        sib = sib.with_deadline_ms(ms).ok()?;
+    }
+    if spec.trace() != crate::obs::TraceLevel::Off {
+        sib = sib.with_trace(spec.trace()).ok()?;
+    }
+    if &sib == spec {
+        None
+    } else {
+        Some(sib)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ladder(dwell: u32) -> Ladder {
+        Ladder::new(LadderConfig { alpha: 1.0, dwell, ..LadderConfig::default() })
+    }
+
+    #[test]
+    fn ladder_climbs_and_recovers_one_rung_at_a_time() {
+        let mut l = ladder(2);
+        assert_eq!(l.state(), LadderState::Normal);
+        // Two high samples: Normal -> Degraded (not straight to Shedding).
+        l.on_sample(2.0);
+        assert_eq!(l.state(), LadderState::Normal, "dwell not yet met");
+        assert_eq!(l.on_sample(2.0), LadderState::Degraded);
+        // Two more: Degraded -> Shedding.
+        l.on_sample(2.0);
+        assert_eq!(l.on_sample(2.0), LadderState::Shedding);
+        // Recovery unwinds the same way.
+        l.on_sample(0.0);
+        assert_eq!(l.on_sample(0.0), LadderState::Degraded);
+        l.on_sample(0.0);
+        assert_eq!(l.on_sample(0.0), LadderState::Normal);
+        assert_eq!(l.transitions(), 4);
+    }
+
+    #[test]
+    fn ladder_dead_band_prevents_flap() {
+        // Pressure sitting between degrade_lo and degrade_hi moves the
+        // ladder nowhere, from either adjacent state.
+        let mut l = ladder(1);
+        for _ in 0..20 {
+            assert_eq!(l.on_sample(0.4), LadderState::Normal);
+        }
+        l.on_sample(2.0); // -> Degraded (dwell 1)
+        assert_eq!(l.state(), LadderState::Degraded);
+        for _ in 0..20 {
+            assert_eq!(l.on_sample(0.4), LadderState::Degraded, "dead band holds");
+        }
+    }
+
+    #[test]
+    fn ladder_transitions_are_at_least_dwell_apart() {
+        // Adversarial alternating pressure cannot produce transitions
+        // closer than `dwell` samples.
+        let mut l = ladder(3);
+        let mut last_transition: Option<usize> = None;
+        let mut prev_state = l.state();
+        for i in 0..200 {
+            let p = if i % 2 == 0 { 2.0 } else { 0.0 };
+            let s = l.on_sample(p);
+            if s != prev_state {
+                if let Some(last) = last_transition {
+                    assert!(i - last >= 3, "transitions {last} and {i} too close");
+                }
+                last_transition = Some(i);
+                prev_state = s;
+            }
+        }
+    }
+
+    #[test]
+    fn breaker_trips_after_consecutive_failures_and_half_open_recovers() {
+        let mut b = Breaker::new(BreakerConfig {
+            trip_after: 3,
+            cooldown: Duration::from_millis(0),
+        });
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert!(b.admit());
+        assert!(!b.record_failure());
+        assert!(!b.record_failure());
+        // A success resets the consecutive count.
+        b.record_success();
+        assert!(!b.record_failure());
+        assert!(!b.record_failure());
+        assert!(b.record_failure(), "third consecutive failure trips");
+        assert_eq!(b.state(), BreakerState::Open);
+        assert_eq!(b.trips(), 1);
+        // Zero cooldown: the next admit is the half-open probe...
+        assert!(b.admit());
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        // ...and concurrent requests are refused while it is in flight.
+        assert!(!b.admit());
+        b.record_success();
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert!(b.admit());
+    }
+
+    #[test]
+    fn breaker_half_open_failure_retrips() {
+        let mut b = Breaker::new(BreakerConfig {
+            trip_after: 1,
+            cooldown: Duration::from_millis(0),
+        });
+        assert!(b.record_failure());
+        assert!(b.admit()); // half-open probe
+        assert!(b.record_failure(), "probe failure retrips");
+        assert_eq!(b.state(), BreakerState::Open);
+        assert_eq!(b.trips(), 2);
+    }
+
+    #[test]
+    fn breaker_open_refuses_during_cooldown() {
+        let mut b = Breaker::new(BreakerConfig {
+            trip_after: 1,
+            cooldown: Duration::from_secs(3600),
+        });
+        b.record_failure();
+        assert_eq!(b.state(), BreakerState::Open);
+        assert!(!b.admit(), "cooldown not elapsed");
+        assert!(!b.admit());
+    }
+
+    #[test]
+    fn backoff_is_deterministic_capped_and_grows() {
+        let base = Duration::from_millis(5);
+        let cap = Duration::from_millis(100);
+        let a0 = backoff_delay(42, 0, base, cap);
+        assert_eq!(a0, backoff_delay(42, 0, base, cap), "pure in (seed, attempt)");
+        assert_ne!(a0, backoff_delay(43, 0, base, cap));
+        // Jitter keeps every delay within [exp/2, exp].
+        for attempt in 0..8 {
+            let d = backoff_delay(7, attempt, base, cap);
+            let exp = base.saturating_mul(1 << attempt).min(cap);
+            assert!(d <= exp, "attempt {attempt}: {d:?} > {exp:?}");
+            assert!(d >= exp / 2, "attempt {attempt}: {d:?} < {:?}", exp / 2);
+        }
+        assert!(backoff_delay(7, 30, base, cap) <= cap);
+    }
+
+    #[test]
+    fn degraded_spec_is_q8_fused_and_label_distinct() {
+        let primary: ExecSpec = "cpu-gemm:nofuse:batch=4:threads=2:dl200".parse().unwrap();
+        let sib = degraded_spec(&primary).expect("cheaper sibling exists");
+        assert_eq!(sib.to_string(), "delegate:auto:q8:batch=4:threads=2:dl200");
+        assert!(sib.fusion(), "fusion forced on");
+        // Already-cheapest specs have nothing to degrade to.
+        let cheapest: ExecSpec = "delegate:auto:q8".parse().unwrap();
+        assert!(degraded_spec(&cheapest).is_none());
+        // Device carries over.
+        let on_m9: ExecSpec = "delegate:auto:m9:batch=2".parse().unwrap();
+        let sib = degraded_spec(&on_m9).unwrap();
+        assert_eq!(sib.to_string(), "delegate:auto:m9:q8:batch=2");
+    }
+
+    #[test]
+    fn gate_wires_ladder_breaker_and_deadline_defaults() {
+        let gate = Gate::new(GateConfig {
+            ladder: LadderConfig { alpha: 1.0, dwell: 1, ..LadderConfig::default() },
+            target_depth: 10,
+            slo: Duration::from_millis(100),
+            ..GateConfig::default()
+        });
+        assert_eq!(gate.state(), LadderState::Normal);
+        // depth 20 / target 10 = pressure 2.0 -> Degraded after dwell 1.
+        assert_eq!(gate.observe(20, Duration::from_millis(1)), LadderState::Degraded);
+        // Latency alone can carry the pressure too.
+        assert_eq!(gate.observe(0, Duration::from_secs(1)), LadderState::Shedding);
+        assert!(gate.admit_backend());
+        for _ in 0..3 {
+            gate.record_backend_failure();
+        }
+        assert_eq!(gate.breaker_state(), BreakerState::Open);
+        assert_eq!(gate.breaker_trips(), 1);
+        // Deadline default: spec :dl wins over the gate fallback.
+        let with_dl: ExecSpec = "cpu-gemm:dl75".parse().unwrap();
+        assert_eq!(gate.default_deadline(&with_dl), Duration::from_millis(75));
+        let without: ExecSpec = "cpu-gemm".parse().unwrap();
+        assert_eq!(gate.default_deadline(&without), gate.config().default_deadline);
+    }
+}

@@ -6,14 +6,29 @@
 //! `Send`, so engines are thread-local by construction).  Responses
 //! travel back over per-request channels.
 //!
+//! Every deployed model carries a resilience [`Gate`]
+//! ([`crate::coordinator::resilience`]): requests get a deadline (wire
+//! `deadline_ms` > spec `:dl<ms>` > gate default) enforced at dequeue,
+//! between engine stages, and at the wire; a degradation ladder sheds
+//! or downshifts work under pressure (degraded responses are labeled
+//! `served_by`); and a circuit breaker retries serve-time backend
+//! failures down the fallback chain with jittered backoff.
+//!
 //! Protocol (one JSON document per line):
 //!
 //! ```text
-//!   -> {"net": "lenet5", "image": [784 floats], "id": 7}
+//!   -> {"net": "lenet5", "image": [784 floats], "id": 7,
+//!       "deadline_ms": 250}                      // deadline optional
 //!   <- {"id": 7, "label": 3, "logits": [...], "latency_ms": 1.9, "batch": 4}
-//!   -> {"cmd": "ping"}            <- {"ok": true, "nets": ["lenet5", ...]}
+//!   <- {"id": 7, "error": "...", "code": "expired" | "overloaded"
+//!                                      | "bad_request"}
+//!   -> {"cmd": "ping"}            <- {"ok": true, "nets": [...],
+//!                                     "rejected_full": {net: count}}
 //!   -> {"cmd": "metrics"}         <- {<metrics snapshot>}
 //!   -> {"cmd": "trace"}           <- {<Chrome trace-event JSON, drains spans>}
+//!   -> {"cmd": "faults", "plan": "seed=1:backend.exec=err@0.5"}
+//!                                 <- {"ok": true, "armed": "...",
+//!                                     "counts": [{site, probes, fires}]}
 //!   -> anything else              <- {"error": "..."}
 //! ```
 
@@ -25,11 +40,13 @@ use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::batcher::{Batcher, BatcherConfig};
+use crate::coordinator::batcher::{Batcher, BatcherConfig, Push};
 use crate::coordinator::engine::{Engine, EngineConfig};
 use crate::coordinator::metrics::Metrics;
+use crate::coordinator::resilience::{self, Gate, GateConfig, LadderState};
 use crate::coordinator::router::Router;
 use crate::delegate::fallback;
+use crate::faults;
 use crate::model::manifest::Manifest;
 use crate::obs::{self, TraceLevel};
 use crate::session::ExecSpec;
@@ -47,11 +64,24 @@ pub struct Request {
     pub image: Tensor,
     pub resp: mpsc::Sender<Json>,
     pub enqueued: Instant,
+    /// Absolute deadline (wire `deadline_ms` > spec `:dl` > gate
+    /// default, resolved at admission).  Checked at dequeue and
+    /// between engine stages; the wire gives up `grace` after it.
+    pub deadline: Instant,
     /// Server-assigned sequence number (span correlation id).
     pub seq: u64,
 }
 
 type Handle = Arc<Batcher<Request>>;
+
+/// What the router hands a connection thread for one replica: the
+/// replica's batcher plus the model-wide spec and resilience gate.
+#[derive(Clone)]
+struct ModelHandle {
+    spec: ExecSpec,
+    batcher: Handle,
+    gate: Arc<Gate>,
+}
 
 /// Server deployment description.
 #[derive(Debug, Clone)]
@@ -64,6 +94,26 @@ pub struct ServerConfig {
     pub models: Vec<(String, ExecSpec, usize)>,
     pub batcher: BatcherConfig,
     pub artifacts_dir: PathBuf,
+    /// Resilience policy applied to every deployed model (deadlines,
+    /// degradation ladder, circuit breaker, retry budget).
+    pub gate: GateConfig,
+    /// Serve the built-in zoo with procedurally generated weights
+    /// (this seed) instead of loading artifacts from disk — the
+    /// artifact-free mode the resilience tests and chaos smokes use.
+    pub synthetic: Option<u64>,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            models: Vec::new(),
+            batcher: BatcherConfig::default(),
+            artifacts_dir: PathBuf::from(crate::DEFAULT_ARTIFACTS),
+            gate: GateConfig::default(),
+            synthetic: None,
+        }
+    }
 }
 
 impl ServerConfig {
@@ -101,10 +151,13 @@ impl ServerHandle {
 /// call returns once the listener is bound (first-request latency may
 /// include artifact compilation unless engines preload quickly).
 pub fn serve(cfg: ServerConfig) -> Result<ServerHandle> {
-    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    let manifest = match cfg.synthetic {
+        Some(_) => Manifest::synthetic(),
+        None => Manifest::load(&cfg.artifacts_dir)?,
+    };
     let stop = Arc::new(AtomicBool::new(false));
     let metrics = Arc::new(Metrics::new());
-    let mut router: Router<(String, Handle)> = Router::new();
+    let mut router: Router<ModelHandle> = Router::new();
     let mut threads = Vec::new();
     let mut batchers = Vec::new();
 
@@ -124,24 +177,38 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle> {
         let batcher_cfg = if spec.batch() > 1 {
             BatcherConfig {
                 max_batch: cfg.batcher.max_batch.min(spec.batch()),
-                max_wait: cfg.batcher.max_wait,
+                ..cfg.batcher.clone()
             }
         } else {
             cfg.batcher.clone()
         };
         let canonical = spec.to_string();
+        // One gate per deployed model, shared by its replicas and by
+        // every connection thread routing to it.
+        let gate = Arc::new(Gate::new(cfg.gate.clone()));
         for r in 0..(*replicas).max(1) {
             let batcher: Handle = Arc::new(Batcher::new(batcher_cfg.clone()));
-            router.add(net, (canonical.clone(), Arc::clone(&batcher)));
+            router.add(
+                net,
+                ModelHandle {
+                    spec: spec.clone(),
+                    batcher: Arc::clone(&batcher),
+                    gate: Arc::clone(&gate),
+                },
+            );
             batchers.push(Arc::clone(&batcher));
             let net = net.clone();
             let spec = spec.clone();
             let dir = cfg.artifacts_dir.clone();
             let metrics = Arc::clone(&metrics);
+            let gate = Arc::clone(&gate);
+            let synthetic = cfg.synthetic;
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("engine-{net}-{canonical}-{r}"))
-                    .spawn(move || engine_worker(&dir, &net, &spec, batcher, metrics))
+                    .spawn(move || {
+                        engine_worker(&dir, &net, &spec, batcher, metrics, gate, synthetic)
+                    })
                     .expect("spawn engine worker"),
             );
         }
@@ -218,6 +285,21 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle> {
     Ok(ServerHandle { addr, stop, batchers, threads, metrics })
 }
 
+/// Build one engine for `spec`: from artifacts on disk, or over the
+/// synthetic zoo when the server runs artifact-free.
+fn make_engine(
+    dir: &std::path::Path,
+    net: &str,
+    spec: &ExecSpec,
+    synthetic: Option<u64>,
+) -> Result<Engine> {
+    let cfg = EngineConfig::for_spec(spec.clone());
+    match synthetic {
+        Some(seed) => Engine::synthetic(net, cfg, seed),
+        None => Engine::from_artifacts(dir, net, cfg),
+    }
+}
+
 /// Build a worker's engine, applying the delegate fallback policy:
 /// when the requested spec fails retryably (missing artifacts, or an
 /// accelerator backend that cannot compile), degrade to cost-driven
@@ -229,8 +311,9 @@ fn build_engine_with_fallback(
     dir: &std::path::Path,
     net: &str,
     spec: &ExecSpec,
+    synthetic: Option<u64>,
 ) -> Result<(Engine, Option<String>)> {
-    let make = |s: &ExecSpec| Engine::from_artifacts(dir, net, EngineConfig::for_spec(s.clone()));
+    let make = |s: &ExecSpec| make_engine(dir, net, s, synthetic);
     let requested = spec.to_string();
     let first = match make(spec) {
         Ok(engine) => return Ok((engine, None)),
@@ -252,6 +335,9 @@ fn build_engine_with_fallback(
         }
         if let Some(t) = spec.tile() {
             alt = alt.with_tile(t).expect("tile validated");
+        }
+        if let Some(ms) = spec.deadline_ms() {
+            alt = alt.with_deadline_ms(ms).expect("deadline validated");
         }
         if spec.trace() != TraceLevel::Off {
             alt = alt.with_trace(spec.trace()).expect("trace knob carries onto a fresh base");
@@ -288,15 +374,18 @@ fn build_engine_with_fallback(
     Err(first.context(trail))
 }
 
-/// Engine worker: owns one Engine, drains its batcher forever.
+/// Engine worker: owns one Engine (plus, when the model has one, the
+/// pre-built degraded q8 sibling), drains its batcher forever.
 fn engine_worker(
     dir: &std::path::Path,
     net: &str,
     spec: &ExecSpec,
     batcher: Handle,
     metrics: Arc<Metrics>,
+    gate: Arc<Gate>,
+    synthetic: Option<u64>,
 ) {
-    let engine = match build_engine_with_fallback(dir, net, spec) {
+    let engine = match build_engine_with_fallback(dir, net, spec, synthetic) {
         Ok((e, note)) => {
             if let Some(note) = note {
                 eprintln!("[server] {net}: {note}");
@@ -316,9 +405,26 @@ fn engine_worker(
             return;
         }
     };
+    // The ladder's Degraded rung serves through a cheaper pre-built
+    // sibling (auto placement + q8 + fusion).  Built once, up front:
+    // degrading must not pay an engine build on the hot path.  A model
+    // that has no cheaper sibling (or whose sibling fails to build)
+    // simply never serves degraded — its ladder goes from normal
+    // admission straight to shedding.
+    let degraded: Option<(Engine, String)> = resilience::degraded_spec(spec).and_then(|sib| {
+        let canonical = sib.to_string();
+        match make_engine(dir, net, &sib, synthetic) {
+            Ok(e) => Some((e, canonical)),
+            Err(err) => {
+                eprintln!("[server] {net}: degraded sibling {canonical} unavailable ({err:#})");
+                None
+            }
+        }
+    });
     while let Some(batch) = batcher.next_batch() {
         let n = batch.len();
-        metrics.set_queue_depth(batcher.depth());
+        let depth = batcher.depth();
+        metrics.set_queue_depth(depth);
         if obs::enabled(TraceLevel::Stage) {
             // Queue-wait spans: enqueue (connection thread) → dequeue
             // (here).  Recorded manually because the interval straddles
@@ -336,21 +442,120 @@ fn engine_worker(
                 );
             }
         }
+        // Injected scheduler hiccup: a delay rule stalls the drain
+        // (requests age toward their deadlines while we sleep); an
+        // error rule poisons the whole batch.
+        if let Err(e) = faults::check(faults::SITE_QUEUE_STALL) {
+            for req in batch {
+                metrics.record_error(net);
+                let _ = req.resp.send(Json::obj(vec![
+                    ("id", req.id.clone()),
+                    ("error", Json::str(format!("inference failed: {e}"))),
+                ]));
+            }
+            continue;
+        }
+        // Drop requests that expired while queued: running them would
+        // burn engine time on answers nobody is waiting for.
+        let now = Instant::now();
+        let mut live = Vec::with_capacity(batch.len());
+        for req in batch {
+            if now >= req.deadline {
+                metrics.record_expired(net);
+                let over = now.duration_since(req.deadline).as_millis();
+                let _ = req.resp.send(Json::obj(vec![
+                    ("id", req.id.clone()),
+                    (
+                        "error",
+                        Json::str(format!("deadline expired {over}ms ago in {net} queue")),
+                    ),
+                    ("code", Json::str(resilience::CODE_EXPIRED)),
+                ]));
+            } else {
+                live.push(req);
+            }
+        }
+        if live.is_empty() {
+            continue;
+        }
+        let batch = live;
+        let n = batch.len();
         let frames: Vec<Tensor> = batch.iter().map(|r| r.image.clone()).collect();
         let stacked = Tensor::stack(&frames);
+        // The most patient request bounds the work; less patient ones
+        // get typed expired responses if it runs long (and their wire
+        // side gives up at deadline+grace regardless).
+        let batch_deadline = batch.iter().map(|r| r.deadline).max().expect("non-empty batch");
+        let ladder = gate.state();
+        let mut use_degraded = if degraded.is_none() {
+            false
+        } else if ladder >= LadderState::Degraded {
+            true
+        } else {
+            // Breaker consult only when there is somewhere to go: an
+            // admit() in half-open claims the single probe slot.
+            !gate.admit_backend()
+        };
+        let gcfg = gate.config();
+        let retry_seed = batch[0].seq;
         let exec0 = obs::now_us();
-        let result = {
-            let _exec_span = obs::span_with(TraceLevel::Stage, "request", || {
-                format!("exec {net} n={n}")
-            });
-            engine.infer_batch(&stacked)
+        let t_exec = Instant::now();
+        let mut attempt: u32 = 0;
+        let result = loop {
+            let (eng, on_degraded) = match (&degraded, use_degraded) {
+                (Some((sib, _)), true) => (sib, true),
+                _ => (&engine, false),
+            };
+            let r = {
+                let _exec_span = obs::span_with(TraceLevel::Stage, "request", || {
+                    format!("exec {net} n={n}")
+                });
+                eng.infer_deadline(&stacked, Some(batch_deadline))
+            };
+            match r {
+                Ok(logits) => {
+                    if !on_degraded {
+                        gate.record_backend_success();
+                    }
+                    for (stage, secs) in eng.last_stage_times() {
+                        metrics.record_stage(net, &stage, secs);
+                    }
+                    break Ok((logits, on_degraded));
+                }
+                Err(e) => {
+                    let expired = e.downcast_ref::<resilience::DeadlineExpired>().is_some();
+                    if !on_degraded && !expired && gate.record_backend_failure() {
+                        metrics.record_breaker_trip(net);
+                    }
+                    let out_of_time = Instant::now() >= batch_deadline;
+                    if expired
+                        || out_of_time
+                        || attempt >= gcfg.max_retries
+                        || !fallback::is_retryable(&e)
+                    {
+                        break Err(e);
+                    }
+                    metrics.record_retry(net);
+                    let delay = resilience::backoff_delay(
+                        retry_seed,
+                        attempt,
+                        gcfg.backoff_base,
+                        gcfg.backoff_cap,
+                    );
+                    let remaining = batch_deadline.saturating_duration_since(Instant::now());
+                    std::thread::sleep(delay.min(remaining));
+                    // Walk down the fallback chain once the breaker
+                    // refuses the primary.
+                    if !use_degraded && degraded.is_some() && !gate.admit_backend() {
+                        use_degraded = true;
+                    }
+                    attempt += 1;
+                }
+            }
         };
         match result {
-            Ok(logits) => {
+            Ok((logits, on_degraded)) => {
                 let exec1 = obs::now_us();
-                for (stage, secs) in engine.last_stage_times() {
-                    metrics.record_stage(net, &stage, secs);
-                }
                 let _resp_span = obs::span_with(TraceLevel::Stage, "request", || {
                     format!("respond {net} n={n}")
                 });
@@ -372,7 +577,7 @@ fn engine_worker(
                             vec![("batch", Json::num(n as f64))],
                         );
                     }
-                    let fields = vec![
+                    let mut fields = vec![
                         ("id", req.id.clone()),
                         ("label", Json::num(label as f64)),
                         ("score", Json::num(score as f64)),
@@ -383,26 +588,51 @@ fn engine_worker(
                             Json::arr(row.iter().map(|&v| Json::num(v as f64)).collect()),
                         ),
                     ];
+                    // Only degraded responses grow fields: normal
+                    // serving stays bit-identical to a gate-free
+                    // server.
+                    if on_degraded {
+                        metrics.record_degraded(net);
+                        let served_by = degraded
+                            .as_ref()
+                            .map(|(_, c)| c.clone())
+                            .expect("on_degraded implies sibling");
+                        fields.push(("served_by", Json::str(served_by)));
+                        fields.push(("degraded", Json::Bool(true)));
+                    }
                     let _ = req.resp.send(Json::obj(fields));
                 }
             }
             Err(e) => {
+                let expired = e.downcast_ref::<resilience::DeadlineExpired>().is_some();
                 for req in batch {
-                    metrics.record_error(net);
-                    let _ = req.resp.send(Json::obj(vec![
-                        ("id", req.id.clone()),
-                        ("error", Json::str(format!("inference failed: {e}"))),
-                    ]));
+                    if expired {
+                        metrics.record_expired(net);
+                        let _ = req.resp.send(Json::obj(vec![
+                            ("id", req.id.clone()),
+                            ("error", Json::str(format!("{e}"))),
+                            ("code", Json::str(resilience::CODE_EXPIRED)),
+                        ]));
+                    } else {
+                        metrics.record_error(net);
+                        let _ = req.resp.send(Json::obj(vec![
+                            ("id", req.id.clone()),
+                            ("error", Json::str(format!("inference failed: {e}"))),
+                        ]));
+                    }
                 }
             }
         }
+        // Feed the ladder after the fact: queue depth left behind plus
+        // this batch's wall time, normalized by the gate's targets.
+        gate.observe(batcher.depth(), t_exec.elapsed());
     }
 }
 
 /// Per-connection loop.
 fn handle_conn(
     stream: TcpStream,
-    router: &Router<(String, Handle)>,
+    router: &Router<ModelHandle>,
     metrics: &Metrics,
     nets: &[String],
     methods: &[String],
@@ -426,9 +656,43 @@ fn handle_conn(
     Ok(())
 }
 
+/// `{"cmd": "faults"}`: report (and optionally re-arm) the process
+/// fault-injection plan.  `"plan": "off"` disarms.
+fn faults_cmd(req: &Json) -> Json {
+    if let Some(plan) = req.get("plan").as_str() {
+        match plan.parse::<faults::FaultPlan>() {
+            Ok(p) => faults::arm(p),
+            Err(e) => {
+                return Json::obj(vec![
+                    ("error", Json::str(format!("bad fault plan: {e}"))),
+                    ("code", Json::str(resilience::CODE_BAD_REQUEST)),
+                ]);
+            }
+        }
+    }
+    let counts: Vec<Json> = faults::counts()
+        .into_iter()
+        .map(|(site, probes, fires)| {
+            Json::obj(vec![
+                ("site", Json::str(site)),
+                ("probes", Json::num(probes as f64)),
+                ("fires", Json::num(fires as f64)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        (
+            "armed",
+            Json::str(faults::armed().map(|p| p.to_string()).unwrap_or_else(|| "off".into())),
+        ),
+        ("counts", Json::arr(counts)),
+    ])
+}
+
 fn dispatch(
     req: Json,
-    router: &Router<(String, Handle)>,
+    router: &Router<ModelHandle>,
     metrics: &Metrics,
     nets: &[String],
     methods: &[String],
@@ -436,6 +700,13 @@ fn dispatch(
 ) -> Json {
     match req.get("cmd").as_str() {
         Some("ping") => {
+            let rejected: Vec<(&str, Json)> = nets
+                .iter()
+                .map(|nm| {
+                    let counts = metrics.resilience_counts(nm);
+                    (nm.as_str(), Json::num(counts.rejected_full as f64))
+                })
+                .collect();
             return Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("nets", Json::arr(nets.iter().map(|n| Json::str(n.clone())).collect())),
@@ -443,6 +714,7 @@ fn dispatch(
                     "methods",
                     Json::arr(methods.iter().map(|m| Json::str(m.clone())).collect()),
                 ),
+                ("rejected_full", Json::obj(rejected)),
             ]);
         }
         Some("metrics") => return metrics.snapshot(),
@@ -452,45 +724,121 @@ fn dispatch(
             let spans = obs::take();
             return obs::chrome_trace(&spans);
         }
+        Some("faults") => return faults_cmd(&req),
         Some(other) => {
             return Json::obj(vec![("error", Json::str(format!("unknown cmd {other:?}")))]);
         }
         None => {}
     }
+    let bad_request = |msg: String| {
+        Json::obj(vec![
+            ("error", Json::str(msg)),
+            ("code", Json::str(resilience::CODE_BAD_REQUEST)),
+        ])
+    };
     let Some(net) = req.get("net").as_str() else {
-        return Json::obj(vec![("error", Json::str("missing \"net\""))]);
+        return bad_request("missing \"net\"".into());
     };
     let Some((c, h, w)) = dims.get(net).copied() else {
-        return Json::obj(vec![("error", Json::str(format!("unknown net {net:?}")))]);
+        return bad_request(format!("unknown net {net:?}"));
     };
     let Some(pixels) = req.get("image").as_arr() else {
-        return Json::obj(vec![("error", Json::str("missing \"image\""))]);
+        return bad_request("missing \"image\"".into());
     };
     if pixels.len() != c * h * w {
-        return Json::obj(vec![(
-            "error",
-            Json::str(format!("image has {} values, {net} wants {}", pixels.len(), c * h * w)),
-        )]);
+        return bad_request(format!(
+            "image has {} values, {net} wants {}",
+            pixels.len(),
+            c * h * w
+        ));
     }
-    let data: Vec<f32> = pixels.iter().map(|v| v.as_f64().unwrap_or(0.0) as f32).collect();
+    // Strict pixel decode: a non-numeric or non-finite element is a
+    // protocol error, not a silent zero (the old `unwrap_or(0.0)`
+    // happily classified garbage frames).
+    let mut data: Vec<f32> = Vec::with_capacity(pixels.len());
+    for (i, v) in pixels.iter().enumerate() {
+        match v.as_f64() {
+            Some(f) if f.is_finite() => data.push(f as f32),
+            _ => return bad_request(format!("image[{i}] is not a finite number")),
+        }
+    }
     let image = Tensor::new(vec![1, c, h, w], data);
-    let Some((_method, handle)) = router.route(net) else {
+    let Some(handle) = router.route(net) else {
         return Json::obj(vec![("error", Json::str(format!("no engine for {net:?}")))]);
     };
+    // Admission control: a shedding model refuses up front with a
+    // retry hint rather than queueing work it will only expire.
+    if handle.gate.state() == LadderState::Shedding {
+        metrics.record_shed(net);
+        return Json::obj(vec![
+            ("id", req.get("id").clone()),
+            ("error", Json::str(format!("{net} is overloaded, retry later"))),
+            ("code", Json::str(resilience::CODE_OVERLOADED)),
+            (
+                "retry_after_ms",
+                Json::num(handle.gate.config().retry_after.as_millis() as f64),
+            ),
+        ]);
+    }
+    // Deadline resolution: wire field > spec `:dl<ms>` > gate default.
+    let dl_field = req.get("deadline_ms");
+    let budget = if matches!(dl_field, Json::Null) {
+        handle.gate.default_deadline(&handle.spec)
+    } else {
+        match dl_field.as_f64() {
+            Some(ms) if ms.is_finite() && ms >= 1.0 => Duration::from_millis(ms as u64),
+            _ => return bad_request("\"deadline_ms\" must be a number >= 1".into()),
+        }
+    };
+    let enqueued = Instant::now();
     let (tx, rx) = mpsc::channel();
-    let pushed = handle.push(Request {
+    let push = handle.batcher.push(Request {
         id: req.get("id").clone(),
         image,
         resp: tx,
-        enqueued: Instant::now(),
+        enqueued,
+        deadline: enqueued + budget,
         seq: NEXT_REQ.fetch_add(1, Ordering::Relaxed),
     });
-    if !pushed {
-        return Json::obj(vec![("error", Json::str("server shutting down"))]);
+    match push {
+        Push::Queued(_) => {}
+        Push::Full => {
+            metrics.record_rejected_full(net);
+            return Json::obj(vec![
+                ("id", req.get("id").clone()),
+                ("error", Json::str(format!("{net} queue is full"))),
+                ("code", Json::str(resilience::CODE_OVERLOADED)),
+                (
+                    "retry_after_ms",
+                    Json::num(handle.gate.config().retry_after.as_millis() as f64),
+                ),
+            ]);
+        }
+        Push::Closed => {
+            return Json::obj(vec![("error", Json::str("server shutting down"))]);
+        }
     }
-    match rx.recv_timeout(Duration::from_secs(120)) {
+    // The wire waits deadline + grace, never the old flat 120 s: a
+    // worker that misses the deadline (stall, crash, stuck backend)
+    // cannot strand the connection.
+    let grace = handle.gate.config().grace;
+    match rx.recv_timeout(budget + grace) {
         Ok(resp) => resp,
-        Err(_) => Json::obj(vec![("error", Json::str("engine timeout"))]),
+        Err(_) => {
+            metrics.record_expired(net);
+            Json::obj(vec![
+                ("id", req.get("id").clone()),
+                (
+                    "error",
+                    Json::str(format!(
+                        "deadline expired: no response within {}ms (+{}ms grace)",
+                        budget.as_millis(),
+                        grace.as_millis()
+                    )),
+                ),
+                ("code", Json::str(resilience::CODE_EXPIRED)),
+            ])
+        }
     }
 }
 

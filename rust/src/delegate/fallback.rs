@@ -30,11 +30,15 @@ pub struct FallbackOutcome {
     pub notes: Vec<String>,
 }
 
-/// Should a failure trigger re-planning?  True for missing manifest
-/// artifacts and for accelerator-backend (xla) failures; false for
-/// config errors (unknown method/network), which must surface.
+/// Should a failure trigger re-planning (at build time) or a retry
+/// down the fallback chain (at serve time)?  True for missing
+/// manifest artifacts, accelerator-backend (xla) failures, and
+/// injected backend faults; false for config errors (unknown
+/// method/network) and expired deadlines, which must surface.
 pub fn is_retryable(err: &anyhow::Error) -> bool {
-    err.downcast_ref::<MissingArtifact>().is_some() || err.downcast_ref::<xla::Error>().is_some()
+    err.downcast_ref::<MissingArtifact>().is_some()
+        || err.downcast_ref::<xla::Error>().is_some()
+        || err.downcast_ref::<crate::faults::FaultError>().is_some()
 }
 
 /// Build a plan for `spec`, falling back per the policy above.  The
@@ -215,6 +219,15 @@ mod tests {
         assert!(is_retryable(&missing));
         let xla_err = anyhow::Error::new(xla::Error("no backend".into()));
         assert!(is_retryable(&xla_err));
+        let injected =
+            anyhow::Error::new(crate::faults::FaultError { site: "backend.exec".into() });
+        assert!(is_retryable(&injected), "injected faults retry down the chain");
+        let expired = anyhow::Error::new(crate::coordinator::resilience::DeadlineExpired {
+            net: "lenet5".into(),
+            stage: "conv1".into(),
+            over_ms: 3,
+        });
+        assert!(!is_retryable(&expired), "expired work must not be retried");
         assert!(!is_retryable(&anyhow::anyhow!("unknown network")));
     }
 }

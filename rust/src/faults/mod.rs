@@ -1,0 +1,421 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! A [`FaultPlan`] names *sites* (string labels compiled into the code,
+//! e.g. `backend.exec`) and attaches rules — inject an error, or a
+//! latency spike — that fire pseudo-randomly but reproducibly: the
+//! decision for the N-th probe of a site is a pure function of
+//! `(plan seed, site, rule index, N)`, so the same plan against the
+//! same request order produces the same faults on every run.
+//!
+//! The plan is process-global and disarmed by default; a disarmed
+//! probe is a single relaxed atomic load (same fast-path discipline as
+//! `obs::enabled`), so instrumented hot paths pay nothing in normal
+//! operation.  Arm via [`arm`] (CLI `--faults <spec>` or the server's
+//! `faults` wire command), disarm via [`disarm`].
+//!
+//! Spec grammar (also accepted by [`FaultPlan::from_str`]):
+//!
+//! ```text
+//! off                                  # explicit no-op plan
+//! seed=42                              # armed, no rules (still a no-op)
+//! seed=42:backend.exec=err@0.3         # 30% of probes error
+//! seed=42:backend.exec=delay25ms@0.5x8 # 50% delay 25ms, at most 8 times
+//! seed=7:queue.stall=delay10ms@1       # every dequeue stalls 10ms
+//! ```
+//!
+//! Rules are probed in declaration order; the first rule that fires
+//! decides the probe's outcome.
+
+use std::fmt;
+use std::str::FromStr;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::util::rng::Pcg;
+
+/// Probed in the engine's stage loop: errors *and* delays apply, so a
+/// rule here looks like a faulting or thermally-throttled backend.
+pub const SITE_BACKEND_EXEC: &str = "backend.exec";
+/// Probed by the worker right after a batch is dequeued: delays stall
+/// the queue (errors make no sense there and are ignored by callers).
+pub const SITE_QUEUE_STALL: &str = "queue.stall";
+
+/// What an armed rule does when it fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The site reports a [`FaultError`].
+    Error,
+    /// The site sleeps for the given duration, then proceeds.
+    Delay(Duration),
+}
+
+/// One injection rule: at `site`, fire `kind` with probability `prob`,
+/// at most `limit` times (unbounded when `None`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultRule {
+    pub site: String,
+    pub kind: FaultKind,
+    pub prob: f64,
+    pub limit: Option<u64>,
+}
+
+impl FaultRule {
+    /// Deterministic fire decision for this rule's `ordinal`-th probe.
+    ///
+    /// Pure: the stream is derived from the plan seed, the site name,
+    /// and the rule's position, and the ordinal indexes into it — no
+    /// global state, no wall clock.
+    pub fn fires(&self, plan_seed: u64, rule_idx: usize, ordinal: u64) -> bool {
+        if self.prob >= 1.0 {
+            return true;
+        }
+        if self.prob <= 0.0 {
+            return false;
+        }
+        let stream = plan_seed ^ fnv1a(&self.site) ^ (rule_idx as u64).wrapping_mul(0x9e37_79b9);
+        let mut rng = Pcg::new(stream, ordinal);
+        rng.uniform() < self.prob
+    }
+}
+
+/// A full injection plan: a seed plus an ordered rule list.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub rules: Vec<FaultRule>,
+}
+
+impl FaultPlan {
+    /// True when the plan can never fire (no rules).
+    pub fn is_noop(&self) -> bool {
+        self.rules.is_empty()
+    }
+}
+
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "seed={}", self.seed)?;
+        for r in &self.rules {
+            let action = match r.kind {
+                FaultKind::Error => "err".to_string(),
+                FaultKind::Delay(d) => format!("delay{}ms", d.as_millis()),
+            };
+            write!(f, ":{}={}@{}", r.site, action, r.prob)?;
+            if let Some(limit) = r.limit {
+                write!(f, "x{limit}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl FromStr for FaultPlan {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<FaultPlan, String> {
+        let s = s.trim();
+        if s.is_empty() || s == "off" {
+            return Ok(FaultPlan::default());
+        }
+        let mut parts = s.split(':');
+        let head = parts.next().unwrap_or_default();
+        let seed = head
+            .strip_prefix("seed=")
+            .and_then(|v| v.parse::<u64>().ok())
+            .ok_or_else(|| format!("fault plan must start with seed=<n>, got `{head}`"))?;
+        let mut rules = Vec::new();
+        for part in parts {
+            rules.push(parse_rule(part)?);
+        }
+        Ok(FaultPlan { seed, rules })
+    }
+}
+
+fn parse_rule(part: &str) -> Result<FaultRule, String> {
+    let (site, rest) = part
+        .split_once('=')
+        .ok_or_else(|| format!("fault rule `{part}` missing `=` (want site=action@prob)"))?;
+    if site.is_empty() {
+        return Err(format!("fault rule `{part}` has an empty site"));
+    }
+    let (action, prob_part) = rest
+        .split_once('@')
+        .ok_or_else(|| format!("fault rule `{part}` missing `@prob`"))?;
+    let kind = if action == "err" {
+        FaultKind::Error
+    } else if let Some(ms) = action.strip_prefix("delay").and_then(|a| a.strip_suffix("ms")) {
+        let ms: u64 = ms
+            .parse()
+            .map_err(|_| format!("fault rule `{part}`: bad delay `{action}`"))?;
+        FaultKind::Delay(Duration::from_millis(ms))
+    } else {
+        return Err(format!(
+            "fault rule `{part}`: unknown action `{action}` (want err or delay<ms>ms)"
+        ));
+    };
+    let (prob_str, limit) = match prob_part.split_once('x') {
+        Some((p, l)) => {
+            let l: u64 = l
+                .parse()
+                .map_err(|_| format!("fault rule `{part}`: bad limit `{l}`"))?;
+            (p, Some(l))
+        }
+        None => (prob_part, None),
+    };
+    let prob: f64 = prob_str
+        .parse()
+        .map_err(|_| format!("fault rule `{part}`: bad probability `{prob_str}`"))?;
+    if !(0.0..=1.0).contains(&prob) {
+        return Err(format!("fault rule `{part}`: probability {prob} outside [0, 1]"));
+    }
+    Ok(FaultRule { site: site.to_string(), kind, prob, limit })
+}
+
+/// The error a site reports when an `err` rule fires.  Typed so the
+/// serving stack can distinguish injected faults (retryable) from real
+/// logic errors.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultError {
+    pub site: String,
+}
+
+impl fmt::Display for FaultError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "injected fault at {}", self.site)
+    }
+}
+
+impl std::error::Error for FaultError {}
+
+struct Armed {
+    plan: FaultPlan,
+    /// Per-rule probe ordinals (how many times each rule was consulted).
+    hits: Vec<AtomicU64>,
+    /// Per-rule fire counts (how many times each rule actually fired).
+    fired: Vec<AtomicU64>,
+}
+
+/// Fast-path gate: false means `point` returns `None` after one relaxed
+/// atomic load, with no lock taken.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static ARMED: Mutex<Option<Arc<Armed>>> = Mutex::new(None);
+
+/// Install `plan` process-wide, replacing any previous plan and
+/// resetting all counters.  A no-op plan (no rules) disarms.
+pub fn arm(plan: FaultPlan) {
+    let mut g = ARMED.lock().unwrap();
+    if plan.is_noop() {
+        ENABLED.store(false, Ordering::Release);
+        *g = None;
+        return;
+    }
+    let n = plan.rules.len();
+    *g = Some(Arc::new(Armed {
+        plan,
+        hits: (0..n).map(|_| AtomicU64::new(0)).collect(),
+        fired: (0..n).map(|_| AtomicU64::new(0)).collect(),
+    }));
+    ENABLED.store(true, Ordering::Release);
+}
+
+/// Remove the armed plan; every subsequent probe is a no-op.
+pub fn disarm() {
+    let mut g = ARMED.lock().unwrap();
+    ENABLED.store(false, Ordering::Release);
+    *g = None;
+}
+
+/// The currently armed plan, if any.
+pub fn armed() -> Option<FaultPlan> {
+    ARMED.lock().unwrap().as_ref().map(|a| a.plan.clone())
+}
+
+/// Per-rule `(site, probes, fires)` counters of the armed plan.
+pub fn counts() -> Vec<(String, u64, u64)> {
+    let g = ARMED.lock().unwrap();
+    match g.as_ref() {
+        None => Vec::new(),
+        Some(a) => a
+            .plan
+            .rules
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                (
+                    r.site.clone(),
+                    a.hits[i].load(Ordering::Relaxed),
+                    a.fired[i].load(Ordering::Relaxed),
+                )
+            })
+            .collect(),
+    }
+}
+
+/// Probe a named site.  Returns the fault to apply, or `None` when
+/// disarmed / no rule fires.  Disarmed cost: one relaxed atomic load.
+pub fn point(site: &str) -> Option<FaultKind> {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return None;
+    }
+    let armed = ARMED.lock().unwrap().as_ref().cloned()?;
+    for (i, rule) in armed.plan.rules.iter().enumerate() {
+        if rule.site != site {
+            continue;
+        }
+        let ordinal = armed.hits[i].fetch_add(1, Ordering::Relaxed);
+        if !rule.fires(armed.plan.seed, i, ordinal) {
+            continue;
+        }
+        if let Some(limit) = rule.limit {
+            // Claim a fire slot; the rule stops firing once exhausted.
+            let claimed = armed.fired[i]
+                .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |f| {
+                    (f < limit).then_some(f + 1)
+                })
+                .is_ok();
+            if !claimed {
+                continue;
+            }
+        } else {
+            armed.fired[i].fetch_add(1, Ordering::Relaxed);
+        }
+        return Some(rule.kind);
+    }
+    None
+}
+
+/// Probe a site and *apply* the fault: sleep through delays, surface
+/// errors as a typed [`FaultError`].  The standard call for code paths
+/// where both kinds make sense (e.g. backend execution).
+pub fn check(site: &str) -> crate::Result<()> {
+    match point(site) {
+        None => Ok(()),
+        Some(FaultKind::Delay(d)) => {
+            std::thread::sleep(d);
+            Ok(())
+        }
+        Some(FaultKind::Error) => {
+            Err(anyhow::Error::new(FaultError { site: site.to_string() }))
+        }
+    }
+}
+
+fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The armed plan is process-global; tests that touch it must not
+    /// interleave (cargo runs #[test]s on parallel threads).
+    static LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn grammar_round_trips() {
+        for spec in [
+            "seed=42",
+            "seed=42:backend.exec=err@0.3",
+            "seed=7:backend.exec=delay25ms@0.5x8",
+            "seed=0:queue.stall=delay10ms@1:backend.exec=err@0.25",
+        ] {
+            let plan: FaultPlan = spec.parse().unwrap();
+            assert_eq!(plan.to_string(), spec, "round trip of {spec}");
+            let again: FaultPlan = plan.to_string().parse().unwrap();
+            assert_eq!(again, plan);
+        }
+        assert!("off".parse::<FaultPlan>().unwrap().is_noop());
+        assert!("".parse::<FaultPlan>().unwrap().is_noop());
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        for bad in [
+            "backend.exec=err@0.3", // missing seed
+            "seed=x",
+            "seed=1:noaction",
+            "seed=1:s=explode@0.5",
+            "seed=1:s=err@1.5",
+            "seed=1:s=err@-0.1",
+            "seed=1:s=delayXms@0.5",
+            "seed=1:s=err@0.5xq",
+            "seed=1:=err@0.5",
+        ] {
+            assert!(bad.parse::<FaultPlan>().is_err(), "accepted `{bad}`");
+        }
+    }
+
+    #[test]
+    fn decisions_are_deterministic_and_probability_shaped() {
+        let rule = FaultRule {
+            site: "backend.exec".into(),
+            kind: FaultKind::Error,
+            prob: 0.3,
+            limit: None,
+        };
+        let a: Vec<bool> = (0..200).map(|n| rule.fires(42, 0, n)).collect();
+        let b: Vec<bool> = (0..200).map(|n| rule.fires(42, 0, n)).collect();
+        assert_eq!(a, b, "same seed, same stream");
+        let c: Vec<bool> = (0..200).map(|n| rule.fires(43, 0, n)).collect();
+        assert_ne!(a, c, "different seed, different stream");
+        let hits = a.iter().filter(|f| **f).count();
+        assert!((20..100).contains(&hits), "p=0.3 fired {hits}/200");
+
+        let never = FaultRule { prob: 0.0, ..rule.clone() };
+        assert!((0..100).all(|n| !never.fires(42, 0, n)));
+        let always = FaultRule { prob: 1.0, ..rule };
+        assert!((0..100).all(|n| always.fires(42, 0, n)));
+    }
+
+    #[test]
+    fn armed_plan_fires_and_counts() {
+        let _g = LOCK.lock().unwrap();
+        arm("seed=9:site.a=err@1x3".parse().unwrap());
+        let mut errors = 0;
+        for _ in 0..10 {
+            if check("site.a").is_err() {
+                errors += 1;
+            }
+        }
+        assert_eq!(errors, 3, "limit x3 respected");
+        assert!(check("site.unknown").is_ok());
+        let counts = counts();
+        assert_eq!(counts.len(), 1);
+        assert_eq!(counts[0].0, "site.a");
+        assert_eq!(counts[0].1, 10, "all probes counted");
+        assert_eq!(counts[0].2, 3, "fires counted up to the limit");
+        disarm();
+        assert!(armed().is_none());
+        assert!(check("site.a").is_ok(), "disarmed probe is a no-op");
+    }
+
+    #[test]
+    fn injected_error_is_typed() {
+        let _g = LOCK.lock().unwrap();
+        arm("seed=1:b.x=err@1".parse().unwrap());
+        let err = check("b.x").unwrap_err();
+        let fe = err.downcast_ref::<FaultError>().expect("typed FaultError");
+        assert_eq!(fe.site, "b.x");
+        disarm();
+    }
+
+    #[test]
+    fn delay_rule_sleeps() {
+        let _g = LOCK.lock().unwrap();
+        arm("seed=1:d.x=delay20ms@1x1".parse().unwrap());
+        let t0 = std::time::Instant::now();
+        assert!(check("d.x").is_ok());
+        assert!(t0.elapsed() >= Duration::from_millis(15), "delay applied");
+        let t1 = std::time::Instant::now();
+        assert!(check("d.x").is_ok());
+        assert!(t1.elapsed() < Duration::from_millis(15), "limit exhausted");
+        disarm();
+    }
+}

@@ -41,6 +41,12 @@
 //!   process-global recorder (request → stage → kernel-band spans,
 //!   no-op when disabled) with Chrome trace-event export; feeds the
 //!   CLI `profile` residual report and the server's expanded metrics.
+//! * [`faults`] — deterministic fault injection: a seeded
+//!   [`faults::FaultPlan`] fires backend errors, latency spikes, and
+//!   queue stalls at named probe sites (no-op single atomic load when
+//!   disarmed), making the resilience layer — deadlines, degradation
+//!   ladder, circuit breaker in [`coordinator::resilience`] —
+//!   testable and reproducible.
 //! * [`simulator`] — analytic mobile-GPU performance model that
 //!   regenerates the paper's Tables 3/4 at Mali-T760/Adreno-430 scale.
 //! * [`data`] — procedural digit corpus (mirrors `python/compile/digits.py`)
@@ -55,6 +61,7 @@ pub mod coordinator;
 pub mod cpu;
 pub mod data;
 pub mod delegate;
+pub mod faults;
 pub mod kernels;
 pub mod model;
 pub mod obs;

@@ -79,6 +79,14 @@ Observability (infer / profile):
   --trace stage|kernel  record request->stage->kernel spans while running
   --trace-out FILE      export recorded spans as Chrome trace-event JSON
                         (open in chrome://tracing or Perfetto)
+
+Resilience (infer / serve):
+  --deadline-ms N       bake a default per-request deadline into the spec
+                        (canonical form `:dl<ms>`; wire `deadline_ms` overrides)
+  --faults PLAN         arm deterministic fault injection, e.g.
+                        seed=7:backend.exec=err@0.2:queue.stall=delay25ms@0.5
+  serve --max-queue N   admission bound per replica (overflow -> `overloaded`)
+  serve --synthetic S   serve procedural weights (seed S) without artifacts
 `profile` runs warm frames and reports per-layer wall times against the
 delegate cost model's predictions (the residuals that placement
 decisions ride on); `--json` writes the report to BENCH_profile.json.
@@ -114,6 +122,31 @@ fn spec_opts(spec: ArgSpec) -> ArgSpec {
             "let the guardrail-gated Winograd F(2,3) backend compete (delegate:auto only)",
         )
         .flag("nofuse", "run the plan layer-by-layer instead of through the fused-stage IR")
+        .opt_no_default(
+            "deadline-ms",
+            "default per-request deadline baked into the spec (`:dl<ms>`)",
+        )
+}
+
+/// `--faults` rider for commands that execute inference: parse and arm
+/// the process-wide deterministic fault plan before the workload runs.
+fn faults_opt(spec: ArgSpec) -> ArgSpec {
+    spec.opt_no_default(
+        "faults",
+        "arm a fault-injection plan, e.g. seed=7:backend.exec=err@0.2:queue.stall=delay25ms@0.5",
+    )
+}
+
+fn arm_faults(args: &cnndroid::util::args::Args) -> Result<()> {
+    if let Some(plan) = args.get_opt("faults") {
+        let plan: cnndroid::faults::FaultPlan =
+            plan.parse().map_err(|e| anyhow::anyhow!("--faults: {e}"))?;
+        if !plan.is_noop() {
+            eprintln!("[faults] armed: {plan}");
+        }
+        cnndroid::faults::arm(plan);
+    }
+    Ok(())
 }
 
 /// `--plan-batch` rider for commands that also take a spec batch
@@ -198,6 +231,12 @@ fn apply_spec_knobs(
             .map_err(|_| anyhow::anyhow!("--plan-batch expects an integer, got {batch:?}"))?;
         spec = spec.with_batch(batch).map_err(anyhow::Error::new)?;
     }
+    if let Some(ms) = args.get_opt("deadline-ms") {
+        let ms: u64 = ms
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--deadline-ms expects an integer, got {ms:?}"))?;
+        spec = spec.with_deadline_ms(ms).map_err(anyhow::Error::new)?;
+    }
     Ok(spec)
 }
 
@@ -256,7 +295,7 @@ fn convert(argv: Vec<String>) -> Result<()> {
 }
 
 fn infer(argv: Vec<String>) -> Result<()> {
-    let spec = trace_opts(plan_batch_opt(spec_opts(artifacts_opt(
+    let spec = faults_opt(trace_opts(plan_batch_opt(spec_opts(artifacts_opt(
         ArgSpec::new("cnndroid infer", "classify images with the accelerated engine")
             .opt("net", "lenet5", "network")
             .opt("method", "advanced-simd-4", "cpu-seq | basic-parallel | basic-simd | advanced-simd-4 | advanced-simd-8 | mxu | cpu-gemm-q8 | delegate:auto[...:q8]")
@@ -264,9 +303,10 @@ fn infer(argv: Vec<String>) -> Result<()> {
             .opt("seed", "1", "synthetic workload seed")
             .opt_no_default("image", "PGM/PPM image file to classify")
             .flag("fused", "use the fused whole-network artifact"),
-    ))));
+    )))));
     let args = spec.parse_from(argv).map_err(|e| anyhow::anyhow!("{e}"))?;
     let trace_out = trace_setup(&args)?;
+    arm_faults(&args)?;
     let dir = artifacts_dir(&args);
     let exec = exec_spec(&args)?;
     let method = exec.to_string();
@@ -315,30 +355,46 @@ fn infer(argv: Vec<String>) -> Result<()> {
 }
 
 fn serve_cmd(argv: Vec<String>) -> Result<()> {
-    let spec = plan_batch_opt(spec_opts(artifacts_opt(
+    let spec = faults_opt(plan_batch_opt(spec_opts(artifacts_opt(
         ArgSpec::new("cnndroid serve", "TCP JSON-lines serving front end")
             .opt("addr", "127.0.0.1:7878", "bind address")
             .opt("net", "lenet5", "comma-separated networks to deploy")
             .opt("method", "advanced-simd-4", "execution spec (fixed or delegate:auto)")
             .opt("replicas", "1", "engine replicas per network")
             .opt("max-batch", "16", "dynamic batcher max batch")
-            .opt("max-wait-ms", "5", "dynamic batcher max wait"),
-    )));
+            .opt("max-wait-ms", "5", "dynamic batcher max wait")
+            .opt("max-queue", "1024", "admission bound: queued requests per replica")
+            .opt_no_default(
+                "synthetic",
+                "serve the built-in zoo on procedural weights with this seed (no artifacts)",
+            ),
+    ))));
     let args = spec.parse_from(argv).map_err(|e| anyhow::anyhow!("{e}"))?;
+    arm_faults(&args)?;
     let exec = exec_spec(&args)?;
     let models = args
         .get("net")
         .split(',')
         .map(|n| (n.trim().to_string(), exec.clone(), args.get_usize("replicas")))
         .collect();
+    let synthetic = match args.get_opt("synthetic") {
+        Some(s) => Some(
+            s.parse::<u64>()
+                .map_err(|_| anyhow::anyhow!("--synthetic expects a seed, got {s:?}"))?,
+        ),
+        None => None,
+    };
     let handle = serve(ServerConfig {
         addr: args.get("addr").to_string(),
         models,
         batcher: BatcherConfig {
             max_batch: args.get_usize("max-batch"),
             max_wait: std::time::Duration::from_millis(args.get_usize("max-wait-ms") as u64),
+            max_queue: args.get_usize("max-queue"),
         },
         artifacts_dir: artifacts_dir(&args),
+        synthetic,
+        ..ServerConfig::default()
     })?;
     println!(
         "serving on {} (nets: {}, spec: {exec}); Ctrl-C to stop",

@@ -141,6 +141,26 @@ impl Manifest {
         })
     }
 
+    /// An in-memory manifest over the built-in zoo with no artifacts
+    /// on disk: what `Engine::synthetic` and the server's synthetic
+    /// mode run against.  Only artifact-free placements can build from
+    /// it (the CPU backends, or auto placement over them).
+    pub fn synthetic() -> Manifest {
+        let mut networks = BTreeMap::new();
+        for n in crate::model::zoo::all() {
+            networks.insert(n.name.clone(), n);
+        }
+        Manifest {
+            dir: PathBuf::from("synthetic"),
+            source_hash: String::new(),
+            networks,
+            methods: Vec::new(),
+            heaviest_conv: Default::default(),
+            artifacts: Vec::new(),
+            weights: Default::default(),
+        }
+    }
+
     /// Absolute path of an artifact file.
     pub fn artifact_path(&self, meta: &ArtifactMeta) -> PathBuf {
         self.dir.join(&meta.path)

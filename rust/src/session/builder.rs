@@ -61,6 +61,7 @@ impl Session {
             batch: None,
             threads: None,
             tile: None,
+            deadline: None,
             trace: None,
             record_trace: false,
             preload: true,
@@ -120,6 +121,7 @@ pub struct SessionBuilder {
     batch: Option<usize>,
     threads: Option<usize>,
     tile: Option<usize>,
+    deadline: Option<u64>,
     trace: Option<TraceLevel>,
     record_trace: bool,
     preload: bool,
@@ -195,6 +197,15 @@ impl SessionBuilder {
         self
     }
 
+    /// Default per-request deadline in milliseconds (the `:dl<ms>`
+    /// segment).  When this spec is deployed behind the server, a
+    /// request without its own `deadline_ms` inherits this value; the
+    /// engine abandons work between stages once it passes.
+    pub fn deadline(mut self, ms: u64) -> Self {
+        self.deadline = Some(ms);
+        self
+    }
+
     /// Span-recording level for the [`crate::obs`] recorder
     /// (composes with every method/knob combination; off by default).
     pub fn trace(mut self, level: TraceLevel) -> Self {
@@ -253,6 +264,9 @@ impl SessionBuilder {
         }
         if let Some(t) = self.tile {
             spec = spec.with_tile(t)?;
+        }
+        if let Some(ms) = self.deadline {
+            spec = spec.with_deadline_ms(ms)?;
         }
         if let Some(t) = self.trace {
             spec = spec.with_trace(t)?;
@@ -318,6 +332,21 @@ mod tests {
             .spec()
             .unwrap();
         assert_eq!(spec.to_string(), "cpu-gemm:trace=kernel");
+
+        let spec = Session::for_net("lenet5")
+            .method("cpu-gemm")
+            .deadline(250)
+            .spec()
+            .unwrap();
+        assert_eq!(spec.deadline_ms(), Some(250));
+        assert_eq!(spec.to_string(), "cpu-gemm:dl250");
+        // Restating the string's deadline dedupes; a different one
+        // conflicts, like every other valued knob.
+        assert!(Session::for_net("lenet5").method("cpu-gemm:dl250").deadline(250).spec().is_ok());
+        assert!(matches!(
+            Session::for_net("lenet5").method("cpu-gemm:dl250").deadline(100).spec(),
+            Err(SpecError::ValueConflict { key: "dl", .. })
+        ));
     }
 
     #[test]

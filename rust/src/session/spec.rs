@@ -21,6 +21,7 @@
 //!            | "batch=" <n>                      frames per dispatch the plan serves
 //!            | "threads=" <n>                    kernel thread override
 //!            | "tile=" <n>                       GEMM tile-width override
+//!            | "dl" <ms>                         default per-request deadline, ms
 //!            | "trace=" <level> )                span recording: off | stage | kernel
 //! ```
 //!
@@ -86,6 +87,7 @@ pub struct ExecSpec {
     batch: usize,
     threads: Option<usize>,
     tile: Option<usize>,
+    deadline_ms: Option<u64>,
     trace: TraceLevel,
 }
 
@@ -207,6 +209,7 @@ impl ExecSpec {
             batch: 1,
             threads: None,
             tile: None,
+            deadline_ms: None,
             trace: TraceLevel::Off,
         }
     }
@@ -233,6 +236,7 @@ impl ExecSpec {
             batch: 1,
             threads: None,
             tile: None,
+            deadline_ms: None,
             trace: TraceLevel::Off,
         })
     }
@@ -272,6 +276,18 @@ impl ExecSpec {
     /// GEMM tile-width override (None: kernel default).
     pub fn tile(&self) -> Option<usize> {
         self.tile
+    }
+
+    /// Default per-request deadline in milliseconds (the `:dl<ms>`
+    /// segment).  `None` leaves the serving stack's default in force;
+    /// requests can still override it per call with `deadline_ms`.
+    pub fn deadline_ms(&self) -> Option<u64> {
+        self.deadline_ms
+    }
+
+    /// [`Self::deadline_ms`] as a `Duration`.
+    pub fn deadline(&self) -> Option<std::time::Duration> {
+        self.deadline_ms.map(std::time::Duration::from_millis)
     }
 
     /// Span-recording level the engine raises the global
@@ -449,6 +465,26 @@ impl ExecSpec {
         Ok(self)
     }
 
+    /// Default per-request deadline in milliseconds (must be >= 1;
+    /// conflicts like [`Self::with_batch`]: a *different* already-set
+    /// value is rejected, restating dedupes).
+    pub fn with_deadline_ms(mut self, ms: u64) -> Result<ExecSpec, SpecError> {
+        if ms == 0 {
+            return Err(SpecError::BadValue { key: "dl", value: "0".into() });
+        }
+        if let Some(prev) = self.deadline_ms {
+            if prev != ms {
+                return Err(SpecError::ValueConflict {
+                    key: "dl",
+                    first: prev as usize,
+                    second: ms as usize,
+                });
+            }
+        }
+        self.deadline_ms = Some(ms);
+        Ok(self)
+    }
+
     /// Span-recording level (conflicts like the keyword segments: a
     /// *different* already-set level is rejected, restating dedupes).
     /// Tracing never changes numerics, only what the recorder sees.
@@ -502,6 +538,9 @@ impl fmt::Display for ExecSpec {
         if let Some(t) = self.tile {
             write!(f, ":tile={t}")?;
         }
+        if let Some(ms) = self.deadline_ms {
+            write!(f, ":dl{ms}")?;
+        }
         if self.trace != TraceLevel::Off {
             write!(f, ":trace={}", self.trace)?;
         }
@@ -521,6 +560,7 @@ struct Segments {
     batch: Option<usize>,
     threads: Option<usize>,
     tile: Option<usize>,
+    dl: Option<u64>,
     trace: Option<TraceLevel>,
 }
 
@@ -650,6 +690,27 @@ impl FromStr for ExecSpec {
                                 })
                             }
                         }
+                    } else if let Some(ms) = seg
+                        .strip_prefix("dl")
+                        .filter(|r| !r.is_empty() && r.bytes().all(|b| b.is_ascii_digit()))
+                    {
+                        let ms: u64 = ms.parse().map_err(|_| SpecError::BadValue {
+                            key: "dl",
+                            value: ms.to_string(),
+                        })?;
+                        if ms == 0 {
+                            return Err(SpecError::BadValue { key: "dl", value: "0".into() });
+                        }
+                        match seen.dl {
+                            Some(prev) if prev != ms => {
+                                return Err(SpecError::ValueConflict {
+                                    key: "dl",
+                                    first: prev as usize,
+                                    second: ms as usize,
+                                })
+                            }
+                            _ => seen.dl = Some(ms),
+                        }
                     } else if let Some(alias) = device::canonical_alias(seg) {
                         match &seen.device {
                             Some(prev) if prev != alias => {
@@ -708,6 +769,9 @@ impl FromStr for ExecSpec {
         }
         if let Some(t) = seen.tile {
             spec = spec.with_tile(t)?;
+        }
+        if let Some(ms) = seen.dl {
+            spec = spec.with_deadline_ms(ms)?;
         }
         if let Some(t) = seen.trace {
             spec = spec.with_trace(t)?;
@@ -841,6 +905,51 @@ mod tests {
         assert_eq!(parse("cpu-gemm:nowino").to_string(), "cpu-gemm");
         // Modifier mirrors the grammar on auto specs.
         assert!(ExecSpec::auto().with_winograd().unwrap().winograd());
+    }
+
+    #[test]
+    fn deadline_knob_round_trips_and_conflicts() {
+        let spec = parse("delegate:auto:q8:batch=4:dl250");
+        assert_eq!(spec.deadline_ms(), Some(250));
+        assert_eq!(spec.deadline(), Some(std::time::Duration::from_millis(250)));
+        assert_eq!(spec.to_string(), "delegate:auto:q8:batch=4:dl250");
+        // Works on fixed backends too (the serving default applies to
+        // any deployed spec) and sits after :tile=, before :trace=.
+        let fixed = parse("cpu-gemm:trace=stage:dl500:tile=64");
+        assert_eq!(fixed.deadline_ms(), Some(500));
+        assert_eq!(fixed.to_string(), "cpu-gemm:tile=64:dl500:trace=stage");
+        // Default is "no spec deadline" and stays out of the canonical
+        // form; duplicates dedupe; different values conflict.
+        assert_eq!(parse("cpu-gemm").deadline_ms(), None);
+        assert_eq!(parse("cpu-gemm:dl100:dl100").to_string(), "cpu-gemm:dl100");
+        assert!(matches!(
+            "cpu-gemm:dl100:dl200".parse::<ExecSpec>(),
+            Err(SpecError::ValueConflict { key: "dl", first: 100, second: 200 })
+        ));
+        // Junk values are typed; bare "dl" is not a segment.
+        assert!(matches!(
+            "cpu-gemm:dl0".parse::<ExecSpec>(),
+            Err(SpecError::BadValue { key: "dl", .. })
+        ));
+        assert!(matches!(
+            "cpu-gemm:dl".parse::<ExecSpec>(),
+            Err(SpecError::UnknownSegment { .. })
+        ));
+        assert!(matches!(
+            "cpu-gemm:dl1x".parse::<ExecSpec>(),
+            Err(SpecError::UnknownSegment { .. })
+        ));
+        // Modifier mirrors the grammar.
+        assert_eq!(ExecSpec::auto().with_deadline_ms(50).unwrap().deadline_ms(), Some(50));
+        assert!(parse("cpu-gemm:dl100").with_deadline_ms(100).is_ok());
+        assert!(matches!(
+            parse("cpu-gemm:dl100").with_deadline_ms(200),
+            Err(SpecError::ValueConflict { key: "dl", .. })
+        ));
+        assert!(matches!(
+            ExecSpec::auto().with_deadline_ms(0),
+            Err(SpecError::BadValue { key: "dl", .. })
+        ));
     }
 
     #[test]

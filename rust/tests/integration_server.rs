@@ -25,8 +25,13 @@ fn start(models: Vec<(String, String, usize)>) -> Option<cnndroid::coordinator::
         serve(ServerConfig {
             addr: "127.0.0.1:0".into(),
             models,
-            batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(3) },
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(3),
+                ..BatcherConfig::default()
+            },
             artifacts_dir: dir,
+            ..ServerConfig::default()
         })
         .unwrap(),
     )

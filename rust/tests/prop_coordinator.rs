@@ -19,9 +19,10 @@ fn batcher_conserves_and_orders_requests() {
         let b = Batcher::new(BatcherConfig {
             max_batch,
             max_wait: Duration::from_micros(200),
+            ..BatcherConfig::default()
         });
         for i in 0..n {
-            prop_assert!(b.push(i), "push {i} rejected while open");
+            prop_assert!(b.push(i).accepted(), "push {i} rejected while open");
         }
         b.close();
         let mut drained = Vec::new();
@@ -43,6 +44,7 @@ fn batcher_conserves_under_concurrency() {
         let b = Arc::new(Batcher::new(BatcherConfig {
             max_batch: rng.range(1, 17) as usize,
             max_wait: Duration::from_micros(100),
+            ..BatcherConfig::default()
         }));
         let mut handles = Vec::new();
         for p in 0..producers {

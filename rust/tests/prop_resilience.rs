@@ -1,0 +1,540 @@
+//! Property and end-to-end tests on the serving resilience subsystem:
+//! fault-plan determinism, ladder hysteresis, breaker state machine,
+//! and — against a live synthetic-weights server — bounded response
+//! times under injected faults, degraded-response labeling, typed
+//! overload rejections, and bit-identical serving when injection is
+//! disarmed.
+//!
+//! The fault plan is process-global, so every test that arms one (or
+//! that asserts fault-free behavior end to end) serializes behind
+//! [`LOCK`] and disarms through a drop guard.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use cnndroid::coordinator::resilience::{self, backoff_delay, degraded_spec};
+use cnndroid::coordinator::server::Client;
+use cnndroid::coordinator::{
+    serve, BatcherConfig, Breaker, BreakerConfig, BreakerState, GateConfig, Ladder, LadderConfig,
+    LadderState, ServerConfig, ServerHandle,
+};
+use cnndroid::faults::{self, FaultKind, FaultPlan, FaultRule};
+use cnndroid::prop_assert;
+use cnndroid::session::ExecSpec;
+use cnndroid::util::json::Json;
+use cnndroid::util::prop;
+
+/// Serializes every test that touches the process-global fault plan or
+/// that requires it disarmed while its server runs.
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Disarms the global plan when dropped, so a panicking test cannot
+/// leak faults into the next one.
+struct Disarm;
+impl Drop for Disarm {
+    fn drop(&mut self) {
+        faults::disarm();
+    }
+}
+
+// ---------------------------------------------------------------------
+// Component properties
+// ---------------------------------------------------------------------
+
+#[test]
+fn fault_plans_round_trip_and_fire_deterministically() {
+    prop::check("fault plan round trip + determinism", |rng| {
+        let sites = [faults::SITE_BACKEND_EXEC, faults::SITE_QUEUE_STALL];
+        let n_rules = rng.range(0, 4) as usize;
+        let rules: Vec<FaultRule> = (0..n_rules)
+            .map(|_| FaultRule {
+                site: sites[rng.range(0, sites.len() as i64) as usize].to_string(),
+                kind: if rng.range(0, 2) == 0 {
+                    FaultKind::Error
+                } else {
+                    FaultKind::Delay(Duration::from_millis(rng.range(1, 50) as u64))
+                },
+                // Eighths print and re-parse exactly through f64.
+                prob: rng.range(0, 9) as f64 / 8.0,
+                limit: if rng.range(0, 2) == 0 { None } else { Some(rng.range(1, 9) as u64) },
+            })
+            .collect();
+        let plan = FaultPlan { seed: rng.next_u64(), rules };
+        let reparsed: FaultPlan = plan
+            .to_string()
+            .parse()
+            .map_err(|e| format!("grammar rejected its own output: {e}"))?;
+        prop_assert!(reparsed == plan, "round trip changed the plan: {plan} vs {reparsed}");
+
+        for (idx, rule) in plan.rules.iter().enumerate() {
+            let mut fired = 0u64;
+            for ordinal in 0..400 {
+                let a = rule.fires(plan.seed, idx, ordinal);
+                let b = rule.fires(plan.seed, idx, ordinal);
+                prop_assert!(a == b, "fire decision not deterministic at ordinal {ordinal}");
+                fired += a as u64;
+            }
+            if rule.prob <= 0.0 {
+                prop_assert!(fired == 0, "prob-0 rule fired {fired} times");
+            } else if rule.prob >= 1.0 {
+                prop_assert!(fired == 400, "prob-1 rule fired only {fired}/400");
+            } else {
+                let rate = fired as f64 / 400.0;
+                prop_assert!(
+                    (rate - rule.prob).abs() < 0.2,
+                    "fire rate {rate:.2} far from prob {} at {}",
+                    rule.prob,
+                    rule.site
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn ladder_transitions_are_single_rung_and_dwell_separated() {
+    prop::check("ladder hysteresis", |rng| {
+        let dwell = rng.range(1, 5) as u32;
+        let cfg = LadderConfig { dwell, alpha: rng.range_f64(0.2, 1.0), ..LadderConfig::default() };
+        let mut ladder = Ladder::new(cfg);
+        let mut prev = ladder.state();
+        prop_assert!(prev == LadderState::Normal, "ladder must start Normal, got {prev:?}");
+        let mut last_transition: Option<usize> = None;
+        for i in 0..300 {
+            // Sustained load regimes (not white noise) so the EWMA
+            // actually crosses thresholds: pick a level and hold it.
+            let level = match (i / 25) % 4 {
+                0 => 0.0,
+                1 => rng.range_f64(0.6, 0.85),
+                2 => rng.range_f64(1.0, 3.0),
+                _ => rng.range_f64(0.0, 0.2),
+            };
+            let state = ladder.on_sample(level);
+            if state != prev {
+                let rungs = (state as i64 - prev as i64).abs();
+                prop_assert!(rungs == 1, "skipped a rung: {prev:?} -> {state:?} at sample {i}");
+                if let Some(t) = last_transition {
+                    prop_assert!(
+                        i - t >= dwell as usize,
+                        "transitions {t} and {i} closer than dwell {dwell}"
+                    );
+                }
+                last_transition = Some(i);
+                prev = state;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn breaker_sequences_are_deterministic() {
+    prop::check("breaker state machine", |rng| {
+        let trip_after = rng.range(1, 5) as u32;
+        let cfg = BreakerConfig { trip_after, cooldown: Duration::ZERO };
+        let mut b = Breaker::new(cfg);
+        // Closed admits and tolerates trip_after-1 consecutive failures.
+        for _ in 0..trip_after - 1 {
+            prop_assert!(b.admit(), "closed breaker refused");
+            prop_assert!(!b.record_failure(), "tripped early");
+            prop_assert!(b.state() == BreakerState::Closed, "left Closed early");
+        }
+        prop_assert!(b.admit(), "closed breaker refused");
+        prop_assert!(b.record_failure(), "failure {trip_after} did not trip");
+        prop_assert!(b.state() == BreakerState::Open, "not Open after trip");
+        prop_assert!(b.trips() == 1, "trip count {}", b.trips());
+        // Zero cooldown: next admit is the half-open probe; concurrent
+        // admits are refused until the probe reports.
+        prop_assert!(b.admit(), "cooled breaker refused the probe");
+        prop_assert!(b.state() == BreakerState::HalfOpen, "no half-open probe");
+        prop_assert!(!b.admit(), "second probe admitted while one in flight");
+        if rng.range(0, 2) == 0 {
+            b.record_success();
+            prop_assert!(b.state() == BreakerState::Closed, "probe success did not close");
+        } else {
+            prop_assert!(b.record_failure(), "probe failure did not retrip");
+            prop_assert!(b.state() == BreakerState::Open, "probe failure did not reopen");
+            prop_assert!(b.trips() == 2, "retrip not counted");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn backoff_is_deterministic_and_bounded() {
+    prop::check("backoff bounds", |rng| {
+        let seed = rng.next_u64();
+        let base = Duration::from_millis(rng.range(1, 10) as u64);
+        let cap = Duration::from_millis(rng.range(20, 200) as u64);
+        for attempt in 0..20u32 {
+            let d = backoff_delay(seed, attempt, base, cap);
+            prop_assert!(
+                d == backoff_delay(seed, attempt, base, cap),
+                "backoff not deterministic at attempt {attempt}"
+            );
+            prop_assert!(d <= cap, "delay {d:?} above cap {cap:?} at attempt {attempt}");
+            let exp = base.saturating_mul(1u32 << attempt.min(16)).min(cap);
+            prop_assert!(d >= exp / 2, "jitter below half: {d:?} < {:?}/2", exp);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn degraded_spec_labels_are_canonical() {
+    prop::check("degraded sibling canonical", |rng| {
+        let methods = ["cpu-gemm", "cpu-seq", "advanced-simd-4", "cpu-gemm:batch=4"];
+        let spec: ExecSpec =
+            methods[rng.range(0, methods.len() as i64) as usize].parse().unwrap();
+        let Some(sib) = degraded_spec(&spec) else {
+            return Err("fixed specs must have a cheaper sibling".into());
+        };
+        let canonical = sib.to_string();
+        let reparsed: ExecSpec = canonical.parse().map_err(|e| format!("{e}"))?;
+        prop_assert!(
+            reparsed.to_string() == canonical,
+            "sibling label not canonical: {canonical}"
+        );
+        prop_assert!(canonical.contains("q8"), "sibling is not quantized: {canonical}");
+        prop_assert!(
+            sib.batch() == spec.batch(),
+            "sibling batch {} diverged from primary {}",
+            sib.batch(),
+            spec.batch()
+        );
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// End-to-end, against a live synthetic-weights server
+// ---------------------------------------------------------------------
+
+/// Synthetic-weight seed the q8 guardrail is known to pass on.
+const SEED: u64 = 45;
+
+fn start(gate: GateConfig, batcher: BatcherConfig) -> ServerHandle {
+    serve(ServerConfig {
+        models: vec![ServerConfig::model("lenet5", "cpu-gemm", 1).unwrap()],
+        batcher,
+        gate,
+        synthetic: Some(SEED),
+        ..ServerConfig::default()
+    })
+    .expect("synthetic server starts without artifacts")
+}
+
+fn frame_request(id: u64, deadline_ms: Option<u64>) -> Json {
+    let (imgs, _) = cnndroid::data::synth::make_dataset(1, 7, 0.05);
+    let mut fields = vec![
+        ("net", Json::str("lenet5")),
+        ("id", Json::num(id as f64)),
+        (
+            "image",
+            Json::arr(imgs.data().iter().map(|&v| Json::num(v as f64)).collect()),
+        ),
+    ];
+    if let Some(ms) = deadline_ms {
+        fields.push(("deadline_ms", Json::num(ms as f64)));
+    }
+    Json::obj(fields)
+}
+
+#[test]
+fn responses_stay_bounded_under_randomized_faults() {
+    let _g = lock();
+    let _d = Disarm;
+    let handle = start(GateConfig::default(), BatcherConfig::default());
+    let mut client = Client::connect(handle.addr).unwrap();
+    // Warm (engine build) before arming.
+    let warm = client.call(&frame_request(0, None)).unwrap();
+    assert!(warm.get("error").is_null(), "warmup failed: {}", warm.dump());
+
+    let plan: FaultPlan =
+        "seed=1234:backend.exec=err@0.4:queue.stall=delay40ms@0.5:backend.exec=delay15ms@0.3"
+            .parse()
+            .unwrap();
+    faults::arm(plan);
+    let deadline = Duration::from_millis(150);
+    let bound = deadline + GateConfig::default().grace + Duration::from_secs(5);
+    for i in 0..30u64 {
+        let t = Instant::now();
+        let resp = client.call(&frame_request(i, Some(deadline.as_millis() as u64))).unwrap();
+        let wall = t.elapsed();
+        assert!(
+            wall < bound,
+            "request {i} took {wall:?}, past deadline {deadline:?} + grace (resp {})",
+            resp.dump()
+        );
+        // Under faults a response is a classification, a typed expiry,
+        // or a typed failure — never silence, never an untyped hang.
+        if resp.get("error").is_null() {
+            assert_eq!(resp.get("logits").as_arr().unwrap().len(), 10);
+        } else if !resp.get("code").is_null() {
+            let code = resp.get("code").as_str().unwrap();
+            assert!(
+                code == resilience::CODE_EXPIRED || code == resilience::CODE_OVERLOADED,
+                "unexpected code in {}",
+                resp.dump()
+            );
+        }
+    }
+    faults::disarm();
+    handle.shutdown();
+}
+
+#[test]
+fn degraded_responses_carry_the_serving_spec() {
+    let _g = lock();
+    let _d = Disarm;
+    // A gate that degrades almost immediately: any measurable exec
+    // latency exceeds the 1ns SLO, and one over-threshold sample
+    // (dwell=1, alpha=1) transitions the ladder — but the shed rungs
+    // are unreachable, so every admitted request is still served.
+    let gate = GateConfig {
+        ladder: LadderConfig {
+            degrade_hi: 0.001,
+            degrade_lo: 0.0005,
+            shed_hi: 1e12,
+            shed_lo: 1e11,
+            alpha: 1.0,
+            dwell: 1,
+        },
+        slo: Duration::from_nanos(1),
+        ..GateConfig::default()
+    };
+    let handle = start(gate, BatcherConfig::default());
+    let mut client = Client::connect(handle.addr).unwrap();
+    let mut saw_degraded = false;
+    for i in 0..10u64 {
+        let resp = client.call(&frame_request(i, None)).unwrap();
+        assert!(resp.get("error").is_null(), "serving failed: {}", resp.dump());
+        if resp.get("degraded").as_bool() == Some(true) {
+            saw_degraded = true;
+            let label = resp.get("served_by").as_str().expect("degraded without served_by");
+            let spec: ExecSpec = label.parse().expect("served_by must parse as an ExecSpec");
+            assert_eq!(spec.to_string(), label, "served_by not canonical: {label}");
+            assert!(label.contains("q8"), "degraded label not quantized: {label}");
+        } else {
+            assert!(
+                resp.get("served_by").is_null(),
+                "normal response leaked a served_by label: {}",
+                resp.dump()
+            );
+        }
+    }
+    assert!(saw_degraded, "ladder never degraded under a 1ns SLO");
+    let m = client.call(&Json::obj(vec![("cmd", Json::str("metrics"))])).unwrap();
+    let degraded =
+        m.get("nets").get("lenet5").get("resilience").get("degraded").as_usize().unwrap_or(0);
+    assert!(degraded >= 1, "degraded counter not surfaced: {}", m.dump());
+    handle.shutdown();
+}
+
+#[test]
+fn disarmed_injection_is_bit_identical() {
+    let _g = lock();
+    let _d = Disarm;
+    let handle = start(GateConfig::default(), BatcherConfig::default());
+    let mut client = Client::connect(handle.addr).unwrap();
+    let baseline = client.call(&frame_request(1, None)).unwrap();
+    assert!(baseline.get("error").is_null(), "{}", baseline.dump());
+
+    // An armed-but-ruleless plan is a no-op: the instrumented sites
+    // must not perturb results in any way.
+    faults::arm("seed=99".parse().unwrap());
+    let under_noop = client.call(&frame_request(1, None)).unwrap();
+    faults::disarm();
+    let after = client.call(&frame_request(1, None)).unwrap();
+    for resp in [&under_noop, &after] {
+        assert!(resp.get("error").is_null(), "{}", resp.dump());
+        assert_eq!(
+            resp.get("logits").dump(),
+            baseline.get("logits").dump(),
+            "logits diverged with injection disarmed"
+        );
+        assert_eq!(resp.get("label").dump(), baseline.get("label").dump());
+    }
+    handle.shutdown();
+}
+
+#[test]
+fn overload_rejections_are_typed_and_counted() {
+    let _g = lock();
+    let _d = Disarm;
+    let handle = start(
+        GateConfig::default(),
+        BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1), max_queue: 2 },
+    );
+    {
+        let mut warm = Client::connect(handle.addr).unwrap();
+        let r = warm.call(&frame_request(0, None)).unwrap();
+        assert!(r.get("error").is_null(), "{}", r.dump());
+    }
+    // Stall every dequeue so concurrent requests pile into the tiny
+    // queue; the overflow must come back typed `overloaded`, not hang.
+    faults::arm("seed=5:queue.stall=delay150ms@1".parse().unwrap());
+    let addr = handle.addr;
+    let mut threads = Vec::new();
+    for i in 0..12u64 {
+        threads.push(std::thread::spawn(move || {
+            let mut c = Client::connect(addr).unwrap();
+            c.call(&frame_request(i, Some(400))).unwrap()
+        }));
+    }
+    let responses: Vec<Json> = threads.into_iter().map(|t| t.join().unwrap()).collect();
+    faults::disarm();
+    let overloaded = responses
+        .iter()
+        .filter(|r| r.get("code").as_str() == Some(resilience::CODE_OVERLOADED))
+        .count();
+    assert!(
+        overloaded >= 1,
+        "no typed overload among {} responses: {:?}",
+        responses.len(),
+        responses.iter().map(|r| r.dump()).collect::<Vec<_>>()
+    );
+    for r in &responses {
+        if r.get("code").as_str() == Some(resilience::CODE_OVERLOADED) {
+            assert!(r.get("retry_after_ms").as_f64().unwrap_or(0.0) > 0.0, "{}", r.dump());
+        }
+    }
+    // The drops are visible both in ping and in the metrics snapshot.
+    let mut c = Client::connect(addr).unwrap();
+    let pong = c.call(&Json::obj(vec![("cmd", Json::str("ping"))])).unwrap();
+    let ping_count =
+        pong.get("rejected_full").get("lenet5").as_usize().unwrap_or(0);
+    assert!(ping_count >= overloaded, "ping rejected_full {ping_count} < {overloaded}");
+    let m = c.call(&Json::obj(vec![("cmd", Json::str("metrics"))])).unwrap();
+    let snap = m.get("nets").get("lenet5").get("resilience").get("rejected_full").as_usize();
+    assert_eq!(snap, Some(ping_count), "snapshot and ping disagree: {}", m.dump());
+    handle.shutdown();
+}
+
+#[test]
+fn expired_requests_are_dropped_with_a_typed_response() {
+    let _g = lock();
+    let _d = Disarm;
+    let handle = start(GateConfig::default(), BatcherConfig::default());
+    let mut client = Client::connect(handle.addr).unwrap();
+    let warm = client.call(&frame_request(0, None)).unwrap();
+    assert!(warm.get("error").is_null(), "{}", warm.dump());
+    // Stall the queue far past a short deadline: the worker must shed
+    // the request at dequeue (typed expired), and the wire must return
+    // within deadline + grace even though the worker is asleep.
+    faults::arm("seed=3:queue.stall=delay400ms@1".parse().unwrap());
+    let t = Instant::now();
+    let resp = client.call(&frame_request(1, Some(50))).unwrap();
+    let wall = t.elapsed();
+    faults::disarm();
+    assert_eq!(
+        resp.get("code").as_str(),
+        Some(resilience::CODE_EXPIRED),
+        "expected typed expiry, got {}",
+        resp.dump()
+    );
+    assert!(
+        wall < Duration::from_secs(3),
+        "expired request held the wire for {wall:?}"
+    );
+    // The counter shows up in the snapshot.
+    std::thread::sleep(Duration::from_millis(500)); // let the worker drain its stall
+    let m = client.call(&Json::obj(vec![("cmd", Json::str("metrics"))])).unwrap();
+    let expired =
+        m.get("nets").get("lenet5").get("resilience").get("expired").as_usize().unwrap_or(0);
+    assert!(expired >= 1, "expired counter missing: {}", m.dump());
+    handle.shutdown();
+}
+
+#[test]
+fn wire_rejects_malformed_images_and_deadlines() {
+    let _g = lock();
+    let handle = start(GateConfig::default(), BatcherConfig::default());
+    let mut client = Client::connect(handle.addr).unwrap();
+
+    // Non-numeric pixel.
+    let mut pixels = vec![Json::num(0.0); 784];
+    pixels[3] = Json::str("oops");
+    let r = client
+        .call(&Json::obj(vec![
+            ("net", Json::str("lenet5")),
+            ("image", Json::arr(pixels)),
+        ]))
+        .unwrap();
+    assert_eq!(r.get("code").as_str(), Some(resilience::CODE_BAD_REQUEST), "{}", r.dump());
+    assert!(r.get("error").as_str().unwrap().contains("image[3]"), "{}", r.dump());
+
+    // Wrong length keeps the legacy human-readable message, now typed.
+    let r = client
+        .call(&Json::obj(vec![
+            ("net", Json::str("lenet5")),
+            ("image", Json::arr(vec![Json::num(0.0); 10])),
+        ]))
+        .unwrap();
+    assert!(r.get("error").as_str().unwrap().contains("784"), "{}", r.dump());
+    assert_eq!(r.get("code").as_str(), Some(resilience::CODE_BAD_REQUEST), "{}", r.dump());
+
+    // Bad deadline.
+    let r = client.call(&frame_request(2, Some(0))).unwrap();
+    assert_eq!(r.get("code").as_str(), Some(resilience::CODE_BAD_REQUEST), "{}", r.dump());
+
+    // A good request still works on the same connection.
+    let ok = client.call(&frame_request(3, Some(5_000))).unwrap();
+    assert!(ok.get("error").is_null(), "{}", ok.dump());
+    handle.shutdown();
+}
+
+#[test]
+fn faults_wire_command_arms_reports_and_disarms() {
+    let _g = lock();
+    let _d = Disarm;
+    let handle = start(GateConfig::default(), BatcherConfig::default());
+    let mut client = Client::connect(handle.addr).unwrap();
+
+    let r = client
+        .call(&Json::obj(vec![
+            ("cmd", Json::str("faults")),
+            ("plan", Json::str("seed=7:backend.exec=err@1")),
+        ]))
+        .unwrap();
+    assert_eq!(r.get("ok").as_bool(), Some(true), "{}", r.dump());
+    assert_eq!(r.get("armed").as_str(), Some("seed=7:backend.exec=err@1"), "{}", r.dump());
+
+    // Every exec now fails; the worker retries then reports a typed
+    // failure — the request is answered either way.
+    let resp = client.call(&frame_request(1, Some(2_000))).unwrap();
+    assert!(!resp.get("error").is_null(), "exec should fail under err@1: {}", resp.dump());
+
+    let status = client
+        .call(&Json::obj(vec![("cmd", Json::str("faults")), ("plan", Json::str("off"))]))
+        .unwrap();
+    assert_eq!(status.get("armed").as_str(), Some("off"), "{}", status.dump());
+    let counts = status.get("counts").as_arr().unwrap();
+    assert!(
+        counts.iter().any(|c| {
+            c.get("site").as_str() == Some(faults::SITE_BACKEND_EXEC)
+                && c.get("fires").as_usize().unwrap_or(0) >= 1
+        }),
+        "no recorded fires at backend.exec: {}",
+        status.dump()
+    );
+
+    // Malformed plans are rejected typed.
+    let bad = client
+        .call(&Json::obj(vec![
+            ("cmd", Json::str("faults")),
+            ("plan", Json::str("seed=x")),
+        ]))
+        .unwrap();
+    assert_eq!(bad.get("code").as_str(), Some(resilience::CODE_BAD_REQUEST), "{}", bad.dump());
+
+    // Disarmed again: serving works.
+    let ok = client.call(&frame_request(2, None)).unwrap();
+    assert!(ok.get("error").is_null(), "{}", ok.dump());
+    handle.shutdown();
+}
