@@ -5,6 +5,7 @@
 //!
 //! ```bash
 //! cargo run --release --example open_loop [-- --rates 50,100,200,400 --duration 3]
+//! cargo run --release --example open_loop -- --qps 120 --duration 5   # single-rate mode
 //! ```
 
 use std::sync::{Arc, Mutex};
@@ -21,6 +22,7 @@ use cnndroid::util::stats::Samples;
 fn main() -> cnndroid::Result<()> {
     let args = ArgSpec::new("open_loop", "Poisson open-loop latency vs offered load")
         .opt("rates", "50,100,200,400", "offered loads to sweep, req/s")
+        .opt("qps", "", "single offered load, req/s (overrides --rates)")
         .opt("duration", "3", "seconds per rate step")
         .opt("method", "advanced-simd-4", "engine method")
         .parse();
@@ -59,8 +61,14 @@ fn main() -> cnndroid::Result<()> {
     );
 
     let duration: f64 = args.get_f64("duration");
-    for rate_s in args.get("rates").split(',') {
-        let rate: f64 = rate_s.trim().parse().unwrap_or(50.0);
+    // `--qps N` runs one rate instead of the sweep — the single-point
+    // mode CI smokes and A/B comparisons (`:pipe` vs `:nopipe`) use.
+    let rates: Vec<f64> = if args.get("qps").is_empty() {
+        args.get("rates").split(',').map(|s| s.trim().parse().unwrap_or(50.0)).collect()
+    } else {
+        vec![args.get_f64("qps")]
+    };
+    for rate in rates {
         let trace = generate_trace(Arrivals::Poisson, rate, duration, n_items, 42);
         let stats = trace_stats(&trace, duration);
 

@@ -3,17 +3,27 @@
 //! pipelined conv execution against a strictly serial formulation, and
 //! measures the raw pipeline harness overhead.
 //!
+//! Also measures the `:pipe<d>` streaming schedule on an artifact-free
+//! synthetic AlexNet (prep-lane overlap + bounded-queue micro-batches
+//! vs the barrier engine) and writes the batch-throughput/p95
+//! comparison to `BENCH_pipeline.json` — the CI smoke's subject.
+//!
 //! ```bash
 //! cargo bench --bench bench_pipeline
 //! ```
+
+use std::time::Instant;
 
 use cnndroid::coordinator::pipeline::run_pipeline;
 use cnndroid::coordinator::{Engine, EngineConfig};
 use cnndroid::data::synth;
 use cnndroid::model::manifest::{default_dir, Manifest};
 use cnndroid::runtime::Runtime;
+use cnndroid::session::ExecSpec;
 use cnndroid::tensor::layout;
 use cnndroid::util::bench::Bench;
+use cnndroid::util::json::Json;
+use cnndroid::util::stats::Samples;
 
 fn main() {
     let mut b = Bench::new("fig5 pipeline");
@@ -23,6 +33,8 @@ fn main() {
         let (out, _) = run_pipeline(16, |i| i, |_, x| x, |_, y: usize| y);
         assert_eq!(out.len(), 16);
     });
+
+    streamed_alexnet(&b);
 
     let dir = default_dir();
     if !dir.join("manifest.json").exists() {
@@ -100,4 +112,72 @@ fn main() {
             seen += batcher.next_batch().unwrap().len();
         }
     });
+}
+
+/// Pipelined-vs-barrier serving comparison on the synthetic AlexNet:
+/// same weights (seed 42), same batch, specs differing ONLY in the
+/// `:pipe2`/`:nopipe` knob.  Measured by hand instead of through
+/// `Bench::case` because the acceptance metric is QPS at
+/// equal-or-better p95, and `BenchResult` carries no p95.  Results go
+/// to stdout and `BENCH_pipeline.json`.
+fn streamed_alexnet(b: &Bench) {
+    let cfg = b.config().clone();
+    if !cfg.matches("stream/alexnet") {
+        return;
+    }
+    let piped: ExecSpec = "cpu-gemm:pipe2".parse().unwrap();
+    let barrier: ExecSpec = "cpu-gemm:nopipe".parse().unwrap();
+    let pe = Engine::synthetic("alexnet", EngineConfig::for_spec(piped), 42).unwrap();
+    let be = Engine::synthetic("alexnet", EngineConfig::for_spec(barrier), 42).unwrap();
+    let batch = 8usize;
+    let net = pe.network().clone();
+    let x = synth::random_frames(batch, net.in_c, net.in_h, net.in_w, 42);
+    // Warm both engines and pin the bit-identity bar while at it.
+    let warm_p = pe.infer_batch(&x).expect("piped warmup");
+    let warm_b = be.infer_batch(&x).expect("barrier warmup");
+    assert!(warm_p == warm_b, "streamed logits diverged from barrier");
+
+    let measure = |eng: &Engine| -> (f64, f64) {
+        let mut samples = Samples::new();
+        let started = Instant::now();
+        let mut iters = 0;
+        while iters < cfg.min_iters
+            || (iters < cfg.max_iters && started.elapsed() < cfg.target_time)
+        {
+            let t0 = Instant::now();
+            eng.infer_batch(&x).expect("infer");
+            samples.push(t0.elapsed().as_secs_f64());
+            iters += 1;
+        }
+        (batch as f64 / samples.mean(), samples.percentile(95.0) * 1e3)
+    };
+    let (piped_qps, piped_p95) = measure(&pe);
+    let (barrier_qps, barrier_p95) = measure(&be);
+    let speedup = piped_qps / barrier_qps;
+    println!(
+        "  {:<44} {:>8.1} fps   p95 {:>9.3} ms",
+        "stream/alexnet b8 cpu-gemm:pipe2", piped_qps, piped_p95
+    );
+    println!(
+        "  {:<44} {:>8.1} fps   p95 {:>9.3} ms",
+        "stream/alexnet b8 cpu-gemm:nopipe", barrier_qps, barrier_p95
+    );
+    println!("  stream/alexnet pipelined-vs-barrier speedup: {speedup:.2}x");
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("bench_pipeline/stream-alexnet")),
+        ("net", Json::str("alexnet")),
+        ("batch", Json::num(batch as f64)),
+        ("depth", Json::num(2.0)),
+        ("pipelined_qps", Json::num(piped_qps)),
+        ("barrier_qps", Json::num(barrier_qps)),
+        ("speedup", Json::num(speedup)),
+        ("pipelined_p95_ms", Json::num(piped_p95)),
+        ("barrier_p95_ms", Json::num(barrier_p95)),
+    ]);
+    let path = "BENCH_pipeline.json";
+    match std::fs::write(path, doc.dump()) {
+        Ok(()) => println!("  (streamed-alexnet results written to {path})"),
+        Err(e) => eprintln!("  (could not write {path}: {e})"),
+    }
 }

@@ -18,7 +18,7 @@ use std::rc::Rc;
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::coordinator::pipeline::{run_pipeline, PipelineTrace, Proc};
+use crate::coordinator::pipeline::{run_pipeline, run_stages, PipelineTrace, Proc};
 use crate::coordinator::plan::{ExecutionPlan, FusedStage, LayerPlan};
 use crate::kernels::{self, KernelOpts, KernelVariant, PackedModel, TailOp};
 use crate::model::manifest::Manifest;
@@ -356,6 +356,9 @@ impl Engine {
         if let Some(t) = self.cfg.spec.tile() {
             opts.tile = t;
         }
+        // `:pipe<d>` double-buffers im2col/quantization prep against
+        // the GEMM inside the conv kernels (bit-identical either way).
+        opts.pipeline = self.cfg.spec.pipeline().is_some();
         opts
     }
 
@@ -434,6 +437,14 @@ impl Engine {
         .arg("net", Json::str(self.net.name.clone()))
         .arg("frames", Json::num(n as f64))
         .arg("spec", Json::str(self.method.clone()));
+        if let Some(depth) = self.cfg.spec.pipeline() {
+            if n >= 2 && self.stages.len() >= 2 && self.plan.streamable() {
+                let out = self.infer_streamed(x, deadline, depth, n)?;
+                *self.batches.borrow_mut() += 1;
+                *self.frames.borrow_mut() += n;
+                return Ok(out);
+            }
+        }
         let mut act = x.clone();
         for si in 0..self.stages.len() {
             let st = self.stages[si].clone();
@@ -465,6 +476,98 @@ impl Engine {
         *self.batches.borrow_mut() += 1;
         *self.frames.borrow_mut() += n;
         Ok(act)
+    }
+
+    /// The `:pipe<d>` inter-stage schedule: split the batch into
+    /// micro-batches and stream them through the fused-stage chain on
+    /// [`run_stages`]' bounded-queue wavefront instead of
+    /// barrier-stepping the whole batch stage by stage.  Stage bodies
+    /// still run on this (engine) thread — the runtime is not `Send` —
+    /// so the cross-thread overlap lives inside the conv kernels' prep
+    /// lane; what streaming adds is bounded live activations (at most
+    /// `depth` micro-batches per queue hop), deadline and
+    /// fault-injection probes at every hop rather than every stage,
+    /// and per-hop `pipeline` spans with queue-occupancy gauges.
+    ///
+    /// Bit-identical to the barrier path: the caller gates on
+    /// [`ExecutionPlan::streamable`] (every layer frame-independent),
+    /// and each micro-batch visits the same stages in the same order.
+    fn infer_streamed(
+        &self,
+        x: &Tensor,
+        deadline: Option<Instant>,
+        depth: usize,
+        n: usize,
+    ) -> Result<Tensor> {
+        let n_stages = self.stages.len();
+        let stage_names: Vec<String> =
+            self.stages.iter().map(|st| self.plan.stage_name(st)).collect();
+        // Micro-batch size: split the batch `depth` ways so the queues
+        // actually stream, but never below 2 frames — the intra-stage
+        // prep lane needs a successor frame to double-buffer.
+        let micro = ((n + depth - 1) / depth).max(2);
+        let fe = self.net.in_c * self.net.in_h * self.net.in_w;
+        let mut inputs: Vec<(usize, Tensor)> = Vec::new();
+        let mut f0 = 0;
+        while f0 < n {
+            let m = micro.min(n - f0);
+            inputs.push((
+                inputs.len(),
+                Tensor::new(
+                    vec![m, self.net.in_c, self.net.in_h, self.net.in_w],
+                    x.data()[f0 * fe..(f0 + m) * fe].to_vec(),
+                ),
+            ));
+            f0 += m;
+        }
+        // Last queue occupancy per stage, fed from the hop probe into
+        // the stage span's `q` arg (single-threaded, so `Cell` does).
+        let qgauge: Vec<std::cell::Cell<usize>> =
+            (0..n_stages).map(|_| std::cell::Cell::new(0)).collect();
+        let mut stage_secs = vec![0.0f64; n_stages];
+        let outs = run_stages(
+            inputs,
+            n_stages,
+            depth,
+            |s, (mi, act)| -> Result<(usize, Tensor)> {
+                crate::faults::check(crate::faults::SITE_BACKEND_EXEC)?;
+                let _span = obs::span_with(TraceLevel::Stage, "pipeline", || {
+                    format!("{} mb{mi}", stage_names[s])
+                })
+                .arg("q", Json::num(qgauge[s].get() as f64))
+                .arg("mb", Json::num(mi as f64));
+                let t0 = Instant::now();
+                let out = self.run_stage(&self.stages[s], act)?;
+                stage_secs[s] += t0.elapsed().as_secs_f64();
+                Ok((mi, out))
+            },
+            |s, queued| {
+                qgauge[s].set(queued);
+                // Every queue hop honors the stall fault site and the
+                // request deadline, so a stalled queue surfaces as a
+                // typed per-stage expiry instead of a hang.
+                crate::faults::check(crate::faults::SITE_QUEUE_STALL)?;
+                if let Some(dl) = deadline {
+                    let now = Instant::now();
+                    if now >= dl {
+                        return Err(anyhow::Error::new(
+                            crate::coordinator::resilience::DeadlineExpired {
+                                net: self.net.name.clone(),
+                                stage: stage_names[s].clone(),
+                                over_ms: (now - dl).as_millis() as u64,
+                            },
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        )?;
+        for (si, name) in stage_names.iter().enumerate() {
+            self.record_time(name, stage_secs[si]);
+            self.last_stage_times.borrow_mut().push((name.clone(), stage_secs[si]));
+        }
+        let frames: Vec<Tensor> = outs.into_iter().map(|(_, t)| t).collect();
+        Ok(Tensor::stack(&frames))
     }
 
     /// Classify a batch: (label, max-logit) per frame (shared

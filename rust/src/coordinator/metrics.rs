@@ -41,6 +41,11 @@ struct NetStats {
     hist: LatencyHistogram,
     /// Engine-reported per-stage wall times (secs), keyed by stage name.
     stages: BTreeMap<String, Samples>,
+    /// Deepest queue this net's batcher ever reported.  The global
+    /// [`Metrics::queue_depth`] gauge is point-in-time only — it reads
+    /// 0 the moment a drain finishes — so burst pressure is invisible
+    /// there; the high-water mark is what capacity planning reads.
+    queue_high_water: usize,
 }
 
 /// Process-wide serving metrics (thread-safe).
@@ -134,6 +139,20 @@ impl Metrics {
         self.queue_depth.load(Ordering::Relaxed)
     }
 
+    /// Observe one net's queue depth: updates the global point-in-time
+    /// gauge and ratchets that net's high-water mark (never decreases).
+    pub fn observe_queue_depth(&self, net: &str, depth: usize) {
+        self.set_queue_depth(depth);
+        let mut g = self.nets.lock().unwrap();
+        let st = g.entry(net.to_string()).or_default();
+        st.queue_high_water = st.queue_high_water.max(depth);
+    }
+
+    /// The deepest queue ever observed for `net` (0 if never observed).
+    pub fn queue_high_water(&self, net: &str) -> usize {
+        self.nets.lock().unwrap().get(net).map(|s| s.queue_high_water).unwrap_or(0)
+    }
+
     pub fn total_requests(&self) -> u64 {
         self.nets.lock().unwrap().values().map(|s| s.requests).sum()
     }
@@ -204,6 +223,7 @@ impl Metrics {
                             ("retries", Json::num(st.resilience.retries as f64)),
                         ]),
                     ),
+                    ("queue_high_water", Json::num(st.queue_high_water as f64)),
                     ("stages", stages),
                 ]),
             ));
@@ -281,6 +301,25 @@ mod tests {
         assert_eq!(stage.get("n").as_usize(), Some(100));
         assert!(stage.get("p95_ms").as_f64().unwrap() > 90.0);
         assert_eq!(s.get("queue_depth").as_usize(), Some(7));
+    }
+
+    #[test]
+    fn queue_high_water_ratchets_per_net() {
+        let m = Metrics::new();
+        m.observe_queue_depth("lenet5", 3);
+        m.observe_queue_depth("lenet5", 9);
+        // Draining back to empty updates the gauge but not the mark.
+        m.observe_queue_depth("lenet5", 0);
+        m.observe_queue_depth("alexnet", 2);
+        assert_eq!(m.queue_depth(), 2, "gauge is point-in-time");
+        assert_eq!(m.queue_high_water("lenet5"), 9);
+        assert_eq!(m.queue_high_water("alexnet"), 2);
+        assert_eq!(m.queue_high_water("nope"), 0);
+        let s = m.snapshot();
+        assert_eq!(
+            s.get("nets").get("lenet5").get("queue_high_water").as_usize(),
+            Some(9)
+        );
     }
 
     #[test]

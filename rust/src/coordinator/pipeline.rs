@@ -14,6 +14,16 @@
 //! accelerator closure runs on the caller's thread because the PJRT
 //! client is not `Send` (see `runtime`).  Every stage is recorded into
 //! a [`PipelineTrace`] for the timeline example and overlap metrics.
+//!
+//! [`run_stages`] generalizes the idea to the engine's N-stage fused
+//! plans (the `:pipe<d>` knob): items — micro-batches of frames —
+//! stream through the stage graph on a bounded-queue wavefront instead
+//! of barrier-stepping the whole batch layer by layer.  Stage bodies
+//! run on the caller's thread (the engine's runtime is thread-bound,
+//! so cross-thread overlap lives *inside* the kernels — the im2col
+//! prep lane); what streaming buys is bounded live activations (at
+//! most `depth` micro-batches per queue hop), per-hop
+//! deadline/fault-injection probes, and per-hop observability.
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -245,10 +255,134 @@ where
     (out.into_iter().map(|z| z.unwrap()).collect(), rec.finish())
 }
 
+/// Stream `inputs` (micro-batches, in order) through an `stages`-deep
+/// stage chain with bounded queues of `depth` items between stages.
+///
+/// Single-threaded wavefront schedule: each pass walks the stages
+/// deepest-first and runs every stage that has input queued and
+/// downstream room, so item *i+1* enters stage *s* while item *i* is
+/// already in stage *s+1* — the skewed schedule of a software
+/// pipeline.  FIFO queues keep items in order end to end, and because
+/// each item visits every stage exactly once in the same order as the
+/// barrier schedule, outputs are bit-identical to it.
+///
+/// `run(s, item)` executes stage `s`.  `hop(s, queued)` fires at every
+/// dequeue — immediately before an item enters stage `s`, with that
+/// input queue's occupancy — and is where the caller probes deadlines
+/// and the `queue.stall` fault site and feeds queue-depth gauges.  The
+/// first error from either aborts the stream, dropping the items still
+/// in flight (the deadline contract: never compute a result nobody
+/// will read).
+pub fn run_stages<T, E>(
+    inputs: Vec<T>,
+    stages: usize,
+    depth: usize,
+    mut run: impl FnMut(usize, T) -> Result<T, E>,
+    mut hop: impl FnMut(usize, usize) -> Result<(), E>,
+) -> Result<Vec<T>, E> {
+    let depth = depth.max(1);
+    if stages == 0 {
+        return Ok(inputs);
+    }
+    let n = inputs.len();
+    let mut queues: Vec<std::collections::VecDeque<T>> =
+        (0..=stages).map(|_| std::collections::VecDeque::new()).collect();
+    queues[0].extend(inputs);
+    while queues[stages].len() < n {
+        let mut progressed = false;
+        for s in (0..stages).rev() {
+            if queues[s].is_empty() {
+                continue;
+            }
+            // Bounded hop: never run ahead of a full downstream queue
+            // (the output queue is the result collection, unbounded).
+            if s + 1 < stages && queues[s + 1].len() >= depth {
+                continue;
+            }
+            hop(s, queues[s].len())?;
+            let x = queues[s].pop_front().expect("checked non-empty");
+            let y = run(s, x)?;
+            queues[s + 1].push_back(y);
+            progressed = true;
+        }
+        // Every pass moves the deepest runnable item, so the loop
+        // always terminates; the guard is pure defense.
+        assert!(progressed, "stream scheduler stalled");
+    }
+    Ok(queues.pop().expect("output queue").into_iter().collect())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use std::time::Duration;
+
+    #[test]
+    fn run_stages_preserves_order_and_matches_barrier() {
+        // 3 stages of arithmetic over 7 items: streamed == barrier.
+        let items: Vec<i64> = (0..7).collect();
+        let barrier: Vec<i64> = items.iter().map(|x| ((x + 1) * 3) - 2).collect();
+        for depth in [1, 2, 5] {
+            let got = run_stages(
+                items.clone(),
+                3,
+                depth,
+                |s, x| -> Result<i64, ()> {
+                    Ok(match s {
+                        0 => x + 1,
+                        1 => x * 3,
+                        _ => x - 2,
+                    })
+                },
+                |_, _| Ok(()),
+            )
+            .unwrap();
+            assert_eq!(got, barrier, "depth {depth}");
+        }
+    }
+
+    #[test]
+    fn run_stages_honors_the_queue_bound_and_reports_occupancy() {
+        // With depth d, stage 0 can run at most d items ahead of stage
+        // 1's consumption, so no input queue past the first ever holds
+        // more than d items.
+        for depth in [1usize, 2, 3] {
+            let mut max_seen = 0usize;
+            run_stages(
+                (0..16).collect::<Vec<i32>>(),
+                4,
+                depth,
+                |_, x| -> Result<i32, ()> { Ok(x) },
+                |s, queued| {
+                    if s > 0 {
+                        max_seen = max_seen.max(queued);
+                    }
+                    Ok(())
+                },
+            )
+            .unwrap();
+            assert!(max_seen <= depth, "depth {depth}: saw queue of {max_seen}");
+        }
+    }
+
+    #[test]
+    fn run_stages_aborts_on_first_hop_error() {
+        let mut ran = 0usize;
+        let err = run_stages(
+            (0..8).collect::<Vec<i32>>(),
+            2,
+            2,
+            |_, x| {
+                ran += 1;
+                Ok(x)
+            },
+            |s, _| if s == 1 { Err("expired") } else { Ok(()) },
+        )
+        .unwrap_err();
+        assert_eq!(err, "expired");
+        // Stage 0 ran once; the first hop into stage 1 aborted.
+        assert_eq!(ran, 1);
+    }
 
     #[test]
     fn pipeline_preserves_order_and_values() {

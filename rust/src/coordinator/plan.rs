@@ -116,6 +116,19 @@ impl LayerPlan {
     pub fn on_q8(&self) -> bool {
         matches!(self, LayerPlan::ConvCpuQ8 { .. } | LayerPlan::FcCpuQ8 { .. })
     }
+
+    /// True when the layer maps each input frame to its output without
+    /// looking at the rest of the batch — the precondition for
+    /// micro-batch streaming (`:pipe<d>`) to stay bit-identical to the
+    /// barrier schedule.  Two layers fail it: the accelerator layers
+    /// (batch-sized artifacts with their own Fig. 5 schedule) and the
+    /// q8 FC, whose dynamic activation scale is a whole-batch min/max
+    /// (splitting the batch would change the scale, hence the bits).
+    /// Conv q8 qualifies: its quantization is per-frame
+    /// ([`crate::kernels::im2col_q8_frame`]).
+    pub fn frame_independent(&self) -> bool {
+        !self.on_accel() && !matches!(self, LayerPlan::FcCpuQ8 { .. })
+    }
 }
 
 /// One stage of the fused-stage IR: a contiguous run `[start, end)` of
@@ -334,6 +347,13 @@ impl ExecutionPlan {
     /// Metrics/report label of a stage: member layer names joined with
     /// `+` (a single-layer stage keeps its layer name, so layerwise
     /// metrics are unchanged for unfused plans).
+    /// Can the engine stream micro-batches through this plan's stages
+    /// (`:pipe<d>`) without changing output bits?  True iff every
+    /// layer is [`LayerPlan::frame_independent`].
+    pub fn streamable(&self) -> bool {
+        self.layers.iter().all(|l| l.frame_independent())
+    }
+
     pub fn stage_name(&self, st: &FusedStage) -> String {
         self.layers[st.start..st.end]
             .iter()

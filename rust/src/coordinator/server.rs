@@ -23,7 +23,8 @@
 //!   <- {"id": 7, "error": "...", "code": "expired" | "overloaded"
 //!                                      | "bad_request"}
 //!   -> {"cmd": "ping"}            <- {"ok": true, "nets": [...],
-//!                                     "rejected_full": {net: count}}
+//!                                     "rejected_full": {net: count},
+//!                                     "queue_high_water": {net: depth}}
 //!   -> {"cmd": "metrics"}         <- {<metrics snapshot>}
 //!   -> {"cmd": "trace"}           <- {<Chrome trace-event JSON, drains spans>}
 //!   -> {"cmd": "faults", "plan": "seed=1:backend.exec=err@0.5"}
@@ -336,6 +337,9 @@ fn build_engine_with_fallback(
         if let Some(t) = spec.tile() {
             alt = alt.with_tile(t).expect("tile validated");
         }
+        if let Some(d) = spec.pipeline() {
+            alt = alt.with_pipeline(d).expect("pipeline validated");
+        }
         if let Some(ms) = spec.deadline_ms() {
             alt = alt.with_deadline_ms(ms).expect("deadline validated");
         }
@@ -423,8 +427,11 @@ fn engine_worker(
     });
     while let Some(batch) = batcher.next_batch() {
         let n = batch.len();
-        let depth = batcher.depth();
-        metrics.set_queue_depth(depth);
+        // The batch just drained counts toward pressure: the gauge is
+        // point-in-time, but the per-net high-water mark must see the
+        // burst that was queued, not the emptiness it left behind.
+        metrics.observe_queue_depth(net, batcher.depth() + n);
+        metrics.set_queue_depth(batcher.depth());
         if obs::enabled(TraceLevel::Stage) {
             // Queue-wait spans: enqueue (connection thread) → dequeue
             // (here).  Recorded manually because the interval straddles
@@ -707,6 +714,10 @@ fn dispatch(
                     (nm.as_str(), Json::num(counts.rejected_full as f64))
                 })
                 .collect();
+            let high_water: Vec<(&str, Json)> = nets
+                .iter()
+                .map(|nm| (nm.as_str(), Json::num(metrics.queue_high_water(nm) as f64)))
+                .collect();
             return Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("nets", Json::arr(nets.iter().map(|n| Json::str(n.clone())).collect())),
@@ -715,6 +726,7 @@ fn dispatch(
                     Json::arr(methods.iter().map(|m| Json::str(m.clone())).collect()),
                 ),
                 ("rejected_full", Json::obj(rejected)),
+                ("queue_high_water", Json::obj(high_water)),
             ]);
         }
         Some("metrics") => return metrics.snapshot(),

@@ -107,7 +107,8 @@ pub fn plan_or_fallback(
         }
     };
     if spec.is_auto() {
-        match plan_auto_with(manifest, net, &dev, q8, wino, spec.batch()) {
+        match plan_auto_with(manifest, net, &dev, q8, wino, spec.batch(), spec.pipeline().is_some())
+        {
             Ok(plan) => return Ok(FallbackOutcome { plan, notes }),
             Err(e) => notes.push(format!("auto-partition failed: {e:#}")),
         }
@@ -116,7 +117,15 @@ pub fn plan_or_fallback(
             Ok(plan) => return Ok(FallbackOutcome { plan, notes }),
             Err(e) if e.downcast_ref::<MissingArtifact>().is_some() => {
                 notes.push(format!("{e}"));
-                match plan_auto_with(manifest, net, &dev, false, false, spec.batch()) {
+                match plan_auto_with(
+                    manifest,
+                    net,
+                    &dev,
+                    false,
+                    false,
+                    spec.batch(),
+                    spec.pipeline().is_some(),
+                ) {
                     Ok(plan) => {
                         notes.push("re-planned with delegate:auto over available backends".into());
                         return Ok(FallbackOutcome { plan, notes });

@@ -205,7 +205,7 @@ pub fn winograd_eligible(net: &Network, params: &Params) -> bool {
 /// One-call entry point: detect backends from the manifest and emit the
 /// cost-optimal plan for `net` on `dev` (f32 backends only, batch 1).
 pub fn plan_auto(manifest: &Manifest, net: &Network, dev: &DeviceSpec) -> Result<ExecutionPlan> {
-    plan_auto_with(manifest, net, dev, false, false, 1)
+    plan_auto_with(manifest, net, dev, false, false, 1, false)
 }
 
 /// [`plan_auto`] with explicit opt-in backends and batch: when `q8` is
@@ -216,7 +216,9 @@ pub fn plan_auto(manifest: &Manifest, net: &Network, dev: &DeviceSpec) -> Result
 /// [`winograd_eligible`]); `batch` is the frames-per-dispatch the plan
 /// must serve, enforced against every backend's `Capability::max_batch`
 /// by the partitioner — the field [`crate::session::ExecSpec::batch`]
-/// drives end to end.
+/// drives end to end.  `pipeline` marks a streaming spec (`:pipe<d>`):
+/// the DP then credits im2col conv placements with the prep-lane
+/// overlap ([`crate::simulator::cost::pipeline_saving`]).
 pub fn plan_auto_with(
     manifest: &Manifest,
     net: &Network,
@@ -224,6 +226,7 @@ pub fn plan_auto_with(
     q8: bool,
     wino: bool,
     batch: usize,
+    pipeline: bool,
 ) -> Result<ExecutionPlan> {
     let mut registry = Registry::detect(manifest);
     if q8 {
@@ -232,7 +235,11 @@ pub fn plan_auto_with(
     if wino {
         registry = registry.with_winograd();
     }
-    Ok(Partitioner::new(&registry, dev).with_batch(batch).partition(net)?.plan)
+    Ok(Partitioner::new(&registry, dev)
+        .with_batch(batch)
+        .with_pipeline(pipeline)
+        .partition(net)?
+        .plan)
 }
 
 #[cfg(test)]

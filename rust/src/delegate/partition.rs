@@ -27,8 +27,22 @@
 //! far below accel-vs-CPU layer gaps (ms), so it refines placements —
 //! the partitioner stops splitting fusable chains when per-layer costs
 //! tie — without rewriting them.
+//!
+//! **Pipeline costing:** when the serving spec streams batches
+//! (`:pipe<d>`, [`Partitioner::with_pipeline`]) and the batch has ≥ 2
+//! frames, im2col-lowered conv placements on the CPU side additionally
+//! earn the intra-stage overlap credit ([`cost::pipeline_saving`]):
+//! the prep lane materializes frame *i+1*'s patch matrix under frame
+//! *i*'s band GEMMs, hiding `min(t_prep, t_gemm)` per frame.  The
+//! credit is node-local (it depends only on the layer and its own
+//! backend, not the neighbour), so the DP stays exact, and it is
+//! mirrored in [`Partitioner::cost_of`] like the fusion credit.
+//! Winograd conv placements earn nothing — the transform-domain head
+//! has no patch-matrix prep phase to overlap — and neither do
+//! accelerator placements, whose artifacts serialize frames anyway.
 
 use crate::coordinator::plan::{ExecutionPlan, LayerPlan};
+use crate::kernels::KernelVariant;
 use crate::model::network::{Layer, Network};
 use crate::simulator::cost;
 use crate::simulator::device::DeviceSpec;
@@ -52,6 +66,11 @@ pub struct Assignment {
     /// predicted seconds saved by keeping this boundary inside a fused
     /// stage; 0 when the edge does not fuse.
     pub fuse_s: f64,
+    /// Pipeline overlap credit granted on this layer — the predicted
+    /// per-frame seconds the prep lane hides under the band GEMMs when
+    /// the batch streams; 0 unless the partitioner plans for a
+    /// pipelined spec and the placement is an im2col CPU conv.
+    pub pipe_s: f64,
 }
 
 /// The partitioner's full output.
@@ -115,17 +134,32 @@ pub struct Partitioner<'a> {
     /// below the batch is excluded from the solve instead of silently
     /// accepted (it used to be advisory metadata).
     batch: usize,
+    /// Plan for a pipelined serving spec (`:pipe<d>`): grant the
+    /// intra-stage overlap credit ([`cost::pipeline_saving`]) on
+    /// im2col-lowered CPU conv placements.  Off by default so plans
+    /// built for barrier specs are bit-identical to pre-pipeline ones.
+    pipeline: bool,
 }
 
 impl<'a> Partitioner<'a> {
     pub fn new(registry: &'a Registry, dev: &'a DeviceSpec) -> Partitioner<'a> {
-        Partitioner { registry, dev, batch: 1 }
+        Partitioner { registry, dev, batch: 1, pipeline: false }
     }
 
     /// Same partitioner, planning for `batch` frames per dispatch
     /// (builder-style; 1 is the default serving configuration).
     pub fn with_batch(mut self, batch: usize) -> Partitioner<'a> {
         self.batch = batch.max(1);
+        self
+    }
+
+    /// Same partitioner, planning for a pipelined serving spec
+    /// (builder-style): conv placements that stream through the prep
+    /// lane earn [`cost::pipeline_saving`].  Only meaningful together
+    /// with [`Partitioner::with_batch`] ≥ 2 — a single frame has
+    /// nothing to overlap, so the credit stays 0 below that.
+    pub fn with_pipeline(mut self, on: bool) -> Partitioner<'a> {
+        self.pipeline = on;
         self
     }
 
@@ -158,6 +192,32 @@ impl<'a> Partitioner<'a> {
         cost::fusion_saving(self.dev, boundary)
     }
 
+    /// Pipeline overlap credit for placing layer `li` on `b`:
+    /// [`cost::pipeline_saving`] when this partitioner plans for a
+    /// pipelined spec at batch ≥ 2 and the placement is an
+    /// im2col-lowered CPU conv (the only placements the engine routes
+    /// through the prep lane), else 0.  Node-local by construction, so
+    /// the DP's edge relaxation stays exact.
+    fn pipeline_credit(&self, net: &Network, li: usize, b: &dyn Backend) -> f64 {
+        if !self.pipeline || self.batch < 2 || net.layers[li].kind() != "conv" {
+            return 0.0;
+        }
+        let cap = b.capability();
+        if !cpu_side(b) || !cap.fused_epilogue || cap.kernel != KernelVariant::Im2col {
+            return 0.0;
+        }
+        let name = net.layers[li].name();
+        let Some((_, spec)) = net.conv_specs().into_iter().find(|(n, _)| n.as_str() == name)
+        else {
+            return 0.0;
+        };
+        // Same thread-count convention as the backends' own predict():
+        // the device profile's big-core count, not the host pool.
+        let threads = self.dev.cpu_big_cores.max(1) as usize;
+        let q8 = b.name() == crate::CPU_GEMM_Q8;
+        cost::pipeline_saving(self.dev, &spec, threads, q8)
+    }
+
     /// Assign every layer of `net` and emit an executable plan.
     pub fn partition(&self, net: &Network) -> Result<PartitionReport> {
         let choice = self.solve(net)?;
@@ -182,7 +242,7 @@ impl<'a> Partitioner<'a> {
             if let Some(pi) = prev_bi {
                 link -= self.fusion_credit(net, boundary, li, backends[pi].as_ref(), b.as_ref());
             }
-            total += link + b.predict(self.dev, net, li);
+            total += link + b.predict(self.dev, net, li) - self.pipeline_credit(net, li, b.as_ref());
             prev_layout = layout;
             prev_bi = Some(bi);
         }
@@ -263,7 +323,9 @@ impl<'a> Partitioner<'a> {
                 if !b.supports(net, li) || !self.admits_batch(b.as_ref()) {
                     continue;
                 }
-                let exec = b.predict(self.dev, net, li);
+                // Node-local terms: execution minus the pipeline
+                // overlap credit (0 for barrier specs).
+                let exec = b.predict(self.dev, net, li) - self.pipeline_credit(net, li, b.as_ref());
                 let layout = b.capability().layout;
                 if li == 0 {
                     // Inputs arrive in canonical NCHW.
@@ -344,6 +406,7 @@ impl<'a> Partitioner<'a> {
                 cost_s: b.predict(self.dev, net, li),
                 swap_s: transition_cost(self.dev, prev_layout, layout, boundary),
                 fuse_s,
+                pipe_s: self.pipeline_credit(net, li, b.as_ref()),
             });
             prev_layout = layout;
             prev_bi = Some(bi);
@@ -535,6 +598,89 @@ mod tests {
                 "{}: {stage_names:?}",
                 dev.name
             );
+        }
+    }
+
+    #[test]
+    fn pipeline_credit_lands_on_im2col_cpu_convs_only() {
+        // With a pipelined spec at batch 4, every cpu-gemm conv
+        // placement earns a positive overlap credit, nothing else does,
+        // and the report total drops by exactly the credited sum.
+        for dev in all_devices() {
+            let reg = Registry::simulated();
+            let net = zoo::lenet5();
+            let base = Partitioner::new(&reg, &dev).with_batch(4).partition(&net).unwrap();
+            let piped = Partitioner::new(&reg, &dev)
+                .with_batch(4)
+                .with_pipeline(true)
+                .partition(&net)
+                .unwrap();
+            assert_eq!(base.choice, piped.choice, "{}: credit rewrote the placement", dev.name);
+            let mut credited = 0.0;
+            for a in &piped.assignments {
+                if a.kind == "conv" && a.backend == "cpu-gemm" {
+                    assert!(a.pipe_s > 0.0, "{}/{}: conv uncredited", dev.name, a.layer);
+                } else {
+                    assert_eq!(a.pipe_s, 0.0, "{}/{}: non-conv credited", dev.name, a.layer);
+                }
+                credited += a.pipe_s;
+            }
+            assert!(credited > 0.0, "{}: no credit granted anywhere", dev.name);
+            assert!(
+                (base.predicted_s - piped.predicted_s - credited).abs() < 1e-12,
+                "{}: total must drop by the credited sum",
+                dev.name
+            );
+        }
+    }
+
+    #[test]
+    fn pipeline_credit_needs_a_streamable_batch() {
+        // Batch 1 has nothing to overlap; the flag alone changes
+        // nothing, bit for bit.
+        for dev in all_devices() {
+            let reg = Registry::simulated();
+            for net in zoo::all() {
+                let base = Partitioner::new(&reg, &dev).partition(&net).unwrap();
+                let piped =
+                    Partitioner::new(&reg, &dev).with_pipeline(true).partition(&net).unwrap();
+                assert_eq!(base.choice, piped.choice, "{}/{}", dev.name, net.name);
+                assert_eq!(base.predicted_s.to_bits(), piped.predicted_s.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn pipeline_costing_keeps_the_solver_exact() {
+        // Two invariants under the new credit: the solver's optimum
+        // never costs more than the barrier plan for the same batch
+        // (the credit only subtracts from admissible placements), and
+        // predicted_s stays bit-identical to explicit re-accounting
+        // through cost_of — the same share-the-credit discipline the
+        // fusion term upholds.
+        for dev in all_devices() {
+            for net in zoo::all() {
+                let reg = Registry::simulated();
+                let barrier = Partitioner::new(&reg, &dev).with_batch(8);
+                let piped = Partitioner::new(&reg, &dev).with_batch(8).with_pipeline(true);
+                let b = barrier.partition(&net).unwrap();
+                let p = piped.partition(&net).unwrap();
+                assert!(
+                    p.predicted_s <= b.predicted_s * (1.0 + 1e-9) + 1e-15,
+                    "{}/{}: piped {:.6}s > barrier {:.6}s",
+                    dev.name,
+                    net.name,
+                    p.predicted_s,
+                    b.predicted_s
+                );
+                let recomputed = piped.cost_of(&net, &p.choice);
+                assert_eq!(p.predicted_s.to_bits(), recomputed.to_bits(), "{}", dev.name);
+                // The credited optimum also still undercuts the one
+                // fixed plan that is always admissible at any batch.
+                if let Some(seq) = piped.predicted_fixed(&net, "cpu-seq") {
+                    assert!(p.predicted_s <= seq, "{}/{}", dev.name, net.name);
+                }
+            }
         }
     }
 

@@ -13,15 +13,18 @@
 //! (`tests/prop_kernels.rs`) pins them together over randomized
 //! geometries including `pad >= kernel` and 1x1 convolutions.
 
+use std::sync::mpsc;
 use std::sync::Arc;
 
 use crate::model::network::ConvSpec;
+use crate::obs::{self, TraceLevel};
 use crate::tensor::{MatView, Tensor};
 use crate::util::threadpool;
 
 use super::gemm::{gemm_into, gemm_q8_into, BiasMode};
 use super::im2col::{im2col_frame, im2col_q8_frame, patch_cols, patch_rows};
 use super::pack::{PackedConv, PackedConvQ8};
+use super::quant::ActQuant;
 use super::KernelOpts;
 
 /// One `(frame, output channel)` plane of the direct loop nest.
@@ -157,6 +160,28 @@ pub fn conv_im2col(x: &Tensor, packed: &PackedConv, opts: KernelOpts) -> Tensor 
     let frame_len = spec.in_c * spec.in_h * spec.in_w;
     let out_frame = spec.nk * cols;
     let mut out = Tensor::zeros(vec![n, spec.nk, oh, ow]);
+    if opts.pipeline && n >= 2 {
+        let od = out.data_mut();
+        prep_pipeline(
+            n,
+            rows * cols,
+            |ni, patches: &mut Vec<f32>| {
+                im2col_frame(&x.data()[ni * frame_len..(ni + 1) * frame_len], spec, patches);
+            },
+            |ni, patches, ()| {
+                let lo = ni * out_frame;
+                gemm_into(
+                    packed.wmat.view2d(),
+                    MatView::dense(patches, rows, cols),
+                    BiasMode::PerRow(packed.bias.data()),
+                    spec.relu,
+                    opts,
+                    &mut od[lo..lo + out_frame],
+                );
+            },
+        );
+        return out;
+    }
     // One scratch patch matrix, reused across frames (im2col writes
     // every element, so no clearing between frames).
     let mut patches = vec![0.0f32; rows * cols];
@@ -173,6 +198,62 @@ pub fn conv_im2col(x: &Tensor, packed: &PackedConv, opts: KernelOpts) -> Tensor 
         );
     }
     out
+}
+
+/// The intra-stage double-buffering engine behind the `:pipe<d>` knob:
+/// frame `i + 1`'s prep (im2col / patch quantization) runs on one
+/// dedicated scoped thread while frame `i`'s GEMM runs on the caller.
+///
+/// Two buffers of `buf_len` default elements ping-pong between the
+/// lanes over a pair of channels: the caller seeds requests for frames
+/// 0 and 1, then for each frame receives the filled buffer (the single
+/// prep thread processes requests FIFO, so frames arrive in order),
+/// runs `consume` on it, and recycles the buffer as the request for
+/// frame `i + 2`.  `prep` returns a tag (e.g. [`ActQuant`]) that rides
+/// along with the buffer.
+///
+/// Bit-identity is structural: the same prep routine writes the same
+/// buffer contents and the same consume routine reads them in the same
+/// frame order — only *when* the prep happens moves.  The prep lane is
+/// a plain scoped thread, never a pool worker, so a busy (or size-1)
+/// pool can't deadlock against it; panics propagate at scope exit.
+pub(crate) fn prep_pipeline<B, T>(
+    n: usize,
+    buf_len: usize,
+    prep: impl Fn(usize, &mut Vec<B>) -> T + Sync,
+    mut consume: impl FnMut(usize, &[B], T),
+) where
+    B: Default + Clone + Send,
+    T: Send,
+{
+    std::thread::scope(|s| {
+        let (req_tx, req_rx) = mpsc::channel::<(usize, Vec<B>)>();
+        let (done_tx, done_rx) = mpsc::channel::<(usize, Vec<B>, T)>();
+        let prep = &prep;
+        s.spawn(move || {
+            for (ni, mut buf) in req_rx {
+                let _p_span = obs::span_with(TraceLevel::Kernel, "pipeline", || {
+                    format!("prep f{ni}")
+                });
+                let tag = prep(ni, &mut buf);
+                if done_tx.send((ni, buf, tag)).is_err() {
+                    break;
+                }
+            }
+        });
+        for ni in 0..n.min(2) {
+            req_tx.send((ni, vec![B::default(); buf_len])).unwrap();
+        }
+        for ni in 0..n {
+            let (got, buf, tag) = done_rx.recv().expect("prep lane died");
+            debug_assert_eq!(got, ni, "prep lane must deliver frames in order");
+            consume(ni, &buf, tag);
+            if ni + 2 < n {
+                req_tx.send((ni + 2, buf)).unwrap();
+            }
+        }
+        drop(req_tx);
+    });
 }
 
 /// Quantized im2col+GEMM convolution over a pre-quantized weight
@@ -193,6 +274,30 @@ pub fn conv_im2col_q8(x: &Tensor, packed: &PackedConvQ8, opts: KernelOpts) -> Te
     let frame_len = spec.in_c * spec.in_h * spec.in_w;
     let out_frame = spec.nk * cols;
     let mut out = Tensor::zeros(vec![n, spec.nk, oh, ow]);
+    if opts.pipeline && n >= 2 {
+        let od = out.data_mut();
+        prep_pipeline(
+            n,
+            rows * cols,
+            |ni, qpatches: &mut Vec<u8>| -> ActQuant {
+                im2col_q8_frame(&x.data()[ni * frame_len..(ni + 1) * frame_len], spec, qpatches)
+            },
+            |ni, qpatches, act| {
+                let lo = ni * out_frame;
+                gemm_q8_into(
+                    &packed.wq,
+                    qpatches,
+                    cols,
+                    act,
+                    packed.bias.data(),
+                    spec.relu,
+                    opts,
+                    &mut od[lo..lo + out_frame],
+                );
+            },
+        );
+        return out;
+    }
     // u8 patch scratch, reused across frames — the quantizer writes
     // every element, so no clearing.
     let mut qpatches = vec![0u8; rows * cols];
@@ -294,6 +399,28 @@ mod tests {
         // Integer accumulation: tiled == sequential bit-for-bit.
         let tiled = conv_im2col_q8(&x, &packed, KernelOpts::tiled());
         assert_eq!(q8, tiled);
+    }
+
+    #[test]
+    fn pipelined_prep_is_bit_identical_for_f32_and_q8() {
+        let spec = ConvSpec {
+            in_c: 3, in_h: 12, in_w: 12, nk: 7, kh: 3, kw: 3, stride: 1, pad: 1, relu: true,
+        };
+        for batch in [1usize, 2, 3, 5] {
+            let x = random(vec![batch, 3, 12, 12], 70 + batch as u64);
+            let w = random(vec![7, 3, 3, 3], 71);
+            let b = random(vec![7], 72);
+            let packed = PackedConv::pack(&spec, &w, &b);
+            let packed_q8 = PackedConvQ8::pack(&spec, &w, &b);
+            for base in [KernelOpts::seq(), KernelOpts::tiled()] {
+                let barrier = conv_im2col(&x, &packed, base);
+                let piped = conv_im2col(&x, &packed, base.pipelined(true));
+                assert_eq!(barrier, piped, "f32 pipeline must be invisible (batch {batch})");
+                let barrier_q8 = conv_im2col_q8(&x, &packed_q8, base);
+                let piped_q8 = conv_im2col_q8(&x, &packed_q8, base.pipelined(true));
+                assert_eq!(barrier_q8, piped_q8, "q8 pipeline must be invisible (batch {batch})");
+            }
+        }
     }
 
     #[test]

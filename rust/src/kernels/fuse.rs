@@ -455,28 +455,34 @@ pub fn conv_stage(x: &Tensor, src: ConvSource<'_>, ops: &[TailOp], opts: KernelO
     let (bands, band_rows) = row_bands(1, fh, opts.threads);
     let par = opts.parallel() && bands >= 2;
 
+    // Intra-stage double-buffering (`:pipe<d>`): the Winograd head
+    // reads the frame directly in band-local mode — no prep step to
+    // overlap — so only im2col-fed heads pipeline.
+    let piped = opts.pipeline && n >= 2 && !matches!(src, ConvSource::Wg(_));
+
     // Per-frame patch scratch (and, in two-phase mode, the per-stage
     // conv scratch), reused across frames — every element is written
-    // each frame, so no clearing.
+    // each frame, so no clearing.  The pipelined path instead owns a
+    // ping-pong buffer pair inside `prep_pipeline`.
     let mut patches_f: Vec<f32> = Vec::new();
     let mut patches_q: Vec<u8> = Vec::new();
-    match &src {
-        ConvSource::F32(_) => patches_f = vec![0.0; rows_k * cols],
-        ConvSource::Q8(_) => patches_q = vec![0u8; rows_k * cols],
-        // The Winograd pipeline reads the frame directly.
-        ConvSource::Wg(_) => {}
+    if !piped {
+        match &src {
+            ConvSource::F32(_) => patches_f = vec![0.0; rows_k * cols],
+            ConvSource::Q8(_) => patches_q = vec![0u8; rows_k * cols],
+            // The Winograd pipeline reads the frame directly.
+            ConvSource::Wg(_) => {}
+        }
     }
     let mut conv_scratch: Vec<f32> = if two_phase { vec![0.0; nk * cols] } else { Vec::new() };
 
     let out_ptr = out.data_mut().as_mut_ptr();
-    for ni in 0..n {
+    // Everything after a frame's prep: the (optional) two-phase GEMM
+    // plus the band tasks.  Runs on the caller thread in both the
+    // barrier and the pipelined schedule — only *where the patch
+    // matrix came from* differs, so output bits cannot.
+    let mut run_frame = |ni: usize, patches_f: &[f32], patches_q: &[u8], act: ActQuant| {
         let frame = &x.data()[ni * frame_len..(ni + 1) * frame_len];
-        let mut act = ActQuant { scale: 1.0, zp: 0 };
-        match &src {
-            ConvSource::F32(_) => im2col_frame(frame, &spec, &mut patches_f),
-            ConvSource::Q8(_) => act = im2col_q8_frame(frame, &spec, &mut patches_q),
-            ConvSource::Wg(_) => {}
-        }
         if two_phase {
             // Phase 1: this frame's conv surface, computed once into
             // per-stage scratch (never a whole-batch tensor) by the
@@ -484,7 +490,7 @@ pub fn conv_stage(x: &Tensor, src: ConvSource<'_>, ops: &[TailOp], opts: KernelO
             match &src {
                 ConvSource::F32(p) => gemm_into(
                     p.wmat.view2d(),
-                    MatView::dense(&patches_f, rows_k, cols),
+                    MatView::dense(patches_f, rows_k, cols),
                     BiasMode::PerRow(p.bias.data()),
                     spec.relu,
                     opts,
@@ -492,7 +498,7 @@ pub fn conv_stage(x: &Tensor, src: ConvSource<'_>, ops: &[TailOp], opts: KernelO
                 ),
                 ConvSource::Q8(p) => gemm_q8_into(
                     &p.wq,
-                    &patches_q,
+                    patches_q,
                     cols,
                     act,
                     p.bias.data(),
@@ -566,6 +572,39 @@ pub fn conv_stage(x: &Tensor, src: ConvSource<'_>, ops: &[TailOp], opts: KernelO
                 // SAFETY: sequential bands over live borrows.
                 unsafe { conv_stage_band(&cap, t) };
             }
+        }
+    };
+
+    if piped {
+        match &src {
+            ConvSource::F32(_) => super::conv::prep_pipeline(
+                n,
+                rows_k * cols,
+                |ni, buf: &mut Vec<f32>| {
+                    im2col_frame(&x.data()[ni * frame_len..(ni + 1) * frame_len], &spec, buf)
+                },
+                |ni, buf, ()| run_frame(ni, buf, &[], ActQuant { scale: 1.0, zp: 0 }),
+            ),
+            ConvSource::Q8(_) => super::conv::prep_pipeline(
+                n,
+                rows_k * cols,
+                |ni, buf: &mut Vec<u8>| {
+                    im2col_q8_frame(&x.data()[ni * frame_len..(ni + 1) * frame_len], &spec, buf)
+                },
+                |ni, buf, act| run_frame(ni, &[], buf, act),
+            ),
+            ConvSource::Wg(_) => unreachable!("Wg heads never take the pipelined path"),
+        }
+    } else {
+        for ni in 0..n {
+            let frame = &x.data()[ni * frame_len..(ni + 1) * frame_len];
+            let mut act = ActQuant { scale: 1.0, zp: 0 };
+            match &src {
+                ConvSource::F32(_) => im2col_frame(frame, &spec, &mut patches_f),
+                ConvSource::Q8(_) => act = im2col_q8_frame(frame, &spec, &mut patches_q),
+                ConvSource::Wg(_) => {}
+            }
+            run_frame(ni, &patches_f, &patches_q, act);
         }
     }
     out

@@ -769,7 +769,7 @@ mod tests {
             b.view2d(),
             BiasMode::PerCol(bias.data()),
             true,
-            KernelOpts { threads: 8, tile: 16 },
+            KernelOpts { threads: 8, tile: 16, pipeline: false },
             par_out.data_mut(),
         );
         assert_eq!(seq_out, par_out);
@@ -797,7 +797,7 @@ mod tests {
                 b.view2d(),
                 BiasMode::None,
                 false,
-                KernelOpts { threads: 8, tile },
+                KernelOpts { threads: 8, tile, pipeline: false },
                 out.data_mut(),
             );
             assert_eq!(base, out, "tile {tile} diverged");
@@ -901,7 +901,7 @@ mod tests {
             let mut aq = vec![0u8; k * n];
             let act = quantize_activations(&x, &mut aq);
             let want = naive_q8(&wq, &aq, n, act, &bias, true);
-            for opts in [KernelOpts::seq(), KernelOpts { threads: 8, tile: 16 }] {
+            for opts in [KernelOpts::seq(), KernelOpts { threads: 8, tile: 16, pipeline: false }] {
                 let mut got = vec![0.0f32; m * n];
                 gemm_q8_into(&wq, &aq, n, act, &bias, true, opts, &mut got);
                 assert_eq!(got, want, "{m}x{k}x{n} ({opts:?})");

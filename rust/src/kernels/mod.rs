@@ -105,17 +105,33 @@ pub struct KernelOpts {
     /// their own `(plane, row band)` units from `threads` and ignore
     /// this field.
     pub tile: usize,
+    /// Double-buffer frame `i + 1`'s im2col/patch-quantization prep on
+    /// a dedicated lane while frame `i`'s GEMM bands run (the
+    /// `:pipe<d>` spec knob).  Bit-identical — the ping-pong scratch
+    /// pair only changes *when* the prep happens, never its values —
+    /// and a no-op for batch-1 inputs and sources with no prep step.
+    pub pipeline: bool,
 }
 
 impl KernelOpts {
     /// Sequential execution (the §4.1 baseline configuration).
     pub fn seq() -> KernelOpts {
-        KernelOpts { threads: 1, tile: 64 }
+        KernelOpts { threads: 1, tile: 64, pipeline: false }
     }
 
     /// Tile-parallel execution on the shared pool.
     pub fn tiled() -> KernelOpts {
-        KernelOpts { threads: crate::util::threadpool::global().size(), tile: 64 }
+        KernelOpts {
+            threads: crate::util::threadpool::global().size(),
+            tile: 64,
+            pipeline: false,
+        }
+    }
+
+    /// Builder-style: enable the double-buffered prep lane.
+    pub fn pipelined(mut self, on: bool) -> KernelOpts {
+        self.pipeline = on;
+        self
     }
 
     /// Does this configuration dispatch to the pool?

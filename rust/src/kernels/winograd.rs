@@ -173,7 +173,7 @@ pub(crate) unsafe fn winograd_rows_into(
     // Sequential single-threaded GEMMs keep the per-element k-order
     // fixed, so the surrounding band split never changes a value.
     let mut m = vec![0.0f32; POINTS * nk * t_cnt];
-    let gopts = KernelOpts { threads: 1, tile };
+    let gopts = KernelOpts { threads: 1, tile, pipeline: false };
     for pt in 0..POINTS {
         gemm_into(
             MatView::dense(&p.u[pt * nk * c..(pt + 1) * nk * c], nk, c),
@@ -362,8 +362,8 @@ mod tests {
         // Bit-identity across thread/tile configurations.
         for opts in [
             KernelOpts::tiled(),
-            KernelOpts { threads: 3, tile: 17 },
-            KernelOpts { threads: 8, tile: 64 },
+            KernelOpts { threads: 3, tile: 17, pipeline: false },
+            KernelOpts { threads: 8, tile: 64, pipeline: true },
         ] {
             let got = conv_winograd(&x, &packed, opts);
             assert_eq!(got, base, "{spec:?} ({opts:?})");

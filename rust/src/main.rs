@@ -549,7 +549,9 @@ fn plan_cmd(argv: Vec<String>) -> Result<()> {
         name => vec![zoo::by_name(name)
             .ok_or_else(|| anyhow::anyhow!("unknown network {name:?}"))?],
     };
-    let partitioner = Partitioner::new(&registry, &dev).with_batch(exec.batch());
+    let partitioner = Partitioner::new(&registry, &dev)
+        .with_batch(exec.batch())
+        .with_pipeline(exec.pipeline().is_some());
     let mut json_nets = Vec::new();
     for net in &nets {
         let report = partitioner.partition(net)?;
@@ -648,6 +650,7 @@ fn plan_json(
                 ("exec_ms", Json::num(a.cost_s * 1e3)),
                 ("swap_ms", Json::num(a.swap_s * 1e3)),
                 ("fuse_saving_ms", Json::num(a.fuse_s * 1e3)),
+                ("pipe_saving_ms", Json::num(a.pipe_s * 1e3)),
             ])
         })
         .collect();
@@ -977,7 +980,9 @@ fn layer_predictions(
     if exec.winograd() {
         registry = registry.with_winograd();
     }
-    let partitioner = Partitioner::new(&registry, &dev).with_batch(exec.batch());
+    let partitioner = Partitioner::new(&registry, &dev)
+        .with_batch(exec.batch())
+        .with_pipeline(exec.pipeline().is_some());
     if exec.is_auto() {
         let report = partitioner.partition(net)?;
         return Ok(report

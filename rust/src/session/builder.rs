@@ -61,6 +61,7 @@ impl Session {
             batch: None,
             threads: None,
             tile: None,
+            pipeline: None,
             deadline: None,
             trace: None,
             record_trace: false,
@@ -121,6 +122,7 @@ pub struct SessionBuilder {
     batch: Option<usize>,
     threads: Option<usize>,
     tile: Option<usize>,
+    pipeline: Option<usize>,
     deadline: Option<u64>,
     trace: Option<TraceLevel>,
     record_trace: bool,
@@ -197,6 +199,17 @@ impl SessionBuilder {
         self
     }
 
+    /// Pipelined execution with queues of depth `d` (the `:pipe<d>`
+    /// segment): double-buffer the next frame's im2col/patch
+    /// quantization under the current frame's GEMM bands and stream
+    /// micro-batches through the stage graph instead of
+    /// barrier-stepping.  Off by default; bit-identical across depths
+    /// — the knob changes scheduling, never numerics.
+    pub fn pipeline_depth(mut self, d: usize) -> Self {
+        self.pipeline = Some(d);
+        self
+    }
+
     /// Default per-request deadline in milliseconds (the `:dl<ms>`
     /// segment).  When this spec is deployed behind the server, a
     /// request without its own `deadline_ms` inherits this value; the
@@ -264,6 +277,9 @@ impl SessionBuilder {
         }
         if let Some(t) = self.tile {
             spec = spec.with_tile(t)?;
+        }
+        if let Some(d) = self.pipeline {
+            spec = spec.with_pipeline(d)?;
         }
         if let Some(ms) = self.deadline {
             spec = spec.with_deadline_ms(ms)?;
@@ -398,6 +414,24 @@ mod tests {
         assert!(matches!(
             Session::for_net("lenet5").method("cpu-gemm").winograd(true).spec(),
             Err(SpecError::WinogradOnFixed { .. })
+        ));
+    }
+
+    #[test]
+    fn pipeline_knob_composes_and_conflicts_like_the_grammar() {
+        let spec = Session::for_net("alexnet").batch(4).pipeline_depth(2).spec().unwrap();
+        assert_eq!(spec.pipeline(), Some(2));
+        assert_eq!(spec.to_string(), "delegate:auto:batch=4:pipe2");
+        // Restating the string's depth dedupes; a different one
+        // conflicts; zero is typed.
+        assert!(Session::for_net("lenet5").method("cpu-gemm:pipe2").pipeline_depth(2).spec().is_ok());
+        assert!(matches!(
+            Session::for_net("lenet5").method("cpu-gemm:pipe2").pipeline_depth(4).spec(),
+            Err(SpecError::ValueConflict { key: "pipe", .. })
+        ));
+        assert!(matches!(
+            Session::for_net("lenet5").pipeline_depth(0).spec(),
+            Err(SpecError::BadValue { key: "pipe", .. })
         ));
     }
 

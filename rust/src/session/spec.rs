@@ -21,6 +21,7 @@
 //!            | "batch=" <n>                      frames per dispatch the plan serves
 //!            | "threads=" <n>                    kernel thread override
 //!            | "tile=" <n>                       GEMM tile-width override
+//!            | "pipe" <d> | "nopipe"             pipelined execution, queue depth d
 //!            | "dl" <ms>                         default per-request deadline, ms
 //!            | "trace=" <level> )                span recording: off | stage | kernel
 //! ```
@@ -87,6 +88,7 @@ pub struct ExecSpec {
     batch: usize,
     threads: Option<usize>,
     tile: Option<usize>,
+    pipeline: Option<usize>,
     deadline_ms: Option<u64>,
     trace: TraceLevel,
 }
@@ -145,7 +147,8 @@ impl fmt::Display for SpecError {
             SpecError::UnknownSegment { seg, spec } => write!(
                 f,
                 "unknown segment {seg:?} in spec {spec:?} (expected a device: note4 | m9, \
-                 q8 | noq8 | wino | nowino | fuse | nofuse, or batch= | threads= | tile=)"
+                 q8 | noq8 | wino | nowino | fuse | nofuse | pipe<d> | nopipe, or \
+                 batch= | threads= | tile=)"
             ),
             SpecError::UnknownDevice(d) => {
                 write!(f, "unknown device {d:?} (try note4 | m9)")
@@ -209,6 +212,7 @@ impl ExecSpec {
             batch: 1,
             threads: None,
             tile: None,
+            pipeline: None,
             deadline_ms: None,
             trace: TraceLevel::Off,
         }
@@ -236,6 +240,7 @@ impl ExecSpec {
             batch: 1,
             threads: None,
             tile: None,
+            pipeline: None,
             deadline_ms: None,
             trace: TraceLevel::Off,
         })
@@ -276,6 +281,18 @@ impl ExecSpec {
     /// GEMM tile-width override (None: kernel default).
     pub fn tile(&self) -> Option<usize> {
         self.tile
+    }
+
+    /// Pipelined-execution queue depth (the `:pipe<d>` segment).
+    /// `None` (the default, restatable as `:nopipe`) barrier-steps:
+    /// each stage runs the whole batch to completion before the next
+    /// starts.  `Some(d)` double-buffers the next frame's im2col/patch
+    /// quantization under the current frame's GEMM bands and streams
+    /// micro-batches through the stage graph with per-hop queues of
+    /// depth `d`.  Bit-identical either way — the knob only changes
+    /// *when* work happens, never its arithmetic.
+    pub fn pipeline(&self) -> Option<usize> {
+        self.pipeline
     }
 
     /// Default per-request deadline in milliseconds (the `:dl<ms>`
@@ -465,6 +482,28 @@ impl ExecSpec {
         Ok(self)
     }
 
+    /// Pipelined-execution queue depth (must be >= 1; conflicts like
+    /// [`Self::with_batch`]: a *different* already-set depth is
+    /// rejected, restating dedupes).  Valid on any backend — the knob
+    /// steers execution scheduling, not placement — and bit-identical
+    /// across depths, so it only changes speed.
+    pub fn with_pipeline(mut self, depth: usize) -> Result<ExecSpec, SpecError> {
+        if depth == 0 {
+            return Err(SpecError::BadValue { key: "pipe", value: "0".into() });
+        }
+        if let Some(prev) = self.pipeline {
+            if prev != depth {
+                return Err(SpecError::ValueConflict {
+                    key: "pipe",
+                    first: prev,
+                    second: depth,
+                });
+            }
+        }
+        self.pipeline = Some(depth);
+        Ok(self)
+    }
+
     /// Default per-request deadline in milliseconds (must be >= 1;
     /// conflicts like [`Self::with_batch`]: a *different* already-set
     /// value is rejected, restating dedupes).
@@ -538,6 +577,9 @@ impl fmt::Display for ExecSpec {
         if let Some(t) = self.tile {
             write!(f, ":tile={t}")?;
         }
+        if let Some(d) = self.pipeline {
+            write!(f, ":pipe{d}")?;
+        }
         if let Some(ms) = self.deadline_ms {
             write!(f, ":dl{ms}")?;
         }
@@ -560,6 +602,9 @@ struct Segments {
     batch: Option<usize>,
     threads: Option<usize>,
     tile: Option<usize>,
+    /// `Some(Some(d))` for `pipe<d>`, `Some(None)` for an explicit
+    /// `nopipe` (so `pipe2:nopipe` conflicts instead of last-wins).
+    pipe: Option<Option<usize>>,
     dl: Option<u64>,
     trace: Option<TraceLevel>,
 }
@@ -655,6 +700,12 @@ impl FromStr for ExecSpec {
                     }
                     _ => seen.fuse = Some(false),
                 },
+                "nopipe" => match seen.pipe {
+                    Some(Some(_)) => {
+                        return Err(SpecError::SegmentConflict { a: "pipe", b: "nopipe" })
+                    }
+                    _ => seen.pipe = Some(None),
+                },
                 _ => {
                     if let Some((key, value)) = seg.split_once('=') {
                         match key {
@@ -710,6 +761,33 @@ impl FromStr for ExecSpec {
                                 })
                             }
                             _ => seen.dl = Some(ms),
+                        }
+                    } else if let Some(d) = seg
+                        .strip_prefix("pipe")
+                        .filter(|r| !r.is_empty() && r.bytes().all(|b| b.is_ascii_digit()))
+                    {
+                        let d: usize = d.parse().map_err(|_| SpecError::BadValue {
+                            key: "pipe",
+                            value: d.to_string(),
+                        })?;
+                        if d == 0 {
+                            return Err(SpecError::BadValue { key: "pipe", value: "0".into() });
+                        }
+                        match seen.pipe {
+                            Some(None) => {
+                                return Err(SpecError::SegmentConflict {
+                                    a: "nopipe",
+                                    b: "pipe",
+                                })
+                            }
+                            Some(Some(prev)) if prev != d => {
+                                return Err(SpecError::ValueConflict {
+                                    key: "pipe",
+                                    first: prev,
+                                    second: d,
+                                })
+                            }
+                            _ => seen.pipe = Some(Some(d)),
                         }
                     } else if let Some(alias) = device::canonical_alias(seg) {
                         match &seen.device {
@@ -769,6 +847,11 @@ impl FromStr for ExecSpec {
         }
         if let Some(t) = seen.tile {
             spec = spec.with_tile(t)?;
+        }
+        match seen.pipe {
+            Some(Some(d)) => spec = spec.with_pipeline(d)?,
+            // Explicit :nopipe restates the barrier-stepped default.
+            Some(None) | None => {}
         }
         if let Some(ms) = seen.dl {
             spec = spec.with_deadline_ms(ms)?;
@@ -949,6 +1032,61 @@ mod tests {
         assert!(matches!(
             ExecSpec::auto().with_deadline_ms(0),
             Err(SpecError::BadValue { key: "dl", .. })
+        ));
+    }
+
+    #[test]
+    fn pipe_knob_round_trips_and_conflicts() {
+        let spec = parse("delegate:auto:q8:batch=4:pipe2");
+        assert_eq!(spec.pipeline(), Some(2));
+        assert_eq!(spec.to_string(), "delegate:auto:q8:batch=4:pipe2");
+        // Works on fixed backends (scheduling, not placement) and sits
+        // after :tile=, before :dl<ms>.
+        let fixed = parse("cpu-gemm:dl500:pipe3:tile=64");
+        assert_eq!(fixed.pipeline(), Some(3));
+        assert_eq!(fixed.to_string(), "cpu-gemm:tile=64:pipe3:dl500");
+        // Default is barrier-stepped and stays out of the canonical
+        // form; :nopipe restates it; duplicates dedupe; different
+        // depths conflict; pipe-vs-nopipe is a keyword conflict.
+        assert_eq!(parse("cpu-gemm").pipeline(), None);
+        assert_eq!(parse("cpu-gemm:nopipe").to_string(), "cpu-gemm");
+        assert_eq!(parse("cpu-gemm:nopipe:nopipe").to_string(), "cpu-gemm");
+        assert_eq!(parse("cpu-gemm:pipe2:pipe2").to_string(), "cpu-gemm:pipe2");
+        assert!(matches!(
+            "cpu-gemm:pipe2:pipe4".parse::<ExecSpec>(),
+            Err(SpecError::ValueConflict { key: "pipe", first: 2, second: 4 })
+        ));
+        assert!(matches!(
+            "cpu-gemm:pipe2:nopipe".parse::<ExecSpec>(),
+            Err(SpecError::SegmentConflict { a: "pipe", b: "nopipe" })
+        ));
+        assert!(matches!(
+            "cpu-gemm:nopipe:pipe2".parse::<ExecSpec>(),
+            Err(SpecError::SegmentConflict { a: "nopipe", b: "pipe" })
+        ));
+        // Junk values are typed; bare "pipe" is not a segment.
+        assert!(matches!(
+            "cpu-gemm:pipe0".parse::<ExecSpec>(),
+            Err(SpecError::BadValue { key: "pipe", .. })
+        ));
+        assert!(matches!(
+            "cpu-gemm:pipe".parse::<ExecSpec>(),
+            Err(SpecError::UnknownSegment { .. })
+        ));
+        assert!(matches!(
+            "cpu-gemm:pipe2x".parse::<ExecSpec>(),
+            Err(SpecError::UnknownSegment { .. })
+        ));
+        // Modifier mirrors the grammar.
+        assert_eq!(ExecSpec::auto().with_pipeline(2).unwrap().pipeline(), Some(2));
+        assert!(parse("cpu-gemm:pipe2").with_pipeline(2).is_ok());
+        assert!(matches!(
+            parse("cpu-gemm:pipe2").with_pipeline(4),
+            Err(SpecError::ValueConflict { key: "pipe", .. })
+        ));
+        assert!(matches!(
+            ExecSpec::auto().with_pipeline(0),
+            Err(SpecError::BadValue { key: "pipe", .. })
         ));
     }
 

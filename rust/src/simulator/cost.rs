@@ -279,6 +279,35 @@ pub fn fusion_saving(dev: &DeviceSpec, shape: (usize, usize, usize)) -> f64 {
     round_trip_traffic(dev, shape)
 }
 
+/// Per-frame seconds the intra-stage prep pipeline saves on an
+/// im2col-lowered conv layer when the batch streams: while frame *i*'s
+/// band GEMMs run, a prep lane materializes (and, on the q8 path,
+/// quantizes) frame *i+1*'s patch matrix, so in steady state the
+/// shorter of the two phases hides entirely under the longer —
+/// `min(t_prep, t_gemm)` per frame.  Conservative by construction: the
+/// first frame of a batch overlaps nothing, and the credit never
+/// exceeds the prep cost already charged by
+/// [`conv_time_cpu_gemm`]/[`conv_time_cpu_gemm_q8`], so a credited
+/// layer cost stays strictly positive.  The delegate partitioner
+/// grants this on pipelined im2col conv placements
+/// ([`crate::delegate::Partitioner::with_pipeline`]), mirroring how
+/// [`fusion_saving`] credits fused boundaries.
+pub fn pipeline_saving(dev: &DeviceSpec, spec: &ConvSpec, threads: usize, q8: bool) -> f64 {
+    let k = spec.in_c * spec.kh * spec.kw;
+    let n = spec.out_h() * spec.out_w();
+    let prep = if q8 {
+        im2col_time(dev, spec) + quant_time(dev, k * n)
+    } else {
+        im2col_time(dev, spec)
+    };
+    let gemm = if q8 {
+        gemm_time_cpu_q8(dev, spec.nk, k, n, threads)
+    } else {
+        gemm_time_cpu(dev, spec.nk, k, n, threads)
+    };
+    prep.min(gemm)
+}
+
 /// Time of one FC layer for one frame, seconds.  Public for the
 /// delegate partitioner, which prices CPU-vs-accelerator FC placement
 /// per layer instead of hard-coding the paper's AlexNet-only rule.
@@ -648,6 +677,43 @@ mod tests {
                     "{}/{layer}: saving {saving} rivals the placement gap",
                     dev.name
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn pipeline_saving_is_positive_and_bounded_by_both_phases() {
+        // The overlap credit can hide at most the shorter phase, so a
+        // credited conv cost keeps the longer phase intact and stays
+        // strictly positive — on every zoo conv, both precisions.
+        for dev in [galaxy_note4(), htc_one_m9()] {
+            for net in zoo::all() {
+                for (name, spec) in net.conv_specs() {
+                    for threads in [1usize, 4] {
+                        let k = spec.in_c * spec.kh * spec.kw;
+                        let n = spec.out_h() * spec.out_w();
+                        let s = pipeline_saving(&dev, &spec, threads, false);
+                        assert!(s > 0.0, "{}/{name}: f32 saving not positive", dev.name);
+                        assert!(s <= im2col_time(&dev, &spec) + 1e-18, "{}/{name}", dev.name);
+                        assert!(
+                            s <= gemm_time_cpu(&dev, spec.nk, k, n, threads) + 1e-18,
+                            "{}/{name}",
+                            dev.name
+                        );
+                        assert!(
+                            conv_time_cpu_gemm(&dev, &spec, threads) - s > 0.0,
+                            "{}/{name}: credit zeroed the layer",
+                            dev.name
+                        );
+                        let sq = pipeline_saving(&dev, &spec, threads, true);
+                        assert!(sq > 0.0, "{}/{name}: q8 saving not positive", dev.name);
+                        assert!(
+                            conv_time_cpu_gemm_q8(&dev, &spec, threads) - sq > 0.0,
+                            "{}/{name}: q8 credit zeroed the layer",
+                            dev.name
+                        );
+                    }
+                }
             }
         }
     }

@@ -57,7 +57,10 @@ impl BenchConfig {
         cfg
     }
 
-    fn matches(&self, name: &str) -> bool {
+    /// Does `name` pass the configured `--filter` (all names do when
+    /// no filter is set)?  Public for bench sections that measure by
+    /// hand (custom metrics) yet still honor the shared CLI.
+    pub fn matches(&self, name: &str) -> bool {
         match &self.filter {
             Some(f) => name.contains(f.as_str()),
             None => true,

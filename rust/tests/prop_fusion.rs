@@ -102,8 +102,13 @@ fn apply_unfused(h: &Tensor, op: &TailOp, opts: KernelOpts) -> Tensor {
     }
 }
 
-fn opts_cases() -> [KernelOpts; 3] {
-    [KernelOpts::seq(), KernelOpts::tiled(), KernelOpts { threads: 8, tile: 16 }]
+fn opts_cases() -> [KernelOpts; 4] {
+    [
+        KernelOpts::seq(),
+        KernelOpts::tiled(),
+        KernelOpts { threads: 8, tile: 16, pipeline: false },
+        KernelOpts { threads: 8, tile: 16, pipeline: true },
+    ]
 }
 
 #[test]

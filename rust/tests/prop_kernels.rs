@@ -61,8 +61,12 @@ fn im2col_gemm_conv_matches_direct_nest() {
         let w = random_tensor(rng, vec![spec.nk, spec.in_c, spec.kh, spec.kw]);
         let b = random_tensor(rng, vec![spec.nk]);
         let direct = seq::conv_nchw(&x, &w, &b, &spec);
-        for opts in [KernelOpts::seq(), KernelOpts::tiled(), KernelOpts { threads: 8, tile: 16 }]
-        {
+        for opts in [
+            KernelOpts::seq(),
+            KernelOpts::tiled(),
+            KernelOpts { threads: 8, tile: 16, pipeline: false },
+            KernelOpts { threads: 8, tile: 16, pipeline: true },
+        ] {
             let lowered = kernels::conv_im2col_unpacked(&x, &w, &b, &spec, opts);
             prop_assert!(
                 lowered.shape() == direct.shape(),
@@ -102,7 +106,7 @@ fn tiled_fc_bit_identical_to_sequential() {
         let w = random_tensor(rng, vec![d_in, d_out]);
         let b = random_tensor(rng, vec![d_out]);
         let s = seq::fc(&x, &w, &b, relu);
-        let t = kernels::fc(&x, &w, &b, relu, KernelOpts { threads: 8, tile: 16 });
+        let t = kernels::fc(&x, &w, &b, relu, KernelOpts { threads: 8, tile: 16, pipeline: false });
         prop_assert!(s == t, "fc diverged for n={n} d_in={d_in} d_out={d_out}");
         Ok(())
     });
@@ -118,7 +122,7 @@ fn tiled_pool_and_lrn_bit_identical_to_sequential() {
         let size = rng.range(1, 5) as usize;
         let stride = rng.range(1, 4) as usize;
         let x = random_tensor(rng, vec![n, c, h, w]);
-        let opts = KernelOpts { threads: 8, tile: 16 };
+        let opts = KernelOpts { threads: 8, tile: 16, pipeline: false };
         prop_assert!(
             kernels::maxpool_nchw(&x, size, stride, opts) == seq::maxpool_nchw(&x, size, stride),
             "maxpool diverged: {n}x{c}x{h}x{w} size {size} stride {stride}"
@@ -241,9 +245,11 @@ fn winograd_bit_identical_across_thread_and_tile_configs() {
         let b = random_tensor(rng, vec![spec.nk]);
         let pw = kernels::PackedConvWg::pack(&spec, &w, &b);
         let reference = kernels::conv_winograd(&x, &pw, KernelOpts::seq());
-        for opts in
-            [KernelOpts::tiled(), KernelOpts { threads: 8, tile: 16 }, KernelOpts { threads: 3, tile: 5 }]
-        {
+        for opts in [
+            KernelOpts::tiled(),
+            KernelOpts { threads: 8, tile: 16, pipeline: false },
+            KernelOpts { threads: 3, tile: 5, pipeline: true },
+        ] {
             let other = kernels::conv_winograd(&x, &pw, opts);
             prop_assert!(
                 reference == other,

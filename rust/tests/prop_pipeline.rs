@@ -1,0 +1,339 @@
+//! Property tests on the pipelined execution paths:
+//!
+//! (a) the intra-stage prep lane (`KernelOpts::pipeline`) is
+//!     **bit-identical** to the barrier kernels over randomized conv
+//!     geometries, stage tails, batch sizes, and thread/tile
+//!     configurations — for f32, q8, and Winograd conv heads (the last
+//!     proving the Wg exclusion is a no-op, not a divergence);
+//! (b) the inter-stage streaming schedule (`:pipe<d>`) produces the
+//!     same logits as the barrier engine (`:nopipe`) for randomized
+//!     stage plans (fused and unfused), batch sizes, queue depths, and
+//!     tile overrides, on f32 and q8 synthetic engines;
+//! (c) under an armed `queue.stall` fault plan the streamed engine
+//!     never hangs: delay faults leave results bit-identical, deadline
+//!     pressure surfaces as a typed per-stage
+//!     [`DeadlineExpired`], and `err` rules surface as a typed
+//!     [`FaultError`] — and the hop probes demonstrably fire, pinning
+//!     the streamed path (the barrier path never consults
+//!     `queue.stall`).
+//!
+//! The fault plan is process-global, so every test that arms one (or
+//! that runs an engine and must not see injected faults) serializes
+//! behind [`LOCK`] and disarms through a drop guard.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use cnndroid::coordinator::resilience::DeadlineExpired;
+use cnndroid::coordinator::{Engine, EngineConfig};
+use cnndroid::data::synth;
+use cnndroid::faults::{self, FaultError};
+use cnndroid::kernels::{
+    self, ConvSource, KernelOpts, PackedConv, PackedConvQ8, PackedConvWg, TailOp,
+};
+use cnndroid::model::network::{ConvSpec, PoolMode};
+use cnndroid::prop_assert;
+use cnndroid::session::ExecSpec;
+use cnndroid::tensor::Tensor;
+use cnndroid::util::prop;
+use cnndroid::util::rng::Pcg;
+
+/// Serializes every test that arms faults or runs an engine whose
+/// fault-site probes must stay quiet.
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Disarms the global plan when dropped, so a panicking test cannot
+/// leak faults into the next one.
+struct Disarm;
+impl Drop for Disarm {
+    fn drop(&mut self) {
+        faults::disarm();
+    }
+}
+
+fn random_tensor(rng: &mut Pcg, shape: Vec<usize>) -> Tensor {
+    let n = shape.iter().product();
+    Tensor::new(shape, rng.normal_vec(n, 1.0))
+}
+
+/// Random conv geometry biased to the edge cases (same distribution as
+/// `prop_fusion`): 1x1 kernels, strides > 1, pad 0, pad >= kernel.
+fn random_spec(rng: &mut Pcg) -> ConvSpec {
+    let kh = rng.range(1, 6) as usize;
+    let kw = rng.range(1, 6) as usize;
+    let stride = rng.range(1, 4) as usize;
+    let pad = rng.range(0, kh.max(kw) as i64 + 3) as usize;
+    let in_c = rng.range(1, 7) as usize;
+    let nk = rng.range(1, 9) as usize;
+    let mut in_h = rng.range(2, 14) as usize;
+    let mut in_w = rng.range(2, 14) as usize;
+    if (in_h + 2 * pad) < kh {
+        in_h = kh - 2 * pad;
+    }
+    if (in_w + 2 * pad) < kw {
+        in_w = kw - 2 * pad;
+    }
+    ConvSpec { in_c, in_h, in_w, nk, kh, kw, stride, pad, relu: rng.below(2) == 0 }
+}
+
+/// Random Winograd-eligible geometry: 3x3 stride-1, small pads.
+fn random_wg_spec(rng: &mut Pcg) -> ConvSpec {
+    ConvSpec {
+        in_c: rng.range(1, 6) as usize,
+        in_h: rng.range(3, 13) as usize,
+        in_w: rng.range(3, 13) as usize,
+        nk: rng.range(1, 8) as usize,
+        kh: 3,
+        kw: 3,
+        stride: 1,
+        pad: rng.range(0, 2) as usize,
+        relu: rng.below(2) == 0,
+    }
+}
+
+fn random_pool(rng: &mut Pcg) -> TailOp {
+    TailOp::Pool {
+        mode: if rng.below(2) == 0 { PoolMode::Max } else { PoolMode::Avg },
+        size: rng.range(1, 4) as usize,
+        stride: rng.range(1, 4) as usize,
+        relu: rng.below(2) == 0,
+    }
+}
+
+fn random_lrn(rng: &mut Pcg) -> TailOp {
+    TailOp::Lrn { size: 1 + 2 * rng.range(0, 3) as usize, alpha: 1e-4, beta: 0.75, k: 1.0 }
+}
+
+/// Random stage tail: empty (bare conv), pool, pool+LRN, or lone LRN.
+fn random_tail(rng: &mut Pcg) -> Vec<TailOp> {
+    match rng.below(4) {
+        0 => vec![],
+        1 => vec![random_pool(rng)],
+        2 => vec![random_pool(rng), random_lrn(rng)],
+        _ => vec![random_lrn(rng)],
+    }
+}
+
+/// Random barrier-mode kernel options (the pipelined twin is derived
+/// with `.pipelined(true)` so the pair differs in nothing else).
+fn random_opts(rng: &mut Pcg) -> KernelOpts {
+    let threads = [1usize, 2, 8][rng.below(3) as usize];
+    let tile = [4usize, 8, 16, 64][rng.below(4) as usize];
+    KernelOpts { threads, tile, pipeline: false }
+}
+
+// ---------------------------------------------------------------------
+// (a) Intra-stage prep lane: kernel-level bit-identity
+// ---------------------------------------------------------------------
+
+#[test]
+fn pipelined_f32_and_q8_stages_bit_identical_to_barrier() {
+    prop::check("pipelined conv stage vs barrier", |rng| {
+        let spec = random_spec(rng);
+        let tail = random_tail(rng);
+        // Batches 1 (pipeline degenerates to the sequential loop) up
+        // to 5 (prep lane two frames ahead of the consumer).
+        let batch = rng.range(1, 6) as usize;
+        let x = random_tensor(rng, vec![batch, spec.in_c, spec.in_h, spec.in_w]);
+        let w = random_tensor(rng, vec![spec.nk, spec.in_c, spec.kh, spec.kw]);
+        let b = random_tensor(rng, vec![spec.nk]);
+        let base = random_opts(rng);
+        let piped = base.pipelined(true);
+
+        let pf = PackedConv::pack(&spec, &w, &b);
+        let want = kernels::conv_stage(&x, ConvSource::F32(&pf), &tail, base);
+        let got = kernels::conv_stage(&x, ConvSource::F32(&pf), &tail, piped);
+        prop_assert!(
+            got == want,
+            "f32 stage diverged for {spec:?} tail {tail:?} batch {batch} ({base:?})"
+        );
+        prop_assert!(
+            kernels::conv_im2col(&x, &pf, piped) == kernels::conv_im2col(&x, &pf, base),
+            "bare f32 conv diverged for {spec:?} batch {batch} ({base:?})"
+        );
+
+        let pq = PackedConvQ8::pack(&spec, &w, &b);
+        let want_q = kernels::conv_stage(&x, ConvSource::Q8(&pq), &tail, base);
+        let got_q = kernels::conv_stage(&x, ConvSource::Q8(&pq), &tail, piped);
+        prop_assert!(
+            got_q == want_q,
+            "q8 stage diverged for {spec:?} tail {tail:?} batch {batch} ({base:?})"
+        );
+        prop_assert!(
+            kernels::conv_im2col_q8(&x, &pq, piped) == kernels::conv_im2col_q8(&x, &pq, base),
+            "bare q8 conv diverged for {spec:?} batch {batch} ({base:?})"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn pipelined_winograd_heads_bit_identical_to_barrier() {
+    // Winograd heads read the frame directly — there is no patch
+    // matrix to prep, so the pipeline flag must be a perfect no-op.
+    prop::check("pipelined winograd stage vs barrier", |rng| {
+        let spec = random_wg_spec(rng);
+        assert!(kernels::winograd_supported(&spec));
+        let tail = random_tail(rng);
+        let batch = rng.range(1, 5) as usize;
+        let x = random_tensor(rng, vec![batch, spec.in_c, spec.in_h, spec.in_w]);
+        let w = random_tensor(rng, vec![spec.nk, spec.in_c, spec.kh, spec.kw]);
+        let b = random_tensor(rng, vec![spec.nk]);
+        let base = random_opts(rng);
+        let pw = PackedConvWg::pack(&spec, &w, &b);
+        let want = kernels::conv_stage(&x, ConvSource::Wg(&pw), &tail, base);
+        let got = kernels::conv_stage(&x, ConvSource::Wg(&pw), &tail, base.pipelined(true));
+        prop_assert!(
+            got == want,
+            "wg stage diverged for {spec:?} tail {tail:?} batch {batch} ({base:?})"
+        );
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// (b) Inter-stage streaming: engine-level bit-identity
+// ---------------------------------------------------------------------
+
+/// Random pipelined/barrier spec pair differing ONLY in the `:pipe<d>`
+/// knob, over both CPU precisions, fused and unfused stage plans, and
+/// tile overrides.
+fn random_spec_pair(rng: &mut Pcg) -> (ExecSpec, ExecSpec, usize) {
+    let backend = if rng.below(2) == 0 { "cpu-gemm" } else { "cpu-gemm-q8" };
+    let mut base: ExecSpec = backend.parse().unwrap();
+    if rng.below(3) == 0 {
+        base = base.with_fusion(false);
+    }
+    if rng.below(3) == 0 {
+        base = base.with_tile([4usize, 16, 64][rng.below(3) as usize]).unwrap();
+    }
+    let depth = rng.range(1, 5) as usize;
+    (base.clone().with_pipeline(depth).unwrap(), base, depth)
+}
+
+#[test]
+fn streamed_engine_matches_barrier_engine_bitwise() {
+    let _g = lock();
+    let _d = Disarm;
+    prop::check("streamed engine vs barrier engine", |rng| {
+        let (piped, barrier, depth) = random_spec_pair(rng);
+        let net_name = if rng.below(2) == 0 { "lenet5" } else { "cifar10" };
+        let seed = rng.below(1 << 20);
+        // Batch 2..=7: odd sizes leave a short last micro-batch.
+        let batch = rng.range(2, 8) as usize;
+        let pe = Engine::synthetic(net_name, EngineConfig::for_spec(piped), seed)
+            .map_err(|e| format!("piped engine: {e:#}"))?;
+        let be = Engine::synthetic(net_name, EngineConfig::for_spec(barrier), seed)
+            .map_err(|e| format!("barrier engine: {e:#}"))?;
+        let net = pe.network().clone();
+        let x = synth::random_frames(batch, net.in_c, net.in_h, net.in_w, seed);
+        let got = pe.infer_batch(&x).map_err(|e| format!("streamed infer: {e:#}"))?;
+        let want = be.infer_batch(&x).map_err(|e| format!("barrier infer: {e:#}"))?;
+        prop_assert!(
+            got == want,
+            "{net_name} batch {batch} depth {depth}: streamed logits diverged"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn acceptance_synthetic_alexnet_streams_bit_identically() {
+    // The bench's configuration, pinned as a correctness test: the
+    // synthetic AlexNet at batch 4, streamed at depth 2 vs barrier.
+    let _g = lock();
+    let _d = Disarm;
+    let piped: ExecSpec = "cpu-gemm:pipe2".parse().unwrap();
+    let barrier: ExecSpec = "cpu-gemm:nopipe".parse().unwrap();
+    let pe = Engine::synthetic("alexnet", EngineConfig::for_spec(piped), 42).unwrap();
+    let be = Engine::synthetic("alexnet", EngineConfig::for_spec(barrier), 42).unwrap();
+    let net = pe.network().clone();
+    let x = synth::random_frames(4, net.in_c, net.in_h, net.in_w, 42);
+    let got = pe.infer_batch(&x).unwrap();
+    let want = be.infer_batch(&x).unwrap();
+    assert!(got == want, "alexnet streamed logits diverged from barrier");
+}
+
+// ---------------------------------------------------------------------
+// (c) queue.stall injection: no hangs, typed expiry, probes fire
+// ---------------------------------------------------------------------
+
+#[test]
+fn stalled_queues_never_hang_and_stay_bit_identical() {
+    let _g = lock();
+    let _d = Disarm;
+    let piped: ExecSpec = "cpu-gemm:pipe2".parse().unwrap();
+    let barrier: ExecSpec = "cpu-gemm".parse().unwrap();
+    let pe = Engine::synthetic("lenet5", EngineConfig::for_spec(piped), 9).unwrap();
+    let be = Engine::synthetic("lenet5", EngineConfig::for_spec(barrier), 9).unwrap();
+    let net = pe.network().clone();
+    let x = synth::random_frames(4, net.in_c, net.in_h, net.in_w, 9);
+    let want = be.infer_batch(&x).unwrap();
+
+    // Delay every hop: the run must complete (no deadlock), in bounded
+    // time, with bit-identical output — stalls move WHEN work happens,
+    // never what is computed.
+    faults::arm("seed=11:queue.stall=delay5ms@1".parse().unwrap());
+    let t = Instant::now();
+    let got = pe.infer_batch(&x).unwrap();
+    let wall = t.elapsed();
+    let stall_probes: u64 = faults::counts()
+        .iter()
+        .filter(|(site, _, _)| site.as_str() == faults::SITE_QUEUE_STALL)
+        .map(|(_, probes, _)| *probes)
+        .sum();
+    faults::disarm();
+    assert!(got == want, "stalled streamed logits diverged");
+    assert!(wall < Duration::from_secs(30), "stalled run took {wall:?}");
+    // The hop probes must actually have fired — this is what pins the
+    // streamed path: the barrier engine never consults queue.stall.
+    assert!(stall_probes > 0, "queue.stall was never probed; streaming path not taken");
+}
+
+#[test]
+fn stalled_queues_expire_deadlines_with_a_typed_error() {
+    let _g = lock();
+    let _d = Disarm;
+    let piped: ExecSpec = "cpu-gemm:pipe2".parse().unwrap();
+    let pe = Engine::synthetic("lenet5", EngineConfig::for_spec(piped), 5).unwrap();
+    let net = pe.network().clone();
+    let x = synth::random_frames(4, net.in_c, net.in_h, net.in_w, 5);
+    // Stall every hop well past a short deadline: the wavefront must
+    // abandon the batch with a typed per-stage expiry, quickly.
+    faults::arm("seed=3:queue.stall=delay30ms@1".parse().unwrap());
+    let t = Instant::now();
+    let err = pe
+        .infer_deadline(&x, Some(Instant::now() + Duration::from_millis(20)))
+        .expect_err("deadline under full stall must expire");
+    let wall = t.elapsed();
+    faults::disarm();
+    let expired = err
+        .downcast_ref::<DeadlineExpired>()
+        .unwrap_or_else(|| panic!("expected DeadlineExpired, got: {err:#}"));
+    assert_eq!(expired.net, "lenet5");
+    assert!(!expired.stage.is_empty(), "expiry must name the stalled stage");
+    assert!(wall < Duration::from_secs(10), "expiry took {wall:?}");
+}
+
+#[test]
+fn queue_stall_error_rules_surface_typed_fault_errors() {
+    let _g = lock();
+    let _d = Disarm;
+    let piped: ExecSpec = "cpu-gemm:pipe2".parse().unwrap();
+    let pe = Engine::synthetic("lenet5", EngineConfig::for_spec(piped), 7).unwrap();
+    let net = pe.network().clone();
+    let x = synth::random_frames(4, net.in_c, net.in_h, net.in_w, 7);
+    faults::arm("seed=2:queue.stall=err@1".parse().unwrap());
+    let err = pe.infer_batch(&x).expect_err("err rule on every hop must fail the batch");
+    faults::disarm();
+    let fault = err
+        .downcast_ref::<FaultError>()
+        .unwrap_or_else(|| panic!("expected FaultError, got: {err:#}"));
+    assert_eq!(fault.site, faults::SITE_QUEUE_STALL);
+    // Disarmed, the same engine serves the same batch cleanly.
+    assert!(pe.infer_batch(&x).is_ok(), "engine must recover once disarmed");
+}

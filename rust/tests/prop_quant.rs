@@ -143,7 +143,9 @@ fn q8_forward_is_bit_identical_across_tile_configs() {
     let mut rng = Pcg::seeded(7);
     let x = Tensor::new(vec![3, 1, 28, 28], rng.normal_vec(3 * 28 * 28, 0.5));
     let seq = cpu::forward_q8(&net, &packed, &x, KernelOpts::seq()).unwrap();
-    let tiled = cpu::forward_q8(&net, &packed, &x, KernelOpts { threads: 8, tile: 16 }).unwrap();
+    let tiled =
+        cpu::forward_q8(&net, &packed, &x, KernelOpts { threads: 8, tile: 16, pipeline: true })
+            .unwrap();
     assert_eq!(seq, tiled, "integer accumulation must make tiling invisible");
 }
 
