@@ -1,0 +1,348 @@
+//! Band-disjointness certification.
+//!
+//! Every parallel kernel in `rust/src/kernels/` writes its output
+//! through a raw pointer shared across the thread pool; the safety
+//! argument is always the same — *each band's output range is disjoint
+//! from every other band's, in-bounds, and the bands cover the
+//! surface*.  This pass makes that argument a checked one: for each
+//! banded dispatch a plan implies (f32 GEMM column tiles, q8 GEMM row
+//! bands, Winograd row bands, direct-conv planes, pool/LRN row bands,
+//! fused conv→tail stage bands), it replicates the kernel's band
+//! arithmetic, enumerates the concrete ranges for a sweep of
+//! [`KernelOpts`] (plus the spec's own threads/tile), and proves
+//! disjointness ([`ALIAS001`]), bounds ([`ALIAS002`]) and coverage
+//! ([`ALIAS003`]) with [`check_bands`].  The `// SAFETY:` comments on
+//! the kernel `unsafe` blocks cite this invariant by code.
+
+use super::{Diagnostic, Location, Pass, VerifyContext};
+use crate::coordinator::plan::LayerPlan;
+use crate::kernels::{row_bands, KernelOpts, KernelVariant};
+
+/// One violated band invariant, as found by [`check_bands`].
+#[derive(Debug, Clone)]
+pub struct BandViolation {
+    /// `ALIAS001` (overlap), `ALIAS002` (out of bounds) or `ALIAS003`
+    /// (coverage gap).
+    pub code: &'static str,
+    pub detail: String,
+}
+
+/// Check a set of half-open index ranges against a surface of `total`
+/// elements: every range in-bounds, pairwise disjoint, and together
+/// covering `[0, total)` exactly.  Empty ranges are ignored (the
+/// kernels skip them).
+pub fn check_bands(total: usize, bands: &[(usize, usize)]) -> Vec<BandViolation> {
+    let mut v = Vec::new();
+    let mut live: Vec<(usize, usize)> =
+        bands.iter().copied().filter(|(a, b)| a < b).collect();
+    for &(a, b) in &live {
+        if b > total {
+            v.push(BandViolation {
+                code: "ALIAS002",
+                detail: format!("band [{a}, {b}) exceeds surface of {total}"),
+            });
+        }
+    }
+    live.sort_unstable();
+    for w in live.windows(2) {
+        if w[1].0 < w[0].1 {
+            v.push(BandViolation {
+                code: "ALIAS001",
+                detail: format!(
+                    "bands [{}, {}) and [{}, {}) overlap",
+                    w[0].0, w[0].1, w[1].0, w[1].1
+                ),
+            });
+        }
+    }
+    let mut cursor = 0usize;
+    for &(a, b) in &live {
+        if a > cursor {
+            v.push(BandViolation {
+                code: "ALIAS003",
+                detail: format!("rows [{cursor}, {a}) are written by no band"),
+            });
+        }
+        cursor = cursor.max(b);
+    }
+    if cursor < total {
+        v.push(BandViolation {
+            code: "ALIAS003",
+            detail: format!("rows [{cursor}, {total}) are written by no band"),
+        });
+    }
+    v
+}
+
+/// f32 GEMM (`gemm_into`): parallel bands are *column* tiles of the
+/// `m x n` output; each band owns all rows of columns `[t*tile,
+/// (t+1)*tile)`.
+fn gemm_f32_bands(n: usize, opts: &KernelOpts) -> Vec<(usize, usize)> {
+    let tile = opts.tile.max(16);
+    let ntiles = n.div_ceil(tile.max(1)).max(1);
+    if !opts.parallel() || ntiles < 2 {
+        return vec![(0, n)];
+    }
+    (0..ntiles).map(|t| (t * tile, ((t + 1) * tile).min(n))).collect()
+}
+
+/// q8 GEMM (`gemm_q8_into`): parallel bands are row ranges of the
+/// `m`-row output.
+fn gemm_q8_bands(m: usize, opts: &KernelOpts) -> Vec<(usize, usize)> {
+    let units = (4 * opts.threads.max(1)).min(m);
+    if !opts.parallel() || units < 2 {
+        return vec![(0, m)];
+    }
+    let rows_per = m.div_ceil(units);
+    let ntiles = m.div_ceil(rows_per);
+    (0..ntiles).map(|t| (t * rows_per, ((t + 1) * rows_per).min(m))).collect()
+}
+
+/// Winograd F(2,3) (`frame_bands`): bands are even-aligned output-row
+/// ranges, two rows per F(2,3) tile row.
+fn winograd_bands(oh: usize, opts: &KernelOpts) -> Vec<(usize, usize)> {
+    let tiles_y = oh.div_ceil(2).max(1);
+    let (bands, band_tiles) = row_bands(1, tiles_y, opts.threads);
+    if !opts.parallel() || bands < 2 {
+        return vec![(0, oh)];
+    }
+    (0..bands)
+        .map(|t| (t * band_tiles * 2, ((t + 1) * band_tiles * 2).min(oh)))
+        .collect()
+}
+
+/// Row-banded plane kernels (pool/LRN/fused stages): `row_bands` over
+/// `rows`, identical for every plane.
+fn plane_row_bands(planes: usize, rows: usize, opts: &KernelOpts) -> Vec<(usize, usize)> {
+    let (bands, band_rows) = row_bands(planes.max(1), rows, opts.threads);
+    (0..bands).map(|t| (t * band_rows, (t * band_rows + band_rows).min(rows))).collect()
+}
+
+/// The `KernelOpts` sweep a plan is certified under: a spread of
+/// thread counts and tile widths, always including the spec's own.
+fn sweep(ctx: &VerifyContext<'_>) -> Vec<KernelOpts> {
+    let base = ctx.opts();
+    let mut threads = vec![1usize, 2, 3, 4, 8, 16, base.threads];
+    threads.sort_unstable();
+    threads.dedup();
+    let mut tiles = vec![16usize, 64, base.tile];
+    tiles.sort_unstable();
+    tiles.dedup();
+    let mut v = Vec::new();
+    for &t in &threads {
+        for &tile in &tiles {
+            v.push(KernelOpts { threads: t, tile, pipeline: false });
+        }
+    }
+    v
+}
+
+fn report(
+    out: &mut Vec<Diagnostic>,
+    loc: &Location,
+    kernel: &str,
+    opts: &KernelOpts,
+    violations: Vec<BandViolation>,
+) {
+    for bv in violations {
+        out.push(Diagnostic::error(
+            bv.code,
+            loc.clone(),
+            format!(
+                "{kernel} banding (threads={}, tile={}): {}",
+                opts.threads, opts.tile, bv.detail
+            ),
+        ));
+    }
+}
+
+pub struct BandDisjointnessPass;
+
+impl Pass for BandDisjointnessPass {
+    fn name(&self) -> &'static str {
+        "band-disjointness"
+    }
+
+    fn codes(&self) -> &'static [&'static str] {
+        &["ALIAS001", "ALIAS002", "ALIAS003"]
+    }
+
+    fn run(&self, ctx: &VerifyContext<'_>, out: &mut Vec<Diagnostic>) {
+        let net = ctx.net;
+        let plan = ctx.plan;
+        let shapes = net.shapes();
+        let batch = ctx.batch();
+        let configs = sweep(ctx);
+
+        for (li, lp) in plan.layers.iter().enumerate().take(net.layers.len()) {
+            let loc = Location::layer(&net.name, lp.name());
+            let (_ic, ih, _iw) = shapes[li].1;
+            let (oc, oh, ow) = shapes[li + 1].1;
+            for opts in &configs {
+                match lp {
+                    LayerPlan::ConvCpu { spec, variant, .. } => {
+                        if super::shape::conv_degenerate(spec).is_some() {
+                            continue;
+                        }
+                        match variant {
+                            KernelVariant::Im2col => {
+                                // GEMM output is nk x (oh*ow); bands tile columns.
+                                let cols = spec.out_h() * spec.out_w();
+                                report(
+                                    out,
+                                    &loc,
+                                    "im2col-gemm",
+                                    opts,
+                                    check_bands(cols, &gemm_f32_bands(cols, opts)),
+                                );
+                            }
+                            KernelVariant::Winograd => {
+                                report(
+                                    out,
+                                    &loc,
+                                    "winograd",
+                                    opts,
+                                    check_bands(spec.out_h(), &winograd_bands(spec.out_h(), opts)),
+                                );
+                            }
+                            KernelVariant::Direct => {
+                                // One plane per (frame, filter); each owns
+                                // its full oh*ow slice — trivially a
+                                // partition of [0, planes).
+                                let planes = batch * spec.nk;
+                                let bands: Vec<_> = (0..planes).map(|p| (p, p + 1)).collect();
+                                report(out, &loc, "direct-conv", opts, check_bands(planes, &bands));
+                            }
+                        }
+                    }
+                    LayerPlan::ConvCpuQ8 { spec, .. } => {
+                        if super::shape::conv_degenerate(spec).is_some() {
+                            continue;
+                        }
+                        report(
+                            out,
+                            &loc,
+                            "q8-gemm",
+                            opts,
+                            check_bands(spec.nk, &gemm_q8_bands(spec.nk, opts)),
+                        );
+                    }
+                    LayerPlan::Pool { .. } => {
+                        report(
+                            out,
+                            &loc,
+                            "pool",
+                            opts,
+                            check_bands(oh, &plane_row_bands(batch * oc, oh, opts)),
+                        );
+                    }
+                    LayerPlan::Lrn { .. } => {
+                        report(
+                            out,
+                            &loc,
+                            "lrn",
+                            opts,
+                            check_bands(ih, &plane_row_bands(batch * oc, ih, opts)),
+                        );
+                    }
+                    LayerPlan::FcCpu { tiled, .. } => {
+                        if *tiled {
+                            report(
+                                out,
+                                &loc,
+                                "fc-gemm",
+                                opts,
+                                check_bands(oc, &gemm_f32_bands(oc, opts)),
+                            );
+                        }
+                    }
+                    LayerPlan::FcCpuQ8 { .. } => {
+                        // q8 FC GEMM rows are the batch frames.
+                        report(
+                            out,
+                            &loc,
+                            "fc-q8-gemm",
+                            opts,
+                            check_bands(batch, &gemm_q8_bands(batch, opts)),
+                        );
+                    }
+                    LayerPlan::ConvAccel { .. } | LayerPlan::FcAccel { .. } => {}
+                }
+            }
+        }
+
+        // Fused stages: the conv→tail schedule bands the *final*
+        // surface rows; the tail-only schedule bands (frame, band)
+        // units over the final surface.
+        for st in &ctx.stages {
+            if !st.is_fused() || st.end > plan.layers.len() || st.end >= shapes.len() {
+                continue;
+            }
+            if plan.stage_tail_ops(st).is_none() {
+                continue; // STAGE002 already reported
+            }
+            let (_, fh, _) = shapes[st.end].1;
+            let loc = Location::stage(&net.name, &plan.stage_name(st));
+            let conv_led = matches!(
+                plan.layers[st.start],
+                LayerPlan::ConvCpu { .. } | LayerPlan::ConvCpuQ8 { .. }
+            );
+            for opts in &configs {
+                let bands = if conv_led {
+                    plane_row_bands(1, fh, opts)
+                } else {
+                    plane_row_bands(batch, fh, opts)
+                };
+                report(out, &loc, "fused-stage", opts, check_bands(fh, &bands));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clean_partitions_pass() {
+        assert!(check_bands(10, &[(0, 4), (4, 8), (8, 10)]).is_empty());
+        assert!(check_bands(7, &[(0, 7)]).is_empty());
+        // Empty bands are skipped, as kernels do.
+        assert!(check_bands(4, &[(0, 4), (4, 4)]).is_empty());
+    }
+
+    #[test]
+    fn overlap_is_alias001() {
+        let v = check_bands(10, &[(0, 5), (4, 10)]);
+        assert!(v.iter().any(|b| b.code == "ALIAS001"), "{v:?}");
+    }
+
+    #[test]
+    fn out_of_bounds_is_alias002() {
+        let v = check_bands(8, &[(0, 4), (4, 9)]);
+        assert!(v.iter().any(|b| b.code == "ALIAS002"), "{v:?}");
+    }
+
+    #[test]
+    fn gap_is_alias003() {
+        let v = check_bands(10, &[(0, 4), (6, 10)]);
+        assert!(v.iter().any(|b| b.code == "ALIAS003"), "{v:?}");
+        let v = check_bands(10, &[(0, 8)]);
+        assert!(v.iter().any(|b| b.code == "ALIAS003"), "{v:?}");
+    }
+
+    #[test]
+    fn kernel_band_enumerators_partition_for_a_sweep() {
+        for threads in [1, 2, 3, 4, 7, 8, 16] {
+            for tile in [16, 64] {
+                let opts = KernelOpts { threads, tile, pipeline: false };
+                for n in [1usize, 5, 16, 63, 64, 65, 784, 3025] {
+                    assert!(check_bands(n, &gemm_f32_bands(n, &opts)).is_empty());
+                    assert!(check_bands(n, &gemm_q8_bands(n, &opts)).is_empty());
+                    assert!(check_bands(n, &winograd_bands(n, &opts)).is_empty());
+                    assert!(check_bands(n, &plane_row_bands(3, n, &opts)).is_empty());
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,162 @@
+//! Capability/spec consistency and streamability certification.
+//!
+//! [`CapabilityPass`] checks every placement against what its backend
+//! and the serving spec actually admit: plan-entry kind vs network
+//! layer kind (`CAP001`), accelerator layers in a batch>1 plan
+//! (`CAP002` — the accel backends dispatch whole-batch artifacts with
+//! `max_batch=1`), q8 layers admitted while the spec pins f32
+//! precision (`CAP003` — the guardrail verdict only exists under
+//! `Q8Opt`/`Q8Force`), Winograd on ineligible shapes (`CAP004` — the
+//! F(2,3) lowering is only valid for 3x3 stride-1 convs) and Winograd
+//! without the spec's `:wino` opt-in (`CAP005`).
+//!
+//! [`StreamabilityPass`] pins the runtime's barrier-vs-stream decision
+//! to one predicate: a plan is streamable iff every layer is
+//! [`crate::coordinator::plan::LayerPlan::frame_independent`].  Any
+//! externally-claimed verdict that disagrees with the recomputed one
+//! is `STREAM001`; a spec that asks for `:pipe<d>` on a plan that must
+//! barrier gets an explanatory `STREAM002` note naming the blocking
+//! layer.
+
+use super::{Diagnostic, Location, Pass, VerifyContext};
+use crate::coordinator::plan::LayerPlan;
+use crate::kernels::{winograd_supported, KernelVariant};
+use crate::session::Precision;
+
+fn plan_kind(lp: &LayerPlan) -> &'static str {
+    match lp {
+        LayerPlan::ConvAccel { .. } | LayerPlan::ConvCpu { .. } | LayerPlan::ConvCpuQ8 { .. } => {
+            "conv"
+        }
+        LayerPlan::Pool { .. } => "pool",
+        LayerPlan::Lrn { .. } => "lrn",
+        LayerPlan::FcAccel { .. } | LayerPlan::FcCpu { .. } | LayerPlan::FcCpuQ8 { .. } => "fc",
+    }
+}
+
+pub struct CapabilityPass;
+
+impl Pass for CapabilityPass {
+    fn name(&self) -> &'static str {
+        "capability"
+    }
+
+    fn codes(&self) -> &'static [&'static str] {
+        &["CAP001", "CAP002", "CAP003", "CAP004", "CAP005"]
+    }
+
+    fn run(&self, ctx: &VerifyContext<'_>, out: &mut Vec<Diagnostic>) {
+        let net = ctx.net;
+        let plan = ctx.plan;
+        let batch = ctx.batch();
+
+        for (li, lp) in plan.layers.iter().enumerate().take(net.layers.len()) {
+            let loc = Location::layer(&net.name, lp.name());
+            let want = net.layers[li].kind();
+            let got = plan_kind(lp);
+            if want != got {
+                out.push(Diagnostic::error(
+                    "CAP001",
+                    loc.clone(),
+                    format!("network layer is {want:?} but plan lowers it as {got:?}"),
+                ));
+            }
+            if lp.on_accel() && batch > 1 {
+                out.push(Diagnostic::error(
+                    "CAP002",
+                    loc.clone().with_backend("accel"),
+                    format!(
+                        "accelerator placement with batch {batch}: accel artifacts \
+                         dispatch one frame (max_batch=1)"
+                    ),
+                ));
+            }
+            if lp.on_q8() {
+                if let Some(spec) = ctx.spec {
+                    if spec.precision() == Precision::F32 {
+                        out.push(Diagnostic::error(
+                            "CAP003",
+                            loc.clone().with_backend(crate::CPU_GEMM_Q8),
+                            "q8 placement while the spec pins f32 precision: no \
+                             guardrail verdict admits this layer"
+                                .into(),
+                        ));
+                    }
+                }
+            }
+            if let LayerPlan::ConvCpu { spec, variant: KernelVariant::Winograd, .. } = lp {
+                if !winograd_supported(spec) {
+                    out.push(Diagnostic::error(
+                        "CAP004",
+                        loc.clone().with_backend("cpu-wino"),
+                        format!(
+                            "Winograd F(2,3) on an ineligible shape ({}x{} stride {})",
+                            spec.kh, spec.kw, spec.stride
+                        ),
+                    ));
+                }
+                if let Some(espec) = ctx.spec {
+                    if !espec.winograd() {
+                        out.push(Diagnostic::error(
+                            "CAP005",
+                            loc.clone().with_backend("cpu-wino"),
+                            "Winograd placement without the spec's :wino opt-in".into(),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+}
+
+pub struct StreamabilityPass;
+
+impl Pass for StreamabilityPass {
+    fn name(&self) -> &'static str {
+        "streamability"
+    }
+
+    fn codes(&self) -> &'static [&'static str] {
+        &["STREAM001", "STREAM002"]
+    }
+
+    fn run(&self, ctx: &VerifyContext<'_>, out: &mut Vec<Diagnostic>) {
+        let plan = ctx.plan;
+        let recomputed = plan.streamable();
+        let blocker = plan.streaming_blocker().map(|l| l.name().to_string());
+
+        if let Some(claimed) = ctx.claimed_streamable {
+            if claimed != recomputed {
+                let detail = match (&blocker, plan.barrier_reason()) {
+                    (Some(name), Some(reason)) => format!(" ({name}: {reason})"),
+                    _ => String::new(),
+                };
+                out.push(Diagnostic::error(
+                    "STREAM001",
+                    Location::net(&plan.net),
+                    format!(
+                        "claimed streamable={claimed} but every-layer \
+                         frame_independent derives {recomputed}{detail}"
+                    ),
+                ));
+            }
+        }
+
+        if let Some(spec) = ctx.spec {
+            if spec.pipeline().is_some() && !recomputed {
+                let reason = plan
+                    .barrier_reason()
+                    .unwrap_or_else(|| "a layer is not frame-independent".into());
+                let loc = match &blocker {
+                    Some(name) => Location::layer(&plan.net, name),
+                    None => Location::net(&plan.net),
+                };
+                out.push(Diagnostic::note(
+                    "STREAM002",
+                    loc,
+                    format!("spec asks for pipelined streaming but the plan barriers: {reason}"),
+                ));
+            }
+        }
+    }
+}

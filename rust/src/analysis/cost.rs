@@ -1,0 +1,161 @@
+//! Cost-model invariant and deadline-feasibility checks.
+//!
+//! [`CostModelPass`] certifies the partition report's accounting: the
+//! auto plan never predicts worse than any admissible fixed baseline
+//! (`COST001` — the DP's core optimality contract), per-layer costs
+//! and credits are nonnegative and the report's total re-derives from
+//! its own choice vector (`COST002`), and every credit is bounded by
+//! the term it discounts — the fusion credit by the boundary's
+//! round-trip traffic, the pipeline overlap credit by the layer's own
+//! compute cost (`COST003`, a credit larger than its term would let
+//! the DP fabricate negative work).
+//!
+//! [`DeadlinePass`] warns (`DL001`) when the spec carries a `:dl<ms>`
+//! deadline the predicted per-dispatch latency already exceeds — the
+//! plan is legal but every request on it is born expiring.
+//!
+//! Both passes need a [`super::CostContext`] (registry + device +
+//! report); without one they emit nothing.
+
+use super::{Diagnostic, Location, Pass, VerifyContext};
+use crate::delegate::Partitioner;
+use crate::simulator::cost;
+
+const REL_TOL: f64 = 1e-9;
+const ABS_TOL: f64 = 1e-15;
+
+/// `a` exceeds `b` beyond the DP's own float tolerance.
+fn exceeds(a: f64, b: f64) -> bool {
+    a > b * (1.0 + REL_TOL) + ABS_TOL
+}
+
+pub struct CostModelPass;
+
+impl Pass for CostModelPass {
+    fn name(&self) -> &'static str {
+        "cost-model"
+    }
+
+    fn codes(&self) -> &'static [&'static str] {
+        &["COST001", "COST002", "COST003"]
+    }
+
+    fn run(&self, ctx: &VerifyContext<'_>, out: &mut Vec<Diagnostic>) {
+        let Some(cc) = &ctx.cost else { return };
+        let net = ctx.net;
+        let pipelined = ctx.spec.is_some_and(|s| s.pipeline().is_some());
+        let p = Partitioner::new(cc.registry, &cc.dev)
+            .with_batch(ctx.batch())
+            .with_pipeline(pipelined);
+
+        // COST001: auto <= every fixed baseline this registry admits.
+        for method in crate::METHODS {
+            if let Some(fixed) = p.predicted_fixed(net, method) {
+                if exceeds(cc.report.predicted_s, fixed) {
+                    out.push(Diagnostic::error(
+                        "COST001",
+                        Location::net(&net.name).with_backend(method),
+                        format!(
+                            "auto plan predicts {:.6e}s but fixed {method} predicts {fixed:.6e}s",
+                            cc.report.predicted_s
+                        ),
+                    ));
+                }
+            }
+        }
+
+        // COST002: the reported total re-derives from the choice vector.
+        if cc.report.choice.len() == net.layers.len() {
+            let recomputed = p.cost_of(net, &cc.report.choice);
+            if exceeds(cc.report.predicted_s, recomputed)
+                || exceeds(recomputed, cc.report.predicted_s)
+            {
+                out.push(Diagnostic::error(
+                    "COST002",
+                    Location::net(&net.name),
+                    format!(
+                        "report total {:.6e}s disagrees with re-accounting {recomputed:.6e}s",
+                        cc.report.predicted_s
+                    ),
+                ));
+            }
+        } else {
+            out.push(Diagnostic::error(
+                "COST002",
+                Location::net(&net.name),
+                format!(
+                    "choice vector has {} entries for {} layers",
+                    cc.report.choice.len(),
+                    net.layers.len()
+                ),
+            ));
+        }
+
+        let shapes = net.shapes();
+        for (li, a) in cc.report.assignments.iter().enumerate().take(net.layers.len()) {
+            let loc = Location::layer(&net.name, &a.layer).with_backend(&a.backend);
+            for (what, v) in
+                [("cost", a.cost_s), ("swap", a.swap_s), ("fuse credit", a.fuse_s), ("pipeline credit", a.pipe_s)]
+            {
+                if v < -ABS_TOL {
+                    out.push(Diagnostic::error(
+                        "COST002",
+                        loc.clone(),
+                        format!("{what} is negative ({v:.6e}s)"),
+                    ));
+                }
+            }
+            // COST003: each credit stays within the term it discounts.
+            let fuse_cap = cost::fusion_saving(&cc.dev, shapes[li].1);
+            if exceeds(a.fuse_s, fuse_cap) {
+                out.push(Diagnostic::error(
+                    "COST003",
+                    loc.clone(),
+                    format!(
+                        "fusion credit {:.6e}s exceeds the boundary's round-trip traffic {fuse_cap:.6e}s",
+                        a.fuse_s
+                    ),
+                ));
+            }
+            if exceeds(a.pipe_s, a.cost_s) {
+                out.push(Diagnostic::error(
+                    "COST003",
+                    loc,
+                    format!(
+                        "pipeline credit {:.6e}s exceeds the layer cost {:.6e}s it overlaps",
+                        a.pipe_s, a.cost_s
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+pub struct DeadlinePass;
+
+impl Pass for DeadlinePass {
+    fn name(&self) -> &'static str {
+        "deadline"
+    }
+
+    fn codes(&self) -> &'static [&'static str] {
+        &["DL001"]
+    }
+
+    fn run(&self, ctx: &VerifyContext<'_>, out: &mut Vec<Diagnostic>) {
+        let Some(spec) = ctx.spec else { return };
+        let Some(ms) = spec.deadline_ms() else { return };
+        let Some(cc) = &ctx.cost else { return };
+        let predicted_ms = cc.report.predicted_s * 1e3;
+        if predicted_ms > ms as f64 {
+            out.push(Diagnostic::warn(
+                "DL001",
+                Location::net(&ctx.net.name),
+                format!(
+                    "predicted latency {predicted_ms:.3}ms already exceeds the \
+                     spec's {ms}ms deadline: every request on this plan expires"
+                ),
+            ));
+        }
+    }
+}

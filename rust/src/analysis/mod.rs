@@ -1,0 +1,449 @@
+//! `analysis` — static verification passes over compiled execution
+//! plans.
+//!
+//! The repo *compiles* inference: the partitioner emits an
+//! [`ExecutionPlan`], fusion rewrites it into [`FusedStage`]s, and the
+//! pipelined runtime streams it through bounded queues.  A planning bug
+//! — a corrupted shape, a scratch buffer sized short, a
+//! non-`frame_independent` layer on the streamed path, a q8 layer
+//! admitted past the guardrail — silently corrupts results or
+//! deadlocks under load.  This module turns those implicit invariants
+//! into *checked* ones: a [`Pass`] registry walks the compiled
+//! artifacts and emits typed [`Diagnostic`]s with stable codes, so the
+//! same verdicts surface identically from the `lint` CLI subcommand,
+//! `plan --verify`, and the debug-build [`crate::coordinator::Engine`]
+//! hook that verifies every plan before first execution.
+//!
+//! ## Pass catalog
+//!
+//! | pass | codes | checks |
+//! |------|-------|--------|
+//! | [`ShapeFlowPass`] | `SHAPE001`–`SHAPE004`, `STAGE001`–`STAGE002` | re-derived per-layer shape flow, stage partition + composition |
+//! | [`ScratchPass`] | `SCRATCH001`–`SCRATCH002` | fused-stage conv scratch and ping-pong capacity vs an independent re-derivation |
+//! | [`BandDisjointnessPass`] | `ALIAS001`–`ALIAS003` | per-band output ranges of every banded kernel dispatch are disjoint, in-bounds, covering |
+//! | [`CapabilityPass`] | `CAP001`–`CAP005` | backend/variant/precision/batch consistency with the spec and guardrails |
+//! | [`StreamabilityPass`] | `STREAM001`–`STREAM002` | the streamability verdict is exactly the all-`frame_independent` predicate |
+//! | [`CostModelPass`] | `COST001`–`COST003` | auto ≤ every fixed baseline; credits nonnegative and ≤ the terms they discount |
+//! | [`DeadlinePass`] | `DL001` | predicted latency vs the spec's `:dl<ms>` deadline |
+//!
+//! ## Adding a pass
+//!
+//! Implement [`Pass`] (name + stable codes + `run`), add it to
+//! [`default_passes`], document its codes here and in the README, and
+//! pin at least one violating mutation in `tests/prop_verify.rs`.
+
+pub mod bands;
+pub mod capability;
+pub mod cost;
+pub mod shape;
+
+use std::fmt;
+
+use crate::coordinator::plan::{ExecutionPlan, FusedStage};
+use crate::delegate::{PartitionReport, Registry};
+use crate::kernels::{KernelOpts, ScratchPlan};
+use crate::model::network::Network;
+use crate::session::ExecSpec;
+use crate::simulator::device::DeviceSpec;
+use crate::util::json::Json;
+
+pub use bands::{check_bands, BandDisjointnessPass, BandViolation};
+pub use capability::{CapabilityPass, StreamabilityPass};
+pub use cost::{CostModelPass, DeadlinePass};
+pub use shape::{ScratchPass, ShapeFlowPass};
+
+/// How bad a finding is.  `Error` findings fail `lint` (nonzero exit)
+/// and the debug-build engine hook; `Warn`/`Note` inform.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Note,
+    Warn,
+    Error,
+}
+
+impl Severity {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Severity::Note => "note",
+            Severity::Warn => "warn",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// Where a diagnostic points: always a net, optionally narrowed to a
+/// layer, a fused stage, and/or a backend.
+#[derive(Debug, Clone, Default)]
+pub struct Location {
+    pub net: String,
+    pub layer: Option<String>,
+    pub stage: Option<String>,
+    pub backend: Option<String>,
+}
+
+impl Location {
+    pub fn net(net: &str) -> Location {
+        Location { net: net.to_string(), ..Default::default() }
+    }
+
+    pub fn layer(net: &str, layer: &str) -> Location {
+        Location { layer: Some(layer.to_string()), ..Location::net(net) }
+    }
+
+    pub fn stage(net: &str, stage: &str) -> Location {
+        Location { stage: Some(stage.to_string()), ..Location::net(net) }
+    }
+
+    pub fn with_backend(mut self, backend: &str) -> Location {
+        self.backend = Some(backend.to_string());
+        self
+    }
+}
+
+impl fmt::Display for Location {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.net)?;
+        if let Some(l) = &self.layer {
+            write!(f, "/{l}")?;
+        }
+        if let Some(s) = &self.stage {
+            write!(f, "[{s}]")?;
+        }
+        if let Some(b) = &self.backend {
+            write!(f, "@{b}")?;
+        }
+        Ok(())
+    }
+}
+
+/// One finding: a stable code, a severity, a location, and a message
+/// explaining the violated invariant.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    /// Stable machine-matchable code (e.g. `SHAPE001`, `ALIAS003`).
+    pub code: &'static str,
+    pub severity: Severity,
+    pub location: Location,
+    pub message: String,
+}
+
+impl Diagnostic {
+    pub fn error(code: &'static str, location: Location, message: String) -> Diagnostic {
+        Diagnostic { code, severity: Severity::Error, location, message }
+    }
+
+    pub fn warn(code: &'static str, location: Location, message: String) -> Diagnostic {
+        Diagnostic { code, severity: Severity::Warn, location, message }
+    }
+
+    pub fn note(code: &'static str, location: Location, message: String) -> Diagnostic {
+        Diagnostic { code, severity: Severity::Note, location, message }
+    }
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}[{}] {}: {}",
+            self.severity.as_str(),
+            self.code,
+            self.location,
+            self.message
+        )
+    }
+}
+
+/// Cost-model context for [`CostModelPass`] / [`DeadlinePass`]: the
+/// registry and device the partition was solved against, plus the
+/// report whose accounting is being certified.  Plan-intrinsic passes
+/// run without it (the debug-build engine hook verifies plans it did
+/// not partition itself).
+pub struct CostContext<'a> {
+    pub registry: &'a Registry,
+    pub dev: DeviceSpec,
+    pub report: &'a PartitionReport,
+}
+
+/// Everything a pass may look at.  Built with [`VerifyContext::new`]
+/// plus builder methods; optional fields gate the passes that need
+/// them (no spec → no precision/deadline checks, no cost context → no
+/// cost-model checks).
+pub struct VerifyContext<'a> {
+    pub net: &'a Network,
+    pub plan: &'a ExecutionPlan,
+    /// The stage decomposition under verification (defaults to
+    /// [`ExecutionPlan::fuse`]; [`VerifyContext::with_spec`] honors the
+    /// spec's `:nofuse`).
+    pub stages: Vec<FusedStage>,
+    pub spec: Option<&'a ExecSpec>,
+    /// An externally-claimed streamability verdict to certify against
+    /// the recomputed predicate (None = nothing claimed, the recomputed
+    /// value is trusted).  `plan --json` consumers and the property
+    /// tests route their verdict through here so the pass and the
+    /// runtime agree on ONE predicate.
+    pub claimed_streamable: Option<bool>,
+    /// Externally-claimed scratch plans per stage index, certified
+    /// against an independent capacity re-derivation (None = certify
+    /// the kernel's own [`crate::kernels::stage_scratch_plan`]).
+    pub scratch: Option<Vec<(usize, ScratchPlan)>>,
+    pub cost: Option<CostContext<'a>>,
+}
+
+impl<'a> VerifyContext<'a> {
+    pub fn new(net: &'a Network, plan: &'a ExecutionPlan) -> VerifyContext<'a> {
+        VerifyContext {
+            net,
+            plan,
+            stages: plan.fuse(),
+            spec: None,
+            claimed_streamable: None,
+            scratch: None,
+            cost: None,
+        }
+    }
+
+    /// Attach the serving spec; re-derives the stage decomposition from
+    /// its fusion knob so the verified stages are the executed ones.
+    pub fn with_spec(mut self, spec: &'a ExecSpec) -> VerifyContext<'a> {
+        self.stages =
+            if spec.fusion() { self.plan.fuse() } else { self.plan.unfused_stages() };
+        self.spec = Some(spec);
+        self
+    }
+
+    /// Verify an explicit stage decomposition instead of re-deriving
+    /// one (the engine hook passes the stages it will actually run).
+    pub fn with_stages(mut self, stages: Vec<FusedStage>) -> VerifyContext<'a> {
+        self.stages = stages;
+        self
+    }
+
+    /// Claim a streamability verdict for [`StreamabilityPass`] to
+    /// certify.
+    pub fn claiming_streamable(mut self, claim: bool) -> VerifyContext<'a> {
+        self.claimed_streamable = Some(claim);
+        self
+    }
+
+    /// Claim per-stage scratch plans for [`ScratchPass`] to certify.
+    pub fn with_scratch(mut self, scratch: Vec<(usize, ScratchPlan)>) -> VerifyContext<'a> {
+        self.scratch = Some(scratch);
+        self
+    }
+
+    /// Attach the cost-model context, enabling [`CostModelPass`] and
+    /// [`DeadlinePass`].
+    pub fn with_cost(
+        mut self,
+        registry: &'a Registry,
+        dev: DeviceSpec,
+        report: &'a PartitionReport,
+    ) -> VerifyContext<'a> {
+        self.cost = Some(CostContext { registry, dev, report });
+        self
+    }
+
+    /// Frames per dispatch the plan must serve (spec batch, default 1).
+    pub fn batch(&self) -> usize {
+        self.spec.map_or(1, |s| s.batch())
+    }
+
+    /// The kernel options the engine would execute this plan with:
+    /// the tiled defaults overridden by the spec's `:threads`/`:tile`.
+    pub fn opts(&self) -> KernelOpts {
+        let mut opts = KernelOpts::tiled();
+        if let Some(spec) = self.spec {
+            if let Some(t) = spec.threads() {
+                opts.threads = t;
+            }
+            if let Some(t) = spec.tile() {
+                opts.tile = t;
+            }
+            opts.pipeline = spec.pipeline().is_some();
+        }
+        opts
+    }
+}
+
+/// One static check over a [`VerifyContext`].
+pub trait Pass {
+    /// Short stable pass name (for reports and `--json`).
+    fn name(&self) -> &'static str;
+
+    /// The stable diagnostic codes this pass can emit.
+    fn codes(&self) -> &'static [&'static str];
+
+    /// Append findings to `out`.  A pass that lacks its required
+    /// context (e.g. no cost context) emits nothing.
+    fn run(&self, ctx: &VerifyContext<'_>, out: &mut Vec<Diagnostic>);
+}
+
+/// The shipped pass suite, in execution order.
+pub fn default_passes() -> Vec<Box<dyn Pass>> {
+    vec![
+        Box::new(ShapeFlowPass),
+        Box::new(ScratchPass),
+        Box::new(BandDisjointnessPass),
+        Box::new(CapabilityPass),
+        Box::new(StreamabilityPass),
+        Box::new(CostModelPass),
+        Box::new(DeadlinePass),
+    ]
+}
+
+/// Run every default pass over `ctx` and collect the findings.
+pub fn verify(ctx: &VerifyContext<'_>) -> Report {
+    let mut diagnostics = Vec::new();
+    for pass in default_passes() {
+        pass.run(ctx, &mut diagnostics);
+    }
+    Report {
+        net: ctx.plan.net.clone(),
+        method: ctx.plan.method.clone(),
+        diagnostics,
+    }
+}
+
+/// The collected verdict of one verification run.
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub net: String,
+    pub method: String,
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl Report {
+    pub fn has_errors(&self) -> bool {
+        self.diagnostics.iter().any(|d| d.severity == Severity::Error)
+    }
+
+    pub fn count(&self, sev: Severity) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == sev).count()
+    }
+
+    /// The distinct codes present, in emission order.
+    pub fn codes(&self) -> Vec<&'static str> {
+        let mut seen = Vec::new();
+        for d in &self.diagnostics {
+            if !seen.contains(&d.code) {
+                seen.push(d.code);
+            }
+        }
+        seen
+    }
+
+    /// Does any diagnostic carry `code`?
+    pub fn has_code(&self, code: &str) -> bool {
+        self.diagnostics.iter().any(|d| d.code == code)
+    }
+
+    /// Human-readable multi-line rendering (one line per diagnostic,
+    /// or a clean-verdict line).
+    pub fn render(&self) -> String {
+        if self.diagnostics.is_empty() {
+            return format!("{} x {}: clean", self.net, self.method);
+        }
+        let mut s = String::new();
+        for d in &self.diagnostics {
+            s.push_str(&d.to_string());
+            s.push('\n');
+        }
+        s.pop();
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("net", Json::str(&self.net)),
+            ("method", Json::str(&self.method)),
+            ("errors", Json::num(self.count(Severity::Error) as f64)),
+            ("warnings", Json::num(self.count(Severity::Warn) as f64)),
+            ("notes", Json::num(self.count(Severity::Note) as f64)),
+            (
+                "diagnostics",
+                Json::arr(
+                    self.diagnostics
+                        .iter()
+                        .map(|d| {
+                            Json::obj(vec![
+                                ("code", Json::str(d.code)),
+                                ("severity", Json::str(d.severity.as_str())),
+                                ("location", Json::str(&d.location.to_string())),
+                                ("message", Json::str(&d.message)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    fn empty_manifest() -> crate::model::manifest::Manifest {
+        crate::model::manifest::Manifest::synthetic()
+    }
+
+    #[test]
+    fn clean_plan_verifies_clean() {
+        let net = zoo::lenet5();
+        let plan =
+            ExecutionPlan::build(&empty_manifest(), &net, crate::CPU_GEMM).unwrap();
+        let report = verify(&VerifyContext::new(&net, &plan));
+        assert!(!report.has_errors(), "{}", report.render());
+        assert_eq!(report.count(Severity::Error), 0);
+    }
+
+    #[test]
+    fn severity_ordering_and_labels() {
+        assert!(Severity::Error > Severity::Warn);
+        assert!(Severity::Warn > Severity::Note);
+        assert_eq!(Severity::Error.as_str(), "error");
+    }
+
+    #[test]
+    fn location_renders_hierarchically() {
+        let loc = Location::layer("lenet5", "conv1").with_backend("cpu-gemm");
+        assert_eq!(loc.to_string(), "lenet5/conv1@cpu-gemm");
+        assert_eq!(Location::stage("alexnet", "conv1+pool1").to_string(), "alexnet[conv1+pool1]");
+    }
+
+    #[test]
+    fn report_json_carries_codes_and_counts() {
+        let mut report = Report {
+            net: "lenet5".into(),
+            method: "cpu-gemm".into(),
+            diagnostics: vec![Diagnostic::error(
+                "SHAPE001",
+                Location::layer("lenet5", "conv1"),
+                "test".into(),
+            )],
+        };
+        assert!(report.has_errors());
+        assert!(report.has_code("SHAPE001"));
+        let j = report.to_json();
+        assert_eq!(j.get("errors").as_usize(), Some(1));
+        report.diagnostics.clear();
+        assert!(report.render().contains("clean"));
+    }
+
+    #[test]
+    fn default_passes_cover_the_documented_catalog() {
+        let passes = default_passes();
+        assert_eq!(passes.len(), 7);
+        let codes: Vec<&str> = passes.iter().flat_map(|p| p.codes().iter().copied()).collect();
+        for code in [
+            "SHAPE001", "SHAPE002", "SHAPE003", "SHAPE004", "STAGE001", "STAGE002",
+            "SCRATCH001", "SCRATCH002", "ALIAS001", "ALIAS002", "ALIAS003", "CAP001",
+            "CAP002", "CAP003", "CAP004", "CAP005", "STREAM001", "STREAM002", "COST001",
+            "COST002", "COST003", "DL001",
+        ] {
+            assert!(codes.contains(&code), "missing {code}");
+        }
+    }
+}

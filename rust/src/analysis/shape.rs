@@ -1,0 +1,418 @@
+//! Shape/dtype-flow and fused-stage structure checks.
+//!
+//! [`ShapeFlowPass`] re-derives every layer's output shape from the
+//! network description alone and verifies the compiled plan agrees:
+//! conv specs (`SHAPE001`), FC dimensions (`SHAPE002`), degenerate
+//! conv geometry that would underflow the output-size arithmetic
+//! (`SHAPE003`), layer-list membership (`SHAPE004`), stage
+//! partitioning (`STAGE001`) and fused-stage composition plus stage
+//! output boundaries (`STAGE002`).
+//!
+//! [`ScratchPass`] certifies the fused-stage scratch accounting: the
+//! conv tile scratch (`SCRATCH001`) and the ping-pong intermediate
+//! capacity (`SCRATCH002`) claimed by
+//! [`crate::kernels::stage_scratch_plan`] (or by an
+//! externally-claimed plan under test) against an *independent*
+//! re-derivation of the banded row ranges — a deliberate second copy
+//! of the schedule math in `kernels/fuse.rs`, so a unilateral change
+//! to either side trips the pass.
+
+use super::{Diagnostic, Location, Pass, VerifyContext};
+use crate::coordinator::plan::LayerPlan;
+use crate::kernels::{row_bands, stage_scratch_plan, KernelOpts, KernelVariant, ScratchPlan, TailOp};
+use crate::model::network::{pool_out, ConvSpec};
+
+/// Why a conv spec cannot be shape-propagated (calling `out_h`/`out_w`
+/// on it would underflow or divide by zero).  `None` means the spec is
+/// well-formed.  Shared guard: every pass that derives conv output
+/// geometry must consult this first.
+pub(crate) fn conv_degenerate(spec: &ConvSpec) -> Option<String> {
+    if spec.stride == 0 {
+        return Some("stride is 0".into());
+    }
+    if spec.kh == 0 || spec.kw == 0 {
+        return Some(format!("kernel {}x{} has a zero extent", spec.kh, spec.kw));
+    }
+    if spec.in_h + 2 * spec.pad < spec.kh || spec.in_w + 2 * spec.pad < spec.kw {
+        return Some(format!(
+            "kernel {}x{} exceeds padded input {}x{}",
+            spec.kh,
+            spec.kw,
+            spec.in_h + 2 * spec.pad,
+            spec.in_w + 2 * spec.pad
+        ));
+    }
+    if spec.in_c == 0 || spec.nk == 0 {
+        return Some("zero input or output channels".into());
+    }
+    None
+}
+
+/// Is this plan entry a legal head of a *fused* stage?  Mirror of the
+/// fusion rewriter's (private) predicate — an independent copy, so the
+/// rewriter can't silently widen what it fuses without this pass
+/// noticing.
+fn fusable_head(lp: &LayerPlan) -> bool {
+    matches!(
+        lp,
+        LayerPlan::ConvCpu { variant: KernelVariant::Im2col | KernelVariant::Winograd, .. }
+            | LayerPlan::ConvCpuQ8 { .. }
+    )
+}
+
+fn fusable_tail(lp: &LayerPlan) -> bool {
+    matches!(lp, LayerPlan::Pool { .. } | LayerPlan::Lrn { .. })
+}
+
+fn op_out_hw(op: &TailOp, h: usize, w: usize) -> (usize, usize) {
+    match op {
+        TailOp::Lrn { .. } => (h, w),
+        TailOp::Pool { size, stride, .. } => {
+            (pool_out(h, *size, *stride), pool_out(w, *size, *stride))
+        }
+    }
+}
+
+fn op_in_rows(op: &TailOp, y0: usize, y1: usize, in_h: usize) -> (usize, usize) {
+    match op {
+        TailOp::Lrn { .. } => (y0, y1),
+        TailOp::Pool { size, stride, .. } => {
+            (y0 * stride, ((y1 - 1) * stride + size).min(in_h))
+        }
+    }
+}
+
+/// Independently re-derive the scratch capacities the fused schedule
+/// needs for `spec` + `ops` under `opts` (see module docs: a second
+/// copy of the band math, on purpose).
+pub(crate) fn required_scratch(
+    spec: &ConvSpec,
+    ops: &[TailOp],
+    opts: &KernelOpts,
+) -> ScratchPlan {
+    let (oh, ow) = (spec.out_h(), spec.out_w());
+    let mut levels = vec![(oh, ow)];
+    for op in ops {
+        let (h, w) = *levels.last().unwrap();
+        levels.push(op_out_hw(op, h, w));
+    }
+    let (fh, _) = *levels.last().unwrap();
+    let two_phase = ops
+        .iter()
+        .any(|o| matches!(o, TailOp::Pool { size, stride, .. } if stride < size));
+    let (bands, band_rows) = row_bands(1, fh, opts.threads);
+    let mut band_conv = 0usize;
+    let mut ping = [0usize; 2];
+    for t in 0..bands {
+        let y0 = t * band_rows;
+        let y1 = (y0 + band_rows).min(fh);
+        if y0 >= y1 {
+            continue;
+        }
+        let mut rows = vec![(0usize, 0usize); ops.len() + 1];
+        rows[ops.len()] = (y0, y1);
+        for i in (0..ops.len()).rev() {
+            let (s0, s1) = rows[i + 1];
+            rows[i] = op_in_rows(&ops[i], s0, s1, levels[i].0);
+        }
+        if !two_phase {
+            band_conv = band_conv.max(spec.nk * (rows[0].1 - rows[0].0) * levels[0].1);
+        }
+        for i in 0..ops.len().saturating_sub(1) {
+            let (s0, s1) = rows[i + 1];
+            ping[i % 2] = ping[i % 2].max(spec.nk * (s1 - s0) * levels[i + 1].1);
+        }
+    }
+    let conv_scratch = if two_phase { spec.nk * oh * ow } else { 0 };
+    ScratchPlan { two_phase, conv_scratch, band_conv, ping, bands, band_rows }
+}
+
+/// The conv spec of a fused-stage head on the CPU fused path, if any.
+fn head_spec(lp: &LayerPlan) -> Option<&ConvSpec> {
+    match lp {
+        LayerPlan::ConvCpu { spec, .. } | LayerPlan::ConvCpuQ8 { spec, .. } => Some(spec),
+        _ => None,
+    }
+}
+
+pub struct ShapeFlowPass;
+
+impl Pass for ShapeFlowPass {
+    fn name(&self) -> &'static str {
+        "shape-flow"
+    }
+
+    fn codes(&self) -> &'static [&'static str] {
+        &["SHAPE001", "SHAPE002", "SHAPE003", "SHAPE004", "STAGE001", "STAGE002"]
+    }
+
+    fn run(&self, ctx: &VerifyContext<'_>, out: &mut Vec<Diagnostic>) {
+        let net = ctx.net;
+        let plan = ctx.plan;
+        let shapes = net.shapes();
+
+        if plan.layers.len() != net.layers.len() {
+            out.push(Diagnostic::error(
+                "SHAPE004",
+                Location::net(&net.name),
+                format!(
+                    "plan has {} layers but network {} has {}",
+                    plan.layers.len(),
+                    net.name,
+                    net.layers.len()
+                ),
+            ));
+        }
+
+        for (li, lp) in plan.layers.iter().enumerate().take(net.layers.len()) {
+            let lname = net.layers[li].name();
+            if lp.name() != lname {
+                out.push(Diagnostic::error(
+                    "SHAPE004",
+                    Location::layer(&net.name, lname),
+                    format!("plan layer {} is named {:?}", li, lp.name()),
+                ));
+            }
+            let (ic, ih, iw) = shapes[li].1;
+            let (oc, oh, ow) = shapes[li + 1].1;
+            match lp {
+                LayerPlan::ConvAccel { spec, .. }
+                | LayerPlan::ConvCpu { spec, .. }
+                | LayerPlan::ConvCpuQ8 { spec, .. } => {
+                    if let Some(why) = conv_degenerate(spec) {
+                        out.push(Diagnostic::error(
+                            "SHAPE003",
+                            Location::layer(&net.name, lname),
+                            format!("degenerate conv geometry: {why}"),
+                        ));
+                        continue;
+                    }
+                    if (spec.in_c, spec.in_h, spec.in_w) != (ic, ih, iw) {
+                        out.push(Diagnostic::error(
+                            "SHAPE001",
+                            Location::layer(&net.name, lname),
+                            format!(
+                                "conv spec input {}x{}x{} but flow derives {}x{}x{}",
+                                spec.in_c, spec.in_h, spec.in_w, ic, ih, iw
+                            ),
+                        ));
+                    } else if (spec.nk, spec.out_h(), spec.out_w()) != (oc, oh, ow) {
+                        out.push(Diagnostic::error(
+                            "SHAPE001",
+                            Location::layer(&net.name, lname),
+                            format!(
+                                "conv spec output {}x{}x{} but flow derives {}x{}x{}",
+                                spec.nk,
+                                spec.out_h(),
+                                spec.out_w(),
+                                oc,
+                                oh,
+                                ow
+                            ),
+                        ));
+                    }
+                }
+                LayerPlan::Pool { size, stride, .. } => {
+                    let derived = (ic, pool_out(ih, *size, *stride), pool_out(iw, *size, *stride));
+                    if derived != (oc, oh, ow) {
+                        out.push(Diagnostic::error(
+                            "SHAPE001",
+                            Location::layer(&net.name, lname),
+                            format!(
+                                "pool {size}x{size}/{stride} maps {ih}x{iw} to {}x{} but flow derives {oh}x{ow}",
+                                derived.1, derived.2
+                            ),
+                        ));
+                    }
+                }
+                LayerPlan::FcAccel { d_in, d_out, .. } => {
+                    if *d_in != ic * ih * iw {
+                        out.push(Diagnostic::error(
+                            "SHAPE002",
+                            Location::layer(&net.name, lname),
+                            format!("fc d_in {} but flow derives {}", d_in, ic * ih * iw),
+                        ));
+                    }
+                    if *d_out != oc {
+                        out.push(Diagnostic::error(
+                            "SHAPE002",
+                            Location::layer(&net.name, lname),
+                            format!("fc d_out {d_out} but flow derives {oc}"),
+                        ));
+                    }
+                }
+                LayerPlan::Lrn { .. } | LayerPlan::FcCpu { .. } | LayerPlan::FcCpuQ8 { .. } => {}
+            }
+        }
+
+        // STAGE001: the stage list must partition the plan's layers
+        // contiguously and in order.
+        let n = plan.layers.len();
+        let mut cursor = 0usize;
+        let mut partition_ok = true;
+        for st in &ctx.stages {
+            if st.start != cursor || st.end <= st.start || st.end > n {
+                partition_ok = false;
+                break;
+            }
+            cursor = st.end;
+        }
+        if cursor != n {
+            partition_ok = false;
+        }
+        if !partition_ok {
+            out.push(Diagnostic::error(
+                "STAGE001",
+                Location::net(&net.name),
+                format!(
+                    "stages {:?} do not partition the {} plan layers contiguously",
+                    ctx.stages.iter().map(|s| (s.start, s.end)).collect::<Vec<_>>(),
+                    n
+                ),
+            ));
+            return; // stage-local checks below assume a sane partition
+        }
+
+        for st in &ctx.stages {
+            if !st.is_fused() {
+                continue;
+            }
+            let sname = plan.stage_name(st);
+            let head = &plan.layers[st.start];
+            if !fusable_head(head) && !fusable_tail(head) {
+                out.push(Diagnostic::error(
+                    "STAGE002",
+                    Location::stage(&net.name, &sname),
+                    format!("{:?} head cannot lead a fused stage", head.name()),
+                ));
+                continue;
+            }
+            if let Some(bad) =
+                plan.layers[st.start + 1..st.end].iter().find(|l| !fusable_tail(l))
+            {
+                out.push(Diagnostic::error(
+                    "STAGE002",
+                    Location::stage(&net.name, &sname),
+                    format!("{:?} is not a pool/LRN tail member", bad.name()),
+                ));
+                continue;
+            }
+            let Some(ops) = plan.stage_tail_ops(st) else {
+                out.push(Diagnostic::error(
+                    "STAGE002",
+                    Location::stage(&net.name, &sname),
+                    "fused stage lowers to no tail-op chain".into(),
+                ));
+                continue;
+            };
+            // Stage output boundary: push the stage's input shape
+            // through the tail chain and compare with the flow-derived
+            // shape at the stage's end.
+            if st.end >= shapes.len() {
+                continue; // SHAPE004 already reported the length skew
+            }
+            let (c, h, w) = if fusable_head(head) {
+                match head_spec(head) {
+                    Some(spec) if conv_degenerate(spec).is_none() => {
+                        (spec.nk, spec.out_h(), spec.out_w())
+                    }
+                    _ => continue, // SHAPE003 already reported
+                }
+            } else {
+                shapes[st.start].1
+            };
+            let mut hw = (h, w);
+            for op in &ops {
+                hw = op_out_hw(op, hw.0, hw.1);
+            }
+            if st.end < shapes.len() && (c, hw.0, hw.1) != shapes[st.end].1 {
+                let (ec, eh, ew) = shapes[st.end].1;
+                out.push(Diagnostic::error(
+                    "STAGE002",
+                    Location::stage(&net.name, &sname),
+                    format!(
+                        "stage boundary {}x{}x{} but flow derives {ec}x{eh}x{ew}",
+                        c, hw.0, hw.1
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+pub struct ScratchPass;
+
+impl Pass for ScratchPass {
+    fn name(&self) -> &'static str {
+        "scratch"
+    }
+
+    fn codes(&self) -> &'static [&'static str] {
+        &["SCRATCH001", "SCRATCH002"]
+    }
+
+    fn run(&self, ctx: &VerifyContext<'_>, out: &mut Vec<Diagnostic>) {
+        let plan = ctx.plan;
+        let opts = ctx.opts();
+        for (si, st) in ctx.stages.iter().enumerate() {
+            if !st.is_fused() || st.end > plan.layers.len() {
+                continue;
+            }
+            let Some(spec) = head_spec(&plan.layers[st.start]) else { continue };
+            if conv_degenerate(spec).is_some() {
+                continue; // SHAPE003 already reported
+            }
+            let Some(ops) = plan.stage_tail_ops(st) else { continue };
+            let sname = plan.stage_name(st);
+            let required = required_scratch(spec, &ops, &opts);
+            let claimed = ctx
+                .scratch
+                .as_ref()
+                .and_then(|v| v.iter().find(|(i, _)| *i == si).map(|(_, p)| p.clone()))
+                .unwrap_or_else(|| stage_scratch_plan(spec, &ops, &opts));
+            if claimed.two_phase != required.two_phase {
+                out.push(Diagnostic::error(
+                    "SCRATCH001",
+                    Location::stage(&plan.net, &sname),
+                    format!(
+                        "schedule claims two_phase={} but overlap analysis derives {}",
+                        claimed.two_phase, required.two_phase
+                    ),
+                ));
+                continue;
+            }
+            if claimed.conv_scratch < required.conv_scratch {
+                out.push(Diagnostic::error(
+                    "SCRATCH001",
+                    Location::stage(&plan.net, &sname),
+                    format!(
+                        "two-phase conv scratch {} floats below required {}",
+                        claimed.conv_scratch, required.conv_scratch
+                    ),
+                ));
+            }
+            if !claimed.two_phase && claimed.band_conv < required.band_conv {
+                out.push(Diagnostic::error(
+                    "SCRATCH001",
+                    Location::stage(&plan.net, &sname),
+                    format!(
+                        "band conv scratch {} floats below required {}",
+                        claimed.band_conv, required.band_conv
+                    ),
+                ));
+            }
+            for i in 0..2 {
+                if claimed.ping[i] < required.ping[i] {
+                    out.push(Diagnostic::error(
+                        "SCRATCH002",
+                        Location::stage(&plan.net, &sname),
+                        format!(
+                            "ping-pong buffer {} capacity {} floats below required {}",
+                            i, claimed.ping[i], required.ping[i]
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+}

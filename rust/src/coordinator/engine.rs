@@ -299,6 +299,26 @@ impl Engine {
                 }
             }
         }
+        // Debug builds statically verify every plan before it can
+        // execute: the plan-intrinsic analysis passes (shape flow,
+        // scratch accounting, band disjointness, capability,
+        // streamability) run over the exact stages this engine will
+        // dispatch, so a planning bug fails loudly at construction
+        // instead of silently corrupting results.  Release builds skip
+        // the walk entirely.
+        #[cfg(debug_assertions)]
+        {
+            let ctx = crate::analysis::VerifyContext::new(&net, &plan)
+                .with_spec(&spec)
+                .with_stages(stages.clone());
+            let report = crate::analysis::verify(&ctx);
+            assert!(
+                !report.has_errors(),
+                "static plan verification failed for {}/{method}:\n{}",
+                net.name,
+                report.render()
+            );
+        }
         let engine = Engine {
             runtime,
             net,

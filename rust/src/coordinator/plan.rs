@@ -344,16 +344,46 @@ impl ExecutionPlan {
         (0..self.layers.len()).map(|i| FusedStage { start: i, end: i + 1 }).collect()
     }
 
+    /// Can the engine stream micro-batches through this plan's stages
+    /// (`:pipe<d>`) without changing output bits?  True iff every
+    /// layer is [`LayerPlan::frame_independent`] — the one predicate
+    /// the runtime's barrier fallback, `plan --json`, and the
+    /// [`crate::analysis`] streamability pass all share.
+    pub fn streamable(&self) -> bool {
+        self.streaming_blocker().is_none()
+    }
+
+    /// The first layer that forces the barrier schedule — the witness
+    /// behind a `streamable() == false` verdict — or `None` when the
+    /// whole plan is frame-independent.
+    pub fn streaming_blocker(&self) -> Option<&LayerPlan> {
+        self.layers.iter().find(|l| !l.frame_independent())
+    }
+
+    /// Human-readable reason the plan falls back to the barrier
+    /// schedule under `:pipe<d>`, naming the blocking layer, or `None`
+    /// when the plan streams.  Reported by `plan --json` and echoed by
+    /// the analysis streamability pass so the two never disagree.
+    pub fn barrier_reason(&self) -> Option<String> {
+        let l = self.streaming_blocker()?;
+        Some(if l.on_accel() {
+            format!(
+                "layer {} dispatches a whole-batch accelerator artifact \
+                 with its own Fig. 5 schedule",
+                l.name()
+            )
+        } else {
+            format!(
+                "layer {} quantizes activations with a batch-global \
+                 min/max scale; splitting the batch would change the bits",
+                l.name()
+            )
+        })
+    }
+
     /// Metrics/report label of a stage: member layer names joined with
     /// `+` (a single-layer stage keeps its layer name, so layerwise
     /// metrics are unchanged for unfused plans).
-    /// Can the engine stream micro-batches through this plan's stages
-    /// (`:pipe<d>`) without changing output bits?  True iff every
-    /// layer is [`LayerPlan::frame_independent`].
-    pub fn streamable(&self) -> bool {
-        self.layers.iter().all(|l| l.frame_independent())
-    }
-
     pub fn stage_name(&self, st: &FusedStage) -> String {
         self.layers[st.start..st.end]
             .iter()

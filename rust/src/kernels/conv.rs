@@ -84,7 +84,13 @@ struct DirectCapsule {
     plane_len: usize,
 }
 
+// SAFETY: the pointers address tensors borrowed by `conv_direct`,
+// which blocks on the pool scope before the borrows expire; each task
+// writes only its own `(frame, filter)` output plane (band-disjointness
+// invariant, analysis pass ALIAS001-003) and reads the shared inputs.
 unsafe impl Send for DirectCapsule {}
+// SAFETY: see `Send` above — shared access is read-only except for the
+// disjoint per-task plane slices.
 unsafe impl Sync for DirectCapsule {}
 
 /// Direct convolution.  `x: (N, C, H, W)`, `w: (NK, C, KH, KW)`,

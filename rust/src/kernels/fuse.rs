@@ -130,6 +130,67 @@ fn level_rows(
     rows
 }
 
+/// The scratch capacities a fused conv→tail schedule allocates, as
+/// declared by [`stage_scratch_plan`] — the accounting the analysis
+/// layer's `SCRATCH001`/`SCRATCH002` passes certify against an
+/// independent re-derivation of the band math.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ScratchPlan {
+    /// Two-phase schedule (some tail op has overlapping windows)?
+    pub two_phase: bool,
+    /// Floats of per-stage conv scratch holding one frame's whole conv
+    /// surface (two-phase only; 0 for band-local schedules).
+    pub conv_scratch: usize,
+    /// Max floats of any band's local conv tile scratch (band-local
+    /// only; 0 for two-phase schedules).
+    pub band_conv: usize,
+    /// Max floats each ping-pong intermediate buffer must hold
+    /// (intermediate tail levels bounce between the two).
+    pub ping: [usize; 2],
+    /// Band count over the final surface rows.
+    pub bands: usize,
+    /// Rows of the final surface per band.
+    pub band_rows: usize,
+}
+
+/// Declare the scratch the fused conv-stage schedule for `spec` +
+/// `ops` under `opts` will use — the same geometry walk
+/// [`conv_stage`] performs, exposed so callers (and the static
+/// analysis passes) can see the allocation plan without running the
+/// kernel.
+pub fn stage_scratch_plan(
+    spec: &crate::model::network::ConvSpec,
+    ops: &[TailOp],
+    opts: &KernelOpts,
+) -> ScratchPlan {
+    let (oh, ow) = (spec.out_h(), spec.out_w());
+    let levels = level_hw(oh, ow, ops);
+    let (fh, _) = *levels.last().unwrap();
+    let nk = spec.nk;
+    let two_phase = ops.iter().any(|o| o.overlapping());
+    let (bands, band_rows) = row_bands(1, fh, opts.threads);
+    let mut band_conv = 0usize;
+    let mut ping = [0usize; 2];
+    for t in 0..bands {
+        let y0 = t * band_rows;
+        let y1 = (y0 + band_rows).min(fh);
+        if y0 >= y1 {
+            continue;
+        }
+        let rows = level_rows(&levels, ops, y0, y1);
+        if !two_phase {
+            let (r0, r1) = rows[0];
+            band_conv = band_conv.max(nk * (r1 - r0) * levels[0].1);
+        }
+        for i in 0..ops.len().saturating_sub(1) {
+            let (s0, s1) = rows[i + 1];
+            ping[i % 2] = ping[i % 2].max(nk * (s1 - s0) * levels[i + 1].1);
+        }
+    }
+    let conv_scratch = if two_phase { nk * oh * ow } else { 0 };
+    ScratchPlan { two_phase, conv_scratch, band_conv, ping, bands, band_rows }
+}
+
 /// Read-only row window of one level: element `(ci, y, x)` (logical
 /// row `y`) lives at `ptr + ci * chan_stride + (y - y_base) * width + x`.
 #[derive(Clone, Copy)]
@@ -173,19 +234,32 @@ unsafe fn apply_op(
                 for oy in s0..s1 {
                     let ys = oy * stride;
                     let ye = (ys + size).min(ih);
-                    let drow = std::slice::from_raw_parts_mut(
-                        dst.ptr.add(ci * dst.chan_stride + (oy - dst.y_base) * dst.width),
-                        ow,
-                    );
+                    // SAFETY: `dst` covers rows [s0, s1) x `ow` per
+                    // channel (caller contract); rows are disjoint
+                    // across bands per the band-disjointness invariant
+                    // (analysis pass ALIAS001-003).
+                    let drow = unsafe {
+                        std::slice::from_raw_parts_mut(
+                            dst.ptr.add(ci * dst.chan_stride + (oy - dst.y_base) * dst.width),
+                            ow,
+                        )
+                    };
                     for (ox, o) in drow.iter_mut().enumerate() {
                         let xs = ox * stride;
                         let xe = (xs + size).min(iw);
                         let mut v = if is_max { f32::NEG_INFINITY } else { 0.0 };
                         for yy in ys..ye {
-                            let srow = std::slice::from_raw_parts(
-                                src.ptr.add(ci * src.chan_stride + (yy - src.y_base) * src.width),
-                                iw,
-                            );
+                            // SAFETY: `src` holds every input row the
+                            // op reads (caller contract: rows[i] was
+                            // back-propagated through `in_rows`), and
+                            // `yy < ye <= ih` keeps the row in range.
+                            let srow = unsafe {
+                                std::slice::from_raw_parts(
+                                    src.ptr
+                                        .add(ci * src.chan_stride + (yy - src.y_base) * src.width),
+                                    iw,
+                                )
+                            };
                             for &sv in &srow[xs..xe] {
                                 if is_max {
                                     v = v.max(sv);
@@ -212,24 +286,35 @@ unsafe fn apply_op(
                 let lo = ci.saturating_sub(half);
                 let hi = (ci + half + 1).min(c);
                 for y in s0..s1 {
-                    let drow = std::slice::from_raw_parts_mut(
-                        dst.ptr.add(ci * dst.chan_stride + (y - dst.y_base) * dst.width),
-                        ow,
-                    );
+                    // SAFETY: `dst` covers rows [s0, s1) x `ow` per
+                    // channel (caller contract); rows are disjoint
+                    // across bands per the band-disjointness invariant
+                    // (analysis pass ALIAS001-003).
+                    let drow = unsafe {
+                        std::slice::from_raw_parts_mut(
+                            dst.ptr.add(ci * dst.chan_stride + (y - dst.y_base) * dst.width),
+                            ow,
+                        )
+                    };
                     for (x, o) in drow.iter_mut().enumerate() {
                         let mut acc = 0.0f64;
                         for cj in lo..hi {
-                            let v = *src
-                                .ptr
-                                .add(cj * src.chan_stride + (y - src.y_base) * src.width + x)
-                                as f64;
+                            // SAFETY: LRN rows map 1:1 (`in_rows` is
+                            // the identity), so `src` holds row `y` of
+                            // every channel `cj < hi <= c`.
+                            let v = unsafe {
+                                *src.ptr
+                                    .add(cj * src.chan_stride + (y - src.y_base) * src.width + x)
+                            } as f64;
                             acc += v * v;
                         }
                         let denom = (*k + scale * acc).powf(*beta);
-                        let v = *src
-                            .ptr
-                            .add(ci * src.chan_stride + (y - src.y_base) * src.width + x)
-                            as f64;
+                        // SAFETY: same row/channel bounds as the
+                        // accumulation loop above.
+                        let v = unsafe {
+                            *src.ptr
+                                .add(ci * src.chan_stride + (y - src.y_base) * src.width + x)
+                        } as f64;
                         *o = (v / denom) as f32;
                     }
                 }
@@ -262,7 +347,10 @@ unsafe fn run_tail_band(
         let ow = levels[i + 1].1;
         let (s0, s1) = rows[i + 1];
         if i == last {
-            apply_op(op, c, (ih, iw), ow, (s0, s1), cur, dst);
+            // SAFETY: `cur` holds rows[i] of level i (caller contract
+            // for i == 0, ping-pong fill below otherwise) and `dst`
+            // covers the final rows (caller contract).
+            unsafe { apply_op(op, c, (ih, iw), ow, (s0, s1), cur, dst) };
         } else {
             let buf = if i % 2 == 0 { &mut pair.0 } else { &mut pair.1 };
             let need = c * (s1 - s0) * ow;
@@ -275,7 +363,10 @@ unsafe fn run_tail_band(
                 y_base: s0,
                 width: ow,
             };
-            apply_op(op, c, (ih, iw), ow, (s0, s1), cur, d);
+            // SAFETY: `buf` was just resized to hold exactly rows
+            // [s0, s1) x `ow` of all `c` channels — the capacity the
+            // scratch accounting certifies (analysis pass SCRATCH002).
+            unsafe { apply_op(op, c, (ih, iw), ow, (s0, s1), cur, d) };
             cur = RowsRef {
                 ptr: buf.as_ptr(),
                 chan_stride: (s1 - s0) * ow,
@@ -350,7 +441,14 @@ struct ConvStageCapsule {
     dst: RowsMut,
 }
 
+// SAFETY: the capsule's raw pointers address buffers borrowed by
+// `conv_stage`, which blocks on the thread-pool scope before those
+// borrows expire; concurrent band tasks write disjoint output row
+// ranges (band-disjointness invariant, analysis pass ALIAS001-003) and
+// only read the shared inputs.
 unsafe impl Send for ConvStageCapsule {}
+// SAFETY: see `Send` above — shared access is read-only except for the
+// disjoint per-band output rows.
 unsafe impl Sync for ConvStageCapsule {}
 
 /// One band of a fused conv stage: (optionally) GEMM the band's conv
@@ -372,9 +470,16 @@ unsafe fn conv_stage_band(cap: &ConvStageCapsule, t: usize) {
     let mut conv_buf: Vec<f32> = Vec::new();
     let src = if let Some(g) = &cap.f32_gemm {
         conv_buf.resize(cap.c * (r1 - r0) * w0, 0.0);
-        let wmat = std::slice::from_raw_parts(g.wmat, cap.c * g.k);
-        let patches = std::slice::from_raw_parts(g.patches, g.k * g.cols);
-        let bias = std::slice::from_raw_parts(g.bias, cap.c);
+        // SAFETY: the pointers and extents come from the packed conv's
+        // own weight/bias tensors and this frame's patch matrix, alive
+        // for the scope `conv_stage` blocks on (read-only here).
+        let (wmat, patches, bias) = unsafe {
+            (
+                std::slice::from_raw_parts(g.wmat, cap.c * g.k),
+                std::slice::from_raw_parts(g.patches, g.k * g.cols),
+                std::slice::from_raw_parts(g.bias, cap.c),
+            )
+        };
         gemm_cols_into(
             MatView::dense(wmat, cap.c, g.k),
             MatView::dense(patches, g.k, g.cols),
@@ -387,9 +492,17 @@ unsafe fn conv_stage_band(cap: &ConvStageCapsule, t: usize) {
         RowsRef { ptr: conv_buf.as_ptr(), chan_stride: (r1 - r0) * w0, y_base: r0, width: w0 }
     } else if let Some(g) = &cap.q8_gemm {
         conv_buf.resize(cap.c * (r1 - r0) * w0, 0.0);
-        let wq = &*g.wq;
-        let patches = std::slice::from_raw_parts(g.patches, wq.cols * g.cols);
-        let bias = std::slice::from_raw_parts(g.bias, cap.c);
+        // SAFETY: `g.wq` points at the packed q8 cache borrowed by
+        // `conv_stage`; the patch/bias pointers and extents come from
+        // the same borrows, alive for the blocking scope (read-only).
+        let (wq, patches, bias) = unsafe {
+            let wq = &*g.wq;
+            (
+                wq,
+                std::slice::from_raw_parts(g.patches, wq.cols * g.cols),
+                std::slice::from_raw_parts(g.bias, cap.c),
+            )
+        };
         gemm_q8_cols_into(
             wq,
             patches,
@@ -404,20 +517,31 @@ unsafe fn conv_stage_band(cap: &ConvStageCapsule, t: usize) {
         RowsRef { ptr: conv_buf.as_ptr(), chan_stride: (r1 - r0) * w0, y_base: r0, width: w0 }
     } else if let Some(g) = &cap.wg_gemm {
         conv_buf.resize(cap.c * (r1 - r0) * w0, 0.0);
-        let frame = std::slice::from_raw_parts(g.frame, g.frame_len);
+        // SAFETY: the frame pointer/length and packed-weight pointer
+        // come from borrows held across the blocking scope
+        // (read-only); `dst` addresses this band's freshly-sized local
+        // scratch.
+        let (frame, packed) =
+            unsafe { (std::slice::from_raw_parts(g.frame, g.frame_len), &*g.packed) };
         let dst = winograd::WgOut {
             ptr: conv_buf.as_mut_ptr(),
             chan_stride: (r1 - r0) * w0,
             y_base: r0,
             width: w0,
         };
-        winograd::winograd_rows_into(frame, &*g.packed, r0, r1, g.tile, dst);
+        // SAFETY: `dst` provides exclusive storage for exactly rows
+        // [r0, r1) of every channel (sized two lines up).
+        unsafe { winograd::winograd_rows_into(frame, packed, r0, r1, g.tile, dst) };
         RowsRef { ptr: conv_buf.as_ptr(), chan_stride: (r1 - r0) * w0, y_base: r0, width: w0 }
     } else {
         cap.src
     };
     let mut pair = (Vec::new(), Vec::new());
-    run_tail_band(cap.c, &cap.levels, &cap.ops, &rows, src, cap.dst, &mut pair);
+    // SAFETY: `src` covers rows[0] of the conv surface (GEMM'd above
+    // for exactly that range, or the whole two-phase surface) and
+    // `cap.dst` covers this band's final rows — disjoint across bands
+    // per the band-disjointness invariant (analysis pass ALIAS001-003).
+    unsafe { run_tail_band(cap.c, &cap.levels, &cap.ops, &rows, src, cap.dst, &mut pair) };
 }
 
 /// Execute a fused conv-led stage: im2col + GEMM (f32 or q8, with the
@@ -627,7 +751,14 @@ struct TailStageCapsule {
     band_rows: usize,
 }
 
+// SAFETY: the capsule's raw pointers address buffers borrowed by
+// `tail_stage`, which blocks on the thread-pool scope before those
+// borrows expire; concurrent `(frame, band)` units write disjoint
+// output slices (band-disjointness invariant, analysis pass
+// ALIAS001-003) and only read the shared input.
 unsafe impl Send for TailStageCapsule {}
+// SAFETY: see `Send` above — shared access is read-only except for the
+// disjoint per-unit output slices.
 unsafe impl Sync for TailStageCapsule {}
 
 /// One `(frame, row band)` unit of a tail-only stage.
@@ -642,20 +773,18 @@ unsafe fn tail_stage_band(cap: &TailStageCapsule, u: usize) {
         return;
     }
     let rows = level_rows(&cap.levels, &cap.ops, y0, y1);
-    let src = RowsRef {
-        ptr: cap.x.add(ni * cap.in_frame),
-        chan_stride: cap.h * cap.w,
-        y_base: 0,
-        width: cap.w,
-    };
-    let dst = RowsMut {
-        ptr: cap.out.add(ni * cap.out_frame),
-        chan_stride: cap.fh * cap.fw,
-        y_base: 0,
-        width: cap.fw,
-    };
+    // SAFETY: `ni < n`, so both frame offsets are in-bounds slices of
+    // the input/output tensors borrowed across the blocking scope.
+    let (src_ptr, dst_ptr) =
+        unsafe { (cap.x.add(ni * cap.in_frame), cap.out.add(ni * cap.out_frame)) };
+    let src = RowsRef { ptr: src_ptr, chan_stride: cap.h * cap.w, y_base: 0, width: cap.w };
+    let dst = RowsMut { ptr: dst_ptr, chan_stride: cap.fh * cap.fw, y_base: 0, width: cap.fw };
     let mut pair = (Vec::new(), Vec::new());
-    run_tail_band(cap.c, &cap.levels, &cap.ops, &rows, src, dst, &mut pair);
+    // SAFETY: `src` is the full input frame (covers any rows[0]) and
+    // `dst` this unit's output frame; units write disjoint `(frame,
+    // band)` slices per the band-disjointness invariant (analysis pass
+    // ALIAS001-003).
+    unsafe { run_tail_band(cap.c, &cap.levels, &cap.ops, &rows, src, dst, &mut pair) };
 }
 
 /// Execute a tail-only fused stage (a pool/LRN run with no fusable
@@ -876,6 +1005,24 @@ mod tests {
         // Empty tail degenerates to the standalone Winograd kernel.
         let fused = conv_stage(&x, ConvSource::Wg(&packed), &[], KernelOpts::tiled());
         assert_eq!(fused, kernels::conv_winograd(&x, &packed, KernelOpts::tiled()));
+    }
+
+    #[test]
+    fn scratch_plan_matches_schedule_selection() {
+        let spec = ConvSpec {
+            in_c: 2, in_h: 14, in_w: 14, nk: 8, kh: 3, kw: 3, stride: 1, pad: 1, relu: true,
+        };
+        let opts = KernelOpts::tiled();
+        let band_local = [TailOp::Pool { mode: PoolMode::Max, size: 2, stride: 2, relu: false }];
+        let p = stage_scratch_plan(&spec, &band_local, &opts);
+        assert!(!p.two_phase);
+        assert_eq!(p.conv_scratch, 0);
+        assert!(p.band_conv > 0);
+        let overlapping = [TailOp::Pool { mode: PoolMode::Max, size: 3, stride: 2, relu: false }];
+        let p = stage_scratch_plan(&spec, &overlapping, &opts);
+        assert!(p.two_phase);
+        assert_eq!(p.conv_scratch, spec.nk * spec.out_h() * spec.out_w());
+        assert_eq!(p.band_conv, 0);
     }
 
     #[test]

@@ -93,7 +93,14 @@ struct Capsule {
     tile: usize,
 }
 
+// SAFETY: the capsule's raw pointers address buffers borrowed by the
+// public entry points, which block on the thread-pool scope before the
+// borrows expire; concurrent bands write disjoint column ranges of `c`
+// (band-disjointness invariant, analysis pass ALIAS001-003) and only
+// read the shared `a`/`b`/bias operands.
 unsafe impl Send for Capsule {}
+// SAFETY: see `Send` above — shared access is read-only except for the
+// disjoint per-band output columns.
 unsafe impl Sync for Capsule {}
 
 /// Accumulate columns `[j0, j1)` of rows `[i0, i0 + ir)` for k-block
@@ -123,12 +130,23 @@ unsafe fn tile_block(
             // `mul_acc` is a separate per-lane multiply then add, so
             // every element's value matches the scalar edge strip.
             let mut acc = [F32x8::zero(); MR];
-            let a0 = std::slice::from_raw_parts(cap.a.add(i0 * cap.a_stride), cap.k);
-            let a1 = std::slice::from_raw_parts(cap.a.add((i0 + 1) * cap.a_stride), cap.k);
-            let a2 = std::slice::from_raw_parts(cap.a.add((i0 + 2) * cap.a_stride), cap.k);
-            let a3 = std::slice::from_raw_parts(cap.a.add((i0 + 3) * cap.a_stride), cap.k);
+            // SAFETY: `ir == MR` implies rows `i0..i0 + MR` are within
+            // `m`; the A buffer is live for the blocking pool scope and
+            // read-only here.
+            let (a0, a1, a2, a3) = unsafe {
+                (
+                    std::slice::from_raw_parts(cap.a.add(i0 * cap.a_stride), cap.k),
+                    std::slice::from_raw_parts(cap.a.add((i0 + 1) * cap.a_stride), cap.k),
+                    std::slice::from_raw_parts(cap.a.add((i0 + 2) * cap.a_stride), cap.k),
+                    std::slice::from_raw_parts(cap.a.add((i0 + 3) * cap.a_stride), cap.k),
+                )
+            };
             for kk in kb..ke {
-                let brow = std::slice::from_raw_parts(cap.b.add(kk * cap.b_stride + j), NR);
+                // SAFETY: `kk < k` and `jr == NR` implies
+                // `j + NR <= j1 <= n`, so the B row slice is in-bounds
+                // of the shared read-only operand.
+                let brow =
+                    unsafe { std::slice::from_raw_parts(cap.b.add(kk * cap.b_stride + j), NR) };
                 let bv = F32x8::load(brow);
                 let av = [a0[kk], a1[kk], a2[kk], a3[kk]];
                 for (accr, &ar) in acc.iter_mut().zip(&av) {
@@ -137,10 +155,16 @@ unsafe fn tile_block(
             }
             for (r, accr) in acc.iter().enumerate() {
                 let vals = accr.to_array();
-                let crow = std::slice::from_raw_parts_mut(
-                    cap.c.add((i0 + r) * cap.c_stride + (j - cap.c_j0)),
-                    NR,
-                );
+                // SAFETY: this band exclusively owns output columns
+                // `[j0, j1)` (band-disjointness invariant, analysis
+                // pass ALIAS001-003) and `j - c_j0 + NR` stays within
+                // the band's row width.
+                let crow = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        cap.c.add((i0 + r) * cap.c_stride + (j - cap.c_j0)),
+                        NR,
+                    )
+                };
                 for (cv, &av) in crow.iter_mut().zip(&vals) {
                     *cv += av;
                 }
@@ -153,19 +177,32 @@ unsafe fn tile_block(
             // paths must agree even on non-finite inputs), contiguous
             // B-row access.
             for r in 0..ir {
-                let arow = std::slice::from_raw_parts(cap.a.add((i0 + r) * cap.a_stride), cap.k);
+                // SAFETY: `r < ir` keeps the row within `m`; A is live
+                // and read-only for the pool scope.
+                let arow = unsafe {
+                    std::slice::from_raw_parts(cap.a.add((i0 + r) * cap.a_stride), cap.k)
+                };
                 let mut acc = [0.0f32; NR];
                 for kk in kb..ke {
                     let av = arow[kk];
-                    let brow = std::slice::from_raw_parts(cap.b.add(kk * cap.b_stride + j), jr);
+                    // SAFETY: `kk < k` and `j + jr <= j1 <= n` keep the
+                    // read in-bounds of the shared B operand.
+                    let brow = unsafe {
+                        std::slice::from_raw_parts(cap.b.add(kk * cap.b_stride + j), jr)
+                    };
                     for (cv, &bv) in acc[..jr].iter_mut().zip(brow) {
                         *cv += av * bv;
                     }
                 }
-                let crow = std::slice::from_raw_parts_mut(
-                    cap.c.add((i0 + r) * cap.c_stride + (j - cap.c_j0)),
-                    jr,
-                );
+                // SAFETY: columns `[j, j + jr)` lie inside this band's
+                // exclusive range `[j0, j1)` (band-disjointness
+                // invariant, analysis pass ALIAS001-003).
+                let crow = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        cap.c.add((i0 + r) * cap.c_stride + (j - cap.c_j0)),
+                        jr,
+                    )
+                };
                 for (cv, &av) in crow.iter_mut().zip(&acc[..jr]) {
                     *cv += av;
                 }
@@ -186,13 +223,21 @@ unsafe fn band(cap: &Capsule, j0: usize, j1: usize) {
     }
     // Seed the band from the bias.
     for i in 0..cap.m {
-        let crow =
-            std::slice::from_raw_parts_mut(cap.c.add(i * cap.c_stride + (j0 - cap.c_j0)), w);
+        // SAFETY: this band exclusively owns output columns `[j0, j1)`
+        // (band-disjointness invariant, analysis pass ALIAS001-003);
+        // `i < m` keeps the row in-bounds.
+        let crow = unsafe {
+            std::slice::from_raw_parts_mut(cap.c.add(i * cap.c_stride + (j0 - cap.c_j0)), w)
+        };
         match cap.bias {
             BiasRaw::None => crow.fill(0.0),
-            BiasRaw::PerRow(p) => crow.fill(*p.add(i)),
+            // SAFETY: per-row bias has `m` entries (asserted by the
+            // public entry point) and is read-only.
+            BiasRaw::PerRow(p) => crow.fill(unsafe { *p.add(i) }),
             BiasRaw::PerCol(p) => {
-                crow.copy_from_slice(std::slice::from_raw_parts(p.add(j0), w));
+                // SAFETY: per-col bias has `n >= j1` entries (asserted
+                // by the public entry point) and is read-only.
+                crow.copy_from_slice(unsafe { std::slice::from_raw_parts(p.add(j0), w) });
             }
         }
     }
@@ -208,17 +253,29 @@ unsafe fn band(cap: &Capsule, j0: usize, j1: usize) {
         while kb < cap.k {
             let ke = (kb + KC).min(cap.k);
             for i in 0..cap.m {
-                let arow = std::slice::from_raw_parts(cap.a.add(i * cap.a_stride), cap.k);
-                let crow = std::slice::from_raw_parts_mut(
-                    cap.c.add(i * cap.c_stride + (j0 - cap.c_j0)),
-                    w,
-                );
+                // SAFETY: `i < m`; A is live and read-only for the
+                // pool scope.
+                let arow =
+                    unsafe { std::slice::from_raw_parts(cap.a.add(i * cap.a_stride), cap.k) };
+                // SAFETY: this band exclusively owns columns `[j0, j1)`
+                // of C (band-disjointness invariant, analysis pass
+                // ALIAS001-003).
+                let crow = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        cap.c.add(i * cap.c_stride + (j0 - cap.c_j0)),
+                        w,
+                    )
+                };
                 for kk in kb..ke {
                     let av = arow[kk];
                     if av == 0.0 {
                         continue; // post-ReLU activations are sparse
                     }
-                    let brow = std::slice::from_raw_parts(cap.b.add(kk * cap.b_stride + j0), w);
+                    // SAFETY: `kk < k` and `j0 + w == j1 <= n` keep the
+                    // read in-bounds of the shared B operand.
+                    let brow = unsafe {
+                        std::slice::from_raw_parts(cap.b.add(kk * cap.b_stride + j0), w)
+                    };
                     for (cv, bv) in crow.iter_mut().zip(brow) {
                         *cv += av * *bv;
                     }
@@ -235,7 +292,10 @@ unsafe fn band(cap: &Capsule, j0: usize, j1: usize) {
             let mut i = 0;
             while i < cap.m {
                 let ir = (cap.m - i).min(MR);
-                tile_block(cap, i, ir, j0, j1, kb, ke);
+                // SAFETY: forwards this band's exclusive `[j0, j1)`
+                // column range and live capsule pointers (this fn's own
+                // contract) with `i + ir <= m`.
+                unsafe { tile_block(cap, i, ir, j0, j1, kb, ke) };
                 i += ir;
             }
             kb = ke;
@@ -243,8 +303,11 @@ unsafe fn band(cap: &Capsule, j0: usize, j1: usize) {
     }
     if cap.relu {
         for i in 0..cap.m {
-            let crow =
-                std::slice::from_raw_parts_mut(cap.c.add(i * cap.c_stride + (j0 - cap.c_j0)), w);
+            // SAFETY: same exclusive band range `[j0, j1)` as the
+            // accumulation above (analysis pass ALIAS001-003).
+            let crow = unsafe {
+                std::slice::from_raw_parts_mut(cap.c.add(i * cap.c_stride + (j0 - cap.c_j0)), w)
+            };
             for v in crow {
                 if *v < 0.0 {
                     *v = 0.0;
@@ -422,7 +485,14 @@ struct Q8Capsule {
     relu: bool,
 }
 
+// SAFETY: the capsule's raw pointers address buffers borrowed by the
+// public entry points, which block on the thread-pool scope before the
+// borrows expire; concurrent bands write disjoint row ranges of `c`
+// (band-disjointness invariant, analysis pass ALIAS001-003) and only
+// read the shared quantized operands.
 unsafe impl Send for Q8Capsule {}
+// SAFETY: see `Send` above — shared access is read-only except for the
+// disjoint per-band output rows.
 unsafe impl Sync for Q8Capsule {}
 
 /// Compute rows `[i0, i1)` of the q8 product.  Row-banded (each row is
@@ -439,9 +509,13 @@ unsafe fn q8_band(cap: &Q8Capsule, i0: usize, i1: usize) {
         // interleaved lanes (i8/u8 widened to i32 — exact, so the
         // interleave never changes the result) to break the dependency
         // chain.
-        let acol = std::slice::from_raw_parts(cap.aq, k);
+        // SAFETY: `aq` holds the `k x 1` activation column, live and
+        // read-only for the pool scope.
+        let acol = unsafe { std::slice::from_raw_parts(cap.aq, k) };
         for i in i0..i1 {
-            let wrow = std::slice::from_raw_parts(cap.wq.add(i * k), k);
+            // SAFETY: `i < i1 <= m` keeps the weight row in-bounds of
+            // the shared read-only `m x k` matrix.
+            let wrow = unsafe { std::slice::from_raw_parts(cap.wq.add(i * k), k) };
             let mut acc = I32x8::zero();
             let mut kk = 0;
             while kk + simd::LANES <= k {
@@ -453,7 +527,11 @@ unsafe fn q8_band(cap: &Q8Capsule, i0: usize, i1: usize) {
                 total += wrow[kk] as i32 * acol[kk] as i32;
                 kk += 1;
             }
-            *cap.c.add(i * cap.c_stride) = q8_epilogue(cap, i, total);
+            // SAFETY: this band exclusively owns output rows
+            // `[i0, i1)` (band-disjointness invariant, analysis pass
+            // ALIAS001-003); the epilogue reads per-row tables of
+            // length `m`.
+            unsafe { *cap.c.add(i * cap.c_stride) = q8_epilogue(cap, i, total) };
         }
         return;
     }
@@ -461,20 +539,29 @@ unsafe fn q8_band(cap: &Q8Capsule, i0: usize, i1: usize) {
     while j < n {
         let jw = (n - j).min(QNR);
         for i in i0..i1 {
-            let wrow = std::slice::from_raw_parts(cap.wq.add(i * k), k);
+            // SAFETY: `i < i1 <= m` keeps the weight row in-bounds of
+            // the shared read-only `m x k` matrix.
+            let wrow = unsafe { std::slice::from_raw_parts(cap.wq.add(i * k), k) };
             let mut acc = [0i32; QNR];
             for (kk, &wv) in wrow.iter().enumerate() {
                 let av = wv as i32;
                 if av == 0 {
                     continue;
                 }
-                let brow = std::slice::from_raw_parts(cap.aq.add(kk * n + j), jw);
+                // SAFETY: `kk < k` and `j + jw <= n` keep the strip
+                // in-bounds of the shared `k x n` activation matrix.
+                let brow = unsafe { std::slice::from_raw_parts(cap.aq.add(kk * n + j), jw) };
                 q8_axpy_strip(&mut acc[..jw], av, brow);
             }
-            let crow =
-                std::slice::from_raw_parts_mut(cap.c.add(i * cap.c_stride + (j - cap.c_j0)), jw);
+            // SAFETY: this band exclusively owns output rows
+            // `[i0, i1)` (band-disjointness invariant, analysis pass
+            // ALIAS001-003); the epilogue reads per-row tables of
+            // length `m`.
+            let crow = unsafe {
+                std::slice::from_raw_parts_mut(cap.c.add(i * cap.c_stride + (j - cap.c_j0)), jw)
+            };
             for (cv, &av) in crow.iter_mut().zip(&acc[..jw]) {
-                *cv = q8_epilogue(cap, i, av);
+                *cv = unsafe { q8_epilogue(cap, i, av) };
             }
         }
         j += jw;
@@ -512,20 +599,30 @@ unsafe fn q8_band_cols(cap: &Q8Capsule, j0: usize, j1: usize) {
     while j < j1 {
         let jw = (j1 - j).min(QNR);
         for i in 0..cap.m {
-            let wrow = std::slice::from_raw_parts(cap.wq.add(i * k), k);
+            // SAFETY: `i < m` keeps the weight row in-bounds of the
+            // shared read-only `m x k` matrix.
+            let wrow = unsafe { std::slice::from_raw_parts(cap.wq.add(i * k), k) };
             let mut acc = [0i32; QNR];
             for (kk, &wv) in wrow.iter().enumerate() {
                 let av = wv as i32;
                 if av == 0 {
                     continue;
                 }
-                let brow = std::slice::from_raw_parts(cap.aq.add(kk * cap.n + j), jw);
+                // SAFETY: `kk < k` and `j + jw <= j1 <= n` keep the
+                // strip in-bounds of the shared activation matrix.
+                let brow = unsafe { std::slice::from_raw_parts(cap.aq.add(kk * cap.n + j), jw) };
                 q8_axpy_strip(&mut acc[..jw], av, brow);
             }
-            let crow =
-                std::slice::from_raw_parts_mut(cap.c.add(i * cap.c_stride + (j - cap.c_j0)), jw);
+            // SAFETY: per the caller contract, `C` is this band's
+            // private scratch sized `m x (j1 - j0)` with `c_j0 = j0`
+            // (band-disjointness invariant, analysis pass
+            // ALIAS001-003); the epilogue reads per-row tables of
+            // length `m`.
+            let crow = unsafe {
+                std::slice::from_raw_parts_mut(cap.c.add(i * cap.c_stride + (j - cap.c_j0)), jw)
+            };
             for (cv, &av) in crow.iter_mut().zip(&acc[..jw]) {
-                *cv = q8_epilogue(cap, i, av);
+                *cv = unsafe { q8_epilogue(cap, i, av) };
             }
         }
         j += jw;
@@ -534,10 +631,17 @@ unsafe fn q8_band_cols(cap: &Q8Capsule, j0: usize, j1: usize) {
 
 /// Requantize one i32 accumulator of row `i` back to f32:
 /// `bias + w_scale_i * a_scale * (acc - zp * rowsum_i)`, then ReLU.
+///
+/// SAFETY: caller guarantees `i < m`, so the per-row `row_sums`,
+/// `bias`, and `scales` tables (each of length `m`) are in-bounds.
 #[inline]
 unsafe fn q8_epilogue(cap: &Q8Capsule, i: usize, acc: i32) -> f32 {
-    let corrected = acc - cap.act.zp * *cap.row_sums.add(i);
-    let mut v = *cap.bias.add(i) + *cap.scales.add(i) * cap.act.scale * corrected as f32;
+    // SAFETY: `i < m` per the fn contract; the tables are live,
+    // read-only, and shared across bands.
+    let (rowsum, bias, scale) =
+        unsafe { (*cap.row_sums.add(i), *cap.bias.add(i), *cap.scales.add(i)) };
+    let corrected = acc - cap.act.zp * rowsum;
+    let mut v = bias + scale * cap.act.scale * corrected as f32;
     if cap.relu && v < 0.0 {
         v = 0.0;
     }

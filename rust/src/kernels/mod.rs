@@ -57,7 +57,9 @@ pub mod simd;
 pub mod winograd;
 
 pub use conv::{conv_direct, conv_im2col, conv_im2col_q8, conv_im2col_unpacked};
-pub use fuse::{conv_stage, tail_out_shape, tail_stage, ConvSource, TailOp};
+pub use fuse::{
+    conv_stage, stage_scratch_plan, tail_out_shape, tail_stage, ConvSource, ScratchPlan, TailOp,
+};
 pub use gemm::{
     fc, fc_q8, gemm_cols_into, gemm_into, gemm_q8_cols_into, gemm_q8_into, matmul, BiasMode,
 };

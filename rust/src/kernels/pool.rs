@@ -86,7 +86,13 @@ struct PoolCapsule {
     band_rows: usize,
 }
 
+// SAFETY: the pointers address tensors borrowed by `pool_impl`, which
+// blocks on the pool scope before the borrows expire; each `(plane,
+// row band)` unit writes a disjoint output slice (band-disjointness
+// invariant, analysis pass ALIAS001-003) and only reads the input.
 unsafe impl Send for PoolCapsule {}
+// SAFETY: see `Send` above — shared access is read-only except for the
+// disjoint per-unit output slices.
 unsafe impl Sync for PoolCapsule {}
 
 fn pool_impl(x: &Tensor, size: usize, stride: usize, is_max: bool, opts: KernelOpts) -> Tensor {
@@ -209,7 +215,14 @@ struct LrnCapsule {
     band_rows: usize,
 }
 
+// SAFETY: the pointers address tensors borrowed by `lrn_nchw`, which
+// blocks on the pool scope before the borrows expire; each `(plane,
+// row band)` unit writes a disjoint output slice (band-disjointness
+// invariant, analysis pass ALIAS001-003) and the whole input is shared
+// read-only (LRN reads across channels).
 unsafe impl Send for LrnCapsule {}
+// SAFETY: see `Send` above — shared access is read-only except for the
+// disjoint per-unit output slices.
 unsafe impl Sync for LrnCapsule {}
 
 /// Caffe-style cross-channel local response normalization:
@@ -291,7 +304,11 @@ struct ReluCapsule {
     chunk: usize,
 }
 
+// SAFETY: the pointer addresses the output tensor borrowed by `relu`,
+// which blocks on the pool scope; each task writes a disjoint
+// `[lo, hi)` chunk and nothing is read concurrently.
 unsafe impl Send for ReluCapsule {}
+// SAFETY: see `Send` above — tasks touch disjoint chunks only.
 unsafe impl Sync for ReluCapsule {}
 
 /// Out-of-place ReLU; chunk-parallel above a small-size threshold.

@@ -220,8 +220,16 @@ pub(crate) unsafe fn winograd_rows_into(
                         if spec.relu && val < 0.0 {
                             val = 0.0;
                         }
-                        *out.ptr.add(k * out.chan_stride + (oy - out.y_base) * out.width + ox) =
-                            val;
+                        // SAFETY: `r0 <= oy < r1c` and `ox < ow`, the
+                        // exact row window the caller guarantees `out`
+                        // covers exclusively; concurrent bands own
+                        // disjoint row ranges per the band-disjointness
+                        // invariant (analysis pass ALIAS001-003).
+                        unsafe {
+                            *out.ptr
+                                .add(k * out.chan_stride + (oy - out.y_base) * out.width + ox) =
+                                val;
+                        }
                     }
                 }
             }
@@ -242,7 +250,14 @@ struct WgCapsule {
     dst: WgOut,
 }
 
+// SAFETY: the capsule's raw pointers address the frame, packed
+// weights, and output surface borrowed by `frame_bands`, which blocks
+// on the thread-pool scope before those borrows expire; concurrent
+// bands write disjoint output row-pair ranges (band-disjointness
+// invariant, analysis pass ALIAS001-003) and only read shared inputs.
 unsafe impl Send for WgCapsule {}
+// SAFETY: see `Send` above — shared access is read-only except for the
+// disjoint per-band output rows.
 unsafe impl Sync for WgCapsule {}
 
 /// Run one frame's Winograd conv into `dst`, split into tile-row

@@ -49,6 +49,13 @@
 //!   testable and reproducible.
 //! * [`simulator`] — analytic mobile-GPU performance model that
 //!   regenerates the paper's Tables 3/4 at Mali-T760/Adreno-430 scale.
+//! * [`analysis`] — the static plan verifier and lint framework:
+//!   typed diagnostics with stable codes over compiled execution
+//!   plans (shape/dtype flow, fused-stage scratch accounting, banded
+//!   kernel disjointness certification, backend capability and
+//!   streamability consistency, cost-model invariants, deadline
+//!   feasibility), surfaced via the `lint` CLI subcommand,
+//!   `plan --verify`, and a debug-build engine hook.
 //! * [`data`] — procedural digit corpus (mirrors `python/compile/digits.py`)
 //!   and PGM/PPM image IO.
 
@@ -56,7 +63,13 @@
 // fallback in `kernels::simd` for real `std::simd` vectors (nightly
 // toolchains only; results are bit-identical either way).
 #![cfg_attr(feature = "portable-simd", feature(portable_simd))]
+// Every raw-pointer operation inside an `unsafe fn` must sit in an
+// explicit `unsafe { }` block with its own `// SAFETY:` justification —
+// the kernel-certification contract the `analysis` band-disjointness
+// pass (ALIAS001-003) underwrites.
+#![deny(unsafe_op_in_unsafe_fn)]
 
+pub mod analysis;
 pub mod coordinator;
 pub mod cpu;
 pub mod data;

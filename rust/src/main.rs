@@ -8,6 +8,7 @@
 //!   cnndroid serve --net N --method M ...      TCP JSON-lines serving
 //!   cnndroid simulate [--claims]               regenerate paper Tables 3/4
 //!   cnndroid plan --net N --device D           delegate auto-placement preview
+//!   cnndroid lint [--net N] [--json]           static plan verification sweep
 //!   cnndroid bench-engine --net N --method M   quick engine throughput probe
 //!   cnndroid profile --net N --method M        per-layer residuals vs the cost model
 //! ```
@@ -39,6 +40,7 @@ fn main() {
         "serve" => run(serve_cmd(rest)),
         "simulate" => run(simulate(rest)),
         "plan" => run(plan_cmd(rest)),
+        "lint" => run(lint_cmd(rest)),
         "bench-engine" => run(bench_engine(rest)),
         "profile" => run(profile(rest)),
         "validate" => run(validate(rest)),
@@ -57,7 +59,7 @@ fn main() {
 const HELP: &str = "cnndroid — GPU-accelerated CNN engine reproduction (three-layer Rust+JAX+Pallas)
 
 USAGE:
-  cnndroid <inspect|convert|infer|serve|simulate|plan|bench-engine|profile|validate> [OPTIONS]
+  cnndroid <inspect|convert|infer|serve|simulate|plan|lint|bench-engine|profile|validate> [OPTIONS]
 
 Execution is configured by a typed spec built from flags:
   --method M          cpu-seq | basic-parallel | basic-simd | advanced-simd-4 |
@@ -90,6 +92,15 @@ Resilience (infer / serve):
 `profile` runs warm frames and reports per-layer wall times against the
 delegate cost model's predictions (the residuals that placement
 decisions ride on); `--json` writes the report to BENCH_profile.json.
+
+Static analysis:
+  lint [--net N] [--spec S] runs the plan verifier (shape flow, scratch
+                        accounting, band disjointness, capability,
+                        streamability, cost-model invariants) over the
+                        zoo x canonical spec matrix; --json writes the
+                        report to BENCH_lint.json; exits nonzero on any
+                        error diagnostic
+  plan --verify         runs the same passes on the previewed plan
 
 Run `cnndroid <command> --help` for command options.";
 
@@ -502,6 +513,7 @@ fn plan_cmd(argv: Vec<String>) -> Result<()> {
         .flag("q8", "let the quantized backend compete in the preview (no guardrail run)")
         .flag("wino", "let the Winograd backend compete in the preview (no guardrail run)")
         .flag("json", "emit the canonical spec, placements, and cost estimates as JSON")
+        .flag("verify", "run the static analysis passes on each previewed plan")
         .flag("simulated", "assume every artifact exists (no manifest needed)"),
     );
     let args = spec.parse_from(argv).map_err(|e| anyhow::anyhow!("{e}"))?;
@@ -553,10 +565,24 @@ fn plan_cmd(argv: Vec<String>) -> Result<()> {
         .with_batch(exec.batch())
         .with_pipeline(exec.pipeline().is_some());
     let mut json_nets = Vec::new();
+    let mut verify_errors = 0usize;
     for net in &nets {
         let report = partitioner.partition(net)?;
+        // --verify runs the full static pass suite (cost-model passes
+        // included, since the partition report is right here) on the
+        // previewed plan; error diagnostics make the command fail.
+        let vreport = if args.has("verify") {
+            let vctx = cnndroid::analysis::VerifyContext::new(net, &report.plan)
+                .with_spec(&exec)
+                .with_cost(&registry, dev.clone(), &report);
+            let v = cnndroid::analysis::verify(&vctx);
+            verify_errors += v.count(cnndroid::analysis::Severity::Error);
+            Some(v)
+        } else {
+            None
+        };
         if args.has("json") {
-            json_nets.push(plan_json(net, &exec, &registry, &partitioner, &report));
+            json_nets.push(plan_json(net, &exec, &registry, &partitioner, &report, &vreport));
             continue;
         }
         println!("{} on {} — predicted {:.3} ms/frame", net.name, dev.name, report.predicted_s * 1e3);
@@ -614,6 +640,17 @@ fn plan_cmd(argv: Vec<String>) -> Result<()> {
                 (report.predicted_s / cost - 1.0) * 100.0
             );
         }
+        if let Some(v) = &vreport {
+            if v.diagnostics.is_empty() {
+                println!("  verification: clean\n");
+            } else {
+                println!("  verification:");
+                for d in &v.diagnostics {
+                    println!("    {d}");
+                }
+                println!();
+            }
+        }
     }
     if args.has("json") {
         let doc = Json::obj(vec![
@@ -624,19 +661,25 @@ fn plan_cmd(argv: Vec<String>) -> Result<()> {
         ]);
         println!("{}", doc.dump());
     }
+    if verify_errors > 0 {
+        anyhow::bail!("plan verification found {verify_errors} error diagnostic(s)");
+    }
     Ok(())
 }
 
 /// Machine-readable placement report for one network: the canonical
 /// spec, per-layer assignments with cost estimates, fused-stage
-/// boundaries, and the fixed-method baselines (hand-rolled [`Json`],
-/// same substrate as the engine's `metrics_json`).
+/// boundaries, the streamability verdict (with the barrier-fallback
+/// reason when the plan cannot stream), the fixed-method baselines,
+/// and — under `--verify` — the static analysis report (hand-rolled
+/// [`Json`], same substrate as the engine's `metrics_json`).
 fn plan_json(
     net: &cnndroid::model::network::Network,
     exec: &ExecSpec,
     registry: &Registry,
     partitioner: &Partitioner<'_>,
     report: &cnndroid::delegate::PartitionReport,
+    vreport: &Option<cnndroid::analysis::Report>,
 ) -> Json {
     let assignments = report
         .assignments
@@ -685,14 +728,158 @@ fn plan_json(
             })
         })
         .collect();
-    Json::obj(vec![
+    let mut fields = vec![
         ("net", Json::str(net.name.clone())),
         ("spec", Json::str(exec.to_string())),
         ("predicted_ms", Json::num(report.predicted_s * 1e3)),
+        // The runtime's barrier-vs-stream verdict, derived from the
+        // same every-layer `frame_independent` predicate the engine and
+        // the analysis streamability pass use — consumers get the
+        // verdict and, when it is `false`, the reason, instead of
+        // re-deriving either.
+        ("streamable", Json::Bool(report.plan.streamable())),
+        (
+            "barrier_reason",
+            match report.plan.barrier_reason() {
+                Some(r) => Json::str(r),
+                None => Json::Null,
+            },
+        ),
         ("assignments", Json::arr(assignments)),
         ("stages", Json::arr(stages)),
         ("fixed", Json::arr(fixed)),
-    ])
+    ];
+    if let Some(v) = vreport {
+        fields.push(("verification", v.to_json()));
+    }
+    Json::obj(fields)
+}
+
+/// The canonical lint spec matrix: every execution-configuration class
+/// the engine serves — auto placement plain, with each guardrailed
+/// backend competing, batched, batched+pipelined — plus the
+/// artifact-free fixed methods.
+const LINT_SPECS: [&str; 8] = [
+    "delegate:auto",
+    "delegate:auto:q8",
+    "delegate:auto:wino",
+    "delegate:auto:batch=4",
+    "delegate:auto:q8:batch=4:pipe2",
+    "cpu-seq",
+    "cpu-gemm",
+    "cpu-gemm-q8",
+];
+
+fn lint_cmd(argv: Vec<String>) -> Result<()> {
+    let spec = ArgSpec::new(
+        "cnndroid lint",
+        "static plan verification: run the analysis pass suite over the zoo x spec matrix",
+    )
+    .opt("net", "all", "comma-separated networks (lenet5 | cifar10 | alexnet | all)")
+    .opt("spec", "", "comma-separated execution specs (default: the canonical matrix)")
+    .opt("out", "BENCH_lint.json", "report path for --json")
+    .flag("json", "print the report as JSON and write it to --out");
+    let args = spec.parse_from(argv).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let nets: Vec<cnndroid::model::network::Network> = match args.get("net") {
+        "all" => zoo::all(),
+        list => list
+            .split(',')
+            .map(str::trim)
+            .map(|n| zoo::by_name(n).ok_or_else(|| anyhow::anyhow!("unknown network {n:?}")))
+            .collect::<Result<_>>()?,
+    };
+    let spec_list: Vec<String> = match args.get("spec") {
+        "" => LINT_SPECS.iter().map(|s| s.to_string()).collect(),
+        list => list.split(',').map(|s| s.trim().to_string()).collect(),
+    };
+    let manifest = Manifest::synthetic();
+    let json = args.has("json");
+    let (mut total_err, mut total_warn, mut total_note) = (0usize, 0usize, 0usize);
+    let mut cells = Vec::new();
+    for net in &nets {
+        for spec_str in &spec_list {
+            let exec: ExecSpec = spec_str.parse().map_err(anyhow::Error::new)?;
+            let report = lint_one(net, &exec, &manifest)?;
+            total_err += report.count(cnndroid::analysis::Severity::Error);
+            total_warn += report.count(cnndroid::analysis::Severity::Warn);
+            total_note += report.count(cnndroid::analysis::Severity::Note);
+            if json {
+                cells.push(Json::obj(vec![
+                    ("spec", Json::str(exec.to_string())),
+                    ("report", report.to_json()),
+                ]));
+            } else if report.diagnostics.is_empty() {
+                println!("ok    {:<8} x {exec}", net.name);
+            } else {
+                println!("FIND  {:<8} x {exec}", net.name);
+                for d in &report.diagnostics {
+                    println!("      {d}");
+                }
+            }
+        }
+    }
+    if json {
+        let doc = Json::obj(vec![
+            ("bench", Json::str("lint")),
+            ("nets", Json::num(nets.len() as f64)),
+            ("specs", Json::num(spec_list.len() as f64)),
+            ("errors", Json::num(total_err as f64)),
+            ("warnings", Json::num(total_warn as f64)),
+            ("notes", Json::num(total_note as f64)),
+            ("cells", Json::arr(cells)),
+        ]);
+        std::fs::write(args.get("out"), doc.dump())?;
+        println!("{}", doc.dump());
+    } else {
+        println!(
+            "lint: {} net(s) x {} spec(s): {total_err} error(s), \
+             {total_warn} warning(s), {total_note} note(s)",
+            nets.len(),
+            spec_list.len()
+        );
+    }
+    if total_err > 0 {
+        anyhow::bail!("lint found {total_err} error diagnostic(s)");
+    }
+    Ok(())
+}
+
+/// Verify one `(net, spec)` cell.  Auto specs go through the
+/// partitioner — over a simulated registry with exactly the backends
+/// the spec opts into — so the cost-model passes certify the partition
+/// report that produced the plan; fixed specs build their plan against
+/// synthetic artifacts and run the plan-intrinsic passes.
+fn lint_one(
+    net: &cnndroid::model::network::Network,
+    exec: &ExecSpec,
+    manifest: &Manifest,
+) -> Result<cnndroid::analysis::Report> {
+    if exec.is_auto() {
+        let mut registry = Registry::simulated();
+        if exec.precision() != Precision::F32 {
+            registry = registry.with_q8();
+        }
+        if exec.winograd() {
+            registry = registry.with_winograd();
+        }
+        let dev = exec.device_spec();
+        let partitioner = Partitioner::new(&registry, &dev)
+            .with_batch(exec.batch())
+            .with_pipeline(exec.pipeline().is_some());
+        let report = partitioner.partition(net)?;
+        let ctx = cnndroid::analysis::VerifyContext::new(net, &report.plan)
+            .with_spec(exec)
+            .with_cost(&registry, dev.clone(), &report);
+        Ok(cnndroid::analysis::verify(&ctx))
+    } else {
+        let plan = cnndroid::coordinator::plan::ExecutionPlan::build(
+            manifest,
+            net,
+            exec.method_name(),
+        )?;
+        let ctx = cnndroid::analysis::VerifyContext::new(net, &plan).with_spec(exec);
+        Ok(cnndroid::analysis::verify(&ctx))
+    }
 }
 
 fn bench_engine(argv: Vec<String>) -> Result<()> {

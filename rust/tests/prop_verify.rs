@@ -1,0 +1,367 @@
+//! Mutation tests on the static plan verifier (`cnndroid::analysis`):
+//!
+//! (a) the full zoo x spec matrix — every builtin network under every
+//!     lint-matrix spec (auto variants and the three fixed CPU
+//!     methods) — verifies with **zero error diagnostics**, with the
+//!     cost-model passes attached on the auto paths;
+//! (b) every class of plan corruption is caught by the *expected*
+//!     stable diagnostic code: conv-spec shape skew (SHAPE001), FC
+//!     dimension skew (SHAPE002), degenerate geometry (SHAPE003),
+//!     layer-list skew (SHAPE004), broken stage partitions (STAGE001),
+//!     illegal stage members (STAGE002), understated scratch claims
+//!     (SCRATCH001/SCRATCH002), band aliasing (ALIAS001-003),
+//!     kind-mismatched lowering (CAP001), accel placement at batch>1
+//!     (CAP002), q8 placement under an f32 spec (CAP003), Winograd on
+//!     ineligible shapes (CAP004) or without the `:wino` opt-in
+//!     (CAP005), and a false streamability claim (STREAM001).
+//!
+//! Each mutation starts from a plan the verifier accepts, applies one
+//! corruption, and asserts the expected code appears — so the suite
+//! fails if a pass is weakened *or* if a legal plan starts tripping it.
+
+use cnndroid::analysis::{check_bands, verify, Report, Severity, VerifyContext};
+use cnndroid::coordinator::plan::{ExecutionPlan, FusedStage, LayerPlan};
+use cnndroid::delegate::{Partitioner, Registry};
+use cnndroid::kernels::{stage_scratch_plan, KernelOpts, KernelVariant};
+use cnndroid::model::manifest::Manifest;
+use cnndroid::model::network::Network;
+use cnndroid::model::zoo;
+use cnndroid::session::{ExecSpec, Precision};
+
+/// The lint matrix the CLI sweeps (`cnndroid lint`): auto placement
+/// with each opt-in knob, plus every artifact-free fixed method.
+const SPECS: [&str; 8] = [
+    "delegate:auto",
+    "delegate:auto:q8",
+    "delegate:auto:wino",
+    "delegate:auto:batch=4",
+    "delegate:auto:q8:batch=4:pipe2",
+    "cpu-seq",
+    "cpu-gemm",
+    "cpu-gemm-q8",
+];
+
+/// Build and verify one (net, spec) cell exactly as the `lint`
+/// subcommand does: auto specs partition a simulated registry with the
+/// spec's opt-ins and attach the cost context; fixed specs compile the
+/// plan directly.
+fn verify_cell(net: &Network, spec_str: &str) -> Report {
+    let exec: ExecSpec = spec_str.parse().unwrap();
+    if exec.is_auto() {
+        let mut registry = Registry::simulated();
+        if exec.precision() != Precision::F32 {
+            registry = registry.with_q8();
+        }
+        if exec.winograd() {
+            registry = registry.with_winograd();
+        }
+        let dev = exec.device_spec();
+        let part = Partitioner::new(&registry, &dev)
+            .with_batch(exec.batch())
+            .with_pipeline(exec.pipeline().is_some());
+        let report = part.partition(net).unwrap();
+        let ctx = VerifyContext::new(net, &report.plan)
+            .with_spec(&exec)
+            .with_cost(&registry, dev.clone(), &report);
+        verify(&ctx)
+    } else {
+        let manifest = Manifest::synthetic();
+        let plan = ExecutionPlan::build(&manifest, net, exec.method_name()).unwrap();
+        let ctx = VerifyContext::new(net, &plan).with_spec(&exec);
+        verify(&ctx)
+    }
+}
+
+/// A fixed-method plan to mutate (needs no artifacts).
+fn plan_for(net: &Network, method: &str) -> ExecutionPlan {
+    ExecutionPlan::build(&Manifest::synthetic(), net, method).unwrap()
+}
+
+fn assert_code(report: &Report, code: &str) {
+    assert!(
+        report.has_code(code),
+        "expected {code} but verifier reported {:?}:\n{}",
+        report.codes(),
+        report.render()
+    );
+}
+
+#[test]
+fn zoo_spec_matrix_is_clean() {
+    for net in zoo::all() {
+        for spec in SPECS {
+            let report = verify_cell(&net, spec);
+            assert!(
+                !report.has_errors(),
+                "{} x {spec} should verify clean:\n{}",
+                net.name,
+                report.render()
+            );
+        }
+    }
+}
+
+#[test]
+fn corrupt_conv_input_shape_is_shape001() {
+    let net = zoo::by_name("cifar10").unwrap();
+    let mut plan = plan_for(&net, "cpu-gemm");
+    match &mut plan.layers[0] {
+        LayerPlan::ConvCpu { spec, .. } => spec.in_h += 1,
+        other => panic!("expected ConvCpu at layer 0, got {other:?}"),
+    }
+    assert_code(&verify(&VerifyContext::new(&net, &plan)), "SHAPE001");
+}
+
+#[test]
+fn corrupt_conv_output_channels_is_shape001() {
+    let net = zoo::by_name("cifar10").unwrap();
+    let mut plan = plan_for(&net, "cpu-gemm");
+    match &mut plan.layers[0] {
+        LayerPlan::ConvCpu { spec, .. } => spec.nk += 1,
+        other => panic!("expected ConvCpu at layer 0, got {other:?}"),
+    }
+    assert_code(&verify(&VerifyContext::new(&net, &plan)), "SHAPE001");
+}
+
+#[test]
+fn corrupt_fc_dims_are_shape002() {
+    let net = zoo::by_name("cifar10").unwrap();
+    let mut plan = plan_for(&net, "cpu-gemm");
+    // fc1 flattens conv3's 64x4x4 output: d_in = 1024, d_out = 64.
+    plan.layers[6] = LayerPlan::FcAccel {
+        name: "fc1".into(),
+        d_in: 999,
+        d_out: 64,
+        relu: false,
+        artifact_b1: "fc1_b1".into(),
+        artifact_b16: None,
+    };
+    assert_code(&verify(&VerifyContext::new(&net, &plan)), "SHAPE002");
+}
+
+#[test]
+fn zero_stride_is_shape003() {
+    let net = zoo::by_name("cifar10").unwrap();
+    let mut plan = plan_for(&net, "cpu-gemm");
+    match &mut plan.layers[0] {
+        LayerPlan::ConvCpu { spec, .. } => spec.stride = 0,
+        other => panic!("expected ConvCpu at layer 0, got {other:?}"),
+    }
+    assert_code(&verify(&VerifyContext::new(&net, &plan)), "SHAPE003");
+}
+
+#[test]
+fn renamed_layer_is_shape004() {
+    let net = zoo::by_name("cifar10").unwrap();
+    let mut plan = plan_for(&net, "cpu-gemm");
+    match &mut plan.layers[0] {
+        LayerPlan::ConvCpu { name, .. } => *name = "convX".into(),
+        other => panic!("expected ConvCpu at layer 0, got {other:?}"),
+    }
+    assert_code(&verify(&VerifyContext::new(&net, &plan)), "SHAPE004");
+}
+
+#[test]
+fn dropped_layer_is_shape004() {
+    let net = zoo::by_name("cifar10").unwrap();
+    let mut plan = plan_for(&net, "cpu-gemm");
+    plan.layers.pop();
+    assert_code(&verify(&VerifyContext::new(&net, &plan)), "SHAPE004");
+}
+
+#[test]
+fn non_partitioning_stages_are_stage001() {
+    let net = zoo::by_name("cifar10").unwrap();
+    let plan = plan_for(&net, "cpu-gemm");
+    // Covers only layers [0, 2) of 8 — not a partition.
+    let ctx = VerifyContext::new(&net, &plan)
+        .with_stages(vec![FusedStage { start: 0, end: 2 }]);
+    assert_code(&verify(&ctx), "STAGE001");
+}
+
+#[test]
+fn illegal_stage_member_is_stage002() {
+    let net = zoo::by_name("cifar10").unwrap();
+    let plan = plan_for(&net, "cpu-gemm");
+    // One stage spanning the whole plan partitions it (no STAGE001)
+    // but drags conv2/fc layers in as tail members.
+    let n = plan.layers.len();
+    let ctx = VerifyContext::new(&net, &plan)
+        .with_stages(vec![FusedStage { start: 0, end: n }]);
+    let report = verify(&ctx);
+    assert!(!report.has_code("STAGE001"), "{}", report.render());
+    assert_code(&report, "STAGE002");
+}
+
+#[test]
+fn understated_conv_scratch_is_scratch001() {
+    let net = zoo::by_name("alexnet").unwrap();
+    let plan = plan_for(&net, "cpu-gemm");
+    let stages = plan.fuse();
+    // Stage 0 is conv1+pool1+norm1; pool1 (3/2) overlaps, so the
+    // schedule is two-phase with a whole-surface conv scratch.
+    let st = &stages[0];
+    let ops = plan.stage_tail_ops(st).unwrap();
+    assert_eq!(ops.len(), 2, "expected conv1+pool1+norm1 in one stage");
+    let spec = match &plan.layers[0] {
+        LayerPlan::ConvCpu { spec, .. } => *spec,
+        other => panic!("expected ConvCpu at layer 0, got {other:?}"),
+    };
+    let mut claimed = stage_scratch_plan(&spec, &ops, &KernelOpts::tiled());
+    assert!(claimed.two_phase && claimed.conv_scratch > 0);
+
+    let mut tampered = claimed.clone();
+    tampered.conv_scratch -= 1;
+    let ctx = VerifyContext::new(&net, &plan).with_scratch(vec![(0, tampered)]);
+    assert_code(&verify(&ctx), "SCRATCH001");
+
+    claimed.two_phase = false;
+    let ctx = VerifyContext::new(&net, &plan).with_scratch(vec![(0, claimed)]);
+    assert_code(&verify(&ctx), "SCRATCH001");
+}
+
+#[test]
+fn understated_ping_buffer_is_scratch002() {
+    let net = zoo::by_name("alexnet").unwrap();
+    let plan = plan_for(&net, "cpu-gemm");
+    let stages = plan.fuse();
+    let st = &stages[0];
+    let ops = plan.stage_tail_ops(st).unwrap();
+    let spec = match &plan.layers[0] {
+        LayerPlan::ConvCpu { spec, .. } => *spec,
+        other => panic!("expected ConvCpu at layer 0, got {other:?}"),
+    };
+    // With two tail ops the pool output bounces through ping[0].
+    let mut claimed = stage_scratch_plan(&spec, &ops, &KernelOpts::tiled());
+    assert!(claimed.ping[0] > 0, "stage 0 should need an intermediate buffer");
+    claimed.ping[0] = 0;
+    let ctx = VerifyContext::new(&net, &plan).with_scratch(vec![(0, claimed)]);
+    assert_code(&verify(&ctx), "SCRATCH002");
+}
+
+#[test]
+fn band_aliasing_is_alias001_002_003() {
+    // Overlapping bands.
+    let v = check_bands(10, &[(0, 6), (5, 10)]);
+    assert!(v.iter().any(|b| b.code == "ALIAS001"), "{v:?}");
+    // Out-of-bounds band.
+    let v = check_bands(8, &[(0, 4), (4, 9)]);
+    assert!(v.iter().any(|b| b.code == "ALIAS002"), "{v:?}");
+    // Coverage gap.
+    let v = check_bands(10, &[(0, 4), (6, 10)]);
+    assert!(v.iter().any(|b| b.code == "ALIAS003"), "{v:?}");
+    // A clean partition reports nothing.
+    assert!(check_bands(10, &[(0, 4), (4, 10)]).is_empty());
+}
+
+#[test]
+fn kind_mismatched_lowering_is_cap001() {
+    let net = zoo::by_name("cifar10").unwrap();
+    let mut plan = plan_for(&net, "cpu-gemm");
+    // pool1 lowered as LRN: right name, wrong kind.
+    plan.layers[1] = LayerPlan::Lrn {
+        name: "pool1".into(),
+        size: 5,
+        alpha: 1e-4,
+        beta: 0.75,
+        k: 1.0,
+        parallel: false,
+    };
+    assert_code(&verify(&VerifyContext::new(&net, &plan)), "CAP001");
+}
+
+#[test]
+fn accel_placement_at_batch4_is_cap002() {
+    let net = zoo::by_name("cifar10").unwrap();
+    let mut plan = plan_for(&net, "cpu-gemm");
+    let spec = match &plan.layers[0] {
+        LayerPlan::ConvCpu { spec, .. } => *spec,
+        other => panic!("expected ConvCpu at layer 0, got {other:?}"),
+    };
+    plan.layers[0] = LayerPlan::ConvAccel {
+        name: "conv1".into(),
+        spec,
+        artifact: "conv1_b1".into(),
+        nhwc: false,
+    };
+    let exec: ExecSpec = "delegate:auto:batch=4".parse().unwrap();
+    let ctx = VerifyContext::new(&net, &plan).with_spec(&exec);
+    let report = verify(&ctx);
+    assert_code(&report, "CAP002");
+    // The same plan at batch 1 is legal.
+    let report = verify(&VerifyContext::new(&net, &plan));
+    assert!(!report.has_code("CAP002"), "{}", report.render());
+}
+
+#[test]
+fn q8_placement_under_f32_spec_is_cap003() {
+    let net = zoo::by_name("cifar10").unwrap();
+    let plan = plan_for(&net, "cpu-gemm-q8");
+    let exec: ExecSpec = "delegate:auto".parse().unwrap();
+    let ctx = VerifyContext::new(&net, &plan).with_spec(&exec);
+    assert_code(&verify(&ctx), "CAP003");
+    // Under a :q8 spec the same placement is admissible.
+    let exec: ExecSpec = "delegate:auto:q8".parse().unwrap();
+    let ctx = VerifyContext::new(&net, &plan).with_spec(&exec);
+    let report = verify(&ctx);
+    assert!(!report.has_code("CAP003"), "{}", report.render());
+}
+
+#[test]
+fn winograd_on_5x5_is_cap004() {
+    let net = zoo::by_name("cifar10").unwrap();
+    let mut plan = plan_for(&net, "cpu-gemm");
+    // cifar10 convs are 5x5 — F(2,3) cannot lower them.
+    match &mut plan.layers[0] {
+        LayerPlan::ConvCpu { variant, .. } => *variant = KernelVariant::Winograd,
+        other => panic!("expected ConvCpu at layer 0, got {other:?}"),
+    }
+    let exec: ExecSpec = "delegate:auto:wino".parse().unwrap();
+    let ctx = VerifyContext::new(&net, &plan).with_spec(&exec);
+    let report = verify(&ctx);
+    assert_code(&report, "CAP004");
+    assert!(!report.has_code("CAP005"), "{}", report.render());
+}
+
+#[test]
+fn winograd_without_optin_is_cap005() {
+    let net = zoo::by_name("alexnet").unwrap();
+    let mut plan = plan_for(&net, "cpu-gemm");
+    // conv3 is 3x3 stride 1 — eligible, but the spec never opted in.
+    match &mut plan.layers[6] {
+        LayerPlan::ConvCpu { variant, .. } => *variant = KernelVariant::Winograd,
+        other => panic!("expected ConvCpu at layer 6, got {other:?}"),
+    }
+    let exec: ExecSpec = "delegate:auto".parse().unwrap();
+    let ctx = VerifyContext::new(&net, &plan).with_spec(&exec);
+    let report = verify(&ctx);
+    assert_code(&report, "CAP005");
+    assert!(!report.has_code("CAP004"), "{}", report.render());
+}
+
+#[test]
+fn false_streamability_claim_is_stream001() {
+    let net = zoo::by_name("cifar10").unwrap();
+    // The q8 plan barriers on its FC layers (batch-global activation
+    // scale), so claiming streamable is a lie the pass must catch.
+    let plan = plan_for(&net, "cpu-gemm-q8");
+    let ctx = VerifyContext::new(&net, &plan).claiming_streamable(true);
+    assert_code(&verify(&ctx), "STREAM001");
+    // Claiming the recomputed verdict is fine.
+    let ctx = VerifyContext::new(&net, &plan).claiming_streamable(false);
+    let report = verify(&ctx);
+    assert!(!report.has_code("STREAM001"), "{}", report.render());
+}
+
+#[test]
+fn pipelined_spec_on_barrier_plan_notes_stream002() {
+    let net = zoo::by_name("cifar10").unwrap();
+    let plan = plan_for(&net, "cpu-gemm-q8");
+    let exec: ExecSpec = "delegate:auto:q8:pipe2".parse().unwrap();
+    let ctx = VerifyContext::new(&net, &plan).with_spec(&exec);
+    let report = verify(&ctx);
+    assert_code(&report, "STREAM002");
+    // The fallback is legal — a note, never an error.
+    assert!(!report.has_errors(), "{}", report.render());
+    assert!(report.count(Severity::Note) >= 1);
+}
